@@ -1,0 +1,99 @@
+//! Use case 3 (§5.3, Figs 8–9): runtime fault mitigation with labelled
+//! online learning, plus the §5.3.2 monitor/retrain strategy.
+//!
+//! Part 1 stages the paper's experiment: 20% of TAs forced stuck-at-0
+//! after 5 online iterations (via the fault controller's AND/OR gate
+//! mappings, programmed over AXI), with online learning off (Fig 8) and
+//! on (Fig 9 — the TM retrains "around" the faulty TAs).
+//!
+//! Part 2 demonstrates the further mitigation strategy: continuous
+//! accuracy monitoring detects a clause-killing fault burst and triggers
+//! an on-chip retrain with the over-provisioned clause reserve enabled.
+//!
+//! ```sh
+//! cargo run --release --example fault_mitigation -- [orderings]
+//! ```
+
+use tm_fpga::coordinator::{
+    monitor_and_retrain, report, run_figure, AccuracyMonitor, Figure,
+    RetrainPolicy, SweepOptions,
+};
+use tm_fpga::data::blocks::{BlockPlan, SetAllocation};
+use tm_fpga::data::iris;
+use tm_fpga::tm::*;
+
+fn main() -> anyhow::Result<()> {
+    let orderings: usize = std::env::args()
+        .nth(1)
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(24);
+    let opts = SweepOptions { orderings, threads: 0, seed: 42 };
+
+    // --- Part 1: Figs 8 and 9 ---
+    let frozen = run_figure(Figure::Fig8, &opts)?;
+    let online = run_figure(Figure::Fig9, &opts)?;
+    print!("{}", report::figure_summary(&frozen));
+    println!();
+    print!("{}", report::figure_summary(&online));
+    println!(
+        "\nonline-set accuracy at iteration 16: frozen {:.1}% vs online learning {:.1}% \
+         (paper: recovery \"on par with the fault-free system\")\n",
+        frozen.online.mean_at(16) * 100.0,
+        online.online.mean_at(16) * 100.0
+    );
+
+    // --- Part 2: §5.3.2 monitor + retrain with the clause reserve ---
+    let shape = TmShape::iris();
+    let plan = BlockPlan::stratified(iris::booleanised(), 5, 11)?;
+    let sets = plan.sets(&[0, 1, 2, 3, 4], SetAllocation::paper())?;
+    let train = sets.offline.pack(&shape);
+    let eval = sets.validation.pack(&shape);
+
+    let mut params = TmParams::paper_offline(&shape);
+    params.active_clauses = 12; // hold 4 clauses in reserve
+    let mut tm = MultiTm::new(&shape)?;
+    let mut rng = Xoshiro256::new(2);
+    let mut rands = StepRands::draw(&mut rng, &shape);
+    for _ in 0..10 {
+        for (x, y) in &train {
+            rands.refill(&mut rng, &shape);
+            train_step(&mut tm, x, *y, &params, &rands);
+        }
+    }
+    println!("monitor demo: trained with 12/16 clauses, validation {:.1}%",
+        tm.accuracy(&eval, &params) * 100.0);
+
+    // Kill 10 of the 12 active clauses per class (complement-pair
+    // stuck-at-1 makes a clause unsatisfiable).
+    let mut map = FaultMap::none(&shape);
+    for c in 0..shape.classes {
+        for j in 0..10 {
+            map.set(c, j, 0, Fault::StuckAt1);
+            map.set(c, j, shape.features, Fault::StuckAt1);
+        }
+    }
+    tm.set_fault_map(map);
+    println!("fault burst injected: validation {:.1}%", tm.accuracy(&eval, &params) * 100.0);
+
+    let mut monitor = AccuracyMonitor::new(0.15);
+    let policy = RetrainPolicy {
+        threshold: 0.62,
+        warmup: 10,
+        retrain_clauses: 16,
+        retrain_epochs: 20,
+    };
+    let spot: Vec<_> = train.iter().cycle().take(120).cloned().collect();
+    let out = monitor_and_retrain(
+        &mut tm, &mut params, &mut monitor, &policy, &spot, &train, &eval, 77,
+    )?;
+    println!(
+        "monitor: triggered={} (EWMA {:.2} < {:.2} after {} spot checks)",
+        out.triggered, out.estimate_at_trigger, policy.threshold, out.spot_checks
+    );
+    println!(
+        "after on-chip retrain with the 16-clause reserve: validation {:.1}%",
+        out.accuracy_after * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,56 @@
+//! Rapid hyper-parameter search (§5 intro): "the fast execution time
+//! allows entire datasets to be analyzed in a matter of seconds, allowing
+//! the optimum hyper-parameters for a given dataset to be discovered
+//! within a short period of time."
+//!
+//! Runs a (s, T) grid over cross-validated orderings, prints the ranked
+//! surface and the wall-clock, and checks the paper's chosen cell
+//! (s = 1.375, T = 15) is competitive.
+//!
+//! ```sh
+//! cargo run --release --example hyperparam_search -- [orderings]
+//! ```
+
+use tm_fpga::coordinator::{run_sweep, SweepConfig};
+
+fn main() -> anyhow::Result<()> {
+    let orderings: usize = std::env::args()
+        .nth(1)
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(24);
+    let cfg = SweepConfig { orderings, ..Default::default() };
+    let cells = cfg.s_grid.len() * cfg.t_grid.len();
+
+    let t0 = std::time::Instant::now();
+    let points = run_sweep(&cfg)?;
+    let dt = t0.elapsed().as_secs_f64();
+
+    println!(
+        "swept {cells} (s, T) cells × {orderings} orderings × {} epochs in {dt:.2}s",
+        cfg.epochs
+    );
+    println!("\nrank  {:<7} {:<5} {:>9} {:>10}", "s", "T", "val acc", "train acc");
+    for (i, p) in points.iter().enumerate() {
+        let marker = if (p.s - 1.375).abs() < 1e-6 && p.t == 15 { "  <- paper §5" } else { "" };
+        println!(
+            "{:>4}  {:<7} {:<5} {:>8.1}% {:>9.1}%{}",
+            i + 1,
+            p.s,
+            p.t,
+            p.val_accuracy * 100.0,
+            p.train_accuracy * 100.0,
+            marker
+        );
+    }
+    let paper = points
+        .iter()
+        .position(|p| (p.s - 1.375).abs() < 1e-6 && p.t == 15)
+        .expect("paper cell in grid");
+    println!(
+        "\nthe paper's (1.375, 15) ranks {}/{} on validation accuracy",
+        paper + 1,
+        points.len()
+    );
+    Ok(())
+}

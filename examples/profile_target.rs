@@ -1,0 +1,21 @@
+// profiling target: tight train+infer loop
+use tm_fpga::data::{blocks::BlockPlan, iris, SetAllocation};
+use tm_fpga::tm::*;
+fn main() {
+    let shape = TmShape::iris();
+    let params = TmParams::paper_offline(&shape);
+    let plan = BlockPlan::stratified(iris::booleanised(), 5, 21).unwrap();
+    let data = plan.sets(&[0,1,2,3,4], SetAllocation::paper()).unwrap().online.pack(&shape);
+    let mut tm = MultiTm::new(&shape).unwrap();
+    let mut rng = Xoshiro256::new(1);
+    let mut rands = StepRands::draw(&mut rng, &shape);
+    let mode = std::env::args().nth(1).unwrap_or_default();
+    if mode == "train" {
+        for _ in 0..5000 { for (x,y) in &data { rands.refill(&mut rng,&shape); train_step(&mut tm,x,*y,&params,&rands); } }
+    } else {
+        for _ in 0..200 { for (x,y) in &data { rands.refill(&mut rng,&shape); train_step(&mut tm,x,*y,&params,&rands); } }
+        let mut sink = 0usize;
+        for _ in 0..200000 { for (x,_) in &data { sink = sink.wrapping_add(tm.predict(x,&params)); } }
+        std::hint::black_box(sink);
+    }
+}

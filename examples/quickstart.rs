@@ -1,0 +1,87 @@
+//! Quickstart — the end-to-end driver proving all layers compose.
+//!
+//! Runs the paper's full Fig-3 flow (offline training → accuracy analysis
+//! → 16 interleaved online-learning/analysis iterations) on the real iris
+//! workload through the cycle-level FPGA system model, prints the UART
+//! log and power/cycle report, and — when `make artifacts` has been run —
+//! cross-checks the final machine's accuracy through the PJRT-executed
+//! Pallas/JAX artifact (L1/L2) against the native path (L3), asserting
+//! they agree exactly.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use tm_fpga::data::{blocks::BlockPlan, iris};
+use tm_fpga::fpga::system::{FpgaSystem, SystemConfig};
+use tm_fpga::fpga::SetId;
+use tm_fpga::runtime::{default_artifacts_dir, Client, TmExecutor};
+use tm_fpga::tm::TmParams;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Data: the embedded iris dataset, booleanised to the paper's 16
+    //    inputs, split into 5 stratified cross-validation blocks.
+    let plan = BlockPlan::stratified(iris::booleanised(), 5, 42)?;
+    let blocks: Vec<_> = (0..plan.n_blocks()).map(|i| plan.block(i).clone()).collect();
+
+    // 2. The paper's §5 configuration: 16 clauses, s=1.375 offline / 1.0
+    //    online, T=15, 10 offline epochs, 16 online iterations.
+    let cfg = SystemConfig::paper();
+    let mut sys = FpgaSystem::new(cfg, &blocks, &[0, 1, 2, 3, 4])?;
+
+    // 3. Run the Fig-3 flow end to end on the cycle-level system model.
+    let rep = sys.run()?;
+    println!("=== UART stream (accuracy reports offloaded to the MCU) ===");
+    for line in &rep.uart_log {
+        println!("{line}");
+    }
+    println!("\n=== run report ===");
+    println!("total cycles        : {}", rep.total_cycles);
+    println!(
+        "  @100 MHz that is  : {:.2} ms of FPGA time",
+        rep.total_cycles as f64 / 100e6 * 1e3
+    );
+    println!(
+        "handshake stalls    : {} cycles over {} reports",
+        rep.handshake.stall_cycles, rep.handshake.transactions
+    );
+    println!("dropped datapoints  : {}", rep.dropped_datapoints);
+    println!(
+        "power estimate      : {:.3} W total = {:.3} W MCU + {:.3} W fabric (paper: 1.725 = 1.4 + 0.325)",
+        rep.power.total_w, rep.power.mcu_w, rep.power.fabric_w
+    );
+    println!(
+        "online accuracy     : {:.1}% -> {:.1}% over {} iterations",
+        rep.online_curve[0] * 100.0,
+        rep.online_curve.last().unwrap() * 100.0,
+        rep.online_curve.len() - 1
+    );
+
+    // 4. Cross-check through the AOT artifacts: the PJRT CPU client loads
+    //    the HLO text lowered from the Pallas/JAX step and must agree with
+    //    the native machine on every prediction.
+    let dir = default_artifacts_dir();
+    if dir.join("meta.json").exists() {
+        let client = Client::cpu()?;
+        let exe = TmExecutor::load(&client, &dir)?;
+        let params = TmParams::paper_offline(sys.tm.shape());
+        let shape = sys.tm.shape().clone();
+        let mut val_rows = Vec::new();
+        for row in 0..sys.bank.set_len(SetId::Validation) {
+            let ((bits, label), _) =
+                sys.bank.read(SetId::Validation, row, tm_fpga::fpga::Port::A)?;
+            val_rows.push((tm_fpga::tm::Input::pack(&shape, &bits), label));
+        }
+        let native = sys.tm.accuracy(&val_rows, &params);
+        let pjrt = exe.accuracy(&sys.tm, &val_rows, &params)?;
+        assert!((native - pjrt).abs() < 1e-9, "layer mismatch!");
+        println!(
+            "\n=== three-layer cross-check ===\nvalidation accuracy: native {:.2}% == PJRT(Pallas artifact) {:.2}%  ✓ all layers compose",
+            native * 100.0,
+            pjrt * 100.0
+        );
+    } else {
+        println!("\n(run `make artifacts` to enable the PJRT cross-check)");
+    }
+    Ok(())
+}

@@ -1,0 +1,114 @@
+//! Future-work demo (§7): confidence-driven online learning with
+//! *unlabelled* data, and unseen-class detection from class confidences.
+//!
+//! Part 1 — pseudo-labelling: after offline training, online datapoints
+//! arrive without labels; the TM trains on its own prediction whenever
+//! the vote margin clears a threshold. Compares frozen vs pseudo-labelled
+//! accuracy across orderings and shows pseudo-label precision by margin.
+//!
+//! Part 2 — unseen-class detection: a machine trained on two classes
+//! flags foreign datapoints by their low best-class vote sum.
+//!
+//! ```sh
+//! cargo run --release --example unlabelled_learning -- [orderings]
+//! ```
+
+use tm_fpga::coordinator::unlabelled::{
+    unlabelled_pass, PseudoLabelPolicy, UnseenClassDetector,
+};
+use tm_fpga::data::blocks::{all_orderings, BlockPlan, SetAllocation};
+use tm_fpga::data::{iris, synthetic, ClassFilter};
+use tm_fpga::tm::*;
+
+fn main() -> anyhow::Result<()> {
+    let orderings: usize = std::env::args()
+        .nth(1)
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(12);
+
+    // --- Part 1: pseudo-labelled online learning on iris ---
+    let shape = TmShape::iris();
+    let p_off = TmParams::paper_offline(&shape);
+    let p_on = TmParams::paper_online(&shape);
+    let plan = BlockPlan::stratified(iris::booleanised(), 5, 20)?;
+    println!("=== §7 pseudo-labelled online learning ({orderings} orderings) ===\n");
+    for margin in [0, 2, 5] {
+        let mut frozen_acc = 0.0;
+        let mut learned_acc = 0.0;
+        let mut precision = (0usize, 0usize);
+        for (i, ord) in all_orderings(5).iter().take(orderings).enumerate() {
+            let sets = plan.sets(ord, SetAllocation::paper())?;
+            let train = sets.offline.truncate(20).pack(&shape);
+            let online = sets.online.pack(&shape);
+            let mut tm = MultiTm::new(&shape)?;
+            let mut rng = Xoshiro256::new(100 + i as u64);
+            let mut rands = StepRands::draw(&mut rng, &shape);
+            for _ in 0..10 {
+                for (x, y) in &train {
+                    rands.refill(&mut rng, &shape);
+                    train_step(&mut tm, x, *y, &p_off, &rands);
+                }
+            }
+            frozen_acc += tm.accuracy(&online, &p_off);
+            for _ in 0..8 {
+                let s = unlabelled_pass(
+                    &mut tm,
+                    &online,
+                    &p_off,
+                    &p_on,
+                    PseudoLabelPolicy { min_margin: margin },
+                    &mut rng,
+                    &mut rands,
+                )?;
+                precision.0 += s.pseudo_correct;
+                precision.1 += s.trained;
+            }
+            learned_acc += tm.accuracy(&online, &p_off);
+        }
+        let n = orderings as f64;
+        println!(
+            "margin ≥ {margin}: frozen {:.1}% -> pseudo-labelled {:.1}%  \
+             (pseudo-label precision {:.1}%, {} steps)",
+            frozen_acc / n * 100.0,
+            learned_acc / n * 100.0,
+            precision.0 as f64 / precision.1.max(1) as f64 * 100.0,
+            precision.1
+        );
+    }
+
+    // --- Part 2: unseen-class detection on the prototype task ---
+    println!("\n=== §7 unseen-class detection (synthetic prototypes) ===\n");
+    let shape = TmShape { classes: 3, max_clauses: 8, features: 16, states: 100 };
+    let mut params = TmParams::paper_offline(&shape);
+    params.s = 3.0;
+    params.active_classes = 2;
+    let d = synthetic::prototype_dataset(3, 60, 16, 0.05, 9)?;
+    let train = ClassFilter::removing(2).apply(&d.truncate(120)).pack(&shape);
+    let mut tm = MultiTm::new(&shape)?;
+    let mut rng = Xoshiro256::new(7);
+    let mut rands = StepRands::draw(&mut rng, &shape);
+    for _ in 0..20 {
+        for (x, y) in &train {
+            rands.refill(&mut rng, &shape);
+            train_step(&mut tm, x, *y, &params, &rands);
+        }
+    }
+    let tail = d.subset(&(120..180).collect::<Vec<_>>());
+    let unseen = ClassFilter::removing(0)
+        .apply(&ClassFilter::removing(1).apply(&tail))
+        .pack(&shape);
+    let known = ClassFilter::removing(2).apply(&tail).pack(&shape);
+    println!("{:>12} {:>14} {:>14}", "threshold", "unseen flagged", "known flagged");
+    for thr in [1, 2, 4] {
+        let det = UnseenClassDetector { min_best_sum: thr };
+        println!(
+            "{:>12} {:>13.0}% {:>13.0}%",
+            thr,
+            det.flag_rate(&mut tm, &unseen, &params) * 100.0,
+            det.flag_rate(&mut tm, &known, &params) * 100.0
+        );
+    }
+    println!("\n(class 2 was withheld at training time — its rows score low on every known class)");
+    Ok(())
+}

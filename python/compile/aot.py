@@ -1,0 +1,99 @@
+"""AOT lowering: JAX → HLO **text** artifacts for the rust PJRT runtime.
+
+HLO text (not ``.serialize()``) is the interchange format: jax ≥ 0.5 emits
+HloModuleProtos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published ``xla`` 0.1.6 crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts``
+
+Emits:
+  tm_infer.hlo.txt        — single-datapoint inference
+  tm_train.hlo.txt        — single-datapoint training step
+  tm_eval_batch.hlo.txt   — padded-batch accuracy analysis
+  meta.json               — shapes/arg-order contract for the rust side
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower(fn, example_args) -> str:
+    return to_hlo_text(jax.jit(fn).lower(*example_args))
+
+
+def arg_specs(example_args):
+    return [
+        {"shape": list(a.shape), "dtype": str(a.dtype)} for a in example_args
+    ]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--batch", type=int, default=150,
+                    help="eval-batch padding size")
+    ap.add_argument("--epoch-steps", type=int, default=60,
+                    help="scan length of the train-epoch artifact")
+    ap.add_argument("--classes", type=int, default=3)
+    ap.add_argument("--clauses", type=int, default=16)
+    ap.add_argument("--features", type=int, default=16)
+    ap.add_argument("--states", type=int, default=100)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    shape = model.TmShape(classes=args.classes, clauses=args.clauses,
+                          features=args.features, states=args.states)
+    jobs = {
+        "tm_infer": (model.tm_infer(shape), model.example_args_infer(shape)),
+        "tm_train": (model.tm_train_step(shape),
+                     model.example_args_train(shape)),
+        "tm_train_epoch": (model.tm_train_epoch(shape, args.epoch_steps),
+                           model.example_args_epoch(shape, args.epoch_steps)),
+        "tm_eval_batch": (model.tm_eval_batch(shape, args.batch),
+                          model.example_args_eval(shape, args.batch)),
+    }
+
+    meta = {
+        "shape": {
+            "classes": shape.classes,
+            "clauses": shape.clauses,
+            "features": shape.features,
+            "states": shape.states,
+        },
+        "batch": args.batch,
+        "epoch_steps": args.epoch_steps,
+        "artifacts": {},
+    }
+    for name, (fn, ex) in jobs.items():
+        text = lower(fn, ex)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        meta["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "args": arg_specs(ex),
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+    print(f"wrote {os.path.join(args.out_dir, 'meta.json')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""L1 Pallas kernel: clause evaluation + (optionally) votes.
+
+The paper's compute hot-spot is the fully-parallel clause bank: every
+clause ANDs its included literals in one cycle, the adder tree sums the
+votes in the next (§6: "two clock cycles to complete inference and
+feedback for all clauses and TAs"). On TPU this becomes a masked reduction
+over the literal axis, vectorised on the VPU, with the whole
+``[classes, clauses, literals]`` tile resident in VMEM (see DESIGN.md
+§Hardware-Adaptation).
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO so the AOT artifact runs
+on the rust CPU client. Real-TPU compilation would use the same BlockSpecs.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _clause_kernel(state_ref, x_ref, and_ref, or_ref, clmask_ref, cmask_ref,
+                   out_ref, *, thresh: int, train_mode: bool):
+    """Whole-machine clause evaluation in one grid step.
+
+    VMEM footprint (iris): 3*16*32 i32 state + 3 masks of the same shape
+    + literals  ≈ 25 KiB — far below VMEM; one tile, no HBM round-trips.
+    """
+    state = state_ref[...]
+    x = x_ref[...]
+    and_mask = and_ref[...]
+    or_mask = or_ref[...]
+    clause_mask = clmask_ref[...]
+    class_mask = cmask_ref[...]
+
+    action = (state >= thresh).astype(jnp.float32)
+    eff = jnp.minimum(action * and_mask + or_mask, 1.0)      # [C, J, L]
+    lit = x[None, None, :]                                    # [1, 1, L]
+    blocked = jnp.max(eff * (1.0 - lit), axis=2)              # [C, J]
+    fires = (blocked < 0.5).astype(jnp.float32)
+    if not train_mode:
+        nonempty = (jnp.max(eff, axis=2) > 0.5).astype(jnp.float32)
+        fires = fires * nonempty
+    out_ref[...] = fires * clause_mask[None, :] * class_mask[:, None]
+
+
+def clause_outputs(state, x, and_mask, or_mask, clause_mask, class_mask,
+                   *, thresh: int, train_mode: bool):
+    """Pallas clause bank: returns f32 0/1 outputs, shape [C, J]."""
+    c, j, _ = state.shape
+    return pl.pallas_call(
+        partial(_clause_kernel, thresh=thresh, train_mode=train_mode),
+        out_shape=jax.ShapeDtypeStruct((c, j), jnp.float32),
+        interpret=True,
+    )(state, x, and_mask, or_mask, clause_mask, class_mask)
+
+
+def votes(clause_out, t):
+    """Polarity-weighted vote reduction (the RTL adder tree), clamped.
+
+    Kept outside the Pallas kernel body as a separate fusable reduction —
+    XLA fuses it with the kernel output; on real TPU a batched variant
+    feeds the MXU as a [1,J]x[J,1] contraction.
+    """
+    j = clause_out.shape[1]
+    pol = jnp.where(jnp.arange(j) % 2 == 0, 1, -1).astype(jnp.int32)
+    v = jnp.sum(clause_out.astype(jnp.int32) * pol[None, :], axis=1)
+    ti = t.astype(jnp.int32) if hasattr(t, "astype") else jnp.int32(t)
+    return jnp.clip(v, -ti, ti).astype(jnp.int32)

@@ -1,0 +1,84 @@
+"""L1 Pallas kernel: the TA feedback update (Type I / Type II).
+
+The RTL applies feedback to every TA combinationally in the second clock
+cycle; here it is one elementwise select over the [C, J, L] state tensor,
+fused with clause evaluation in a single Pallas invocation so the whole
+training step is one VMEM-resident kernel.
+
+Semantics: see the contract in ``rust/src/tm/feedback.rs`` and the oracle
+in ``ref.py`` — this kernel must match both bit-for-bit.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _train_kernel(state_ref, x_ref, sign_ref, crand_ref, tarand_ref,
+                  and_ref, or_ref, clmask_ref, cmask_ref, scal_ref,
+                  new_state_ref, *, thresh: int):
+    """Fused clause-eval + feedback. scal_ref = [t, p_reinforce, p_weaken]."""
+    state = state_ref[...]
+    x = x_ref[...]
+    sign = sign_ref[...]
+    clause_rand = crand_ref[...]
+    ta_rand = tarand_ref[...]
+    and_mask = and_ref[...]
+    or_mask = or_ref[...]
+    clause_mask = clmask_ref[...]
+    class_mask = cmask_ref[...]
+    t = scal_ref[0]
+    p_reinforce = scal_ref[1]
+    p_weaken = scal_ref[2]
+
+    # --- clause evaluation, train mode (empty clause fires) ---
+    action = (state >= thresh).astype(jnp.float32)
+    eff = jnp.minimum(action * and_mask + or_mask, 1.0)          # [C, J, L]
+    lit = x[None, None, :]
+    blocked = jnp.max(eff * (1.0 - lit), axis=2)                 # [C, J]
+    out = (blocked < 0.5).astype(jnp.float32)
+    out = out * clause_mask[None, :] * class_mask[:, None]
+
+    # --- clamped votes ---
+    j = out.shape[1]
+    pol = jnp.where(jnp.arange(j) % 2 == 0, 1.0, -1.0)
+    v = jnp.sum(out * pol[None, :], axis=1)
+    v = jnp.clip(v, -t, t)                                       # [C] f32
+
+    # --- clause selection ---
+    p_sel = (t - sign * v) / (2.0 * t)                           # [C]
+    selected = (clause_rand < p_sel[:, None]).astype(jnp.float32)
+    selected = selected * (jnp.abs(sign) > 0.5)[:, None] \
+        * clause_mask[None, :] * class_mask[:, None]             # [C, J]
+
+    sp = sign[:, None] * pol[None, :]
+    type1 = (selected * (sp > 0.5))[:, :, None]                  # [C, J, 1]
+    type2 = (selected * (sp < -0.5))[:, :, None]
+
+    # --- per-TA updates ---
+    o = out[:, :, None]
+    inc1 = type1 * o * lit * (ta_rand < p_reinforce)
+    dec1 = type1 * (1.0 - o * lit) * (ta_rand < p_weaken)
+    inc2 = type2 * o * (1.0 - lit) * (1.0 - eff)
+
+    delta = (inc1 + inc2 - dec1).astype(jnp.int32)
+    new_state_ref[...] = jnp.clip(state + delta, 0, 2 * thresh - 1)
+
+
+def train_step(state, x, sign, clause_rand, ta_rand,
+               and_mask, or_mask, clause_mask, class_mask,
+               scalars, *, thresh: int):
+    """Fused Pallas training step.
+
+    ``scalars`` = f32[3] vector (t, p_reinforce, p_weaken) — runtime
+    controllable (the paper's s/T I/O ports) without re-lowering.
+    Returns the new state tensor, i32 [C, J, L].
+    """
+    return pl.pallas_call(
+        partial(_train_kernel, thresh=thresh),
+        out_shape=jax.ShapeDtypeStruct(state.shape, jnp.int32),
+        interpret=True,
+    )(state, x, sign, clause_rand, ta_rand,
+      and_mask, or_mask, clause_mask, class_mask, scalars)

@@ -1,0 +1,107 @@
+"""Pure-jnp oracle for the TM inference/training step.
+
+This is the correctness reference the Pallas kernels (L1) and the fused
+model (L2) are tested against, and it mirrors — operation for operation —
+the cross-layer contract documented in ``rust/src/tm/feedback.rs``:
+
+* TA action: ``state >= thresh`` (thresh = states-per-side).
+* Fault gates on the action outputs: ``eff = (action & and_mask) | or_mask``.
+* Clause fires iff every *effective* include's literal is 1; empty clauses
+  (no effective includes) fire in TRAIN mode, not in INFER mode.
+* Votes: even clause index ⇒ +1, odd ⇒ -1; sums clamped to [-T, T].
+* Feedback selection per class with sign ∈ {+1,0,-1}:
+  ``p_sel = (T - sign*v) / 2T``; clause selected iff ``clause_rand < p_sel``.
+* Type I (sign*polarity = +1):
+  - out=1, lit=1: increment iff ``ta_rand < p_reinforce``;
+  - out=1, lit=0  or out=0: decrement iff ``ta_rand < p_weaken``.
+* Type II (sign*polarity = -1): only if out=1; increment every TA with
+  lit=0 whose effective action is exclude.
+* All comparisons strict ``<`` on f32; states saturate at [0, 2*thresh-1].
+
+Shapes (iris default): state [C, J, L] i32, x [L] f32, masks [C, J, L] f32,
+clause_mask [J] f32, class_mask [C] f32, sign [C] f32,
+clause_rand [C, J] f32, ta_rand [C, J, L] f32.
+"""
+
+import jax.numpy as jnp
+
+
+def polarity(n_clauses: int):
+    """+1 for even clause indices, -1 for odd (matches rust::tm::params)."""
+    return jnp.where(jnp.arange(n_clauses) % 2 == 0, 1, -1).astype(jnp.int32)
+
+
+def effective_actions(state, and_mask, or_mask, thresh):
+    """Post-fault-gate include actions, f32 0/1, shape [C, J, L]."""
+    action = (state >= thresh).astype(jnp.float32)
+    return jnp.minimum(action * and_mask + or_mask, 1.0)
+
+
+def clause_outputs(state, x, and_mask, or_mask, clause_mask, class_mask,
+                   thresh, train_mode: bool):
+    """Clause outputs, f32 0/1, shape [C, J].
+
+    ``train_mode`` selects the empty-clause convention.
+    Inactive clauses/classes output 0 in both modes.
+    """
+    eff = effective_actions(state, and_mask, or_mask, thresh)
+    lit = x[None, None, :]
+    # Clause fails if any effective include has literal 0.
+    blocked = jnp.max(eff * (1.0 - lit), axis=2)  # [C, J]; >0 -> blocked
+    fires = (blocked < 0.5).astype(jnp.float32)
+    if not train_mode:
+        nonempty = (jnp.max(eff, axis=2) > 0.5).astype(jnp.float32)
+        fires = fires * nonempty
+    return fires * clause_mask[None, :] * class_mask[:, None]
+
+
+def class_sums(clause_out, t):
+    """Clamped per-class vote sums, i32 [C]."""
+    pol = polarity(clause_out.shape[1])
+    votes = jnp.sum(clause_out.astype(jnp.int32) * pol[None, :], axis=1)
+    return jnp.clip(votes, -t, t).astype(jnp.int32)
+
+
+def infer(state, x, and_mask, or_mask, clause_mask, class_mask, t, thresh):
+    """Inference: (clamped sums i32 [C], prediction i32).
+
+    Prediction = argmax over active classes, ties to the lowest index
+    (jnp.argmax keeps the first maximum, matching the rust tie-break).
+    """
+    out = clause_outputs(state, x, and_mask, or_mask, clause_mask,
+                         class_mask, thresh, train_mode=False)
+    v = class_sums(out, t)
+    tmin = jnp.asarray(t, jnp.int32)
+    masked = jnp.where(class_mask > 0.5, v, -tmin - 1)
+    return v, jnp.argmax(masked).astype(jnp.int32)
+
+
+def train_step(state, x, sign, clause_rand, ta_rand,
+               and_mask, or_mask, clause_mask, class_mask,
+               t, p_reinforce, p_weaken, thresh):
+    """One training step; returns the new TA state tensor (i32 [C, J, L])."""
+    out = clause_outputs(state, x, and_mask, or_mask, clause_mask,
+                         class_mask, thresh, train_mode=True)   # [C, J]
+    v = class_sums(out, t).astype(jnp.float32)                  # [C]
+
+    tf = jnp.asarray(t, jnp.float32)
+    p_sel = (tf - sign * v) / (2.0 * tf)                        # [C]
+    selected = (clause_rand < p_sel[:, None]).astype(jnp.float32)
+    selected = selected * (jnp.abs(sign) > 0.5)[:, None] \
+        * clause_mask[None, :] * class_mask[:, None]            # [C, J]
+
+    pol = polarity(out.shape[1]).astype(jnp.float32)            # [J]
+    sp = sign[:, None] * pol[None, :]                           # [C, J]
+    type1 = selected * (sp > 0.5)
+    type2 = selected * (sp < -0.5)
+
+    lit = x[None, None, :]                                      # [1,1,L]
+    o = out[:, :, None]                                         # [C,J,1]
+    eff = effective_actions(state, and_mask, or_mask, thresh)   # [C,J,L]
+
+    inc1 = type1[:, :, None] * o * lit * (ta_rand < p_reinforce)
+    dec1 = type1[:, :, None] * (1.0 - o * lit) * (ta_rand < p_weaken)
+    inc2 = type2[:, :, None] * o * (1.0 - lit) * (1.0 - eff)
+
+    delta = (inc1 + inc2 - dec1).astype(jnp.int32)
+    return jnp.clip(state + delta, 0, 2 * thresh - 1)

@@ -1,0 +1,192 @@
+"""L2: the TM compute graph in JAX, calling the L1 Pallas kernels.
+
+Three entry points, each AOT-lowered by ``aot.py`` to an HLO-text artifact
+the rust runtime executes via PJRT (python never runs at request time):
+
+* ``tm_infer``      — one datapoint → (clamped class sums, prediction).
+* ``tm_train_step`` — one labelled datapoint + explicit randomness → new
+                      TA states (the online/offline learning step).
+* ``tm_eval_batch`` — padded batch → predictions + correct count (the
+                      accuracy-analysis block, §3.3, evaluated in one
+                      dispatch).
+
+Structural hyper-parameters (classes/clauses/features/states) are baked at
+lowering time, mirroring the paper's pre-synthesis parameters; run-time
+hyper-parameters (s via p_reinforce/p_weaken, T, the clause-number port,
+the class mask, fault gates) are graph *inputs*, mirroring the paper's
+run-time I/O ports — changing them needs no re-lowering, exactly as the
+FPGA needs no re-synthesis.
+"""
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import clause as kclause
+from compile.kernels import feedback as kfeedback
+
+
+@dataclass(frozen=True)
+class TmShape:
+    """Pre-synthesis (structural) parameters — must match
+    ``rust/src/tm/params.rs::TmShape``."""
+    classes: int = 3
+    clauses: int = 16
+    features: int = 16
+    states: int = 100  # per action side; include threshold
+
+    @property
+    def literals(self) -> int:
+        return 2 * self.features
+
+
+IRIS = TmShape()
+
+
+def tm_infer(shape: TmShape):
+    """Build the inference function for a given structural shape."""
+
+    def infer(state, x, and_mask, or_mask, clause_mask, class_mask, t):
+        out = kclause.clause_outputs(
+            state, x, and_mask, or_mask, clause_mask, class_mask,
+            thresh=shape.states, train_mode=False)
+        v = kclause.votes(out, t)
+        ti = t.astype(jnp.int32)
+        masked = jnp.where(class_mask > 0.5, v, -ti - 1)
+        return v, jnp.argmax(masked).astype(jnp.int32)
+
+    return infer
+
+
+def tm_train_step(shape: TmShape):
+    """Build the training-step function (fused Pallas kernel)."""
+
+    def step(state, x, sign, clause_rand, ta_rand,
+             and_mask, or_mask, clause_mask, class_mask, scalars):
+        return kfeedback.train_step(
+            state, x, sign, clause_rand, ta_rand,
+            and_mask, or_mask, clause_mask, class_mask, scalars,
+            thresh=shape.states)
+
+    return step
+
+
+def tm_eval_batch(shape: TmShape, batch: int = 150):
+    """Build the batched accuracy-analysis function.
+
+    Inputs are padded to ``batch`` rows; ``valid`` masks the padding.
+    Returns (predictions i32[batch], correct-count i32).
+    """
+
+    infer = tm_infer(shape)
+
+    def eval_batch(state, xs, labels, valid,
+                   and_mask, or_mask, clause_mask, class_mask, t):
+        def one(x):
+            return infer(state, x, and_mask, or_mask,
+                         clause_mask, class_mask, t)[1]
+
+        preds = jax.vmap(one)(xs)                       # [B]
+        correct = jnp.sum(
+            ((preds == labels) & (valid > 0.5)).astype(jnp.int32))
+        return preds, correct
+
+    return eval_batch
+
+
+def tm_train_epoch(shape: TmShape, steps: int = 60):
+    """Build the scan-over-datapoints training pass.
+
+    Executes ``steps`` training steps in ONE dispatch (jax.lax.scan over
+    the fused Pallas step), amortising PJRT call overhead — the L2
+    optimisation recorded in EXPERIMENTS.md §Perf. Rows beyond a shorter
+    pass are padded with an all-zero ``sign`` vector, which makes the
+    step a provable no-op (no clause is ever selected).
+    """
+    import jax
+
+    step = tm_train_step(shape)
+
+    def epoch(state, xs, signs, clause_rands, ta_rands,
+              and_mask, or_mask, clause_mask, class_mask, scalars):
+        def body(carry, inp):
+            x, sign, cr, tr = inp
+            new = step(carry, x, sign, cr, tr,
+                       and_mask, or_mask, clause_mask, class_mask, scalars)
+            return new, ()
+
+        final, _ = jax.lax.scan(
+            body, state, (xs, signs, clause_rands, ta_rands))
+        return final
+
+    return epoch
+
+
+def example_args_epoch(shape: TmShape, steps: int = 60):
+    f32, i32 = jnp.float32, jnp.int32
+    s = jax.ShapeDtypeStruct
+    cjl = (shape.classes, shape.clauses, shape.literals)
+    return (
+        s(cjl, i32),                                      # state
+        s((steps, shape.literals), f32),                  # xs
+        s((steps, shape.classes), f32),                   # signs
+        s((steps, shape.classes, shape.clauses), f32),    # clause_rands
+        s((steps,) + cjl, f32),                           # ta_rands
+        s(cjl, f32),                                      # and_mask
+        s(cjl, f32),                                      # or_mask
+        s((shape.clauses,), f32),                         # clause_mask
+        s((shape.classes,), f32),                         # class_mask
+        s((3,), f32),                                     # scalars
+    )
+
+
+def example_args_infer(shape: TmShape):
+    """ShapeDtypeStructs in the exact argument order of ``tm_infer``."""
+    f32, i32 = jnp.float32, jnp.int32
+    s = jax.ShapeDtypeStruct
+    cjl = (shape.classes, shape.clauses, shape.literals)
+    return (
+        s(cjl, i32),                     # state
+        s((shape.literals,), f32),       # x
+        s(cjl, f32),                     # and_mask
+        s(cjl, f32),                     # or_mask
+        s((shape.clauses,), f32),        # clause_mask
+        s((shape.classes,), f32),        # class_mask
+        s((), f32),                      # t
+    )
+
+
+def example_args_train(shape: TmShape):
+    f32, i32 = jnp.float32, jnp.int32
+    s = jax.ShapeDtypeStruct
+    cjl = (shape.classes, shape.clauses, shape.literals)
+    return (
+        s(cjl, i32),                                  # state
+        s((shape.literals,), f32),                    # x
+        s((shape.classes,), f32),                     # sign
+        s((shape.classes, shape.clauses), f32),       # clause_rand
+        s(cjl, f32),                                  # ta_rand
+        s(cjl, f32),                                  # and_mask
+        s(cjl, f32),                                  # or_mask
+        s((shape.clauses,), f32),                     # clause_mask
+        s((shape.classes,), f32),                     # class_mask
+        s((3,), f32),                                 # scalars [t, p_re, p_wk]
+    )
+
+
+def example_args_eval(shape: TmShape, batch: int = 150):
+    f32, i32 = jnp.float32, jnp.int32
+    s = jax.ShapeDtypeStruct
+    cjl = (shape.classes, shape.clauses, shape.literals)
+    return (
+        s(cjl, i32),                     # state
+        s((batch, shape.literals), f32), # xs
+        s((batch,), i32),                # labels
+        s((batch,), f32),                # valid
+        s(cjl, f32),                     # and_mask
+        s(cjl, f32),                     # or_mask
+        s((shape.clauses,), f32),        # clause_mask
+        s((shape.classes,), f32),        # class_mask
+        s((), f32),                      # t
+    )

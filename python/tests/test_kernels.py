@@ -1,0 +1,154 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps randomize shapes, states, inputs, masks and randomness;
+golden tests pin the contract's edge cases (empty clauses, fault gates,
+saturation, selection boundaries).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import clause as kclause
+from compile.kernels import feedback as kfeedback
+from compile.kernels import ref
+
+
+def rand_case(seed, classes, clauses, features, states):
+    rng = np.random.default_rng(seed)
+    lits = 2 * features
+    cjl = (classes, clauses, lits)
+    state = rng.integers(0, 2 * states, size=cjl).astype(np.int32)
+    xbits = rng.integers(0, 2, size=features)
+    x = np.concatenate([xbits, 1 - xbits]).astype(np.float32)
+    # ~10% faulty TAs.
+    and_mask = (rng.random(cjl) > 0.05).astype(np.float32)
+    or_mask = ((rng.random(cjl) < 0.05) * and_mask).astype(np.float32)
+    active_clauses = 2 * rng.integers(1, clauses // 2 + 1)
+    clause_mask = (np.arange(clauses) < active_clauses).astype(np.float32)
+    active_classes = rng.integers(1, classes + 1)
+    class_mask = (np.arange(classes) < active_classes).astype(np.float32)
+    return state, x, and_mask, or_mask, clause_mask, class_mask
+
+
+shape_st = st.tuples(
+    st.integers(1, 4),            # classes
+    st.sampled_from([2, 4, 8, 16]),  # clauses (even)
+    st.integers(1, 20),           # features
+    st.sampled_from([4, 100]),    # states per side
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**32 - 1), shp=shape_st,
+       train_mode=st.booleans())
+def test_clause_kernel_matches_ref(seed, shp, train_mode):
+    classes, clauses, features, states = shp
+    state, x, am, om, clm, cm = rand_case(seed, *shp)
+    got = kclause.clause_outputs(state, x, am, om, clm, cm,
+                                 thresh=states, train_mode=train_mode)
+    want = ref.clause_outputs(state, x, am, om, clm, cm,
+                              states, train_mode)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**32 - 1), shp=shape_st,
+       t=st.integers(1, 20),
+       s=st.floats(1.0, 10.0, allow_nan=False))
+def test_train_kernel_matches_ref(seed, shp, t, s):
+    classes, clauses, features, states = shp
+    state, x, am, om, clm, cm = rand_case(seed, *shp)
+    rng = np.random.default_rng(seed ^ 0xFEED)
+    sign = np.zeros(classes, np.float32)
+    target = rng.integers(0, classes)
+    sign[target] = 1.0
+    if classes > 1:
+        neg = (target + 1 + rng.integers(0, classes - 1)) % classes
+        if neg != target:
+            sign[neg] = -1.0
+    clause_rand = rng.random((classes, clauses)).astype(np.float32)
+    ta_rand = rng.random((classes, clauses, 2 * features)).astype(np.float32)
+    p_re = np.float32((s - 1.0) / s)
+    p_wk = np.float32(1.0 / s)
+    scalars = np.array([t, p_re, p_wk], np.float32)
+
+    got = kfeedback.train_step(state, x, sign, clause_rand, ta_rand,
+                               am, om, clm, cm, scalars, thresh=states)
+    want = ref.train_step(state, x, sign, clause_rand, ta_rand,
+                          am, om, clm, cm,
+                          np.float32(t), p_re, p_wk, states)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def iris_case(seed=0):
+    return rand_case(seed, 3, 16, 16, 100)
+
+
+def test_empty_clause_convention():
+    state, x, am, om, clm, cm = iris_case()
+    state = np.zeros_like(state)  # everything excluded
+    train = kclause.clause_outputs(state, x, am * 0 + 1, om * 0, clm * 0 + 1,
+                                   cm * 0 + 1, thresh=100, train_mode=True)
+    infer = kclause.clause_outputs(state, x, am * 0 + 1, om * 0, clm * 0 + 1,
+                                   cm * 0 + 1, thresh=100, train_mode=False)
+    assert np.all(np.asarray(train) == 1.0), "empty clause fires in train"
+    assert np.all(np.asarray(infer) == 0.0), "empty clause silent in infer"
+
+
+def test_fault_gates_force_actions():
+    state, x, _, _, clm, cm = iris_case()
+    state = np.zeros_like(state)           # all exclude
+    ones = np.ones_like(state, np.float32)
+    zeros = np.zeros_like(state, np.float32)
+    clm, cm = np.ones(16, np.float32), np.ones(3, np.float32)
+    # Stuck-at-1 on every TA: clause includes every literal; literal k and
+    # its complement can't both be 1 -> every clause blocked.
+    out = kclause.clause_outputs(state, x, ones, ones, clm, cm,
+                                 thresh=100, train_mode=True)
+    assert np.all(np.asarray(out) == 0.0)
+    # Stuck-at-0 on every TA with fully-included state: clause empty again.
+    state_inc = np.full_like(state, 199)
+    out = kclause.clause_outputs(state_inc, x, zeros, zeros, clm, cm,
+                                 thresh=100, train_mode=False)
+    assert np.all(np.asarray(out) == 0.0)
+
+
+def test_saturation_at_bounds():
+    _, x, am, om, clm, cm = iris_case()
+    am, om = am * 0 + 1, om * 0
+    clm, cm = np.ones(16, np.float32), np.ones(3, np.float32)
+    # All states at max; Type II cannot push further.
+    state = np.full((3, 16, 32), 199, np.int32)
+    sign = np.array([1.0, -1.0, 0.0], np.float32)
+    clause_rand = np.zeros((3, 16), np.float32)   # select everything
+    ta_rand = np.zeros((3, 16, 32), np.float32)   # all events fire
+    scalars = np.array([15.0, 1.0, 1.0], np.float32)
+    new = kfeedback.train_step(state, x, sign, clause_rand, ta_rand,
+                               am, om, clm, cm, scalars, thresh=100)
+    assert np.asarray(new).max() <= 199
+    # All states at 0; Type I weaken cannot push below 0.
+    state0 = np.zeros((3, 16, 32), np.int32)
+    new0 = kfeedback.train_step(state0, x, sign, clause_rand, ta_rand,
+                                am, om, clm, cm, scalars, thresh=100)
+    assert np.asarray(new0).min() >= 0
+
+
+def test_no_selection_no_change():
+    state, x, am, om, clm, cm = iris_case(3)
+    sign = np.array([1.0, -1.0, 0.0], np.float32)
+    clause_rand = np.ones((3, 16), np.float32)    # never < p_sel <= 1
+    ta_rand = np.zeros((3, 16, 32), np.float32)
+    scalars = np.array([15.0, 0.5, 0.5], np.float32)
+    new = kfeedback.train_step(state, x, sign, clause_rand, ta_rand,
+                               am, om, clm, cm, scalars, thresh=100)
+    np.testing.assert_array_equal(np.asarray(new), state)
+
+
+def test_votes_polarity_and_clamp():
+    out = jnp.ones((2, 6), jnp.float32)   # 3 positive, 3 negative clauses
+    v = kclause.votes(out, jnp.float32(15.0))
+    np.testing.assert_array_equal(np.asarray(v), [0, 0])
+    out = jnp.tile(jnp.array([1.0, 0.0]), (1, 3)).reshape(1, 6)
+    v = kclause.votes(out, jnp.float32(2.0))
+    np.testing.assert_array_equal(np.asarray(v), [2])  # 3 clamps to 2

@@ -1,0 +1,134 @@
+"""L2 model tests: shapes, dtypes, argmax tie-breaks, batched accuracy."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+
+
+def mk_masks(shape):
+    cjl = (shape.classes, shape.clauses, shape.literals)
+    return (np.ones(cjl, np.float32), np.zeros(cjl, np.float32),
+            np.ones(shape.clauses, np.float32),
+            np.ones(shape.classes, np.float32))
+
+
+def test_infer_shapes_and_tiebreak():
+    shape = model.IRIS
+    infer = model.tm_infer(shape)
+    state = np.full((3, 16, 32), 99, np.int32)  # untrained
+    xbits = np.zeros(16, np.int32)
+    x = np.concatenate([xbits, 1 - xbits]).astype(np.float32)
+    am, om, clm, cm = mk_masks(shape)
+    v, pred = infer(state, x, am, om, clm, cm, jnp.float32(15.0))
+    assert v.shape == (3,) and v.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(v), [0, 0, 0])
+    assert int(pred) == 0, "tie breaks to the lowest class index"
+
+
+def test_infer_masked_class_never_predicted():
+    shape = model.IRIS
+    infer = model.tm_infer(shape)
+    # Teach class 2's positive clause 0 an always-true pattern…
+    state = np.full((3, 16, 32), 99, np.int32)
+    state[2, 0, 0] = 150
+    xbits = np.ones(16, np.int32)
+    x = np.concatenate([xbits, 1 - xbits]).astype(np.float32)
+    am, om, clm, cm = mk_masks(shape)
+    v, pred = infer(state, x, am, om, clm, cm, jnp.float32(15.0))
+    assert int(pred) == 2
+    # …then mask class 2 out (over-provisioned class).
+    cm = np.array([1.0, 1.0, 0.0], np.float32)
+    v, pred = infer(state, x, am, om, clm, cm, jnp.float32(15.0))
+    assert int(pred) != 2
+    assert int(v[2]) == 0
+
+
+def test_clause_number_port_gates_votes():
+    shape = model.IRIS
+    infer = model.tm_infer(shape)
+    state = np.full((3, 16, 32), 99, np.int32)
+    state[0, 14, 0] = 150  # positive clause 14 includes literal 0
+    xbits = np.ones(16, np.int32)
+    x = np.concatenate([xbits, 1 - xbits]).astype(np.float32)
+    am, om, clm, cm = mk_masks(shape)
+    v, _ = infer(state, x, am, om, clm, cm, jnp.float32(15.0))
+    assert int(v[0]) == 1
+    clm = (np.arange(16) < 14).astype(np.float32)  # clause-number port = 14
+    v, _ = infer(state, x, am, om, clm, cm, jnp.float32(15.0))
+    assert int(v[0]) == 0
+
+
+def test_eval_batch_counts_valid_only():
+    shape = model.IRIS
+    batch = 8
+    ev = model.tm_eval_batch(shape, batch)
+    state = np.full((3, 16, 32), 99, np.int32)  # predicts 0 everywhere
+    xs = np.zeros((batch, 32), np.float32)
+    xs[:, 16:] = 1.0
+    labels = np.zeros(batch, np.int32)
+    labels[4:] = 1  # half the rows are "wrong"
+    valid = np.ones(batch, np.float32)
+    am, om, clm, cm = mk_masks(shape)
+    preds, correct = ev(state, xs, labels, valid, am, om, clm, cm,
+                        jnp.float32(15.0))
+    assert preds.shape == (batch,)
+    assert int(correct) == 4
+    # Mask out the wrong half: padding must not count.
+    valid[4:] = 0.0
+    _, correct = ev(state, xs, labels, valid, am, om, clm, cm,
+                    jnp.float32(15.0))
+    assert int(correct) == 4
+
+
+def test_train_step_runs_from_model_entry():
+    shape = model.IRIS
+    step = model.tm_train_step(shape)
+    state = np.full((3, 16, 32), 99, np.int32)
+    xbits = np.ones(16, np.int32)
+    x = np.concatenate([xbits, 1 - xbits]).astype(np.float32)
+    sign = np.array([1.0, -1.0, 0.0], np.float32)
+    rng = np.random.default_rng(0)
+    clause_rand = rng.random((3, 16)).astype(np.float32)
+    ta_rand = rng.random((3, 16, 32)).astype(np.float32)
+    am, om, clm, cm = mk_masks(shape)
+    scalars = np.array([15.0, 0.27272728, 0.72727275], np.float32)
+    new = step(state, x, sign, clause_rand, ta_rand, am, om, clm, cm,
+               scalars)
+    assert new.shape == (3, 16, 32) and new.dtype == jnp.int32
+    assert not np.array_equal(np.asarray(new), state), "feedback applied"
+
+
+def test_train_epoch_matches_sequential_steps():
+    """The lax.scan epoch must equal N sequential fused steps, and all-zero
+    sign rows (the padding convention) must be no-ops."""
+    shape = model.IRIS
+    steps = 6
+    epoch = model.tm_train_epoch(shape, steps)
+    step = model.tm_train_step(shape)
+    rng = np.random.default_rng(11)
+    state = rng.integers(0, 200, size=(3, 16, 32)).astype(np.int32)
+    am, om, clm, cm = mk_masks(shape)
+    scalars = np.array([15.0, 0.2727, 0.7273], np.float32)
+    xs, signs, crs, trs = [], [], [], []
+    for i in range(steps):
+        bits = rng.integers(0, 2, size=16)
+        xs.append(np.concatenate([bits, 1 - bits]).astype(np.float32))
+        s = np.zeros(3, np.float32)
+        if i != 3:  # row 3 is a padding no-op
+            t = rng.integers(0, 3)
+            s[t] = 1.0
+            s[(t + 1) % 3] = -1.0
+        signs.append(s)
+        crs.append(rng.random((3, 16), dtype=np.float32))
+        trs.append(rng.random((3, 16, 32), dtype=np.float32))
+    final = epoch(state, np.stack(xs), np.stack(signs), np.stack(crs),
+                  np.stack(trs), am, om, clm, cm, scalars)
+    cur = state
+    for i in range(steps):
+        prev = cur
+        cur = np.asarray(step(cur, xs[i], signs[i], crs[i], trs[i],
+                              am, om, clm, cm, scalars))
+        if i == 3:
+            np.testing.assert_array_equal(cur, prev, "zero-sign row is a no-op")
+    np.testing.assert_array_equal(np.asarray(final), cur)

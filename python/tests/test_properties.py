@@ -1,0 +1,158 @@
+"""Cross-cutting property tests for the L1/L2 stack.
+
+Hypothesis sweeps beyond the kernel-vs-oracle checks in test_kernels.py:
+invariants of the training dynamics (saturation, monotonicity of the
+selection probability), batch/single-consistency of the eval graph, and
+mask semantics.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def mk_state(rng, shape, lo=0, hi=None):
+    hi = hi if hi is not None else 2 * shape.states
+    return rng.integers(lo, hi, size=(shape.classes, shape.clauses,
+                                      shape.literals)).astype(np.int32)
+
+
+def mk_x(rng, shape):
+    bits = rng.integers(0, 2, size=shape.features)
+    return np.concatenate([bits, 1 - bits]).astype(np.float32)
+
+
+def identity_masks(shape):
+    cjl = (shape.classes, shape.clauses, shape.literals)
+    return (np.ones(cjl, np.float32), np.zeros(cjl, np.float32),
+            np.ones(shape.clauses, np.float32),
+            np.ones(shape.classes, np.float32))
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**32 - 1))
+def test_train_step_moves_states_by_at_most_one(seed):
+    shape = model.IRIS
+    rng = np.random.default_rng(seed)
+    state = mk_state(rng, shape)
+    x = mk_x(rng, shape)
+    am, om, clm, cm = identity_masks(shape)
+    sign = np.array([1.0, -1.0, 0.0], np.float32)
+    step = model.tm_train_step(shape)
+    new = np.asarray(step(
+        state, x, sign,
+        rng.random((3, 16), dtype=np.float32),
+        rng.random((3, 16, 32), dtype=np.float32),
+        am, om, clm, cm,
+        np.array([15.0, 0.27, 0.73], np.float32)))
+    delta = new - state
+    assert delta.min() >= -1 and delta.max() <= 1
+    assert new.min() >= 0 and new.max() <= 2 * shape.states - 1
+    # Sign-0 class untouched.
+    np.testing.assert_array_equal(new[2], state[2])
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**32 - 1))
+def test_eval_batch_matches_single_infer(seed):
+    shape = model.IRIS
+    rng = np.random.default_rng(seed)
+    state = mk_state(rng, shape)
+    am, om, clm, cm = identity_masks(shape)
+    batch = 8
+    xs = np.stack([mk_x(rng, shape) for _ in range(batch)])
+    labels = rng.integers(0, 3, size=batch).astype(np.int32)
+    valid = np.ones(batch, np.float32)
+    ev = model.tm_eval_batch(shape, batch)
+    preds, correct = ev(state, xs, labels, valid, am, om, clm, cm,
+                        jnp.float32(15.0))
+    infer = model.tm_infer(shape)
+    expect = np.array([
+        int(infer(state, xs[i], am, om, clm, cm, jnp.float32(15.0))[1])
+        for i in range(batch)
+    ])
+    np.testing.assert_array_equal(np.asarray(preds), expect)
+    assert int(correct) == int(np.sum(expect == labels))
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**32 - 1))
+def test_selection_probability_monotone_in_votes(seed):
+    """ref-level invariant: for the target class, p_sel falls as the
+    class's vote sum rises — the threshold feedback-damping mechanism the
+    paper leans on ("training ... linked to a threshold hyper-parameter
+    which is used to reduce the probability of issuing feedback as the TM
+    becomes trained further")."""
+    t = 15.0
+    sums = np.arange(-15, 16, dtype=np.float32)
+    p_target = (t - 1.0 * sums) / (2 * t)
+    assert np.all(np.diff(p_target) < 0)
+    p_contrast = (t + 1.0 * sums) / (2 * t)
+    assert np.all(np.diff(p_contrast) > 0)
+    assert np.all((p_target >= 0) & (p_target <= 1))
+    _ = seed
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**32 - 1), killed=st.integers(0, 15))
+def test_clause_mask_removes_exactly_that_clause(seed, killed):
+    shape = model.IRIS
+    rng = np.random.default_rng(seed)
+    # Fully-included random states so most clauses are non-empty.
+    state = mk_state(rng, shape, lo=shape.states - 5, hi=shape.states + 5)
+    x = mk_x(rng, shape)
+    am, om, clm, cm = identity_masks(shape)
+    out_full = ref.clause_outputs(state, x, am, om, clm, cm,
+                                  shape.states, train_mode=True)
+    clm2 = clm.copy()
+    clm2[killed] = 0.0
+    out_masked = ref.clause_outputs(state, x, am, om, clm2, cm,
+                                    shape.states, train_mode=True)
+    diff = np.asarray(out_full) - np.asarray(out_masked)
+    # Only column `killed` can change, and only 1 -> 0.
+    assert np.all(diff[:, np.arange(16) != killed] == 0)
+    assert np.all(diff[:, killed] >= 0)
+    assert np.all(np.asarray(out_masked)[:, killed] == 0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**32 - 1))
+def test_stuck_at_0_never_increases_clause_output(seed):
+    """Monotonicity: forcing TA outputs to 0 can only make clauses fire
+    *more* (fewer constraints) in train mode; in infer mode a clause can
+    also fall silent by becoming empty — but a firing non-empty clause
+    never gains new blockers."""
+    shape = model.IRIS
+    rng = np.random.default_rng(seed)
+    state = mk_state(rng, shape)
+    x = mk_x(rng, shape)
+    am, om, clm, cm = identity_masks(shape)
+    out_clean = ref.clause_outputs(state, x, am, om, clm, cm,
+                                   shape.states, train_mode=True)
+    am2 = (rng.random(am.shape) > 0.3).astype(np.float32)  # 30% stuck-at-0
+    out_faulty = ref.clause_outputs(state, x, am2, om, clm, cm,
+                                    shape.states, train_mode=True)
+    # Train mode: removing includes can only keep or raise the output.
+    assert np.all(np.asarray(out_faulty) >= np.asarray(out_clean))
+
+
+def test_infer_train_mode_outputs_differ_only_on_empty_clauses():
+    shape = model.IRIS
+    rng = np.random.default_rng(0)
+    state = mk_state(rng, shape)
+    x = mk_x(rng, shape)
+    am, om, clm, cm = identity_masks(shape)
+    train = np.asarray(ref.clause_outputs(state, x, am, om, clm, cm,
+                                          shape.states, True))
+    infer = np.asarray(ref.clause_outputs(state, x, am, om, clm, cm,
+                                          shape.states, False))
+    eff = np.asarray(ref.effective_actions(state, am, om, shape.states))
+    empty = eff.max(axis=2) < 0.5
+    # They agree everywhere a clause is non-empty.
+    assert np.array_equal(train[~empty], infer[~empty])
+    # Empty clauses: 1 in train, 0 in infer.
+    assert np.all(train[empty] == 1.0)
+    assert np.all(infer[empty] == 0.0)

@@ -1,0 +1,47 @@
+//! Bench: regenerate every figure of the paper's evaluation (§5) and time
+//! the sweeps. One row per figure — the full 120-ordering run is the
+//! paper-fidelity setting; `FIG_ORDERINGS=n` scales it down for quick
+//! runs.
+//!
+//! ```sh
+//! cargo bench --bench figures              # 120 orderings, as the paper
+//! FIG_ORDERINGS=24 cargo bench --bench figures
+//! ```
+
+mod harness;
+
+use tm_fpga::coordinator::{report::figure_summary, run_figure, Figure, SweepOptions};
+
+fn main() {
+    let orderings: usize = std::env::var("FIG_ORDERINGS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(120);
+    let opts = SweepOptions { orderings, threads: 0, seed: 42 };
+
+    println!(
+        "regenerating Figures 4-9 over {} cross-validation orderings\n",
+        orderings
+    );
+    let mut rows = Vec::new();
+    for fig in Figure::all() {
+        let mut result = None;
+        let r = harness::bench(
+            &format!("{} ({} orderings)", fig.name(), orderings),
+            0,
+            1,
+            (orderings * 17) as u64, // analysis points produced
+            || {
+                result = Some(run_figure(fig, &opts).expect("figure run"));
+            },
+        );
+        print!("{}", figure_summary(result.as_ref().unwrap()));
+        println!();
+        rows.push(r);
+    }
+    harness::report(&rows);
+    println!(
+        "\n(cf. §5 intro: the cross-validation infrastructure analyses entire \
+         datasets in seconds)"
+    );
+}

@@ -1,0 +1,78 @@
+//! Minimal shared bench harness (the offline image has no criterion):
+//! warmup + timed repetitions with mean/min/max and throughput reporting.
+#![allow(dead_code)] // each bench binary uses a subset of the harness
+
+use std::time::Instant;
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+    pub reps: usize,
+    /// Items processed per repetition (for throughput lines); 0 = none.
+    pub items_per_rep: u64,
+}
+
+impl BenchResult {
+    pub fn throughput(&self) -> f64 {
+        if self.items_per_rep == 0 {
+            0.0
+        } else {
+            self.items_per_rep as f64 / self.mean_s
+        }
+    }
+}
+
+/// Time `f` for `reps` repetitions after `warmup` untimed ones.
+pub fn bench<F: FnMut()>(
+    name: &str,
+    warmup: usize,
+    reps: usize,
+    items_per_rep: u64,
+    mut f: F,
+) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let mean = times.iter().sum::<f64>() / reps as f64;
+    BenchResult {
+        name: name.to_string(),
+        mean_s: mean,
+        min_s: times.iter().copied().fold(f64::INFINITY, f64::min),
+        max_s: times.iter().copied().fold(f64::NEG_INFINITY, f64::max),
+        reps,
+        items_per_rep,
+    }
+}
+
+/// Print a results table.
+pub fn report(results: &[BenchResult]) {
+    println!(
+        "{:<46} {:>12} {:>12} {:>12} {:>14}",
+        "benchmark", "mean", "min", "max", "throughput"
+    );
+    for r in results {
+        let tp = if r.items_per_rep > 0 {
+            format!("{:.0}/s", r.throughput())
+        } else {
+            "-".to_string()
+        };
+        println!(
+            "{:<46} {:>11.3}ms {:>11.3}ms {:>11.3}ms {:>14}",
+            r.name,
+            r.mean_s * 1e3,
+            r.min_s * 1e3,
+            r.max_s * 1e3,
+            tp
+        );
+    }
+}

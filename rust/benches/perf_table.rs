@@ -1,0 +1,93 @@
+//! Bench: the §6 performance & power tables.
+//!
+//! Performance rows: the modelled FPGA datapath (2-cycle inference +
+//! feedback, one datapoint per clock pipelined, at the 100 MHz reference
+//! clock) against measured software paths — the optimized native
+//! bit-parallel implementation, the naive scalar baseline (the paper's
+//! "software implementation" comparator), and the PJRT AOT-artifact path.
+//!
+//! Power rows: the calibrated activity model's decomposition (paper:
+//! 1.725 W total, 1.4 W MCU) across gating scenarios.
+//!
+//! ```sh
+//! make artifacts && cargo bench --bench perf_table
+//! ```
+
+mod harness;
+
+use tm_fpga::coordinator::perf;
+
+fn main() {
+    println!("=== §6 performance table ===\n");
+    let iters = std::env::var("PERF_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(50);
+    let mut rows = vec![
+        perf::fpga_model_row(),
+        perf::native_row(iters),
+        perf::baseline_row(iters),
+    ];
+    match perf::pjrt_row(100) {
+        Ok(Some(r)) => rows.push(r),
+        Ok(None) => eprintln!("(PJRT row skipped: run `make artifacts`)"),
+        Err(e) => eprintln!("(PJRT row failed: {e:#})"),
+    }
+    match perf::pjrt_epoch_row(30) {
+        Ok(Some(r)) => rows.push(r),
+        Ok(None) => {}
+        Err(e) => eprintln!("(PJRT epoch row failed: {e:#})"),
+    }
+    print!("{}", perf::perf_table(&rows));
+
+    let fpga = rows[0].train_dps;
+    let naive = rows[2].train_dps;
+    println!(
+        "\nmodelled FPGA vs naive software: {:.0}× on training throughput \
+         (the paper's \"minutes … down to a matter of seconds\")",
+        fpga / naive
+    );
+
+    println!("\n=== §6 power table ===\n");
+    match perf::power_table() {
+        Ok(rows) => {
+            print!("{}", perf::power_table_text(&rows));
+            println!("\npaper reference: 1.725 W total, of which 1.4 W microcontroller");
+        }
+        Err(e) => eprintln!("power table failed: {e:#}"),
+    }
+
+    // Micro-rows: the primitive costs behind the table.
+    println!("\n=== microbenchmarks ===\n");
+    use tm_fpga::data::{blocks::BlockPlan, iris, SetAllocation};
+    use tm_fpga::tm::*;
+    let shape = TmShape::iris();
+    let params = TmParams::paper_offline(&shape);
+    let plan = BlockPlan::stratified(iris::booleanised(), 5, 21).unwrap();
+    let data = plan
+        .sets(&[0, 1, 2, 3, 4], SetAllocation::paper())
+        .unwrap()
+        .online
+        .pack(&shape);
+    let mut tm = MultiTm::new(&shape).unwrap();
+    let mut rng = Xoshiro256::new(1);
+    let mut rands = StepRands::draw(&mut rng, &shape);
+    let mut micro = Vec::new();
+    micro.push(harness::bench("train_step x60 (native)", 3, 20, 60, || {
+        for (x, y) in &data {
+            rands.refill(&mut rng, &shape);
+            train_step(&mut tm, x, *y, &params, &rands);
+        }
+    }));
+    let mut sink = 0usize;
+    micro.push(harness::bench("infer x60 (native)", 3, 20, 60, || {
+        for (x, _) in &data {
+            sink = sink.wrapping_add(tm.predict(x, &params));
+        }
+    }));
+    std::hint::black_box(sink);
+    micro.push(harness::bench("StepRands refill", 3, 20, 1, || {
+        rands.refill(&mut rng, &shape);
+    }));
+    harness::report(&micro);
+}

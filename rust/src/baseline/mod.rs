@@ -1,0 +1,6 @@
+//! Baseline implementations the paper compares against (§6's software
+//! comparator).
+
+pub mod naive;
+
+pub use naive::NaiveTm;

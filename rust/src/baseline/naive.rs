@@ -1,0 +1,238 @@
+//! Naive software TM baseline — the §6 comparator.
+//!
+//! "The parallel nature of a hardware-implemented TM is unrivalled by
+//! software implementations … This decreases execution times from minutes,
+//! or longer, on a computer using a software implementation down to a
+//! matter of seconds."
+//!
+//! This is the straightforward per-literal scalar implementation a
+//! software TM would use: no bit-packing, no action caching, clause
+//! evaluation as a boolean loop. Semantics are identical to
+//! [`crate::tm::MultiTm`] (tested), so throughput comparisons isolate the
+//! implementation, not the algorithm.
+
+use crate::tm::clause::Input;
+use crate::tm::params::{polarity, TmParams, TmShape};
+use crate::tm::rng::StepRands;
+
+/// Scalar multiclass TM.
+#[derive(Debug, Clone)]
+pub struct NaiveTm {
+    shape: TmShape,
+    /// `states[class][clause][literal]`.
+    states: Vec<Vec<Vec<u32>>>,
+    /// Fault gates, dense booleans (AND, OR).
+    and_mask: Vec<Vec<Vec<bool>>>,
+    or_mask: Vec<Vec<Vec<bool>>>,
+}
+
+impl NaiveTm {
+    pub fn new(shape: &TmShape) -> Self {
+        let init = shape.states - 1;
+        let c = shape.classes;
+        let j = shape.max_clauses;
+        let l = shape.literals();
+        NaiveTm {
+            shape: shape.clone(),
+            states: vec![vec![vec![init; l]; j]; c],
+            and_mask: vec![vec![vec![true; l]; j]; c],
+            or_mask: vec![vec![vec![false; l]; j]; c],
+        }
+    }
+
+    pub fn shape(&self) -> &TmShape {
+        &self.shape
+    }
+
+    /// Flat row-major state view (comparison against `MultiTm`).
+    pub fn flat_states(&self) -> Vec<u32> {
+        let mut v = Vec::with_capacity(self.shape.num_tas());
+        for c in &self.states {
+            for j in c {
+                v.extend_from_slice(j);
+            }
+        }
+        v
+    }
+
+    pub fn set_fault(&mut self, class: usize, clause: usize, lit: usize, and: bool, or: bool) {
+        self.and_mask[class][clause][lit] = and;
+        self.or_mask[class][clause][lit] = or;
+    }
+
+    fn eff_action(&self, c: usize, j: usize, k: usize) -> bool {
+        let a = self.states[c][j][k] >= self.shape.include_threshold();
+        (a && self.and_mask[c][j][k]) || self.or_mask[c][j][k]
+    }
+
+    fn clause_output(&self, c: usize, j: usize, x: &Input, train: bool) -> bool {
+        let mut any = false;
+        for k in 0..self.shape.literals() {
+            if self.eff_action(c, j, k) {
+                any = true;
+                if !x.literal(k) {
+                    return false;
+                }
+            }
+        }
+        any || train
+    }
+
+    fn sums(&self, x: &Input, params: &TmParams, train: bool) -> Vec<i32> {
+        (0..self.shape.classes)
+            .map(|c| {
+                if c >= params.active_classes {
+                    return 0;
+                }
+                let mut v = 0;
+                for j in 0..params.active_clauses {
+                    if self.clause_output(c, j, x, train) {
+                        v += polarity(j);
+                    }
+                }
+                v.clamp(-params.t, params.t)
+            })
+            .collect()
+    }
+
+    pub fn infer(&self, x: &Input, params: &TmParams) -> (Vec<i32>, usize) {
+        let sums = self.sums(x, params, false);
+        let active = &sums[..params.active_classes];
+        let mut best = 0;
+        for (c, &v) in active.iter().enumerate() {
+            if v > active[best] {
+                best = c;
+            }
+        }
+        (active.to_vec(), best)
+    }
+
+    pub fn predict(&self, x: &Input, params: &TmParams) -> usize {
+        self.infer(x, params).1
+    }
+
+    /// Training step with the identical contract as
+    /// `tm::feedback::train_step` (same `StepRands` consumption).
+    pub fn train_step(&mut self, x: &Input, target: usize, params: &TmParams, rands: &StepRands) {
+        let shape = self.shape.clone();
+        let sums = self.sums(x, params, true);
+        let signs = crate::tm::feedback::class_signs(
+            target,
+            rands,
+            shape.classes,
+            params.active_classes,
+        );
+        let two_t = (2 * params.t) as f32;
+        let max_state = shape.max_state();
+        for c in 0..params.active_classes {
+            let sign = signs[c];
+            if sign == 0 {
+                continue;
+            }
+            let p_sel = (params.t as f32 - sign as f32 * sums[c] as f32) / two_t;
+            for j in 0..params.active_clauses {
+                if !(rands.clause(&shape, c, j) < p_sel) {
+                    continue;
+                }
+                let out = self.clause_output(c, j, x, true);
+                if sign as i32 * polarity(j) == 1 {
+                    for k in 0..shape.literals() {
+                        let r = rands.ta(&shape, c, j, k);
+                        if out && x.literal(k) {
+                            if r < params.p_reinforce() && self.states[c][j][k] < max_state {
+                                self.states[c][j][k] += 1;
+                            }
+                        } else if r < params.p_weaken() && self.states[c][j][k] > 0 {
+                            self.states[c][j][k] -= 1;
+                        }
+                    }
+                } else if out {
+                    for k in 0..shape.literals() {
+                        if !x.literal(k)
+                            && !self.eff_action(c, j, k)
+                            && self.states[c][j][k] < max_state
+                        {
+                            self.states[c][j][k] += 1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    pub fn accuracy(&self, data: &[(Input, usize)], params: &TmParams) -> f64 {
+        if data.is_empty() {
+            return 0.0;
+        }
+        let ok = data.iter().filter(|(x, y)| self.predict(x, params) == *y).count();
+        ok as f64 / data.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tm::machine::MultiTm;
+    use crate::tm::rng::Xoshiro256;
+
+    /// The baseline must be *semantically identical* to the optimized
+    /// machine: same states after the same training trajectory.
+    #[test]
+    fn matches_multitm_bit_for_bit() {
+        let shape = TmShape::iris();
+        let params = TmParams::paper_offline(&shape);
+        let mut fast = MultiTm::new(&shape).unwrap();
+        let mut naive = NaiveTm::new(&shape);
+        let mut rng = Xoshiro256::new(0xD1FF);
+        for step in 0..300 {
+            let bits: Vec<bool> = (0..16).map(|_| rng.next_f32() < 0.5).collect();
+            let x = Input::pack(&shape, &bits);
+            let r = StepRands::draw(&mut rng, &shape);
+            crate::tm::feedback::train_step(&mut fast, &x, step % 3, &params, &r);
+            naive.train_step(&x, step % 3, &params, &r);
+        }
+        assert_eq!(fast.ta().states(), &naive.flat_states()[..]);
+        // And inference agrees.
+        for _ in 0..20 {
+            let bits: Vec<bool> = (0..16).map(|_| rng.next_f32() < 0.5).collect();
+            let x = Input::pack(&shape, &bits);
+            assert_eq!(fast.infer(&x, &params), naive.infer(&x, &params));
+        }
+    }
+
+    #[test]
+    fn matches_under_faults() {
+        let shape = TmShape::iris();
+        let params = TmParams::paper_offline(&shape);
+        let mut fast = MultiTm::new(&shape).unwrap();
+        let mut naive = NaiveTm::new(&shape);
+        let map = crate::tm::fault::FaultMap::even_spread(
+            &shape,
+            0.2,
+            crate::tm::fault::Fault::StuckAt0,
+            5,
+        )
+        .unwrap();
+        for c in 0..shape.classes {
+            for j in 0..shape.max_clauses {
+                for k in 0..shape.literals() {
+                    match map.get(c, j, k) {
+                        crate::tm::fault::Fault::None => {}
+                        crate::tm::fault::Fault::StuckAt0 => naive.set_fault(c, j, k, false, false),
+                        crate::tm::fault::Fault::StuckAt1 => naive.set_fault(c, j, k, true, true),
+                    }
+                }
+            }
+        }
+        fast.set_fault_map(map);
+        let mut rng = Xoshiro256::new(0xF00D);
+        for step in 0..200 {
+            let bits: Vec<bool> = (0..16).map(|_| rng.next_f32() < 0.5).collect();
+            let x = Input::pack(&shape, &bits);
+            let r = StepRands::draw(&mut rng, &shape);
+            crate::tm::feedback::train_step(&mut fast, &x, step % 3, &params, &r);
+            naive.train_step(&x, step % 3, &params, &r);
+        }
+        assert_eq!(fast.ta().states(), &naive.flat_states()[..]);
+    }
+}

@@ -1,0 +1,172 @@
+//! Hand-rolled CLI (the offline image has no `clap`): subcommand +
+//! `--flag value` parsing with typed accessors and good error messages.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// Parsed command line: a subcommand, positional args, and flags.
+#[derive(Debug, Clone, Default)]
+pub struct Cli {
+    pub command: String,
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Cli {
+    /// Parse `args` (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Cli> {
+        let mut it = args.into_iter().peekable();
+        let command = it.next().unwrap_or_else(|| "help".to_string());
+        let mut cli = Cli { command, ..Default::default() };
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if name.is_empty() {
+                    bail!("empty flag name");
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    cli.flags.insert(k.to_string(), v.to_string());
+                } else {
+                    // Value = next token unless it's another flag / absent
+                    // (then it's a boolean).
+                    match it.peek() {
+                        Some(v) if !v.starts_with("--") => {
+                            let v = it.next().unwrap();
+                            cli.flags.insert(name.to_string(), v);
+                        }
+                        _ => {
+                            cli.flags.insert(name.to_string(), "true".to_string());
+                        }
+                    }
+                }
+            } else {
+                cli.positional.push(a);
+            }
+        }
+        Ok(cli)
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn flag_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{name} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn flag_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{name} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn flag_f32(&self, name: &str, default: f32) -> Result<f32> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{name} expects a float, got {v:?}")),
+        }
+    }
+
+    pub fn flag_bool(&self, name: &str, default: bool) -> Result<bool> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some("true") | Some("1") | Some("yes") => Ok(true),
+            Some("false") | Some("0") | Some("no") => Ok(false),
+            Some(v) => bail!("--{name} expects a boolean, got {v:?}"),
+        }
+    }
+
+    /// Comma-separated usize list (e.g. `--ordering 0,1,2,3,4`).
+    pub fn flag_usize_list(&self, name: &str) -> Result<Option<Vec<usize>>> {
+        match self.flag(name) {
+            None => Ok(None),
+            Some(v) => {
+                let list: Result<Vec<usize>, _> =
+                    v.split(',').map(|x| x.trim().parse::<usize>()).collect();
+                Ok(Some(list.with_context(|| format!("--{name} expects n,n,..."))?))
+            }
+        }
+    }
+}
+
+pub const USAGE: &str = "\
+tmfpga — FPGA online-learning Tsetlin machine (Prescott et al., 2023) reproduction
+
+USAGE: tmfpga <command> [flags]
+
+COMMANDS
+  fig <4|5|6|7|8|9|all>   regenerate a paper figure over the cross-validation
+                          sweep   [--orderings N=120] [--threads N=auto]
+                          [--seed N=42] [--out DIR=results]
+  run                     one full system run (Fig-3 flow), prints the UART
+                          log     [--ordering 0,1,2,3,4] [--iterations N=16]
+                          [--online-learning BOOL=true] [--filter CLASS]
+                          [--seed N]
+  perf                    §6 performance table (FPGA model vs software paths)
+                          [--iters N=20] [--pjrt-steps N=60]
+  power                   §6 power table (gating / over-provisioning)
+  sweep                   hyper-parameter grid search  [--orderings N=12]
+                          [--epochs N=10] [--out DIR]
+  replay                  catastrophic-forgetting replay ablation
+                          [--interval K=5] [--orderings N=8]
+  explain                 dump trained clause compositions + a vote
+                          attribution    [--seed N] [--row N]
+  parity                  verify native vs PJRT bit-parity on a trajectory
+                          [--steps N=60]
+  help                    this text
+
+The binary is self-contained after `make artifacts` (PJRT paths need the
+artifacts directory; override with TMFPGA_ARTIFACTS).
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Cli {
+        Cli::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn basic_subcommand_and_flags() {
+        let c = parse("fig 4 --orderings 12 --threads 4");
+        assert_eq!(c.command, "fig");
+        assert_eq!(c.positional, vec!["4"]);
+        assert_eq!(c.flag_usize("orderings", 120).unwrap(), 12);
+        assert_eq!(c.flag_usize("threads", 0).unwrap(), 4);
+        assert_eq!(c.flag_usize("seed", 42).unwrap(), 42, "default");
+    }
+
+    #[test]
+    fn equals_form_and_bools() {
+        let c = parse("run --online-learning=false --filter 0 --verbose");
+        assert!(!c.flag_bool("online-learning", true).unwrap());
+        assert_eq!(c.flag_usize("filter", 99).unwrap(), 0);
+        assert!(c.flag_bool("verbose", false).unwrap());
+    }
+
+    #[test]
+    fn usize_list() {
+        let c = parse("run --ordering 4,3,2,1,0");
+        assert_eq!(c.flag_usize_list("ordering").unwrap().unwrap(), vec![4, 3, 2, 1, 0]);
+        assert!(parse("run").flag_usize_list("ordering").unwrap().is_none());
+        assert!(parse("run --ordering a,b").flag_usize_list("ordering").is_err());
+    }
+
+    #[test]
+    fn bad_values_error() {
+        let c = parse("fig 4 --orderings twelve");
+        assert!(c.flag_usize("orderings", 1).is_err());
+        let c = parse("run --online-learning maybe");
+        assert!(c.flag_bool("online-learning", true).is_err());
+    }
+
+    #[test]
+    fn empty_args_is_help() {
+        let c = Cli::parse(std::iter::empty::<String>()).unwrap();
+        assert_eq!(c.command, "help");
+    }
+}

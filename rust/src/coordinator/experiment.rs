@@ -1,0 +1,291 @@
+//! Experiment drivers: one per figure of the paper's evaluation (§5),
+//! each a specific staging of the FPGA system over the 120-ordering
+//! cross-validation sweep (§3.6.1), fanned out across threads.
+//!
+//! | Figure | Staging                                                        |
+//! |--------|----------------------------------------------------------------|
+//! | Fig 4  | labelled online learning, 16 iterations                        |
+//! | Fig 5  | class 0 filtered throughout (baseline for §5.2)                |
+//! | Fig 6  | class 0 introduced after 5 iterations, online learning **off** |
+//! | Fig 7  | class 0 introduced after 5 iterations, online learning **on**  |
+//! | Fig 8  | 20% stuck-at-0 TA faults after 5 iterations, learning **off**  |
+//! | Fig 9  | 20% stuck-at-0 TA faults after 5 iterations, learning **on**   |
+
+use crate::coordinator::metrics::Curve;
+use crate::data::blocks::{all_orderings, BlockPlan};
+use crate::data::dataset::BoolDataset;
+use crate::data::iris;
+use crate::fpga::mcu::McuAction;
+use crate::fpga::system::{FpgaSystem, SystemConfig};
+use crate::tm::fault::{Fault, FaultMap};
+use anyhow::{bail, Result};
+use std::sync::mpsc;
+
+/// The figures of §5 (plus `All`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Figure {
+    Fig4,
+    Fig5,
+    Fig6,
+    Fig7,
+    Fig8,
+    Fig9,
+}
+
+impl Figure {
+    pub fn parse(s: &str) -> Result<Figure> {
+        Ok(match s {
+            "4" | "fig4" => Figure::Fig4,
+            "5" | "fig5" => Figure::Fig5,
+            "6" | "fig6" => Figure::Fig6,
+            "7" | "fig7" => Figure::Fig7,
+            "8" | "fig8" => Figure::Fig8,
+            "9" | "fig9" => Figure::Fig9,
+            _ => bail!("unknown figure {s:?} (expected 4..9)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Figure::Fig4 => "fig4",
+            Figure::Fig5 => "fig5",
+            Figure::Fig6 => "fig6",
+            Figure::Fig7 => "fig7",
+            Figure::Fig8 => "fig8",
+            Figure::Fig9 => "fig9",
+        }
+    }
+
+    pub fn title(&self) -> &'static str {
+        match self {
+            Figure::Fig4 => "Online learning with labelled data",
+            Figure::Fig5 => "Class 0 filtered throughout (baseline)",
+            Figure::Fig6 => "Class introduced at iter 5, online learning disabled",
+            Figure::Fig7 => "Class introduced at iter 5, online learning enabled",
+            Figure::Fig8 => "20% stuck-at-0 faults at iter 5, online learning disabled",
+            Figure::Fig9 => "20% stuck-at-0 faults at iter 5, online learning enabled",
+        }
+    }
+
+    pub fn all() -> [Figure; 6] {
+        [Figure::Fig4, Figure::Fig5, Figure::Fig6, Figure::Fig7, Figure::Fig8, Figure::Fig9]
+    }
+}
+
+/// Sweep options.
+#[derive(Debug, Clone)]
+pub struct SweepOptions {
+    /// Orderings to run (≤ 120); the paper runs all 120.
+    pub orderings: usize,
+    /// Worker threads (0 = all cores).
+    pub threads: usize,
+    pub seed: u64,
+}
+
+impl Default for SweepOptions {
+    fn default() -> Self {
+        SweepOptions { orderings: 120, threads: 0, seed: 42 }
+    }
+}
+
+/// Aggregated result of one figure.
+#[derive(Debug, Clone)]
+pub struct FigureResult {
+    pub figure: Figure,
+    pub offline: Curve,
+    pub validation: Curve,
+    pub online: Curve,
+    /// Mean cycles per run and handshake stalls (perf cross-checks).
+    pub mean_cycles: f64,
+    pub mean_stall_cycles: f64,
+    pub mean_power_w: f64,
+    pub orderings: usize,
+}
+
+/// Stage the system for `figure` on one ordering.
+pub fn configure(figure: Figure, seed: u64) -> (SystemConfig, Vec<(usize, McuAction)>) {
+    let mut cfg = SystemConfig::paper();
+    cfg.seed = seed;
+    let mut schedule = Vec::new();
+    match figure {
+        Figure::Fig4 => {}
+        Figure::Fig5 => {
+            cfg.initial_filter = Some(0);
+        }
+        Figure::Fig6 => {
+            cfg.initial_filter = Some(0);
+            cfg.online_learning = false;
+            // "introducing [the] new classification at runtime (after 5
+            // online iterations)" — lift the filter before pass 6.
+            schedule.push((6, McuAction::SetFilter { enabled: false, class: 0 }));
+        }
+        Figure::Fig7 => {
+            cfg.initial_filter = Some(0);
+            schedule.push((6, McuAction::SetFilter { enabled: false, class: 0 }));
+        }
+        Figure::Fig8 => {
+            cfg.online_learning = false;
+            let map = FaultMap::even_spread(&cfg.shape, 0.20, Fault::StuckAt0, seed ^ 0xF417)
+                .expect("fault map");
+            schedule.push((6, McuAction::InjectFaults(map)));
+        }
+        Figure::Fig9 => {
+            let map = FaultMap::even_spread(&cfg.shape, 0.20, Fault::StuckAt0, seed ^ 0xF417)
+                .expect("fault map");
+            schedule.push((6, McuAction::InjectFaults(map)));
+        }
+    }
+    (cfg, schedule)
+}
+
+/// Run one figure over the cross-validation sweep.
+pub fn run_figure(figure: Figure, opts: &SweepOptions) -> Result<FigureResult> {
+    let orderings: Vec<Vec<usize>> =
+        all_orderings(5).into_iter().take(opts.orderings.clamp(1, 120)).collect();
+    let plan = BlockPlan::stratified(iris::booleanised(), 5, opts.seed)?;
+    let blocks: Vec<BoolDataset> = (0..plan.n_blocks()).map(|i| plan.block(i).clone()).collect();
+
+    let threads = if opts.threads == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+    } else {
+        opts.threads
+    };
+
+    // Fan orderings out over worker threads (the coordinator's event loop:
+    // std threads + channels; tokio is not in this image's crate set).
+    let (tx, rx) = mpsc::channel();
+    let chunks: Vec<Vec<(usize, Vec<usize>)>> = {
+        let mut cs: Vec<Vec<(usize, Vec<usize>)>> = vec![Vec::new(); threads];
+        for (i, ord) in orderings.iter().enumerate() {
+            cs[i % threads].push((i, ord.clone()));
+        }
+        cs
+    };
+    std::thread::scope(|scope| {
+        for chunk in &chunks {
+            let tx = tx.clone();
+            let blocks = &blocks;
+            scope.spawn(move || {
+                for (i, ord) in chunk {
+                    let (mut cfg, schedule) = configure(figure, opts.seed + *i as u64);
+                    cfg.seed = opts.seed.wrapping_add(1000).wrapping_add(*i as u64);
+                    let run = (|| -> Result<_> {
+                        let mut sys = FpgaSystem::new(cfg, blocks, ord)?;
+                        for (it, action) in &schedule {
+                            sys.mcu.schedule(*it, action.clone());
+                        }
+                        sys.run()
+                    })();
+                    tx.send((*i, run)).expect("channel");
+                }
+            });
+        }
+        drop(tx);
+    });
+
+    let mut runs: Vec<Option<crate::fpga::system::RunReport>> = (0..orderings.len())
+        .map(|_| None)
+        .collect();
+    for (i, run) in rx {
+        runs[i] = Some(run?);
+    }
+    let runs: Vec<_> = runs.into_iter().map(|r| r.unwrap()).collect();
+
+    let offline = Curve::aggregate(&runs.iter().map(|r| r.offline_curve.clone()).collect::<Vec<_>>());
+    let validation =
+        Curve::aggregate(&runs.iter().map(|r| r.validation_curve.clone()).collect::<Vec<_>>());
+    let online = Curve::aggregate(&runs.iter().map(|r| r.online_curve.clone()).collect::<Vec<_>>());
+    let n = runs.len() as f64;
+    Ok(FigureResult {
+        figure,
+        offline,
+        validation,
+        online,
+        mean_cycles: runs.iter().map(|r| r.total_cycles as f64).sum::<f64>() / n,
+        mean_stall_cycles: runs.iter().map(|r| r.handshake.stall_cycles as f64).sum::<f64>() / n,
+        mean_power_w: runs.iter().map(|r| r.power.total_w).sum::<f64>() / n,
+        orderings: runs.len(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_opts() -> SweepOptions {
+        SweepOptions { orderings: 6, threads: 2, seed: 7 }
+    }
+
+    #[test]
+    fn fig4_shape_online_and_validation_rise() {
+        let r = run_figure(Figure::Fig4, &quick_opts()).unwrap();
+        assert_eq!(r.offline.len(), 17);
+        assert!(r.online.delta() > 0.05, "online delta {:.3}", r.online.delta());
+        assert!(r.validation.delta() > 0.0, "val delta {:.3}", r.validation.delta());
+        // Offline training set starts with the highest accuracy (§5.1).
+        assert!(r.offline.mean_at(0) > r.validation.mean_at(0));
+        assert!(r.offline.mean_at(0) > 0.7, "paper starts at 83%");
+    }
+
+    #[test]
+    fn fig6_vs_fig7_class_introduction() {
+        let base = run_figure(Figure::Fig6, &quick_opts()).unwrap();
+        let online = run_figure(Figure::Fig7, &quick_opts()).unwrap();
+        // Fig 6: accuracy falls when the class appears and stays low.
+        let (at, drop) = base.validation.max_drop();
+        assert_eq!(at, 6, "class appears in analysis 6 (introduced after 5 passes)");
+        assert!(drop < -0.1, "visible drop, got {drop:.3}");
+        let end_base = base.validation.mean_at(16);
+        // Fig 7: recovery — final accuracy clearly above the frozen
+        // baseline.
+        let end_online = online.validation.mean_at(16);
+        assert!(
+            end_online > end_base + 0.05,
+            "online {end_online:.3} vs frozen {end_base:.3}"
+        );
+    }
+
+    #[test]
+    fn fig8_vs_fig9_fault_recovery() {
+        let frozen = run_figure(Figure::Fig8, &quick_opts()).unwrap();
+        let online = run_figure(Figure::Fig9, &quick_opts()).unwrap();
+        // Frozen system: the curve is exactly flat after the injection
+        // (nothing can change a frozen machine) and not above the
+        // pre-fault level. (Stuck-at-0 severity varies at 6 orderings;
+        // the magnitude check lives in integration_figures at 12.)
+        for it in 7..=16 {
+            assert_eq!(
+                frozen.online.mean_at(it),
+                frozen.online.mean_at(6),
+                "frozen after faults"
+            );
+        }
+        // (Direction/magnitude of the fault drop is asserted at 12
+        // orderings in integration_figures::fig8_faults_degrade_frozen_system;
+        // at 6 orderings stuck-at-0 noise can mask it.)
+        // Recovery: online learning ends above the frozen baseline.
+        assert!(
+            online.online.mean_at(16) > frozen.online.mean_at(16),
+            "{:.3} !> {:.3}",
+            online.online.mean_at(16),
+            frozen.online.mean_at(16)
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = run_figure(Figure::Fig4, &quick_opts()).unwrap();
+        let b = run_figure(Figure::Fig4, &quick_opts()).unwrap();
+        for i in 0..a.offline.len() {
+            assert_eq!(a.offline.mean_at(i), b.offline.mean_at(i));
+            assert_eq!(a.online.mean_at(i), b.online.mean_at(i));
+        }
+    }
+
+    #[test]
+    fn figure_parse() {
+        assert_eq!(Figure::parse("4").unwrap(), Figure::Fig4);
+        assert_eq!(Figure::parse("fig9").unwrap(), Figure::Fig9);
+        assert!(Figure::parse("10").is_err());
+    }
+}

@@ -1,0 +1,129 @@
+//! Curve statistics for cross-validated experiments: every figure in the
+//! paper is a mean over 120 block orderings; we also carry the standard
+//! deviation for error bars the paper omits.
+
+/// Mean/std/min/max of one analysis point across orderings.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Stat {
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub n: usize,
+}
+
+impl Stat {
+    pub fn from_samples(xs: &[f64]) -> Stat {
+        let n = xs.len();
+        if n == 0 {
+            return Stat { mean: f64::NAN, std: f64::NAN, min: f64::NAN, max: f64::NAN, n: 0 };
+        }
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        Stat {
+            mean,
+            std: var.sqrt(),
+            min: xs.iter().copied().fold(f64::INFINITY, f64::min),
+            max: xs.iter().copied().fold(f64::NEG_INFINITY, f64::max),
+            n,
+        }
+    }
+}
+
+/// One averaged accuracy curve (index = online iteration, 0 = after
+/// offline training).
+#[derive(Debug, Clone)]
+pub struct Curve {
+    pub points: Vec<Stat>,
+}
+
+impl Curve {
+    /// Aggregate per-ordering curves (all the same length).
+    pub fn aggregate(runs: &[Vec<f64>]) -> Curve {
+        assert!(!runs.is_empty());
+        let len = runs[0].len();
+        assert!(runs.iter().all(|r| r.len() == len), "ragged curves");
+        let points = (0..len)
+            .map(|i| {
+                let samples: Vec<f64> =
+                    runs.iter().map(|r| r[i]).filter(|x| x.is_finite()).collect();
+                Stat::from_samples(&samples)
+            })
+            .collect();
+        Curve { points }
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    pub fn mean_at(&self, i: usize) -> f64 {
+        self.points[i].mean
+    }
+
+    /// Net accuracy change over the curve (the paper's "+12%" deltas).
+    pub fn delta(&self) -> f64 {
+        if self.points.len() < 2 {
+            return 0.0;
+        }
+        self.points.last().unwrap().mean - self.points[0].mean
+    }
+
+    /// Largest single-step drop (used to locate fault/class events).
+    pub fn max_drop(&self) -> (usize, f64) {
+        let mut worst = (0usize, 0.0f64);
+        for i in 1..self.points.len() {
+            let d = self.points[i].mean - self.points[i - 1].mean;
+            if d < worst.1 {
+                worst = (i, d);
+            }
+        }
+        worst
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stat_basics() {
+        let s = Stat::from_samples(&[1.0, 2.0, 3.0]);
+        assert!((s.mean - 2.0).abs() < 1e-12);
+        assert!((s.std - (2.0f64 / 3.0).sqrt()).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+        assert_eq!(s.n, 3);
+        assert!(Stat::from_samples(&[]).mean.is_nan());
+    }
+
+    #[test]
+    fn aggregate_and_delta() {
+        let runs = vec![vec![0.5, 0.6, 0.7], vec![0.7, 0.8, 0.9]];
+        let c = Curve::aggregate(&runs);
+        assert_eq!(c.len(), 3);
+        assert!((c.mean_at(0) - 0.6).abs() < 1e-12);
+        assert!((c.delta() - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nan_points_skipped() {
+        let runs = vec![vec![0.5, f64::NAN], vec![0.7, 0.9]];
+        let c = Curve::aggregate(&runs);
+        assert_eq!(c.points[1].n, 1);
+        assert!((c.points[1].mean - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn max_drop_finds_event() {
+        let runs = vec![vec![0.8, 0.82, 0.6, 0.7, 0.75]];
+        let c = Curve::aggregate(&runs);
+        let (at, d) = c.max_drop();
+        assert_eq!(at, 2);
+        assert!((d + 0.22).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,22 @@
+//! The L3 coordinator: experiment orchestration over the FPGA system model
+//! (Fig-3 flow staging, 120-ordering cross-validation fan-out,
+//! hyper-parameter search, §6 perf/power tables, and the paper's
+//! future-work extensions: replay and continuous accuracy monitoring).
+
+pub mod experiment;
+pub mod metrics;
+pub mod monitor;
+pub mod perf;
+pub mod replay;
+pub mod report;
+pub mod sweep;
+pub mod unlabelled;
+
+pub use experiment::{configure, run_figure, Figure, FigureResult, SweepOptions};
+pub use metrics::{Curve, Stat};
+pub use monitor::{monitor_and_retrain, AccuracyMonitor, RetrainPolicy};
+pub use perf::{baseline_row, fpga_model_row, native_row, perf_table, pjrt_epoch_row, pjrt_row, power_table};
+pub use replay::{retention, run_with_replay};
+pub use report::{figure_csv, figure_summary, sparkline, write_figure_csv};
+pub use sweep::{run_sweep, sweep_csv, SweepConfig, SweepPoint};
+pub use unlabelled::{confidence, unlabelled_pass, Confidence, PseudoLabelPolicy, UnseenClassDetector};

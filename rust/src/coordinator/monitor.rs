@@ -1,0 +1,270 @@
+//! Continuous accuracy monitoring + retrain trigger — the paper's §5.3.2
+//! and §7 future-work items: "continuous accuracy analysis (every N cycles
+//! test the accuracy with a single piece of offline training data,
+//! maintaining a cumulative average) can be used to detect faults and
+//! trigger system retraining/resource re-provisioning."
+//!
+//! [`AccuracyMonitor`] keeps an exponentially-weighted accuracy estimate
+//! from single-datapoint spot checks; [`RetrainPolicy`] decides when to
+//! retrain and whether to enable over-provisioned clauses while doing so
+//! (§5.3.2: "additional clauses can be enabled for this retraining to
+//! further mitigate the effect of faulty TAs").
+
+use crate::tm::clause::Input;
+use crate::tm::feedback::train_step;
+use crate::tm::machine::MultiTm;
+use crate::tm::params::TmParams;
+use crate::tm::rng::{StepRands, Xoshiro256};
+use anyhow::Result;
+
+/// Cumulative (EWMA) accuracy estimate from spot checks.
+#[derive(Debug, Clone)]
+pub struct AccuracyMonitor {
+    /// Smoothing factor in (0, 1]; small = long memory.
+    pub alpha: f64,
+    estimate: f64,
+    samples: u64,
+}
+
+impl AccuracyMonitor {
+    pub fn new(alpha: f64) -> Self {
+        assert!((0.0..=1.0).contains(&alpha) && alpha > 0.0);
+        AccuracyMonitor { alpha, estimate: 1.0, samples: 0 }
+    }
+
+    /// Record one spot check (prediction correct or not).
+    pub fn record(&mut self, correct: bool) {
+        let x = if correct { 1.0 } else { 0.0 };
+        if self.samples == 0 {
+            self.estimate = x;
+        } else {
+            self.estimate = (1.0 - self.alpha) * self.estimate + self.alpha * x;
+        }
+        self.samples += 1;
+    }
+
+    pub fn estimate(&self) -> f64 {
+        self.estimate
+    }
+
+    pub fn samples(&self) -> u64 {
+        self.samples
+    }
+}
+
+/// When to retrain and with what resources.
+#[derive(Debug, Clone)]
+pub struct RetrainPolicy {
+    /// Trigger when the monitored estimate falls below this.
+    pub threshold: f64,
+    /// Minimum spot checks before the trigger can fire.
+    pub warmup: u64,
+    /// Clauses to activate during retraining (over-provisioning reserve).
+    pub retrain_clauses: usize,
+    /// Offline epochs for the on-chip retrain.
+    pub retrain_epochs: usize,
+}
+
+/// Outcome of a monitored run segment.
+#[derive(Debug, Clone)]
+pub struct MonitorOutcome {
+    pub triggered: bool,
+    pub estimate_at_trigger: f64,
+    pub spot_checks: u64,
+    pub accuracy_after: f64,
+}
+
+/// Run spot checks over a stream of labelled datapoints; on trigger,
+/// retrain on-chip with the policy's resources and report the result.
+pub fn monitor_and_retrain(
+    tm: &mut MultiTm,
+    params: &mut TmParams,
+    monitor: &mut AccuracyMonitor,
+    policy: &RetrainPolicy,
+    spot_stream: &[(Input, usize)],
+    retrain_data: &[(Input, usize)],
+    eval_data: &[(Input, usize)],
+    seed: u64,
+) -> Result<MonitorOutcome> {
+    let mut triggered = false;
+    let mut estimate_at_trigger = f64::NAN;
+    for (x, y) in spot_stream {
+        let pred = tm.predict(x, params);
+        monitor.record(pred == *y);
+        if !triggered
+            && monitor.samples() >= policy.warmup
+            && monitor.estimate() < policy.threshold
+        {
+            triggered = true;
+            estimate_at_trigger = monitor.estimate();
+            // On-chip retrain with over-provisioned clauses enabled.
+            params.active_clauses =
+                policy.retrain_clauses.min(tm.shape().max_clauses);
+            let shape = tm.shape().clone();
+            let mut rng = Xoshiro256::new(seed);
+            let mut rands = StepRands::draw(&mut rng, &shape);
+            for _ in 0..policy.retrain_epochs {
+                for (rx, ry) in retrain_data {
+                    rands.refill(&mut rng, &shape);
+                    train_step(tm, rx, *ry, params, &rands);
+                }
+            }
+        }
+    }
+    Ok(MonitorOutcome {
+        triggered,
+        estimate_at_trigger,
+        spot_checks: monitor.samples(),
+        accuracy_after: tm.accuracy(eval_data, params),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::blocks::{BlockPlan, SetAllocation};
+    use crate::data::iris;
+    use crate::tm::fault::{Fault, FaultMap};
+    use crate::tm::params::TmShape;
+
+    #[test]
+    fn ewma_tracks_accuracy() {
+        let mut m = AccuracyMonitor::new(0.2);
+        for _ in 0..50 {
+            m.record(true);
+        }
+        assert!(m.estimate() > 0.99);
+        for _ in 0..50 {
+            m.record(false);
+        }
+        assert!(m.estimate() < 0.05);
+        assert_eq!(m.samples(), 100);
+    }
+
+    #[test]
+    fn fault_burst_triggers_retrain_and_recovers() {
+        let shape = TmShape::iris();
+        let plan = BlockPlan::stratified(iris::booleanised(), 5, 11).unwrap();
+        let sets = plan.sets(&[0, 1, 2, 3, 4], SetAllocation::paper()).unwrap();
+        let train = sets.offline.pack(&shape);
+        let eval = sets.validation.pack(&shape);
+
+        // Train with a clause reserve: only 12 of 16 active.
+        let mut params = TmParams::paper_offline(&shape);
+        params.active_clauses = 12;
+        let mut tm = MultiTm::new(&shape).unwrap();
+        let mut rng = Xoshiro256::new(2);
+        let mut rands = StepRands::draw(&mut rng, &shape);
+        for _ in 0..10 {
+            for (x, y) in &train {
+                rands.refill(&mut rng, &shape);
+                train_step(&mut tm, x, *y, &params, &rands);
+            }
+        }
+        let acc_before = tm.accuracy(&eval, &params);
+        assert!(acc_before > 0.6);
+
+        // Fault burst that kills 10 of the 12 active clauses per class:
+        // stuck-at-1 on a complement pair (x0 and ¬x0) makes a clause
+        // unsatisfiable — the clause-output-level fault mode §7 proposes
+        // studying.
+        let mut map = FaultMap::none(&shape);
+        for c in 0..shape.classes {
+            for j in 0..10 {
+                map.set(c, j, 0, Fault::StuckAt1);
+                map.set(c, j, shape.features, Fault::StuckAt1);
+            }
+        }
+        tm.set_fault_map(map);
+        let mut monitor = AccuracyMonitor::new(0.15);
+        let policy = RetrainPolicy {
+            threshold: 0.62,
+            warmup: 10,
+            retrain_clauses: 16, // enable the over-provisioned reserve
+            retrain_epochs: 20,
+        };
+        let spot: Vec<_> = train.iter().cycle().take(120).cloned().collect();
+        let out = monitor_and_retrain(
+            &mut tm,
+            &mut params,
+            &mut monitor,
+            &policy,
+            &spot,
+            &train,
+            &eval,
+            77,
+        )
+        .unwrap();
+        assert!(out.triggered, "the monitor must detect the fault burst");
+        assert!(out.estimate_at_trigger < 0.62);
+        assert_eq!(params.active_clauses, 16, "reserve clauses enabled");
+        let faulted_untreated = {
+            // Control: same faults, no retrain.
+            let mut tm2 = MultiTm::new(&shape).unwrap();
+            let mut rng2 = Xoshiro256::new(2);
+            let mut r2 = StepRands::draw(&mut rng2, &shape);
+            let mut p2 = TmParams::paper_offline(&shape);
+            p2.active_clauses = 12;
+            for _ in 0..10 {
+                for (x, y) in &train {
+                    r2.refill(&mut rng2, &shape);
+                    train_step(&mut tm2, x, *y, &p2, &r2);
+                }
+            }
+            let mut map2 = FaultMap::none(&shape);
+            for c in 0..shape.classes {
+                for j in 0..10 {
+                    map2.set(c, j, 0, Fault::StuckAt1);
+                    map2.set(c, j, shape.features, Fault::StuckAt1);
+                }
+            }
+            tm2.set_fault_map(map2);
+            tm2.accuracy(&eval, &p2)
+        };
+        assert!(
+            out.accuracy_after > faulted_untreated + 0.05,
+            "retrain {:.3} must beat untreated {:.3}",
+            out.accuracy_after,
+            faulted_untreated
+        );
+    }
+
+    #[test]
+    fn healthy_machine_never_triggers() {
+        let shape = TmShape::iris();
+        let plan = BlockPlan::stratified(iris::booleanised(), 5, 11).unwrap();
+        let sets = plan.sets(&[0, 1, 2, 3, 4], SetAllocation::paper()).unwrap();
+        let train = sets.offline.pack(&shape);
+        let mut params = TmParams::paper_offline(&shape);
+        let mut tm = MultiTm::new(&shape).unwrap();
+        let mut rng = Xoshiro256::new(4);
+        let mut rands = StepRands::draw(&mut rng, &shape);
+        for _ in 0..10 {
+            for (x, y) in &train {
+                rands.refill(&mut rng, &shape);
+                train_step(&mut tm, x, *y, &params, &rands);
+            }
+        }
+        let mut monitor = AccuracyMonitor::new(0.1);
+        let policy = RetrainPolicy {
+            threshold: 0.5,
+            warmup: 10,
+            retrain_clauses: 16,
+            retrain_epochs: 1,
+        };
+        let spot: Vec<_> = train.iter().cycle().take(100).cloned().collect();
+        let out = monitor_and_retrain(
+            &mut tm,
+            &mut params,
+            &mut monitor,
+            &policy,
+            &spot,
+            &train,
+            &train,
+            9,
+        )
+        .unwrap();
+        assert!(!out.triggered);
+        assert_eq!(out.spot_checks, 100);
+    }
+}

@@ -1,0 +1,135 @@
+//! Replay mitigation for catastrophic forgetting — the paper's §5.1
+//! suggestion: "It could be advantageous to use a replay method,
+//! continuing training with occasional datapoints from the offline
+//! training set during online operation."
+//!
+//! Implemented as an online-pass variant that interleaves one offline-set
+//! row after every `replay_interval` online rows; the ablation bench
+//! compares forgetting (offline-set accuracy drop) with and without it.
+
+use crate::data::blocks::{BlockPlan, SetAllocation};
+use crate::data::iris;
+use crate::tm::feedback::train_step;
+use crate::tm::machine::MultiTm;
+use crate::tm::params::{TmParams, TmShape};
+use crate::tm::rng::{StepRands, Xoshiro256};
+use anyhow::Result;
+
+/// Result of one replay-vs-plain comparison.
+#[derive(Debug, Clone)]
+pub struct ReplayOutcome {
+    /// Offline-set accuracy per iteration (forgetting indicator).
+    pub offline_curve: Vec<f64>,
+    pub validation_curve: Vec<f64>,
+    pub online_curve: Vec<f64>,
+}
+
+/// Run the Fig-4 flow with optional replay.
+///
+/// `replay_interval = None` reproduces the plain Fig-4 behavioural flow;
+/// `Some(k)` inserts one offline row after every `k` online rows.
+pub fn run_with_replay(
+    ordering: &[usize],
+    iterations: usize,
+    replay_interval: Option<usize>,
+    seed: u64,
+) -> Result<ReplayOutcome> {
+    let shape = TmShape::iris();
+    let plan = BlockPlan::stratified(iris::booleanised(), 5, seed)?;
+    let sets = plan.sets(ordering, SetAllocation::paper())?;
+    let offline_train = sets.offline.truncate(20).pack(&shape);
+    let offline_full = sets.offline.pack(&shape);
+    let validation = sets.validation.pack(&shape);
+    let online = sets.online.pack(&shape);
+
+    let p_off = TmParams::paper_offline(&shape);
+    let p_on = TmParams::paper_online(&shape);
+    let mut tm = MultiTm::new(&shape)?;
+    let mut rng = Xoshiro256::new(seed ^ 0x5EED_CAFE);
+    let mut rands = StepRands::draw(&mut rng, &shape);
+
+    for _ in 0..10 {
+        for (x, y) in &offline_train {
+            rands.refill(&mut rng, &shape);
+            train_step(&mut tm, x, *y, &p_off, &rands);
+        }
+    }
+
+    let mut out = ReplayOutcome {
+        offline_curve: vec![tm.accuracy(&offline_full, &p_off)],
+        validation_curve: vec![tm.accuracy(&validation, &p_off)],
+        online_curve: vec![tm.accuracy(&online, &p_off)],
+    };
+
+    let mut replay_pos = 0usize;
+    for _ in 1..=iterations {
+        let mut since_replay = 0usize;
+        for (x, y) in &online {
+            rands.refill(&mut rng, &shape);
+            train_step(&mut tm, x, *y, &p_on, &rands);
+            since_replay += 1;
+            if let Some(k) = replay_interval {
+                if since_replay >= k {
+                    since_replay = 0;
+                    let (rx, ry) = &offline_train[replay_pos % offline_train.len()];
+                    replay_pos += 1;
+                    rands.refill(&mut rng, &shape);
+                    train_step(&mut tm, rx, *ry, &p_on, &rands);
+                }
+            }
+        }
+        out.offline_curve.push(tm.accuracy(&offline_full, &p_off));
+        out.validation_curve.push(tm.accuracy(&validation, &p_off));
+        out.online_curve.push(tm.accuracy(&online, &p_off));
+    }
+    Ok(out)
+}
+
+/// Mean offline-set accuracy over the online phase — higher = less
+/// forgetting.
+pub fn retention(curve: &[f64]) -> f64 {
+    if curve.len() <= 1 {
+        return f64::NAN;
+    }
+    curve[1..].iter().sum::<f64>() / (curve.len() - 1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn replay_reduces_forgetting_on_average() {
+        let orderings = crate::data::blocks::all_orderings(5);
+        let mut plain_r = 0.0;
+        let mut replay_r = 0.0;
+        let n = 8;
+        for (i, ord) in orderings.iter().take(n).enumerate() {
+            let plain = run_with_replay(ord, 8, None, 40 + i as u64).unwrap();
+            let replay = run_with_replay(ord, 8, Some(5), 40 + i as u64).unwrap();
+            plain_r += retention(&plain.offline_curve);
+            replay_r += retention(&replay.offline_curve);
+        }
+        plain_r /= n as f64;
+        replay_r /= n as f64;
+        assert!(
+            replay_r > plain_r - 0.01,
+            "replay retention {replay_r:.3} should not lose to plain {plain_r:.3}"
+        );
+    }
+
+    #[test]
+    fn curves_have_expected_length() {
+        let ord = [0, 1, 2, 3, 4];
+        let o = run_with_replay(&ord, 4, Some(10), 1).unwrap();
+        assert_eq!(o.offline_curve.len(), 5);
+        assert_eq!(o.online_curve.len(), 5);
+        assert!(o.online_curve.iter().all(|a| (0.0..=1.0).contains(a)));
+    }
+
+    #[test]
+    fn retention_math() {
+        assert!((retention(&[0.9, 0.8, 0.6]) - 0.7).abs() < 1e-12);
+        assert!(retention(&[0.9]).is_nan());
+    }
+}

@@ -1,0 +1,128 @@
+//! Result output: CSV files (one per figure, the series the paper plots)
+//! and quick ASCII sparkline rendering for the terminal.
+
+use crate::coordinator::experiment::FigureResult;
+use crate::coordinator::metrics::Curve;
+use anyhow::{Context, Result};
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// CSV for one figure: `iteration, <set>_mean, <set>_std ...` — exactly
+/// the three series of the paper's plots plus error bars.
+pub fn figure_csv(r: &FigureResult) -> String {
+    let mut s = String::new();
+    s.push_str(
+        "iteration,offline_mean,offline_std,validation_mean,validation_std,online_mean,online_std\n",
+    );
+    for i in 0..r.offline.len() {
+        let _ = writeln!(
+            s,
+            "{},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6}",
+            i,
+            r.offline.points[i].mean,
+            r.offline.points[i].std,
+            r.validation.points[i].mean,
+            r.validation.points[i].std,
+            r.online.points[i].mean,
+            r.online.points[i].std,
+        );
+    }
+    s
+}
+
+/// Write a figure CSV into `dir`.
+pub fn write_figure_csv(r: &FigureResult, dir: &Path) -> Result<std::path::PathBuf> {
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating {}", dir.display()))?;
+    let path = dir.join(format!("{}.csv", r.figure.name()));
+    std::fs::write(&path, figure_csv(r))
+        .with_context(|| format!("writing {}", path.display()))?;
+    Ok(path)
+}
+
+/// ASCII sparkline of a curve (terminal feedback).
+pub fn sparkline(c: &Curve) -> String {
+    const BARS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    let vals: Vec<f64> = c.points.iter().map(|p| p.mean).collect();
+    let lo = vals.iter().copied().fold(f64::INFINITY, f64::min);
+    let hi = vals.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+    let span = (hi - lo).max(1e-9);
+    vals.iter()
+        .map(|v| BARS[(((v - lo) / span) * 7.0).round() as usize])
+        .collect()
+}
+
+/// Terminal summary of one figure.
+pub fn figure_summary(r: &FigureResult) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "{} — {}", r.figure.name(), r.figure.title());
+    let _ = writeln!(s, "  ({} orderings averaged)", r.orderings);
+    for (name, c) in [
+        ("offline ", &r.offline),
+        ("validate", &r.validation),
+        ("online  ", &r.online),
+    ] {
+        let _ = writeln!(
+            s,
+            "  {name}  start {:5.1}%  end {:5.1}%  Δ {:+5.1}%  {}",
+            c.mean_at(0) * 100.0,
+            c.mean_at(c.len() - 1) * 100.0,
+            c.delta() * 100.0,
+            sparkline(c)
+        );
+    }
+    let _ = writeln!(
+        s,
+        "  mean cycles/run {:.0}  handshake stalls {:.0}  power {:.3} W",
+        r.mean_cycles, r.mean_stall_cycles, r.mean_power_w
+    );
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::experiment::{run_figure, Figure, SweepOptions};
+    use crate::coordinator::metrics::Curve;
+
+    #[test]
+    fn sparkline_shape() {
+        let c = Curve::aggregate(&[vec![0.0, 0.5, 1.0]]);
+        let s = sparkline(&c);
+        assert_eq!(s.chars().count(), 3);
+        assert!(s.starts_with('▁'));
+        assert!(s.ends_with('█'));
+    }
+
+    #[test]
+    fn csv_roundtrip_via_fs() {
+        let opts = SweepOptions { orderings: 2, threads: 1, seed: 3 };
+        let r = run_figure(Figure::Fig4, &opts).unwrap();
+        let csv = figure_csv(&r);
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines.len(), 1 + 17);
+        assert!(lines[0].starts_with("iteration,offline_mean"));
+        // Every data line has 7 comma-separated fields that parse.
+        for l in &lines[1..] {
+            let fields: Vec<&str> = l.split(',').collect();
+            assert_eq!(fields.len(), 7);
+            for f in &fields[1..] {
+                f.parse::<f64>().unwrap();
+            }
+        }
+        let dir = std::env::temp_dir().join("tmfpga_report_test");
+        let path = write_figure_csv(&r, &dir).unwrap();
+        assert!(path.exists());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn summary_contains_key_fields() {
+        let opts = SweepOptions { orderings: 2, threads: 1, seed: 3 };
+        let r = run_figure(Figure::Fig4, &opts).unwrap();
+        let s = figure_summary(&r);
+        assert!(s.contains("fig4"));
+        assert!(s.contains("offline"));
+        assert!(s.contains("power"));
+    }
+}

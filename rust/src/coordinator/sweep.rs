@@ -1,0 +1,190 @@
+//! Hyper-parameter search (§5 intro): "the fast execution time allows
+//! entire datasets to be analyzed in a matter of seconds, allowing the
+//! optimum hyper-parameters for a given dataset to be discovered within a
+//! short period of time."
+//!
+//! Grid search over (s, T) with cross-validated validation accuracy as
+//! the objective, fanned out across threads; each grid cell runs the
+//! paper's offline-training flow on a subset of orderings.
+
+use crate::data::blocks::{all_orderings, BlockPlan, SetAllocation};
+use crate::data::iris;
+use crate::tm::feedback::train_step;
+use crate::tm::machine::MultiTm;
+use crate::tm::params::{TmParams, TmShape};
+use crate::tm::rng::{StepRands, Xoshiro256};
+use anyhow::Result;
+use std::sync::mpsc;
+
+/// One grid cell's outcome.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    pub s: f32,
+    pub t: i32,
+    pub val_accuracy: f64,
+    pub train_accuracy: f64,
+}
+
+/// Sweep configuration.
+#[derive(Debug, Clone)]
+pub struct SweepConfig {
+    pub s_grid: Vec<f32>,
+    pub t_grid: Vec<i32>,
+    pub orderings: usize,
+    pub epochs: usize,
+    pub threads: usize,
+    pub seed: u64,
+}
+
+impl Default for SweepConfig {
+    fn default() -> Self {
+        SweepConfig {
+            s_grid: vec![1.0, 1.25, 1.375, 1.5, 2.0, 3.0, 4.0],
+            t_grid: vec![4, 8, 15, 20],
+            orderings: 12,
+            epochs: 10,
+            threads: 0,
+            seed: 101,
+        }
+    }
+}
+
+/// Evaluate one (s, T) cell: offline-train on each ordering's offline set,
+/// report mean validation accuracy.
+pub fn evaluate_cell(
+    shape: &TmShape,
+    s: f32,
+    t: i32,
+    orderings: &[Vec<usize>],
+    epochs: usize,
+    seed: u64,
+) -> Result<SweepPoint> {
+    let plan = BlockPlan::stratified(iris::booleanised(), 5, seed)?;
+    let mut val_acc = 0.0;
+    let mut train_acc = 0.0;
+    for (i, ord) in orderings.iter().enumerate() {
+        let sets = plan.sets(ord, SetAllocation::paper())?;
+        let train = sets.offline.truncate(20).pack(shape);
+        let full_train = sets.offline.pack(shape);
+        let val = sets.validation.pack(shape);
+        let params = TmParams {
+            s,
+            t,
+            active_clauses: shape.max_clauses,
+            active_classes: shape.classes,
+            boost_true_positive: false,
+            s_style: crate::tm::params::SStyle::InactionBiased,
+        };
+        params.validate(shape)?;
+        let mut tm = MultiTm::new(shape)?;
+        let mut rng = Xoshiro256::new(seed.wrapping_add(i as u64));
+        let mut rands = StepRands::draw(&mut rng, shape);
+        for _ in 0..epochs {
+            for (x, y) in &train {
+                rands.refill(&mut rng, shape);
+                train_step(&mut tm, x, *y, &params, &rands);
+            }
+        }
+        val_acc += tm.accuracy(&val, &params);
+        train_acc += tm.accuracy(&full_train, &params);
+    }
+    let n = orderings.len() as f64;
+    Ok(SweepPoint { s, t, val_accuracy: val_acc / n, train_accuracy: train_acc / n })
+}
+
+/// Run the full grid; results sorted by validation accuracy (best first).
+pub fn run_sweep(cfg: &SweepConfig) -> Result<Vec<SweepPoint>> {
+    let shape = TmShape::iris();
+    let orderings: Vec<Vec<usize>> =
+        all_orderings(5).into_iter().take(cfg.orderings.clamp(1, 120)).collect();
+    let cells: Vec<(f32, i32)> = cfg
+        .s_grid
+        .iter()
+        .flat_map(|&s| cfg.t_grid.iter().map(move |&t| (s, t)))
+        .collect();
+
+    let threads = if cfg.threads == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+    } else {
+        cfg.threads
+    };
+    let (tx, rx) = mpsc::channel();
+    std::thread::scope(|scope| {
+        for w in 0..threads {
+            let tx = tx.clone();
+            let cells = &cells;
+            let orderings = &orderings;
+            let shape = &shape;
+            scope.spawn(move || {
+                for (i, (s, t)) in cells.iter().enumerate() {
+                    if i % threads != w {
+                        continue;
+                    }
+                    let r = evaluate_cell(shape, *s, *t, orderings, cfg.epochs, cfg.seed);
+                    tx.send(r).expect("channel");
+                }
+            });
+        }
+        drop(tx);
+    });
+    let mut points: Vec<SweepPoint> = rx.into_iter().collect::<Result<_>>()?;
+    points.sort_by(|a, b| b.val_accuracy.partial_cmp(&a.val_accuracy).unwrap());
+    Ok(points)
+}
+
+/// CSV rendering of the sweep surface.
+pub fn sweep_csv(points: &[SweepPoint]) -> String {
+    let mut s = String::from("s,T,val_accuracy,train_accuracy\n");
+    for p in points {
+        s.push_str(&format!(
+            "{},{},{:.6},{:.6}\n",
+            p.s, p.t, p.val_accuracy, p.train_accuracy
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick() -> SweepConfig {
+        SweepConfig {
+            s_grid: vec![1.375, 4.0],
+            t_grid: vec![2, 15],
+            orderings: 4,
+            epochs: 5,
+            threads: 2,
+            seed: 5,
+        }
+    }
+
+    #[test]
+    fn sweep_covers_grid_and_sorts() {
+        let pts = run_sweep(&quick()).unwrap();
+        assert_eq!(pts.len(), 4);
+        for w in pts.windows(2) {
+            assert!(w[0].val_accuracy >= w[1].val_accuracy);
+        }
+        // Every accuracy sane.
+        for p in &pts {
+            assert!((0.0..=1.0).contains(&p.val_accuracy));
+        }
+    }
+
+    #[test]
+    fn paper_params_are_competitive() {
+        // s=1.375, T=15 should beat a degenerate cell like T=2 at s=4.
+        let pts = run_sweep(&quick()).unwrap();
+        let paper = pts.iter().find(|p| p.s == 1.375 && p.t == 15).unwrap();
+        assert!(paper.val_accuracy > 0.6, "paper cell works: {}", paper.val_accuracy);
+    }
+
+    #[test]
+    fn csv_format() {
+        let pts = vec![SweepPoint { s: 1.0, t: 15, val_accuracy: 0.8, train_accuracy: 0.9 }];
+        let csv = sweep_csv(&pts);
+        assert!(csv.starts_with("s,T,"));
+        assert!(csv.contains("1,15,0.8"));
+    }
+}

@@ -1,0 +1,278 @@
+//! Block memory manager — cross-validation infrastructure (paper §3.6.1).
+//!
+//! The full dataset is split into *blocks* whose length divides every set
+//! size; blocks are combined in different *orderings* to form the three
+//! sets (offline training / validation / online training), the experiment
+//! is re-run per ordering and results averaged. For iris: 150 rows → 5
+//! blocks of 30; sets of 30/60/60 rows; 5! = 120 orderings.
+//!
+//! Blocks are **stratified**: each class is dealt round-robin so every
+//! block carries an equal class mix — the paper's mitigation for "uneven
+//! distributions of classes and patterns across these three sets".
+
+use crate::data::dataset::BoolDataset;
+use crate::tm::rng::Xoshiro256;
+use anyhow::{bail, Result};
+
+/// A dataset divided into equal, class-stratified blocks.
+#[derive(Debug, Clone)]
+pub struct BlockPlan {
+    blocks: Vec<BoolDataset>,
+}
+
+/// How many blocks each set receives, in order
+/// (offline training, validation, online training).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SetAllocation {
+    pub offline: usize,
+    pub validation: usize,
+    pub online: usize,
+}
+
+impl SetAllocation {
+    /// The paper's iris allocation: 30/60/60 rows = 1/2/2 blocks of 30.
+    pub fn paper() -> Self {
+        SetAllocation { offline: 1, validation: 2, online: 2 }
+    }
+
+    pub fn total(&self) -> usize {
+        self.offline + self.validation + self.online
+    }
+}
+
+/// The three data sets (§3.6.1) produced by one block ordering.
+#[derive(Debug, Clone)]
+pub struct Sets {
+    pub offline: BoolDataset,
+    pub validation: BoolDataset,
+    pub online: BoolDataset,
+}
+
+impl BlockPlan {
+    /// Split `data` into `n_blocks` stratified blocks. Every class count
+    /// must be divisible by `n_blocks` (iris: 50 per class / 5 = 10).
+    /// `seed` shuffles within each class before dealing.
+    pub fn stratified(data: &BoolDataset, n_blocks: usize, seed: u64) -> Result<Self> {
+        if n_blocks == 0 || data.len() % n_blocks != 0 {
+            bail!("{} rows not divisible into {n_blocks} blocks", data.len());
+        }
+        let counts = data.class_counts();
+        for (c, &n) in counts.iter().enumerate() {
+            if n % n_blocks != 0 {
+                bail!("class {c} has {n} rows, not divisible by {n_blocks}");
+            }
+        }
+        // Per-class index pools, shuffled.
+        let mut rng = Xoshiro256::new(seed);
+        let mut pools: Vec<Vec<usize>> = vec![Vec::new(); data.n_classes];
+        for (i, &l) in data.labels.iter().enumerate() {
+            pools[l].push(i);
+        }
+        for p in pools.iter_mut() {
+            rng.shuffle(p);
+        }
+        // Deal round-robin into blocks; then shuffle each block's row
+        // order so class runs don't align inside a block.
+        let mut block_idx: Vec<Vec<usize>> = vec![Vec::new(); n_blocks];
+        for pool in &pools {
+            for (i, &row) in pool.iter().enumerate() {
+                block_idx[i % n_blocks].push(row);
+            }
+        }
+        for b in block_idx.iter_mut() {
+            rng.shuffle(b);
+        }
+        Ok(BlockPlan { blocks: block_idx.iter().map(|idx| data.subset(idx)).collect() })
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    pub fn block_len(&self) -> usize {
+        self.blocks[0].len()
+    }
+
+    pub fn block(&self, i: usize) -> &BoolDataset {
+        &self.blocks[i]
+    }
+
+    /// Assemble the three sets from an ordering of block ids.
+    pub fn sets(&self, ordering: &[usize], alloc: SetAllocation) -> Result<Sets> {
+        if ordering.len() != self.n_blocks() || alloc.total() != self.n_blocks() {
+            bail!(
+                "ordering ({}) and allocation ({}) must cover all {} blocks",
+                ordering.len(),
+                alloc.total(),
+                self.n_blocks()
+            );
+        }
+        let mut seen = vec![false; self.n_blocks()];
+        for &b in ordering {
+            if b >= self.n_blocks() || seen[b] {
+                bail!("ordering is not a permutation of block ids");
+            }
+            seen[b] = true;
+        }
+        let gather = |ids: &[usize]| {
+            let parts: Vec<&BoolDataset> = ids.iter().map(|&b| &self.blocks[b]).collect();
+            BoolDataset::concat(&parts)
+        };
+        let (off, rest) = ordering.split_at(alloc.offline);
+        let (val, onl) = rest.split_at(alloc.validation);
+        Ok(Sets { offline: gather(off), validation: gather(val), online: gather(onl) })
+    }
+}
+
+/// All `n!` orderings of `0..n` (Heap's algorithm). For the paper's 5
+/// blocks this is the full 120-ordering sweep.
+pub fn all_orderings(n: usize) -> Vec<Vec<usize>> {
+    let mut out = Vec::new();
+    let mut a: Vec<usize> = (0..n).collect();
+    fn heap(k: usize, a: &mut Vec<usize>, out: &mut Vec<Vec<usize>>) {
+        if k <= 1 {
+            out.push(a.clone());
+            return;
+        }
+        for i in 0..k {
+            heap(k - 1, a, out);
+            if k % 2 == 0 {
+                a.swap(i, k - 1);
+            } else {
+                a.swap(0, k - 1);
+            }
+        }
+    }
+    heap(n, &mut a, &mut out);
+    out
+}
+
+/// The paper's §3.6.1 mechanism: a small set of *starting orderings*
+/// "easily manipulated to produce the full number of orderings". We use
+/// cyclic rotation as the manipulation: [`rotation_representatives`]
+/// yields the `n!/n` lexicographically-minimal representatives, and
+/// [`expand_rotations`] rotates each `n` times to regenerate all `n!`.
+pub fn rotation_representatives(n: usize) -> Vec<Vec<usize>> {
+    let mut reps = Vec::new();
+    for p in all_orderings(n) {
+        let mut min_rot = p.clone();
+        for r in 1..n {
+            let rot: Vec<usize> = p[r..].iter().chain(p[..r].iter()).copied().collect();
+            if rot < min_rot {
+                min_rot = rot;
+            }
+        }
+        if min_rot == p {
+            reps.push(p);
+        }
+    }
+    reps
+}
+
+/// Expand starting orderings by all cyclic rotations.
+pub fn expand_rotations(starting: &[Vec<usize>]) -> Vec<Vec<usize>> {
+    let mut out = Vec::new();
+    for p in starting {
+        let n = p.len();
+        for r in 0..n {
+            out.push(p[r..].iter().chain(p[..r].iter()).copied().collect());
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::iris;
+
+    #[test]
+    fn iris_splits_into_5_stratified_blocks() {
+        let plan = BlockPlan::stratified(iris::booleanised(), 5, 1).unwrap();
+        assert_eq!(plan.n_blocks(), 5);
+        assert_eq!(plan.block_len(), 30);
+        for b in 0..5 {
+            assert_eq!(plan.block(b).class_counts(), vec![10, 10, 10]);
+        }
+    }
+
+    #[test]
+    fn blocks_partition_the_dataset() {
+        let data = iris::booleanised();
+        let plan = BlockPlan::stratified(data, 5, 2).unwrap();
+        let mut all_rows: Vec<Vec<bool>> = Vec::new();
+        for b in 0..5 {
+            all_rows.extend(plan.block(b).rows.iter().cloned());
+        }
+        assert_eq!(all_rows.len(), 150);
+        // Row multiset must match (iris has duplicate rows, so compare
+        // sorted encodings).
+        let key = |r: &Vec<bool>| r.iter().fold(0u32, |a, &b| a << 1 | b as u32);
+        let mut got: Vec<u32> = all_rows.iter().map(key).collect();
+        let mut want: Vec<u32> = data.rows.iter().map(key).collect();
+        got.sort();
+        want.sort();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn indivisible_counts_rejected() {
+        let data = iris::booleanised();
+        assert!(BlockPlan::stratified(data, 7, 0).is_err());
+        let mut odd = data.clone();
+        odd.rows.pop();
+        odd.labels.pop();
+        assert!(BlockPlan::stratified(&odd, 5, 0).is_err());
+    }
+
+    #[test]
+    fn paper_set_sizes() {
+        let plan = BlockPlan::stratified(iris::booleanised(), 5, 3).unwrap();
+        let sets = plan.sets(&[0, 1, 2, 3, 4], SetAllocation::paper()).unwrap();
+        assert_eq!(sets.offline.len(), 30);
+        assert_eq!(sets.validation.len(), 60);
+        assert_eq!(sets.online.len(), 60);
+        // Stratification carries through.
+        assert_eq!(sets.offline.class_counts(), vec![10, 10, 10]);
+        assert_eq!(sets.online.class_counts(), vec![20, 20, 20]);
+    }
+
+    #[test]
+    fn bad_orderings_rejected() {
+        let plan = BlockPlan::stratified(iris::booleanised(), 5, 3).unwrap();
+        let alloc = SetAllocation::paper();
+        assert!(plan.sets(&[0, 1, 2, 3], alloc).is_err(), "too short");
+        assert!(plan.sets(&[0, 1, 2, 3, 3], alloc).is_err(), "repeat");
+        assert!(plan.sets(&[0, 1, 2, 3, 9], alloc).is_err(), "out of range");
+    }
+
+    #[test]
+    fn all_orderings_is_full_permutation_set() {
+        let perms = all_orderings(5);
+        assert_eq!(perms.len(), 120, "the paper's 120 cross-correlated orderings");
+        let mut uniq = perms.clone();
+        uniq.sort();
+        uniq.dedup();
+        assert_eq!(uniq.len(), 120);
+    }
+
+    #[test]
+    fn rotation_machinery_regenerates_all() {
+        let reps = rotation_representatives(5);
+        assert_eq!(reps.len(), 24, "120 / 5 rotation classes");
+        let mut expanded = expand_rotations(&reps);
+        assert_eq!(expanded.len(), 120);
+        expanded.sort();
+        expanded.dedup();
+        assert_eq!(expanded.len(), 120, "rotations regenerate all orderings");
+    }
+
+    #[test]
+    fn different_orderings_give_different_offline_sets() {
+        let plan = BlockPlan::stratified(iris::booleanised(), 5, 3).unwrap();
+        let alloc = SetAllocation::paper();
+        let a = plan.sets(&[0, 1, 2, 3, 4], alloc).unwrap();
+        let b = plan.sets(&[4, 1, 2, 3, 0], alloc).unwrap();
+        assert_ne!(a.offline.rows, b.offline.rows);
+    }
+}

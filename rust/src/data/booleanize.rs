@@ -1,0 +1,283 @@
+//! Thermometer booleanisation.
+//!
+//! The paper evaluates on "the iris dataset (16 booleanised inputs, 3
+//! classifications, 150 unique datapoints)" — 4 real features × 4 bits.
+//! We use quantile-threshold (thermometer) encoding, the standard TM
+//! booleanisation: for each feature, `bits` thresholds at the
+//! `q/(bits+1)` quantiles of the training distribution; bit `b` is
+//! `x > threshold_b`. Thresholds are fitted once at design time (they
+//! would be baked into the FPGA input path) and stored in [`Booleanizer`].
+
+use crate::data::dataset::{BoolDataset, RawDataset};
+use anyhow::{bail, Result};
+
+/// Fitted thermometer encoder.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Booleanizer {
+    /// `thresholds[f]` = ascending thresholds for feature `f`.
+    thresholds: Vec<Vec<f32>>,
+    bits_per_feature: usize,
+}
+
+impl Booleanizer {
+    /// Fit thresholds on a dataset: for each feature, the
+    /// `q/(bits+1)`-quantiles (q = 1..=bits) of the empirical
+    /// distribution (linear interpolation between order statistics).
+    pub fn fit(data: &RawDataset, bits_per_feature: usize) -> Result<Self> {
+        if bits_per_feature == 0 {
+            bail!("bits_per_feature must be > 0");
+        }
+        let nf = data.n_features();
+        let mut thresholds = Vec::with_capacity(nf);
+        for f in 0..nf {
+            let mut col: Vec<f32> = data.rows.iter().map(|r| r[f]).collect();
+            col.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let mut th = Vec::with_capacity(bits_per_feature);
+            for q in 1..=bits_per_feature {
+                let p = q as f64 / (bits_per_feature + 1) as f64;
+                th.push(quantile_sorted(&col, p));
+            }
+            thresholds.push(th);
+        }
+        Ok(Booleanizer { thresholds, bits_per_feature })
+    }
+
+    pub fn bits_per_feature(&self) -> usize {
+        self.bits_per_feature
+    }
+
+    pub fn n_features(&self) -> usize {
+        self.thresholds.len()
+    }
+
+    /// Output width in Boolean inputs.
+    pub fn width(&self) -> usize {
+        self.n_features() * self.bits_per_feature
+    }
+
+    pub fn thresholds(&self) -> &[Vec<f32>] {
+        &self.thresholds
+    }
+
+    /// Encode one raw row.
+    pub fn encode_row(&self, row: &[f32]) -> Result<Vec<bool>> {
+        if row.len() != self.n_features() {
+            bail!("row width {} != fitted {}", row.len(), self.n_features());
+        }
+        let mut out = Vec::with_capacity(self.width());
+        for (f, &x) in row.iter().enumerate() {
+            for &t in &self.thresholds[f] {
+                out.push(x > t);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Encode a whole dataset.
+    pub fn encode(&self, data: &RawDataset) -> Result<BoolDataset> {
+        let rows: Result<Vec<Vec<bool>>> =
+            data.rows.iter().map(|r| self.encode_row(r)).collect();
+        Ok(BoolDataset { rows: rows?, labels: data.labels.clone(), n_classes: data.n_classes })
+    }
+}
+
+/// Binary-code booleanisation: each feature is min-max normalised,
+/// quantised to `2^bits - 1` levels and emitted as a plain binary code
+/// (MSB first).
+///
+/// This is the encoding used by the TM-FPGA hardware line (each iris
+/// feature as a 4-bit binary value → 16 Boolean inputs) and is what
+/// reproduces the paper's starting accuracies; thermometer encoding
+/// ([`Booleanizer`]) makes iris markedly easier (~+8% accuracy) — the
+/// ablation bench `benches/ablations.rs` quantifies the gap.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BinaryBooleanizer {
+    mins: Vec<f32>,
+    maxs: Vec<f32>,
+    bits_per_feature: usize,
+}
+
+impl BinaryBooleanizer {
+    /// Fit per-feature min/max on a dataset.
+    pub fn fit(data: &RawDataset, bits_per_feature: usize) -> Result<Self> {
+        if bits_per_feature == 0 || bits_per_feature > 16 {
+            bail!("bits_per_feature must be in 1..=16");
+        }
+        let nf = data.n_features();
+        let mut mins = vec![f32::MAX; nf];
+        let mut maxs = vec![f32::MIN; nf];
+        for row in &data.rows {
+            for (f, &x) in row.iter().enumerate() {
+                mins[f] = mins[f].min(x);
+                maxs[f] = maxs[f].max(x);
+            }
+        }
+        Ok(BinaryBooleanizer { mins, maxs, bits_per_feature })
+    }
+
+    pub fn bits_per_feature(&self) -> usize {
+        self.bits_per_feature
+    }
+
+    pub fn n_features(&self) -> usize {
+        self.mins.len()
+    }
+
+    pub fn width(&self) -> usize {
+        self.n_features() * self.bits_per_feature
+    }
+
+    /// Quantisation level of one value (clamped to the fitted range).
+    pub fn level(&self, feature: usize, x: f32) -> u32 {
+        let (lo, hi) = (self.mins[feature], self.maxs[feature]);
+        let max_level = (1u32 << self.bits_per_feature) - 1;
+        if hi <= lo {
+            return 0; // constant feature
+        }
+        let t = ((x - lo) / (hi - lo)).clamp(0.0, 1.0);
+        (t * max_level as f32).round() as u32
+    }
+
+    /// Encode one raw row (MSB-first binary code per feature).
+    pub fn encode_row(&self, row: &[f32]) -> Result<Vec<bool>> {
+        if row.len() != self.n_features() {
+            bail!("row width {} != fitted {}", row.len(), self.n_features());
+        }
+        let mut out = Vec::with_capacity(self.width());
+        for (f, &x) in row.iter().enumerate() {
+            let q = self.level(f, x);
+            for b in (0..self.bits_per_feature).rev() {
+                out.push(q >> b & 1 == 1);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Encode a whole dataset.
+    pub fn encode(&self, data: &RawDataset) -> Result<BoolDataset> {
+        let rows: Result<Vec<Vec<bool>>> =
+            data.rows.iter().map(|r| self.encode_row(r)).collect();
+        Ok(BoolDataset { rows: rows?, labels: data.labels.clone(), n_classes: data.n_classes })
+    }
+}
+
+/// Linear-interpolated quantile of an ascending-sorted slice.
+fn quantile_sorted(sorted: &[f32], p: f64) -> f32 {
+    assert!(!sorted.is_empty());
+    let h = p * (sorted.len() - 1) as f64;
+    let lo = h.floor() as usize;
+    let hi = h.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let w = (h - lo as f64) as f32;
+        sorted[lo] * (1.0 - w) + sorted[hi] * w
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ramp_dataset() -> RawDataset {
+        // Feature 0: 0..100; feature 1: constant 5.0.
+        let rows: Vec<Vec<f32>> = (0..100).map(|i| vec![i as f32, 5.0]).collect();
+        RawDataset::new(rows, vec![0; 100], 1).unwrap()
+    }
+
+    #[test]
+    fn quantiles_of_ramp() {
+        let b = Booleanizer::fit(&ramp_dataset(), 4).unwrap();
+        let th = &b.thresholds()[0];
+        assert_eq!(th.len(), 4);
+        // Quantiles at 0.2/0.4/0.6/0.8 of 0..99.
+        for (i, expect) in [19.8f32, 39.6, 59.4, 79.2].iter().enumerate() {
+            assert!((th[i] - expect).abs() < 0.5, "th[{i}]={} want≈{expect}", th[i]);
+        }
+    }
+
+    #[test]
+    fn thermometer_monotone() {
+        let b = Booleanizer::fit(&ramp_dataset(), 4).unwrap();
+        // Thermometer property: bits are a prefix of 1s (descending with
+        // threshold index).
+        for x in [0.0f32, 25.0, 50.0, 75.0, 99.0] {
+            let bits = b.encode_row(&[x, 5.0]).unwrap();
+            let f0 = &bits[0..4];
+            let mut seen_false = false;
+            for &bit in f0 {
+                if seen_false {
+                    assert!(!bit, "thermometer code must be monotone for x={x}");
+                }
+                seen_false |= !bit;
+            }
+        }
+        // Extremes.
+        assert_eq!(b.encode_row(&[-1.0, 5.0]).unwrap()[0..4], [false; 4]);
+        assert_eq!(b.encode_row(&[1000.0, 5.0]).unwrap()[0..4], [true; 4]);
+    }
+
+    #[test]
+    fn constant_feature_encodes_all_false() {
+        let b = Booleanizer::fit(&ramp_dataset(), 4).unwrap();
+        // Feature 1 constant 5.0: thresholds all 5.0; 5.0 > 5.0 is false.
+        let bits = b.encode_row(&[50.0, 5.0]).unwrap();
+        assert_eq!(&bits[4..8], &[false; 4]);
+    }
+
+    #[test]
+    fn width_and_errors() {
+        let b = Booleanizer::fit(&ramp_dataset(), 4).unwrap();
+        assert_eq!(b.width(), 8);
+        assert!(b.encode_row(&[1.0]).is_err());
+        assert!(Booleanizer::fit(&ramp_dataset(), 0).is_err());
+    }
+
+    #[test]
+    fn binary_levels_span_range() {
+        let d = ramp_dataset();
+        let b = BinaryBooleanizer::fit(&d, 4).unwrap();
+        assert_eq!(b.level(0, 0.0), 0);
+        assert_eq!(b.level(0, 99.0), 15);
+        assert_eq!(b.level(0, 49.5), 8, "midpoint rounds to 8");
+        // Clamping outside the fitted range.
+        assert_eq!(b.level(0, -10.0), 0);
+        assert_eq!(b.level(0, 1000.0), 15);
+        // Constant feature collapses to level 0.
+        assert_eq!(b.level(1, 5.0), 0);
+    }
+
+    #[test]
+    fn binary_code_msb_first() {
+        let d = ramp_dataset();
+        let b = BinaryBooleanizer::fit(&d, 4).unwrap();
+        // x = 99 -> level 15 -> 1111; x = 0 -> 0000.
+        assert_eq!(b.encode_row(&[99.0, 5.0]).unwrap()[0..4], [true; 4]);
+        assert_eq!(b.encode_row(&[0.0, 5.0]).unwrap()[0..4], [false; 4]);
+        // level 8 -> 1000 (MSB first).
+        let bits = b.encode_row(&[49.5, 5.0]).unwrap();
+        assert_eq!(&bits[0..4], &[true, false, false, false]);
+    }
+
+    #[test]
+    fn binary_encode_dataset() {
+        let d = ramp_dataset();
+        let b = BinaryBooleanizer::fit(&d, 4).unwrap();
+        let e = b.encode(&d).unwrap();
+        assert_eq!(e.n_features(), 8);
+        assert_eq!(e.len(), 100);
+        assert!(BinaryBooleanizer::fit(&d, 0).is_err());
+        assert!(BinaryBooleanizer::fit(&d, 17).is_err());
+        assert!(b.encode_row(&[1.0]).is_err());
+    }
+
+    #[test]
+    fn encode_dataset_preserves_labels() {
+        let d = ramp_dataset();
+        let b = Booleanizer::fit(&d, 2).unwrap();
+        let e = b.encode(&d).unwrap();
+        assert_eq!(e.len(), 100);
+        assert_eq!(e.n_features(), 4);
+        assert_eq!(e.labels, d.labels);
+    }
+}

@@ -1,0 +1,224 @@
+//! Dataset containers: raw (real-valued) and booleanised views.
+//!
+//! The TM consumes Boolean features (§2); [`BoolDataset`] is what every
+//! other subsystem (blocks, filter, ROM model, TM) operates on.
+
+use crate::tm::clause::Input;
+use crate::tm::params::TmShape;
+use anyhow::{bail, Result};
+
+/// A raw real-valued dataset.
+#[derive(Debug, Clone)]
+pub struct RawDataset {
+    /// `rows[i]` = feature vector of datapoint `i`.
+    pub rows: Vec<Vec<f32>>,
+    /// `labels[i]` in `0..n_classes`.
+    pub labels: Vec<usize>,
+    pub n_classes: usize,
+}
+
+impl RawDataset {
+    pub fn new(rows: Vec<Vec<f32>>, labels: Vec<usize>, n_classes: usize) -> Result<Self> {
+        if rows.len() != labels.len() {
+            bail!("rows/labels length mismatch: {} vs {}", rows.len(), labels.len());
+        }
+        if rows.is_empty() {
+            bail!("empty dataset");
+        }
+        let width = rows[0].len();
+        if rows.iter().any(|r| r.len() != width) {
+            bail!("ragged rows");
+        }
+        if let Some(&bad) = labels.iter().find(|&&l| l >= n_classes) {
+            bail!("label {bad} out of range (n_classes = {n_classes})");
+        }
+        Ok(RawDataset { rows, labels, n_classes })
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn n_features(&self) -> usize {
+        self.rows[0].len()
+    }
+
+    /// Parse a simple CSV with a header row; last column is the integer
+    /// class label, all other columns are f32 features.
+    pub fn from_csv(text: &str) -> Result<Self> {
+        let mut rows = Vec::new();
+        let mut labels = Vec::new();
+        let mut n_classes = 0;
+        for (i, line) in text.lines().enumerate() {
+            if i == 0 || line.trim().is_empty() {
+                continue; // header / blanks
+            }
+            let cols: Vec<&str> = line.split(',').collect();
+            if cols.len() < 2 {
+                bail!("csv line {i}: need at least one feature + label");
+            }
+            let (feat_cols, label_col) = cols.split_at(cols.len() - 1);
+            let feats: Result<Vec<f32>, _> =
+                feat_cols.iter().map(|c| c.trim().parse::<f32>()).collect();
+            let feats = feats.map_err(|e| anyhow::anyhow!("csv line {i}: {e}"))?;
+            let label: usize = label_col[0]
+                .trim()
+                .parse()
+                .map_err(|e| anyhow::anyhow!("csv line {i} label: {e}"))?;
+            n_classes = n_classes.max(label + 1);
+            rows.push(feats);
+            labels.push(label);
+        }
+        RawDataset::new(rows, labels, n_classes)
+    }
+}
+
+/// A booleanised dataset: one `Vec<bool>` feature row per datapoint.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BoolDataset {
+    pub rows: Vec<Vec<bool>>,
+    pub labels: Vec<usize>,
+    pub n_classes: usize,
+}
+
+impl BoolDataset {
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn n_features(&self) -> usize {
+        self.rows.first().map_or(0, |r| r.len())
+    }
+
+    /// Pack every row for a machine of `shape` (shape.features must match).
+    pub fn pack(&self, shape: &TmShape) -> Vec<(Input, usize)> {
+        assert_eq!(shape.features, self.n_features(), "shape/feature width mismatch");
+        self.rows
+            .iter()
+            .zip(self.labels.iter())
+            .map(|(r, &l)| (Input::pack(shape, r), l))
+            .collect()
+    }
+
+    /// Per-class datapoint counts.
+    pub fn class_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.n_classes];
+        for &l in &self.labels {
+            counts[l] += 1;
+        }
+        counts
+    }
+
+    /// Select a subset of rows by index.
+    pub fn subset(&self, idx: &[usize]) -> BoolDataset {
+        BoolDataset {
+            rows: idx.iter().map(|&i| self.rows[i].clone()).collect(),
+            labels: idx.iter().map(|&i| self.labels[i]).collect(),
+            n_classes: self.n_classes,
+        }
+    }
+
+    /// Concatenate datasets (same width / class count).
+    pub fn concat(parts: &[&BoolDataset]) -> BoolDataset {
+        assert!(!parts.is_empty());
+        let mut rows = Vec::new();
+        let mut labels = Vec::new();
+        for p in parts {
+            assert_eq!(p.n_classes, parts[0].n_classes);
+            rows.extend(p.rows.iter().cloned());
+            labels.extend(p.labels.iter().cloned());
+        }
+        BoolDataset { rows, labels, n_classes: parts[0].n_classes }
+    }
+
+    /// Truncate to the first `n` rows (paper §5.1 uses the first 20 of the
+    /// 30-row offline block).
+    pub fn truncate(&self, n: usize) -> BoolDataset {
+        let n = n.min(self.len());
+        BoolDataset {
+            rows: self.rows[..n].to_vec(),
+            labels: self.labels[..n].to_vec(),
+            n_classes: self.n_classes,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_roundtrip() {
+        let csv = "a,b,class\n1.0,2.0,0\n3.5,-1.0,1\n0.0,0.0,2\n";
+        let d = RawDataset::from_csv(csv).unwrap();
+        assert_eq!(d.len(), 3);
+        assert_eq!(d.n_features(), 2);
+        assert_eq!(d.n_classes, 3);
+        assert_eq!(d.rows[1], vec![3.5, -1.0]);
+        assert_eq!(d.labels, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn csv_errors() {
+        assert!(RawDataset::from_csv("h\n").is_err(), "empty");
+        assert!(RawDataset::from_csv("a,c\nx,0\n").is_err(), "non-numeric");
+        assert!(RawDataset::from_csv("a,c\n1.0\n").is_err(), "too few cols");
+    }
+
+    #[test]
+    fn ragged_and_bad_labels_rejected() {
+        assert!(RawDataset::new(vec![vec![1.0], vec![1.0, 2.0]], vec![0, 0], 1).is_err());
+        assert!(RawDataset::new(vec![vec![1.0]], vec![5], 3).is_err());
+    }
+
+    fn tiny_bool() -> BoolDataset {
+        BoolDataset {
+            rows: vec![
+                vec![true, false, true],
+                vec![false, false, true],
+                vec![true, true, true],
+                vec![false, true, false],
+            ],
+            labels: vec![0, 1, 0, 2],
+            n_classes: 3,
+        }
+    }
+
+    #[test]
+    fn class_counts() {
+        assert_eq!(tiny_bool().class_counts(), vec![2, 1, 1]);
+    }
+
+    #[test]
+    fn subset_concat_truncate() {
+        let d = tiny_bool();
+        let s = d.subset(&[3, 0]);
+        assert_eq!(s.labels, vec![2, 0]);
+        let c = BoolDataset::concat(&[&s, &d]);
+        assert_eq!(c.len(), 6);
+        assert_eq!(c.labels[0], 2);
+        let t = d.truncate(2);
+        assert_eq!(t.len(), 2);
+        assert_eq!(d.truncate(99).len(), 4, "truncate clamps");
+    }
+
+    #[test]
+    fn pack_width_matches() {
+        let d = tiny_bool();
+        let shape = TmShape { classes: 3, max_clauses: 4, features: 3, states: 8 };
+        let packed = d.pack(&shape);
+        assert_eq!(packed.len(), 4);
+        assert_eq!(packed[0].1, 0);
+        assert!(packed[0].0.literal(0));
+        assert!(!packed[0].0.literal(1));
+        assert!(packed[0].0.literal(3 + 1), "complement of false feature");
+    }
+}

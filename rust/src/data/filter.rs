@@ -1,0 +1,103 @@
+//! Class filter IP (paper §3.4.1 / §5.2).
+//!
+//! "A filtering subsystem was created, controlled by an external enable
+//! signal, to remove a certain class if desired." Used to withhold one
+//! classification during offline training and early online operation, then
+//! lift the filter mid-run to study unseen-class introduction (Figs 5–7).
+
+use crate::data::dataset::BoolDataset;
+
+/// The class-filter IP: when enabled, datapoints of `class` are dropped.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ClassFilter {
+    pub enabled: bool,
+    pub class: usize,
+}
+
+impl ClassFilter {
+    pub fn disabled() -> Self {
+        ClassFilter { enabled: false, class: 0 }
+    }
+
+    pub fn removing(class: usize) -> Self {
+        ClassFilter { enabled: true, class }
+    }
+
+    /// The external enable signal.
+    pub fn set_enabled(&mut self, on: bool) {
+        self.enabled = on;
+    }
+
+    /// Does a datapoint with this label pass the filter?
+    #[inline]
+    pub fn passes(&self, label: usize) -> bool {
+        !(self.enabled && label == self.class)
+    }
+
+    /// Filter a whole set (the offline-input path applies this when
+    /// streaming rows out of ROM).
+    pub fn apply(&self, data: &BoolDataset) -> BoolDataset {
+        if !self.enabled {
+            return data.clone();
+        }
+        let idx: Vec<usize> = data
+            .labels
+            .iter()
+            .enumerate()
+            .filter(|(_, &l)| self.passes(l))
+            .map(|(i, _)| i)
+            .collect();
+        data.subset(&idx)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::iris;
+
+    #[test]
+    fn disabled_filter_passes_everything() {
+        let f = ClassFilter::disabled();
+        let d = iris::booleanised();
+        let out = f.apply(d);
+        assert_eq!(out.len(), 150);
+        assert!((0..3).all(|c| f.passes(c)));
+    }
+
+    #[test]
+    fn removes_exactly_one_class() {
+        let f = ClassFilter::removing(0);
+        let d = iris::booleanised();
+        let out = f.apply(d);
+        assert_eq!(out.len(), 100, "class 0's 50 rows removed");
+        assert!(out.labels.iter().all(|&l| l != 0));
+        assert_eq!(out.class_counts(), vec![0, 50, 50]);
+    }
+
+    #[test]
+    fn enable_signal_toggles_at_runtime() {
+        let mut f = ClassFilter::removing(2);
+        assert!(!f.passes(2));
+        f.set_enabled(false);
+        assert!(f.passes(2), "lifting the filter re-admits the class");
+        f.set_enabled(true);
+        assert!(!f.passes(2));
+    }
+
+    #[test]
+    fn paper_set_sizes_after_filtering() {
+        // §5.2: "the validation and online training sets ... were each
+        // reduced to approximately 40 in size when one of three
+        // [classes] was filtered out"; offline 30 -> 20.
+        let plan = crate::data::blocks::BlockPlan::stratified(iris::booleanised(), 5, 1)
+            .unwrap();
+        let sets = plan
+            .sets(&[0, 1, 2, 3, 4], crate::data::blocks::SetAllocation::paper())
+            .unwrap();
+        let f = ClassFilter::removing(0);
+        assert_eq!(f.apply(&sets.offline).len(), 20);
+        assert_eq!(f.apply(&sets.validation).len(), 40);
+        assert_eq!(f.apply(&sets.online).len(), 40);
+    }
+}

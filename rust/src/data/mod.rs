@@ -1,0 +1,17 @@
+//! Data subsystems: datasets, booleanisation, the cross-validation block
+//! memory manager, the class-filter IP and the online input path
+//! (paper §3.4–§3.6).
+
+pub mod blocks;
+pub mod booleanize;
+pub mod dataset;
+pub mod filter;
+pub mod iris;
+pub mod online;
+pub mod synthetic;
+
+pub use blocks::{all_orderings, BlockPlan, SetAllocation, Sets};
+pub use booleanize::Booleanizer;
+pub use dataset::{BoolDataset, RawDataset};
+pub use filter::ClassFilter;
+pub use online::{CyclicBuffer, OnlineDataManager, OnlineSource, RomSource};

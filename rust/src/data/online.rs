@@ -1,0 +1,282 @@
+//! Online data input subsystem (paper §3.5) — behavioural layer.
+//!
+//! The online data source is application dependent; the paper abstracts it
+//! into: an *input parser* producing rows from the concrete source (here
+//! on-chip ROM, as in the paper's experiments), a *cyclic buffer* that
+//! holds rows while the TM is busy with accuracy analysis (so "datapoints
+//! [are not] ignored by the system"), and the *online data manager* that
+//! serves rows to TM management on request.
+//!
+//! The cycle-level twins of these live in `fpga::online`; this module
+//! carries the source/buffer semantics shared by both paths.
+
+use crate::data::dataset::BoolDataset;
+use crate::data::filter::ClassFilter;
+use anyhow::{bail, Result};
+
+/// Anything that can produce online datapoints (the paper's replaceable
+/// input-parser IP: ROM today, UART/Ethernet via the MCU tomorrow).
+pub trait OnlineSource {
+    /// Produce the next row, or `None` if the source is (currently) dry.
+    fn next_row(&mut self) -> Option<(Vec<bool>, usize)>;
+    /// Rows produced so far.
+    fn produced(&self) -> usize;
+}
+
+/// ROM-backed source: cycles through a stored set row by row, applying the
+/// class-filter IP on the way out (§3.5: "This also included the filter IP
+/// discussed for the Offline Data Input subsystem").
+#[derive(Debug, Clone)]
+pub struct RomSource {
+    data: BoolDataset,
+    pos: usize,
+    produced: usize,
+    pub filter: ClassFilter,
+}
+
+impl RomSource {
+    pub fn new(data: BoolDataset, filter: ClassFilter) -> Result<Self> {
+        if data.is_empty() {
+            bail!("RomSource: empty dataset");
+        }
+        Ok(RomSource { data, pos: 0, produced: 0, filter })
+    }
+
+    /// Length of one full pass over the stored set (unfiltered).
+    pub fn rom_len(&self) -> usize {
+        self.data.len()
+    }
+}
+
+impl OnlineSource for RomSource {
+    fn next_row(&mut self) -> Option<(Vec<bool>, usize)> {
+        // Skip filtered rows; guaranteed to terminate unless the filter
+        // rejects everything — then report dry after one full scan.
+        for _ in 0..self.data.len() {
+            let i = self.pos;
+            self.pos = (self.pos + 1) % self.data.len();
+            if self.filter.passes(self.data.labels[i]) {
+                self.produced += 1;
+                return Some((self.data.rows[i].clone(), self.data.labels[i]));
+            }
+        }
+        None
+    }
+
+    fn produced(&self) -> usize {
+        self.produced
+    }
+}
+
+/// Fixed-capacity cyclic (ring) buffer (§3.5.2). Overflow drops the
+/// **newest** arrival (the RTL cannot stall an external sensor) and counts
+/// it, so experiments can report data loss.
+#[derive(Debug, Clone)]
+pub struct CyclicBuffer<T> {
+    slots: Vec<Option<T>>,
+    head: usize, // next pop
+    len: usize,
+    dropped: usize,
+}
+
+impl<T> CyclicBuffer<T> {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0, "buffer needs capacity");
+        CyclicBuffer {
+            slots: (0..capacity).map(|_| None).collect(),
+            head: 0,
+            len: 0,
+            dropped: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.len == self.capacity()
+    }
+
+    /// Datapoints lost to overflow so far.
+    pub fn dropped(&self) -> usize {
+        self.dropped
+    }
+
+    /// Push a row; returns `false` (and counts a drop) when full.
+    pub fn push(&mut self, item: T) -> bool {
+        if self.is_full() {
+            self.dropped += 1;
+            return false;
+        }
+        let tail = (self.head + self.len) % self.capacity();
+        self.slots[tail] = Some(item);
+        self.len += 1;
+        true
+    }
+
+    /// Pop the oldest row.
+    pub fn pop(&mut self) -> Option<T> {
+        if self.is_empty() {
+            return None;
+        }
+        let item = self.slots[self.head].take();
+        self.head = (self.head + 1) % self.capacity();
+        self.len -= 1;
+        item
+    }
+}
+
+/// The online data manager (§3.5.1): pulls from the source into the
+/// buffer, serves TM-management requests from the buffer.
+pub struct OnlineDataManager<S: OnlineSource> {
+    source: S,
+    pub buffer: CyclicBuffer<(Vec<bool>, usize)>,
+}
+
+impl<S: OnlineSource> OnlineDataManager<S> {
+    pub fn new(source: S, buffer_capacity: usize) -> Self {
+        OnlineDataManager { source, buffer: CyclicBuffer::new(buffer_capacity) }
+    }
+
+    /// Model the source producing `n` rows while the TM is busy (e.g.
+    /// during accuracy analysis). Rows land in the buffer; overflow is
+    /// counted there.
+    pub fn produce(&mut self, n: usize) {
+        for _ in 0..n {
+            match self.source.next_row() {
+                Some(row) => {
+                    self.buffer.push(row);
+                }
+                None => break,
+            }
+        }
+    }
+
+    /// TM management requests one row: serve buffered data first, else
+    /// pull from the source directly.
+    pub fn request_row(&mut self) -> Option<(Vec<bool>, usize)> {
+        self.buffer.pop().or_else(|| self.source.next_row())
+    }
+
+    pub fn source(&self) -> &S {
+        &self.source
+    }
+
+    pub fn source_mut(&mut self) -> &mut S {
+        &mut self.source
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::iris;
+
+    fn tiny() -> BoolDataset {
+        BoolDataset {
+            rows: vec![vec![true], vec![false], vec![true]],
+            labels: vec![0, 1, 2],
+            n_classes: 3,
+        }
+    }
+
+    #[test]
+    fn rom_source_cycles() {
+        let mut s = RomSource::new(tiny(), ClassFilter::disabled()).unwrap();
+        let labels: Vec<usize> = (0..7).map(|_| s.next_row().unwrap().1).collect();
+        assert_eq!(labels, vec![0, 1, 2, 0, 1, 2, 0]);
+        assert_eq!(s.produced(), 7);
+    }
+
+    #[test]
+    fn rom_source_filters() {
+        let mut s = RomSource::new(tiny(), ClassFilter::removing(1)).unwrap();
+        let labels: Vec<usize> = (0..4).map(|_| s.next_row().unwrap().1).collect();
+        assert_eq!(labels, vec![0, 2, 0, 2]);
+    }
+
+    #[test]
+    fn rom_source_filter_liftable_midstream() {
+        let mut s = RomSource::new(tiny(), ClassFilter::removing(1)).unwrap();
+        assert_eq!(s.next_row().unwrap().1, 0);
+        s.filter.set_enabled(false); // the new class appears (§5.2)
+        assert_eq!(s.next_row().unwrap().1, 1);
+    }
+
+    #[test]
+    fn rom_source_all_filtered_is_dry() {
+        let one = BoolDataset { rows: vec![vec![true]], labels: vec![0], n_classes: 1 };
+        let mut s = RomSource::new(one, ClassFilter::removing(0)).unwrap();
+        assert!(s.next_row().is_none());
+        assert!(RomSource::new(
+            BoolDataset { rows: vec![], labels: vec![], n_classes: 1 },
+            ClassFilter::disabled()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn cyclic_buffer_fifo() {
+        let mut b = CyclicBuffer::new(3);
+        assert!(b.is_empty());
+        assert!(b.push(1) && b.push(2) && b.push(3));
+        assert!(b.is_full());
+        assert!(!b.push(4), "overflow rejected");
+        assert_eq!(b.dropped(), 1);
+        assert_eq!(b.pop(), Some(1));
+        assert!(b.push(5));
+        assert_eq!(b.pop(), Some(2));
+        assert_eq!(b.pop(), Some(3));
+        assert_eq!(b.pop(), Some(5));
+        assert_eq!(b.pop(), None);
+    }
+
+    #[test]
+    fn cyclic_buffer_wraps_many_times() {
+        let mut b = CyclicBuffer::new(4);
+        for i in 0..100 {
+            assert!(b.push(i));
+            assert_eq!(b.pop(), Some(i));
+        }
+        assert_eq!(b.dropped(), 0);
+    }
+
+    #[test]
+    fn manager_buffers_during_analysis() {
+        let d = iris::booleanised().clone();
+        let src = RomSource::new(d, ClassFilter::disabled()).unwrap();
+        let mut mgr = OnlineDataManager::new(src, 8);
+        // TM busy: source produces 5 rows into the buffer.
+        mgr.produce(5);
+        assert_eq!(mgr.buffer.len(), 5);
+        // TM management drains buffered rows first (arrival order kept).
+        let first = mgr.request_row().unwrap();
+        assert_eq!(first.1, iris::booleanised().labels[0]);
+        for _ in 0..4 {
+            mgr.request_row().unwrap();
+        }
+        assert!(mgr.buffer.is_empty());
+        // Next request pulls straight from the source.
+        assert!(mgr.request_row().is_some());
+        assert_eq!(mgr.source().produced(), 6 + 0 + 0 + 5 - 5 + 0); // 5 produced + 1 direct
+    }
+
+    #[test]
+    fn manager_overflow_counts_lost_datapoints() {
+        let d = iris::booleanised().clone();
+        let src = RomSource::new(d, ClassFilter::disabled()).unwrap();
+        let mut mgr = OnlineDataManager::new(src, 4);
+        mgr.produce(10);
+        assert_eq!(mgr.buffer.len(), 4);
+        assert_eq!(mgr.buffer.dropped(), 6);
+    }
+}

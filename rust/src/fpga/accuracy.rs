@@ -1,0 +1,216 @@
+//! Accuracy-analysis block (paper §3.3).
+//!
+//! "The accuracy analysis block records the number of errors and total
+//! epochs per accuracy analysis cycle. An additional block records the
+//! history of these values during simulation in RAM, whereas these values
+//! can be immediately offloaded to the microcontroller when implemented on
+//! an FPGA to reduce RAM usage."
+//!
+//! Analysis streams a set through the (pipelined) datapath in inference
+//! mode: cycle cost = pipeline fill + one cycle per stored row (filtered
+//! rows still occupy their ROM read slot).
+
+use crate::fpga::clock::{Clock, Module};
+use crate::fpga::fsm_low::DatapointEngine;
+use crate::fpga::memmgr::MemoryManager;
+use crate::fpga::rom::{Port, RomBank, SetId};
+use crate::tm::machine::MultiTm;
+use crate::tm::params::TmParams;
+use anyhow::Result;
+
+/// One analysis record (what gets offloaded over AXI).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AccuracyRecord {
+    pub set: SetId,
+    pub errors: usize,
+    pub total: usize,
+    /// Online iteration index at analysis time (0 = after offline
+    /// training only).
+    pub iteration: usize,
+    pub cycles: u64,
+}
+
+impl AccuracyRecord {
+    pub fn accuracy(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            1.0 - self.errors as f64 / self.total as f64
+        }
+    }
+}
+
+/// Where analysis records go (§3.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HistoryMode {
+    /// Keep full history in on-chip RAM (simulation mode).
+    OnChipRam,
+    /// Offload each record to the MCU immediately (hardware mode — saves
+    /// RAM, costs one handshake per record).
+    OffloadToMcu,
+}
+
+/// The accuracy-analysis block.
+#[derive(Debug, Clone)]
+pub struct AccuracyAnalyzer {
+    pub mode: HistoryMode,
+    /// History RAM (only written in `OnChipRam` mode).
+    pub history: Vec<AccuracyRecord>,
+}
+
+impl AccuracyAnalyzer {
+    pub fn new(mode: HistoryMode) -> Self {
+        AccuracyAnalyzer { mode, history: Vec::new() }
+    }
+
+    /// Analyse one set: stream it through the inference datapath
+    /// (pipelined, port A), count errors. Advances the clock; returns the
+    /// record (and stores it when in RAM mode).
+    pub fn analyze(
+        &mut self,
+        tm: &mut MultiTm,
+        params: &TmParams,
+        mm: &MemoryManager,
+        bank: &mut RomBank,
+        set: SetId,
+        iteration: usize,
+        clock: &mut Clock,
+    ) -> Result<AccuracyRecord> {
+        let start = clock.now();
+        let (rows, mem_cycles) = mm.stream(bank, set, Port::A, None)?;
+        // Pipelined: ROM reads overlap compute; the stream occupies
+        // max(stored rows, fill + passing rows) cycles. Filtered rows
+        // consume their read slot but no compute slot.
+        let compute = DatapointEngine::pipelined_cycles(rows.len());
+        let cycles = mem_cycles.max(compute);
+        clock.set_enabled(Module::TmCore, true);
+        clock.with_enabled(Module::AccuracyAnalysis, |c| {
+            c.with_enabled(Module::OfflineMemory, |c| c.advance(cycles))
+        });
+        clock.set_enabled(Module::TmCore, false);
+        clock.toggle(Module::AccuracyAnalysis, rows.len() as u64);
+
+        let errors = rows
+            .iter()
+            .filter(|(x, y)| tm.predict(x, params) != *y)
+            .count();
+        let rec = AccuracyRecord {
+            set,
+            errors,
+            total: rows.len(),
+            iteration,
+            cycles: clock.now() - start,
+        };
+        if self.mode == HistoryMode::OnChipRam {
+            self.history.push(rec);
+        }
+        Ok(rec)
+    }
+
+    /// History RAM words in use (each record packs into 4 words).
+    pub fn ram_words(&self) -> usize {
+        self.history.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::blocks::BlockPlan;
+    use crate::data::dataset::BoolDataset;
+    use crate::data::filter::ClassFilter;
+    use crate::data::iris;
+    use crate::tm::params::TmShape;
+
+    fn bank() -> RomBank {
+        let plan = BlockPlan::stratified(iris::booleanised(), 5, 1).unwrap();
+        let blocks: Vec<BoolDataset> = (0..5).map(|i| plan.block(i).clone()).collect();
+        RomBank::new(&blocks, &[0, 1, 2, 3, 4], (1, 2, 2)).unwrap()
+    }
+
+    #[test]
+    fn untrained_machine_scores_badly_but_counts_everything() {
+        let shape = TmShape::iris();
+        let mut tm = MultiTm::new(&shape).unwrap();
+        let p = TmParams::paper_offline(&shape);
+        let mm = MemoryManager::new(&shape);
+        let mut b = bank();
+        let mut clock = Clock::new();
+        let mut an = AccuracyAnalyzer::new(HistoryMode::OnChipRam);
+        let rec = an
+            .analyze(&mut tm, &p, &mm, &mut b, SetId::Validation, 0, &mut clock)
+            .unwrap();
+        assert_eq!(rec.total, 60);
+        // Untrained machine predicts class 0 for everything -> 40 errors.
+        assert_eq!(rec.errors, 40);
+        assert!((rec.accuracy() - 1.0 / 3.0).abs() < 1e-9);
+        assert_eq!(an.history.len(), 1);
+        assert_eq!(an.ram_words(), 4);
+    }
+
+    #[test]
+    fn cycle_cost_is_pipelined() {
+        let shape = TmShape::iris();
+        let mut tm = MultiTm::new(&shape).unwrap();
+        let p = TmParams::paper_offline(&shape);
+        let mm = MemoryManager::new(&shape);
+        let mut b = bank();
+        let mut clock = Clock::new();
+        let mut an = AccuracyAnalyzer::new(HistoryMode::OnChipRam);
+        let rec = an
+            .analyze(&mut tm, &p, &mm, &mut b, SetId::OfflineTrain, 0, &mut clock)
+            .unwrap();
+        // 30 rows: fill(3) + 30 = 33 cycles.
+        assert_eq!(rec.cycles, 33);
+        assert_eq!(clock.now(), 33);
+        assert_eq!(clock.activity(Module::AccuracyAnalysis).active_cycles, 33);
+        assert_eq!(clock.activity(Module::TmCore).active_cycles, 33);
+    }
+
+    #[test]
+    fn filtered_rows_occupy_memory_slots_only() {
+        let shape = TmShape::iris();
+        let mut tm = MultiTm::new(&shape).unwrap();
+        let p = TmParams::paper_offline(&shape);
+        let mut mm = MemoryManager::new(&shape);
+        mm.filter = ClassFilter::removing(0);
+        let mut b = bank();
+        let mut clock = Clock::new();
+        let mut an = AccuracyAnalyzer::new(HistoryMode::OffloadToMcu);
+        let rec = an
+            .analyze(&mut tm, &p, &mm, &mut b, SetId::OfflineTrain, 2, &mut clock)
+            .unwrap();
+        assert_eq!(rec.total, 20, "10 rows filtered");
+        // mem scan = 30 reads; compute = fill + 20 = 23 -> max = 30.
+        assert_eq!(rec.cycles, 30);
+        assert_eq!(rec.iteration, 2);
+        assert!(an.history.is_empty(), "offload mode keeps no RAM history");
+    }
+
+    #[test]
+    fn trained_machine_improves() {
+        use crate::tm::rng::{StepRands, Xoshiro256};
+        let shape = TmShape::iris();
+        let mut tm = MultiTm::new(&shape).unwrap();
+        let p = TmParams::paper_offline(&shape);
+        let mm = MemoryManager::new(&shape);
+        let mut b = bank();
+        let mut clock = Clock::new();
+        let mut an = AccuracyAnalyzer::new(HistoryMode::OnChipRam);
+        let before = an
+            .analyze(&mut tm, &p, &mm, &mut b, SetId::OfflineTrain, 0, &mut clock)
+            .unwrap();
+        let (rows, _) = mm.stream(&mut b, SetId::OfflineTrain, Port::A, None).unwrap();
+        let mut rng = Xoshiro256::new(3);
+        for _ in 0..10 {
+            for (x, y) in &rows {
+                let r = StepRands::draw(&mut rng, &shape);
+                crate::tm::feedback::train_step(&mut tm, x, *y, &p, &r);
+            }
+        }
+        let after = an
+            .analyze(&mut tm, &p, &mm, &mut b, SetId::OfflineTrain, 0, &mut clock)
+            .unwrap();
+        assert!(after.errors < before.errors, "{} !< {}", after.errors, before.errors);
+    }
+}

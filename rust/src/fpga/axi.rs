@@ -1,0 +1,199 @@
+//! System/microcontroller interface (paper §3.7): a bank of 32-bit I/O
+//! registers exposed over AXI, plus the handshaking protocol that decouples
+//! fabric speed from microcontroller speed.
+//!
+//! "The IP sends a signal to the microcontroller informing it that certain
+//! registers are ready to be read from, then pauses the system whilst
+//! waiting for the microcontroller to respond." — the handshake model
+//! counts those stall cycles; §6 notes they are the system's only
+//! slowdown.
+
+use anyhow::{bail, Result};
+
+/// Register map (word indices). Mirrors the paper's "more specific IP to
+/// separate and combine signals into these registers".
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(usize)]
+pub enum Reg {
+    /// Control: bit0 start, bit1 online-learning enable, bit2 filter enable.
+    Ctrl = 0,
+    /// Specificity `s` (IEEE-754 f32 bits) — runtime port (§3.1).
+    SParam = 1,
+    /// Threshold `T` (integer).
+    TParam = 2,
+    /// Clause-number port (§3.1.1).
+    ClauseNum = 3,
+    /// Active-class count (over-provisioned classes).
+    ClassNum = 4,
+    /// Class filtered by the class-filter IP (§3.4.1).
+    FilterClass = 5,
+    /// Status: bit0 busy, bit1 report-valid.
+    Status = 6,
+    /// Accuracy report: error count.
+    AccErrors = 7,
+    /// Accuracy report: datapoints analysed.
+    AccTotal = 8,
+    /// Accuracy report: which set (0 offline / 1 validation / 2 online).
+    AccSet = 9,
+    /// Accuracy report: online iteration index.
+    AccIteration = 10,
+    /// Fault controller: TA address (flat index).
+    FaultAddr = 11,
+    /// Fault controller: mapping (0 none / 1 stuck-at-0 / 2 stuck-at-1);
+    /// writing strobes the controller.
+    FaultData = 12,
+}
+
+pub const NUM_REGS: usize = 16;
+
+/// Control-register bits.
+pub mod ctrl {
+    pub const START: u32 = 1 << 0;
+    pub const ONLINE_ENABLE: u32 = 1 << 1;
+    pub const FILTER_ENABLE: u32 = 1 << 2;
+}
+
+/// Status-register bits.
+pub mod status {
+    pub const BUSY: u32 = 1 << 0;
+    pub const REPORT_VALID: u32 = 1 << 1;
+}
+
+/// The AXI-mapped register file.
+#[derive(Debug, Clone)]
+pub struct RegisterFile {
+    regs: [u32; NUM_REGS],
+    pub reads: u64,
+    pub writes: u64,
+}
+
+impl Default for RegisterFile {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RegisterFile {
+    pub fn new() -> Self {
+        RegisterFile { regs: [0; NUM_REGS], reads: 0, writes: 0 }
+    }
+
+    pub fn read(&mut self, r: Reg) -> u32 {
+        self.reads += 1;
+        self.regs[r as usize]
+    }
+
+    /// Peek without counting a bus transaction (fabric-side wiring).
+    pub fn peek(&self, r: Reg) -> u32 {
+        self.regs[r as usize]
+    }
+
+    pub fn write(&mut self, r: Reg, v: u32) {
+        self.writes += 1;
+        self.regs[r as usize] = v;
+    }
+
+    /// Fabric-side update (no bus transaction).
+    pub fn set(&mut self, r: Reg, v: u32) {
+        self.regs[r as usize] = v;
+    }
+
+    pub fn set_bit(&mut self, r: Reg, bit: u32, on: bool) {
+        let v = self.peek(r);
+        self.set(r, if on { v | bit } else { v & !bit });
+    }
+
+    pub fn s_param(&self) -> f32 {
+        f32::from_bits(self.peek(Reg::SParam))
+    }
+
+    pub fn write_s_param(&mut self, s: f32) {
+        self.write(Reg::SParam, s.to_bits());
+    }
+}
+
+/// Handshake statistics: every report transaction stalls the fabric for
+/// the MCU's response latency.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct HandshakeStats {
+    pub transactions: u64,
+    pub stall_cycles: u64,
+}
+
+/// One handshake: fabric raises report-valid, waits `mcu_latency` cycles
+/// for the MCU to read and acknowledge, then clears and resumes.
+/// Returns the stall cycles consumed.
+pub fn handshake(
+    regs: &mut RegisterFile,
+    stats: &mut HandshakeStats,
+    mcu_latency: u64,
+) -> Result<u64> {
+    if regs.peek(Reg::Status) & status::REPORT_VALID != 0 {
+        bail!("handshake re-entered while a report is pending");
+    }
+    regs.set_bit(Reg::Status, status::REPORT_VALID, true);
+    // ... MCU reads the report registers and acknowledges ...
+    regs.set_bit(Reg::Status, status::REPORT_VALID, false);
+    stats.transactions += 1;
+    stats.stall_cycles += mcu_latency;
+    Ok(mcu_latency)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn read_write_roundtrip_and_counters() {
+        let mut rf = RegisterFile::new();
+        rf.write(Reg::TParam, 15);
+        assert_eq!(rf.read(Reg::TParam), 15);
+        assert_eq!(rf.reads, 1);
+        assert_eq!(rf.writes, 1);
+        rf.set(Reg::AccErrors, 3); // fabric-side, no transaction
+        assert_eq!(rf.peek(Reg::AccErrors), 3);
+        assert_eq!(rf.writes, 1);
+    }
+
+    #[test]
+    fn s_param_f32_bits() {
+        let mut rf = RegisterFile::new();
+        rf.write_s_param(1.375);
+        assert_eq!(rf.s_param(), 1.375);
+        rf.write_s_param(1.0);
+        assert_eq!(rf.s_param(), 1.0);
+    }
+
+    #[test]
+    fn ctrl_bits() {
+        let mut rf = RegisterFile::new();
+        rf.write(Reg::Ctrl, ctrl::START | ctrl::ONLINE_ENABLE);
+        assert_ne!(rf.peek(Reg::Ctrl) & ctrl::START, 0);
+        assert_ne!(rf.peek(Reg::Ctrl) & ctrl::ONLINE_ENABLE, 0);
+        assert_eq!(rf.peek(Reg::Ctrl) & ctrl::FILTER_ENABLE, 0);
+        rf.set_bit(Reg::Ctrl, ctrl::ONLINE_ENABLE, false);
+        assert_eq!(rf.peek(Reg::Ctrl) & ctrl::ONLINE_ENABLE, 0);
+    }
+
+    #[test]
+    fn handshake_counts_stalls_and_clears_valid() {
+        let mut rf = RegisterFile::new();
+        let mut hs = HandshakeStats::default();
+        let stall = handshake(&mut rf, &mut hs, 25).unwrap();
+        assert_eq!(stall, 25);
+        assert_eq!(hs.transactions, 1);
+        assert_eq!(hs.stall_cycles, 25);
+        assert_eq!(rf.peek(Reg::Status) & status::REPORT_VALID, 0);
+        handshake(&mut rf, &mut hs, 25).unwrap();
+        assert_eq!(hs.transactions, 2);
+        assert_eq!(hs.stall_cycles, 50);
+    }
+
+    #[test]
+    fn handshake_rejects_reentry() {
+        let mut rf = RegisterFile::new();
+        let mut hs = HandshakeStats::default();
+        rf.set_bit(Reg::Status, status::REPORT_VALID, true);
+        assert!(handshake(&mut rf, &mut hs, 10).is_err());
+    }
+}

@@ -1,0 +1,175 @@
+//! Clock domain and clock-gating model (paper §6).
+//!
+//! The RTL clock-gates the TM core when no inference/learning is running,
+//! and gates over-provisioned clauses/TAs individually. We track, per
+//! module, how many cycles its clock was *enabled* vs *gated*; the power
+//! model turns enabled-cycle counts plus switching events into energy.
+
+use std::collections::BTreeMap;
+
+/// Module identifiers for activity accounting. One per paper subsystem.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Module {
+    /// The TM core: clause bank + TA registers (active slice).
+    TmCore,
+    /// Over-provisioned (gated-off) clauses/TAs.
+    TmOverProvision,
+    /// High- and low-level management FSMs.
+    Management,
+    /// Accuracy-analysis block.
+    AccuracyAnalysis,
+    /// Offline memory manager + block ROMs.
+    OfflineMemory,
+    /// Online input path (parser, cyclic buffer, manager).
+    OnlineInput,
+    /// AXI register file + handshake logic.
+    AxiInterface,
+    /// Fault controller.
+    FaultController,
+}
+
+pub const ALL_MODULES: [Module; 8] = [
+    Module::TmCore,
+    Module::TmOverProvision,
+    Module::Management,
+    Module::AccuracyAnalysis,
+    Module::OfflineMemory,
+    Module::OnlineInput,
+    Module::AxiInterface,
+    Module::FaultController,
+];
+
+/// Per-module cycle/event accounting.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ModuleActivity {
+    /// Cycles the module's clock was enabled.
+    pub active_cycles: u64,
+    /// Cycles the module existed but was clock-gated.
+    pub gated_cycles: u64,
+    /// Switching events (e.g. TA updates, clause evaluations) — feeds the
+    /// dynamic-power term.
+    pub toggle_events: u64,
+}
+
+/// The system clock: a cycle counter plus per-module gating state.
+#[derive(Debug, Clone)]
+pub struct Clock {
+    cycle: u64,
+    enabled: BTreeMap<Module, bool>,
+    activity: BTreeMap<Module, ModuleActivity>,
+}
+
+impl Default for Clock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock {
+    pub fn new() -> Self {
+        let mut enabled = BTreeMap::new();
+        let mut activity = BTreeMap::new();
+        for m in ALL_MODULES {
+            // Reset state: everything gated until the FSM enables it —
+            // the paper's "when inference or learning is not occurring,
+            // the TM is clock-gated".
+            enabled.insert(m, false);
+            activity.insert(m, ModuleActivity::default());
+        }
+        Clock { cycle: 0, enabled, activity }
+    }
+
+    pub fn now(&self) -> u64 {
+        self.cycle
+    }
+
+    /// Gate or un-gate a module's clock.
+    pub fn set_enabled(&mut self, m: Module, on: bool) {
+        *self.enabled.get_mut(&m).unwrap() = on;
+    }
+
+    pub fn is_enabled(&self, m: Module) -> bool {
+        self.enabled[&m]
+    }
+
+    /// Advance the clock by `n` cycles, crediting each module according to
+    /// its gating state.
+    pub fn advance(&mut self, n: u64) {
+        self.cycle += n;
+        for m in ALL_MODULES {
+            let a = self.activity.get_mut(&m).unwrap();
+            if self.enabled[&m] {
+                a.active_cycles += n;
+            } else {
+                a.gated_cycles += n;
+            }
+        }
+    }
+
+    /// Record `n` switching events on a module.
+    pub fn toggle(&mut self, m: Module, n: u64) {
+        self.activity.get_mut(&m).unwrap().toggle_events += n;
+    }
+
+    pub fn activity(&self, m: Module) -> ModuleActivity {
+        self.activity[&m]
+    }
+
+    /// Run a closure with a module temporarily enabled, then re-gate it.
+    pub fn with_enabled<R>(&mut self, m: Module, f: impl FnOnce(&mut Clock) -> R) -> R {
+        let prev = self.enabled[&m];
+        self.set_enabled(m, true);
+        let r = f(self);
+        self.set_enabled(m, prev);
+        r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reset_state_fully_gated() {
+        let c = Clock::new();
+        assert_eq!(c.now(), 0);
+        for m in ALL_MODULES {
+            assert!(!c.is_enabled(m));
+        }
+    }
+
+    #[test]
+    fn advance_credits_by_gating_state() {
+        let mut c = Clock::new();
+        c.set_enabled(Module::TmCore, true);
+        c.advance(10);
+        assert_eq!(c.now(), 10);
+        assert_eq!(c.activity(Module::TmCore).active_cycles, 10);
+        assert_eq!(c.activity(Module::TmCore).gated_cycles, 0);
+        assert_eq!(c.activity(Module::Management).gated_cycles, 10);
+        c.set_enabled(Module::TmCore, false);
+        c.advance(5);
+        assert_eq!(c.activity(Module::TmCore).active_cycles, 10);
+        assert_eq!(c.activity(Module::TmCore).gated_cycles, 5);
+    }
+
+    #[test]
+    fn toggles_accumulate() {
+        let mut c = Clock::new();
+        c.toggle(Module::TmCore, 3);
+        c.toggle(Module::TmCore, 4);
+        assert_eq!(c.activity(Module::TmCore).toggle_events, 7);
+    }
+
+    #[test]
+    fn with_enabled_restores_gating() {
+        let mut c = Clock::new();
+        let r = c.with_enabled(Module::AccuracyAnalysis, |c| {
+            c.advance(4);
+            42
+        });
+        assert_eq!(r, 42);
+        assert!(!c.is_enabled(Module::AccuracyAnalysis));
+        assert_eq!(c.activity(Module::AccuracyAnalysis).active_cycles, 4);
+    }
+}

@@ -1,0 +1,147 @@
+//! Fault controller (paper §3.1.2): the addressable module holding the
+//! per-TA AND/OR gate mappings, programmable from the microcontroller over
+//! AXI "without re-synthesis of the FPGA logic".
+//!
+//! Address encoding (the `FaultAddr` register): the flat TA index
+//! `(class * max_clauses + clause) * literals + literal` — the same
+//! row-major layout every other layer uses.
+
+use crate::fpga::axi::{Reg, RegisterFile};
+use crate::tm::fault::{Fault, FaultMap};
+use crate::tm::params::TmShape;
+use anyhow::{bail, Result};
+
+/// Mapping codes used on the `FaultData` register.
+pub const FAULT_NONE: u32 = 0;
+pub const FAULT_STUCK_AT_0: u32 = 1;
+pub const FAULT_STUCK_AT_1: u32 = 2;
+
+/// The fault controller: decodes AXI writes into [`FaultMap`] updates.
+#[derive(Debug, Clone)]
+pub struct FaultController {
+    shape: TmShape,
+    map: FaultMap,
+    /// Programmed writes so far (diagnostics).
+    pub programmed: u64,
+}
+
+impl FaultController {
+    pub fn new(shape: &TmShape) -> Self {
+        FaultController {
+            shape: shape.clone(),
+            map: FaultMap::none(shape),
+            programmed: 0,
+        }
+    }
+
+    pub fn map(&self) -> &FaultMap {
+        &self.map
+    }
+
+    /// Decode a flat TA address.
+    pub fn decode(&self, addr: u32) -> Result<(usize, usize, usize)> {
+        let lits = self.shape.literals();
+        let addr = addr as usize;
+        if addr >= self.shape.num_tas() {
+            bail!("TA address {addr} out of range ({} TAs)", self.shape.num_tas());
+        }
+        let lit = addr % lits;
+        let clause = (addr / lits) % self.shape.max_clauses;
+        let class = addr / (lits * self.shape.max_clauses);
+        Ok((class, clause, lit))
+    }
+
+    /// Program one TA mapping directly.
+    pub fn program(&mut self, addr: u32, data: u32) -> Result<()> {
+        let (c, j, k) = self.decode(addr)?;
+        let fault = match data {
+            FAULT_NONE => Fault::None,
+            FAULT_STUCK_AT_0 => Fault::StuckAt0,
+            FAULT_STUCK_AT_1 => Fault::StuckAt1,
+            _ => bail!("bad fault code {data}"),
+        };
+        self.map.set(c, j, k, fault);
+        self.programmed += 1;
+        Ok(())
+    }
+
+    /// Service a strobed AXI write: reads `FaultAddr`/`FaultData` from the
+    /// register file and programs the mapping.
+    pub fn service_axi(&mut self, regs: &RegisterFile) -> Result<()> {
+        self.program(regs.peek(Reg::FaultAddr), regs.peek(Reg::FaultData))
+    }
+
+    /// Load a whole map at once (the experiment driver's bulk path — the
+    /// paper used a python script generating one write per TA; cost
+    /// accounting for that is handled by the caller via `programmed`).
+    pub fn load_map(&mut self, map: FaultMap) {
+        self.map = map;
+        self.programmed += self.shape.num_tas() as u64;
+    }
+
+    /// Clear every mapping to fault-free.
+    pub fn clear(&mut self) {
+        self.map = FaultMap::none(&self.shape);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shape() -> TmShape {
+        TmShape::iris()
+    }
+
+    #[test]
+    fn decode_roundtrip() {
+        let fc = FaultController::new(&shape());
+        assert_eq!(fc.decode(0).unwrap(), (0, 0, 0));
+        assert_eq!(fc.decode(31).unwrap(), (0, 0, 31));
+        assert_eq!(fc.decode(32).unwrap(), (0, 1, 0));
+        assert_eq!(fc.decode(16 * 32).unwrap(), (1, 0, 0));
+        assert_eq!(fc.decode(3 * 16 * 32 - 1).unwrap(), (2, 15, 31));
+        assert!(fc.decode(3 * 16 * 32).is_err());
+    }
+
+    #[test]
+    fn program_and_clear() {
+        let mut fc = FaultController::new(&shape());
+        fc.program(5, FAULT_STUCK_AT_0).unwrap();
+        fc.program(40, FAULT_STUCK_AT_1).unwrap();
+        assert_eq!(fc.map().get(0, 0, 5), Fault::StuckAt0);
+        assert_eq!(fc.map().get(0, 1, 8), Fault::StuckAt1);
+        assert_eq!(fc.programmed, 2);
+        fc.program(5, FAULT_NONE).unwrap();
+        assert_eq!(fc.map().get(0, 0, 5), Fault::None);
+        fc.clear();
+        assert!(fc.map().is_fault_free());
+    }
+
+    #[test]
+    fn bad_code_rejected() {
+        let mut fc = FaultController::new(&shape());
+        assert!(fc.program(0, 3).is_err());
+    }
+
+    #[test]
+    fn service_axi_reads_registers() {
+        let mut fc = FaultController::new(&shape());
+        let mut rf = RegisterFile::new();
+        rf.write(Reg::FaultAddr, 100);
+        rf.write(Reg::FaultData, FAULT_STUCK_AT_1);
+        fc.service_axi(&rf).unwrap();
+        let (c, j, k) = fc.decode(100).unwrap();
+        assert_eq!(fc.map().get(c, j, k), Fault::StuckAt1);
+    }
+
+    #[test]
+    fn load_map_bulk() {
+        let mut fc = FaultController::new(&shape());
+        let m = FaultMap::even_spread(&shape(), 0.2, Fault::StuckAt0, 1).unwrap();
+        let count = m.count();
+        fc.load_map(m);
+        assert_eq!(fc.map().count(), count);
+        assert_eq!(fc.programmed, shape().num_tas() as u64);
+    }
+}

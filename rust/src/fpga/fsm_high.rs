@@ -1,0 +1,158 @@
+//! High-level system state machine (paper §3.2 / Fig 3).
+//!
+//! Execution flow: after initial offline training, accuracy is analysed
+//! on the offline-training set and optionally the validation and
+//! online-training sets; online learning then runs for a set number of
+//! datapoints before accuracy analysis is re-run, looping for a
+//! configured number of online iterations.
+
+use anyhow::{bail, Result};
+
+/// The Fig-3 phases.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Reset / waiting for the start bit.
+    Idle,
+    /// Initial offline training: `epoch` in `0..offline_epochs`.
+    OfflineTraining { epoch: usize },
+    /// Accuracy analysis after offline training or after online
+    /// iteration `iteration` (0 = post-offline).
+    Analysis { iteration: usize },
+    /// Online learning pass `iteration` (1-based).
+    OnlineLearning { iteration: usize },
+    /// All iterations done.
+    Halted,
+}
+
+/// Completion events the subsystems raise.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Event {
+    Start,
+    EpochDone,
+    AnalysisDone,
+    OnlinePassDone,
+}
+
+/// The high-level manager: owns the phase sequencing and nothing else.
+#[derive(Debug, Clone)]
+pub struct HighLevelManager {
+    pub offline_epochs: usize,
+    pub online_iterations: usize,
+    phase: Phase,
+    /// Transition trace (diagnostics / FSM-coverage tests).
+    pub trace: Vec<Phase>,
+}
+
+impl HighLevelManager {
+    pub fn new(offline_epochs: usize, online_iterations: usize) -> Self {
+        HighLevelManager {
+            offline_epochs,
+            online_iterations,
+            phase: Phase::Idle,
+            trace: vec![Phase::Idle],
+        }
+    }
+
+    pub fn phase(&self) -> Phase {
+        self.phase
+    }
+
+    fn goto(&mut self, p: Phase) -> Phase {
+        self.phase = p;
+        self.trace.push(p);
+        p
+    }
+
+    /// Drive one transition with a completion event; returns the next
+    /// phase. Rejects events that are illegal in the current phase (an
+    /// RTL assertion).
+    pub fn advance(&mut self, ev: Event) -> Result<Phase> {
+        let next = match (self.phase, ev) {
+            (Phase::Idle, Event::Start) => {
+                if self.offline_epochs == 0 {
+                    Phase::Analysis { iteration: 0 }
+                } else {
+                    Phase::OfflineTraining { epoch: 0 }
+                }
+            }
+            (Phase::OfflineTraining { epoch }, Event::EpochDone) => {
+                if epoch + 1 < self.offline_epochs {
+                    Phase::OfflineTraining { epoch: epoch + 1 }
+                } else {
+                    Phase::Analysis { iteration: 0 }
+                }
+            }
+            (Phase::Analysis { iteration }, Event::AnalysisDone) => {
+                if iteration < self.online_iterations {
+                    Phase::OnlineLearning { iteration: iteration + 1 }
+                } else {
+                    Phase::Halted
+                }
+            }
+            (Phase::OnlineLearning { iteration }, Event::OnlinePassDone) => {
+                Phase::Analysis { iteration }
+            }
+            (phase, ev) => bail!("illegal event {ev:?} in phase {phase:?}"),
+        };
+        Ok(self.goto(next))
+    }
+
+    pub fn is_halted(&self) -> bool {
+        self.phase == Phase::Halted
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_flow_sequence() {
+        // 2 offline epochs, 3 online iterations (miniature Fig 3).
+        let mut hl = HighLevelManager::new(2, 3);
+        assert_eq!(hl.phase(), Phase::Idle);
+        assert_eq!(hl.advance(Event::Start).unwrap(), Phase::OfflineTraining { epoch: 0 });
+        assert_eq!(
+            hl.advance(Event::EpochDone).unwrap(),
+            Phase::OfflineTraining { epoch: 1 }
+        );
+        assert_eq!(hl.advance(Event::EpochDone).unwrap(), Phase::Analysis { iteration: 0 });
+        for it in 1..=3 {
+            assert_eq!(
+                hl.advance(Event::AnalysisDone).unwrap(),
+                Phase::OnlineLearning { iteration: it }
+            );
+            assert_eq!(
+                hl.advance(Event::OnlinePassDone).unwrap(),
+                Phase::Analysis { iteration: it }
+            );
+        }
+        assert_eq!(hl.advance(Event::AnalysisDone).unwrap(), Phase::Halted);
+        assert!(hl.is_halted());
+        // Trace covers: idle + 2 offline + (3+1) analysis + 3 online + halt.
+        assert_eq!(hl.trace.len(), 1 + 2 + 4 + 3 + 1);
+    }
+
+    #[test]
+    fn zero_epochs_skips_offline() {
+        let mut hl = HighLevelManager::new(0, 1);
+        assert_eq!(hl.advance(Event::Start).unwrap(), Phase::Analysis { iteration: 0 });
+    }
+
+    #[test]
+    fn zero_iterations_halts_after_first_analysis() {
+        let mut hl = HighLevelManager::new(1, 0);
+        hl.advance(Event::Start).unwrap();
+        hl.advance(Event::EpochDone).unwrap();
+        assert_eq!(hl.advance(Event::AnalysisDone).unwrap(), Phase::Halted);
+    }
+
+    #[test]
+    fn illegal_events_rejected() {
+        let mut hl = HighLevelManager::new(1, 1);
+        assert!(hl.advance(Event::EpochDone).is_err(), "no epoch during idle");
+        hl.advance(Event::Start).unwrap();
+        assert!(hl.advance(Event::AnalysisDone).is_err());
+        assert!(hl.advance(Event::OnlinePassDone).is_err());
+    }
+}

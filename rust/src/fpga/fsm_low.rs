@@ -1,0 +1,244 @@
+//! Low-level, per-datapoint state machine (paper §3.2).
+//!
+//! "…one for high-level system operations and one for low-level, per
+//! data-point [operation]. … the low-level manager controls the I/O and
+//! operation of the TM itself."
+//!
+//! Timing model (paper §6): the hardware TM completes inference **and**
+//! feedback for all clauses/TAs in **two clock cycles**, plus **one cycle
+//! to buffer the I/O**; block-ROM reads take one cycle. Non-pipelined,
+//! one datapoint costs `1 (mem) + 1 (I/O) + 2 (compute) = 4` cycles; the
+//! pipelined stream sustains **one datapoint per clock** after a fill of
+//! [`PIPELINE_FILL`] cycles.
+
+use crate::fpga::clock::{Clock, Module};
+use crate::tm::clause::Input;
+use crate::tm::feedback::{train_step, StepActivity};
+use crate::tm::machine::MultiTm;
+use crate::tm::params::TmParams;
+use crate::tm::rng::StepRands;
+
+/// Cycles to fill the mem→I/O→compute pipeline before the 1-per-clock
+/// steady state.
+pub const PIPELINE_FILL: u64 = 3;
+
+/// Cycles per datapoint without pipelining.
+pub const CYCLES_PER_DATAPOINT: u64 = 4;
+
+/// The two compute cycles of the paper's datapath.
+pub const COMPUTE_CYCLES: u64 = 2;
+
+/// What the engine is asked to do with one datapoint.
+#[derive(Debug, Clone)]
+pub enum Op {
+    /// Classify; the result is the predicted class.
+    Infer,
+    /// Train toward `target` with explicit randomness.
+    Train { target: usize, rands: StepRands },
+}
+
+/// FSM states, as in the RTL.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LlState {
+    Idle,
+    /// Data request issued; waiting on memory (ROM latency).
+    WaitMemory,
+    /// I/O buffering cycle.
+    BufferIo,
+    /// Clause evaluation (compute cycle 1).
+    Evaluate,
+    /// Feedback / vote resolution (compute cycle 2).
+    Feedback,
+}
+
+/// Result of one processed datapoint.
+#[derive(Debug, Clone)]
+pub struct OpResult {
+    pub prediction: usize,
+    pub class_sums: Vec<i32>,
+    /// Switching activity (zero for pure inference beyond clause evals).
+    pub activity: StepActivity,
+    pub cycles: u64,
+}
+
+/// The per-datapoint engine. Owns no data — it sequences the TM core.
+#[derive(Debug, Clone)]
+pub struct DatapointEngine {
+    state: LlState,
+    /// Total datapoints processed (throughput statistics).
+    pub processed: u64,
+}
+
+impl Default for DatapointEngine {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl DatapointEngine {
+    pub fn new() -> Self {
+        DatapointEngine { state: LlState::Idle, processed: 0 }
+    }
+
+    pub fn state(&self) -> LlState {
+        self.state
+    }
+
+    /// Process one datapoint non-pipelined, walking the FSM state by
+    /// state and advancing the clock cycle by cycle (RTL-faithful path).
+    ///
+    /// `mem_cycles` is the memory latency for this row (ROM = 1).
+    pub fn process(
+        &mut self,
+        tm: &mut MultiTm,
+        x: &Input,
+        op: &Op,
+        params: &TmParams,
+        mem_cycles: u64,
+        clock: &mut Clock,
+    ) -> OpResult {
+        debug_assert_eq!(self.state, LlState::Idle);
+        let start = clock.now();
+
+        // Request + wait on memory.
+        self.state = LlState::WaitMemory;
+        clock.with_enabled(Module::OfflineMemory, |c| c.advance(mem_cycles));
+
+        // I/O buffer cycle.
+        self.state = LlState::BufferIo;
+        clock.with_enabled(Module::Management, |c| c.advance(1));
+
+        // Two compute cycles with the TM core un-gated.
+        clock.set_enabled(Module::TmCore, true);
+        self.state = LlState::Evaluate;
+        clock.advance(1);
+        let (class_sums, prediction) = tm.infer(x, params);
+        clock.toggle(
+            Module::TmCore,
+            (params.active_classes * params.active_clauses) as u64,
+        );
+
+        self.state = LlState::Feedback;
+        clock.advance(1);
+        let activity = match op {
+            Op::Infer => StepActivity::default(),
+            Op::Train { target, rands } => {
+                let act = train_step(tm, x, *target, params, rands);
+                clock.toggle(Module::TmCore, act.total_updates() as u64);
+                act
+            }
+        };
+        clock.set_enabled(Module::TmCore, false);
+
+        self.state = LlState::Idle;
+        self.processed += 1;
+        OpResult { prediction, class_sums, activity, cycles: clock.now() - start }
+    }
+
+    /// Pipelined cycle cost for a batch of `n` datapoints (§6: throughput
+    /// one datapoint per clock; memory reads and I/O buffering overlap
+    /// compute).
+    pub fn pipelined_cycles(n: usize) -> u64 {
+        if n == 0 {
+            0
+        } else {
+            PIPELINE_FILL + n as u64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tm::params::TmShape;
+    use crate::tm::rng::Xoshiro256;
+
+    fn setup() -> (MultiTm, TmParams, Input) {
+        let shape = TmShape::iris();
+        let tm = MultiTm::new(&shape).unwrap();
+        let p = TmParams::paper_offline(&shape);
+        let bits: Vec<bool> = (0..16).map(|k| k % 2 == 0).collect();
+        let x = Input::pack(&shape, &bits);
+        (tm, p, x)
+    }
+
+    #[test]
+    fn infer_costs_four_cycles() {
+        let (mut tm, p, x) = setup();
+        let mut clock = Clock::new();
+        let mut eng = DatapointEngine::new();
+        let r = eng.process(&mut tm, &x, &Op::Infer, &p, 1, &mut clock);
+        assert_eq!(r.cycles, CYCLES_PER_DATAPOINT);
+        assert_eq!(clock.now(), 4);
+        assert_eq!(eng.processed, 1);
+        assert_eq!(eng.state(), LlState::Idle);
+        assert_eq!(r.activity, StepActivity::default());
+    }
+
+    #[test]
+    fn train_same_latency_with_activity() {
+        let (mut tm, p, x) = setup();
+        let mut clock = Clock::new();
+        let mut eng = DatapointEngine::new();
+        let mut rng = Xoshiro256::new(5);
+        let rands = StepRands::draw(&mut rng, tm.shape());
+        let shape = tm.shape().clone();
+        let _ = shape;
+        let r = eng.process(
+            &mut tm,
+            &x,
+            &Op::Train { target: 0, rands },
+            &p,
+            1,
+            &mut clock,
+        );
+        assert_eq!(r.cycles, CYCLES_PER_DATAPOINT);
+        assert!(r.activity.total_updates() > 0, "feedback moved TAs");
+        assert!(clock.activity(Module::TmCore).toggle_events > 0);
+    }
+
+    #[test]
+    fn tm_core_gated_outside_compute() {
+        let (mut tm, p, x) = setup();
+        let mut clock = Clock::new();
+        let mut eng = DatapointEngine::new();
+        eng.process(&mut tm, &x, &Op::Infer, &p, 1, &mut clock);
+        // 2 of the 4 cycles had the core un-gated.
+        assert_eq!(clock.activity(Module::TmCore).active_cycles, COMPUTE_CYCLES);
+        assert_eq!(clock.activity(Module::TmCore).gated_cycles, 2);
+        assert!(!clock.is_enabled(Module::TmCore));
+    }
+
+    #[test]
+    fn slow_memory_stalls_engine() {
+        let (mut tm, p, x) = setup();
+        let mut clock = Clock::new();
+        let mut eng = DatapointEngine::new();
+        let r = eng.process(&mut tm, &x, &Op::Infer, &p, 10, &mut clock);
+        assert_eq!(r.cycles, 10 + 1 + 2);
+    }
+
+    #[test]
+    fn pipelined_throughput_one_per_clock() {
+        assert_eq!(DatapointEngine::pipelined_cycles(0), 0);
+        assert_eq!(DatapointEngine::pipelined_cycles(1), 4);
+        assert_eq!(DatapointEngine::pipelined_cycles(60), 63);
+        // Steady state: marginal cost of one more datapoint is one cycle.
+        let a = DatapointEngine::pipelined_cycles(1000);
+        let b = DatapointEngine::pipelined_cycles(1001);
+        assert_eq!(b - a, 1);
+    }
+
+    #[test]
+    fn engine_matches_plain_tm_numerics() {
+        // The FSM must not alter numerics: same prediction as tm.infer.
+        let (mut tm, p, x) = setup();
+        let mut tm2 = tm.clone();
+        let mut clock = Clock::new();
+        let mut eng = DatapointEngine::new();
+        let r = eng.process(&mut tm, &x, &Op::Infer, &p, 1, &mut clock);
+        let (sums, pred) = tm2.infer(&x, &p);
+        assert_eq!(r.prediction, pred);
+        assert_eq!(r.class_sums, sums);
+    }
+}

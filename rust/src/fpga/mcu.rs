@@ -1,0 +1,191 @@
+//! Microcontroller model (paper §3.8).
+//!
+//! The on-board MCU (the Zynq PS in the paper's Zybo Z7-20) configures the
+//! fabric over AXI, receives accuracy reports through the handshake
+//! interface, relays them to a host over UART, and drives run-time
+//! reconfiguration (fault injection, filter control, over-provisioning).
+//!
+//! Here it is a *scripted* device: a schedule of actions keyed by online
+//! iteration (exactly how the paper stages its use cases: "faults were
+//! injected after 5 online iterations", "a new classification introduced
+//! after 5 online iterations"), plus a report log standing in for the UART
+//! stream. Every interaction costs cycles: `latency` per handshake and
+//! `axi_write_cost` per register write, so experiments expose how MCU
+//! speed never throttles the TM beyond handshake stalls (§6).
+
+use crate::fpga::accuracy::AccuracyRecord;
+use crate::fpga::rom::SetId;
+use crate::tm::fault::FaultMap;
+
+/// Run-time actions the MCU can apply between online iterations.
+#[derive(Debug, Clone)]
+pub enum McuAction {
+    /// Enable/disable the class filter (§3.4.1); `class` selects which.
+    SetFilter { enabled: bool, class: usize },
+    /// Enable/disable online learning feedback.
+    SetOnlineLearning(bool),
+    /// Program a whole fault map through the fault controller (§3.1.2) —
+    /// costs one AXI write pair per TA.
+    InjectFaults(FaultMap),
+    /// Force clause outputs (§7 future work: clause-output-level fault
+    /// injection): (class, clause, forced value / None clears).
+    InjectClauseFaults(Vec<(usize, usize, Option<bool>)>),
+    /// Drive the clause-number port (§3.1.1).
+    SetActiveClauses(usize),
+    /// Expose an over-provisioned class (§3.1.1).
+    SetActiveClasses(usize),
+    /// Update the specificity port (§3.1).
+    SetS(f32),
+    /// Update the threshold port.
+    SetT(i32),
+}
+
+/// A scheduled action: applied just **before** online iteration
+/// `at_iteration` begins (iterations are 1-based; 0 = before any online
+/// learning).
+#[derive(Debug, Clone)]
+pub struct ScheduledAction {
+    pub at_iteration: usize,
+    pub action: McuAction,
+}
+
+/// The scripted MCU.
+#[derive(Debug, Clone)]
+pub struct Mcu {
+    /// Cycles the fabric stalls per report handshake (§3.7).
+    pub handshake_latency: u64,
+    /// Cycles per AXI register write.
+    pub axi_write_cost: u64,
+    pub schedule: Vec<ScheduledAction>,
+    /// Accuracy reports received (the UART stream to the host).
+    pub reports: Vec<AccuracyRecord>,
+    /// Human-readable UART log lines.
+    pub uart_log: Vec<String>,
+}
+
+impl Mcu {
+    pub fn new(handshake_latency: u64, axi_write_cost: u64) -> Self {
+        Mcu {
+            handshake_latency,
+            axi_write_cost,
+            schedule: Vec::new(),
+            reports: Vec::new(),
+            uart_log: Vec::new(),
+        }
+    }
+
+    /// Schedule an action before iteration `at_iteration`.
+    pub fn schedule(&mut self, at_iteration: usize, action: McuAction) {
+        self.schedule.push(ScheduledAction { at_iteration, action });
+    }
+
+    /// Take the actions due before `iteration` (in schedule order).
+    pub fn due_actions(&self, iteration: usize) -> Vec<McuAction> {
+        self.schedule
+            .iter()
+            .filter(|s| s.at_iteration == iteration)
+            .map(|s| s.action.clone())
+            .collect()
+    }
+
+    /// AXI write cycles an action costs the fabric.
+    pub fn action_cost(&self, action: &McuAction) -> u64 {
+        match action {
+            // addr + data write per TA.
+            McuAction::InjectFaults(map) => {
+                2 * self.axi_write_cost * map.count().max(1) as u64
+            }
+            McuAction::InjectClauseFaults(list) => {
+                2 * self.axi_write_cost * list.len().max(1) as u64
+            }
+            _ => self.axi_write_cost,
+        }
+    }
+
+    /// Receive an offloaded accuracy report (one handshake).
+    pub fn receive_report(&mut self, rec: AccuracyRecord) -> u64 {
+        let set = match rec.set {
+            SetId::OfflineTrain => "offline",
+            SetId::Validation => "validation",
+            SetId::OnlineTrain => "online",
+        };
+        self.uart_log.push(format!(
+            "iter={} set={} acc={:.2}% ({}/{})",
+            rec.iteration,
+            set,
+            rec.accuracy() * 100.0,
+            rec.total - rec.errors,
+            rec.total
+        ));
+        self.reports.push(rec);
+        self.handshake_latency
+    }
+
+    /// Reports for one set, in iteration order (experiment extraction).
+    pub fn curve(&self, set: SetId) -> Vec<(usize, f64)> {
+        self.reports
+            .iter()
+            .filter(|r| r.set == set)
+            .map(|r| (r.iteration, r.accuracy()))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tm::fault::Fault;
+    use crate::tm::params::TmShape;
+
+    #[test]
+    fn schedule_and_due_actions() {
+        let mut mcu = Mcu::new(25, 4);
+        mcu.schedule(5, McuAction::SetOnlineLearning(false));
+        mcu.schedule(5, McuAction::SetFilter { enabled: false, class: 0 });
+        mcu.schedule(7, McuAction::SetActiveClauses(16));
+        assert_eq!(mcu.due_actions(5).len(), 2);
+        assert_eq!(mcu.due_actions(6).len(), 0);
+        assert_eq!(mcu.due_actions(7).len(), 1);
+        assert!(matches!(
+            mcu.due_actions(5)[0],
+            McuAction::SetOnlineLearning(false)
+        ));
+    }
+
+    #[test]
+    fn fault_injection_costs_scale_with_map() {
+        let mcu = Mcu::new(25, 4);
+        let shape = TmShape::iris();
+        let map = FaultMap::even_spread(&shape, 0.20, Fault::StuckAt0, 1).unwrap();
+        let n = map.count() as u64;
+        assert_eq!(mcu.action_cost(&McuAction::InjectFaults(map)), 2 * 4 * n);
+        assert_eq!(mcu.action_cost(&McuAction::SetS(1.0)), 4);
+    }
+
+    #[test]
+    fn reports_logged_and_curves_extracted() {
+        let mut mcu = Mcu::new(25, 4);
+        for it in 0..3 {
+            let stall = mcu.receive_report(AccuracyRecord {
+                set: SetId::Validation,
+                errors: 10 - it,
+                total: 60,
+                iteration: it,
+                cycles: 63,
+            });
+            assert_eq!(stall, 25);
+        }
+        mcu.receive_report(AccuracyRecord {
+            set: SetId::OnlineTrain,
+            errors: 5,
+            total: 60,
+            iteration: 0,
+            cycles: 63,
+        });
+        let curve = mcu.curve(SetId::Validation);
+        assert_eq!(curve.len(), 3);
+        assert!(curve[2].1 > curve[0].1, "improving curve");
+        assert_eq!(mcu.uart_log.len(), 4);
+        assert!(mcu.uart_log[0].contains("set=validation"));
+    }
+}

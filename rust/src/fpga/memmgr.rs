@@ -1,0 +1,181 @@
+//! Offline memory-management subsystem (paper §3.4.2).
+//!
+//! "We created a memory management subsystem to retrieve and parse the
+//! required offline data from onboard memory and present it to the TM
+//! management when required, abstracting the memory interface itself away
+//! from the management subsystem."
+//!
+//! The manager resolves set-relative requests through the [`RomBank`]
+//! (cross-validation mapping), applies the class-filter IP on the way out
+//! (§3.4.1) and packs rows into TM literals.
+
+use crate::data::filter::ClassFilter;
+use crate::fpga::rom::{Port, RomBank, SetId};
+use crate::tm::clause::Input;
+use crate::tm::params::TmShape;
+use anyhow::Result;
+
+/// A fetched row, ready for the TM.
+#[derive(Debug, Clone)]
+pub struct FetchedRow {
+    pub input: Input,
+    pub label: usize,
+    /// Memory cycles consumed (includes rows scanned past the filter).
+    pub cycles: u64,
+}
+
+/// The offline memory manager.
+#[derive(Debug, Clone)]
+pub struct MemoryManager {
+    pub shape: TmShape,
+    pub filter: ClassFilter,
+}
+
+impl MemoryManager {
+    pub fn new(shape: &TmShape) -> Self {
+        MemoryManager { shape: shape.clone(), filter: ClassFilter::disabled() }
+    }
+
+    /// Fetch the row at set-relative index `row` **after filtering**:
+    /// filtered rows are scanned past (costing their read cycle, as the
+    /// filter IP sits behind the ROM) and do not count toward the index.
+    /// Returns `None` when fewer than `row + 1` rows pass the filter.
+    pub fn fetch(
+        &self,
+        bank: &mut RomBank,
+        set: SetId,
+        row: usize,
+        port: Port,
+    ) -> Result<Option<FetchedRow>> {
+        let mut cycles = 0u64;
+        let mut passed = 0usize;
+        for raw in 0..bank.set_len(set) {
+            let ((bits, label), c) = bank.read(set, raw, port)?;
+            cycles += c;
+            if self.filter.passes(label) {
+                if passed == row {
+                    return Ok(Some(FetchedRow {
+                        input: Input::pack(&self.shape, &bits),
+                        label,
+                        cycles,
+                    }));
+                }
+                passed += 1;
+            }
+        }
+        Ok(None)
+    }
+
+    /// Number of rows in a set after filtering (one scan).
+    pub fn filtered_len(&self, bank: &mut RomBank, set: SetId) -> Result<usize> {
+        let mut n = 0;
+        for raw in 0..bank.set_len(set) {
+            let ((_, label), _) = bank.read(set, raw, Port::A)?;
+            if self.filter.passes(label) {
+                n += 1;
+            }
+        }
+        Ok(n)
+    }
+
+    /// Stream a whole (filtered) set in order — the pipelined bulk path
+    /// used by training epochs and accuracy analysis. One ROM read per
+    /// stored row; filtered rows are dropped after the read, exactly like
+    /// the RTL filter IP. Returns (rows, total memory cycles).
+    pub fn stream(
+        &self,
+        bank: &mut RomBank,
+        set: SetId,
+        port: Port,
+        limit: Option<usize>,
+    ) -> Result<(Vec<(Input, usize)>, u64)> {
+        let mut rows = Vec::new();
+        let mut cycles = 0u64;
+        for raw in 0..bank.set_len(set) {
+            if let Some(l) = limit {
+                if rows.len() == l {
+                    break;
+                }
+            }
+            let ((bits, label), c) = bank.read(set, raw, port)?;
+            cycles += c;
+            if self.filter.passes(label) {
+                rows.push((Input::pack(&self.shape, &bits), label));
+            }
+        }
+        Ok((rows, cycles))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::blocks::BlockPlan;
+    use crate::data::dataset::BoolDataset;
+    use crate::data::iris;
+
+    fn bank() -> RomBank {
+        let plan = BlockPlan::stratified(iris::booleanised(), 5, 1).unwrap();
+        let blocks: Vec<BoolDataset> = (0..5).map(|i| plan.block(i).clone()).collect();
+        RomBank::new(&blocks, &[0, 1, 2, 3, 4], (1, 2, 2)).unwrap()
+    }
+
+    #[test]
+    fn fetch_unfiltered_costs_scan() {
+        let mm = MemoryManager::new(&TmShape::iris());
+        let mut b = bank();
+        let r = mm.fetch(&mut b, SetId::OfflineTrain, 0, Port::A).unwrap().unwrap();
+        assert_eq!(r.cycles, 1);
+        let r = mm.fetch(&mut b, SetId::OfflineTrain, 5, Port::A).unwrap().unwrap();
+        assert_eq!(r.cycles, 6, "scan reads 6 rows to reach index 5");
+        assert!(r.label < 3);
+    }
+
+    #[test]
+    fn fetch_past_end_is_none() {
+        let mm = MemoryManager::new(&TmShape::iris());
+        let mut b = bank();
+        assert!(mm.fetch(&mut b, SetId::OfflineTrain, 30, Port::A).unwrap().is_none());
+    }
+
+    #[test]
+    fn filter_reduces_visible_set() {
+        let mut mm = MemoryManager::new(&TmShape::iris());
+        mm.filter = ClassFilter::removing(0);
+        let mut b = bank();
+        assert_eq!(mm.filtered_len(&mut b, SetId::OfflineTrain).unwrap(), 20);
+        assert_eq!(mm.filtered_len(&mut b, SetId::Validation).unwrap(), 40);
+        // Every fetched row passes the filter.
+        for i in 0..20 {
+            let r = mm.fetch(&mut b, SetId::OfflineTrain, i, Port::A).unwrap().unwrap();
+            assert_ne!(r.label, 0);
+        }
+        assert!(mm.fetch(&mut b, SetId::OfflineTrain, 20, Port::A).unwrap().is_none());
+    }
+
+    #[test]
+    fn stream_matches_fetch_sequence() {
+        let mut mm = MemoryManager::new(&TmShape::iris());
+        mm.filter = ClassFilter::removing(2);
+        let mut b1 = bank();
+        let mut b2 = bank();
+        let (rows, cycles) = mm.stream(&mut b1, SetId::OfflineTrain, Port::A, None).unwrap();
+        assert_eq!(rows.len(), 20);
+        assert_eq!(cycles, 30, "one read per stored row");
+        for (i, (input, label)) in rows.iter().enumerate() {
+            let f = mm.fetch(&mut b2, SetId::OfflineTrain, i, Port::A).unwrap().unwrap();
+            assert_eq!(f.label, *label);
+            assert_eq!(&f.input, input);
+        }
+    }
+
+    #[test]
+    fn stream_limit_truncates() {
+        let mm = MemoryManager::new(&TmShape::iris());
+        let mut b = bank();
+        let (rows, cycles) =
+            mm.stream(&mut b, SetId::OfflineTrain, Port::A, Some(20)).unwrap();
+        assert_eq!(rows.len(), 20, "paper §5.1: offline training uses 20 of 30");
+        assert_eq!(cycles, 20);
+    }
+}

@@ -1,0 +1,30 @@
+//! Cycle-level model of the paper's FPGA architecture (Fig 2): every RTL
+//! subsystem the paper describes, with cycle and switching-activity
+//! accounting faithful to §6's timing claims (2-cycle inference+feedback,
+//! 1 datapoint/clock pipelined, handshake-only MCU stalls, clock gating).
+
+pub mod accuracy;
+pub mod axi;
+pub mod clock;
+pub mod fault;
+pub mod fsm_high;
+pub mod fsm_low;
+pub mod mcu;
+pub mod memmgr;
+pub mod online;
+pub mod power;
+pub mod rom;
+pub mod system;
+
+pub use accuracy::{AccuracyAnalyzer, AccuracyRecord, HistoryMode};
+pub use axi::{HandshakeStats, Reg, RegisterFile};
+pub use clock::{Clock, Module};
+pub use fault::FaultController;
+pub use fsm_high::{Event, HighLevelManager, Phase};
+pub use fsm_low::{DatapointEngine, Op};
+pub use mcu::{Mcu, McuAction, ScheduledAction};
+pub use memmgr::MemoryManager;
+pub use online::OnlineInputPath;
+pub use power::{PowerModel, PowerReport};
+pub use rom::{BlockRom, Port, RomBank, SetId};
+pub use system::{FpgaSystem, RunReport, SystemConfig};

@@ -1,0 +1,194 @@
+//! Cycle-level online data input path (paper §3.5).
+//!
+//! The input-parser IP pulls rows of the online-training set out of the
+//! dual-port ROM (port B, so accuracy analysis can use port A
+//! concurrently, §3.6.2) at a configurable *production rate* — modelling
+//! an external sensor/UART source. Rows land in the cyclic buffer so
+//! "datapoints [are not] ignored by the system during accuracy analysis";
+//! the online data manager serves them to TM management on request.
+
+use crate::data::filter::ClassFilter;
+use crate::data::online::CyclicBuffer;
+use crate::fpga::rom::{Port, RomBank, SetId};
+use crate::tm::clause::Input;
+use crate::tm::params::TmShape;
+use anyhow::Result;
+
+/// The cycle-level online input path.
+#[derive(Debug, Clone)]
+pub struct OnlineInputPath {
+    shape: TmShape,
+    /// The parser produces one row every `production_interval` cycles.
+    pub production_interval: u64,
+    /// Cycles accumulated toward the next production.
+    accum: u64,
+    /// Parser position in the online set (wraps — cyclic source).
+    pos: usize,
+    pub buffer: CyclicBuffer<(Input, usize)>,
+    pub filter: ClassFilter,
+    /// Rows produced by the parser so far.
+    pub produced: u64,
+    /// Rows served to TM management.
+    pub served: u64,
+}
+
+impl OnlineInputPath {
+    pub fn new(shape: &TmShape, buffer_capacity: usize, production_interval: u64) -> Self {
+        OnlineInputPath {
+            shape: shape.clone(),
+            production_interval: production_interval.max(1),
+            accum: 0,
+            pos: 0,
+            buffer: CyclicBuffer::new(buffer_capacity),
+            filter: ClassFilter::disabled(),
+            produced: 0,
+            served: 0,
+        }
+    }
+
+    /// Parser reads the next passing row from ROM port B (wrapping).
+    fn parse_next(&mut self, bank: &mut RomBank) -> Result<Option<(Input, usize)>> {
+        let len = bank.set_len(SetId::OnlineTrain);
+        for _ in 0..len {
+            let row = self.pos;
+            self.pos = (self.pos + 1) % len;
+            let ((bits, label), _c) = bank.read(SetId::OnlineTrain, row, Port::B)?;
+            if self.filter.passes(label) {
+                return Ok(Some((Input::pack(&self.shape, &bits), label)));
+            }
+        }
+        Ok(None) // everything filtered
+    }
+
+    /// Let `cycles` of wall-clock pass while the TM is busy elsewhere:
+    /// the parser keeps producing into the buffer (overflow counted
+    /// there).
+    pub fn advance(&mut self, cycles: u64, bank: &mut RomBank) -> Result<()> {
+        self.accum += cycles;
+        while self.accum >= self.production_interval {
+            self.accum -= self.production_interval;
+            if let Some(row) = self.parse_next(bank)? {
+                self.produced += 1;
+                self.buffer.push(row);
+            } else {
+                break;
+            }
+        }
+        Ok(())
+    }
+
+    /// TM management requests one datapoint: buffered rows first, else a
+    /// direct parser read (the TM is faster than the source, §6).
+    pub fn request(&mut self, bank: &mut RomBank) -> Result<Option<(Input, usize)>> {
+        let row = match self.buffer.pop() {
+            Some(r) => Some(r),
+            None => {
+                let r = self.parse_next(bank)?;
+                if r.is_some() {
+                    self.produced += 1;
+                }
+                r
+            }
+        };
+        if row.is_some() {
+            self.served += 1;
+        }
+        Ok(row)
+    }
+
+    /// Datapoints lost to buffer overflow.
+    pub fn dropped(&self) -> usize {
+        self.buffer.dropped()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::blocks::BlockPlan;
+    use crate::data::dataset::BoolDataset;
+    use crate::data::iris;
+
+    fn bank() -> RomBank {
+        let plan = BlockPlan::stratified(iris::booleanised(), 5, 1).unwrap();
+        let blocks: Vec<BoolDataset> = (0..5).map(|i| plan.block(i).clone()).collect();
+        RomBank::new(&blocks, &[0, 1, 2, 3, 4], (1, 2, 2)).unwrap()
+    }
+
+    fn path() -> OnlineInputPath {
+        OnlineInputPath::new(&TmShape::iris(), 16, 4)
+    }
+
+    #[test]
+    fn produces_at_configured_rate() {
+        let mut p = path();
+        let mut b = bank();
+        p.advance(16, &mut b).unwrap(); // 16 cycles / interval 4 = 4 rows
+        assert_eq!(p.produced, 4);
+        assert_eq!(p.buffer.len(), 4);
+        p.advance(3, &mut b).unwrap(); // not enough for another
+        assert_eq!(p.produced, 4);
+        p.advance(1, &mut b).unwrap();
+        assert_eq!(p.produced, 5);
+    }
+
+    #[test]
+    fn request_serves_buffer_then_direct() {
+        let mut p = path();
+        let mut b = bank();
+        p.advance(8, &mut b).unwrap(); // 2 buffered
+        let first = p.request(&mut b).unwrap().unwrap();
+        // Ordering preserved: first buffered row is online row 0.
+        let ((bits0, label0), _) = b.read(SetId::OnlineTrain, 0, Port::A).unwrap();
+        assert_eq!(first.1, label0);
+        assert_eq!(first.0, Input::pack(&TmShape::iris(), &bits0));
+        p.request(&mut b).unwrap().unwrap();
+        assert!(p.buffer.is_empty());
+        // Direct read continues the sequence (row 2).
+        let third = p.request(&mut b).unwrap().unwrap();
+        let ((bits2, _), _) = b.read(SetId::OnlineTrain, 2, Port::A).unwrap();
+        assert_eq!(third.0, Input::pack(&TmShape::iris(), &bits2));
+        assert_eq!(p.served, 3);
+    }
+
+    #[test]
+    fn buffer_overflow_drops_and_counts() {
+        let mut p = OnlineInputPath::new(&TmShape::iris(), 4, 1);
+        let mut b = bank();
+        p.advance(10, &mut b).unwrap();
+        assert_eq!(p.buffer.len(), 4);
+        assert_eq!(p.dropped(), 6);
+    }
+
+    #[test]
+    fn filter_skips_class_and_lifts() {
+        let mut p = path();
+        p.filter = ClassFilter::removing(0);
+        let mut b = bank();
+        for _ in 0..10 {
+            let (_x, label) = p.request(&mut b).unwrap().unwrap();
+            assert_ne!(label, 0, "class 0 filtered (§5.2)");
+        }
+        p.filter.set_enabled(false);
+        // The unseen class eventually appears.
+        let mut saw0 = false;
+        for _ in 0..60 {
+            if p.request(&mut b).unwrap().unwrap().1 == 0 {
+                saw0 = true;
+                break;
+            }
+        }
+        assert!(saw0, "lifting the filter admits the new class");
+    }
+
+    #[test]
+    fn wraps_around_the_online_set() {
+        let mut p = path();
+        let mut b = bank();
+        let mut labels = Vec::new();
+        for _ in 0..120 {
+            labels.push(p.request(&mut b).unwrap().unwrap().1);
+        }
+        assert_eq!(&labels[..60], &labels[60..], "second pass identical");
+    }
+}

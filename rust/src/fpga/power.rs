@@ -1,0 +1,240 @@
+//! Activity-based power model (paper §6).
+//!
+//! The paper reports **1.725 W** total on the Zybo Z7-20, of which
+//! **1.4 W** is the on-board microcontroller (Zynq PS, default tool
+//! activity), leaving ≈ 0.325 W for the programmable fabric. Clock gating
+//! "provid[es] significant power consumption improvements" when the TM is
+//! idle and for over-provisioned clauses/TAs.
+//!
+//! Model: `P = P_mcu + P_static + Σ_m (C_clk[m]·duty[m] + E_tog[m]·rate[m])·V²f`
+//! folded into per-module coefficients calibrated so the paper's
+//! experimental configuration lands on the paper's numbers:
+//!
+//! - per-module *clock-tree/активity* power applies only to enabled cycles
+//!   (gated cycles cost the residual leakage inside `P_static`);
+//! - per-event switching energy applies to recorded toggle events.
+
+use crate::fpga::clock::{Clock, Module, ALL_MODULES};
+
+/// Power coefficients (Watts at 100 MHz reference clock).
+#[derive(Debug, Clone)]
+pub struct PowerModel {
+    /// Clock frequency (Hz) — scales the dynamic terms.
+    pub f_clk_hz: f64,
+    /// Microcontroller (Zynq PS) baseline.
+    pub mcu_w: f64,
+    /// Fabric static (leakage + always-on clock backbone).
+    pub static_w: f64,
+    /// Per-module dynamic power when the module's clock is enabled, at
+    /// the reference frequency (W).
+    pub module_active_w: fn(Module) -> f64,
+    /// Energy per toggle event (J).
+    pub toggle_j: f64,
+}
+
+/// Calibrated per-module active power (W at 100 MHz). The TM core
+/// dominates the fabric; management/analysis/memory are small FSMs.
+fn default_module_active_w(m: Module) -> f64 {
+    match m {
+        Module::TmCore => 0.140,
+        Module::TmOverProvision => 0.030,
+        Module::Management => 0.015,
+        Module::AccuracyAnalysis => 0.010,
+        Module::OfflineMemory => 0.020,
+        Module::OnlineInput => 0.010,
+        Module::AxiInterface => 0.008,
+        Module::FaultController => 0.004,
+    }
+}
+
+pub const REFERENCE_CLK_HZ: f64 = 100.0e6;
+
+impl Default for PowerModel {
+    fn default() -> Self {
+        PowerModel {
+            f_clk_hz: REFERENCE_CLK_HZ,
+            mcu_w: 1.40,
+            static_w: 0.105,
+            module_active_w: default_module_active_w,
+            toggle_j: 2.0e-11,
+        }
+    }
+}
+
+/// Power estimate for a run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PowerReport {
+    pub total_w: f64,
+    pub mcu_w: f64,
+    pub fabric_w: f64,
+    pub static_w: f64,
+    /// (module, average W) breakdown of the dynamic fabric power.
+    pub per_module_w: Vec<(Module, f64)>,
+}
+
+impl PowerModel {
+    /// Estimate average power over the recorded activity window.
+    pub fn estimate(&self, clock: &Clock) -> PowerReport {
+        let total_cycles = clock.now().max(1) as f64;
+        let f_scale = self.f_clk_hz / REFERENCE_CLK_HZ;
+        let seconds = total_cycles / self.f_clk_hz;
+        let mut per_module = Vec::new();
+        let mut dynamic = 0.0;
+        for m in ALL_MODULES {
+            let a = clock.activity(m);
+            let duty = a.active_cycles as f64 / total_cycles;
+            let clk_w = (self.module_active_w)(m) * duty * f_scale;
+            let tog_w = a.toggle_events as f64 * self.toggle_j / seconds.max(1e-12);
+            per_module.push((m, clk_w + tog_w));
+            dynamic += clk_w + tog_w;
+        }
+        let fabric = self.static_w + dynamic;
+        PowerReport {
+            total_w: self.mcu_w + fabric,
+            mcu_w: self.mcu_w,
+            fabric_w: fabric,
+            static_w: self.static_w,
+            per_module_w: per_module,
+        }
+    }
+
+    /// Energy (J) consumed over the window.
+    pub fn energy_j(&self, clock: &Clock) -> f64 {
+        let seconds = clock.now() as f64 / self.f_clk_hz;
+        self.estimate(clock).total_w * seconds
+    }
+
+    /// Energy per datapoint (J) — the edge-inference figure of merit the
+    /// paper's abstract targets ("energy/performance/accuracy
+    /// trade-offs"). `datapoints` = inference + training rows processed
+    /// in the window.
+    pub fn energy_per_datapoint_j(&self, clock: &Clock, datapoints: u64) -> f64 {
+        if datapoints == 0 {
+            return f64::NAN;
+        }
+        self.energy_j(clock) / datapoints as f64
+    }
+
+    /// Fabric-only energy per datapoint (J) — excludes the MCU baseline,
+    /// which the paper notes dominates total power but idles during TM
+    /// operation.
+    pub fn fabric_energy_per_datapoint_j(&self, clock: &Clock, datapoints: u64) -> f64 {
+        if datapoints == 0 {
+            return f64::NAN;
+        }
+        let seconds = clock.now() as f64 / self.f_clk_hz;
+        self.estimate(clock).fabric_w * seconds / datapoints as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Busy run (TM core + management active the whole window) should land
+    /// near the paper's 1.725 W.
+    #[test]
+    fn calibration_matches_paper_total() {
+        let mut c = Clock::new();
+        c.set_enabled(Module::TmCore, true);
+        c.set_enabled(Module::Management, true);
+        c.set_enabled(Module::OfflineMemory, true);
+        c.set_enabled(Module::AccuracyAnalysis, true);
+        c.advance(1_000_000);
+        // Typical toggle activity: ~64 TA updates per cycle-pair.
+        c.toggle(Module::TmCore, 30_000_000);
+        let p = PowerModel::default().estimate(&c);
+        assert!(
+            (1.60..=1.85).contains(&p.total_w),
+            "total {:.3} W should be near the paper's 1.725 W",
+            p.total_w
+        );
+        assert_eq!(p.mcu_w, 1.40, "PS baseline is the paper's 1.4 W");
+        assert!(p.fabric_w < 0.45, "fabric stays a small share: {:.3}", p.fabric_w);
+    }
+
+    #[test]
+    fn clock_gating_saves_power() {
+        let mut busy = Clock::new();
+        busy.set_enabled(Module::TmCore, true);
+        busy.advance(1000);
+        let mut gated = Clock::new();
+        gated.advance(1000); // fully gated
+        let m = PowerModel::default();
+        let p_busy = m.estimate(&busy);
+        let p_gated = m.estimate(&gated);
+        assert!(p_busy.fabric_w > p_gated.fabric_w + 0.1);
+        // Gated fabric = static only.
+        assert!((p_gated.fabric_w - m.static_w).abs() < 1e-9);
+    }
+
+    #[test]
+    fn overprovision_gating_visible() {
+        // Enabling the over-provisioned slice costs measurable power —
+        // the §6 claim that gating unused clauses/TAs reduces overhead.
+        let m = PowerModel::default();
+        let mut with = Clock::new();
+        with.set_enabled(Module::TmCore, true);
+        with.set_enabled(Module::TmOverProvision, true);
+        with.advance(1000);
+        let mut without = Clock::new();
+        without.set_enabled(Module::TmCore, true);
+        without.advance(1000);
+        let d = m.estimate(&with).fabric_w - m.estimate(&without).fabric_w;
+        assert!((d - 0.030).abs() < 1e-6, "over-provision slice ≈ 30 mW, got {d}");
+    }
+
+    #[test]
+    fn toggle_energy_counts() {
+        let m = PowerModel::default();
+        let mut a = Clock::new();
+        a.set_enabled(Module::TmCore, true);
+        a.advance(1000);
+        let mut b = a.clone();
+        b.toggle(Module::TmCore, 1_000_000);
+        assert!(m.estimate(&b).fabric_w > m.estimate(&a).fabric_w);
+    }
+
+    #[test]
+    fn energy_scales_with_time() {
+        let m = PowerModel::default();
+        let mut c = Clock::new();
+        c.set_enabled(Module::TmCore, true);
+        c.advance(100_000);
+        let e1 = m.energy_j(&c);
+        c.advance(100_000);
+        let e2 = m.energy_j(&c);
+        assert!(e2 > 1.9 * e1 && e2 < 2.1 * e1);
+    }
+
+    #[test]
+    fn energy_per_datapoint_at_paper_throughput() {
+        // At 1 datapoint/clock (§6) and ~1.7 W: ≈ 17 nJ/datapoint total,
+        // ≈ 2-3 nJ fabric-only — the edge-scale energy story.
+        let m = PowerModel::default();
+        let mut c = Clock::new();
+        c.set_enabled(Module::TmCore, true);
+        c.set_enabled(Module::Management, true);
+        let n = 1_000_000u64;
+        c.advance(n); // pipelined: one datapoint per cycle
+        let e = m.energy_per_datapoint_j(&c, n);
+        assert!((1.0e-8..5.0e-8).contains(&e), "total {e:.2e} J/dp");
+        let ef = m.fabric_energy_per_datapoint_j(&c, n);
+        assert!(ef < e, "fabric-only must exclude the MCU baseline");
+        assert!((1.0e-9..1.0e-8).contains(&ef), "fabric {ef:.2e} J/dp");
+        assert!(m.energy_per_datapoint_j(&c, 0).is_nan());
+    }
+
+    #[test]
+    fn frequency_scales_dynamic_only() {
+        let mut c = Clock::new();
+        c.set_enabled(Module::TmCore, true);
+        c.advance(1000);
+        let slow = PowerModel { f_clk_hz: 50.0e6, ..Default::default() };
+        let fast = PowerModel::default();
+        let ps = slow.estimate(&c);
+        let pf = fast.estimate(&c);
+        assert!(pf.fabric_w > ps.fabric_w);
+        assert_eq!(pf.mcu_w, ps.mcu_w);
+    }
+}

@@ -1,0 +1,227 @@
+//! On-board block ROM model (paper §3.6.2).
+//!
+//! "Each block was stored in a separate block ROM, mapped to via the
+//! cross-validation IP. Each block ROM was dual port to allow the Online
+//! Training set to be used in online training as well as accuracy
+//! analysis." Reads have 1-cycle latency (synchronous BRAM).
+
+use crate::data::dataset::BoolDataset;
+use anyhow::{bail, Result};
+
+/// Read latency of a synchronous block RAM, in cycles.
+pub const ROM_READ_LATENCY: u64 = 1;
+
+/// ROM port id (block RAMs on the target fabric are dual-port).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Port {
+    A,
+    B,
+}
+
+/// One block ROM holding one cross-validation block.
+#[derive(Debug, Clone)]
+pub struct BlockRom {
+    rows: Vec<(Vec<bool>, usize)>,
+    /// Per-port read counters (utilisation statistics).
+    reads: [u64; 2],
+}
+
+impl BlockRom {
+    pub fn from_block(block: &BoolDataset) -> Self {
+        let rows = block
+            .rows
+            .iter()
+            .cloned()
+            .zip(block.labels.iter().copied())
+            .collect();
+        BlockRom { rows, reads: [0, 0] }
+    }
+
+    pub fn depth(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Synchronous read: returns the row plus the cycle cost.
+    pub fn read(&mut self, port: Port, addr: usize) -> Result<(&(Vec<bool>, usize), u64)> {
+        if addr >= self.rows.len() {
+            bail!("ROM address {addr} out of range (depth {})", self.rows.len());
+        }
+        self.reads[port as usize] += 1;
+        Ok((&self.rows[addr], ROM_READ_LATENCY))
+    }
+
+    pub fn reads(&self, port: Port) -> u64 {
+        self.reads[port as usize]
+    }
+}
+
+/// The bank of block ROMs plus the cross-validation mapping: a *set*-level
+/// address (set, row) resolves through the current block ordering to
+/// (block ROM, offset).
+#[derive(Debug, Clone)]
+pub struct RomBank {
+    roms: Vec<BlockRom>,
+    block_len: usize,
+    /// Current ordering (block ids); set boundaries from the allocation.
+    ordering: Vec<usize>,
+    /// Blocks per set: (offline, validation, online).
+    alloc: (usize, usize, usize),
+}
+
+/// Which of the three sets an access targets (§3.6.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SetId {
+    OfflineTrain,
+    Validation,
+    OnlineTrain,
+}
+
+impl RomBank {
+    pub fn new(
+        blocks: &[BoolDataset],
+        ordering: &[usize],
+        alloc: (usize, usize, usize),
+    ) -> Result<Self> {
+        if blocks.is_empty() {
+            bail!("no blocks");
+        }
+        let block_len = blocks[0].len();
+        if blocks.iter().any(|b| b.len() != block_len) {
+            bail!("blocks must be equal length");
+        }
+        if ordering.len() != blocks.len() || alloc.0 + alloc.1 + alloc.2 != blocks.len() {
+            bail!("ordering/allocation must cover all blocks");
+        }
+        Ok(RomBank {
+            roms: blocks.iter().map(BlockRom::from_block).collect(),
+            block_len,
+            ordering: ordering.to_vec(),
+            alloc,
+        })
+    }
+
+    /// Re-program the block ordering at runtime (the cross-validation IP's
+    /// "starting orderings ... easily manipulated" port).
+    pub fn set_ordering(&mut self, ordering: &[usize]) -> Result<()> {
+        if ordering.len() != self.roms.len() {
+            bail!("ordering length mismatch");
+        }
+        self.ordering = ordering.to_vec();
+        Ok(())
+    }
+
+    /// Number of rows in a set.
+    pub fn set_len(&self, set: SetId) -> usize {
+        let blocks = match set {
+            SetId::OfflineTrain => self.alloc.0,
+            SetId::Validation => self.alloc.1,
+            SetId::OnlineTrain => self.alloc.2,
+        };
+        blocks * self.block_len
+    }
+
+    fn set_base(&self, set: SetId) -> usize {
+        match set {
+            SetId::OfflineTrain => 0,
+            SetId::Validation => self.alloc.0,
+            SetId::OnlineTrain => self.alloc.0 + self.alloc.1,
+        }
+    }
+
+    /// Resolve a set-relative row to (block ROM index, offset).
+    pub fn resolve(&self, set: SetId, row: usize) -> Result<(usize, usize)> {
+        if row >= self.set_len(set) {
+            bail!("row {row} out of range for {set:?} (len {})", self.set_len(set));
+        }
+        let slot = self.set_base(set) + row / self.block_len;
+        Ok((self.ordering[slot], row % self.block_len))
+    }
+
+    /// Read one set-relative row; returns ((bits, label), cycles).
+    pub fn read(
+        &mut self,
+        set: SetId,
+        row: usize,
+        port: Port,
+    ) -> Result<((Vec<bool>, usize), u64)> {
+        let (rom, offset) = self.resolve(set, row)?;
+        let (data, cyc) = self.roms[rom].read(port, offset)?;
+        Ok((data.clone(), cyc))
+    }
+
+    pub fn rom(&self, i: usize) -> &BlockRom {
+        &self.roms[i]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::blocks::BlockPlan;
+    use crate::data::iris;
+
+    fn bank() -> RomBank {
+        let plan = BlockPlan::stratified(iris::booleanised(), 5, 1).unwrap();
+        let blocks: Vec<BoolDataset> = (0..5).map(|i| plan.block(i).clone()).collect();
+        RomBank::new(&blocks, &[0, 1, 2, 3, 4], (1, 2, 2)).unwrap()
+    }
+
+    #[test]
+    fn set_lengths_match_paper() {
+        let b = bank();
+        assert_eq!(b.set_len(SetId::OfflineTrain), 30);
+        assert_eq!(b.set_len(SetId::Validation), 60);
+        assert_eq!(b.set_len(SetId::OnlineTrain), 60);
+    }
+
+    #[test]
+    fn resolve_respects_ordering() {
+        let mut b = bank();
+        assert_eq!(b.resolve(SetId::OfflineTrain, 0).unwrap(), (0, 0));
+        assert_eq!(b.resolve(SetId::Validation, 0).unwrap(), (1, 0));
+        assert_eq!(b.resolve(SetId::Validation, 30).unwrap(), (2, 0));
+        assert_eq!(b.resolve(SetId::OnlineTrain, 59).unwrap(), (4, 29));
+        b.set_ordering(&[4, 3, 2, 1, 0]).unwrap();
+        assert_eq!(b.resolve(SetId::OfflineTrain, 0).unwrap(), (4, 0));
+        assert_eq!(b.resolve(SetId::OnlineTrain, 0).unwrap(), (1, 0));
+    }
+
+    #[test]
+    fn read_returns_latency_and_counts_ports() {
+        let mut b = bank();
+        let ((bits, label), cyc) = b.read(SetId::OfflineTrain, 3, Port::A).unwrap();
+        assert_eq!(bits.len(), 16);
+        assert!(label < 3);
+        assert_eq!(cyc, ROM_READ_LATENCY);
+        b.read(SetId::OnlineTrain, 0, Port::B).unwrap();
+        assert_eq!(b.rom(0).reads(Port::A), 1);
+        assert_eq!(b.rom(3).reads(Port::B), 1);
+    }
+
+    #[test]
+    fn dual_port_independent_counters() {
+        let mut b = bank();
+        for _ in 0..4 {
+            b.read(SetId::OnlineTrain, 0, Port::A).unwrap();
+        }
+        b.read(SetId::OnlineTrain, 0, Port::B).unwrap();
+        assert_eq!(b.rom(3).reads(Port::A), 4);
+        assert_eq!(b.rom(3).reads(Port::B), 1);
+    }
+
+    #[test]
+    fn out_of_range_rejected() {
+        let mut b = bank();
+        assert!(b.read(SetId::OfflineTrain, 30, Port::A).is_err());
+        assert!(b.resolve(SetId::Validation, 60).is_err());
+    }
+
+    #[test]
+    fn mismatched_construction_rejected() {
+        let plan = BlockPlan::stratified(iris::booleanised(), 5, 1).unwrap();
+        let blocks: Vec<BoolDataset> = (0..5).map(|i| plan.block(i).clone()).collect();
+        assert!(RomBank::new(&blocks, &[0, 1, 2], (1, 2, 2)).is_err());
+        assert!(RomBank::new(&blocks, &[0, 1, 2, 3, 4], (1, 1, 2)).is_err());
+        assert!(RomBank::new(&[], &[], (0, 0, 0)).is_err());
+    }
+}

@@ -1,0 +1,25 @@
+//! # tm-fpga
+//!
+//! Reproduction of *"An FPGA Architecture for Online Learning using the
+//! Tsetlin Machine"* (Prescott, Wheeldon, Shafik, Rahman, Yakovlev &
+//! Granmo, 2023) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! Layers:
+//! - **L3** (this crate): the paper's online-learning management
+//!   architecture — both a cycle-level RTL simulator ([`fpga`]) of the
+//!   FPGA design and a behavioural fast path ([`tm`] + [`coordinator`])
+//!   used for cross-validated experiment sweeps.
+//! - **L2/L1** (`python/compile/`, build time only): the TM inference and
+//!   training step in JAX calling Pallas kernels, AOT-lowered to HLO text
+//!   in `artifacts/` and executed from Rust via [`runtime`] (PJRT CPU).
+//!
+//! See `DESIGN.md` for the system inventory and per-experiment index.
+
+pub mod baseline;
+pub mod cli;
+pub mod coordinator;
+pub mod data;
+pub mod fpga;
+pub mod runtime;
+pub mod testkit;
+pub mod tm;

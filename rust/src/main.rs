@@ -1,0 +1,275 @@
+//! `tmfpga` — launcher for the FPGA online-learning TM reproduction.
+//!
+//! See `tmfpga help` (or [`tm_fpga::cli::USAGE`]) for the command set.
+
+use anyhow::{bail, Result};
+use std::path::PathBuf;
+use tm_fpga::cli::{Cli, USAGE};
+use tm_fpga::coordinator::{
+    self, experiment::Figure, report, SweepConfig, SweepOptions,
+};
+use tm_fpga::data::{blocks::BlockPlan, iris};
+use tm_fpga::fpga::system::{FpgaSystem, SystemConfig};
+use tm_fpga::tm::{MultiTm, StepRands, TmParams, Xoshiro256};
+
+fn main() {
+    let cli = match Cli::parse(std::env::args().skip(1)) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            eprintln!("{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = dispatch(&cli) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(cli: &Cli) -> Result<()> {
+    match cli.command.as_str() {
+        "fig" => cmd_fig(cli),
+        "run" => cmd_run(cli),
+        "perf" => cmd_perf(cli),
+        "power" => cmd_power(),
+        "sweep" => cmd_sweep(cli),
+        "replay" => cmd_replay(cli),
+        "parity" => cmd_parity(cli),
+        "explain" => cmd_explain(cli),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}\n{USAGE}"),
+    }
+}
+
+fn sweep_opts(cli: &Cli) -> Result<SweepOptions> {
+    Ok(SweepOptions {
+        orderings: cli.flag_usize("orderings", 120)?,
+        threads: cli.flag_usize("threads", 0)?,
+        seed: cli.flag_u64("seed", 42)?,
+    })
+}
+
+fn cmd_fig(cli: &Cli) -> Result<()> {
+    let which = cli
+        .positional
+        .first()
+        .map(String::as_str)
+        .unwrap_or("all");
+    let figures: Vec<Figure> = if which == "all" {
+        Figure::all().to_vec()
+    } else {
+        vec![Figure::parse(which)?]
+    };
+    let opts = sweep_opts(cli)?;
+    let out: PathBuf = cli.flag("out").unwrap_or("results").into();
+    for fig in figures {
+        let t0 = std::time::Instant::now();
+        let r = coordinator::run_figure(fig, &opts)?;
+        print!("{}", report::figure_summary(&r));
+        let path = report::write_figure_csv(&r, &out)?;
+        println!("  wrote {}  ({:.1}s)\n", path.display(), t0.elapsed().as_secs_f64());
+    }
+    Ok(())
+}
+
+fn cmd_run(cli: &Cli) -> Result<()> {
+    let mut cfg = SystemConfig::paper();
+    cfg.online_iterations = cli.flag_usize("iterations", 16)?;
+    cfg.online_learning = cli.flag_bool("online-learning", true)?;
+    cfg.seed = cli.flag_u64("seed", 7)?;
+    if let Some(c) = cli.flag("filter") {
+        cfg.initial_filter = Some(c.parse()?);
+    }
+    let ordering = cli
+        .flag_usize_list("ordering")?
+        .unwrap_or_else(|| vec![0, 1, 2, 3, 4]);
+    let plan = BlockPlan::stratified(iris::booleanised(), 5, cfg.seed)?;
+    let blocks: Vec<_> = (0..plan.n_blocks()).map(|i| plan.block(i).clone()).collect();
+    let mut sys = FpgaSystem::new(cfg, &blocks, &ordering)?;
+    let rep = sys.run()?;
+    println!("UART log ({} reports):", rep.uart_log.len());
+    for line in &rep.uart_log {
+        println!("  {line}");
+    }
+    println!("\ntotal cycles      : {}", rep.total_cycles);
+    println!(
+        "handshake stalls  : {} cycles over {} transactions",
+        rep.handshake.stall_cycles, rep.handshake.transactions
+    );
+    println!("dropped datapoints: {}", rep.dropped_datapoints);
+    println!("TM toggle events  : {}", rep.tm_toggles);
+    println!(
+        "power             : {:.3} W total ({:.3} W MCU + {:.3} W fabric)",
+        rep.power.total_w, rep.power.mcu_w, rep.power.fabric_w
+    );
+    Ok(())
+}
+
+fn cmd_perf(cli: &Cli) -> Result<()> {
+    let iters = cli.flag_usize("iters", 20)?;
+    let pjrt_steps = cli.flag_usize("pjrt-steps", 60)?;
+    let mut rows = vec![
+        coordinator::fpga_model_row(),
+        coordinator::native_row(iters),
+        coordinator::baseline_row(iters),
+    ];
+    match coordinator::pjrt_row(pjrt_steps)? {
+        Some(r) => rows.push(r),
+        None => eprintln!("(PJRT row skipped: run `make artifacts` first)"),
+    }
+    if let Some(r) = coordinator::pjrt_epoch_row(20)? {
+        rows.push(r);
+    }
+    print!("{}", coordinator::perf_table(&rows));
+    Ok(())
+}
+
+fn cmd_power() -> Result<()> {
+    let rows = coordinator::power_table()?;
+    print!("{}", coordinator::perf::power_table_text(&rows));
+    println!("\npaper reference: 1.725 W total, 1.4 W microcontroller (§6)");
+    Ok(())
+}
+
+fn cmd_sweep(cli: &Cli) -> Result<()> {
+    let cfg = SweepConfig {
+        orderings: cli.flag_usize("orderings", 12)?,
+        epochs: cli.flag_usize("epochs", 10)?,
+        threads: cli.flag_usize("threads", 0)?,
+        seed: cli.flag_u64("seed", 101)?,
+        ..Default::default()
+    };
+    let t0 = std::time::Instant::now();
+    let points = coordinator::run_sweep(&cfg)?;
+    println!(
+        "{} cells × {} orderings in {:.1}s (the paper's \"entire datasets \
+         in a matter of seconds\")",
+        points.len(),
+        cfg.orderings,
+        t0.elapsed().as_secs_f64()
+    );
+    println!("{:<8} {:<6} {:>10} {:>10}", "s", "T", "val acc", "train acc");
+    for p in points.iter().take(10) {
+        println!(
+            "{:<8} {:<6} {:>9.1}% {:>9.1}%",
+            p.s,
+            p.t,
+            p.val_accuracy * 100.0,
+            p.train_accuracy * 100.0
+        );
+    }
+    if let Some(dir) = cli.flag("out") {
+        let dir = PathBuf::from(dir);
+        std::fs::create_dir_all(&dir)?;
+        let path = dir.join("sweep.csv");
+        std::fs::write(&path, coordinator::sweep_csv(&points))?;
+        println!("wrote {}", path.display());
+    }
+    Ok(())
+}
+
+fn cmd_replay(cli: &Cli) -> Result<()> {
+    let interval = cli.flag_usize("interval", 5)?;
+    let n = cli.flag_usize("orderings", 8)?;
+    let orderings = tm_fpga::data::all_orderings(5);
+    let mut plain = 0.0;
+    let mut replay = 0.0;
+    for (i, ord) in orderings.iter().take(n).enumerate() {
+        let p = coordinator::run_with_replay(ord, 16, None, 40 + i as u64)?;
+        let r = coordinator::run_with_replay(ord, 16, Some(interval), 40 + i as u64)?;
+        plain += coordinator::retention(&p.offline_curve);
+        replay += coordinator::retention(&r.offline_curve);
+    }
+    println!(
+        "offline-set retention over {} orderings:\n  plain  : {:.1}%\n  replay : {:.1}% (1 offline row per {} online rows)",
+        n,
+        plain / n as f64 * 100.0,
+        replay / n as f64 * 100.0,
+        interval
+    );
+    Ok(())
+}
+
+fn cmd_explain(cli: &Cli) -> Result<()> {
+    // Train the paper configuration on one ordering, then dump the clause
+    // compositions and a per-datapoint vote attribution — the TM's
+    // propositional interpretability in action.
+    let shape = tm_fpga::tm::TmShape::iris();
+    let params = TmParams::paper_offline(&shape);
+    let seed = cli.flag_u64("seed", 7)?;
+    let row: usize = cli.flag_usize("row", 0)?;
+    let plan = BlockPlan::stratified(iris::booleanised(), 5, seed)?;
+    let sets = plan.sets(&[0, 1, 2, 3, 4], tm_fpga::data::SetAllocation::paper())?;
+    let train = sets.offline.pack(&shape);
+    let mut tm = MultiTm::new(&shape)?;
+    let mut rng = Xoshiro256::new(seed);
+    let mut rands = StepRands::draw(&mut rng, &shape);
+    for _ in 0..10 {
+        for (x, y) in &train {
+            rands.refill(&mut rng, &shape);
+            tm_fpga::tm::train_step(&mut tm, x, *y, &params, &rands);
+        }
+    }
+    println!("clause compositions (trained on 30 iris rows, 10 epochs):");
+    for d in tm_fpga::tm::explain::describe_machine(&tm, &params) {
+        if !d.is_empty() {
+            println!(
+                "  class {} clause {:>2} [{}]  {}",
+                d.class,
+                d.clause,
+                if d.polarity > 0 { "+" } else { "-" },
+                d.expression()
+            );
+        }
+    }
+    let val = sets.validation.pack(&shape);
+    let (x, y) = &val[row.min(val.len() - 1)];
+    println!("\nattribution for validation row {row} (true class {y}):");
+    print!("{}", tm_fpga::tm::explain::report(&mut tm, x, &params));
+    Ok(())
+}
+
+fn cmd_parity(cli: &Cli) -> Result<()> {
+    let steps = cli.flag_usize("steps", 60)?;
+    let dir = tm_fpga::runtime::default_artifacts_dir();
+    if !dir.join("meta.json").exists() {
+        bail!("artifacts not found in {} — run `make artifacts`", dir.display());
+    }
+    let client = tm_fpga::runtime::Client::cpu()?;
+    let exe = tm_fpga::runtime::TmExecutor::load(&client, &dir)?;
+    let shape = exe.meta.shape.clone();
+    let params = TmParams::paper_offline(&shape);
+    let plan = BlockPlan::stratified(iris::booleanised(), 5, 7)?;
+    let data = plan
+        .sets(&[0, 1, 2, 3, 4], tm_fpga::data::SetAllocation::paper())?
+        .offline
+        .pack(&shape);
+    let mut tm = MultiTm::new(&shape)?;
+    let mut rng = Xoshiro256::new(0xBEEF);
+    let mut checked = 0usize;
+    'outer: loop {
+        for (x, y) in &data {
+            let r = StepRands::draw(&mut rng, &shape);
+            let pjrt = exe.train_step(&tm, x, *y, &params, &r)?;
+            tm_fpga::tm::train_step(&mut tm, x, *y, &params, &r);
+            if tm.ta().states() != &pjrt[..] {
+                bail!("PARITY FAILURE at step {checked}");
+            }
+            checked += 1;
+            if checked >= steps {
+                break 'outer;
+            }
+        }
+    }
+    println!(
+        "parity OK: {checked} training steps bit-identical between the \
+         native rust path and the PJRT-executed Pallas/JAX artifact \
+         (platform: {})",
+        client.platform()
+    );
+    Ok(())
+}

@@ -1,0 +1,119 @@
+//! Marshaling between the crate's native types and XLA literals.
+//!
+//! Layouts follow the cross-layer contract (row-major `[classes, clauses,
+//! literals]`, see `python/compile/model.py::example_args_*`). All
+//! conversions are pure and unit-tested; the executor composes them.
+
+use crate::tm::clause::Input;
+use crate::tm::machine::MultiTm;
+use crate::tm::params::TmParams;
+use crate::tm::rng::StepRands;
+use anyhow::Result;
+
+/// TA states as an `i32[C, J, L]` literal.
+pub fn state_literal(tm: &MultiTm) -> Result<xla::Literal> {
+    let s = tm.shape();
+    let v: Vec<i32> = tm.ta().states().iter().map(|&x| x as i32).collect();
+    Ok(xla::Literal::vec1(&v).reshape(&[
+        s.classes as i64,
+        s.max_clauses as i64,
+        s.literals() as i64,
+    ])?)
+}
+
+/// Read TA states back out of an `i32[C, J, L]` literal.
+pub fn states_from_literal(lit: &xla::Literal) -> Result<Vec<u32>> {
+    Ok(lit.to_vec::<i32>()?.into_iter().map(|x| x as u32).collect())
+}
+
+/// A packed input row as an `f32[L]` literal.
+pub fn input_literal(x: &Input) -> Result<xla::Literal> {
+    let d = x.to_dense();
+    Ok(xla::Literal::vec1(&d).reshape(&[d.len() as i64])?)
+}
+
+/// Fault gate masks as two `f32[C, J, L]` literals (AND, OR).
+pub fn fault_literals(tm: &MultiTm) -> Result<(xla::Literal, xla::Literal)> {
+    let s = tm.shape();
+    let dims = [s.classes as i64, s.max_clauses as i64, s.literals() as i64];
+    let (and_d, or_d) = tm.fault().to_dense();
+    Ok((
+        xla::Literal::vec1(&and_d).reshape(&dims)?,
+        xla::Literal::vec1(&or_d).reshape(&dims)?,
+    ))
+}
+
+/// Clause-number port as an `f32[J]` mask literal.
+pub fn clause_mask_literal(tm: &MultiTm, params: &TmParams) -> Result<xla::Literal> {
+    let s = tm.shape();
+    let m: Vec<f32> = (0..s.max_clauses)
+        .map(|j| if j < params.active_clauses { 1.0 } else { 0.0 })
+        .collect();
+    Ok(xla::Literal::vec1(&m).reshape(&[s.max_clauses as i64])?)
+}
+
+/// Active-class mask as an `f32[C]` literal.
+pub fn class_mask_literal(tm: &MultiTm, params: &TmParams) -> Result<xla::Literal> {
+    let s = tm.shape();
+    let m: Vec<f32> = (0..s.classes)
+        .map(|c| if c < params.active_classes { 1.0 } else { 0.0 })
+        .collect();
+    Ok(xla::Literal::vec1(&m).reshape(&[s.classes as i64])?)
+}
+
+/// Per-class feedback signs as an `f32[C]` literal.
+pub fn sign_literal(signs: &[i8]) -> Result<xla::Literal> {
+    let v: Vec<f32> = signs.iter().map(|&s| s as f32).collect();
+    Ok(xla::Literal::vec1(&v).reshape(&[v.len() as i64])?)
+}
+
+/// Step randomness as (`f32[C, J]`, `f32[C, J, L]`) literals.
+pub fn rand_literals(
+    tm: &MultiTm,
+    rands: &StepRands,
+) -> Result<(xla::Literal, xla::Literal)> {
+    let s = tm.shape();
+    Ok((
+        xla::Literal::vec1(&rands.clause_rand)
+            .reshape(&[s.classes as i64, s.max_clauses as i64])?,
+        xla::Literal::vec1(&rands.ta_rand).reshape(&[
+            s.classes as i64,
+            s.max_clauses as i64,
+            s.literals() as i64,
+        ])?,
+    ))
+}
+
+/// Runtime hyper-parameter vector `[T, p_reinforce, p_weaken]` (f32[3]).
+pub fn scalars_literal(params: &TmParams) -> Result<xla::Literal> {
+    let v = [params.t as f32, params.p_reinforce(), params.p_weaken()];
+    Ok(xla::Literal::vec1(&v).reshape(&[3])?)
+}
+
+/// Scalar T as `f32[]` (the infer/eval artifacts take it alone).
+pub fn t_literal(params: &TmParams) -> xla::Literal {
+    xla::Literal::scalar(params.t as f32)
+}
+
+/// A padded evaluation batch: `xs f32[B, L]`, `labels i32[B]`,
+/// `valid f32[B]`.
+pub fn batch_literals(
+    data: &[(Input, usize)],
+    batch: usize,
+    literals: usize,
+) -> Result<(xla::Literal, xla::Literal, xla::Literal)> {
+    anyhow::ensure!(data.len() <= batch, "batch overflow: {} > {batch}", data.len());
+    let mut xs = vec![0.0f32; batch * literals];
+    let mut labels = vec![0i32; batch];
+    let mut valid = vec![0.0f32; batch];
+    for (i, (x, y)) in data.iter().enumerate() {
+        xs[i * literals..(i + 1) * literals].copy_from_slice(&x.to_dense());
+        labels[i] = *y as i32;
+        valid[i] = 1.0;
+    }
+    Ok((
+        xla::Literal::vec1(&xs).reshape(&[batch as i64, literals as i64])?,
+        xla::Literal::vec1(&labels).reshape(&[batch as i64])?,
+        xla::Literal::vec1(&valid).reshape(&[batch as i64])?,
+    ))
+}

@@ -1,0 +1,68 @@
+//! PJRT client wrapper: loads HLO-text artifacts and compiles them once.
+//!
+//! This is the request-path bridge of the three-layer architecture: python
+//! lowered the L2/L1 graph to `artifacts/*.hlo.txt` at build time; here the
+//! `xla` crate's PJRT CPU client parses the text (the parser reassigns the
+//! 64-bit instruction ids jax ≥ 0.5 emits — the reason text, not serialized
+//! protos, is the interchange format) and compiles one executable per
+//! artifact. After construction, no python is involved.
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// A compiled artifact ready to execute.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    name: String,
+}
+
+impl Executable {
+    /// Execute with literal inputs; returns the flattened output tuple
+    /// (artifacts are lowered with `return_tuple=True`).
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let bufs = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {}", self.name))?;
+        let lit = bufs[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {}", self.name))?;
+        Ok(lit.to_tuple()?)
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+/// PJRT CPU client owning compiled executables.
+pub struct Client {
+    client: xla::PjRtClient,
+}
+
+impl Client {
+    pub fn cpu() -> Result<Self> {
+        Ok(Client { client: xla::PjRtClient::cpu().context("creating PJRT CPU client")? })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one HLO-text artifact.
+    pub fn load_hlo_text(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable {
+            exe,
+            name: path.file_stem().unwrap_or_default().to_string_lossy().into_owned(),
+        })
+    }
+}

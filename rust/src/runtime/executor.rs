@@ -1,0 +1,255 @@
+//! The TM executor: the PJRT-backed twin of the native `tm::MultiTm` path.
+//!
+//! Loads the three AOT artifacts (`tm_infer`, `tm_train`, `tm_eval_batch`)
+//! described by `artifacts/meta.json`, validates the structural-shape
+//! contract against the machine it is asked to run, and exposes typed
+//! inference / training / batched-accuracy calls. Given identical
+//! [`StepRands`] streams, `train_step` produces **bit-identical** TA states
+//! to `tm::feedback::train_step` — asserted by `rust/tests/parity.rs`.
+
+use crate::runtime::bridge;
+use crate::runtime::client::{Client, Executable};
+use crate::runtime::json::Json;
+use crate::tm::clause::Input;
+use crate::tm::feedback::class_signs;
+use crate::tm::machine::MultiTm;
+use crate::tm::params::{TmParams, TmShape};
+use crate::tm::rng::StepRands;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Structural metadata read from `meta.json`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArtifactMeta {
+    pub shape: TmShape,
+    pub batch: usize,
+    /// Scan length of the `tm_train_epoch` artifact (0 when absent —
+    /// older artifact directories).
+    pub epoch_steps: usize,
+}
+
+impl ArtifactMeta {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("meta.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).context("parsing meta.json")?;
+        let s = j.get("shape")?;
+        let shape = TmShape {
+            classes: s.get("classes")?.as_usize()?,
+            max_clauses: s.get("clauses")?.as_usize()?,
+            features: s.get("features")?.as_usize()?,
+            states: s.get("states")?.as_usize()? as u32,
+        };
+        shape.validate()?;
+        let epoch_steps =
+            j.get("epoch_steps").ok().and_then(|v| v.as_usize().ok()).unwrap_or(0);
+        Ok(ArtifactMeta { shape, batch: j.get("batch")?.as_usize()?, epoch_steps })
+    }
+}
+
+/// PJRT-backed TM compute engine.
+pub struct TmExecutor {
+    pub meta: ArtifactMeta,
+    infer: Executable,
+    train: Executable,
+    train_epoch: Option<Executable>,
+    eval: Executable,
+}
+
+/// Default artifacts directory: `$TMFPGA_ARTIFACTS` or `./artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var_os("TMFPGA_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+impl TmExecutor {
+    /// Load and compile all artifacts from `dir`.
+    pub fn load(client: &Client, dir: &Path) -> Result<Self> {
+        let meta = ArtifactMeta::load(dir)?;
+        let infer = client.load_hlo_text(&dir.join("tm_infer.hlo.txt"))?;
+        let train = client.load_hlo_text(&dir.join("tm_train.hlo.txt"))?;
+        let epoch_path = dir.join("tm_train_epoch.hlo.txt");
+        let train_epoch = if meta.epoch_steps > 0 && epoch_path.exists() {
+            Some(client.load_hlo_text(&epoch_path)?)
+        } else {
+            None
+        };
+        let eval = client.load_hlo_text(&dir.join("tm_eval_batch.hlo.txt"))?;
+        Ok(TmExecutor { meta, infer, train, train_epoch, eval })
+    }
+
+    fn check_shape(&self, tm: &MultiTm) -> Result<()> {
+        if tm.shape() != &self.meta.shape {
+            bail!(
+                "machine shape {:?} does not match artifact shape {:?} — re-run `make artifacts`",
+                tm.shape(),
+                self.meta.shape
+            );
+        }
+        Ok(())
+    }
+
+    /// Single-datapoint inference via the AOT graph:
+    /// (clamped class sums over *all* provisioned classes, prediction).
+    pub fn infer(
+        &self,
+        tm: &MultiTm,
+        x: &Input,
+        params: &TmParams,
+    ) -> Result<(Vec<i32>, usize)> {
+        self.check_shape(tm)?;
+        let (and_m, or_m) = bridge::fault_literals(tm)?;
+        let inputs = [
+            bridge::state_literal(tm)?,
+            bridge::input_literal(x)?,
+            and_m,
+            or_m,
+            bridge::clause_mask_literal(tm, params)?,
+            bridge::class_mask_literal(tm, params)?,
+            bridge::t_literal(params),
+        ];
+        let out = self.infer.run(&inputs)?;
+        anyhow::ensure!(out.len() == 2, "tm_infer returns (sums, pred)");
+        let sums = out[0].to_vec::<i32>()?;
+        let pred = out[1].to_vec::<i32>()?[0] as usize;
+        Ok((sums, pred))
+    }
+
+    /// One training step via the AOT graph; returns the new TA states
+    /// (flat, row-major — same layout as `TaBlock::states`).
+    pub fn train_step(
+        &self,
+        tm: &MultiTm,
+        x: &Input,
+        target: usize,
+        params: &TmParams,
+        rands: &StepRands,
+    ) -> Result<Vec<u32>> {
+        self.check_shape(tm)?;
+        let shape = tm.shape();
+        let signs = class_signs(target, rands, shape.classes, params.active_classes);
+        let (and_m, or_m) = bridge::fault_literals(tm)?;
+        let (clause_r, ta_r) = bridge::rand_literals(tm, rands)?;
+        let inputs = [
+            bridge::state_literal(tm)?,
+            bridge::input_literal(x)?,
+            bridge::sign_literal(&signs)?,
+            clause_r,
+            ta_r,
+            and_m,
+            or_m,
+            bridge::clause_mask_literal(tm, params)?,
+            bridge::class_mask_literal(tm, params)?,
+            bridge::scalars_literal(params)?,
+        ];
+        let out = self.train.run(&inputs)?;
+        anyhow::ensure!(out.len() == 1, "tm_train returns (new_state,)");
+        bridge::states_from_literal(&out[0])
+    }
+
+    /// A whole training pass in ONE dispatch via the scan artifact
+    /// (`tm_train_epoch`): `steps[i] = (input, target, rands)`. Passes
+    /// shorter than the artifact's scan length are padded with all-zero
+    /// sign vectors (provable no-op steps). Returns the final TA states.
+    pub fn train_epoch(
+        &self,
+        tm: &MultiTm,
+        steps: &[(Input, usize, StepRands)],
+        params: &TmParams,
+    ) -> Result<Vec<u32>> {
+        self.check_shape(tm)?;
+        let exe = self
+            .train_epoch
+            .as_ref()
+            .context("artifacts lack tm_train_epoch — re-run `make artifacts`")?;
+        let n = self.meta.epoch_steps;
+        anyhow::ensure!(
+            steps.len() <= n,
+            "pass of {} steps exceeds the artifact's scan length {n}",
+            steps.len()
+        );
+        let shape = tm.shape();
+        let (c, j, l) = (shape.classes, shape.max_clauses, shape.literals());
+        let mut xs = vec![0.0f32; n * l];
+        let mut signs = vec![0.0f32; n * c];
+        let mut clause_rands = vec![0.0f32; n * c * j];
+        let mut ta_rands = vec![0.0f32; n * c * j * l];
+        for (i, (x, target, rands)) in steps.iter().enumerate() {
+            xs[i * l..(i + 1) * l].copy_from_slice(&x.to_dense());
+            let s = class_signs(*target, rands, c, params.active_classes);
+            for (k, &sv) in s.iter().enumerate() {
+                signs[i * c + k] = sv as f32;
+            }
+            clause_rands[i * c * j..(i + 1) * c * j].copy_from_slice(&rands.clause_rand);
+            ta_rands[i * c * j * l..(i + 1) * c * j * l].copy_from_slice(&rands.ta_rand);
+        }
+        let (and_m, or_m) = bridge::fault_literals(tm)?;
+        let inputs = [
+            bridge::state_literal(tm)?,
+            xla::Literal::vec1(&xs).reshape(&[n as i64, l as i64])?,
+            xla::Literal::vec1(&signs).reshape(&[n as i64, c as i64])?,
+            xla::Literal::vec1(&clause_rands).reshape(&[n as i64, c as i64, j as i64])?,
+            xla::Literal::vec1(&ta_rands)
+                .reshape(&[n as i64, c as i64, j as i64, l as i64])?,
+            and_m,
+            or_m,
+            bridge::clause_mask_literal(tm, params)?,
+            bridge::class_mask_literal(tm, params)?,
+            bridge::scalars_literal(params)?,
+        ];
+        let out = exe.run(&inputs)?;
+        anyhow::ensure!(out.len() == 1, "tm_train_epoch returns (state,)");
+        bridge::states_from_literal(&out[0])
+    }
+
+    /// Batched accuracy analysis via the AOT graph: (predictions for the
+    /// first `data.len()` rows, correct count).
+    pub fn eval_batch(
+        &self,
+        tm: &MultiTm,
+        data: &[(Input, usize)],
+        params: &TmParams,
+    ) -> Result<(Vec<i32>, usize)> {
+        self.check_shape(tm)?;
+        let shape = tm.shape();
+        let (xs, labels, valid) =
+            bridge::batch_literals(data, self.meta.batch, shape.literals())?;
+        let (and_m, or_m) = bridge::fault_literals(tm)?;
+        let inputs = [
+            bridge::state_literal(tm)?,
+            xs,
+            labels,
+            valid,
+            and_m,
+            or_m,
+            bridge::clause_mask_literal(tm, params)?,
+            bridge::class_mask_literal(tm, params)?,
+            bridge::t_literal(params),
+        ];
+        let out = self.eval.run(&inputs)?;
+        anyhow::ensure!(out.len() == 2, "tm_eval_batch returns (preds, correct)");
+        let preds = out[0].to_vec::<i32>()?[..data.len()].to_vec();
+        let correct = out[1].to_vec::<i32>()?[0] as usize;
+        Ok((preds, correct))
+    }
+
+    /// Accuracy via the batched artifact.
+    pub fn accuracy(
+        &self,
+        tm: &MultiTm,
+        data: &[(Input, usize)],
+        params: &TmParams,
+    ) -> Result<f64> {
+        if data.is_empty() {
+            return Ok(0.0);
+        }
+        // Chunk through the padded batch size.
+        let mut correct = 0usize;
+        for chunk in data.chunks(self.meta.batch) {
+            correct += self.eval_batch(tm, chunk, params)?.1;
+        }
+        Ok(correct as f64 / data.len() as f64)
+    }
+}

@@ -1,0 +1,12 @@
+//! PJRT runtime: loads the AOT artifacts produced by `python/compile/aot.py`
+//! (HLO text) and executes them on the `xla` crate's CPU client. This is
+//! the only place the L3 coordinator touches the L2/L1 graph; python never
+//! runs on the request path.
+
+pub mod bridge;
+pub mod client;
+pub mod executor;
+pub mod json;
+
+pub use client::{Client, Executable};
+pub use executor::{default_artifacts_dir, ArtifactMeta, TmExecutor};

@@ -1,0 +1,98 @@
+//! Minimal property-testing kit (the offline image has no `proptest`).
+//!
+//! Deterministic, seeded case generation with failure reporting that
+//! includes the per-case seed so any failing case can be replayed as a
+//! unit test. Used by module tests across the crate for randomized
+//! invariant checks.
+
+use crate::tm::rng::Xoshiro256;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone, Copy)]
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        PropConfig { cases: 200, seed: 0x70_72_6F_70 } // "prop"
+    }
+}
+
+/// Run `prop` on `cases` generated inputs. `gen` receives a fresh,
+/// per-case-seeded RNG; `prop` returns `Err(msg)` to fail. Panics with
+/// the case index and seed on the first failure.
+pub fn check<T, G, P>(cfg: PropConfig, mut gen: G, mut prop: P)
+where
+    G: FnMut(&mut Xoshiro256) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+    T: std::fmt::Debug,
+{
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed.wrapping_add(case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Xoshiro256::new(case_seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed at case {case} (case_seed={case_seed:#x}):\n  \
+                 input: {input:?}\n  reason: {msg}"
+            );
+        }
+    }
+}
+
+/// Generator helpers.
+pub mod gen {
+    use crate::tm::rng::Xoshiro256;
+
+    pub fn bool_vec(rng: &mut Xoshiro256, len: usize, p_true: f32) -> Vec<bool> {
+        (0..len).map(|_| rng.next_f32() < p_true).collect()
+    }
+
+    pub fn usize_in(rng: &mut Xoshiro256, lo: usize, hi: usize) -> usize {
+        lo + rng.next_below(hi - lo + 1)
+    }
+
+    pub fn f32_in(rng: &mut Xoshiro256, lo: f32, hi: f32) -> f32 {
+        lo + rng.next_f32() * (hi - lo)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_completes() {
+        check(
+            PropConfig { cases: 50, ..Default::default() },
+            |rng| rng.next_below(100),
+            |&x| if x < 100 { Ok(()) } else { Err("impossible".into()) },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        check(
+            PropConfig { cases: 50, ..Default::default() },
+            |rng| rng.next_below(10),
+            |&x| if x < 5 { Ok(()) } else { Err(format!("{x} >= 5")) },
+        );
+    }
+
+    #[test]
+    fn generators_in_range() {
+        let mut rng = crate::tm::rng::Xoshiro256::new(1);
+        for _ in 0..100 {
+            let v = gen::usize_in(&mut rng, 3, 9);
+            assert!((3..=9).contains(&v));
+            let f = gen::f32_in(&mut rng, -1.0, 1.0);
+            assert!((-1.0..1.0).contains(&f));
+        }
+        let bv = gen::bool_vec(&mut rng, 1000, 0.3);
+        let ones = bv.iter().filter(|&&b| b).count();
+        assert!((200..400).contains(&ones), "got {ones}");
+    }
+}

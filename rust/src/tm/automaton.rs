@@ -1,0 +1,251 @@
+//! Tsetlin automata (TA) state storage.
+//!
+//! A TA is a finite reinforcement automaton (§2): states `0..states-1`
+//! produce the *exclude* action, states `states..2*states-1` produce
+//! *include*. Rewards push the automaton deeper into its current action's
+//! half; penalties push it toward (and across) the decision boundary.
+//!
+//! [`TaBlock`] stores one state per (class, clause, literal) in a flat
+//! `Vec<u32>` with the same row-major layout the L2 HLO graph uses for its
+//! `[classes, clauses, literals]` state tensor, so the two paths can be
+//! compared element-for-element.
+
+use crate::tm::params::TmShape;
+use anyhow::{bail, Result};
+
+/// Flat block of TA states for a whole machine.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TaBlock {
+    shape: TmShape,
+    states: Vec<u32>,
+}
+
+/// What a saturating transition did — used by the machine to keep its
+/// packed include-action cache coherent without re-scanning all TAs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Transition {
+    /// State changed but the include/exclude action did not.
+    Moved,
+    /// Action flipped exclude → include.
+    NowInclude,
+    /// Action flipped include → exclude.
+    NowExclude,
+    /// Already saturated; state unchanged.
+    Saturated,
+}
+
+impl TaBlock {
+    /// New block with every TA in the weakest exclude state adjacent to
+    /// the decision boundary (`states - 1`) — the paper's RTL reset value
+    /// and the canonical TM initialisation.
+    pub fn new(shape: &TmShape) -> Self {
+        let n = shape.num_tas();
+        TaBlock { shape: shape.clone(), states: vec![shape.states - 1; n] }
+    }
+
+    /// Construct from raw states (e.g. read back from the PJRT path).
+    pub fn from_states(shape: &TmShape, states: Vec<u32>) -> Result<Self> {
+        if states.len() != shape.num_tas() {
+            bail!(
+                "TaBlock: expected {} states, got {}",
+                shape.num_tas(),
+                states.len()
+            );
+        }
+        if let Some(&bad) = states.iter().find(|&&s| s > shape.max_state()) {
+            bail!("TaBlock: state {} exceeds max {}", bad, shape.max_state());
+        }
+        Ok(TaBlock { shape: shape.clone(), states })
+    }
+
+    pub fn shape(&self) -> &TmShape {
+        &self.shape
+    }
+
+    /// Raw flat view (row-major `[class][clause][literal]`).
+    pub fn states(&self) -> &[u32] {
+        &self.states
+    }
+
+    #[inline]
+    pub fn idx(&self, class: usize, clause: usize, lit: usize) -> usize {
+        debug_assert!(class < self.shape.classes);
+        debug_assert!(clause < self.shape.max_clauses);
+        debug_assert!(lit < self.shape.literals());
+        (class * self.shape.max_clauses + clause) * self.shape.literals() + lit
+    }
+
+    #[inline]
+    pub fn state(&self, class: usize, clause: usize, lit: usize) -> u32 {
+        self.states[self.idx(class, clause, lit)]
+    }
+
+    pub fn set_state(&mut self, class: usize, clause: usize, lit: usize, v: u32) {
+        assert!(v <= self.shape.max_state(), "state {v} out of range");
+        let i = self.idx(class, clause, lit);
+        self.states[i] = v;
+    }
+
+    /// True (fault-free) include action of one TA.
+    #[inline]
+    pub fn action(&self, class: usize, clause: usize, lit: usize) -> bool {
+        self.state(class, clause, lit) >= self.shape.include_threshold()
+    }
+
+    /// Saturating reward/penalty step toward include (`+1`).
+    #[inline]
+    pub fn increment(&mut self, class: usize, clause: usize, lit: usize) -> Transition {
+        let thr = self.shape.include_threshold();
+        let max = self.shape.max_state();
+        let i = self.idx(class, clause, lit);
+        let s = self.states[i];
+        if s == max {
+            return Transition::Saturated;
+        }
+        self.states[i] = s + 1;
+        if s + 1 == thr {
+            Transition::NowInclude
+        } else {
+            Transition::Moved
+        }
+    }
+
+    /// Saturating reward/penalty step toward exclude (`-1`).
+    #[inline]
+    pub fn decrement(&mut self, class: usize, clause: usize, lit: usize) -> Transition {
+        let thr = self.shape.include_threshold();
+        let i = self.idx(class, clause, lit);
+        let s = self.states[i];
+        if s == 0 {
+            return Transition::Saturated;
+        }
+        self.states[i] = s - 1;
+        if s == thr {
+            Transition::NowExclude
+        } else {
+            Transition::Moved
+        }
+    }
+
+    /// Number of TAs currently in the include action (diagnostic; the
+    /// paper's explainability angle — clause composition — reads this).
+    pub fn include_count(&self) -> usize {
+        let thr = self.shape.include_threshold();
+        self.states.iter().filter(|&&s| s >= thr).count()
+    }
+
+    /// Iterate the include bits of one clause row.
+    pub fn clause_includes<'a>(
+        &'a self,
+        class: usize,
+        clause: usize,
+    ) -> impl Iterator<Item = bool> + 'a {
+        let base = self.idx(class, clause, 0);
+        let thr = self.shape.include_threshold();
+        self.states[base..base + self.shape.literals()]
+            .iter()
+            .map(move |&s| s >= thr)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shape() -> TmShape {
+        TmShape::iris()
+    }
+
+    #[test]
+    fn init_all_weak_exclude() {
+        let b = TaBlock::new(&shape());
+        assert_eq!(b.states().len(), 3 * 16 * 32);
+        assert!(b.states().iter().all(|&s| s == 99));
+        assert_eq!(b.include_count(), 0);
+    }
+
+    #[test]
+    fn idx_is_row_major() {
+        let b = TaBlock::new(&shape());
+        assert_eq!(b.idx(0, 0, 0), 0);
+        assert_eq!(b.idx(0, 0, 31), 31);
+        assert_eq!(b.idx(0, 1, 0), 32);
+        assert_eq!(b.idx(1, 0, 0), 16 * 32);
+        assert_eq!(b.idx(2, 15, 31), 3 * 16 * 32 - 1);
+    }
+
+    #[test]
+    fn increment_crosses_boundary_once() {
+        let mut b = TaBlock::new(&shape());
+        // 99 -> 100 crosses into include.
+        assert_eq!(b.increment(0, 0, 0), Transition::NowInclude);
+        assert!(b.action(0, 0, 0));
+        // Further increments just move.
+        assert_eq!(b.increment(0, 0, 0), Transition::Moved);
+        assert_eq!(b.state(0, 0, 0), 101);
+    }
+
+    #[test]
+    fn decrement_crosses_boundary_once() {
+        let mut b = TaBlock::new(&shape());
+        b.set_state(1, 2, 3, 100); // weakest include
+        assert_eq!(b.decrement(1, 2, 3), Transition::NowExclude);
+        assert!(!b.action(1, 2, 3));
+        assert_eq!(b.decrement(1, 2, 3), Transition::Moved);
+        assert_eq!(b.state(1, 2, 3), 98);
+    }
+
+    #[test]
+    fn saturates_at_both_ends() {
+        let mut b = TaBlock::new(&shape());
+        b.set_state(0, 0, 0, 199);
+        assert_eq!(b.increment(0, 0, 0), Transition::Saturated);
+        assert_eq!(b.state(0, 0, 0), 199);
+        b.set_state(0, 0, 0, 0);
+        assert_eq!(b.decrement(0, 0, 0), Transition::Saturated);
+        assert_eq!(b.state(0, 0, 0), 0);
+    }
+
+    #[test]
+    fn from_states_validates() {
+        let s = shape();
+        assert!(TaBlock::from_states(&s, vec![0; 5]).is_err());
+        assert!(TaBlock::from_states(&s, vec![200; s.num_tas()]).is_err());
+        let ok = TaBlock::from_states(&s, vec![150; s.num_tas()]).unwrap();
+        assert_eq!(ok.include_count(), s.num_tas());
+    }
+
+    #[test]
+    fn clause_includes_row() {
+        let mut b = TaBlock::new(&shape());
+        b.set_state(1, 3, 0, 150);
+        b.set_state(1, 3, 31, 199);
+        let inc: Vec<bool> = b.clause_includes(1, 3).collect();
+        assert_eq!(inc.len(), 32);
+        assert!(inc[0] && inc[31]);
+        assert_eq!(inc.iter().filter(|&&x| x).count(), 2);
+    }
+
+    /// Property: a random walk of increments/decrements never leaves the
+    /// legal state range, and action always equals `state >= threshold`.
+    #[test]
+    fn prop_random_walk_invariants() {
+        use crate::tm::rng::Xoshiro256;
+        let s = shape();
+        let mut b = TaBlock::new(&s);
+        let mut rng = Xoshiro256::new(0xFA57);
+        for _ in 0..20_000 {
+            let c = rng.next_below(s.classes);
+            let j = rng.next_below(s.max_clauses);
+            let k = rng.next_below(s.literals());
+            if rng.next_f32() < 0.5 {
+                b.increment(c, j, k);
+            } else {
+                b.decrement(c, j, k);
+            }
+            let st = b.state(c, j, k);
+            assert!(st <= s.max_state());
+            assert_eq!(b.action(c, j, k), st >= s.include_threshold());
+        }
+    }
+}

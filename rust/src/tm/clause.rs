@@ -1,0 +1,203 @@
+//! Bit-parallel clause evaluation.
+//!
+//! A clause is an AND expression over *included* literals (§2). The RTL
+//! evaluates all clauses combinationally in one cycle; the software twin
+//! evaluates each clause over packed `u64` words: a clause fires iff no
+//! included literal is false, i.e. `include & !literals == 0` in every
+//! word.
+//!
+//! Empty-clause convention (canonical TM, Granmo 2018): during **training**
+//! an empty clause (no effective includes) outputs 1 — it can then receive
+//! Type-I feedback and grow includes; during **inference** it outputs 0 so
+//! untrained clauses cannot vote.
+
+use crate::tm::params::TmShape;
+
+/// One booleanised datapoint, bit-packed into literal words.
+///
+/// Literal `k` for `k < features` is input bit `x_k`; literal
+/// `features + k` is its complement `¬x_k`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Input {
+    words: Vec<u64>,
+    literals: usize,
+}
+
+impl Input {
+    /// Pack a feature vector (`bits[k]` = feature k) into literal words.
+    pub fn pack(shape: &TmShape, bits: &[bool]) -> Self {
+        assert_eq!(bits.len(), shape.features, "feature width mismatch");
+        let lits = shape.literals();
+        let mut words = vec![0u64; shape.words()];
+        for k in 0..lits {
+            let value = if k < shape.features { bits[k] } else { !bits[k - shape.features] };
+            if value {
+                words[k / 64] |= 1u64 << (k % 64);
+            }
+        }
+        Input { words, literals: lits }
+    }
+
+    /// Packed literal words.
+    #[inline]
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    /// Value of literal `k`.
+    #[inline]
+    pub fn literal(&self, k: usize) -> bool {
+        debug_assert!(k < self.literals);
+        self.words[k / 64] & (1u64 << (k % 64)) != 0
+    }
+
+    pub fn literals(&self) -> usize {
+        self.literals
+    }
+
+    /// Dense f32 view (for the L2 HLO inputs).
+    pub fn to_dense(&self) -> Vec<f32> {
+        (0..self.literals)
+            .map(|k| if self.literal(k) { 1.0 } else { 0.0 })
+            .collect()
+    }
+}
+
+/// Evaluation mode: the empty-clause convention differs (see module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EvalMode {
+    /// Empty clause outputs 1 (used while computing feedback).
+    Train,
+    /// Empty clause outputs 0 (used for classification votes).
+    Infer,
+}
+
+/// Evaluate one clause from its packed *effective* (post-fault-gate)
+/// include-action words.
+///
+/// Fires iff every included literal is 1; empty clauses follow `mode`.
+#[inline]
+pub fn eval_clause(action_words: &[u64], input: &Input, mode: EvalMode) -> bool {
+    debug_assert_eq!(action_words.len(), input.words.len());
+    let mut any_include = false;
+    for (a, l) in action_words.iter().zip(input.words.iter()) {
+        if a & !l != 0 {
+            return false; // an included literal is 0
+        }
+        any_include |= *a != 0;
+    }
+    any_include || mode == EvalMode::Train
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tm::params::TmShape;
+
+    fn shape() -> TmShape {
+        TmShape::iris()
+    }
+
+    #[test]
+    fn pack_sets_feature_and_complement_bits() {
+        let s = shape();
+        let mut bits = vec![false; 16];
+        bits[0] = true;
+        bits[5] = true;
+        let inp = Input::pack(&s, &bits);
+        assert!(inp.literal(0));
+        assert!(!inp.literal(1));
+        assert!(inp.literal(5));
+        // Complements: literal 16+k == !x_k.
+        assert!(!inp.literal(16));
+        assert!(inp.literal(17));
+        assert!(!inp.literal(21));
+        // Exactly `features` literals are 1 (each feature contributes one).
+        let ones = (0..32).filter(|&k| inp.literal(k)).count();
+        assert_eq!(ones, 16);
+    }
+
+    #[test]
+    fn dense_matches_bits() {
+        let s = shape();
+        let bits: Vec<bool> = (0..16).map(|k| k % 3 == 0).collect();
+        let inp = Input::pack(&s, &bits);
+        let d = inp.to_dense();
+        assert_eq!(d.len(), 32);
+        for (k, &v) in d.iter().enumerate() {
+            assert_eq!(v == 1.0, inp.literal(k));
+        }
+    }
+
+    #[test]
+    fn empty_clause_mode_dependent() {
+        let s = shape();
+        let inp = Input::pack(&s, &vec![true; 16]);
+        let actions = vec![0u64; s.words()];
+        assert!(eval_clause(&actions, &inp, EvalMode::Train));
+        assert!(!eval_clause(&actions, &inp, EvalMode::Infer));
+    }
+
+    #[test]
+    fn clause_fires_iff_all_included_literals_true() {
+        let s = shape();
+        let mut bits = vec![false; 16];
+        bits[2] = true;
+        let inp = Input::pack(&s, &bits);
+        // Include literal 2 (x2 = 1) -> fires.
+        let actions = vec![1u64 << 2];
+        assert!(eval_clause(&actions, &inp, EvalMode::Infer));
+        // Include literal 3 as well (x3 = 0) -> blocked.
+        let actions = vec![(1u64 << 2) | (1u64 << 3)];
+        assert!(!eval_clause(&actions, &inp, EvalMode::Infer));
+        // Include complement of x3 (literal 16+3, value 1) -> fires.
+        let actions = vec![(1u64 << 2) | (1u64 << 19)];
+        assert!(eval_clause(&actions, &inp, EvalMode::Infer));
+    }
+
+    #[test]
+    fn multiword_inputs() {
+        // 40 features -> 80 literals over 2 words.
+        let s = TmShape { classes: 1, max_clauses: 2, features: 40, states: 8 };
+        let mut bits = vec![true; 40];
+        bits[39] = false;
+        let inp = Input::pack(&s, &bits);
+        assert!(!inp.literal(39));
+        assert!(inp.literal(40 + 39)); // complement lives in word 1
+        // Clause including complement literal 79 fires.
+        let mut actions = vec![0u64; 2];
+        actions[1] = 1u64 << (79 - 64);
+        assert!(eval_clause(&actions, &inp, EvalMode::Infer));
+        // Clause including literal 39 (false) does not.
+        let actions = vec![1u64 << 39, 0];
+        assert!(!eval_clause(&actions, &inp, EvalMode::Infer));
+    }
+
+    /// Property: bit-parallel evaluation agrees with a naive per-literal
+    /// loop on random clauses/inputs.
+    #[test]
+    fn prop_matches_naive_eval() {
+        use crate::tm::rng::Xoshiro256;
+        let s = shape();
+        let mut rng = Xoshiro256::new(0xC1A5);
+        for _ in 0..500 {
+            let bits: Vec<bool> = (0..16).map(|_| rng.next_f32() < 0.5).collect();
+            let inp = Input::pack(&s, &bits);
+            let include: Vec<bool> = (0..32).map(|_| rng.next_f32() < 0.2).collect();
+            let mut words = vec![0u64; s.words()];
+            for (k, &inc) in include.iter().enumerate() {
+                if inc {
+                    words[k / 64] |= 1 << (k % 64);
+                }
+            }
+            let naive_any = include.iter().any(|&i| i);
+            let naive_fire =
+                include.iter().enumerate().all(|(k, &inc)| !inc || inp.literal(k));
+            assert_eq!(
+                eval_clause(&words, &inp, EvalMode::Infer),
+                naive_any && naive_fire
+            );
+            assert_eq!(eval_clause(&words, &inp, EvalMode::Train), naive_fire);
+        }
+    }
+}

@@ -1,0 +1,213 @@
+//! Explainability: clause-composition introspection.
+//!
+//! The TM's propositional structure is directly interpretable (the
+//! explainability angle of the paper's own reference line, Shafik et al.
+//! "Explainability and dependability analysis of learning automata based
+//! AI hardware"): each clause is a readable AND expression over named
+//! literals, and a classification decomposes exactly into per-clause
+//! votes. This module renders both.
+
+use crate::tm::clause::{EvalMode, Input};
+use crate::tm::machine::MultiTm;
+use crate::tm::params::{polarity, TmParams};
+
+/// One clause's composition.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ClauseDesc {
+    pub class: usize,
+    pub clause: usize,
+    /// +1 / -1 vote polarity.
+    pub polarity: i32,
+    /// Included plain literals (feature indices).
+    pub positive: Vec<usize>,
+    /// Included complement literals (feature indices of the negated bits).
+    pub negated: Vec<usize>,
+}
+
+impl ClauseDesc {
+    /// Render as a propositional expression, e.g. `x2 ∧ ¬x5 ∧ x7`.
+    pub fn expression(&self) -> String {
+        let mut terms: Vec<(usize, String)> = self
+            .positive
+            .iter()
+            .map(|&f| (f, format!("x{f}")))
+            .chain(self.negated.iter().map(|&f| (f, format!("¬x{f}"))))
+            .collect();
+        terms.sort();
+        if terms.is_empty() {
+            "⊤ (empty)".to_string()
+        } else {
+            terms.into_iter().map(|(_, t)| t).collect::<Vec<_>>().join(" ∧ ")
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.positive.is_empty() && self.negated.is_empty()
+    }
+}
+
+/// Describe one clause from the machine's *effective* (post-fault-gate)
+/// actions — what the hardware actually computes.
+pub fn describe_clause(tm: &MultiTm, class: usize, clause: usize) -> ClauseDesc {
+    let f = tm.shape().features;
+    let mut positive = Vec::new();
+    let mut negated = Vec::new();
+    for k in 0..tm.shape().literals() {
+        if tm.eff_action(class, clause, k) {
+            if k < f {
+                positive.push(k);
+            } else {
+                negated.push(k - f);
+            }
+        }
+    }
+    ClauseDesc { class, clause, polarity: polarity(clause), positive, negated }
+}
+
+/// Describe a whole machine (active clauses only).
+pub fn describe_machine(tm: &MultiTm, params: &TmParams) -> Vec<ClauseDesc> {
+    let mut out = Vec::new();
+    for c in 0..params.active_classes {
+        for j in 0..params.active_clauses {
+            out.push(describe_clause(tm, c, j));
+        }
+    }
+    out
+}
+
+/// Vote attribution for one classification: which clauses fired and how
+/// they compose into each class sum.
+#[derive(Debug, Clone)]
+pub struct Attribution {
+    pub prediction: usize,
+    pub class_sums: Vec<i32>,
+    /// Firing clauses: (class, clause, polarity).
+    pub firing: Vec<(usize, usize, i32)>,
+}
+
+/// Explain one prediction.
+pub fn explain(tm: &mut MultiTm, x: &Input, params: &TmParams) -> Attribution {
+    tm.evaluate(x, params, EvalMode::Infer);
+    let shape = tm.shape().clone();
+    let mut firing = Vec::new();
+    for c in 0..params.active_classes {
+        for j in 0..params.active_clauses {
+            if tm.clause_out[c * shape.max_clauses + j] {
+                firing.push((c, j, polarity(j)));
+            }
+        }
+    }
+    let (class_sums, prediction) = tm.infer(x, params);
+    Attribution { prediction, class_sums, firing }
+}
+
+/// Render an attribution report.
+pub fn report(tm: &mut MultiTm, x: &Input, params: &TmParams) -> String {
+    use std::fmt::Write as _;
+    let att = explain(tm, x, params);
+    let mut s = String::new();
+    let _ = writeln!(s, "prediction: class {} (sums {:?})", att.prediction, att.class_sums);
+    for (c, j, pol) in &att.firing {
+        let d = describe_clause(tm, *c, *j);
+        let _ = writeln!(
+            s,
+            "  class {c} clause {j} [{}] fired: {}",
+            if *pol > 0 { "+" } else { "-" },
+            d.expression()
+        );
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tm::params::{TmParams, TmShape};
+
+    fn setup() -> (MultiTm, TmParams) {
+        let shape = TmShape::iris();
+        let tm = MultiTm::new(&shape).unwrap();
+        let p = TmParams::paper_offline(&shape);
+        (tm, p)
+    }
+
+    #[test]
+    fn empty_clause_renders_top() {
+        let (tm, _) = setup();
+        let d = describe_clause(&tm, 0, 0);
+        assert!(d.is_empty());
+        assert_eq!(d.expression(), "⊤ (empty)");
+        assert_eq!(d.polarity, 1);
+        assert_eq!(describe_clause(&tm, 0, 1).polarity, -1);
+    }
+
+    #[test]
+    fn composition_tracks_included_literals() {
+        let (mut tm, _) = setup();
+        for _ in 0..2 {
+            tm.ta_increment(1, 2, 0); // x0
+            tm.ta_increment(1, 2, 16 + 5); // ¬x5
+        }
+        let d = describe_clause(&tm, 1, 2);
+        assert_eq!(d.positive, vec![0]);
+        assert_eq!(d.negated, vec![5]);
+        assert_eq!(d.expression(), "x0 ∧ ¬x5");
+    }
+
+    #[test]
+    fn faulty_gates_visible_in_description() {
+        let (mut tm, _) = setup();
+        tm.fault_map_mut().set(0, 0, 3, crate::tm::fault::Fault::StuckAt1);
+        let d = describe_clause(&tm, 0, 0);
+        assert_eq!(d.positive, vec![3], "forced include shows up (hardware view)");
+    }
+
+    #[test]
+    fn attribution_sums_match_votes() {
+        let (mut tm, p) = setup();
+        // Two includes: class 0 clause 0 (+) on x0; class 0 clause 1 (-)
+        // on x1.
+        for _ in 0..2 {
+            tm.ta_increment(0, 0, 0);
+            tm.ta_increment(0, 1, 1);
+        }
+        let mut bits = vec![false; 16];
+        bits[0] = true;
+        bits[1] = true;
+        let x = Input::pack(tm.shape(), &bits);
+        let att = explain(&mut tm, &x, &p);
+        let recomputed: i32 = att
+            .firing
+            .iter()
+            .filter(|(c, _, _)| *c == 0)
+            .map(|(_, _, pol)| *pol)
+            .sum();
+        assert_eq!(recomputed, att.class_sums[0]);
+        assert!(att.firing.contains(&(0, 0, 1)));
+        assert!(att.firing.contains(&(0, 1, -1)));
+    }
+
+    #[test]
+    fn report_is_readable() {
+        let (mut tm, p) = setup();
+        for _ in 0..2 {
+            tm.ta_increment(2, 0, 4);
+        }
+        let mut bits = vec![false; 16];
+        bits[4] = true;
+        let x = Input::pack(tm.shape(), &bits);
+        let r = report(&mut tm, &x, &p);
+        assert!(r.contains("prediction: class 2"), "{r}");
+        assert!(r.contains("x4"), "{r}");
+    }
+
+    #[test]
+    fn describe_machine_covers_active_slice() {
+        let (tm, mut p) = setup();
+        p.active_classes = 2;
+        p.active_clauses = 4;
+        let all = describe_machine(&tm, &p);
+        assert_eq!(all.len(), 8);
+        assert!(all.iter().all(|d| d.class < 2 && d.clause < 4));
+    }
+}

@@ -1,0 +1,357 @@
+//! Stuck-at fault injection on TA action outputs (paper §3.1.2).
+//!
+//! The RTL adds an AND and an OR gate to every TA's action output:
+//!
+//! ```text
+//! effective_action = (action AND and_bit) OR or_bit
+//! ```
+//!
+//! `and_bit = 1, or_bit = 0` is fault-free; `and_bit = 0` forces stuck-at-0
+//! and `or_bit = 1` forces stuck-at-1. A fault-controller module holds the
+//! two mappings, individually addressable per TA, writable at run time
+//! (from the microcontroller over AXI in the RTL model) so fault
+//! configurations need no re-synthesis.
+//!
+//! [`FaultMap`] is the packed (one bit per TA, `u64` words per clause row)
+//! software twin of those gate mappings. The identical masks are also fed
+//! to the L2 HLO graph as tensors, so the lowered artifact reproduces the
+//! gate-level behaviour — see `python/compile/model.py`.
+
+use crate::tm::params::TmShape;
+use crate::tm::rng::Xoshiro256;
+use anyhow::{bail, Result};
+
+/// Kind of stuck-at fault on one TA output.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fault {
+    /// Fault-free: AND mask 1, OR mask 0.
+    None,
+    /// Output forced to 0 (AND mask 0).
+    StuckAt0,
+    /// Output forced to 1 (OR mask 1).
+    StuckAt1,
+}
+
+/// Per-TA AND/OR gate mappings, bit-packed per clause row.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FaultMap {
+    shape: TmShape,
+    /// `and_words[row * words + w]`; row = class * max_clauses + clause.
+    and_words: Vec<u64>,
+    /// Same layout as `and_words`.
+    or_words: Vec<u64>,
+    /// Number of faulty TAs — kept exact by [`FaultMap::set`] so the hot
+    /// path can branch on `is_fault_free()` in O(1).
+    faulty: usize,
+}
+
+impl FaultMap {
+    /// Fault-free map: all AND bits 1 (within the literal width), OR bits 0.
+    pub fn none(shape: &TmShape) -> Self {
+        let rows = shape.classes * shape.max_clauses;
+        let words = shape.words();
+        let mut and_words = vec![0u64; rows * words];
+        for row in 0..rows {
+            for w in 0..words {
+                and_words[row * words + w] = Self::width_mask(shape, w);
+            }
+        }
+        FaultMap { shape: shape.clone(), and_words, or_words: vec![0u64; rows * words], faulty: 0 }
+    }
+
+    /// Bits of word `w` that correspond to real literals (the rest stay 0
+    /// so padding never leaks into clause evaluation).
+    fn width_mask(shape: &TmShape, w: usize) -> u64 {
+        let lits = shape.literals();
+        let lo = w * 64;
+        if lo + 64 <= lits {
+            u64::MAX
+        } else if lo >= lits {
+            0
+        } else {
+            (1u64 << (lits - lo)) - 1
+        }
+    }
+
+    #[inline]
+    fn row(&self, class: usize, clause: usize) -> usize {
+        debug_assert!(class < self.shape.classes && clause < self.shape.max_clauses);
+        class * self.shape.max_clauses + clause
+    }
+
+    /// Gate mappings (AND word, OR word) for one clause row / word index.
+    #[inline]
+    pub fn masks(&self, class: usize, clause: usize, word: usize) -> (u64, u64) {
+        let i = self.row(class, clause) * self.shape.words() + word;
+        (self.and_words[i], self.or_words[i])
+    }
+
+    /// Apply the gates to a packed action word:
+    /// `(action & and_mask) | or_mask`.
+    #[inline]
+    pub fn apply(&self, class: usize, clause: usize, word: usize, action: u64) -> u64 {
+        let (a, o) = self.masks(class, clause, word);
+        (action & a) | o
+    }
+
+    /// Program one TA's fault gates (the fault controller's addressable
+    /// write port).
+    pub fn set(&mut self, class: usize, clause: usize, lit: usize, fault: Fault) {
+        assert!(lit < self.shape.literals(), "literal {lit} out of range");
+        let was_faulty = self.get(class, clause, lit) != Fault::None;
+        let now_faulty = fault != Fault::None;
+        match (was_faulty, now_faulty) {
+            (false, true) => self.faulty += 1,
+            (true, false) => self.faulty -= 1,
+            _ => {}
+        }
+        let i = self.row(class, clause) * self.shape.words() + lit / 64;
+        let bit = 1u64 << (lit % 64);
+        match fault {
+            Fault::None => {
+                self.and_words[i] |= bit;
+                self.or_words[i] &= !bit;
+            }
+            Fault::StuckAt0 => {
+                self.and_words[i] &= !bit;
+                self.or_words[i] &= !bit;
+            }
+            Fault::StuckAt1 => {
+                self.and_words[i] |= bit;
+                self.or_words[i] |= bit;
+            }
+        }
+    }
+
+    /// Read one TA's programmed fault.
+    pub fn get(&self, class: usize, clause: usize, lit: usize) -> Fault {
+        let i = self.row(class, clause) * self.shape.words() + lit / 64;
+        let bit = 1u64 << (lit % 64);
+        let and = self.and_words[i] & bit != 0;
+        let or = self.or_words[i] & bit != 0;
+        match (and, or) {
+            (true, false) => Fault::None,
+            (false, _) => Fault::StuckAt0,
+            (true, true) => Fault::StuckAt1,
+        }
+    }
+
+    /// Number of faulty TAs (O(1) — maintained by [`FaultMap::set`]).
+    pub fn count(&self) -> usize {
+        self.faulty
+    }
+
+    /// Recount from the gate words (test/debug cross-check of the
+    /// maintained counter).
+    pub fn recount(&self) -> usize {
+        let mut n = 0;
+        for c in 0..self.shape.classes {
+            for j in 0..self.shape.max_clauses {
+                for k in 0..self.shape.literals() {
+                    if self.get(c, j, k) != Fault::None {
+                        n += 1;
+                    }
+                }
+            }
+        }
+        n
+    }
+
+    /// O(1) — the hot path branches on this to skip gate application.
+    pub fn is_fault_free(&self) -> bool {
+        self.faulty == 0
+    }
+
+    /// The paper's §5.3.1 fault pattern: an **equal spread** of stuck-at
+    /// faults across `fraction` of all TAs ("a Python script was created
+    /// and used to create an equal spread of fault mappings across the
+    /// TAs"). We pick `round(fraction * num_tas)` distinct TAs via a
+    /// seeded shuffle — even in expectation across classes/clauses/
+    /// literals — and program each with `fault`.
+    pub fn even_spread(shape: &TmShape, fraction: f64, fault: Fault, seed: u64) -> Result<Self> {
+        if !(0.0..=1.0).contains(&fraction) {
+            bail!("fault fraction must be in [0,1], got {fraction}");
+        }
+        let mut map = Self::none(shape);
+        let n = shape.num_tas();
+        let k = (fraction * n as f64).round() as usize;
+        let mut idx: Vec<usize> = (0..n).collect();
+        let mut rng = Xoshiro256::new(seed);
+        rng.shuffle(&mut idx);
+        let lits = shape.literals();
+        for &flat in idx.iter().take(k) {
+            let lit = flat % lits;
+            let clause = (flat / lits) % shape.max_clauses;
+            let class = flat / (lits * shape.max_clauses);
+            map.set(class, clause, lit, fault);
+        }
+        Ok(map)
+    }
+
+    /// Dense boolean views for the L2 HLO inputs (`[classes, clauses,
+    /// literals]`, row-major, 1.0 = gate bit set).
+    pub fn to_dense(&self) -> (Vec<f32>, Vec<f32>) {
+        let mut and_d = Vec::with_capacity(self.shape.num_tas());
+        let mut or_d = Vec::with_capacity(self.shape.num_tas());
+        for c in 0..self.shape.classes {
+            for j in 0..self.shape.max_clauses {
+                for k in 0..self.shape.literals() {
+                    let i = self.row(c, j) * self.shape.words() + k / 64;
+                    let bit = 1u64 << (k % 64);
+                    and_d.push(if self.and_words[i] & bit != 0 { 1.0 } else { 0.0 });
+                    or_d.push(if self.or_words[i] & bit != 0 { 1.0 } else { 0.0 });
+                }
+            }
+        }
+        (and_d, or_d)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shape() -> TmShape {
+        TmShape::iris()
+    }
+
+    #[test]
+    fn fault_free_is_identity() {
+        let m = FaultMap::none(&shape());
+        assert!(m.is_fault_free());
+        let action = 0xDEAD_BEEFu64 & 0xFFFF_FFFF; // 32 literals
+        assert_eq!(m.apply(0, 0, 0, action), action);
+    }
+
+    #[test]
+    fn stuck_at_0_forces_zero() {
+        let mut m = FaultMap::none(&shape());
+        m.set(1, 2, 5, Fault::StuckAt0);
+        assert_eq!(m.get(1, 2, 5), Fault::StuckAt0);
+        let all_on = (1u64 << 32) - 1;
+        let out = m.apply(1, 2, 0, all_on);
+        assert_eq!(out & (1 << 5), 0);
+        assert_eq!(out | (1 << 5), all_on);
+        // Other rows untouched.
+        assert_eq!(m.apply(1, 3, 0, all_on), all_on);
+    }
+
+    #[test]
+    fn stuck_at_1_forces_one() {
+        let mut m = FaultMap::none(&shape());
+        m.set(0, 0, 31, Fault::StuckAt1);
+        assert_eq!(m.get(0, 0, 31), Fault::StuckAt1);
+        let out = m.apply(0, 0, 0, 0);
+        assert_eq!(out, 1 << 31);
+    }
+
+    #[test]
+    fn clearing_restores_fault_free() {
+        let mut m = FaultMap::none(&shape());
+        m.set(2, 7, 0, Fault::StuckAt1);
+        m.set(2, 7, 1, Fault::StuckAt0);
+        assert_eq!(m.count(), 2);
+        m.set(2, 7, 0, Fault::None);
+        m.set(2, 7, 1, Fault::None);
+        assert!(m.is_fault_free());
+    }
+
+    #[test]
+    fn counter_matches_recount() {
+        let s = shape();
+        let mut m = FaultMap::none(&s);
+        assert_eq!(m.count(), m.recount());
+        m.set(0, 0, 0, Fault::StuckAt0);
+        m.set(0, 0, 0, Fault::StuckAt0); // idempotent re-set
+        m.set(1, 2, 3, Fault::StuckAt1);
+        m.set(1, 2, 3, Fault::StuckAt0); // swap kind, still one fault
+        assert_eq!(m.count(), 2);
+        assert_eq!(m.count(), m.recount());
+        m.set(0, 0, 0, Fault::None);
+        assert_eq!(m.count(), 1);
+        assert_eq!(m.count(), m.recount());
+    }
+
+    #[test]
+    fn even_spread_hits_requested_fraction() {
+        let s = shape();
+        let m = FaultMap::even_spread(&s, 0.20, Fault::StuckAt0, 42).unwrap();
+        let expect = (0.20 * s.num_tas() as f64).round() as usize;
+        assert_eq!(m.count(), expect);
+        assert_eq!(m.count(), m.recount());
+        // All injected faults are the requested kind.
+        for c in 0..s.classes {
+            for j in 0..s.max_clauses {
+                for k in 0..s.literals() {
+                    assert_ne!(m.get(c, j, k), Fault::StuckAt1);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn even_spread_is_spread_across_classes() {
+        let s = shape();
+        let m = FaultMap::even_spread(&s, 0.20, Fault::StuckAt0, 7).unwrap();
+        // With 307 faults over 3 classes, each class should hold a
+        // non-trivial share (loose bound: > 1/6 of total each).
+        for c in 0..s.classes {
+            let mut n = 0;
+            for j in 0..s.max_clauses {
+                for k in 0..s.literals() {
+                    if m.get(c, j, k) != Fault::None {
+                        n += 1;
+                    }
+                }
+            }
+            assert!(n > m.count() / 6, "class {c} got only {n} faults");
+        }
+    }
+
+    #[test]
+    fn even_spread_rejects_bad_fraction() {
+        assert!(FaultMap::even_spread(&shape(), 1.5, Fault::StuckAt0, 0).is_err());
+        assert!(FaultMap::even_spread(&shape(), -0.1, Fault::StuckAt0, 0).is_err());
+    }
+
+    #[test]
+    fn even_spread_deterministic_per_seed() {
+        let s = shape();
+        let a = FaultMap::even_spread(&s, 0.1, Fault::StuckAt1, 5).unwrap();
+        let b = FaultMap::even_spread(&s, 0.1, Fault::StuckAt1, 5).unwrap();
+        let c = FaultMap::even_spread(&s, 0.1, Fault::StuckAt1, 6).unwrap();
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn dense_view_roundtrips() {
+        let s = shape();
+        let mut m = FaultMap::none(&s);
+        m.set(0, 1, 2, Fault::StuckAt0);
+        m.set(2, 15, 31, Fault::StuckAt1);
+        let (and_d, or_d) = m.to_dense();
+        assert_eq!(and_d.len(), s.num_tas());
+        let at = |c: usize, j: usize, k: usize| (c * 16 + j) * 32 + k;
+        assert_eq!(and_d[at(0, 1, 2)], 0.0);
+        assert_eq!(or_d[at(0, 1, 2)], 0.0);
+        assert_eq!(and_d[at(2, 15, 31)], 1.0);
+        assert_eq!(or_d[at(2, 15, 31)], 1.0);
+        assert_eq!(and_d[at(1, 0, 0)], 1.0);
+    }
+
+    #[test]
+    fn width_mask_handles_padding() {
+        // 40 features -> 80 literals -> 2 words, second word half-used.
+        let s = TmShape { classes: 1, max_clauses: 2, features: 40, states: 8 };
+        let m = FaultMap::none(&s);
+        let (a0, _) = m.masks(0, 0, 0);
+        let (a1, _) = m.masks(0, 0, 1);
+        assert_eq!(a0, u64::MAX);
+        assert_eq!(a1, (1u64 << 16) - 1);
+        // Faulty stuck-at-1 never escapes literal width either.
+        let mut m = FaultMap::none(&s);
+        m.set(0, 0, 79, Fault::StuckAt1);
+        assert_eq!(m.apply(0, 0, 1, 0) >> 16, 0);
+    }
+}

@@ -1,0 +1,472 @@
+//! Type I / Type II feedback — the TM learning rule (§2), canonical
+//! semantics (Granmo 2018), shared verbatim with the L2 HLO graph.
+//!
+//! # Cross-layer contract
+//!
+//! Given a datapoint `(x, y)`, run-time params `(s, T, active_clauses,
+//! active_classes)` and a [`StepRands`] record, a training step is:
+//!
+//! 1. Evaluate all clauses in **train** mode (empty clause ⇒ 1), with
+//!    fault gates applied; per-class sums clamped to `[-T, T]`.
+//! 2. Class signs: target class `y` gets `+1`; one uniformly drawn other
+//!    active class gets `-1` (from `StepRands::neg_class`); others `0`.
+//! 3. For every active clause `j` of a signed class `c`:
+//!    - selection probability `p = (T - sign·v_c) / 2T`;
+//!      the clause receives feedback iff `clause_rand[c,j] < p`.
+//!    - feedback type: `sign · polarity(j)`: `+1` ⇒ Type I, `-1` ⇒ Type II.
+//! 4. **Type I** on clause `c,j` (output `o`, literal `l_k`, per-TA draw
+//!    `r_k = ta_rand[c,j,k]`):
+//!    - `o = 1 ∧ l_k = 1`: increment iff `r_k < (s-1)/s` (or always with
+//!      boost_true_positive);
+//!    - `o = 1 ∧ l_k = 0`: decrement iff `r_k < 1/s`;
+//!    - `o = 0`:           decrement iff `r_k < 1/s`.
+//! 5. **Type II** on clause `c,j`: only if `o = 1`; for every literal with
+//!    `l_k = 0` whose *effective* (post-fault-gate) action is exclude:
+//!    increment (deterministic).
+//!
+//! All comparisons are strict `<` on `f32`. Increments/decrements saturate.
+//! The effective action in step 5 is the RTL view: the feedback logic taps
+//! the gated TA output signal, not the state register.
+//!
+//! Note on the paper's §5.1 remark that low `s` biases toward inaction:
+//! under canonical semantics `s = 1` zeroes the *reinforcement*
+//! probability `(s-1)/s` (those events become inaction) while weakening
+//! events fire at `1/s = 1`; online learning at `s = 1` is therefore
+//! driven by Type-II discrimination plus Type-I forgetting, which is what
+//! our Fig-4 reproduction exercises.
+
+use crate::tm::clause::{EvalMode, Input};
+use crate::tm::machine::MultiTm;
+use crate::tm::params::{polarity, TmParams};
+use crate::tm::rng::StepRands;
+
+/// Per-class feedback signs for one step: `+1` target, `-1` contrast
+/// (negative) class, `0` untouched. Length = `classes` (inactive classes
+/// always 0).
+pub fn class_signs(
+    target: usize,
+    rands: &StepRands,
+    classes: usize,
+    active_classes: usize,
+) -> Vec<i8> {
+    let mut signs = vec![0i8; classes];
+    if target < active_classes {
+        signs[target] = 1;
+        if let Some(neg) = rands.neg_class(target, active_classes) {
+            signs[neg] = -1;
+        }
+    }
+    signs
+}
+
+/// Activity counters from one training step — consumed by the FPGA power
+/// model (switching activity) and by tests.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StepActivity {
+    /// Clauses that received Type I feedback.
+    pub type1_clauses: u32,
+    /// Clauses that received Type II feedback.
+    pub type2_clauses: u32,
+    /// TA state increments actually applied (not saturated away).
+    pub ta_increments: u32,
+    /// TA state decrements actually applied.
+    pub ta_decrements: u32,
+}
+
+impl StepActivity {
+    pub fn total_updates(&self) -> u32 {
+        self.ta_increments + self.ta_decrements
+    }
+}
+
+/// One online/offline training step on a single labelled datapoint.
+pub fn train_step(
+    tm: &mut MultiTm,
+    input: &Input,
+    target: usize,
+    params: &TmParams,
+    rands: &StepRands,
+) -> StepActivity {
+    let shape = tm.shape().clone();
+    // A label outside the active classes (e.g. data for a not-yet-enabled
+    // over-provisioned class, §3.1.1) receives no feedback at all:
+    // class_signs() yields all-zero signs for it.
+
+    // (1) Evaluate in train mode; clause_out + clamped sums land in scratch.
+    tm.evaluate(input, params, EvalMode::Train);
+
+    // (2) Signs.
+    let signs = class_signs(target, rands, shape.classes, params.active_classes);
+
+    let two_t = (2 * params.t) as f32;
+    let p_reinforce = params.p_reinforce();
+    let p_weaken = params.p_weaken();
+    let mut act = StepActivity::default();
+
+    for c in 0..params.active_classes {
+        let sign = signs[c];
+        if sign == 0 {
+            continue;
+        }
+        let v = tm.sums[c] as f32;
+        // (3) Selection probability for this class.
+        let p_sel = (params.t as f32 - sign as f32 * v) / two_t;
+        for j in 0..params.active_clauses {
+            if !(rands.clause(&shape, c, j) < p_sel) {
+                continue;
+            }
+            let out = tm.clause_out[c * shape.max_clauses + j];
+            if sign as i32 * polarity(j) == 1 {
+                // (4) Type I.
+                act.type1_clauses += 1;
+                if out {
+                    for k in 0..shape.literals() {
+                        let r = rands.ta(&shape, c, j, k);
+                        if input.literal(k) {
+                            if r < p_reinforce {
+                                let before = tm.ta().state(c, j, k);
+                                tm.ta_increment(c, j, k);
+                                if tm.ta().state(c, j, k) != before {
+                                    act.ta_increments += 1;
+                                }
+                            }
+                        } else if r < p_weaken {
+                            let before = tm.ta().state(c, j, k);
+                            tm.ta_decrement(c, j, k);
+                            if tm.ta().state(c, j, k) != before {
+                                act.ta_decrements += 1;
+                            }
+                        }
+                    }
+                } else {
+                    // out = 0: every TA weakens w.p. p_weaken — no
+                    // per-literal test needed (hot-path early-out; same
+                    // semantics as the fused branch above).
+                    for k in 0..shape.literals() {
+                        if rands.ta(&shape, c, j, k) < p_weaken {
+                            let before = tm.ta().state(c, j, k);
+                            tm.ta_decrement(c, j, k);
+                            if tm.ta().state(c, j, k) != before {
+                                act.ta_decrements += 1;
+                            }
+                        }
+                    }
+                }
+            } else {
+                // (5) Type II.
+                if out {
+                    act.type2_clauses += 1;
+                    for k in 0..shape.literals() {
+                        if !input.literal(k) && !tm.eff_action(c, j, k) {
+                            let before = tm.ta().state(c, j, k);
+                            tm.ta_increment(c, j, k);
+                            if tm.ta().state(c, j, k) != before {
+                                act.ta_increments += 1;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    act
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tm::params::{TmParams, TmShape};
+    use crate::tm::rng::{StepRands, Xoshiro256};
+
+    fn shape() -> TmShape {
+        TmShape::iris()
+    }
+
+    fn mk_input(on: &[usize]) -> Input {
+        let mut bits = vec![false; 16];
+        for &k in on {
+            bits[k] = true;
+        }
+        Input::pack(&shape(), &bits)
+    }
+
+    /// Rands forced so every clause is selected and every TA draw is 0
+    /// (all sub-threshold events fire).
+    fn all_fire_rands(shape: &TmShape) -> StepRands {
+        StepRands {
+            clause_rand: vec![-1.0; shape.classes * shape.max_clauses],
+            ta_rand: vec![-1.0; shape.classes * shape.max_clauses * shape.literals()],
+            neg_class_draw: 0,
+        }
+    }
+
+    /// Rands forced so no clause is ever selected.
+    fn none_fire_rands(shape: &TmShape) -> StepRands {
+        StepRands {
+            clause_rand: vec![2.0; shape.classes * shape.max_clauses],
+            ta_rand: vec![2.0; shape.classes * shape.max_clauses * shape.literals()],
+            neg_class_draw: 0,
+        }
+    }
+
+    #[test]
+    fn class_signs_target_and_contrast() {
+        let s = shape();
+        let mut rng = Xoshiro256::new(8);
+        let r = StepRands::draw(&mut rng, &s);
+        let signs = class_signs(1, &r, 3, 3);
+        assert_eq!(signs[1], 1);
+        assert_eq!(signs.iter().filter(|&&x| x == -1).count(), 1);
+        assert_eq!(signs.iter().map(|&x| x as i32).sum::<i32>(), 0);
+        // Only one active class: no contrast.
+        let signs = class_signs(0, &r, 3, 1);
+        assert_eq!(signs, vec![1, 0, 0]);
+        // Target outside active classes: no feedback at all.
+        let signs = class_signs(2, &r, 3, 2);
+        assert_eq!(signs, vec![0, 0, 0]);
+    }
+
+    #[test]
+    fn no_selection_means_no_change() {
+        let s = shape();
+        let mut tm = MultiTm::new(&s).unwrap();
+        let p = TmParams::paper_offline(&s);
+        let before = tm.ta().states().to_vec();
+        let act = train_step(&mut tm, &mk_input(&[0, 3]), 0, &p, &none_fire_rands(&s));
+        assert_eq!(act, StepActivity::default());
+        assert_eq!(tm.ta().states(), &before[..]);
+    }
+
+    #[test]
+    fn type_i_on_fresh_machine_decrements_zero_literals() {
+        // Fresh machine: all clauses empty -> output 1 in train mode.
+        // Type I with all draws firing: literals with value 1 get +1
+        // (reinforce, prob (s-1)/s>0 fires since draw < p), literals with
+        // value 0 get -1.
+        let s = shape();
+        let mut tm = MultiTm::new(&s).unwrap();
+        let mut p = TmParams::paper_offline(&s); // s=1.375
+        p.active_classes = 3;
+        let x = mk_input(&[0]); // literal0=1, literals 1..15 =0, compl of 0 =0, compl 1..15 =1
+        let r = all_fire_rands(&s);
+        train_step(&mut tm, &x, 0, &p, &r);
+        // Target class 0, positive clauses (even j) got Type I.
+        let init = s.states - 1;
+        // literal 0 (value 1): incremented.
+        assert_eq!(tm.ta().state(0, 0, 0), init + 1);
+        // literal 1 (value 0): decremented.
+        assert_eq!(tm.ta().state(0, 0, 1), init - 1);
+        // complement of x0 (literal 16, value 0): decremented.
+        assert_eq!(tm.ta().state(0, 0, 16), init - 1);
+        // complement of x1 (literal 17, value 1): incremented.
+        assert_eq!(tm.ta().state(0, 0, 17), init + 1);
+    }
+
+    #[test]
+    fn type_ii_pushes_zero_literals_toward_include() {
+        // Negative-class clauses with positive polarity receive Type II.
+        // Fresh machine: clause output 1 (train mode), all excluded, so
+        // every 0-valued literal gets +1.
+        let s = shape();
+        let mut tm = MultiTm::new(&s).unwrap();
+        let p = TmParams::paper_offline(&s);
+        let x = mk_input(&[0]);
+        let r = all_fire_rands(&s); // neg_class_draw=0 -> contrast class deterministic
+        let signs = class_signs(0, &r, 3, 3);
+        let neg = signs.iter().position(|&x| x == -1).unwrap();
+        train_step(&mut tm, &x, 0, &p, &r);
+        let init = s.states - 1;
+        // Positive clause (j=0) of neg class: Type II.
+        // literal 0 (value 1): untouched.
+        assert_eq!(tm.ta().state(neg, 0, 0), init);
+        // literal 1 (value 0): +1 (crosses into include at 100).
+        assert_eq!(tm.ta().state(neg, 0, 1), init + 1);
+        assert!(tm.ta().action(neg, 0, 1));
+        // Negative clause (j=1) of neg class gets Type I instead:
+        // literal 1 (value 0) decremented.
+        assert_eq!(tm.ta().state(neg, 1, 1), init - 1);
+    }
+
+    #[test]
+    fn type_ii_respects_effective_action_under_fault() {
+        // A stuck-at-1 TA reads as include to the feedback logic, so
+        // Type II must NOT increment it even though its true state is
+        // exclude.
+        let s = shape();
+        let mut tm = MultiTm::new(&s).unwrap();
+        let p = TmParams::paper_offline(&s);
+        let x = mk_input(&[0]);
+        let r = all_fire_rands(&s);
+        let neg = class_signs(0, &r, 3, 3).iter().position(|&v| v == -1).unwrap();
+        // literal 2 of clause (neg, 0): value 0. Forcing stuck-at-1 makes
+        // the clause output 0 though (forced include of a 0-literal), so
+        // use literal whose forcing keeps output 1: complement literal 17
+        // (value 1) — then check literal 1 (value 0) still gets Type II
+        // while the forced literal does not alter anything.
+        tm.fault_map_mut().set(neg, 0, 1, crate::tm::fault::Fault::StuckAt1);
+        // Forced include of literal 1 (value 0) kills the clause output;
+        // Type II then does nothing at all.
+        let before = tm.ta().states().to_vec();
+        train_step(&mut tm, &x, 0, &p, &r);
+        // Clause (neg,0) output was 0 -> no Type II increments there.
+        for k in 0..s.literals() {
+            assert_eq!(
+                tm.ta().state(neg, 0, k),
+                before[tm.ta().idx(neg, 0, k)],
+                "literal {k} must be untouched"
+            );
+        }
+    }
+
+    #[test]
+    fn s_equals_one_never_reinforces() {
+        let s = shape();
+        let mut tm = MultiTm::new(&s).unwrap();
+        let p = TmParams::paper_online(&s); // s = 1
+        let x = mk_input(&[0, 1, 2]);
+        let r = all_fire_rands(&s);
+        let act = train_step(&mut tm, &x, 0, &p, &r);
+        // (s-1)/s = 0 and draws are -1 < 0 == false … strict `<` on 0
+        // requires draw < 0, and our forced draws are -1, so reinforcement
+        // WOULD fire with forced negative draws. Use draw = 0 to pin the
+        // boundary semantics instead.
+        let r0 = StepRands {
+            clause_rand: vec![-1.0; s.classes * s.max_clauses],
+            ta_rand: vec![0.0; s.classes * s.max_clauses * s.literals()],
+            neg_class_draw: 0,
+        };
+        // Canonical style: with draw = 0, reinforce needs 0 < 0 -> never;
+        // weaken needs 0 < 1 -> always.
+        let mut p_canon = p.clone();
+        p_canon.s_style = crate::tm::params::SStyle::Canonical;
+        let mut tm2 = MultiTm::new(&s).unwrap();
+        let act2 = train_step(&mut tm2, &x, 0, &p_canon, &r0);
+        let init = s.states - 1;
+        assert_eq!(tm2.ta().state(0, 0, 0), init, "lit=1: no reinforcement at s=1");
+        assert_eq!(tm2.ta().state(0, 0, 3), init - 1, "lit=0: weakened (canonical)");
+        assert!(act2.ta_increments > 0, "Type II still increments");
+        // Inaction-biased style (the paper reading): s = 1 leaves Type I
+        // fully inactive — only Type II moves TAs.
+        let mut tm3 = MultiTm::new(&s).unwrap();
+        let act3 = train_step(&mut tm3, &x, 0, &p, &r0);
+        assert_eq!(tm3.ta().state(0, 0, 0), init);
+        assert_eq!(tm3.ta().state(0, 0, 3), init, "no Type-I weakening at s=1");
+        assert_eq!(act3.ta_decrements, 0);
+        assert!(act3.ta_increments > 0, "Type II still fires");
+        let _ = act;
+    }
+
+    #[test]
+    fn boost_true_positive_reinforces_at_s1() {
+        let s = shape();
+        let mut p = TmParams::paper_online(&s);
+        p.boost_true_positive = true;
+        let x = mk_input(&[0]);
+        let r0 = StepRands {
+            clause_rand: vec![-1.0; s.classes * s.max_clauses],
+            ta_rand: vec![0.0; s.classes * s.max_clauses * s.literals()],
+            neg_class_draw: 0,
+        };
+        let mut tm = MultiTm::new(&s).unwrap();
+        train_step(&mut tm, &x, 0, &p, &r0);
+        assert_eq!(tm.ta().state(0, 0, 0), s.states, "boost: 0 < 1 fires");
+    }
+
+    #[test]
+    fn inactive_clauses_and_classes_get_no_feedback() {
+        let s = shape();
+        let mut tm = MultiTm::new(&s).unwrap();
+        let mut p = TmParams::paper_offline(&s);
+        p.active_clauses = 4;
+        p.active_classes = 2;
+        let x = mk_input(&[0]);
+        let r = all_fire_rands(&s);
+        train_step(&mut tm, &x, 0, &p, &r);
+        let init = s.states - 1;
+        for j in 4..16 {
+            for k in 0..32 {
+                assert_eq!(tm.ta().state(0, j, k), init, "gated clause {j} touched");
+            }
+        }
+        for k in 0..32 {
+            assert_eq!(tm.ta().state(2, 0, k), init, "inactive class touched");
+        }
+    }
+
+    #[test]
+    fn selection_probability_depends_on_votes() {
+        // When class sum saturates at +T for the target, p_sel = 0 and no
+        // clause is selected even with draw 0-.
+        let s = shape();
+        let mut tm = MultiTm::new(&s).unwrap();
+        let mut p = TmParams::paper_offline(&s);
+        p.t = 1;
+        // Make every positive clause of class 0 fire (include literal 0,
+        // x0 = 1) and every negative clause non-empty but blocked (include
+        // literal 1, x1 = 0): train-mode sum = +8, clamped to T = 1.
+        for j in 0..16 {
+            let lit = if j % 2 == 0 { 0 } else { 1 };
+            for _ in 0..2 {
+                tm.ta_increment(0, j, lit);
+            }
+        }
+        let x = mk_input(&[0]);
+        // Draws of exactly 0.0: p_sel for target = (1-1)/2 = 0; 0 < 0 false.
+        let r = StepRands {
+            clause_rand: vec![0.0; s.classes * s.max_clauses],
+            ta_rand: vec![0.0; s.classes * s.max_clauses * s.literals()],
+            neg_class_draw: 0,
+        };
+        let before: Vec<u32> =
+            (0..32).flat_map(|k| (0..16).map(move |j| (j, k))).map(|(j, k)| tm.ta().state(0, j, k)).collect();
+        train_step(&mut tm, &x, 0, &p, &r);
+        // The saturated target class selects nothing (p_sel = 0); the
+        // contrast class may still receive feedback.
+        let after: Vec<u32> =
+            (0..32).flat_map(|k| (0..16).map(move |j| (j, k))).map(|(j, k)| tm.ta().state(0, j, k)).collect();
+        assert_eq!(before, after, "target class must be untouched at p_sel = 0");
+    }
+
+    /// Property: training never moves a state outside the legal range and
+    /// the action cache stays coherent (checked via rebuild).
+    #[test]
+    fn prop_training_preserves_invariants() {
+        let s = shape();
+        let mut tm = MultiTm::new(&s).unwrap();
+        let p = TmParams::paper_offline(&s);
+        let mut rng = Xoshiro256::new(0xBEEF);
+        for step in 0..2000 {
+            let bits: Vec<bool> = (0..16).map(|_| rng.next_f32() < 0.5).collect();
+            let x = Input::pack(&s, &bits);
+            let r = StepRands::draw(&mut rng, &s);
+            train_step(&mut tm, &x, step % 3, &p, &r);
+        }
+        assert!(tm.ta().states().iter().all(|&v| v <= s.max_state()));
+        let mut tm2 = tm.clone();
+        tm2.rebuild_actions();
+        assert_eq!(tm.action_words(0, 0), tm2.action_words(0, 0));
+        for c in 0..3 {
+            for j in 0..16 {
+                assert_eq!(tm.action_words(c, j), tm2.action_words(c, j));
+            }
+        }
+    }
+
+    /// Property: feedback is monotone in expectation — training repeatedly
+    /// on one labelled point makes the machine predict it.
+    #[test]
+    fn prop_single_point_converges() {
+        let s = shape();
+        let mut tm = MultiTm::new(&s).unwrap();
+        let p = TmParams::paper_offline(&s);
+        let mut rng = Xoshiro256::new(0x5EED);
+        let x = mk_input(&[0, 4, 8, 12]);
+        for _ in 0..300 {
+            let r = StepRands::draw(&mut rng, &s);
+            train_step(&mut tm, &x, 2, &p, &r);
+        }
+        let (sums, pred) = tm.infer(&x, &p);
+        assert_eq!(pred, 2, "sums were {sums:?}");
+        assert!(sums[2] > sums[0] && sums[2] > sums[1]);
+    }
+}

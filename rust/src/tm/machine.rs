@@ -1,0 +1,584 @@
+//! The multiclass Tsetlin machine (§2) — behavioural software twin of the
+//! paper's RTL core.
+//!
+//! One [`MultiTm`] owns the TA state block, the fault-gate mappings and a
+//! bit-packed cache of the *true* (pre-fault) include actions, kept
+//! coherent incrementally as feedback moves TAs across the decision
+//! boundary. Clause evaluation applies the fault gates on the fly, exactly
+//! like the RTL (the gates sit on the TA action outputs, not the state
+//! registers).
+//!
+//! Everything here is deterministic given a [`crate::tm::rng::StepRands`];
+//! see `rust/tests/parity.rs` for the bit-parity proof against the
+//! AOT-lowered L2 graph.
+
+use crate::tm::automaton::{TaBlock, Transition};
+use crate::tm::clause::{EvalMode, Input};
+use crate::tm::fault::FaultMap;
+use crate::tm::params::{polarity, TmParams, TmShape};
+use anyhow::Result;
+
+/// Multiclass Tsetlin machine.
+#[derive(Debug, Clone)]
+pub struct MultiTm {
+    shape: TmShape,
+    ta: TaBlock,
+    fault: FaultMap,
+    /// Packed true include actions, `[row * words + w]`,
+    /// row = class * max_clauses + clause.
+    actions: Vec<u64>,
+    /// Clause-output-level forcing (§7 future work: "injecting faults at
+    /// the clause output level"): per clause row, `-1` = fault-free,
+    /// `0`/`1` = output forced. Gates sit on the clause output wire, so
+    /// they apply in both train and infer modes (active clauses only).
+    clause_force: Vec<i8>,
+    /// Number of forced clause outputs (O(1) hot-path check).
+    clause_faults: usize,
+    /// Scratch: per-(class,clause) outputs of the last evaluation.
+    pub(crate) clause_out: Vec<bool>,
+    /// Scratch: per-class sums of the last evaluation.
+    pub(crate) sums: Vec<i32>,
+}
+
+impl MultiTm {
+    pub fn new(shape: &TmShape) -> Result<Self> {
+        shape.validate()?;
+        let ta = TaBlock::new(shape);
+        let rows = shape.classes * shape.max_clauses;
+        let mut tm = MultiTm {
+            shape: shape.clone(),
+            ta,
+            fault: FaultMap::none(shape),
+            actions: vec![0u64; rows * shape.words()],
+            clause_force: vec![-1; rows],
+            clause_faults: 0,
+            clause_out: vec![false; rows],
+            sums: vec![0; shape.classes],
+        };
+        tm.rebuild_actions();
+        Ok(tm)
+    }
+
+    /// Restore a machine from raw TA states (e.g. from the PJRT path or a
+    /// checkpoint).
+    pub fn from_states(shape: &TmShape, states: Vec<u32>) -> Result<Self> {
+        let mut tm = Self::new(shape)?;
+        tm.ta = TaBlock::from_states(shape, states)?;
+        tm.rebuild_actions();
+        Ok(tm)
+    }
+
+    pub fn shape(&self) -> &TmShape {
+        &self.shape
+    }
+
+    pub fn ta(&self) -> &TaBlock {
+        &self.ta
+    }
+
+    pub fn fault(&self) -> &FaultMap {
+        &self.fault
+    }
+
+    /// Program the fault-gate mappings (the fault controller write port).
+    /// The true-action cache is unaffected: gates sit after the registers.
+    pub fn set_fault_map(&mut self, map: FaultMap) {
+        self.fault = map;
+    }
+
+    pub fn fault_map_mut(&mut self) -> &mut FaultMap {
+        &mut self.fault
+    }
+
+    /// Force one clause's output (§7 clause-output fault injection);
+    /// `None` clears the gate.
+    pub fn set_clause_fault(&mut self, class: usize, clause: usize, force: Option<bool>) {
+        let row = self.row(class, clause);
+        let was = self.clause_force[row] >= 0;
+        let now = force.is_some();
+        match (was, now) {
+            (false, true) => self.clause_faults += 1,
+            (true, false) => self.clause_faults -= 1,
+            _ => {}
+        }
+        self.clause_force[row] = match force {
+            None => -1,
+            Some(false) => 0,
+            Some(true) => 1,
+        };
+    }
+
+    /// Programmed clause-output fault, if any.
+    pub fn clause_fault(&self, class: usize, clause: usize) -> Option<bool> {
+        match self.clause_force[class * self.shape.max_clauses + clause] {
+            0 => Some(false),
+            1 => Some(true),
+            _ => None,
+        }
+    }
+
+    /// Number of forced clause outputs.
+    pub fn clause_fault_count(&self) -> usize {
+        self.clause_faults
+    }
+
+    /// Recompute the packed action cache from TA states (used after bulk
+    /// state loads; incremental updates handle the common path).
+    pub fn rebuild_actions(&mut self) {
+        let words = self.shape.words();
+        for c in 0..self.shape.classes {
+            for j in 0..self.shape.max_clauses {
+                let row = c * self.shape.max_clauses + j;
+                for w in 0..words {
+                    self.actions[row * words + w] = 0;
+                }
+                for (k, inc) in self.ta.clause_includes(c, j).enumerate() {
+                    if inc {
+                        self.actions[row * words + k / 64] |= 1u64 << (k % 64);
+                    }
+                }
+            }
+        }
+    }
+
+    #[inline]
+    fn row(&self, class: usize, clause: usize) -> usize {
+        class * self.shape.max_clauses + clause
+    }
+
+    /// Packed true action words of one clause.
+    #[inline]
+    pub fn action_words(&self, class: usize, clause: usize) -> &[u64] {
+        let w = self.shape.words();
+        let row = self.row(class, clause);
+        &self.actions[row * w..(row + 1) * w]
+    }
+
+    /// Effective (post-fault-gate) action of a single TA.
+    #[inline]
+    pub fn eff_action(&self, class: usize, clause: usize, lit: usize) -> bool {
+        let word = self.action_words(class, clause)[lit / 64];
+        let gated = self.fault.apply(class, clause, lit / 64, word);
+        gated & (1u64 << (lit % 64)) != 0
+    }
+
+    /// Evaluate one clause with fault gates applied.
+    pub fn clause_output(
+        &self,
+        class: usize,
+        clause: usize,
+        input: &Input,
+        mode: EvalMode,
+    ) -> bool {
+        let words = self.shape.words();
+        let row = self.row(class, clause);
+        let mut any = false;
+        if self.fault.is_fault_free() {
+            // Fast path (O(1) check): the gates are identity — evaluate
+            // straight off the packed action cache.
+            for w in 0..words {
+                let a = self.actions[row * words + w];
+                if a & !input.words()[w] != 0 {
+                    return false;
+                }
+                any |= a != 0;
+            }
+        } else {
+            // Apply the gates word-by-word without allocating.
+            for w in 0..words {
+                let eff =
+                    self.fault.apply(class, clause, w, self.actions[row * words + w]);
+                if eff & !input.words()[w] != 0 {
+                    return false;
+                }
+                any |= eff != 0;
+            }
+        }
+        any || mode == EvalMode::Train
+    }
+
+    /// Fault-free single-word clause evaluation over a whole class row —
+    /// the dominant configuration (iris: 32 literals = 1 word), kept
+    /// branch-light so the compiler vectorises the clause loop.
+    #[inline]
+    fn evaluate_class_fast1(
+        &mut self,
+        c: usize,
+        input_word: u64,
+        params: &TmParams,
+        train: bool,
+    ) {
+        let base = c * self.shape.max_clauses;
+        let mut sum = 0i32;
+        for j in 0..params.active_clauses {
+            let a = self.actions[base + j];
+            let out = (a & !input_word == 0) & (train | (a != 0));
+            self.clause_out[base + j] = out;
+            if out {
+                sum += polarity(j);
+            }
+        }
+        for j in params.active_clauses..self.shape.max_clauses {
+            self.clause_out[base + j] = false;
+        }
+        self.sums[c] = sum.clamp(-params.t, params.t);
+    }
+
+    /// Evaluate every clause of every class into the scratch buffers and
+    /// compute clamped per-class sums. Inactive clauses/classes output 0.
+    /// Returns the scratch sums slice.
+    pub fn evaluate(&mut self, input: &Input, params: &TmParams, mode: EvalMode) -> &[i32] {
+        // Hot path: fault-free, single-word machines skip the gate logic
+        // entirely (see EXPERIMENTS.md §Perf).
+        if self.shape.words() == 1 && self.fault.is_fault_free() && self.clause_faults == 0
+        {
+            let w = input.words()[0];
+            let train = mode == EvalMode::Train;
+            for c in 0..params.active_classes {
+                self.evaluate_class_fast1(c, w, params, train);
+            }
+            for c in params.active_classes..self.shape.classes {
+                let base = c * self.shape.max_clauses;
+                self.clause_out[base..base + self.shape.max_clauses].fill(false);
+                self.sums[c] = 0;
+            }
+            return &self.sums;
+        }
+        for c in 0..self.shape.classes {
+            let mut sum = 0i32;
+            for j in 0..self.shape.max_clauses {
+                let row = c * self.shape.max_clauses + j;
+                let out = if c < params.active_classes && j < params.active_clauses {
+                    // Clause-output force gate (active clauses only — a
+                    // clock-gated clause cannot drive the vote wire).
+                    match self.clause_force[row] {
+                        0 => false,
+                        1 => true,
+                        _ => self.clause_output(c, j, input, mode),
+                    }
+                } else {
+                    false
+                };
+                self.clause_out[row] = out;
+                if out {
+                    sum += polarity(j);
+                }
+            }
+            self.sums[c] = sum.clamp(-params.t, params.t);
+        }
+        &self.sums
+    }
+
+    /// Classify one datapoint: clamped class sums + argmax over active
+    /// classes (ties break toward the lowest class index, matching the L2
+    /// graph's argmax).
+    pub fn infer(&mut self, input: &Input, params: &TmParams) -> (Vec<i32>, usize) {
+        self.evaluate(input, params, EvalMode::Infer);
+        let sums = self.sums[..params.active_classes].to_vec();
+        let mut best = 0usize;
+        for (c, &v) in sums.iter().enumerate() {
+            if v > sums[best] {
+                best = c;
+            }
+        }
+        (sums, best)
+    }
+
+    /// Prediction only — allocation-free hot path (accuracy analysis runs
+    /// this once per stored row per analysis point).
+    pub fn predict(&mut self, input: &Input, params: &TmParams) -> usize {
+        self.evaluate(input, params, EvalMode::Infer);
+        let mut best = 0usize;
+        for c in 1..params.active_classes {
+            if self.sums[c] > self.sums[best] {
+                best = c;
+            }
+        }
+        best
+    }
+
+    /// Apply one saturating TA move and keep the action cache coherent.
+    #[inline]
+    pub(crate) fn ta_increment(&mut self, class: usize, clause: usize, lit: usize) {
+        if self.ta.increment(class, clause, lit) == Transition::NowInclude {
+            let w = self.shape.words();
+            let row = self.row(class, clause);
+            self.actions[row * w + lit / 64] |= 1u64 << (lit % 64);
+        }
+    }
+
+    #[inline]
+    pub(crate) fn ta_decrement(&mut self, class: usize, clause: usize, lit: usize) {
+        if self.ta.decrement(class, clause, lit) == Transition::NowExclude {
+            let w = self.shape.words();
+            let row = self.row(class, clause);
+            self.actions[row * w + lit / 64] &= !(1u64 << (lit % 64));
+        }
+    }
+
+    /// Classification accuracy over a set of packed datapoints.
+    pub fn accuracy(&mut self, data: &[(Input, usize)], params: &TmParams) -> f64 {
+        if data.is_empty() {
+            return 0.0;
+        }
+        let correct = data
+            .iter()
+            .filter(|(x, y)| {
+                // Borrow juggling: predict needs &mut self.
+                let p = self.predict(x, params);
+                p == *y
+            })
+            .count();
+        correct as f64 / data.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tm::rng::{StepRands, Xoshiro256};
+
+    fn shape() -> TmShape {
+        TmShape::iris()
+    }
+
+    fn params() -> TmParams {
+        TmParams::paper_offline(&shape())
+    }
+
+    fn input_from(bits: &[bool]) -> Input {
+        Input::pack(&shape(), bits)
+    }
+
+    #[test]
+    fn fresh_machine_predicts_class0_with_zero_sums() {
+        let mut tm = MultiTm::new(&shape()).unwrap();
+        let x = input_from(&vec![true; 16]);
+        let (sums, pred) = tm.infer(&x, &params());
+        assert_eq!(sums, vec![0, 0, 0]);
+        assert_eq!(pred, 0, "tie breaks to lowest class");
+    }
+
+    #[test]
+    fn action_cache_matches_states_after_manual_sets() {
+        let mut tm = MultiTm::new(&shape()).unwrap();
+        // Force TA (1, 2, 7) into include via increments.
+        tm.ta_increment(1, 2, 7);
+        assert!(tm.ta().action(1, 2, 7));
+        assert_eq!(tm.action_words(1, 2)[0], 1 << 7);
+        tm.ta_decrement(1, 2, 7);
+        assert!(!tm.ta().action(1, 2, 7));
+        assert_eq!(tm.action_words(1, 2)[0], 0);
+    }
+
+    #[test]
+    fn rebuild_matches_incremental() {
+        let mut tm = MultiTm::new(&shape()).unwrap();
+        let mut rng = Xoshiro256::new(99);
+        for _ in 0..5000 {
+            let c = rng.next_below(3);
+            let j = rng.next_below(16);
+            let k = rng.next_below(32);
+            if rng.next_f32() < 0.6 {
+                tm.ta_increment(c, j, k);
+            } else {
+                tm.ta_decrement(c, j, k);
+            }
+        }
+        let incremental = tm.actions.clone();
+        tm.rebuild_actions();
+        assert_eq!(incremental, tm.actions);
+    }
+
+    #[test]
+    fn clause_votes_follow_polarity() {
+        let mut tm = MultiTm::new(&shape()).unwrap();
+        let p = params();
+        // Make clause (0,0) [positive] include literal 0 and clause (0,1)
+        // [negative] include literal 0 as well.
+        for j in 0..2 {
+            for _ in 0..2 {
+                tm.ta_increment(0, j, 0);
+            }
+        }
+        let mut bits = vec![false; 16];
+        bits[0] = true;
+        let x = input_from(&bits);
+        let (sums, _) = tm.infer(&x, &p);
+        assert_eq!(sums[0], 0, "one + and one - vote cancel");
+        // Disable the negative clause's literal: make it include ¬x0 too
+        // so it stops firing.
+        for _ in 0..2 {
+            tm.ta_increment(0, 1, 16);
+        }
+        let (sums, pred) = tm.infer(&x, &p);
+        assert_eq!(sums[0], 1);
+        assert_eq!(pred, 0);
+    }
+
+    #[test]
+    fn over_provisioned_clauses_do_not_vote() {
+        let mut tm = MultiTm::new(&shape()).unwrap();
+        let mut p = params();
+        // Clause 14 (active under 16, inactive under 14... index >= 14).
+        for _ in 0..2 {
+            tm.ta_increment(0, 14, 0);
+        }
+        let mut bits = vec![false; 16];
+        bits[0] = true;
+        let x = input_from(&bits);
+        let (sums, _) = tm.infer(&x, &p);
+        assert_eq!(sums[0], 1);
+        p.active_clauses = 14;
+        let (sums, _) = tm.infer(&x, &p);
+        assert_eq!(sums[0], 0, "clause 14 gated off by the clause-number port");
+    }
+
+    #[test]
+    fn over_provisioned_classes_do_not_vote() {
+        let mut tm = MultiTm::new(&shape()).unwrap();
+        let mut p = params();
+        p.active_classes = 2;
+        for _ in 0..2 {
+            tm.ta_increment(2, 0, 0);
+        }
+        let mut bits = vec![false; 16];
+        bits[0] = true;
+        let x = input_from(&bits);
+        let (sums, pred) = tm.infer(&x, &p);
+        assert_eq!(sums.len(), 2);
+        assert!(pred < 2);
+    }
+
+    #[test]
+    fn stuck_at_0_fault_blocks_include() {
+        let mut tm = MultiTm::new(&shape()).unwrap();
+        let p = params();
+        for _ in 0..2 {
+            tm.ta_increment(0, 0, 0); // include literal 0
+        }
+        let mut bits = vec![false; 16];
+        bits[0] = true;
+        let x = input_from(&bits);
+        assert_eq!(tm.infer(&x, &p).0[0], 1);
+        // Stuck-at-0 on that TA: clause becomes empty -> infer output 0.
+        tm.fault_map_mut().set(0, 0, 0, crate::tm::fault::Fault::StuckAt0);
+        assert_eq!(tm.infer(&x, &p).0[0], 0);
+        assert!(!tm.eff_action(0, 0, 0));
+        assert!(tm.ta().action(0, 0, 0), "true state untouched by the gate");
+    }
+
+    #[test]
+    fn stuck_at_1_fault_forces_include() {
+        let mut tm = MultiTm::new(&shape()).unwrap();
+        let p = params();
+        // Clause (0,0) empty; stuck-at-1 on complement literal of x0.
+        tm.fault_map_mut().set(0, 0, 16, crate::tm::fault::Fault::StuckAt1);
+        let mut bits = vec![false; 16];
+        let x0 = input_from(&bits);
+        // ¬x0 = 1 -> forced include satisfied -> clause fires even in infer.
+        assert_eq!(tm.infer(&x0, &p).0[0], 1);
+        bits[0] = true;
+        let x1 = input_from(&bits);
+        assert_eq!(tm.infer(&x1, &p).0[0], 0, "forced literal now 0");
+    }
+
+    #[test]
+    fn sums_clamped_to_t() {
+        let mut tm = MultiTm::new(&shape()).unwrap();
+        let mut p = params();
+        p.t = 3;
+        // Make all 8 positive clauses of class 0 fire on x.
+        let mut bits = vec![false; 16];
+        bits[0] = true;
+        let x = input_from(&bits);
+        for j in (0..16).step_by(2) {
+            for _ in 0..2 {
+                tm.ta_increment(0, j, 0);
+            }
+        }
+        let (sums, _) = tm.infer(&x, &p);
+        assert_eq!(sums[0], 3, "clamped to T");
+    }
+
+    #[test]
+    fn accuracy_counts_correct_predictions() {
+        let mut tm = MultiTm::new(&shape()).unwrap();
+        let p = params();
+        // Teach class 1's positive clause 0 to fire on x0=1 by hand.
+        for _ in 0..2 {
+            tm.ta_increment(1, 0, 0);
+        }
+        let mut bits = vec![false; 16];
+        bits[0] = true;
+        let x = input_from(&bits);
+        let data = vec![(x.clone(), 1), (x, 0)];
+        let acc = tm.accuracy(&data, &p);
+        assert!((acc - 0.5).abs() < 1e-9);
+        assert_eq!(tm.accuracy(&[], &p), 0.0);
+    }
+
+    #[test]
+    fn clause_fault_forces_output_both_modes() {
+        let mut tm = MultiTm::new(&shape()).unwrap();
+        let p = params();
+        let x = input_from(&vec![true; 16]);
+        // Force positive clause (0,0) to 1: votes +1 even though empty.
+        tm.set_clause_fault(0, 0, Some(true));
+        assert_eq!(tm.clause_fault(0, 0), Some(true));
+        assert_eq!(tm.clause_fault_count(), 1);
+        let (sums, _) = tm.infer(&x, &p);
+        assert_eq!(sums[0], 1, "forced-1 clause votes in infer mode");
+        // Force it to 0: silent even in train mode (empty would fire).
+        tm.set_clause_fault(0, 0, Some(false));
+        tm.evaluate(&x, &p, EvalMode::Train);
+        assert!(!tm.clause_out[0]);
+        // Clear restores normal behaviour.
+        tm.set_clause_fault(0, 0, None);
+        assert_eq!(tm.clause_fault_count(), 0);
+        tm.evaluate(&x, &p, EvalMode::Train);
+        assert!(tm.clause_out[0], "empty clause fires in train mode again");
+    }
+
+    #[test]
+    fn clause_fault_respects_clause_gating() {
+        let mut tm = MultiTm::new(&shape()).unwrap();
+        let mut p = params();
+        p.active_clauses = 2;
+        let x = input_from(&vec![true; 16]);
+        tm.set_clause_fault(0, 4, Some(true)); // clause 4 is gated off
+        let (sums, _) = tm.infer(&x, &p);
+        assert_eq!(sums[0], 0, "gated clause cannot drive the vote wire");
+    }
+
+    #[test]
+    fn clause_fault_counter_tracks_set_clear() {
+        let mut tm = MultiTm::new(&shape()).unwrap();
+        tm.set_clause_fault(0, 0, Some(true));
+        tm.set_clause_fault(0, 0, Some(false)); // overwrite, still 1 fault
+        tm.set_clause_fault(1, 5, Some(true));
+        assert_eq!(tm.clause_fault_count(), 2);
+        tm.set_clause_fault(0, 0, None);
+        tm.set_clause_fault(0, 0, None); // double clear is idempotent
+        assert_eq!(tm.clause_fault_count(), 1);
+    }
+
+    /// Smoke: training decreases nothing structurally — full training
+    /// behaviour is covered in feedback.rs and the integration tests.
+    #[test]
+    fn train_step_runs_and_keeps_cache_coherent() {
+        let s = shape();
+        let mut tm = MultiTm::new(&s).unwrap();
+        let p = TmParams::paper_offline(&s);
+        let mut rng = Xoshiro256::new(1234);
+        let bits: Vec<bool> = (0..16).map(|k| k % 2 == 0).collect();
+        let x = input_from(&bits);
+        for step in 0..200 {
+            let r = StepRands::draw(&mut rng, &s);
+            crate::tm::feedback::train_step(&mut tm, &x, step % 3, &p, &r);
+        }
+        let incremental = tm.actions.clone();
+        tm.rebuild_actions();
+        assert_eq!(incremental, tm.actions, "cache must stay coherent");
+    }
+}

@@ -1,0 +1,21 @@
+//! The Tsetlin machine core (§2 of the paper): automata, clauses,
+//! multiclass machine, Type I/II feedback, fault gates and the
+//! deterministic randomness contract shared with the L2/L1 layers.
+
+pub mod automaton;
+pub mod clause;
+pub mod explain;
+pub mod fault;
+pub mod feedback;
+pub mod machine;
+pub mod params;
+pub mod rng;
+pub mod state;
+
+pub use automaton::TaBlock;
+pub use clause::{EvalMode, Input};
+pub use fault::{Fault, FaultMap};
+pub use feedback::{train_step, StepActivity};
+pub use machine::MultiTm;
+pub use params::{polarity, TmParams, TmShape};
+pub use rng::{StepRands, Xoshiro256};

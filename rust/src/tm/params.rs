@@ -1,0 +1,311 @@
+//! Design-time and run-time parameters of the Tsetlin machine.
+//!
+//! Mirrors the paper's split (§3.1): classes / clauses / TA states are
+//! *pre-synthesis* parameters; `s`, `T`, the clause-number port and the
+//! active-class count are *run-time* controllable (via the AXI register
+//! file in the RTL model, or directly on [`TmParams`] here).
+
+use anyhow::{bail, Result};
+
+/// Pre-synthesis (structural) parameters: fixed when the machine is built,
+/// analogous to what would require FPGA re-synthesis to change.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TmShape {
+    /// Number of provisioned classes (paper: over-provisionable, §3.1.1).
+    pub classes: usize,
+    /// Maximum number of clauses per class (the "maximum clause number
+    /// pre-synthesis parameter", §3.1.1). Must be even so the +/- polarity
+    /// split is balanced.
+    pub max_clauses: usize,
+    /// Number of Boolean input features. Literals = `2 * features`
+    /// (each feature and its complement).
+    pub features: usize,
+    /// TA states **per action side**: total states = `2 * states`, with
+    /// `0 ..= states-1` ⇒ exclude and `states ..= 2*states-1` ⇒ include.
+    pub states: u32,
+}
+
+impl TmShape {
+    /// Shape used throughout the paper's evaluation: iris booleanised to 16
+    /// inputs, 3 classes, 16 clauses per class.
+    pub fn iris() -> Self {
+        TmShape { classes: 3, max_clauses: 16, features: 16, states: 100 }
+    }
+
+    /// Number of literals (features and their complements).
+    pub fn literals(&self) -> usize {
+        2 * self.features
+    }
+
+    /// Total TAs in the machine (one per class/clause/literal).
+    pub fn num_tas(&self) -> usize {
+        self.classes * self.max_clauses * self.literals()
+    }
+
+    /// Number of `u64` words needed to hold one literal row bit-packed.
+    pub fn words(&self) -> usize {
+        self.literals().div_ceil(64)
+    }
+
+    /// State index of the exclude/include decision boundary: actions with
+    /// state `>= include_threshold()` are *include*.
+    pub fn include_threshold(&self) -> u32 {
+        self.states
+    }
+
+    /// Largest legal state value.
+    pub fn max_state(&self) -> u32 {
+        2 * self.states - 1
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.classes == 0 {
+            bail!("TmShape: classes must be > 0");
+        }
+        if self.max_clauses == 0 || self.max_clauses % 2 != 0 {
+            bail!("TmShape: max_clauses must be positive and even, got {}", self.max_clauses);
+        }
+        if self.features == 0 {
+            bail!("TmShape: features must be > 0");
+        }
+        if self.states < 2 {
+            bail!("TmShape: need at least 2 states per side, got {}", self.states);
+        }
+        Ok(())
+    }
+}
+
+/// How the specificity hyper-parameter `s` maps to the Type-I event
+/// probabilities.
+///
+/// - [`SStyle::Canonical`] is Granmo 2018: reinforce w.p. `(s-1)/s`,
+///   weaken w.p. `1/s`. At `s = 1` weakening always fires.
+/// - [`SStyle::InactionBiased`] scales *both* events by `(s-1)/s` — the
+///   reading consistent with the paper's §5.1 ("a lower s value increases
+///   the likelihood of inaction, so overall there will be a bias away
+///   from issuing feedback when a low s value is used, resulting in
+///   reduced power consumption"): at `s = 1` Type I is fully inactive and
+///   online learning is driven by Type-II discrimination alone, which is
+///   also what reproduces the paper's *rising* offline-set curve (no
+///   Type-I forgetting). The paper's LFSR-based hardware implements one
+///   comparison threshold per event, making this a one-constant change in
+///   RTL.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SStyle {
+    Canonical,
+    /// The paper's inaction-biased reading (our §5 default).
+    #[default]
+    InactionBiased,
+}
+
+/// Run-time parameters: controllable without re-synthesis (paper §3.1:
+/// "sensitivity and threshold hyperparameters, s and T, are controllable
+/// during runtime via I/O ports"; clause number via the clause-number port).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TmParams {
+    /// Specificity hyper-parameter `s >= 1`. The paper uses 1.375 for
+    /// offline and 1.0 for online training.
+    pub s: f32,
+    /// Vote-clamp / feedback-probability threshold `T >= 1`. Paper: 15.
+    /// "T can be thought of as a target for the number of clauses to
+    /// activate" (§2).
+    pub t: i32,
+    /// Clause-number port (§3.1.1): number of clauses per class actually
+    /// in use; `active_clauses <= max_clauses`, must be even. Clauses with
+    /// index `>= active_clauses` are clock-gated: output 0, no feedback.
+    pub active_clauses: usize,
+    /// Over-provisioned class control: classes with index
+    /// `>= active_classes` never vote and never receive feedback.
+    pub active_classes: usize,
+    /// Granmo's "boost true positive" option: when set, the Type-I
+    /// include-reinforcement fires with probability 1 instead of (s-1)/s.
+    pub boost_true_positive: bool,
+    /// s → probability mapping (see [`SStyle`]).
+    pub s_style: SStyle,
+}
+
+impl TmParams {
+    /// Paper offline-training configuration (§5): s = 1.375, T = 15.
+    pub fn paper_offline(shape: &TmShape) -> Self {
+        TmParams {
+            s: 1.375,
+            t: 15,
+            active_clauses: shape.max_clauses,
+            active_classes: shape.classes,
+            boost_true_positive: false,
+            s_style: SStyle::InactionBiased,
+        }
+    }
+
+    /// Paper online-training configuration (§5.1): s = 1.0 — "a lower s
+    /// value increases the likelihood of inaction ... resulting in reduced
+    /// power consumption".
+    pub fn paper_online(shape: &TmShape) -> Self {
+        TmParams { s: 1.0, ..Self::paper_offline(shape) }
+    }
+
+    pub fn validate(&self, shape: &TmShape) -> Result<()> {
+        if !(self.s >= 1.0) {
+            bail!("TmParams: s must be >= 1.0, got {}", self.s);
+        }
+        if self.t < 1 {
+            bail!("TmParams: T must be >= 1, got {}", self.t);
+        }
+        if self.active_clauses == 0
+            || self.active_clauses > shape.max_clauses
+            || self.active_clauses % 2 != 0
+        {
+            bail!(
+                "TmParams: active_clauses must be even in 2..=max_clauses ({}), got {}",
+                shape.max_clauses,
+                self.active_clauses
+            );
+        }
+        if self.active_classes == 0 || self.active_classes > shape.classes {
+            bail!(
+                "TmParams: active_classes must be in 1..=classes ({}), got {}",
+                shape.classes,
+                self.active_classes
+            );
+        }
+        Ok(())
+    }
+
+    /// Probability of the Type-I include-reinforcement event: `(s-1)/s`
+    /// (or 1.0 with boost).
+    pub fn p_reinforce(&self) -> f32 {
+        if self.boost_true_positive {
+            1.0
+        } else {
+            (self.s - 1.0) / self.s
+        }
+    }
+
+    /// Probability of the Type-I weaken event: `1/s` (canonical) or
+    /// `(s-1)/s` (inaction-biased, see [`SStyle`]).
+    pub fn p_weaken(&self) -> f32 {
+        match self.s_style {
+            SStyle::Canonical => 1.0 / self.s,
+            SStyle::InactionBiased => (self.s - 1.0) / self.s,
+        }
+    }
+}
+
+/// Clause polarity convention used across every layer of this repo
+/// (native Rust, RTL model, JAX/Pallas): **even clause index ⇒ positive
+/// vote, odd ⇒ negative vote**. Interleaving keeps the +/- split balanced
+/// under any even `active_clauses` (the over-provisioning port).
+#[inline]
+pub fn polarity(clause: usize) -> i32 {
+    if clause % 2 == 0 {
+        1
+    } else {
+        -1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn iris_shape_is_papers() {
+        let s = TmShape::iris();
+        assert_eq!(s.classes, 3);
+        assert_eq!(s.max_clauses, 16);
+        assert_eq!(s.features, 16);
+        assert_eq!(s.literals(), 32);
+        assert_eq!(s.words(), 1);
+        assert_eq!(s.num_tas(), 3 * 16 * 32);
+        s.validate().unwrap();
+    }
+
+    #[test]
+    fn include_threshold_splits_state_space() {
+        let s = TmShape::iris();
+        assert_eq!(s.include_threshold(), 100);
+        assert_eq!(s.max_state(), 199);
+    }
+
+    #[test]
+    fn invalid_shapes_rejected() {
+        let mut s = TmShape::iris();
+        s.max_clauses = 15; // odd
+        assert!(s.validate().is_err());
+        s.max_clauses = 0;
+        assert!(s.validate().is_err());
+        s = TmShape::iris();
+        s.classes = 0;
+        assert!(s.validate().is_err());
+        s = TmShape::iris();
+        s.states = 1;
+        assert!(s.validate().is_err());
+        s = TmShape::iris();
+        s.features = 0;
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn paper_params_match_section5() {
+        let shape = TmShape::iris();
+        let off = TmParams::paper_offline(&shape);
+        assert_eq!(off.s, 1.375);
+        assert_eq!(off.t, 15);
+        let on = TmParams::paper_online(&shape);
+        assert_eq!(on.s, 1.0);
+        assert_eq!(on.t, 15);
+        off.validate(&shape).unwrap();
+        on.validate(&shape).unwrap();
+    }
+
+    #[test]
+    fn invalid_params_rejected() {
+        let shape = TmShape::iris();
+        let base = TmParams::paper_offline(&shape);
+        let mut p = base.clone();
+        p.s = 0.5;
+        assert!(p.validate(&shape).is_err());
+        p = base.clone();
+        p.t = 0;
+        assert!(p.validate(&shape).is_err());
+        p = base.clone();
+        p.active_clauses = 18; // > max
+        assert!(p.validate(&shape).is_err());
+        p = base.clone();
+        p.active_clauses = 7; // odd
+        assert!(p.validate(&shape).is_err());
+        p = base.clone();
+        p.active_classes = 4; // > classes
+        assert!(p.validate(&shape).is_err());
+    }
+
+    #[test]
+    fn probabilities() {
+        let shape = TmShape::iris();
+        let mut p = TmParams::paper_online(&shape); // s = 1, inaction-biased
+        assert_eq!(p.p_reinforce(), 0.0);
+        assert_eq!(p.p_weaken(), 0.0, "inaction-biased: s = 1 means full Type-I inaction");
+        p.s_style = SStyle::Canonical;
+        assert_eq!(p.p_weaken(), 1.0, "canonical: s = 1 always weakens");
+        p.s = 2.0;
+        assert!((p.p_reinforce() - 0.5).abs() < 1e-6);
+        assert!((p.p_weaken() - 0.5).abs() < 1e-6);
+        p.s_style = SStyle::InactionBiased;
+        assert!((p.p_weaken() - 0.5).abs() < 1e-6, "styles agree at s = 2");
+        p.boost_true_positive = true;
+        assert_eq!(p.p_reinforce(), 1.0);
+    }
+
+    #[test]
+    fn polarity_interleaves() {
+        assert_eq!(polarity(0), 1);
+        assert_eq!(polarity(1), -1);
+        assert_eq!(polarity(14), 1);
+        assert_eq!(polarity(15), -1);
+        // Any even prefix is balanced.
+        for n in (2..=16).step_by(2) {
+            let sum: i32 = (0..n).map(polarity).sum();
+            assert_eq!(sum, 0, "prefix of {n} clauses must balance");
+        }
+    }
+}

@@ -1,0 +1,308 @@
+//! Deterministic randomness shared across the native (L3) and AOT/HLO
+//! (L2/L1) execution paths.
+//!
+//! The TM training step is stochastic. To prove the three layers compose
+//! (and to make every experiment bit-reproducible), a training step never
+//! draws randomness internally: it consumes an explicit [`StepRands`]
+//! record. The same flattened `f32` arrays feed (a) the native Rust
+//! feedback in [`crate::tm::feedback`] and (b) the lowered HLO executable
+//! as input tensors — `rust/tests/parity.rs` asserts the resulting TA
+//! states are bit-identical.
+//!
+//! The generator itself is xoshiro256++ (public-domain reference
+//! algorithm), seeded via splitmix64 — no external crates.
+
+use crate::tm::params::TmShape;
+
+/// xoshiro256++ PRNG. Deterministic, fast, and trivially re-implementable
+/// in any layer of the stack.
+#[derive(Debug, Clone)]
+pub struct Xoshiro256 {
+    s: [u64; 4],
+}
+
+#[inline]
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Xoshiro256 {
+    /// Seed via splitmix64 so that small / similar seeds still give
+    /// well-mixed states.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Xoshiro256 { s }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[0]
+            .wrapping_add(s[3])
+            .rotate_left(23)
+            .wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform `f32` in `[0, 1)` with 24 bits of mantissa entropy. The
+    /// exact construction (`(x >> 40) * 2^-24`) is part of the cross-layer
+    /// contract: the HLO path receives these values as tensors, so only
+    /// the construction on the Rust side matters, but tests pin it down.
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        ((self.next_u64() >> 40) as f32) * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Two uniform `f32`s from one `u64` (bits 40..64 and 16..40) — the
+    /// step-randomness bulk path; RNG output was ~49% of the training
+    /// profile before this (see EXPERIMENTS.md §Perf).
+    #[inline]
+    pub fn next_f32_pair(&mut self) -> (f32, f32) {
+        const SCALE: f32 = 1.0 / (1u64 << 24) as f32;
+        let x = self.next_u64();
+        (((x >> 40) as f32) * SCALE, (((x >> 16) & 0x00FF_FFFF) as f32) * SCALE)
+    }
+
+    /// Fill a slice with uniforms using the paired extraction (odd tail
+    /// falls back to [`next_f32`]).
+    pub fn fill_f32(&mut self, out: &mut [f32]) {
+        let mut chunks = out.chunks_exact_mut(2);
+        for c in &mut chunks {
+            let (a, b) = self.next_f32_pair();
+            c[0] = a;
+            c[1] = b;
+        }
+        for v in chunks.into_remainder() {
+            *v = self.next_f32();
+        }
+    }
+
+    /// Uniform integer in `[0, n)` (Lemire-style rejection-free mapping is
+    /// overkill here; modulo bias is < 2^-40 for our tiny `n`).
+    #[inline]
+    pub fn next_below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.next_below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+}
+
+/// All randomness consumed by one training step (one datapoint), in the
+/// canonical flattened layout shared with the L2 HLO graph:
+///
+/// - `clause_rand[c * max_clauses + j]` — clause-feedback selection draw
+///   for class `c`, clause `j`.
+/// - `ta_rand[(c * max_clauses + j) * literals + k]` — per-TA draw for
+///   class `c`, clause `j`, literal `k`.
+///
+/// The negative-class choice (`neg_class`) is drawn on the Rust side and
+/// passed to the HLO graph as a per-class sign vector — see
+/// [`crate::tm::feedback::class_signs`].
+#[derive(Debug, Clone)]
+pub struct StepRands {
+    pub clause_rand: Vec<f32>,
+    pub ta_rand: Vec<f32>,
+    pub neg_class_draw: u64,
+}
+
+impl StepRands {
+    /// Draw a full step's randomness in the canonical order:
+    /// neg-class draw, then all clause draws, then all TA draws (both
+    /// arrays via the paired extraction of [`Xoshiro256::fill_f32`]).
+    pub fn draw(rng: &mut Xoshiro256, shape: &TmShape) -> Self {
+        let nc = shape.classes * shape.max_clauses;
+        let mut r = StepRands {
+            clause_rand: vec![0.0; nc],
+            ta_rand: vec![0.0; nc * shape.literals()],
+            neg_class_draw: 0,
+        };
+        r.refill(rng, shape);
+        r
+    }
+
+    /// Draw into pre-allocated buffers (hot-loop variant — no allocation).
+    pub fn refill(&mut self, rng: &mut Xoshiro256, shape: &TmShape) {
+        let nc = shape.classes * shape.max_clauses;
+        debug_assert_eq!(self.clause_rand.len(), nc);
+        debug_assert_eq!(self.ta_rand.len(), nc * shape.literals());
+        self.neg_class_draw = rng.next_u64();
+        rng.fill_f32(&mut self.clause_rand);
+        rng.fill_f32(&mut self.ta_rand);
+    }
+
+    #[inline]
+    pub fn clause(&self, shape: &TmShape, class: usize, clause: usize) -> f32 {
+        self.clause_rand[class * shape.max_clauses + clause]
+    }
+
+    #[inline]
+    pub fn ta(&self, shape: &TmShape, class: usize, clause: usize, lit: usize) -> f32 {
+        self.ta_rand[(class * shape.max_clauses + clause) * shape.literals() + lit]
+    }
+
+    /// Choose the negative (contrast) class uniformly among active classes
+    /// other than `target`. `active` must be >= 2 for a draw to exist.
+    pub fn neg_class(&self, target: usize, active: usize) -> Option<usize> {
+        if active < 2 {
+            return None;
+        }
+        let k = (self.neg_class_draw % (active as u64 - 1)) as usize;
+        Some(if k >= target { k + 1 } else { k })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_clones() {
+        let mut a = Xoshiro256::new(42);
+        let mut b = Xoshiro256::new(42);
+        for _ in 0..1000 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a = Xoshiro256::new(1);
+        let mut b = Xoshiro256::new(2);
+        let same = (0..100).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn f32_in_unit_interval_and_well_spread() {
+        let mut rng = Xoshiro256::new(7);
+        let n = 100_000;
+        let mut sum = 0.0f64;
+        for _ in 0..n {
+            let x = rng.next_f32();
+            assert!((0.0..1.0).contains(&x), "out of range: {x}");
+            sum += x as f64;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean} far from 0.5");
+    }
+
+    #[test]
+    fn next_below_bounds_and_coverage() {
+        let mut rng = Xoshiro256::new(3);
+        let mut seen = [false; 7];
+        for _ in 0..1000 {
+            let v = rng.next_below(7);
+            assert!(v < 7);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "all residues should appear");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Xoshiro256::new(9);
+        let mut xs: Vec<u32> = (0..50).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+        assert_ne!(xs, (0..50).collect::<Vec<_>>(), "50! leaves identity improbable");
+    }
+
+    #[test]
+    fn f32_pair_construction_pinned() {
+        // The bulk path must extract bits 40..64 and 16..40 of one u64.
+        let mut a = Xoshiro256::new(77);
+        let mut b = Xoshiro256::new(77);
+        for _ in 0..100 {
+            let x = a.next_u64();
+            let (hi, lo) = b.next_f32_pair();
+            let scale = 1.0 / (1u64 << 24) as f32;
+            assert_eq!(hi, ((x >> 40) as f32) * scale);
+            assert_eq!(lo, (((x >> 16) & 0x00FF_FFFF) as f32) * scale);
+            assert!((0.0..1.0).contains(&hi) && (0.0..1.0).contains(&lo));
+        }
+    }
+
+    #[test]
+    fn fill_f32_matches_pairs_and_handles_odd() {
+        let mut a = Xoshiro256::new(5);
+        let mut b = Xoshiro256::new(5);
+        let mut buf = vec![0.0f32; 7];
+        a.fill_f32(&mut buf);
+        let (p0, p1) = b.next_f32_pair();
+        let (p2, p3) = b.next_f32_pair();
+        let (p4, p5) = b.next_f32_pair();
+        let tail = b.next_f32();
+        assert_eq!(buf, vec![p0, p1, p2, p3, p4, p5, tail]);
+    }
+
+    #[test]
+    fn step_rands_layout() {
+        let shape = TmShape::iris();
+        let mut rng = Xoshiro256::new(11);
+        let r = StepRands::draw(&mut rng, &shape);
+        assert_eq!(r.clause_rand.len(), 3 * 16);
+        assert_eq!(r.ta_rand.len(), 3 * 16 * 32);
+        // Indexing helpers agree with the flat layout.
+        assert_eq!(r.clause(&shape, 2, 5), r.clause_rand[2 * 16 + 5]);
+        assert_eq!(r.ta(&shape, 1, 3, 31), r.ta_rand[(16 + 3) * 32 + 31]);
+    }
+
+    #[test]
+    fn refill_matches_draw() {
+        let shape = TmShape::iris();
+        let mut r1 = Xoshiro256::new(5);
+        let mut r2 = Xoshiro256::new(5);
+        let a = StepRands::draw(&mut r1, &shape);
+        let mut b = StepRands::draw(&mut r2, &shape);
+        // Advance both identically once more.
+        let a2 = StepRands::draw(&mut r1, &shape);
+        b.refill(&mut r2, &shape);
+        assert_eq!(a2.clause_rand, b.clause_rand);
+        assert_eq!(a2.ta_rand, b.ta_rand);
+        assert_eq!(a2.neg_class_draw, b.neg_class_draw);
+        let _ = a;
+    }
+
+    #[test]
+    fn neg_class_never_target_and_covers_others() {
+        let shape = TmShape::iris();
+        let mut rng = Xoshiro256::new(13);
+        let mut seen = [false; 3];
+        for _ in 0..200 {
+            let r = StepRands::draw(&mut rng, &shape);
+            let neg = r.neg_class(1, 3).unwrap();
+            assert_ne!(neg, 1);
+            seen[neg] = true;
+        }
+        assert!(seen[0] && seen[2]);
+        // Single active class: no contrast class exists.
+        let r = StepRands::draw(&mut rng, &shape);
+        assert_eq!(r.neg_class(0, 1), None);
+    }
+}

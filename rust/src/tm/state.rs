@@ -1,0 +1,193 @@
+//! TM checkpointing: save/restore TA states (and shape header) in a small
+//! self-describing binary format.
+//!
+//! The paper's architecture keeps TA states in registers on the fabric;
+//! retraining-on-chip (§5.3.2) implies snapshots are cheap. Here a
+//! checkpoint backs: (a) experiment repeatability, (b) handing a trained
+//! machine between the behavioural path, the RTL simulator and the PJRT
+//! path, and (c) the retrain-trigger flow in `coordinator::monitor`.
+//!
+//! Format (little-endian):
+//! ```text
+//! magic   u32 = 0x544D_4650  ("TMFP")
+//! version u32 = 1
+//! classes u32, max_clauses u32, features u32, states u32
+//! payload u32[classes * max_clauses * 2*features]  (TA states)
+//! crc     u32  (FNV-1a over payload bytes)
+//! ```
+
+use crate::tm::machine::MultiTm;
+use crate::tm::params::TmShape;
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: u32 = 0x544D_4650;
+const VERSION: u32 = 1;
+
+fn fnv1a(bytes: &[u8]) -> u32 {
+    let mut h: u32 = 0x811C_9DC5;
+    for &b in bytes {
+        h ^= b as u32;
+        h = h.wrapping_mul(0x0100_0193);
+    }
+    h
+}
+
+fn push_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+/// Serialize a machine's TA states to bytes.
+pub fn to_bytes(tm: &MultiTm) -> Vec<u8> {
+    let s = tm.shape();
+    let mut buf = Vec::with_capacity(8 + 16 + tm.ta().states().len() * 4 + 4);
+    push_u32(&mut buf, MAGIC);
+    push_u32(&mut buf, VERSION);
+    push_u32(&mut buf, s.classes as u32);
+    push_u32(&mut buf, s.max_clauses as u32);
+    push_u32(&mut buf, s.features as u32);
+    push_u32(&mut buf, s.states);
+    let payload_start = buf.len();
+    for &st in tm.ta().states() {
+        push_u32(&mut buf, st);
+    }
+    let crc = fnv1a(&buf[payload_start..]);
+    push_u32(&mut buf, crc);
+    buf
+}
+
+/// Restore a machine from bytes produced by [`to_bytes`].
+pub fn from_bytes(bytes: &[u8]) -> Result<MultiTm> {
+    let mut r = bytes;
+    if read_u32(&mut r)? != MAGIC {
+        bail!("checkpoint: bad magic");
+    }
+    let ver = read_u32(&mut r)?;
+    if ver != VERSION {
+        bail!("checkpoint: unsupported version {ver}");
+    }
+    let shape = TmShape {
+        classes: read_u32(&mut r)? as usize,
+        max_clauses: read_u32(&mut r)? as usize,
+        features: read_u32(&mut r)? as usize,
+        states: read_u32(&mut r)?,
+    };
+    shape.validate().context("checkpoint shape")?;
+    let n = shape.num_tas();
+    if r.len() != n * 4 + 4 {
+        bail!("checkpoint: truncated payload ({} bytes, want {})", r.len(), n * 4 + 4);
+    }
+    let (payload, crc_bytes) = r.split_at(n * 4);
+    let want_crc = u32::from_le_bytes(crc_bytes.try_into().unwrap());
+    if fnv1a(payload) != want_crc {
+        bail!("checkpoint: CRC mismatch");
+    }
+    let mut states = Vec::with_capacity(n);
+    for chunk in payload.chunks_exact(4) {
+        states.push(u32::from_le_bytes(chunk.try_into().unwrap()));
+    }
+    MultiTm::from_states(&shape, states)
+}
+
+/// Save a checkpoint to a file.
+pub fn save(tm: &MultiTm, path: &Path) -> Result<()> {
+    let bytes = to_bytes(tm);
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    f.write_all(&bytes)?;
+    Ok(())
+}
+
+/// Load a checkpoint from a file.
+pub fn load(path: &Path) -> Result<MultiTm> {
+    let bytes =
+        std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    from_bytes(&bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tm::params::{TmParams, TmShape};
+    use crate::tm::rng::{StepRands, Xoshiro256};
+
+    fn trained_tm() -> MultiTm {
+        let s = TmShape::iris();
+        let mut tm = MultiTm::new(&s).unwrap();
+        let p = TmParams::paper_offline(&s);
+        let mut rng = Xoshiro256::new(77);
+        for step in 0..500 {
+            let bits: Vec<bool> = (0..16).map(|_| rng.next_f32() < 0.5).collect();
+            let x = crate::tm::clause::Input::pack(&s, &bits);
+            let r = StepRands::draw(&mut rng, &s);
+            crate::tm::feedback::train_step(&mut tm, &x, step % 3, &p, &r);
+        }
+        tm
+    }
+
+    #[test]
+    fn roundtrip_bytes() {
+        let tm = trained_tm();
+        let restored = from_bytes(&to_bytes(&tm)).unwrap();
+        assert_eq!(restored.ta().states(), tm.ta().states());
+        assert_eq!(restored.shape(), tm.shape());
+    }
+
+    #[test]
+    fn roundtrip_file() {
+        let tm = trained_tm();
+        let dir = std::env::temp_dir().join("tmfpga_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("tm.ckpt");
+        save(&tm, &path).unwrap();
+        let restored = load(&path).unwrap();
+        assert_eq!(restored.ta().states(), tm.ta().states());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let tm = trained_tm();
+        let mut bytes = to_bytes(&tm);
+        // Flip a payload byte.
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        assert!(from_bytes(&bytes).is_err(), "CRC must catch corruption");
+    }
+
+    #[test]
+    fn truncation_detected() {
+        let tm = trained_tm();
+        let bytes = to_bytes(&tm);
+        assert!(from_bytes(&bytes[..bytes.len() - 8]).is_err());
+        assert!(from_bytes(&bytes[..10]).is_err());
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let mut bytes = to_bytes(&trained_tm());
+        bytes[0] ^= 1;
+        assert!(from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn restored_machine_predicts_identically() {
+        let s = TmShape::iris();
+        let p = TmParams::paper_offline(&s);
+        let mut tm = trained_tm();
+        let mut restored = from_bytes(&to_bytes(&tm)).unwrap();
+        let mut rng = Xoshiro256::new(123);
+        for _ in 0..50 {
+            let bits: Vec<bool> = (0..16).map(|_| rng.next_f32() < 0.5).collect();
+            let x = crate::tm::clause::Input::pack(&s, &bits);
+            assert_eq!(tm.infer(&x, &p), restored.infer(&x, &p));
+        }
+    }
+}

@@ -1,0 +1,105 @@
+//! Integration: the data pipeline end to end — raw iris → booleanisation
+//! → stratified blocks → ROM bank → memory manager / online path — and
+//! cross-subsystem consistency between the behavioural and RTL views.
+
+use tm_fpga::data::blocks::{all_orderings, BlockPlan, SetAllocation};
+use tm_fpga::data::{iris, BoolDataset, ClassFilter};
+use tm_fpga::fpga::memmgr::MemoryManager;
+use tm_fpga::fpga::rom::{Port, RomBank, SetId};
+use tm_fpga::tm::{Input, TmShape};
+
+fn blocks() -> Vec<BoolDataset> {
+    let plan = BlockPlan::stratified(iris::booleanised(), 5, 42).unwrap();
+    (0..5).map(|i| plan.block(i).clone()).collect()
+}
+
+#[test]
+fn rom_bank_agrees_with_block_plan_sets() {
+    // The RTL view (RomBank streaming) must produce exactly the rows the
+    // behavioural view (BlockPlan::sets) produces, in the same order.
+    let shape = TmShape::iris();
+    let plan = BlockPlan::stratified(iris::booleanised(), 5, 42).unwrap();
+    for ord in all_orderings(5).iter().step_by(17) {
+        let sets = plan.sets(ord, SetAllocation::paper()).unwrap();
+        let mut bank = RomBank::new(&blocks(), ord, (1, 2, 2)).unwrap();
+        let mm = MemoryManager::new(&shape);
+        for (set_id, expected) in [
+            (SetId::OfflineTrain, &sets.offline),
+            (SetId::Validation, &sets.validation),
+            (SetId::OnlineTrain, &sets.online),
+        ] {
+            let (rows, _) = mm.stream(&mut bank, set_id, Port::A, None).unwrap();
+            assert_eq!(rows.len(), expected.len());
+            for (i, (input, label)) in rows.iter().enumerate() {
+                assert_eq!(*label, expected.labels[i], "{set_id:?} row {i}");
+                assert_eq!(*input, Input::pack(&shape, &expected.rows[i]));
+            }
+        }
+    }
+}
+
+#[test]
+fn filter_consistency_across_views() {
+    let shape = TmShape::iris();
+    let plan = BlockPlan::stratified(iris::booleanised(), 5, 42).unwrap();
+    let ord = [3, 1, 4, 0, 2];
+    let sets = plan.sets(&ord, SetAllocation::paper()).unwrap();
+    let mut bank = RomBank::new(&blocks(), &ord, (1, 2, 2)).unwrap();
+    let mut mm = MemoryManager::new(&shape);
+    mm.filter = ClassFilter::removing(1);
+    let behavioural = ClassFilter::removing(1).apply(&sets.validation);
+    let (rtl, _) = mm.stream(&mut bank, SetId::Validation, Port::A, None).unwrap();
+    assert_eq!(rtl.len(), behavioural.len());
+    for (i, (_, label)) in rtl.iter().enumerate() {
+        assert_eq!(*label, behavioural.labels[i]);
+    }
+}
+
+#[test]
+fn every_ordering_partitions_data() {
+    // Across any ordering, the three sets are disjoint by construction
+    // and cover all 150 rows.
+    let plan = BlockPlan::stratified(iris::booleanised(), 5, 42).unwrap();
+    for ord in all_orderings(5).iter().take(24) {
+        let sets = plan.sets(ord, SetAllocation::paper()).unwrap();
+        assert_eq!(
+            sets.offline.len() + sets.validation.len() + sets.online.len(),
+            150
+        );
+        // Class balance preserved per set (stratified blocks).
+        assert_eq!(sets.offline.class_counts(), vec![10, 10, 10]);
+        assert_eq!(sets.validation.class_counts(), vec![20, 20, 20]);
+        assert_eq!(sets.online.class_counts(), vec![20, 20, 20]);
+    }
+}
+
+#[test]
+fn booleanisation_is_deterministic_and_16_wide() {
+    let a = iris::booleanised();
+    let b = iris::booleanizer().unwrap().encode(iris::raw()).unwrap();
+    assert_eq!(a.rows, b.rows);
+    assert!(a.rows.iter().all(|r| r.len() == 16));
+}
+
+#[test]
+fn packed_inputs_have_balanced_literals() {
+    // Property: literal k and its complement k+16 are never equal.
+    let shape = TmShape::iris();
+    for row in &iris::booleanised().rows {
+        let x = Input::pack(&shape, row);
+        for k in 0..16 {
+            assert_ne!(x.literal(k), x.literal(k + 16));
+        }
+    }
+}
+
+#[test]
+fn rotation_representatives_reconstruct_the_sweep() {
+    use tm_fpga::data::blocks::{expand_rotations, rotation_representatives};
+    let reps = rotation_representatives(5);
+    let mut all = expand_rotations(&reps);
+    all.sort();
+    let mut want = all_orderings(5);
+    want.sort();
+    assert_eq!(all, want);
+}

@@ -1,0 +1,249 @@
+//! Native ⇄ PJRT parity: the proof that all three layers compose.
+//!
+//! The native Rust TM (`tm::feedback`) and the AOT-lowered L2/L1 graph
+//! (Pallas kernels under `interpret=True`, lowered to HLO text, executed
+//! by the PJRT CPU client) are driven with the **same** input rows and the
+//! **same** [`StepRands`] streams. TA states must stay bit-identical along
+//! full training trajectories, and inference must agree per datapoint.
+//!
+//! Requires `make artifacts` (skips with a notice otherwise).
+
+use tm_fpga::data::{iris, BlockPlan, SetAllocation};
+use tm_fpga::runtime::{default_artifacts_dir, Client, TmExecutor};
+use tm_fpga::tm::*;
+
+fn load_executor() -> Option<(Client, TmExecutor)> {
+    let dir = default_artifacts_dir();
+    if !dir.join("meta.json").exists() {
+        eprintln!(
+            "SKIP: artifacts not found in {} — run `make artifacts`",
+            dir.display()
+        );
+        return None;
+    }
+    let client = Client::cpu().expect("PJRT CPU client");
+    let exe = TmExecutor::load(&client, &dir).expect("load artifacts");
+    Some((client, exe))
+}
+
+fn paper_data(shape: &TmShape) -> Vec<(Input, usize)> {
+    let plan = BlockPlan::stratified(iris::booleanised(), 5, 7).unwrap();
+    let sets = plan.sets(&[0, 1, 2, 3, 4], SetAllocation::paper()).unwrap();
+    sets.offline.pack(shape)
+}
+
+#[test]
+fn train_trajectory_bit_identical() {
+    let Some((_c, exe)) = load_executor() else { return };
+    let shape = exe.meta.shape.clone();
+    let params = TmParams::paper_offline(&shape);
+    let data = paper_data(&shape);
+    let mut tm = MultiTm::new(&shape).unwrap();
+    let mut rng = Xoshiro256::new(0xBEEF_CAFE);
+
+    // 3 epochs over the 30-row offline set = 90 steps, checked at every
+    // step: the PJRT path computes next-state from the same current state
+    // and randomness the native path consumes.
+    for epoch in 0..3 {
+        for (i, (x, y)) in data.iter().enumerate() {
+            let r = StepRands::draw(&mut rng, &shape);
+            let pjrt_next = exe
+                .train_step(&tm, x, *y, &params, &r)
+                .expect("pjrt train step");
+            train_step(&mut tm, x, *y, &params, &r);
+            assert_eq!(
+                tm.ta().states(),
+                &pjrt_next[..],
+                "state diverged at epoch {epoch} step {i}"
+            );
+        }
+    }
+}
+
+#[test]
+fn inference_agrees_on_trained_machine() {
+    let Some((_c, exe)) = load_executor() else { return };
+    let shape = exe.meta.shape.clone();
+    let params = TmParams::paper_offline(&shape);
+    let data = paper_data(&shape);
+    let mut tm = MultiTm::new(&shape).unwrap();
+    let mut rng = Xoshiro256::new(0x1234);
+    for _ in 0..5 {
+        for (x, y) in &data {
+            let r = StepRands::draw(&mut rng, &shape);
+            train_step(&mut tm, x, *y, &params, &r);
+        }
+    }
+    for (x, _) in &data {
+        let (native_sums, native_pred) = tm.infer(x, &params);
+        let (pjrt_sums, pjrt_pred) = exe.infer(&tm, x, &params).expect("pjrt infer");
+        assert_eq!(&pjrt_sums[..params.active_classes], &native_sums[..]);
+        assert_eq!(pjrt_pred, native_pred);
+    }
+}
+
+#[test]
+fn parity_holds_under_faults_and_overprovisioning() {
+    let Some((_c, exe)) = load_executor() else { return };
+    let shape = exe.meta.shape.clone();
+    let mut params = TmParams::paper_online(&shape); // s = 1 path
+    params.active_clauses = 12; // clause-number port below max
+    let data = paper_data(&shape);
+    let mut tm = MultiTm::new(&shape).unwrap();
+    tm.set_fault_map(
+        FaultMap::even_spread(&shape, 0.20, Fault::StuckAt0, 99).unwrap(),
+    );
+    let mut rng = Xoshiro256::new(0xFA57);
+    for (i, (x, y)) in data.iter().enumerate().take(60) {
+        let r = StepRands::draw(&mut rng, &shape);
+        let pjrt_next = exe.train_step(&tm, x, *y, &params, &r).expect("pjrt");
+        train_step(&mut tm, x, *y, &params, &r);
+        assert_eq!(tm.ta().states(), &pjrt_next[..], "diverged at step {i}");
+        if i % 10 == 0 {
+            let (s_native, p_native) = tm.infer(x, &params);
+            let (s_pjrt, p_pjrt) = exe.infer(&tm, x, &params).unwrap();
+            assert_eq!(&s_pjrt[..params.active_classes], &s_native[..]);
+            assert_eq!(p_pjrt, p_native);
+        }
+    }
+}
+
+#[test]
+fn epoch_scan_matches_stepwise_native() {
+    // The scan artifact (one dispatch per pass) must land on exactly the
+    // same TA states as N native per-datapoint steps — including the
+    // no-op padding rows.
+    let Some((_c, exe)) = load_executor() else { return };
+    if exe.meta.epoch_steps == 0 {
+        eprintln!("SKIP: artifacts lack tm_train_epoch");
+        return;
+    }
+    let shape = exe.meta.shape.clone();
+    let params = TmParams::paper_online(&shape); // the online-pass config
+    let data = paper_data(&shape); // 30 rows < epoch_steps=60 -> padding
+    let mut rng = Xoshiro256::new(0xE90C);
+    let steps: Vec<(Input, usize, StepRands)> = data
+        .iter()
+        .map(|(x, y)| (x.clone(), *y, StepRands::draw(&mut rng, &shape)))
+        .collect();
+    let mut tm = MultiTm::new(&shape).unwrap();
+    // Pre-train a little so the pass starts from a non-trivial state.
+    let mut rng2 = Xoshiro256::new(0xAAA);
+    for (x, y) in &data {
+        let r = StepRands::draw(&mut rng2, &shape);
+        train_step(&mut tm, x, *y, &TmParams::paper_offline(&shape), &r);
+    }
+    let pjrt_final = exe.train_epoch(&tm, &steps, &params).expect("epoch");
+    for (x, y, r) in &steps {
+        train_step(&mut tm, x, *y, &params, r);
+    }
+    assert_eq!(tm.ta().states(), &pjrt_final[..], "scan diverged from stepwise");
+}
+
+#[test]
+fn epoch_scan_rejects_oversized_pass() {
+    let Some((_c, exe)) = load_executor() else { return };
+    if exe.meta.epoch_steps == 0 {
+        return;
+    }
+    let shape = exe.meta.shape.clone();
+    let params = TmParams::paper_online(&shape);
+    let data = paper_data(&shape);
+    let mut rng = Xoshiro256::new(1);
+    let steps: Vec<(Input, usize, StepRands)> = data
+        .iter()
+        .cycle()
+        .take(exe.meta.epoch_steps + 1)
+        .map(|(x, y)| (x.clone(), *y, StepRands::draw(&mut rng, &shape)))
+        .collect();
+    let tm = MultiTm::new(&shape).unwrap();
+    assert!(exe.train_epoch(&tm, &steps, &params).is_err());
+}
+
+#[test]
+fn runtime_failure_paths() {
+    use tm_fpga::runtime::ArtifactMeta;
+    // Missing directory.
+    assert!(ArtifactMeta::load(std::path::Path::new("/nonexistent/dir")).is_err());
+    // Corrupt meta.json.
+    let dir = std::env::temp_dir().join("tmfpga_bad_artifacts");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("meta.json"), "{not json").unwrap();
+    assert!(ArtifactMeta::load(&dir).is_err());
+    // Valid JSON, invalid shape.
+    std::fs::write(
+        dir.join("meta.json"),
+        r#"{"shape": {"classes": 0, "clauses": 16, "features": 16, "states": 100}, "batch": 150, "artifacts": {}}"#,
+    )
+    .unwrap();
+    assert!(ArtifactMeta::load(&dir).is_err(), "shape validation must fire");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn executor_rejects_mismatched_machine() {
+    let Some((_c, exe)) = load_executor() else { return };
+    // A machine with a different structural shape must be refused before
+    // any PJRT call.
+    let other = TmShape { classes: 2, max_clauses: 8, features: 8, states: 16 };
+    let tm = MultiTm::new(&other).unwrap();
+    let x = Input::pack(&other, &vec![false; 8]);
+    let params = TmParams::paper_offline(&other);
+    let err = exe.infer(&tm, &x, &params).unwrap_err().to_string();
+    assert!(err.contains("does not match artifact shape"), "{err}");
+}
+
+#[test]
+fn accuracy_chunks_through_batch_limit() {
+    let Some((_c, exe)) = load_executor() else { return };
+    let shape = exe.meta.shape.clone();
+    let params = TmParams::paper_offline(&shape);
+    // 240 rows > the 150-row padded batch: the accuracy path must chunk.
+    let base = paper_data(&shape);
+    let mut data = Vec::new();
+    for _ in 0..8 {
+        data.extend(base.iter().cloned());
+    }
+    let mut tm = MultiTm::new(&shape).unwrap();
+    let mut rng = Xoshiro256::new(0xC0DE);
+    for _ in 0..5 {
+        for (x, y) in &base {
+            let r = StepRands::draw(&mut rng, &shape);
+            train_step(&mut tm, x, *y, &params, &r);
+        }
+    }
+    let native = tm.accuracy(&data, &params);
+    let pjrt = exe.accuracy(&tm, &data, &params).unwrap();
+    assert!((native - pjrt).abs() < 1e-9);
+}
+
+#[test]
+fn eval_batch_matches_native_accuracy() {
+    let Some((_c, exe)) = load_executor() else { return };
+    let shape = exe.meta.shape.clone();
+    let params = TmParams::paper_offline(&shape);
+    let data = paper_data(&shape);
+    let mut tm = MultiTm::new(&shape).unwrap();
+    let mut rng = Xoshiro256::new(0xACC);
+    for _ in 0..8 {
+        for (x, y) in &data {
+            let r = StepRands::draw(&mut rng, &shape);
+            train_step(&mut tm, x, *y, &params, &r);
+        }
+    }
+    let native_acc = tm.accuracy(&data, &params);
+    let pjrt_acc = exe.accuracy(&tm, &data, &params).unwrap();
+    assert!((native_acc - pjrt_acc).abs() < 1e-9, "{native_acc} vs {pjrt_acc}");
+    // Per-row predictions agree too.
+    let (preds, correct) = exe.eval_batch(&tm, &data, &params).unwrap();
+    let native_correct = data
+        .iter()
+        .zip(preds.iter())
+        .filter(|((x, _), &p)| {
+            let mut tm2 = tm.clone();
+            tm2.predict(x, &params) == p as usize
+        })
+        .count();
+    assert_eq!(native_correct, data.len(), "every row's prediction matches");
+    assert_eq!(correct, (native_acc * data.len() as f64).round() as usize);
+}
