@@ -7,6 +7,11 @@ saturation, selection boundaries).
 
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="hypothesis not in the offline image; property sweeps skip"
+)
 from hypothesis import given, settings, strategies as st
 
 from compile.kernels import clause as kclause

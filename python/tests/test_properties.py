@@ -8,6 +8,11 @@ mask semantics.
 
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="hypothesis not in the offline image; property sweeps skip"
+)
 from hypothesis import given, settings, strategies as st
 
 from compile import model

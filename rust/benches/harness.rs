@@ -54,6 +54,28 @@ pub fn bench<F: FnMut()>(
     }
 }
 
+/// Write results as machine-readable JSON (one object per row:
+/// `{name, mean_s, min_s, max_s, items_per_rep, throughput}`) so the perf
+/// trajectory can be tracked across PRs (see EXPERIMENTS.md §Perf).
+pub fn write_json(path: &str, results: &[BenchResult]) -> std::io::Result<()> {
+    let mut s = String::from("[\n");
+    for (i, r) in results.iter().enumerate() {
+        s.push_str(&format!(
+            "  {{\"name\": {:?}, \"mean_s\": {:.9}, \"min_s\": {:.9}, \"max_s\": {:.9}, \
+             \"items_per_rep\": {}, \"throughput\": {:.3}}}{}\n",
+            r.name,
+            r.mean_s,
+            r.min_s,
+            r.max_s,
+            r.items_per_rep,
+            r.throughput(),
+            if i + 1 < results.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("]\n");
+    std::fs::write(path, s)
+}
+
 /// Print a results table.
 pub fn report(results: &[BenchResult]) {
     println!(

@@ -2,15 +2,22 @@
 //!
 //! Performance rows: the modelled FPGA datapath (2-cycle inference +
 //! feedback, one datapoint per clock pipelined, at the 100 MHz reference
-//! clock) against measured software paths — the optimized native
-//! bit-parallel implementation, the naive scalar baseline (the paper's
-//! "software implementation" comparator), and the PJRT AOT-artifact path.
+//! clock) against measured software paths — the word-parallel engine
+//! (lazy bit-sliced randomness + word-batched feedback), the scalar
+//! oracle (eager `StepRands`, the L2 parity twin), the naive scalar
+//! baseline (the paper's "software implementation" comparator), and the
+//! PJRT AOT-artifact path.
 //!
 //! Power rows: the calibrated activity model's decomposition (paper:
 //! 1.725 W total, 1.4 W MCU) across gating scenarios.
 //!
+//! Also emits machine-readable `BENCH_1.json` at the repo root (one row
+//! per microbenchmark — see EXPERIMENTS.md §Perf for the methodology and
+//! recorded numbers) so the perf trajectory is tracked across PRs.
+//!
 //! ```sh
-//! make artifacts && cargo bench --bench perf_table
+//! cargo bench --bench perf_table                  # PERF_ITERS=50 default
+//! PERF_ITERS=200 cargo bench --bench perf_table
 //! ```
 
 mod harness;
@@ -25,6 +32,7 @@ fn main() {
         .unwrap_or(50);
     let mut rows = vec![
         perf::fpga_model_row(),
+        perf::engine_row(iters),
         perf::native_row(iters),
         perf::baseline_row(iters),
     ];
@@ -41,11 +49,18 @@ fn main() {
     print!("{}", perf::perf_table(&rows));
 
     let fpga = rows[0].train_dps;
-    let naive = rows[2].train_dps;
+    let engine = rows[1].train_dps;
+    let oracle = rows[2].train_dps;
+    let naive = rows[3].train_dps;
     println!(
         "\nmodelled FPGA vs naive software: {:.0}× on training throughput \
          (the paper's \"minutes … down to a matter of seconds\")",
         fpga / naive
+    );
+    println!(
+        "word-parallel engine vs scalar oracle: {:.1}× training \
+         datapoints/s (PR-1 acceptance floor: 5×)",
+        engine / oracle
     );
 
     println!("\n=== §6 power table ===\n");
@@ -69,25 +84,111 @@ fn main() {
         .unwrap()
         .online
         .pack(&shape);
-    let mut tm = MultiTm::new(&shape).unwrap();
-    let mut rng = Xoshiro256::new(1);
-    let mut rands = StepRands::draw(&mut rng, &shape);
+    let n_rows = data.len() as u64;
     let mut micro = Vec::new();
-    micro.push(harness::bench("train_step x60 (native)", 3, 20, 60, || {
-        for (x, y) in &data {
+
+    {
+        // Seed baseline: eager StepRands refill + scalar train_step.
+        let mut tm = MultiTm::new(&shape).unwrap();
+        let mut rng = Xoshiro256::new(1);
+        let mut rands = StepRands::draw(&mut rng, &shape);
+        micro.push(harness::bench(
+            "train_step x60 (scalar oracle, eager rands)",
+            3,
+            20,
+            n_rows,
+            || {
+                for (x, y) in &data {
+                    rands.refill(&mut rng, &shape);
+                    train_step(&mut tm, x, *y, &params, &rands);
+                }
+            },
+        ));
+    }
+    {
+        // Bit-parallel feedback on the same eager draws (isolates the
+        // word-batched apply from the lazy-randomness win).
+        let mut tm = MultiTm::new(&shape).unwrap();
+        let mut rng = Xoshiro256::new(1);
+        let mut rands = StepRands::draw(&mut rng, &shape);
+        micro.push(harness::bench(
+            "train_step_fast x60 (bit-parallel, eager rands)",
+            3,
+            20,
+            n_rows,
+            || {
+                for (x, y) in &data {
+                    rands.refill(&mut rng, &shape);
+                    train_step_fast(&mut tm, x, *y, &params, &rands);
+                }
+            },
+        ));
+    }
+    {
+        // The full word-parallel engine: lazy bit-sliced randomness.
+        let mut tm = MultiTm::new(&shape).unwrap();
+        let mut rng = Xoshiro256::new(1);
+        micro.push(harness::bench(
+            "train_epoch x60 (word-parallel engine)",
+            3,
+            20,
+            n_rows,
+            || {
+                tm.train_epoch(&data, &params, &mut rng);
+            },
+        ));
+
+        let mut sink = 0usize;
+        micro.push(harness::bench("infer x60 (per-row predict)", 3, 20, n_rows, || {
+            for (x, _) in &data {
+                sink = sink.wrapping_add(tm.predict(x, &params));
+            }
+        }));
+        let inputs: Vec<Input> = data.iter().map(|(x, _)| x.clone()).collect();
+        micro.push(harness::bench("infer x60 (predict_batch)", 3, 20, n_rows, || {
+            sink = sink.wrapping_add(tm.predict_batch(&inputs, &params).len());
+        }));
+        std::hint::black_box(sink);
+    }
+    {
+        let mut rng = Xoshiro256::new(1);
+        let mut rands = StepRands::draw(&mut rng, &shape);
+        micro.push(harness::bench("StepRands refill (eager)", 3, 20, 1, || {
             rands.refill(&mut rng, &shape);
-            train_step(&mut tm, x, *y, &params, &rands);
-        }
-    }));
-    let mut sink = 0usize;
-    micro.push(harness::bench("infer x60 (native)", 3, 20, 60, || {
-        for (x, _) in &data {
-            sink = sink.wrapping_add(tm.predict(x, &params));
-        }
-    }));
-    std::hint::black_box(sink);
-    micro.push(harness::bench("StepRands refill", 3, 20, 1, || {
-        rands.refill(&mut rng, &shape);
-    }));
+        }));
+        let bern = BernoulliPlan::new(params.p_weaken());
+        micro.push(harness::bench("BernoulliPlan 64-bit mask", 3, 20, 64, || {
+            std::hint::black_box(bern.mask(&mut rng));
+        }));
+    }
     harness::report(&micro);
+    println!(
+        "\neager StepRands cost the engine avoids: {} next_u64 draws per step (iris shape)",
+        tm_fpga::tm::engine::eager_draws_per_step(&shape)
+    );
+
+    // Headline engine-vs-oracle rows land in BENCH_1.json too.
+    let mut json_rows = micro;
+    json_rows.push(harness::BenchResult {
+        name: "perf_row: train dp/s (word-parallel engine)".into(),
+        mean_s: if engine > 0.0 { 1.0 / engine } else { 0.0 },
+        min_s: 0.0,
+        max_s: 0.0,
+        reps: iters,
+        items_per_rep: 1,
+    });
+    json_rows.push(harness::BenchResult {
+        name: "perf_row: train dp/s (scalar oracle)".into(),
+        mean_s: if oracle > 0.0 { 1.0 / oracle } else { 0.0 },
+        min_s: 0.0,
+        max_s: 0.0,
+        reps: iters,
+        items_per_rep: 1,
+    });
+    let root = std::env::var("CARGO_MANIFEST_DIR").unwrap_or_else(|_| ".".into());
+    let path = format!("{root}/BENCH_1.json");
+    match harness::write_json(&path, &json_rows) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\nfailed to write {path}: {e}"),
+    }
 }

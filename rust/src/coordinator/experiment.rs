@@ -2,6 +2,12 @@
 //! each a specific staging of the FPGA system over the 120-ordering
 //! cross-validation sweep (§3.6.1), fanned out across threads.
 //!
+//! Training inside each run goes through the word-parallel engine
+//! (`tm::engine::train_step_fast` via `fpga::system`) — bit-identical to
+//! the scalar oracle given the same `StepRands`, so every figure below is
+//! unchanged from the oracle's output while running the fast datapath;
+//! accuracy analysis uses the batched class-fanned inference path.
+//!
 //! | Figure | Staging                                                        |
 //! |--------|----------------------------------------------------------------|
 //! | Fig 4  | labelled online learning, 16 iterations                        |

@@ -11,7 +11,7 @@
 //! further mitigate the effect of faulty TAs").
 
 use crate::tm::clause::Input;
-use crate::tm::feedback::train_step;
+use crate::tm::engine::train_step_fast;
 use crate::tm::machine::MultiTm;
 use crate::tm::params::TmParams;
 use crate::tm::rng::{StepRands, Xoshiro256};
@@ -106,7 +106,7 @@ pub fn monitor_and_retrain(
             for _ in 0..policy.retrain_epochs {
                 for (rx, ry) in retrain_data {
                     rands.refill(&mut rng, &shape);
-                    train_step(tm, rx, *ry, params, &rands);
+                    train_step_fast(tm, rx, *ry, params, &rands);
                 }
             }
         }
@@ -158,7 +158,7 @@ mod tests {
         for _ in 0..10 {
             for (x, y) in &train {
                 rands.refill(&mut rng, &shape);
-                train_step(&mut tm, x, *y, &params, &rands);
+                train_step_fast(&mut tm, x, *y, &params, &rands);
             }
         }
         let acc_before = tm.accuracy(&eval, &params);
@@ -208,7 +208,7 @@ mod tests {
             for _ in 0..10 {
                 for (x, y) in &train {
                     r2.refill(&mut rng2, &shape);
-                    train_step(&mut tm2, x, *y, &p2, &r2);
+                    train_step_fast(&mut tm2, x, *y, &p2, &r2);
                 }
             }
             let mut map2 = FaultMap::none(&shape);
@@ -242,7 +242,7 @@ mod tests {
         for _ in 0..10 {
             for (x, y) in &train {
                 rands.refill(&mut rng, &shape);
-                train_step(&mut tm, x, *y, &params, &rands);
+                train_step_fast(&mut tm, x, *y, &params, &rands);
             }
         }
         let mut monitor = AccuracyMonitor::new(0.1);

@@ -16,6 +16,7 @@ use crate::fpga::clock::{Clock, Module};
 use crate::fpga::fsm_low::DatapointEngine;
 use crate::fpga::power::{PowerModel, REFERENCE_CLK_HZ};
 use crate::fpga::system::{FpgaSystem, SystemConfig};
+use crate::tm::clause::Input;
 use crate::tm::feedback::train_step;
 use crate::tm::machine::MultiTm;
 use crate::tm::params::{TmParams, TmShape};
@@ -72,10 +73,48 @@ pub fn native_row(iters: usize) -> PerfRow {
     let infer_dps = n as f64 / t0.elapsed().as_secs_f64();
     std::hint::black_box(sink);
     PerfRow {
-        path: "rust native (bit-parallel)".into(),
+        path: "rust native (scalar oracle)".into(),
         train_dps,
         infer_dps,
-        note: "optimized L3 software path".into(),
+        note: "eager StepRands + per-literal feedback (L2 parity twin)".into(),
+    }
+}
+
+/// Measured throughput of the word-parallel engine: lazy step randomness
+/// (bit-sliced Bernoulli masks, drawn only for selected clauses) +
+/// word-batched TA feedback for training, and the class-fanned batched
+/// inference path.
+pub fn engine_row(iters: usize) -> PerfRow {
+    let shape = TmShape::iris();
+    let params = TmParams::paper_offline(&shape);
+    let data = bench_data(&shape);
+    let mut tm = MultiTm::new(&shape).unwrap();
+    let mut rng = Xoshiro256::new(1);
+
+    let t0 = Instant::now();
+    let mut n = 0u64;
+    for _ in 0..iters {
+        let stats = tm.train_epoch(&data, &params, &mut rng);
+        n += stats.steps as u64;
+    }
+    let train_dps = n as f64 / t0.elapsed().as_secs_f64();
+
+    let inputs: Vec<Input> = data.iter().map(|(x, _)| x.clone()).collect();
+    let t0 = Instant::now();
+    let mut n = 0u64;
+    let mut sink = 0usize;
+    for _ in 0..iters * 4 {
+        let preds = tm.predict_batch(&inputs, &params);
+        sink = sink.wrapping_add(preds.iter().sum::<usize>());
+        n += preds.len() as u64;
+    }
+    let infer_dps = n as f64 / t0.elapsed().as_secs_f64();
+    std::hint::black_box(sink);
+    PerfRow {
+        path: "rust native (word-parallel engine)".into(),
+        train_dps,
+        infer_dps,
+        note: "lazy bit-sliced rands + word-batched feedback".into(),
     }
 }
 
@@ -335,6 +374,18 @@ mod tests {
             naive.infer_dps
         );
         assert!(native.train_dps > 0.0 && naive.train_dps > 0.0);
+    }
+
+    #[test]
+    fn engine_row_measures_real_throughput() {
+        // The ≥5× acceptance (and any ordering assertion) lives in the
+        // perf_table bench at realistic iteration counts — wall-clock
+        // comparisons inside `cargo test` on shared CI runners are
+        // flaky by construction, so here only sanity-check the row.
+        let engine = engine_row(6);
+        assert!(engine.train_dps > 0.0);
+        assert!(engine.infer_dps > 0.0);
+        assert!(engine.path.contains("word-parallel"));
     }
 
     #[test]

@@ -9,7 +9,7 @@
 
 use crate::data::blocks::{BlockPlan, SetAllocation};
 use crate::data::iris;
-use crate::tm::feedback::train_step;
+use crate::tm::engine::train_step_fast;
 use crate::tm::machine::MultiTm;
 use crate::tm::params::{TmParams, TmShape};
 use crate::tm::rng::{StepRands, Xoshiro256};
@@ -51,7 +51,7 @@ pub fn run_with_replay(
     for _ in 0..10 {
         for (x, y) in &offline_train {
             rands.refill(&mut rng, &shape);
-            train_step(&mut tm, x, *y, &p_off, &rands);
+            train_step_fast(&mut tm, x, *y, &p_off, &rands);
         }
     }
 
@@ -66,7 +66,7 @@ pub fn run_with_replay(
         let mut since_replay = 0usize;
         for (x, y) in &online {
             rands.refill(&mut rng, &shape);
-            train_step(&mut tm, x, *y, &p_on, &rands);
+            train_step_fast(&mut tm, x, *y, &p_on, &rands);
             since_replay += 1;
             if let Some(k) = replay_interval {
                 if since_replay >= k {
@@ -74,7 +74,7 @@ pub fn run_with_replay(
                     let (rx, ry) = &offline_train[replay_pos % offline_train.len()];
                     replay_pos += 1;
                     rands.refill(&mut rng, &shape);
-                    train_step(&mut tm, rx, *ry, &p_on, &rands);
+                    train_step_fast(&mut tm, rx, *ry, &p_on, &rands);
                 }
             }
         }

@@ -9,7 +9,7 @@
 
 use crate::data::blocks::{all_orderings, BlockPlan, SetAllocation};
 use crate::data::iris;
-use crate::tm::feedback::train_step;
+use crate::tm::engine::train_step_fast;
 use crate::tm::machine::MultiTm;
 use crate::tm::params::{TmParams, TmShape};
 use crate::tm::rng::{StepRands, Xoshiro256};
@@ -82,7 +82,7 @@ pub fn evaluate_cell(
         for _ in 0..epochs {
             for (x, y) in &train {
                 rands.refill(&mut rng, shape);
-                train_step(&mut tm, x, *y, &params, &rands);
+                train_step_fast(&mut tm, x, *y, &params, &rands);
             }
         }
         val_acc += tm.accuracy(&val, &params);

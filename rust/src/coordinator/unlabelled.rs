@@ -11,7 +11,7 @@
 //! whose *best* sum is low (no class's clauses claim them).
 
 use crate::tm::clause::Input;
-use crate::tm::feedback::train_step;
+use crate::tm::engine::train_step_fast;
 use crate::tm::machine::MultiTm;
 use crate::tm::params::TmParams;
 use crate::tm::rng::{StepRands, Xoshiro256};
@@ -77,7 +77,8 @@ pub fn unlabelled_pass(
         let c = confidence(tm, x, params_infer);
         if c.margin >= policy.min_margin {
             rands.refill(rng, &shape);
-            train_step(tm, x, c.prediction, params_train, rands);
+            // Word-parallel engine, bit-identical to the scalar oracle.
+            train_step_fast(tm, x, c.prediction, params_train, rands);
             stats.trained += 1;
             if c.prediction == *y {
                 stats.pseudo_correct += 1;
@@ -136,7 +137,7 @@ mod tests {
         for _ in 0..epochs {
             for (x, y) in data {
                 rands.refill(&mut rng, shape);
-                train_step(&mut tm, x, *y, params, &rands);
+                train_step_fast(&mut tm, x, *y, params, &rands);
             }
         }
         tm

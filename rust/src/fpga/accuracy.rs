@@ -90,9 +90,13 @@ impl AccuracyAnalyzer {
         clock.set_enabled(Module::TmCore, false);
         clock.toggle(Module::AccuracyAnalysis, rows.len() as u64);
 
-        let errors = rows
+        // Batched inference path (class fan-out over scoped threads for
+        // large sets; row-identical to per-row `predict`).
+        let preds = tm.predict_batch_labelled(&rows, params);
+        let errors = preds
             .iter()
-            .filter(|(x, y)| tm.predict(x, params) != *y)
+            .zip(rows.iter())
+            .filter(|(p, (_, y))| **p != *y)
             .count();
         let rec = AccuracyRecord {
             set,

@@ -13,7 +13,8 @@
 
 use crate::fpga::clock::{Clock, Module};
 use crate::tm::clause::Input;
-use crate::tm::feedback::{train_step, StepActivity};
+use crate::tm::engine::train_step_fast;
+use crate::tm::feedback::StepActivity;
 use crate::tm::machine::MultiTm;
 use crate::tm::params::TmParams;
 use crate::tm::rng::StepRands;
@@ -123,7 +124,10 @@ impl DatapointEngine {
         let activity = match op {
             Op::Infer => StepActivity::default(),
             Op::Train { target, rands } => {
-                let act = train_step(tm, x, *target, params, rands);
+                // Word-parallel engine — bit-identical to the scalar
+                // oracle given the same StepRands, so the RTL model's
+                // numerics (and cycle/toggle accounting) are unchanged.
+                let act = train_step_fast(tm, x, *target, params, rands);
                 clock.toggle(Module::TmCore, act.total_updates() as u64);
                 act
             }

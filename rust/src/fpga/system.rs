@@ -219,7 +219,10 @@ impl FpgaSystem {
         let shape = self.cfg.shape.clone();
         for (x, y) in &rows {
             self.rands.refill(&mut self.rng, &shape);
-            let act = crate::tm::feedback::train_step(&mut self.tm, x, *y, &params, &self.rands);
+            // Word-parallel engine (bit-identical to the scalar oracle
+            // given the same StepRands — figures are unchanged).
+            let act =
+                crate::tm::engine::train_step_fast(&mut self.tm, x, *y, &params, &self.rands);
             self.clock.toggle(Module::TmCore, act.total_updates() as u64);
             self.engine.processed += 1;
         }
@@ -362,7 +365,8 @@ impl FpgaSystem {
                 break; // source fully filtered/dry
             };
             self.rands.refill(&mut self.rng, &shape);
-            let act = crate::tm::feedback::train_step(&mut self.tm, &x, y, &params, &self.rands);
+            let act =
+                crate::tm::engine::train_step_fast(&mut self.tm, &x, y, &params, &self.rands);
             self.clock.toggle(Module::TmCore, act.total_updates() as u64);
             self.engine.processed += 1;
         }

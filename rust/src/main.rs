@@ -114,6 +114,7 @@ fn cmd_perf(cli: &Cli) -> Result<()> {
     let pjrt_steps = cli.flag_usize("pjrt-steps", 60)?;
     let mut rows = vec![
         coordinator::fpga_model_row(),
+        coordinator::engine_row(iters),
         coordinator::native_row(iters),
         coordinator::baseline_row(iters),
     ];

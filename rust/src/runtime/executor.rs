@@ -9,44 +9,14 @@
 
 use crate::runtime::bridge;
 use crate::runtime::client::{Client, Executable};
-use crate::runtime::json::Json;
+use crate::runtime::meta::ArtifactMeta;
 use crate::tm::clause::Input;
 use crate::tm::feedback::class_signs;
 use crate::tm::machine::MultiTm;
-use crate::tm::params::{TmParams, TmShape};
+use crate::tm::params::TmParams;
 use crate::tm::rng::StepRands;
 use anyhow::{bail, Context, Result};
-use std::path::{Path, PathBuf};
-
-/// Structural metadata read from `meta.json`.
-#[derive(Debug, Clone, PartialEq, Eq)]
-pub struct ArtifactMeta {
-    pub shape: TmShape,
-    pub batch: usize,
-    /// Scan length of the `tm_train_epoch` artifact (0 when absent —
-    /// older artifact directories).
-    pub epoch_steps: usize,
-}
-
-impl ArtifactMeta {
-    pub fn load(dir: &Path) -> Result<Self> {
-        let path = dir.join("meta.json");
-        let text = std::fs::read_to_string(&path)
-            .with_context(|| format!("reading {}", path.display()))?;
-        let j = Json::parse(&text).context("parsing meta.json")?;
-        let s = j.get("shape")?;
-        let shape = TmShape {
-            classes: s.get("classes")?.as_usize()?,
-            max_clauses: s.get("clauses")?.as_usize()?,
-            features: s.get("features")?.as_usize()?,
-            states: s.get("states")?.as_usize()? as u32,
-        };
-        shape.validate()?;
-        let epoch_steps =
-            j.get("epoch_steps").ok().and_then(|v| v.as_usize().ok()).unwrap_or(0);
-        Ok(ArtifactMeta { shape, batch: j.get("batch")?.as_usize()?, epoch_steps })
-    }
-}
+use std::path::Path;
 
 /// PJRT-backed TM compute engine.
 pub struct TmExecutor {
@@ -55,13 +25,6 @@ pub struct TmExecutor {
     train: Executable,
     train_epoch: Option<Executable>,
     eval: Executable,
-}
-
-/// Default artifacts directory: `$TMFPGA_ARTIFACTS` or `./artifacts`.
-pub fn default_artifacts_dir() -> PathBuf {
-    std::env::var_os("TMFPGA_ARTIFACTS")
-        .map(PathBuf::from)
-        .unwrap_or_else(|| PathBuf::from("artifacts"))
 }
 
 impl TmExecutor {

@@ -1,0 +1,45 @@
+//! Artifact metadata — the xla-free half of the runtime. Lives outside
+//! the `pjrt` feature gate so artifact validation (and its tests in
+//! `rust/tests/parity.rs`) run in every build.
+
+use crate::runtime::json::Json;
+use crate::tm::params::TmShape;
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Structural metadata read from `meta.json`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArtifactMeta {
+    pub shape: TmShape,
+    pub batch: usize,
+    /// Scan length of the `tm_train_epoch` artifact (0 when absent —
+    /// older artifact directories).
+    pub epoch_steps: usize,
+}
+
+impl ArtifactMeta {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("meta.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).context("parsing meta.json")?;
+        let s = j.get("shape")?;
+        let shape = TmShape {
+            classes: s.get("classes")?.as_usize()?,
+            max_clauses: s.get("clauses")?.as_usize()?,
+            features: s.get("features")?.as_usize()?,
+            states: s.get("states")?.as_usize()? as u32,
+        };
+        shape.validate()?;
+        let epoch_steps =
+            j.get("epoch_steps").ok().and_then(|v| v.as_usize().ok()).unwrap_or(0);
+        Ok(ArtifactMeta { shape, batch: j.get("batch")?.as_usize()?, epoch_steps })
+    }
+}
+
+/// Default artifacts directory: `$TMFPGA_ARTIFACTS` or `./artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var_os("TMFPGA_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}

@@ -2,11 +2,43 @@
 //! (HLO text) and executes them on the `xla` crate's CPU client. This is
 //! the only place the L3 coordinator touches the L2/L1 graph; python never
 //! runs on the request path.
+//!
+//! The `xla` crate is not vendored into the offline build image, so the
+//! executing half ([`bridge`], [`client`], [`executor`]) is gated behind
+//! the `pjrt` feature. The default build uses [`stub`], whose entry points
+//! fail with a clear message; artifact metadata parsing ([`meta`]) and the
+//! JSON reader ([`json`]) are always available, so `meta.json` validation
+//! and its tests run in every configuration.
 
-pub mod bridge;
-pub mod client;
-pub mod executor;
 pub mod json;
+pub mod meta;
 
+// Mechanical tripwire: the gated modules below `use xla::…`, which is not
+// a declared dependency (the offline image doesn't carry it). Without
+// this guard, `--features pjrt` dies with an opaque E0433 inside
+// bridge.rs. To actually enable PJRT: add `xla` to [dependencies] in
+// Cargo.toml and delete this compile_error.
+#[cfg(feature = "pjrt")]
+compile_error!(
+    "the `pjrt` feature needs the external `xla` crate: add it to \
+     [dependencies] in Cargo.toml and remove this guard in \
+     rust/src/runtime/mod.rs (the offline build image does not ship xla)"
+);
+
+#[cfg(feature = "pjrt")]
+pub mod bridge;
+#[cfg(feature = "pjrt")]
+pub mod client;
+#[cfg(feature = "pjrt")]
+pub mod executor;
+#[cfg(not(feature = "pjrt"))]
+pub mod stub;
+
+pub use meta::{default_artifacts_dir, ArtifactMeta};
+
+#[cfg(feature = "pjrt")]
 pub use client::{Client, Executable};
-pub use executor::{default_artifacts_dir, ArtifactMeta, TmExecutor};
+#[cfg(feature = "pjrt")]
+pub use executor::TmExecutor;
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{Client, Executable, TmExecutor};

@@ -1,0 +1,95 @@
+//! Stub runtime used when the `pjrt` feature is off (the default: the
+//! offline build image has no `xla` crate). Keeps every call site —
+//! `coordinator::perf`, the CLI `parity` command, `rust/tests/parity.rs` —
+//! compiling; all entry points fail with a clear message instead of
+//! executing artifacts. The artifact-existence checks in those call sites
+//! mean the stub is only ever reached when someone has artifacts on disk
+//! but built without PJRT support.
+
+use crate::runtime::meta::ArtifactMeta;
+use crate::tm::clause::Input;
+use crate::tm::machine::MultiTm;
+use crate::tm::params::TmParams;
+use crate::tm::rng::StepRands;
+use anyhow::{bail, Result};
+use std::path::Path;
+
+const UNAVAILABLE: &str =
+    "PJRT runtime unavailable: built without the `pjrt` feature (requires the \
+     external `xla` crate — see rust/src/runtime/mod.rs)";
+
+/// Placeholder for the PJRT CPU client.
+pub struct Client;
+
+impl Client {
+    pub fn cpu() -> Result<Self> {
+        bail!("{UNAVAILABLE}")
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable".to_string()
+    }
+}
+
+/// Placeholder for a compiled artifact.
+pub struct Executable;
+
+/// Placeholder executor; `load` always fails (after validating the
+/// metadata, so malformed artifact directories still error usefully).
+pub struct TmExecutor {
+    pub meta: ArtifactMeta,
+}
+
+impl TmExecutor {
+    pub fn load(_client: &Client, dir: &Path) -> Result<Self> {
+        let _ = ArtifactMeta::load(dir)?;
+        bail!("{UNAVAILABLE}")
+    }
+
+    pub fn infer(
+        &self,
+        _tm: &MultiTm,
+        _x: &Input,
+        _params: &TmParams,
+    ) -> Result<(Vec<i32>, usize)> {
+        bail!("{UNAVAILABLE}")
+    }
+
+    pub fn train_step(
+        &self,
+        _tm: &MultiTm,
+        _x: &Input,
+        _target: usize,
+        _params: &TmParams,
+        _rands: &StepRands,
+    ) -> Result<Vec<u32>> {
+        bail!("{UNAVAILABLE}")
+    }
+
+    pub fn train_epoch(
+        &self,
+        _tm: &MultiTm,
+        _steps: &[(Input, usize, StepRands)],
+        _params: &TmParams,
+    ) -> Result<Vec<u32>> {
+        bail!("{UNAVAILABLE}")
+    }
+
+    pub fn eval_batch(
+        &self,
+        _tm: &MultiTm,
+        _data: &[(Input, usize)],
+        _params: &TmParams,
+    ) -> Result<(Vec<i32>, usize)> {
+        bail!("{UNAVAILABLE}")
+    }
+
+    pub fn accuracy(
+        &self,
+        _tm: &MultiTm,
+        _data: &[(Input, usize)],
+        _params: &TmParams,
+    ) -> Result<f64> {
+        bail!("{UNAVAILABLE}")
+    }
+}

@@ -20,6 +20,22 @@ pub struct TaBlock {
     states: Vec<u32>,
 }
 
+/// Result of one batched word update ([`TaBlock::update_word`]): applied
+/// move counts plus bitmasks of the TAs whose include/exclude action
+/// flipped, so the machine can patch its packed action cache with one
+/// read-modify-write per word instead of one per literal.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WordUpdate {
+    /// Increments actually applied (saturated TAs excluded).
+    pub applied_incs: u32,
+    /// Decrements actually applied (saturated TAs excluded).
+    pub applied_decs: u32,
+    /// Bits whose action flipped exclude → include.
+    pub now_include: u64,
+    /// Bits whose action flipped include → exclude.
+    pub now_exclude: u64,
+}
+
 /// What a saturating transition did — used by the machine to keep its
 /// packed include-action cache coherent without re-scanning all TAs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -127,6 +143,56 @@ impl TaBlock {
         }
     }
 
+    /// Batched saturating updates over one 64-literal word of clause
+    /// `(class, clause)`: increment the TAs at set bits of `inc`,
+    /// decrement those at set bits of `dec`. The masks must be disjoint
+    /// and must only cover valid literals of the word (`word * 64 + bit <
+    /// literals`). Equivalent to per-bit [`TaBlock::increment`] /
+    /// [`TaBlock::decrement`] calls — the word-parallel feedback engine's
+    /// bulk path.
+    #[inline]
+    pub fn update_word(
+        &mut self,
+        class: usize,
+        clause: usize,
+        word: usize,
+        inc: u64,
+        dec: u64,
+    ) -> WordUpdate {
+        debug_assert_eq!(inc & dec, 0, "inc/dec masks must be disjoint");
+        let thr = self.shape.include_threshold();
+        let max = self.shape.max_state();
+        let base = self.idx(class, clause, word * 64);
+        let mut up = WordUpdate::default();
+        let mut m = inc;
+        while m != 0 {
+            let k = m.trailing_zeros() as usize;
+            m &= m - 1;
+            let s = &mut self.states[base + k];
+            if *s < max {
+                *s += 1;
+                up.applied_incs += 1;
+                if *s == thr {
+                    up.now_include |= 1u64 << k;
+                }
+            }
+        }
+        let mut m = dec;
+        while m != 0 {
+            let k = m.trailing_zeros() as usize;
+            m &= m - 1;
+            let s = &mut self.states[base + k];
+            if *s > 0 {
+                *s -= 1;
+                up.applied_decs += 1;
+                if *s + 1 == thr {
+                    up.now_exclude |= 1u64 << k;
+                }
+            }
+        }
+        up
+    }
+
     /// Number of TAs currently in the include action (diagnostic; the
     /// paper's explainability angle — clause composition — reads this).
     pub fn include_count(&self) -> usize {
@@ -224,6 +290,65 @@ mod tests {
         assert_eq!(inc.len(), 32);
         assert!(inc[0] && inc[31]);
         assert_eq!(inc.iter().filter(|&&x| x).count(), 2);
+    }
+
+    /// Property: `update_word` is exactly the per-bit increment/decrement
+    /// loop — states, applied counts and flip masks all agree.
+    #[test]
+    fn prop_update_word_matches_scalar() {
+        use crate::tm::rng::Xoshiro256;
+        // 80 literals -> 2 words, the second partially filled.
+        let s = TmShape { classes: 2, max_clauses: 4, features: 40, states: 4 };
+        let mut rng = Xoshiro256::new(0x0b17);
+        for trial in 0..500 {
+            let states: Vec<u32> =
+                (0..s.num_tas()).map(|_| rng.next_below(2 * 4) as u32).collect();
+            let mut a = TaBlock::from_states(&s, states.clone()).unwrap();
+            let mut b = TaBlock::from_states(&s, states).unwrap();
+            let c = rng.next_below(s.classes);
+            let j = rng.next_below(s.max_clauses);
+            let w = rng.next_below(s.words());
+            let valid: u64 = if (w + 1) * 64 <= s.literals() {
+                !0
+            } else {
+                (1u64 << (s.literals() - w * 64)) - 1
+            };
+            let inc = rng.next_u64() & valid;
+            let dec = rng.next_u64() & valid & !inc;
+            let up = a.update_word(c, j, w, inc, dec);
+            // Scalar oracle.
+            let (mut incs, mut decs) = (0u32, 0u32);
+            let (mut now_inc, mut now_exc) = (0u64, 0u64);
+            for k in 0..64u64 {
+                let lit = w * 64 + k as usize;
+                if inc & (1 << k) != 0 {
+                    match b.increment(c, j, lit) {
+                        Transition::NowInclude => {
+                            incs += 1;
+                            now_inc |= 1 << k;
+                        }
+                        Transition::Moved => incs += 1,
+                        Transition::Saturated => {}
+                        Transition::NowExclude => unreachable!(),
+                    }
+                } else if dec & (1 << k) != 0 {
+                    match b.decrement(c, j, lit) {
+                        Transition::NowExclude => {
+                            decs += 1;
+                            now_exc |= 1 << k;
+                        }
+                        Transition::Moved => decs += 1,
+                        Transition::Saturated => {}
+                        Transition::NowInclude => unreachable!(),
+                    }
+                }
+            }
+            assert_eq!(a.states(), b.states(), "trial {trial}");
+            assert_eq!(up.applied_incs, incs, "trial {trial}");
+            assert_eq!(up.applied_decs, decs, "trial {trial}");
+            assert_eq!(up.now_include, now_inc, "trial {trial}");
+            assert_eq!(up.now_exclude, now_exc, "trial {trial}");
+        }
     }
 
     /// Property: a random walk of increments/decrements never leaves the

@@ -197,6 +197,26 @@ impl MultiTm {
         any || mode == EvalMode::Train
     }
 
+    /// Single-word fault-free clause predicate: fires iff no included
+    /// literal is 0, with the empty-clause convention folded in. Shared
+    /// by the per-row and batched fast paths so the semantics cannot
+    /// drift apart.
+    #[inline]
+    fn clause_fires_fast1(action_word: u64, input_word: u64, train: bool) -> bool {
+        (action_word & !input_word == 0) & (train | (action_word != 0))
+    }
+
+    /// Clause output with the clause-force gate applied (general path) —
+    /// shared by [`MultiTm::evaluate_general`] and the batched kernel.
+    #[inline]
+    fn clause_out_gated(&self, c: usize, j: usize, x: &Input, mode: EvalMode) -> bool {
+        match self.clause_force[c * self.shape.max_clauses + j] {
+            0 => false,
+            1 => true,
+            _ => self.clause_output(c, j, x, mode),
+        }
+    }
+
     /// Fault-free single-word clause evaluation over a whole class row —
     /// the dominant configuration (iris: 32 literals = 1 word), kept
     /// branch-light so the compiler vectorises the clause loop.
@@ -212,7 +232,7 @@ impl MultiTm {
         let mut sum = 0i32;
         for j in 0..params.active_clauses {
             let a = self.actions[base + j];
-            let out = (a & !input_word == 0) & (train | (a != 0));
+            let out = Self::clause_fires_fast1(a, input_word, train);
             self.clause_out[base + j] = out;
             if out {
                 sum += polarity(j);
@@ -244,6 +264,18 @@ impl MultiTm {
             }
             return &self.sums;
         }
+        self.evaluate_general(input, params, mode)
+    }
+
+    /// The general (gate-aware, any-word-count) evaluation path; the
+    /// fast single-word path in [`MultiTm::evaluate`] must agree with
+    /// this exactly whenever both apply (differential-tested below).
+    pub(crate) fn evaluate_general(
+        &mut self,
+        input: &Input,
+        params: &TmParams,
+        mode: EvalMode,
+    ) -> &[i32] {
         for c in 0..self.shape.classes {
             let mut sum = 0i32;
             for j in 0..self.shape.max_clauses {
@@ -251,11 +283,7 @@ impl MultiTm {
                 let out = if c < params.active_classes && j < params.active_clauses {
                     // Clause-output force gate (active clauses only — a
                     // clock-gated clause cannot drive the vote wire).
-                    match self.clause_force[row] {
-                        0 => false,
-                        1 => true,
-                        _ => self.clause_output(c, j, input, mode),
-                    }
+                    self.clause_out_gated(c, j, input, mode)
                 } else {
                     false
                 };
@@ -267,6 +295,152 @@ impl MultiTm {
             self.sums[c] = sum.clamp(-params.t, params.t);
         }
         &self.sums
+    }
+
+    /// Clamped sums of one active class over a batch of rows, written
+    /// into `out[i]` for row `i` — the read-only kernel behind
+    /// [`MultiTm::evaluate_batch`]'s class fan-out (no scratch, so class
+    /// rows can run on separate threads). `proj` extracts the input from
+    /// a row (identity for `&[Input]`, `.0` for labelled tuples), so
+    /// labelled datasets evaluate without cloning their inputs.
+    fn class_sums_into<T: Sync>(
+        &self,
+        c: usize,
+        items: &[T],
+        proj: fn(&T) -> &Input,
+        params: &TmParams,
+        mode: EvalMode,
+        out: &mut [i32],
+    ) {
+        debug_assert_eq!(items.len(), out.len());
+        let train = mode == EvalMode::Train;
+        if self.shape.words() == 1 && self.fault.is_fault_free() && self.clause_faults == 0
+        {
+            // Single-word fault-free fast path, as in evaluate().
+            let base = c * self.shape.max_clauses;
+            for (i, it) in items.iter().enumerate() {
+                let w = proj(it).words()[0];
+                let mut sum = 0i32;
+                for j in 0..params.active_clauses {
+                    if Self::clause_fires_fast1(self.actions[base + j], w, train) {
+                        sum += polarity(j);
+                    }
+                }
+                out[i] = sum.clamp(-params.t, params.t);
+            }
+            return;
+        }
+        for (i, it) in items.iter().enumerate() {
+            let x = proj(it);
+            let mut sum = 0i32;
+            for j in 0..params.active_clauses {
+                if self.clause_out_gated(c, j, x, mode) {
+                    sum += polarity(j);
+                }
+            }
+            out[i] = sum.clamp(-params.t, params.t);
+        }
+    }
+
+    /// Class-major clamped sums over a batch (`result[c * n + i]`),
+    /// classes fanned out across scoped threads when the batch is large
+    /// enough to amortise spawning (the `coordinator::sweep` fan-out
+    /// pattern, §6 "the parallel nature of a hardware-implemented TM")
+    /// — class rows touch disjoint state, so this is a pure
+    /// data-parallel split.
+    fn batch_sums<T: Sync>(
+        &self,
+        items: &[T],
+        proj: fn(&T) -> &Input,
+        params: &TmParams,
+        mode: EvalMode,
+    ) -> Vec<i32> {
+        let n = items.len();
+        let nc = params.active_classes;
+        if n == 0 || nc == 0 {
+            return Vec::new();
+        }
+        let mut sums = vec![0i32; nc * n];
+        // Spawn threshold: clause-evaluations across the whole batch.
+        let work = n * nc * params.active_clauses;
+        if nc == 1 || work < 1 << 15 {
+            for (c, chunk) in sums.chunks_mut(n).enumerate() {
+                self.class_sums_into(c, items, proj, params, mode, chunk);
+            }
+        } else {
+            std::thread::scope(|scope| {
+                for (c, chunk) in sums.chunks_mut(n).enumerate() {
+                    scope.spawn(move || {
+                        self.class_sums_into(c, items, proj, params, mode, chunk)
+                    });
+                }
+            });
+        }
+        sums
+    }
+
+    /// Row-wise argmax over class-major sums (ties to the lowest class
+    /// index, matching [`MultiTm::predict`]).
+    fn argmax_rows(sums: &[i32], n: usize, nc: usize) -> Vec<usize> {
+        (0..n)
+            .map(|i| {
+                let mut best = 0usize;
+                for c in 1..nc {
+                    if sums[c * n + i] > sums[best * n + i] {
+                        best = c;
+                    }
+                }
+                best
+            })
+            .collect()
+    }
+
+    /// Batched evaluation: clamped sums for every active class over a
+    /// batch of inputs, class-major (`result[c * inputs.len() + i]` is
+    /// class `c` on row `i`).
+    pub fn evaluate_batch(
+        &self,
+        inputs: &[Input],
+        params: &TmParams,
+        mode: EvalMode,
+    ) -> Vec<i32> {
+        fn ident(x: &Input) -> &Input {
+            x
+        }
+        self.batch_sums(inputs, ident, params, mode)
+    }
+
+    /// Batched prediction (argmax over active classes, ties to the lowest
+    /// index — identical to [`MultiTm::predict`] row by row).
+    pub fn predict_batch(&self, inputs: &[Input], params: &TmParams) -> Vec<usize> {
+        let sums = self.evaluate_batch(inputs, params, EvalMode::Infer);
+        Self::argmax_rows(&sums, inputs.len(), params.active_classes)
+    }
+
+    /// [`MultiTm::predict_batch`] over labelled rows, borrowing the
+    /// inputs in place (no per-row clone).
+    pub fn predict_batch_labelled(
+        &self,
+        data: &[(Input, usize)],
+        params: &TmParams,
+    ) -> Vec<usize> {
+        fn fst(x: &(Input, usize)) -> &Input {
+            &x.0
+        }
+        let sums = self.batch_sums(data, fst, params, EvalMode::Infer);
+        Self::argmax_rows(&sums, data.len(), params.active_classes)
+    }
+
+    /// Classification accuracy over packed labelled rows via the batched
+    /// inference path (`&self` — no scratch mutation, no input clones).
+    pub fn accuracy_batch(&self, data: &[(Input, usize)], params: &TmParams) -> f64 {
+        if data.is_empty() {
+            return 0.0;
+        }
+        let preds = self.predict_batch_labelled(data, params);
+        let correct =
+            preds.iter().zip(data.iter()).filter(|(p, (_, y))| **p == *y).count();
+        correct as f64 / data.len() as f64
     }
 
     /// Classify one datapoint: clamped class sums + argmax over active
@@ -314,6 +488,35 @@ impl MultiTm {
             let row = self.row(class, clause);
             self.actions[row * w + lit / 64] &= !(1u64 << (lit % 64));
         }
+    }
+
+    /// Word-batched TA feedback: apply disjoint increment/decrement masks
+    /// to one 64-literal word of clause `(class, clause)` and patch the
+    /// packed action cache with a single read-modify-write, instead of a
+    /// cache update per literal (the word-parallel engine's bulk path —
+    /// see EXPERIMENTS.md §Perf). Returns the applied (non-saturated)
+    /// increment/decrement counts, matching
+    /// [`crate::tm::feedback::StepActivity`] semantics.
+    #[inline]
+    pub(crate) fn apply_word_feedback(
+        &mut self,
+        class: usize,
+        clause: usize,
+        word: usize,
+        inc_mask: u64,
+        dec_mask: u64,
+    ) -> (u32, u32) {
+        if inc_mask == 0 && dec_mask == 0 {
+            return (0, 0);
+        }
+        let up = self.ta.update_word(class, clause, word, inc_mask, dec_mask);
+        if up.now_include != 0 || up.now_exclude != 0 {
+            let w = self.shape.words();
+            let row = self.row(class, clause);
+            let a = &mut self.actions[row * w + word];
+            *a = (*a | up.now_include) & !up.now_exclude;
+        }
+        (up.applied_incs, up.applied_decs)
     }
 
     /// Classification accuracy over a set of packed datapoints.
@@ -561,6 +764,176 @@ mod tests {
         tm.set_clause_fault(0, 0, None);
         tm.set_clause_fault(0, 0, None); // double clear is idempotent
         assert_eq!(tm.clause_fault_count(), 1);
+    }
+
+    /// Build a machine with uniformly random TA states (exercising
+    /// random include patterns) on the given shape.
+    fn random_machine(s: &TmShape, seed: u64) -> (MultiTm, Xoshiro256) {
+        let mut rng = Xoshiro256::new(seed);
+        let states: Vec<u32> =
+            (0..s.num_tas()).map(|_| rng.next_below(2 * s.states as usize) as u32).collect();
+        (MultiTm::from_states(s, states).unwrap(), rng)
+    }
+
+    /// Differential: the fast single-word path (`evaluate_class_fast1`)
+    /// must agree with the general gate-aware path on sums AND clause
+    /// outputs, over randomized states/inputs/params.
+    #[test]
+    fn prop_fast1_matches_general_eval() {
+        let s = shape();
+        for trial in 0..200u64 {
+            let (mut tm, mut rng) = random_machine(&s, 0xFA51 + trial);
+            let bits: Vec<bool> = (0..16).map(|_| rng.next_f32() < 0.5).collect();
+            let x = Input::pack(&s, &bits);
+            let mut p = params();
+            p.active_clauses = [4, 8, 16][(trial % 3) as usize];
+            p.active_classes = 1 + (trial % 3) as usize;
+            p.t = [1, 5, 15][(trial % 3) as usize];
+            for mode in [EvalMode::Train, EvalMode::Infer] {
+                // Fast path (words()==1, fault-free, no clause faults).
+                let fast_sums = tm.evaluate(&x, &p, mode).to_vec();
+                let fast_out = tm.clause_out.clone();
+                let gen_sums = tm.evaluate_general(&x, &p, mode).to_vec();
+                let gen_out = tm.clause_out.clone();
+                assert_eq!(fast_sums, gen_sums, "trial {trial} {mode:?}");
+                assert_eq!(fast_out, gen_out, "trial {trial} {mode:?}");
+            }
+        }
+    }
+
+    /// Differential: `evaluate_batch`/`predict_batch` match per-row
+    /// `evaluate`/`predict`, including on multiword shapes and under TA
+    /// fault gates.
+    #[test]
+    fn prop_batch_eval_matches_per_row() {
+        for (si, s) in [
+            shape(),
+            TmShape { classes: 4, max_clauses: 6, features: 40, states: 8 },
+        ]
+        .iter()
+        .enumerate()
+        {
+            let (mut tm, mut rng) = random_machine(s, 0xBA7C + si as u64);
+            if si == 1 {
+                let map = crate::tm::fault::FaultMap::even_spread(
+                    s,
+                    0.15,
+                    crate::tm::fault::Fault::StuckAt0,
+                    7,
+                )
+                .unwrap();
+                tm.set_fault_map(map);
+            }
+            let mut p = TmParams::paper_offline(s);
+            p.active_clauses = s.max_clauses - 2;
+            p.active_classes = s.classes - 1;
+            let inputs: Vec<Input> = (0..50)
+                .map(|_| {
+                    let bits: Vec<bool> =
+                        (0..s.features).map(|_| rng.next_f32() < 0.5).collect();
+                    Input::pack(s, &bits)
+                })
+                .collect();
+            for mode in [EvalMode::Train, EvalMode::Infer] {
+                let batch = tm.evaluate_batch(&inputs, &p, mode);
+                assert_eq!(batch.len(), p.active_classes * inputs.len());
+                for (i, x) in inputs.iter().enumerate() {
+                    let sums = tm.evaluate(x, &p, mode).to_vec();
+                    for c in 0..p.active_classes {
+                        assert_eq!(
+                            batch[c * inputs.len() + i],
+                            sums[c],
+                            "shape {si} row {i} class {c} {mode:?}"
+                        );
+                    }
+                }
+            }
+            let preds = tm.predict_batch(&inputs, &p);
+            for (i, x) in inputs.iter().enumerate() {
+                assert_eq!(preds[i], tm.predict(x, &p), "shape {si} row {i}");
+            }
+            let labelled: Vec<(Input, usize)> =
+                inputs.iter().map(|x| (x.clone(), 0usize)).collect();
+            assert_eq!(tm.predict_batch_labelled(&labelled, &p), preds);
+            assert!((tm.accuracy_batch(&labelled, &p) - tm.accuracy(&labelled, &p)).abs() < 1e-12);
+        }
+    }
+
+    /// The clause-output force gate routes evaluation off the fast
+    /// single-word path; forcing, clearing, and re-forcing must keep the
+    /// two paths consistent at every stage.
+    #[test]
+    fn clause_fault_gate_vs_fast_path_consistency() {
+        let s = shape();
+        let p = params();
+        let (mut tm, mut rng) = random_machine(&s, 0xC1F7);
+        let bits: Vec<bool> = (0..16).map(|_| rng.next_f32() < 0.5).collect();
+        let x = Input::pack(&s, &bits);
+        // Baseline: fast path result (no clause faults).
+        let base_sums = tm.evaluate(&x, &p, EvalMode::Infer).to_vec();
+        let base_out0 = tm.clause_out[0];
+        // Forcing clause (0,0) to the value it already has must not move
+        // the sums, but goes through the general path.
+        tm.set_clause_fault(0, 0, Some(base_out0));
+        assert_eq!(tm.clause_fault_count(), 1);
+        let forced_same = tm.evaluate(&x, &p, EvalMode::Infer).to_vec();
+        assert_eq!(forced_same, base_sums, "agreeing force is a no-op");
+        // Forcing the opposite value moves class 0's sum by exactly the
+        // clause's polarity (clause 0 votes +1).
+        tm.set_clause_fault(0, 0, Some(!base_out0));
+        let flipped = tm.evaluate(&x, &p, EvalMode::Infer).to_vec();
+        let delta = if base_out0 { -1 } else { 1 };
+        assert_eq!(
+            flipped[0],
+            (base_sums[0] + delta).clamp(-p.t, p.t),
+            "forced flip shifts the vote by polarity"
+        );
+        assert_eq!(flipped[1..], base_sums[1..], "other classes untouched");
+        // Clearing the gate restores the fast path bit-for-bit.
+        tm.set_clause_fault(0, 0, None);
+        assert_eq!(tm.clause_fault_count(), 0);
+        let cleared = tm.evaluate(&x, &p, EvalMode::Infer).to_vec();
+        assert_eq!(cleared, base_sums);
+        // And batch evaluation honours the gate exactly like evaluate.
+        tm.set_clause_fault(0, 0, Some(!base_out0));
+        let batch = tm.evaluate_batch(std::slice::from_ref(&x), &p, EvalMode::Infer);
+        assert_eq!(batch[0], flipped[0]);
+        assert_eq!(&batch[1..], &flipped[1..p.active_classes]);
+    }
+
+    /// Word-batched feedback application agrees with the scalar
+    /// ta_increment/ta_decrement path, action cache included.
+    #[test]
+    fn prop_apply_word_feedback_matches_scalar() {
+        let s = shape();
+        for trial in 0..300u64 {
+            let (mut a, mut rng) = random_machine(&s, 0x33AA + trial);
+            let mut b = a.clone();
+            let c = rng.next_below(s.classes);
+            let j = rng.next_below(s.max_clauses);
+            let valid = (1u64 << s.literals()) - 1;
+            let inc = rng.next_u64() & valid;
+            let dec = rng.next_u64() & valid & !inc;
+            let (ai, ad) = a.apply_word_feedback(c, j, 0, inc, dec);
+            let (mut bi, mut bd) = (0u32, 0u32);
+            for k in 0..s.literals() {
+                let before = b.ta().state(c, j, k);
+                if inc & (1u64 << k) != 0 {
+                    b.ta_increment(c, j, k);
+                    if b.ta().state(c, j, k) != before {
+                        bi += 1;
+                    }
+                } else if dec & (1u64 << k) != 0 {
+                    b.ta_decrement(c, j, k);
+                    if b.ta().state(c, j, k) != before {
+                        bd += 1;
+                    }
+                }
+            }
+            assert_eq!(a.ta().states(), b.ta().states(), "trial {trial}");
+            assert_eq!(a.actions, b.actions, "trial {trial}");
+            assert_eq!((ai, ad), (bi, bd), "trial {trial}");
+        }
     }
 
     /// Smoke: training decreases nothing structurally — full training

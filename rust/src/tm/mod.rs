@@ -1,9 +1,17 @@
 //! The Tsetlin machine core (§2 of the paper): automata, clauses,
-//! multiclass machine, Type I/II feedback, fault gates and the
-//! deterministic randomness contract shared with the L2/L1 layers.
+//! multiclass machine, Type I/II feedback, fault gates, the word-parallel
+//! training engine and the deterministic randomness contract shared with
+//! the L2/L1 layers.
+//!
+//! Two training paths coexist deliberately: [`feedback::train_step`] is
+//! the scalar oracle pinned bit-for-bit to the L2 HLO graph
+//! (`rust/tests/parity.rs`), and [`engine`] is the word-parallel fast
+//! path — bit-identical to the oracle given the same [`rng::StepRands`],
+//! with an additional lazy-randomness mode for the hot loops.
 
 pub mod automaton;
 pub mod clause;
+pub mod engine;
 pub mod explain;
 pub mod fault;
 pub mod feedback;
@@ -14,8 +22,9 @@ pub mod state;
 
 pub use automaton::TaBlock;
 pub use clause::{EvalMode, Input};
+pub use engine::{train_step_fast, train_step_lazy, EpochStats, FeedbackPlan};
 pub use fault::{Fault, FaultMap};
 pub use feedback::{train_step, StepActivity};
 pub use machine::MultiTm;
 pub use params::{polarity, TmParams, TmShape};
-pub use rng::{StepRands, Xoshiro256};
+pub use rng::{BernoulliPlan, StepRands, Xoshiro256};

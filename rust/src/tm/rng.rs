@@ -111,6 +111,93 @@ impl Xoshiro256 {
     }
 }
 
+/// Bit-sliced Bernoulli mask generator: one call yields 64 i.i.d.
+/// `Bernoulli(p)` bits packed in a `u64` — the word-parallel engine's
+/// replacement for 64 scalar `next_f32() < p` comparisons.
+///
+/// `p` is quantised to 16 fixed-point bits and the binary expansion is
+/// processed least-significant bit first with one `next_u64` per bit:
+/// `res = r | res` for a 1-bit, `res = r & res` for a 0-bit (the
+/// lane-parallel form of the bitwise `uniform < p` comparator). Trailing
+/// zero bits of the expansion contribute nothing (the running result
+/// starts at 0) and are trimmed, so a mask costs at most 16 draws and
+/// often far fewer — `p = 0.5` costs one, `p ∈ {0, 1}` cost none.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BernoulliPlan {
+    /// Trimmed binary expansion of `p`, least-significant bit first
+    /// (empty when `always` short-circuits).
+    bits: Vec<bool>,
+    /// `Some(false)` ⇒ every bit 0 (`p = 0`); `Some(true)` ⇒ every bit 1
+    /// (`p = 1`); `None` ⇒ generate via `bits`.
+    always: Option<bool>,
+}
+
+impl BernoulliPlan {
+    /// Fixed-point precision of the quantised probability.
+    pub const PRECISION_BITS: u32 = 16;
+
+    pub fn new(p: f32) -> Self {
+        let scale = 1i64 << Self::PRECISION_BITS;
+        let fixed = (p as f64 * scale as f64).round() as i64;
+        if fixed <= 0 {
+            return BernoulliPlan { bits: Vec::new(), always: Some(false) };
+        }
+        if fixed >= scale {
+            return BernoulliPlan { bits: Vec::new(), always: Some(true) };
+        }
+        let fixed = fixed as u32;
+        let tz = fixed.trailing_zeros();
+        let v = fixed >> tz;
+        let nbits = Self::PRECISION_BITS - tz;
+        let bits = (0..nbits).map(|i| (v >> i) & 1 == 1).collect();
+        BernoulliPlan { bits, always: None }
+    }
+
+    /// The event never fires (`p` quantised to 0).
+    pub fn is_never(&self) -> bool {
+        self.always == Some(false)
+    }
+
+    /// The event always fires (`p` quantised to 1).
+    pub fn is_always(&self) -> bool {
+        self.always == Some(true)
+    }
+
+    /// `next_u64` draws consumed per mask.
+    pub fn draws_per_mask(&self) -> usize {
+        self.bits.len()
+    }
+
+    /// 64 fresh i.i.d. `Bernoulli(p)` bits.
+    #[inline]
+    pub fn mask(&self, rng: &mut Xoshiro256) -> u64 {
+        match self.always {
+            Some(false) => 0,
+            Some(true) => !0u64,
+            None => {
+                let mut res = 0u64;
+                for &b in &self.bits {
+                    let r = rng.next_u64();
+                    res = if b { res | r } else { res & r };
+                }
+                res
+            }
+        }
+    }
+}
+
+/// Contrast-class choice shared by the eager [`StepRands`] record and the
+/// lazy word-parallel plan: uniform among active classes other than
+/// `target` (`None` when fewer than 2 classes are active).
+#[inline]
+pub fn neg_class_from_draw(draw: u64, target: usize, active: usize) -> Option<usize> {
+    if active < 2 {
+        return None;
+    }
+    let k = (draw % (active as u64 - 1)) as usize;
+    Some(if k >= target { k + 1 } else { k })
+}
+
 /// All randomness consumed by one training step (one datapoint), in the
 /// canonical flattened layout shared with the L2 HLO graph:
 ///
@@ -167,11 +254,7 @@ impl StepRands {
     /// Choose the negative (contrast) class uniformly among active classes
     /// other than `target`. `active` must be >= 2 for a draw to exist.
     pub fn neg_class(&self, target: usize, active: usize) -> Option<usize> {
-        if active < 2 {
-            return None;
-        }
-        let k = (self.neg_class_draw % (active as u64 - 1)) as usize;
-        Some(if k >= target { k + 1 } else { k })
+        neg_class_from_draw(self.neg_class_draw, target, active)
     }
 }
 
@@ -287,6 +370,91 @@ mod tests {
         assert_eq!(a2.ta_rand, b.ta_rand);
         assert_eq!(a2.neg_class_draw, b.neg_class_draw);
         let _ = a;
+    }
+
+    #[test]
+    fn bernoulli_plan_edge_cases() {
+        let mut rng = Xoshiro256::new(1);
+        let never = BernoulliPlan::new(0.0);
+        assert!(never.is_never());
+        assert_eq!(never.mask(&mut rng), 0);
+        assert_eq!(never.draws_per_mask(), 0);
+        let always = BernoulliPlan::new(1.0);
+        assert!(always.is_always());
+        assert_eq!(always.mask(&mut rng), !0u64);
+        // Negative / >1 inputs clamp.
+        assert!(BernoulliPlan::new(-0.5).is_never());
+        assert!(BernoulliPlan::new(1.5).is_always());
+        // p = 0.5 is a single raw draw; p = 0.25 is two.
+        assert_eq!(BernoulliPlan::new(0.5).draws_per_mask(), 1);
+        assert_eq!(BernoulliPlan::new(0.25).draws_per_mask(), 2);
+        assert_eq!(BernoulliPlan::new(0.75).draws_per_mask(), 2);
+        // Sub-quantum probabilities round to never/always.
+        assert!(BernoulliPlan::new(1.0 / (1 << 20) as f32).is_never());
+        assert!(BernoulliPlan::new(1.0 - 1.0 / (1 << 20) as f32).is_always());
+    }
+
+    #[test]
+    fn bernoulli_plan_half_is_raw_word() {
+        // p = 0.5 must pass the raw xoshiro word through.
+        let mut a = Xoshiro256::new(33);
+        let mut b = Xoshiro256::new(33);
+        let half = BernoulliPlan::new(0.5);
+        for _ in 0..50 {
+            assert_eq!(half.mask(&mut a), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn bernoulli_plan_mask_density_matches_p() {
+        let mut rng = Xoshiro256::new(0xB17);
+        for &p in &[0.25f32, 0.272727, 0.5, 0.727273, 0.9, 1.0 / 65536.0 * 3.0] {
+            let plan = BernoulliPlan::new(p);
+            assert!(plan.draws_per_mask() <= 16);
+            let n = 4000;
+            let ones: u64 = (0..n).map(|_| plan.mask(&mut rng).count_ones() as u64).sum();
+            let est = ones as f64 / (n * 64) as f64;
+            let target = (p as f64 * 65536.0).round() / 65536.0;
+            assert!(
+                (est - target).abs() < 0.01,
+                "p={p}: estimated {est:.4}, want {target:.4}"
+            );
+        }
+    }
+
+    #[test]
+    fn bernoulli_plan_lanes_independent() {
+        // Adjacent lanes must not be correlated: P(bit0 & bit1) ≈ p².
+        let plan = BernoulliPlan::new(0.272727);
+        let mut rng = Xoshiro256::new(0x1A2B);
+        let n = 30_000;
+        let (mut c0, mut c1, mut c01) = (0u32, 0u32, 0u32);
+        for _ in 0..n {
+            let m = plan.mask(&mut rng);
+            c0 += (m & 1) as u32;
+            c1 += ((m >> 1) & 1) as u32;
+            c01 += (m & (m >> 1) & 1) as u32;
+        }
+        let (p0, p1, p01) =
+            (c0 as f64 / n as f64, c1 as f64 / n as f64, c01 as f64 / n as f64);
+        assert!((p01 - p0 * p1).abs() < 0.01, "{p0:.3} {p1:.3} joint {p01:.3}");
+    }
+
+    #[test]
+    fn neg_class_from_draw_matches_step_rands() {
+        let shape = TmShape::iris();
+        let mut rng = Xoshiro256::new(21);
+        for _ in 0..100 {
+            let r = StepRands::draw(&mut rng, &shape);
+            for target in 0..3 {
+                for active in 1..=3 {
+                    assert_eq!(
+                        r.neg_class(target, active),
+                        neg_class_from_draw(r.neg_class_draw, target, active)
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,228 @@
+//! Word-parallel engine ⇄ scalar oracle differential suite.
+//!
+//! The engine (`tm::engine`) must be **bit-identical** to the scalar
+//! oracle (`tm::feedback::train_step`) given the same eager [`StepRands`]
+//! draws — TA-state trajectories, activity counts and predictions — over
+//! shapes that exercise every datapath corner: single- and multi-word
+//! literal rows, TA fault gates, clause-number/class over-provisioning,
+//! both `s`-styles and boost. The lazy-randomness mode has no bitwise
+//! oracle (that is the point: it draws less), so it is held to
+//! statistical equivalence on the paper's iris workload instead.
+
+use tm_fpga::data::{blocks::BlockPlan, iris, SetAllocation};
+use tm_fpga::tm::params::SStyle;
+use tm_fpga::tm::*;
+
+/// Run `steps` random training steps through both paths and assert
+/// bitwise agreement at every step.
+fn assert_bit_identical(shape: &TmShape, params: &TmParams, fault_rate: f64, seed: u64, steps: usize) {
+    let mut oracle = MultiTm::new(shape).unwrap();
+    let mut fast = MultiTm::new(shape).unwrap();
+    if fault_rate > 0.0 {
+        let map =
+            FaultMap::even_spread(shape, fault_rate, Fault::StuckAt0, seed ^ 0xF417).unwrap();
+        oracle.set_fault_map(map.clone());
+        fast.set_fault_map(map);
+    }
+    let mut rng = Xoshiro256::new(seed);
+    for step in 0..steps {
+        let bits: Vec<bool> =
+            (0..shape.features).map(|_| rng.next_f32() < 0.5).collect();
+        let x = Input::pack(shape, &bits);
+        let target = step % shape.classes;
+        let r = StepRands::draw(&mut rng, shape);
+        let a = train_step(&mut oracle, &x, target, params, &r);
+        let b = train_step_fast(&mut fast, &x, target, params, &r);
+        assert_eq!(a, b, "activity diverged at step {step}");
+        assert_eq!(
+            oracle.ta().states(),
+            fast.ta().states(),
+            "TA states diverged at step {step}"
+        );
+        assert_eq!(
+            oracle.predict(&x, params),
+            fast.predict(&x, params),
+            "prediction diverged at step {step}"
+        );
+    }
+}
+
+#[test]
+fn bit_parity_iris_offline() {
+    let s = TmShape::iris();
+    assert_bit_identical(&s, &TmParams::paper_offline(&s), 0.0, 0xA0, 400);
+}
+
+#[test]
+fn bit_parity_iris_online_s1() {
+    let s = TmShape::iris();
+    assert_bit_identical(&s, &TmParams::paper_online(&s), 0.0, 0xA1, 400);
+}
+
+#[test]
+fn bit_parity_under_faults_and_overprovisioning() {
+    let s = TmShape::iris();
+    let mut p = TmParams::paper_offline(&s);
+    p.active_clauses = 12;
+    p.active_classes = 2;
+    assert_bit_identical(&s, &p, 0.20, 0xA2, 300);
+}
+
+#[test]
+fn bit_parity_multiword_shapes() {
+    // 80 literals (2 words, second partial) and 128 literals (2 full).
+    for (i, s) in [
+        TmShape { classes: 3, max_clauses: 8, features: 40, states: 16 },
+        TmShape { classes: 2, max_clauses: 4, features: 64, states: 8 },
+    ]
+    .into_iter()
+    .enumerate()
+    {
+        let mut p = TmParams::paper_offline(&s);
+        p.t = 5;
+        assert_bit_identical(&s, &p, 0.0, 0xB0 + i as u64, 250);
+        assert_bit_identical(&s, &p, 0.15, 0xC0 + i as u64, 250);
+    }
+}
+
+#[test]
+fn bit_parity_canonical_style_and_boost() {
+    let s = TmShape::iris();
+    let mut p = TmParams::paper_offline(&s);
+    p.s = 2.0;
+    p.s_style = SStyle::Canonical;
+    assert_bit_identical(&s, &p, 0.0, 0xD0, 250);
+    p.boost_true_positive = true;
+    assert_bit_identical(&s, &p, 0.0, 0xD1, 250);
+}
+
+/// The lazy-randomness engine must learn iris like the oracle does:
+/// same workload, same epoch count — accuracies within a few points.
+#[test]
+fn lazy_engine_statistically_matches_oracle_on_iris() {
+    let shape = TmShape::iris();
+    let params = TmParams::paper_offline(&shape);
+    let plan = BlockPlan::stratified(iris::booleanised(), 5, 20).unwrap();
+    let sets = plan.sets(&[0, 1, 2, 3, 4], SetAllocation::paper()).unwrap();
+    let train = sets.offline.pack(&shape);
+    let val = sets.validation.pack(&shape);
+
+    // Average over a few seeds: both paths are stochastic learners.
+    let runs = 4;
+    let epochs = 15;
+    let mut acc_oracle = (0.0, 0.0);
+    let mut acc_lazy = (0.0, 0.0);
+    for seed in 0..runs {
+        let mut tm = MultiTm::new(&shape).unwrap();
+        let mut rng = Xoshiro256::new(100 + seed);
+        let mut rands = StepRands::draw(&mut rng, &shape);
+        for _ in 0..epochs {
+            for (x, y) in &train {
+                rands.refill(&mut rng, &shape);
+                train_step(&mut tm, x, *y, &params, &rands);
+            }
+        }
+        acc_oracle.0 += tm.accuracy(&train, &params) / runs as f64;
+        acc_oracle.1 += tm.accuracy(&val, &params) / runs as f64;
+
+        let mut tm = MultiTm::new(&shape).unwrap();
+        let mut rng = Xoshiro256::new(200 + seed);
+        for _ in 0..epochs {
+            tm.train_epoch(&train, &params, &mut rng);
+        }
+        acc_lazy.0 += tm.accuracy(&train, &params) / runs as f64;
+        acc_lazy.1 += tm.accuracy(&val, &params) / runs as f64;
+    }
+    assert!(acc_oracle.0 > 0.7, "oracle train acc {:.3}", acc_oracle.0);
+    assert!(acc_lazy.0 > 0.7, "lazy train acc {:.3}", acc_lazy.0);
+    assert!(
+        (acc_lazy.0 - acc_oracle.0).abs() < 0.12,
+        "train accuracy gap: lazy {:.3} vs oracle {:.3}",
+        acc_lazy.0,
+        acc_oracle.0
+    );
+    assert!(
+        (acc_lazy.1 - acc_oracle.1).abs() < 0.15,
+        "validation accuracy gap: lazy {:.3} vs oracle {:.3}",
+        acc_lazy.1,
+        acc_oracle.1
+    );
+}
+
+/// Batched inference agrees with per-row inference on a trained machine,
+/// and the epoch driver is deterministic in its seed.
+#[test]
+fn batched_paths_consistent_on_trained_machine() {
+    let shape = TmShape::iris();
+    let params = TmParams::paper_offline(&shape);
+    let plan = BlockPlan::stratified(iris::booleanised(), 5, 9).unwrap();
+    let sets = plan.sets(&[0, 1, 2, 3, 4], SetAllocation::paper()).unwrap();
+    let train = sets.offline.pack(&shape);
+    let val = sets.validation.pack(&shape);
+
+    let mut a = MultiTm::new(&shape).unwrap();
+    let mut b = MultiTm::new(&shape).unwrap();
+    let mut rng_a = Xoshiro256::new(4242);
+    let mut rng_b = Xoshiro256::new(4242);
+    for _ in 0..10 {
+        let sa = a.train_epoch(&train, &params, &mut rng_a);
+        let sb = b.train_epoch(&train, &params, &mut rng_b);
+        assert_eq!(sa, sb, "epoch stats must be deterministic in the seed");
+    }
+    assert_eq!(a.ta().states(), b.ta().states());
+
+    // predict_batch == predict, accuracy_batch == accuracy.
+    let inputs: Vec<Input> = val.iter().map(|(x, _)| x.clone()).collect();
+    let preds = a.predict_batch(&inputs, &params);
+    for (i, x) in inputs.iter().enumerate() {
+        assert_eq!(preds[i], a.predict(x, &params), "row {i}");
+    }
+    let acc_batch = a.accuracy_batch(&val, &params);
+    let acc_scalar = a.accuracy(&val, &params);
+    assert!((acc_batch - acc_scalar).abs() < 1e-12);
+    assert!(acc_batch > 0.5, "trained machine should beat chance: {acc_batch:.3}");
+}
+
+/// The engine's action cache survives long mixed workloads (fast +
+/// lazy + clause faults interleaved) — rebuild always agrees.
+#[test]
+fn mixed_workload_keeps_action_cache_coherent() {
+    let shape = TmShape::iris();
+    let params = TmParams::paper_offline(&shape);
+    let feedback_plan = FeedbackPlan::new(&params);
+    let mut tm = MultiTm::new(&shape).unwrap();
+    let mut rng = Xoshiro256::new(0xC0DE);
+    for step in 0..500 {
+        let bits: Vec<bool> = (0..16).map(|_| rng.next_f32() < 0.5).collect();
+        let x = Input::pack(&shape, &bits);
+        match step % 3 {
+            0 => {
+                let r = StepRands::draw(&mut rng, &shape);
+                train_step_fast(&mut tm, &x, step % 3, &params, &r);
+            }
+            1 => {
+                train_step_lazy(&mut tm, &x, step % 3, &params, &feedback_plan, &mut rng);
+            }
+            _ => {
+                // Clause faults toggle the evaluation path mid-run.
+                tm.set_clause_fault(0, (step / 3) % 16, Some(step % 2 == 0));
+                let r = StepRands::draw(&mut rng, &shape);
+                train_step_fast(&mut tm, &x, step % 3, &params, &r);
+                tm.set_clause_fault(0, (step / 3) % 16, None);
+            }
+        }
+    }
+    assert_eq!(tm.clause_fault_count(), 0);
+    let mut rebuilt = tm.clone();
+    rebuilt.rebuild_actions();
+    for c in 0..3 {
+        for j in 0..16 {
+            assert_eq!(
+                tm.action_words(c, j),
+                rebuilt.action_words(c, j),
+                "cache incoherent at ({c},{j})"
+            );
+        }
+    }
+    assert!(tm.ta().states().iter().all(|&v| v <= shape.max_state()));
+}

@@ -1,0 +1,48 @@
+//! Minimal offline shim of `once_cell` (only `sync::Lazy`), backed by
+//! `std::sync::OnceLock`. The build image carries no registry crates; this
+//! covers the one use in `rust/src/data/iris.rs`.
+
+pub mod sync {
+    use std::ops::Deref;
+    use std::sync::OnceLock;
+
+    /// Lazily-initialised value; the closure runs at most once, on first
+    /// deref. `F` defaults to a fn pointer so `static X: Lazy<T>` works.
+    pub struct Lazy<T, F = fn() -> T> {
+        cell: OnceLock<T>,
+        init: F,
+    }
+
+    impl<T, F: Fn() -> T> Lazy<T, F> {
+        pub const fn new(init: F) -> Self {
+            Lazy { cell: OnceLock::new(), init }
+        }
+
+        pub fn force(this: &Self) -> &T {
+            this.cell.get_or_init(|| (this.init)())
+        }
+    }
+
+    impl<T, F: Fn() -> T> Deref for Lazy<T, F> {
+        type Target = T;
+
+        fn deref(&self) -> &T {
+            Lazy::force(self)
+        }
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        static N: Lazy<u64> = Lazy::new(|| 41 + 1);
+
+        #[test]
+        fn initialises_once_and_derefs() {
+            assert_eq!(*N, 42);
+            assert_eq!(*N, 42);
+            let local: Lazy<String> = Lazy::new(|| "x".repeat(3));
+            assert_eq!(local.len(), 3);
+        }
+    }
+}
