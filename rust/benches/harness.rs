@@ -54,6 +54,28 @@ pub fn bench<F: FnMut()>(
     }
 }
 
+/// Next `BENCH_<n>.json` path under `root`: one past the highest
+/// existing index (gap-tolerant — BENCH_1 was generated but never
+/// committed in PR 1), so each perf_table run appends a fresh file to
+/// the perf trajectory instead of overwriting it.
+pub fn next_bench_path(root: &str) -> String {
+    let mut max_n = 0u32;
+    if let Ok(entries) = std::fs::read_dir(root) {
+        for e in entries.flatten() {
+            let name = e.file_name();
+            let name = name.to_string_lossy();
+            if let Some(num) =
+                name.strip_prefix("BENCH_").and_then(|s| s.strip_suffix(".json"))
+            {
+                if let Ok(v) = num.parse::<u32>() {
+                    max_n = max_n.max(v);
+                }
+            }
+        }
+    }
+    format!("{root}/BENCH_{}.json", max_n + 1)
+}
+
 /// Write results as machine-readable JSON (one object per row:
 /// `{name, mean_s, min_s, max_s, items_per_rep, throughput}`) so the perf
 /// trajectory can be tracked across PRs (see EXPERIMENTS.md §Perf).

@@ -3,17 +3,19 @@
 //! Performance rows: the modelled FPGA datapath (2-cycle inference +
 //! feedback, one datapoint per clock pipelined, at the 100 MHz reference
 //! clock) against measured software paths — the word-parallel engine
-//! (lazy bit-sliced randomness + word-batched feedback), the scalar
-//! oracle (eager `StepRands`, the L2 parity twin), the naive scalar
-//! baseline (the paper's "software implementation" comparator), and the
-//! PJRT AOT-artifact path.
+//! (lazy bit-sliced randomness + word-batched feedback), the
+//! sample-sliced bitplane inference engine (64 samples per AND off
+//! cached dataset bitplanes), the scalar oracle (eager `StepRands`, the
+//! L2 parity twin), the naive scalar baseline (the paper's "software
+//! implementation" comparator), and the PJRT AOT-artifact path.
 //!
 //! Power rows: the calibrated activity model's decomposition (paper:
 //! 1.725 W total, 1.4 W MCU) across gating scenarios.
 //!
-//! Also emits machine-readable `BENCH_1.json` at the repo root (one row
-//! per microbenchmark — see EXPERIMENTS.md §Perf for the methodology and
-//! recorded numbers) so the perf trajectory is tracked across PRs.
+//! Also emits the next free machine-readable `BENCH_<n>.json` at the repo
+//! root (one row per microbenchmark — see EXPERIMENTS.md §Perf for the
+//! methodology and recorded numbers); the filename bumps per run so the
+//! committed perf trajectory is append-only across PRs.
 //!
 //! ```sh
 //! cargo bench --bench perf_table                  # PERF_ITERS=50 default
@@ -30,12 +32,18 @@ fn main() {
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(50);
-    let mut rows = vec![
-        perf::fpga_model_row(),
-        perf::engine_row(iters),
-        perf::native_row(iters),
-        perf::baseline_row(iters),
-    ];
+    // Named bindings (not vec indices) so inserting a row can never
+    // silently re-point a ratio at the wrong column.
+    let fpga_row = perf::fpga_model_row();
+    let engine_row = perf::engine_row(iters);
+    let planes_row = perf::plane_infer_row(iters);
+    let native_row = perf::native_row(iters);
+    let naive_row = perf::baseline_row(iters);
+    let fpga = fpga_row.train_dps;
+    let engine = engine_row.train_dps;
+    let oracle = native_row.train_dps;
+    let naive = naive_row.train_dps;
+    let mut rows = vec![fpga_row, engine_row, planes_row, native_row, naive_row];
     match perf::pjrt_row(100) {
         Ok(Some(r)) => rows.push(r),
         Ok(None) => eprintln!("(PJRT row skipped: run `make artifacts`)"),
@@ -47,11 +55,6 @@ fn main() {
         Err(e) => eprintln!("(PJRT epoch row failed: {e:#})"),
     }
     print!("{}", perf::perf_table(&rows));
-
-    let fpga = rows[0].train_dps;
-    let engine = rows[1].train_dps;
-    let oracle = rows[2].train_dps;
-    let naive = rows[3].train_dps;
     println!(
         "\nmodelled FPGA vs naive software: {:.0}× on training throughput \
          (the paper's \"minutes … down to a matter of seconds\")",
@@ -61,6 +64,19 @@ fn main() {
         "word-parallel engine vs scalar oracle: {:.1}× training \
          datapoints/s (PR-1 acceptance floor: 5×)",
         engine / oracle
+    );
+
+    // The ISSUE-2 acceptance comparison: sample-sliced vs row-major
+    // batched inference on a 1k-row single-word batch.
+    let (row_major, plane, transpose_s) = perf::plane_comparison(1000, (iters / 2).max(5));
+    println!(
+        "sample-sliced planes vs row-major evaluate_batch (1k rows): \
+         {:.1}× ({:.0} vs {:.0} rows/s; transpose {:.3} ms, amortised by \
+         the dataset-side plane caches) — PR-2 acceptance floor: 4×",
+        plane / row_major,
+        plane,
+        row_major,
+        transpose_s * 1e3
     );
 
     println!("\n=== §6 power table ===\n");
@@ -148,7 +164,34 @@ fn main() {
         micro.push(harness::bench("infer x60 (predict_batch)", 3, 20, n_rows, || {
             sink = sink.wrapping_add(tm.predict_batch(&inputs, &params).len());
         }));
+        let batch = PlaneBatch::from_labelled(&shape, &data);
+        micro.push(harness::bench("infer x60 (predict_planes, cached)", 3, 20, n_rows, || {
+            sink = sink.wrapping_add(tm.predict_planes(batch.planes(), &params).len());
+        }));
         std::hint::black_box(sink);
+
+        // The ISSUE-2 batch: 1k rows, single-word shape — row-major vs
+        // sample-sliced, plus the one-off transpose cost both amortise.
+        let big: Vec<Input> =
+            data.iter().map(|(x, _)| x.clone()).cycle().take(1000).collect();
+        micro.push(harness::bench("transpose 1k rows -> bitplanes", 3, 20, 1000, || {
+            std::hint::black_box(BitPlanes::from_inputs(&shape, &big));
+        }));
+        let planes = BitPlanes::from_inputs(&shape, &big);
+        let mut acc = 0i32;
+        micro.push(harness::bench("evaluate_batch 1k rows (row-major)", 3, 20, 1000, || {
+            acc = acc.wrapping_add(tm.evaluate_batch(&big, &params, EvalMode::Infer)[0]);
+        }));
+        micro.push(harness::bench(
+            "evaluate_planes 1k rows (sample-sliced)",
+            3,
+            20,
+            1000,
+            || {
+                acc = acc.wrapping_add(tm.evaluate_planes(&planes, &params, EvalMode::Infer)[0]);
+            },
+        ));
+        std::hint::black_box(acc);
     }
     {
         let mut rng = Xoshiro256::new(1);
@@ -167,7 +210,7 @@ fn main() {
         tm_fpga::tm::engine::eager_draws_per_step(&shape)
     );
 
-    // Headline engine-vs-oracle rows land in BENCH_1.json too.
+    // Headline rows land in the JSON trajectory too.
     let mut json_rows = micro;
     json_rows.push(harness::BenchResult {
         name: "perf_row: train dp/s (word-parallel engine)".into(),
@@ -185,8 +228,24 @@ fn main() {
         reps: iters,
         items_per_rep: 1,
     });
+    json_rows.push(harness::BenchResult {
+        name: "perf_row: infer rows/s 1k batch (row-major)".into(),
+        mean_s: if row_major > 0.0 { 1.0 / row_major } else { 0.0 },
+        min_s: 0.0,
+        max_s: 0.0,
+        reps: iters,
+        items_per_rep: 1,
+    });
+    json_rows.push(harness::BenchResult {
+        name: "perf_row: infer rows/s 1k batch (sample-sliced planes)".into(),
+        mean_s: if plane > 0.0 { 1.0 / plane } else { 0.0 },
+        min_s: 0.0,
+        max_s: 0.0,
+        reps: iters,
+        items_per_rep: 1,
+    });
     let root = std::env::var("CARGO_MANIFEST_DIR").unwrap_or_else(|_| ".".into());
-    let path = format!("{root}/BENCH_1.json");
+    let path = harness::next_bench_path(&root);
     match harness::write_json(&path, &json_rows) {
         Ok(()) => println!("\nwrote {path}"),
         Err(e) => eprintln!("\nfailed to write {path}: {e}"),

@@ -5,8 +5,12 @@
 //! Training inside each run goes through the word-parallel engine
 //! (`tm::engine::train_step_fast` via `fpga::system`) — bit-identical to
 //! the scalar oracle given the same `StepRands`, so every figure below is
-//! unchanged from the oracle's output while running the fast datapath;
-//! accuracy analysis uses the batched class-fanned inference path.
+//! unchanged from the oracle's output while running the fast datapath.
+//! Accuracy analysis runs the sample-sliced bitplane kernel over the
+//! analyzer's per-(set, filter) transposed-plane cache (`fpga::accuracy`)
+//! — each of the 17 analysis points per run rescores the same stored
+//! sets, so the transpose is paid once per filter configuration and each
+//! class sum costs one AND per 64 samples.
 //!
 //! | Figure | Staging                                                        |
 //! |--------|----------------------------------------------------------------|

@@ -10,6 +10,7 @@
 //! (§5.3.2: "additional clauses can be enabled for this retraining to
 //! further mitigate the effect of faulty TAs").
 
+use crate::tm::bitplane::PlaneBatch;
 use crate::tm::clause::Input;
 use crate::tm::engine::train_step_fast;
 use crate::tm::machine::MultiTm;
@@ -111,11 +112,14 @@ pub fn monitor_and_retrain(
             }
         }
     }
+    // Score the eval snapshot through the sample-sliced kernel
+    // (transposed here, at the single point of use).
+    let eval_planes = PlaneBatch::from_labelled(tm.shape(), eval_data);
     Ok(MonitorOutcome {
         triggered,
         estimate_at_trigger,
         spot_checks: monitor.samples(),
-        accuracy_after: tm.accuracy(eval_data, params),
+        accuracy_after: tm.accuracy_planes(&eval_planes, params),
     })
 }
 

@@ -4,8 +4,9 @@
 //! - the hardware model's cycle counts (2-cycle inference+feedback,
 //!   1 datapoint/clock pipelined) and the datapoints/s they imply at the
 //!   reference clock;
-//! - measured software throughput: optimized native path, naive scalar
-//!   baseline, and the PJRT (AOT artifact) path;
+//! - measured software throughput: optimized native path, the
+//!   sample-sliced bitplane inference engine, naive scalar baseline, and
+//!   the PJRT (AOT artifact) path;
 //! - the power decomposition (1.725 W total / 1.4 W MCU in the paper) and
 //!   the clock-gating / over-provisioning savings.
 
@@ -16,7 +17,8 @@ use crate::fpga::clock::{Clock, Module};
 use crate::fpga::fsm_low::DatapointEngine;
 use crate::fpga::power::{PowerModel, REFERENCE_CLK_HZ};
 use crate::fpga::system::{FpgaSystem, SystemConfig};
-use crate::tm::clause::Input;
+use crate::tm::bitplane::{BitPlanes, PlaneBatch};
+use crate::tm::clause::{EvalMode, Input};
 use crate::tm::feedback::train_step;
 use crate::tm::machine::MultiTm;
 use crate::tm::params::{TmParams, TmShape};
@@ -116,6 +118,82 @@ pub fn engine_row(iters: usize) -> PerfRow {
         infer_dps,
         note: "lazy bit-sliced rands + word-batched feedback".into(),
     }
+}
+
+/// Train a machine to realistic include density (an untrained machine
+/// has only empty clauses, which every inference path short-circuits —
+/// benchmarking it would flatter all kernels equally and mean nothing).
+fn trained_machine(
+    shape: &TmShape,
+    params: &TmParams,
+    data: &[(Input, usize)],
+) -> MultiTm {
+    let mut tm = MultiTm::new(shape).unwrap();
+    let mut rng = Xoshiro256::new(1);
+    for _ in 0..10 {
+        tm.train_epoch(data, params, &mut rng);
+    }
+    tm
+}
+
+/// Measured throughput of the sample-sliced (bitplane) inference engine:
+/// batched prediction off a once-transposed plane cache. Inference-only —
+/// the train column is 0 (training stays on the word-parallel engine).
+pub fn plane_infer_row(iters: usize) -> PerfRow {
+    let shape = TmShape::iris();
+    let params = TmParams::paper_offline(&shape);
+    let data = bench_data(&shape);
+    let tm = trained_machine(&shape, &params, &data);
+    let batch = PlaneBatch::from_labelled(&shape, &data);
+
+    let t0 = Instant::now();
+    let mut n = 0u64;
+    let mut sink = 0usize;
+    for _ in 0..iters * 4 {
+        let preds = tm.predict_planes(batch.planes(), &params);
+        sink = sink.wrapping_add(preds.iter().sum::<usize>());
+        n += preds.len() as u64;
+    }
+    let infer_dps = n as f64 / t0.elapsed().as_secs_f64();
+    std::hint::black_box(sink);
+    PerfRow {
+        path: "rust native (sample-sliced planes)".into(),
+        train_dps: 0.0,
+        infer_dps,
+        note: "64 samples per AND off cached dataset bitplanes".into(),
+    }
+}
+
+/// The ISSUE-2 acceptance comparison: row-major `evaluate_batch` vs the
+/// sample-sliced `evaluate_planes` on a `batch_rows`-row single-word
+/// (iris-shaped) batch, on a realistically trained machine. Returns
+/// `(row_major_rows_per_s, plane_rows_per_s, transpose_seconds)`; the
+/// transpose is reported separately because the cached-plane drivers
+/// amortise it across every rescore.
+pub fn plane_comparison(batch_rows: usize, reps: usize) -> (f64, f64, f64) {
+    let shape = TmShape::iris();
+    let params = TmParams::paper_offline(&shape);
+    let data = bench_data(&shape);
+    let tm = trained_machine(&shape, &params, &data);
+    let inputs: Vec<Input> =
+        data.iter().map(|(x, _)| x.clone()).cycle().take(batch_rows).collect();
+
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        std::hint::black_box(tm.evaluate_batch(&inputs, &params, EvalMode::Infer));
+    }
+    let row_major = (reps * inputs.len()) as f64 / t0.elapsed().as_secs_f64();
+
+    let t0 = Instant::now();
+    let planes = BitPlanes::from_inputs(&shape, &inputs);
+    let transpose_s = t0.elapsed().as_secs_f64();
+
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        std::hint::black_box(tm.evaluate_planes(&planes, &params, EvalMode::Infer));
+    }
+    let plane = (reps * inputs.len()) as f64 / t0.elapsed().as_secs_f64();
+    (row_major, plane, transpose_s)
 }
 
 /// Measured throughput of the naive scalar baseline.
@@ -374,6 +452,20 @@ mod tests {
             naive.infer_dps
         );
         assert!(native.train_dps > 0.0 && naive.train_dps > 0.0);
+    }
+
+    #[test]
+    fn plane_rows_measure_real_throughput() {
+        // As with engine_row: wall-clock ratio assertions live in the
+        // perf_table bench at realistic iteration counts; here only
+        // sanity-check the measurement plumbing.
+        let r = plane_infer_row(3);
+        assert!(r.infer_dps > 0.0);
+        assert_eq!(r.train_dps, 0.0, "plane path is inference-only");
+        assert!(r.path.contains("sample-sliced"));
+        let (row_major, plane, transpose_s) = plane_comparison(256, 2);
+        assert!(row_major > 0.0 && plane > 0.0);
+        assert!(transpose_s >= 0.0);
     }
 
     #[test]

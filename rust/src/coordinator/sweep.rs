@@ -6,8 +6,14 @@
 //! Grid search over (s, T) with cross-validated validation accuracy as
 //! the objective, fanned out across threads; each grid cell runs the
 //! paper's offline-training flow on a subset of orderings.
+//!
+//! The folds are packed **and bitplane-transposed once** per ordering
+//! ([`PackedSets`]) before the grid fan-out: every (s, T) cell shares the
+//! same read-only folds and scores them through the sample-sliced
+//! kernel ([`MultiTm::accuracy_planes`]), instead of re-deriving blocks,
+//! re-packing rows and walking them one sample at a time per cell.
 
-use crate::data::blocks::{all_orderings, BlockPlan, SetAllocation};
+use crate::data::blocks::{all_orderings, BlockPlan, PackedSets, SetAllocation};
 use crate::data::iris;
 use crate::tm::engine::train_step_fast;
 use crate::tm::machine::MultiTm;
@@ -49,24 +55,22 @@ impl Default for SweepConfig {
     }
 }
 
-/// Evaluate one (s, T) cell: offline-train on each ordering's offline set,
-/// report mean validation accuracy.
+/// Evaluate one (s, T) cell over pre-packed folds: offline-train on each
+/// fold's offline rows, report mean validation accuracy. Scoring runs the
+/// sample-sliced kernel off each fold's cached bitplanes.
 pub fn evaluate_cell(
     shape: &TmShape,
     s: f32,
     t: i32,
-    orderings: &[Vec<usize>],
+    folds: &[PackedSets],
     epochs: usize,
     seed: u64,
 ) -> Result<SweepPoint> {
-    let plan = BlockPlan::stratified(iris::booleanised(), 5, seed)?;
     let mut val_acc = 0.0;
     let mut train_acc = 0.0;
-    for (i, ord) in orderings.iter().enumerate() {
-        let sets = plan.sets(ord, SetAllocation::paper())?;
-        let train = sets.offline.truncate(20).pack(shape);
-        let full_train = sets.offline.pack(shape);
-        let val = sets.validation.pack(shape);
+    for (i, fold) in folds.iter().enumerate() {
+        // Paper §5.1: train on the first 20 of the 30-row offline set.
+        let train = &fold.offline[..fold.offline.len().min(20)];
         let params = TmParams {
             s,
             t,
@@ -80,15 +84,15 @@ pub fn evaluate_cell(
         let mut rng = Xoshiro256::new(seed.wrapping_add(i as u64));
         let mut rands = StepRands::draw(&mut rng, shape);
         for _ in 0..epochs {
-            for (x, y) in &train {
+            for (x, y) in train {
                 rands.refill(&mut rng, shape);
                 train_step_fast(&mut tm, x, *y, &params, &rands);
             }
         }
-        val_acc += tm.accuracy(&val, &params);
-        train_acc += tm.accuracy(&full_train, &params);
+        val_acc += tm.accuracy_planes(&fold.validation_planes, &params);
+        train_acc += tm.accuracy_planes(&fold.offline_planes, &params);
     }
-    let n = orderings.len() as f64;
+    let n = folds.len() as f64;
     Ok(SweepPoint { s, t, val_accuracy: val_acc / n, train_accuracy: train_acc / n })
 }
 
@@ -97,6 +101,13 @@ pub fn run_sweep(cfg: &SweepConfig) -> Result<Vec<SweepPoint>> {
     let shape = TmShape::iris();
     let orderings: Vec<Vec<usize>> =
         all_orderings(5).into_iter().take(cfg.orderings.clamp(1, 120)).collect();
+    // Pack + transpose each fold once, up front; every grid cell borrows
+    // the same read-only folds.
+    let plan = BlockPlan::stratified(iris::booleanised(), 5, cfg.seed)?;
+    let folds: Vec<PackedSets> = orderings
+        .iter()
+        .map(|ord| Ok(plan.sets(ord, SetAllocation::paper())?.pack_planes(&shape)))
+        .collect::<Result<_>>()?;
     let cells: Vec<(f32, i32)> = cfg
         .s_grid
         .iter()
@@ -113,14 +124,14 @@ pub fn run_sweep(cfg: &SweepConfig) -> Result<Vec<SweepPoint>> {
         for w in 0..threads {
             let tx = tx.clone();
             let cells = &cells;
-            let orderings = &orderings;
+            let folds = &folds;
             let shape = &shape;
             scope.spawn(move || {
                 for (i, (s, t)) in cells.iter().enumerate() {
                     if i % threads != w {
                         continue;
                     }
-                    let r = evaluate_cell(shape, *s, *t, orderings, cfg.epochs, cfg.seed);
+                    let r = evaluate_cell(shape, *s, *t, folds, cfg.epochs, cfg.seed);
                     tx.send(r).expect("channel");
                 }
             });

@@ -10,7 +10,8 @@
 //! margin clears a threshold; the unseen-class detector flags datapoints
 //! whose *best* sum is low (no class's clauses claim them).
 
-use crate::tm::clause::Input;
+use crate::tm::bitplane::BitPlanes;
+use crate::tm::clause::{EvalMode, Input};
 use crate::tm::engine::train_step_fast;
 use crate::tm::machine::MultiTm;
 use crate::tm::params::TmParams;
@@ -101,7 +102,10 @@ impl UnseenClassDetector {
         confidence(tm, x, params).best_sum < self.min_best_sum
     }
 
-    /// Flag rate over a set.
+    /// Flag rate over a set — sample-sliced: the batch is transposed once
+    /// and every class sum computed 64 rows per AND; a row is flagged iff
+    /// its best clamped sum (max over active classes, exactly
+    /// [`confidence`]'s `best_sum`) is below the threshold.
     pub fn flag_rate(
         &self,
         tm: &mut MultiTm,
@@ -111,8 +115,17 @@ impl UnseenClassDetector {
         if data.is_empty() {
             return 0.0;
         }
-        let n = data.iter().filter(|(x, _)| self.is_unseen(tm, x, params)).count();
-        n as f64 / data.len() as f64
+        let planes = BitPlanes::from_labelled(tm.shape(), data);
+        let sums = tm.evaluate_planes(&planes, params, EvalMode::Infer);
+        let n = data.len();
+        let nc = params.active_classes;
+        let flagged = (0..n)
+            .filter(|&i| {
+                let best = (0..nc).map(|c| sums[c * n + i]).max().unwrap_or(0);
+                best < self.min_best_sum
+            })
+            .count();
+        flagged as f64 / n as f64
     }
 }
 

@@ -11,6 +11,9 @@
 //! distributions of classes and patterns across these three sets".
 
 use crate::data::dataset::BoolDataset;
+use crate::tm::bitplane::PlaneBatch;
+use crate::tm::clause::Input;
+use crate::tm::params::TmShape;
 use crate::tm::rng::Xoshiro256;
 use anyhow::{bail, Result};
 
@@ -46,6 +49,38 @@ pub struct Sets {
     pub offline: BoolDataset,
     pub validation: BoolDataset,
     pub online: BoolDataset,
+}
+
+/// One ordering's three sets packed for a machine shape, with the
+/// literal-major bitplane transpose of each set cached alongside
+/// ([`crate::tm::bitplane`]): cross-validation drivers that rescore the
+/// same fold at many analysis points (sweep grids, figure sweeps) pay
+/// the pack + transpose exactly once per ordering.
+#[derive(Debug, Clone)]
+pub struct PackedSets {
+    pub offline: Vec<(Input, usize)>,
+    pub validation: Vec<(Input, usize)>,
+    pub online: Vec<(Input, usize)>,
+    pub offline_planes: PlaneBatch,
+    pub validation_planes: PlaneBatch,
+    pub online_planes: PlaneBatch,
+}
+
+impl Sets {
+    /// Pack all three sets and transpose each into cached bitplanes.
+    pub fn pack_planes(&self, shape: &TmShape) -> PackedSets {
+        let offline = self.offline.pack(shape);
+        let validation = self.validation.pack(shape);
+        let online = self.online.pack(shape);
+        PackedSets {
+            offline_planes: PlaneBatch::from_labelled(shape, &offline),
+            validation_planes: PlaneBatch::from_labelled(shape, &validation),
+            online_planes: PlaneBatch::from_labelled(shape, &online),
+            offline,
+            validation,
+            online,
+        }
+    }
 }
 
 impl BlockPlan {

@@ -3,6 +3,7 @@
 //! The TM consumes Boolean features (§2); [`BoolDataset`] is what every
 //! other subsystem (blocks, filter, ROM model, TM) operates on.
 
+use crate::tm::bitplane::PlaneBatch;
 use crate::tm::clause::Input;
 use crate::tm::params::TmShape;
 use anyhow::{bail, Result};
@@ -106,6 +107,15 @@ impl BoolDataset {
             .zip(self.labels.iter())
             .map(|(r, &l)| (Input::pack(shape, r), l))
             .collect()
+    }
+
+    /// Pack every row and transpose the batch into literal-major
+    /// bitplanes (see [`crate::tm::bitplane`]) — the dataset-level
+    /// convenience for callers that score one set many times; drivers
+    /// working per cross-validation fold use `Sets::pack_planes` in
+    /// [`crate::data::blocks`] instead.
+    pub fn pack_planes(&self, shape: &TmShape) -> PlaneBatch {
+        PlaneBatch::from_labelled(shape, &self.pack(shape))
     }
 
     /// Per-class datapoint counts.

@@ -10,7 +10,7 @@ pub mod iris;
 pub mod online;
 pub mod synthetic;
 
-pub use blocks::{all_orderings, BlockPlan, SetAllocation, Sets};
+pub use blocks::{all_orderings, BlockPlan, PackedSets, SetAllocation, Sets};
 pub use booleanize::Booleanizer;
 pub use dataset::{BoolDataset, RawDataset};
 pub use filter::ClassFilter;

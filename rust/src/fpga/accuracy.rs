@@ -9,13 +9,22 @@
 //! Analysis streams a set through the (pipelined) datapath in inference
 //! mode: cycle cost = pipeline fill + one cycle per stored row (filtered
 //! rows still occupy their ROM read slot).
+//!
+//! Scoring runs the sample-sliced bitplane kernel
+//! ([`MultiTm::predict_planes`], bit-identical to the row-major batch
+//! path) over a per-(set, filter) transposed-plane cache: every analysis
+//! point rescores the same stored sets, so the transpose is paid once
+//! per filter configuration instead of once per analysis.
 
+use crate::data::filter::ClassFilter;
 use crate::fpga::clock::{Clock, Module};
 use crate::fpga::fsm_low::DatapointEngine;
 use crate::fpga::memmgr::MemoryManager;
 use crate::fpga::rom::{Port, RomBank, SetId};
+use crate::tm::bitplane::PlaneBatch;
+use crate::tm::clause::Input;
 use crate::tm::machine::MultiTm;
-use crate::tm::params::TmParams;
+use crate::tm::params::{TmParams, TmShape};
 use anyhow::Result;
 
 /// One analysis record (what gets offloaded over AXI).
@@ -56,11 +65,57 @@ pub struct AccuracyAnalyzer {
     pub mode: HistoryMode,
     /// History RAM (only written in `OnChipRam` mode).
     pub history: Vec<AccuracyRecord>,
+    /// Per-(set, filter) transposed bitplanes of the streamed rows. The
+    /// stream is deterministic given the (fixed) ROM bank, the set id and
+    /// the filter; a row fingerprint (inputs + labels) guards staleness
+    /// in case the bank is ever remapped under a live analyzer.
+    planes: Vec<(SetId, ClassFilter, u64, PlaneBatch)>,
+}
+
+/// Order-sensitive FNV-style fingerprint of a streamed row set (packed
+/// literal words + labels) — O(rows · words), far cheaper than the
+/// transpose it guards.
+fn stream_fingerprint(rows: &[(Input, usize)]) -> u64 {
+    const FNV_PRIME: u64 = 0x100_0000_01b3;
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for (x, y) in rows {
+        h = (h ^ (*y as u64 + 1)).wrapping_mul(FNV_PRIME);
+        for &w in x.words() {
+            h = (h ^ w).wrapping_mul(FNV_PRIME);
+        }
+    }
+    h
 }
 
 impl AccuracyAnalyzer {
     pub fn new(mode: HistoryMode) -> Self {
-        AccuracyAnalyzer { mode, history: Vec::new() }
+        AccuracyAnalyzer { mode, history: Vec::new(), planes: Vec::new() }
+    }
+
+    /// Transposed planes for one streamed set, cached per (set, filter);
+    /// rebuilt if the stream's fingerprint no longer matches the cache.
+    fn cached_planes(
+        &mut self,
+        set: SetId,
+        filter: ClassFilter,
+        shape: &TmShape,
+        rows: &[(Input, usize)],
+    ) -> &PlaneBatch {
+        let fp = stream_fingerprint(rows);
+        match self.planes.iter().position(|(s, f, _, _)| *s == set && *f == filter) {
+            Some(i) => {
+                if self.planes[i].2 != fp {
+                    self.planes[i].2 = fp;
+                    self.planes[i].3 = PlaneBatch::from_labelled(shape, rows);
+                }
+                &self.planes[i].3
+            }
+            None => {
+                self.planes
+                    .push((set, filter, fp, PlaneBatch::from_labelled(shape, rows)));
+                &self.planes.last().unwrap().3
+            }
+        }
     }
 
     /// Analyse one set: stream it through the inference datapath
@@ -90,14 +145,14 @@ impl AccuracyAnalyzer {
         clock.set_enabled(Module::TmCore, false);
         clock.toggle(Module::AccuracyAnalysis, rows.len() as u64);
 
-        // Batched inference path (class fan-out over scoped threads for
-        // large sets; row-identical to per-row `predict`).
-        let preds = tm.predict_batch_labelled(&rows, params);
-        let errors = preds
-            .iter()
-            .zip(rows.iter())
-            .filter(|(p, (_, y))| **p != *y)
-            .count();
+        // Sample-sliced inference off the cached transpose (bit-identical
+        // to per-row `predict` and the row-major batch path — see
+        // rust/tests/integration_bitplane.rs).
+        let errors = {
+            let batch = self.cached_planes(set, mm.filter, tm.shape(), &rows);
+            let preds = tm.predict_planes(batch.planes(), params);
+            preds.iter().zip(batch.labels().iter()).filter(|(p, y)| p != y).count()
+        };
         let rec = AccuracyRecord {
             set,
             errors,

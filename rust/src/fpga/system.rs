@@ -2,6 +2,11 @@
 //! memory + online input + accuracy analysis + fault controller + AXI/MCU,
 //! advancing a single clock with per-module gating, and executing the
 //! Fig-3 flow end to end for one block ordering.
+//!
+//! Cycle accounting models the RTL; the *software* cost of each analysis
+//! phase runs the sample-sliced bitplane path via [`AccuracyAnalyzer`]'s
+//! per-(set, filter) transposed-plane cache (bit-identical results, one
+//! AND per 64 samples).
 
 use crate::data::dataset::BoolDataset;
 use crate::data::filter::ClassFilter;

@@ -115,6 +115,7 @@ fn cmd_perf(cli: &Cli) -> Result<()> {
     let mut rows = vec![
         coordinator::fpga_model_row(),
         coordinator::engine_row(iters),
+        coordinator::plane_infer_row(iters),
         coordinator::native_row(iters),
         coordinator::baseline_row(iters),
     ];

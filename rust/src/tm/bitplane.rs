@@ -1,0 +1,523 @@
+//! Sample-sliced (64-wide) batch inference — the transposed twin of the
+//! clause-parallel evaluator in `machine.rs`.
+//!
+//! The row-major batched path ([`MultiTm::evaluate_batch`]) walks one
+//! sample at a time: per clause it ANDs the packed *literal* words of a
+//! single row. This module transposes a batch of packed [`Input`] rows
+//! into **literal-major bitplanes**: [`BitPlanes`] holds, for every
+//! literal `k`, a row of `u64` *lanes* in which bit `i` of lane `l` is
+//! the value of literal `k` in sample `l * 64 + i`. A clause's fired-mask
+//! over 64 samples is then the AND of the bitplanes of its included
+//! literals — the same AND/popcount structure the runtime-tunable eFPGA
+//! TM (arXiv 2502.07823) and MATADOR (arXiv 2403.10538) exploit across
+//! wide data lanes, mapped onto software words.
+//!
+//! Votes are tallied without leaving the sliced domain: fired-masks are
+//! accumulated into bit-sliced ripple-carry counters (one `u64` per
+//! counter bit, 64 samples per add), and per-sample sums are extracted
+//! once per lane. [`MultiTm::evaluate_planes`] is **bit-identical** to
+//! [`MultiTm::evaluate_batch`] — clause-force gates, TA fault gates
+//! (applied to the action words, which is exactly what the row-major
+//! gate application computes), the empty-clause convention and the
+//! T-clamped sums are all preserved; `rust/tests/integration_bitplane.rs`
+//! is the differential proof.
+//!
+//! Because the planes depend only on the data (not on the machine), they
+//! are cached on the dataset side (`BoolDataset::pack_planes`,
+//! [`crate::data::blocks::PackedSets`], the accuracy analyzer's
+//! per-(set, filter) cache) and reused across every analysis point that
+//! rescores the same rows.
+
+use crate::tm::clause::{EvalMode, Input};
+use crate::tm::machine::{argmax_rows, MultiTm, SPAWN_WORK};
+use crate::tm::params::{TmParams, TmShape};
+
+/// A batch of inputs transposed into literal-major bitplanes:
+/// `plane(k)[l]` packs the value of literal `k` for samples
+/// `l * 64 ..` (64 samples per `u64` lane; tail bits are zero).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BitPlanes {
+    /// `planes[k * lanes + l]` = lane `l` of literal `k`.
+    planes: Vec<u64>,
+    literals: usize,
+    lanes: usize,
+    len: usize,
+}
+
+impl BitPlanes {
+    /// Transpose a batch of packed rows (one pass over every set literal
+    /// bit; paid once per cached batch).
+    pub fn from_inputs(shape: &TmShape, inputs: &[Input]) -> Self {
+        Self::build(shape, inputs.len(), |i| &inputs[i])
+    }
+
+    /// Transpose the inputs of a labelled batch.
+    pub fn from_labelled(shape: &TmShape, rows: &[(Input, usize)]) -> Self {
+        Self::build(shape, rows.len(), |i| &rows[i].0)
+    }
+
+    fn build<'a>(shape: &TmShape, n: usize, row: impl Fn(usize) -> &'a Input) -> Self {
+        let literals = shape.literals();
+        let lanes = n.div_ceil(64);
+        let mut planes = vec![0u64; literals * lanes];
+        for i in 0..n {
+            let x = row(i);
+            assert_eq!(x.literals(), literals, "input/plane literal width mismatch");
+            let (lane, bit) = (i / 64, 1u64 << (i % 64));
+            for (w, &iw) in x.words().iter().enumerate() {
+                let mut a = iw;
+                while a != 0 {
+                    let k = w * 64 + a.trailing_zeros() as usize;
+                    planes[k * lanes + lane] |= bit;
+                    a &= a - 1;
+                }
+            }
+        }
+        BitPlanes { planes, literals, lanes, len: n }
+    }
+
+    /// Number of samples in the batch.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Literal row width (must match the machine's `shape.literals()`).
+    #[inline]
+    pub fn literals(&self) -> usize {
+        self.literals
+    }
+
+    /// Number of 64-sample lanes.
+    #[inline]
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// One lane of one literal's plane.
+    #[inline]
+    pub(crate) fn plane_word(&self, lit: usize, lane: usize) -> u64 {
+        self.planes[lit * self.lanes + lane]
+    }
+
+    /// Bits of `lane` that correspond to real samples (the tail lane of a
+    /// non-multiple-of-64 batch is partial).
+    #[inline]
+    pub fn lane_mask(&self, lane: usize) -> u64 {
+        debug_assert!(lane < self.lanes);
+        let remaining = self.len - lane * 64;
+        if remaining >= 64 {
+            !0u64
+        } else {
+            (1u64 << remaining) - 1
+        }
+    }
+
+    /// Value of literal `k` in sample `i` (the transpose inverse; used by
+    /// the differential tests).
+    pub fn literal(&self, lit: usize, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        self.planes[lit * self.lanes + i / 64] & (1u64 << (i % 64)) != 0
+    }
+}
+
+/// A labelled batch transposed once: bitplanes plus labels — the unit the
+/// dataset layer caches so cross-validation folds, sweep grids and
+/// monitor snapshots pay the transpose once and rescore it many times.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PlaneBatch {
+    planes: BitPlanes,
+    labels: Vec<usize>,
+}
+
+impl PlaneBatch {
+    pub fn from_labelled(shape: &TmShape, rows: &[(Input, usize)]) -> Self {
+        PlaneBatch {
+            planes: BitPlanes::from_labelled(shape, rows),
+            labels: rows.iter().map(|(_, y)| *y).collect(),
+        }
+    }
+
+    #[inline]
+    pub fn planes(&self) -> &BitPlanes {
+        &self.planes
+    }
+
+    #[inline]
+    pub fn labels(&self) -> &[usize] {
+        &self.labels
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+}
+
+/// Ripple-carry add of a 64-lane 0/1 mask into a bit-sliced counter
+/// (`counter[b]` holds bit `b` of all 64 lane counts).
+#[inline]
+fn add_mask(counter: &mut [u64], mut mask: u64) {
+    for plane in counter.iter_mut() {
+        let carry = *plane & mask;
+        *plane ^= mask;
+        mask = carry;
+        if mask == 0 {
+            return;
+        }
+    }
+    debug_assert_eq!(mask, 0, "bit-sliced counter overflow");
+}
+
+/// Lane-invariant evaluation prep for one class: per clause, the force
+/// state and the *effective* (post-fault-gate) included literals —
+/// computed once per `evaluate_planes` call and shared read-only by
+/// every sample-chunk task of that class, so gate application and
+/// action-bit extraction are not repeated per chunk.
+struct ClassPrep {
+    /// Effective included literal indices, concatenated across clauses.
+    lits: Vec<u32>,
+    /// Per clause: (force state, start, end) — the range into `lits`.
+    clauses: Vec<(i8, usize, usize)>,
+}
+
+impl MultiTm {
+    /// Sample-sliced batched evaluation: clamped sums for every active
+    /// class over a transposed batch, class-major
+    /// (`result[c * planes.len() + i]`) — bit-identical to
+    /// [`MultiTm::evaluate_batch`] on the same rows, computing each
+    /// clause's fired-mask over 64 samples per AND.
+    ///
+    /// Work is fanned out over scoped threads by **class × sample-chunk**
+    /// (lane-aligned), so large batches saturate all cores instead of
+    /// capping at `active_classes` threads like the row-major path.
+    pub fn evaluate_planes(
+        &self,
+        planes: &BitPlanes,
+        params: &TmParams,
+        mode: EvalMode,
+    ) -> Vec<i32> {
+        assert_eq!(
+            planes.literals(),
+            self.shape().literals(),
+            "plane/machine literal width mismatch"
+        );
+        let n = planes.len();
+        let nc = params.active_classes;
+        if n == 0 || nc == 0 {
+            return Vec::new();
+        }
+        let mut sums = vec![0i32; nc * n];
+        // Lane-invariant per-class prep (force states + effective
+        // includes), computed once and shared by every chunk task.
+        let preps: Vec<ClassPrep> = (0..nc).map(|c| self.class_prep(c, params)).collect();
+        let work = n * nc * params.active_clauses;
+        let workers = if work < SPAWN_WORK {
+            1
+        } else {
+            std::thread::available_parallelism().map(|v| v.get()).unwrap_or(4)
+        };
+        if workers <= 1 {
+            for (c, chunk) in sums.chunks_mut(n).enumerate() {
+                self.class_plane_sums(&preps[c], planes, params, mode, 0, chunk);
+            }
+            return sums;
+        }
+        // Class × sample-chunk fan-out: split each class's output row
+        // into lane-aligned chunks so the task count scales with the
+        // batch, then deal tasks round-robin onto scoped worker threads.
+        let chunks_per_class = workers.div_ceil(nc).min(planes.lanes().max(1));
+        let chunk_samples = planes.lanes().div_ceil(chunks_per_class) * 64;
+        let mut tasks: Vec<(usize, usize, &mut [i32])> = Vec::new();
+        for (c, class_chunk) in sums.chunks_mut(n).enumerate() {
+            let mut lane0 = 0usize;
+            for sub in class_chunk.chunks_mut(chunk_samples) {
+                tasks.push((c, lane0, sub));
+                lane0 += chunk_samples / 64;
+            }
+        }
+        let mut bins: Vec<Vec<(usize, usize, &mut [i32])>> = Vec::new();
+        for _ in 0..workers {
+            bins.push(Vec::new());
+        }
+        for (i, task) in tasks.into_iter().enumerate() {
+            bins[i % workers].push(task);
+        }
+        let preps = &preps;
+        std::thread::scope(|scope| {
+            for bin in bins {
+                if bin.is_empty() {
+                    continue; // fewer tasks than workers: spawn no idlers
+                }
+                scope.spawn(move || {
+                    for (c, lane0, out) in bin {
+                        self.class_plane_sums(&preps[c], planes, params, mode, lane0, out);
+                    }
+                });
+            }
+        });
+        sums
+    }
+
+    /// Build one class's [`ClassPrep`]: apply the fault gates to the
+    /// packed action words and extract the effective included literals,
+    /// once per clause (not per 64-sample lane).
+    fn class_prep(&self, c: usize, params: &TmParams) -> ClassPrep {
+        let shape = self.shape();
+        let words = shape.words();
+        let base = c * shape.max_clauses;
+        let fault_free = self.fault().is_fault_free();
+        let mut lits: Vec<u32> = Vec::new();
+        let mut clauses: Vec<(i8, usize, usize)> =
+            Vec::with_capacity(params.active_clauses);
+        for j in 0..params.active_clauses {
+            let row = base + j;
+            let force = self.clause_force[row];
+            let start = lits.len();
+            if force < 0 {
+                for w in 0..words {
+                    let raw = self.actions[row * words + w];
+                    let aw = if fault_free { raw } else { self.fault().apply(c, j, w, raw) };
+                    let mut a = aw;
+                    while a != 0 {
+                        lits.push((w * 64) as u32 + a.trailing_zeros());
+                        a &= a - 1;
+                    }
+                }
+            }
+            clauses.push((force, start, lits.len()));
+        }
+        ClassPrep { lits, clauses }
+    }
+
+    /// Clamped sums of one class (prepared as `prep`) over the sample
+    /// range `[lane0 * 64, lane0 * 64 + out.len())` of a transposed
+    /// batch.
+    fn class_plane_sums(
+        &self,
+        prep: &ClassPrep,
+        planes: &BitPlanes,
+        params: &TmParams,
+        mode: EvalMode,
+        lane0: usize,
+        out: &mut [i32],
+    ) {
+        let train = mode == EvalMode::Train;
+        // Bit-sliced vote counters: one per polarity, wide enough for
+        // `active_clauses / 2` fired clauses.
+        let half = prep.clauses.len() / 2;
+        let width = (usize::BITS - half.leading_zeros()) as usize;
+        let mut pos = vec![0u64; width];
+        let mut neg = vec![0u64; width];
+        let t = params.t;
+        let n_lanes = out.len().div_ceil(64);
+        for l in 0..n_lanes {
+            let lane = lane0 + l;
+            let s0 = l * 64;
+            let lane_len = (out.len() - s0).min(64);
+            // Plane tail bits are zero, so ANDed masks stay in range;
+            // the explicit mask covers empty / forced-1 clauses.
+            let valid = planes.lane_mask(lane);
+            pos.fill(0);
+            neg.fill(0);
+            for (j, &(force, start, end)) in prep.clauses.iter().enumerate() {
+                let m = match force {
+                    0 => 0u64,
+                    1 => valid,
+                    _ if start == end => {
+                        // Empty clause: fires in train mode only.
+                        if train {
+                            valid
+                        } else {
+                            0
+                        }
+                    }
+                    _ => {
+                        let mut m = valid;
+                        for &k in &prep.lits[start..end] {
+                            m &= planes.plane_word(k as usize, lane);
+                            if m == 0 {
+                                break;
+                            }
+                        }
+                        m
+                    }
+                };
+                if m != 0 {
+                    add_mask(if j % 2 == 0 { &mut pos } else { &mut neg }, m);
+                }
+            }
+            for b in 0..lane_len {
+                let mut p = 0i32;
+                let mut q = 0i32;
+                for (w, &plane) in pos.iter().enumerate() {
+                    p |= (((plane >> b) & 1) as i32) << w;
+                }
+                for (w, &plane) in neg.iter().enumerate() {
+                    q |= (((plane >> b) & 1) as i32) << w;
+                }
+                out[s0 + b] = (p - q).clamp(-t, t);
+            }
+        }
+    }
+
+    /// Batched prediction off transposed planes (argmax over active
+    /// classes, ties to the lowest index — row-identical to
+    /// [`MultiTm::predict_batch`]).
+    pub fn predict_planes(&self, planes: &BitPlanes, params: &TmParams) -> Vec<usize> {
+        let sums = self.evaluate_planes(planes, params, EvalMode::Infer);
+        argmax_rows(&sums, planes.len(), params.active_classes)
+    }
+
+    /// Classification accuracy over a cached labelled plane batch —
+    /// equal to [`MultiTm::accuracy_batch`] on the rows the batch was
+    /// transposed from.
+    pub fn accuracy_planes(&self, batch: &PlaneBatch, params: &TmParams) -> f64 {
+        if batch.is_empty() {
+            return 0.0;
+        }
+        let preds = self.predict_planes(batch.planes(), params);
+        let correct =
+            preds.iter().zip(batch.labels().iter()).filter(|(p, y)| p == y).count();
+        correct as f64 / batch.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tm::rng::Xoshiro256;
+
+    fn shape() -> TmShape {
+        TmShape::iris()
+    }
+
+    fn params() -> TmParams {
+        TmParams::paper_offline(&shape())
+    }
+
+    fn random_inputs(s: &TmShape, n: usize, rng: &mut Xoshiro256) -> Vec<Input> {
+        (0..n)
+            .map(|_| {
+                let bits: Vec<bool> =
+                    (0..s.features).map(|_| rng.next_f32() < 0.5).collect();
+                Input::pack(s, &bits)
+            })
+            .collect()
+    }
+
+    fn random_machine(s: &TmShape, seed: u64) -> (MultiTm, Xoshiro256) {
+        let mut rng = Xoshiro256::new(seed);
+        let states: Vec<u32> = (0..s.num_tas())
+            .map(|_| rng.next_below(2 * s.states as usize) as u32)
+            .collect();
+        (MultiTm::from_states(s, states).unwrap(), rng)
+    }
+
+    #[test]
+    fn fresh_machine_empty_clause_convention() {
+        let s = shape();
+        let tm = MultiTm::new(&s).unwrap();
+        let p = params();
+        let mut rng = Xoshiro256::new(1);
+        let inputs = random_inputs(&s, 10, &mut rng);
+        let planes = BitPlanes::from_inputs(&s, &inputs);
+        // Infer: empty clauses are silent -> all sums 0.
+        let infer = tm.evaluate_planes(&planes, &p, EvalMode::Infer);
+        assert!(infer.iter().all(|&v| v == 0));
+        // Train: all clauses fire, polarities cancel -> still 0, but via
+        // full counters (differential against the row-major path).
+        let train = tm.evaluate_planes(&planes, &p, EvalMode::Train);
+        assert_eq!(train, tm.evaluate_batch(&inputs, &p, EvalMode::Train));
+    }
+
+    #[test]
+    fn forced_clause_fires_for_every_sample() {
+        let s = shape();
+        let mut tm = MultiTm::new(&s).unwrap();
+        let p = params();
+        tm.set_clause_fault(0, 0, Some(true));
+        let mut rng = Xoshiro256::new(2);
+        let inputs = random_inputs(&s, 70, &mut rng);
+        let planes = BitPlanes::from_inputs(&s, &inputs);
+        let sums = tm.evaluate_planes(&planes, &p, EvalMode::Infer);
+        for i in 0..70 {
+            assert_eq!(sums[i], 1, "forced + clause votes on sample {i}");
+        }
+        assert_eq!(sums, tm.evaluate_batch(&inputs, &p, EvalMode::Infer));
+    }
+
+    #[test]
+    fn prop_matches_row_major_on_random_machines() {
+        let s = shape();
+        for trial in 0..20u64 {
+            let (tm, mut rng) = random_machine(&s, 0xB17 + trial);
+            let mut p = params();
+            p.active_clauses = [4, 8, 16][(trial % 3) as usize];
+            p.active_classes = 1 + (trial % 3) as usize;
+            p.t = [1, 5, 15][(trial % 3) as usize];
+            let n = [1, 5, 63, 64, 65, 100][(trial % 6) as usize];
+            let inputs = random_inputs(&s, n, &mut rng);
+            let planes = BitPlanes::from_inputs(&s, &inputs);
+            for mode in [EvalMode::Train, EvalMode::Infer] {
+                assert_eq!(
+                    tm.evaluate_planes(&planes, &p, mode),
+                    tm.evaluate_batch(&inputs, &p, mode),
+                    "trial {trial} n {n} {mode:?}"
+                );
+            }
+            assert_eq!(
+                tm.predict_planes(&planes, &p),
+                tm.predict_batch(&inputs, &p),
+                "trial {trial}"
+            );
+        }
+    }
+
+    #[test]
+    fn counter_width_handles_minimum_clause_count() {
+        let s = shape();
+        let (mut tm, mut rng) = random_machine(&s, 0x33);
+        let mut p = params();
+        p.active_clauses = 2; // one positive + one negative clause
+        tm.set_clause_fault(0, 0, Some(true));
+        tm.set_clause_fault(0, 1, Some(true));
+        let inputs = random_inputs(&s, 130, &mut rng);
+        let planes = BitPlanes::from_inputs(&s, &inputs);
+        let sums = tm.evaluate_planes(&planes, &p, EvalMode::Infer);
+        assert_eq!(sums, tm.evaluate_batch(&inputs, &p, EvalMode::Infer));
+        for i in 0..130 {
+            assert_eq!(sums[i], 0, "forced +1 and -1 cancel on sample {i}");
+        }
+    }
+
+    #[test]
+    fn add_mask_counts_in_binary() {
+        let mut counter = vec![0u64; 3];
+        for _ in 0..5 {
+            add_mask(&mut counter, 0b11);
+        }
+        add_mask(&mut counter, 0b10);
+        // Lane 0 counted 5 (101b), lane 1 counted 6 (110b).
+        let count = |bit: u64| {
+            counter
+                .iter()
+                .enumerate()
+                .map(|(w, &p)| (((p >> bit) & 1) as u64) << w)
+                .sum::<u64>()
+        };
+        assert_eq!(count(0), 5);
+        assert_eq!(count(1), 6);
+        assert_eq!(count(2), 0);
+    }
+}

@@ -25,13 +25,14 @@ pub struct MultiTm {
     ta: TaBlock,
     fault: FaultMap,
     /// Packed true include actions, `[row * words + w]`,
-    /// row = class * max_clauses + clause.
-    actions: Vec<u64>,
+    /// row = class * max_clauses + clause (read by the sample-sliced
+    /// kernel in `tm::bitplane`).
+    pub(crate) actions: Vec<u64>,
     /// Clause-output-level forcing (§7 future work: "injecting faults at
     /// the clause output level"): per clause row, `-1` = fault-free,
     /// `0`/`1` = output forced. Gates sit on the clause output wire, so
     /// they apply in both train and infer modes (active clauses only).
-    clause_force: Vec<i8>,
+    pub(crate) clause_force: Vec<i8>,
     /// Number of forced clause outputs (O(1) hot-path check).
     clause_faults: usize,
     /// Scratch: per-(class,clause) outputs of the last evaluation.
@@ -361,9 +362,8 @@ impl MultiTm {
             return Vec::new();
         }
         let mut sums = vec![0i32; nc * n];
-        // Spawn threshold: clause-evaluations across the whole batch.
         let work = n * nc * params.active_clauses;
-        if nc == 1 || work < 1 << 15 {
+        if nc == 1 || work < SPAWN_WORK {
             for (c, chunk) in sums.chunks_mut(n).enumerate() {
                 self.class_sums_into(c, items, proj, params, mode, chunk);
             }
@@ -377,22 +377,6 @@ impl MultiTm {
             });
         }
         sums
-    }
-
-    /// Row-wise argmax over class-major sums (ties to the lowest class
-    /// index, matching [`MultiTm::predict`]).
-    fn argmax_rows(sums: &[i32], n: usize, nc: usize) -> Vec<usize> {
-        (0..n)
-            .map(|i| {
-                let mut best = 0usize;
-                for c in 1..nc {
-                    if sums[c * n + i] > sums[best * n + i] {
-                        best = c;
-                    }
-                }
-                best
-            })
-            .collect()
     }
 
     /// Batched evaluation: clamped sums for every active class over a
@@ -414,7 +398,7 @@ impl MultiTm {
     /// index — identical to [`MultiTm::predict`] row by row).
     pub fn predict_batch(&self, inputs: &[Input], params: &TmParams) -> Vec<usize> {
         let sums = self.evaluate_batch(inputs, params, EvalMode::Infer);
-        Self::argmax_rows(&sums, inputs.len(), params.active_classes)
+        argmax_rows(&sums, inputs.len(), params.active_classes)
     }
 
     /// [`MultiTm::predict_batch`] over labelled rows, borrowing the
@@ -428,7 +412,7 @@ impl MultiTm {
             &x.0
         }
         let sums = self.batch_sums(data, fst, params, EvalMode::Infer);
-        Self::argmax_rows(&sums, data.len(), params.active_classes)
+        argmax_rows(&sums, data.len(), params.active_classes)
     }
 
     /// Classification accuracy over packed labelled rows via the batched
@@ -449,12 +433,7 @@ impl MultiTm {
     pub fn infer(&mut self, input: &Input, params: &TmParams) -> (Vec<i32>, usize) {
         self.evaluate(input, params, EvalMode::Infer);
         let sums = self.sums[..params.active_classes].to_vec();
-        let mut best = 0usize;
-        for (c, &v) in sums.iter().enumerate() {
-            if v > sums[best] {
-                best = c;
-            }
-        }
+        let best = argmax_class(sums.len(), |c| sums[c]);
         (sums, best)
     }
 
@@ -462,13 +441,7 @@ impl MultiTm {
     /// this once per stored row per analysis point).
     pub fn predict(&mut self, input: &Input, params: &TmParams) -> usize {
         self.evaluate(input, params, EvalMode::Infer);
-        let mut best = 0usize;
-        for c in 1..params.active_classes {
-            if self.sums[c] > self.sums[best] {
-                best = c;
-            }
-        }
-        best
+        argmax_class(params.active_classes, |c| self.sums[c])
     }
 
     /// Apply one saturating TA move and keep the action cache coherent.
@@ -534,6 +507,33 @@ impl MultiTm {
             .count();
         correct as f64 / data.len() as f64
     }
+}
+
+/// Spawn threshold for batched evaluation, in clause-evaluations across
+/// the whole batch — shared by the row-major ([`MultiTm::evaluate_batch`])
+/// and sample-sliced (`tm::bitplane`) paths so the two parallelise at the
+/// same batch scale.
+pub(crate) const SPAWN_WORK: usize = 1 << 15;
+
+/// THE argmax of this repo: index of the largest class sum, **ties to the
+/// lowest class index** (matching the L2 graph's argmax). Every
+/// prediction path — [`MultiTm::infer`], [`MultiTm::predict`], the
+/// row-major batch and the sample-sliced plane kernels — routes through
+/// this one helper so the tie-break semantics cannot drift.
+#[inline]
+pub fn argmax_class(classes: usize, sum: impl Fn(usize) -> i32) -> usize {
+    let mut best = 0usize;
+    for c in 1..classes {
+        if sum(c) > sum(best) {
+            best = c;
+        }
+    }
+    best
+}
+
+/// Row-wise [`argmax_class`] over class-major sums (`sums[c * n + i]`).
+pub(crate) fn argmax_rows(sums: &[i32], n: usize, nc: usize) -> Vec<usize> {
+    (0..n).map(|i| argmax_class(nc, |c| sums[c * n + i])).collect()
 }
 
 #[cfg(test)]

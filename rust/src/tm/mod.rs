@@ -7,9 +7,13 @@
 //! the scalar oracle pinned bit-for-bit to the L2 HLO graph
 //! (`rust/tests/parity.rs`), and [`engine`] is the word-parallel fast
 //! path — bit-identical to the oracle given the same [`rng::StepRands`],
-//! with an additional lazy-randomness mode for the hot loops.
+//! with an additional lazy-randomness mode for the hot loops. Batched
+//! inference has a row-major path (`machine.rs`) and a sample-sliced
+//! bitplane path ([`bitplane`], 64 samples per AND) that are
+//! differentially pinned bit-identical.
 
 pub mod automaton;
+pub mod bitplane;
 pub mod clause;
 pub mod engine;
 pub mod explain;
@@ -21,10 +25,11 @@ pub mod rng;
 pub mod state;
 
 pub use automaton::TaBlock;
+pub use bitplane::{BitPlanes, PlaneBatch};
 pub use clause::{EvalMode, Input};
 pub use engine::{train_step_fast, train_step_lazy, EpochStats, FeedbackPlan};
 pub use fault::{Fault, FaultMap};
 pub use feedback::{train_step, StepActivity};
-pub use machine::MultiTm;
+pub use machine::{argmax_class, MultiTm};
 pub use params::{polarity, TmParams, TmShape};
 pub use rng::{BernoulliPlan, StepRands, Xoshiro256};

@@ -1,0 +1,187 @@
+//! Sample-sliced (bitplane) inference ⇄ row-major differential suite.
+//!
+//! `MultiTm::evaluate_planes` must be **bit-identical** to
+//! `MultiTm::evaluate_batch` (and therefore to per-row `evaluate`, which
+//! machine.rs pins to the batch path) over every datapath corner:
+//! single- and multi-word literal rows, injected TA fault gates,
+//! clause-output force overrides, inactive clause/class tails, and batch
+//! sizes that are not multiples of 64 — including batches large enough
+//! to engage the class × sample-chunk thread fan-out.
+
+use tm_fpga::data::{blocks::BlockPlan, iris, SetAllocation};
+use tm_fpga::tm::*;
+
+fn random_inputs(shape: &TmShape, n: usize, rng: &mut Xoshiro256) -> Vec<Input> {
+    (0..n)
+        .map(|_| {
+            let bits: Vec<bool> =
+                (0..shape.features).map(|_| rng.next_f32() < 0.5).collect();
+            Input::pack(shape, &bits)
+        })
+        .collect()
+}
+
+/// Machine with uniformly random TA states (random include patterns).
+fn random_machine(shape: &TmShape, seed: u64) -> (MultiTm, Xoshiro256) {
+    let mut rng = Xoshiro256::new(seed);
+    let states: Vec<u32> = (0..shape.num_tas())
+        .map(|_| rng.next_below(2 * shape.states as usize) as u32)
+        .collect();
+    (MultiTm::from_states(shape, states).unwrap(), rng)
+}
+
+/// Assert plane and row-major evaluation agree bit-for-bit in both modes,
+/// and that the prediction paths (shared argmax) agree row by row.
+fn assert_planes_match(tm: &MultiTm, inputs: &[Input], params: &TmParams, ctx: &str) {
+    let planes = BitPlanes::from_inputs(tm.shape(), inputs);
+    for mode in [EvalMode::Train, EvalMode::Infer] {
+        let row_major = tm.evaluate_batch(inputs, params, mode);
+        let sliced = tm.evaluate_planes(&planes, params, mode);
+        assert_eq!(row_major, sliced, "{ctx}: sums diverged (n={}, {mode:?})", inputs.len());
+    }
+    assert_eq!(
+        tm.predict_batch(inputs, params),
+        tm.predict_planes(&planes, params),
+        "{ctx}: predictions diverged (n={})",
+        inputs.len()
+    );
+}
+
+#[test]
+fn planes_match_row_major_across_shapes_and_batch_sizes() {
+    for (si, shape) in [
+        TmShape::iris(),                                                    // 1 word
+        TmShape { classes: 4, max_clauses: 6, features: 40, states: 8 },    // 2 words, partial
+        TmShape { classes: 2, max_clauses: 4, features: 64, states: 8 },    // 2 full words
+    ]
+    .iter()
+    .enumerate()
+    {
+        let (tm, mut rng) = random_machine(shape, 0x91A0 + si as u64);
+        let mut p = TmParams::paper_offline(shape);
+        p.t = 7;
+        // Non-multiple-of-64 batches on both sides of the lane boundary;
+        // 1000 rows push the iris shape over the thread-spawn threshold.
+        for n in [1usize, 63, 64, 65, 130, 1000] {
+            let inputs = random_inputs(shape, n, &mut rng);
+            assert_planes_match(&tm, &inputs, &p, &format!("shape {si}"));
+        }
+        // Inactive clause/class tails (the over-provisioning ports).
+        p.active_clauses = shape.max_clauses - 2;
+        p.active_classes = shape.classes - 1;
+        let inputs = random_inputs(shape, 97, &mut rng);
+        assert_planes_match(&tm, &inputs, &p, &format!("shape {si} gated"));
+    }
+}
+
+#[test]
+fn planes_match_threaded_multiword() {
+    // Big enough that class × sample-chunk fan-out engages on a
+    // multi-word shape (work = 2048 · 4 · 6 ≥ the spawn threshold).
+    let shape = TmShape { classes: 4, max_clauses: 6, features: 40, states: 8 };
+    let (tm, mut rng) = random_machine(&shape, 0x7EAD);
+    let p = TmParams::paper_offline(&shape);
+    let inputs = random_inputs(&shape, 2048, &mut rng);
+    assert_planes_match(&tm, &inputs, &p, "threaded multiword");
+}
+
+#[test]
+fn planes_match_under_fault_gates() {
+    let shape = TmShape { classes: 3, max_clauses: 8, features: 40, states: 16 };
+    let (mut tm, mut rng) = random_machine(&shape, 0xFA17);
+    let p = TmParams::paper_offline(&shape);
+    for (frac, kind) in [(0.20, Fault::StuckAt0), (0.10, Fault::StuckAt1)] {
+        let map = FaultMap::even_spread(&shape, frac, kind, 11).unwrap();
+        tm.set_fault_map(map);
+        let inputs = random_inputs(&shape, 150, &mut rng);
+        assert_planes_match(&tm, &inputs, &p, &format!("{kind:?}"));
+    }
+}
+
+#[test]
+fn planes_match_under_clause_force() {
+    let shape = TmShape::iris();
+    let (mut tm, mut rng) = random_machine(&shape, 0xC10F);
+    let mut p = TmParams::paper_offline(&shape);
+    p.active_clauses = 12;
+    tm.set_clause_fault(0, 0, Some(true));
+    tm.set_clause_fault(1, 3, Some(false));
+    // Forced clause in the gated-off tail: both paths must ignore it.
+    tm.set_clause_fault(2, 13, Some(true));
+    let inputs = random_inputs(&shape, 70, &mut rng);
+    assert_planes_match(&tm, &inputs, &p, "forced");
+    tm.set_clause_fault(0, 0, None);
+    tm.set_clause_fault(1, 3, None);
+    assert_planes_match(&tm, &inputs, &p, "partially cleared");
+    tm.set_clause_fault(2, 13, None);
+    assert_eq!(tm.clause_fault_count(), 0);
+    assert_planes_match(&tm, &inputs, &p, "cleared");
+}
+
+#[test]
+fn trained_machine_accuracy_planes_matches_batch() {
+    let shape = TmShape::iris();
+    let params = TmParams::paper_offline(&shape);
+    let plan = BlockPlan::stratified(iris::booleanised(), 5, 33).unwrap();
+    let sets = plan.sets(&[0, 1, 2, 3, 4], SetAllocation::paper()).unwrap();
+    let train = sets.offline.pack(&shape);
+    let val = sets.validation.pack(&shape);
+    let mut tm = MultiTm::new(&shape).unwrap();
+    let mut rng = Xoshiro256::new(3);
+    for _ in 0..10 {
+        tm.train_epoch(&train, &params, &mut rng);
+    }
+    let batch = PlaneBatch::from_labelled(&shape, &val);
+    let acc_planes = tm.accuracy_planes(&batch, &params);
+    let acc_batch = tm.accuracy_batch(&val, &params);
+    assert!(
+        (acc_planes - acc_batch).abs() < 1e-12,
+        "plane acc {acc_planes} vs batch acc {acc_batch}"
+    );
+    assert!(acc_planes > 0.5, "trained machine beats chance: {acc_planes:.3}");
+
+    // Dataset-side cache constructors agree with the direct transpose.
+    let cached = sets.validation.pack_planes(&shape);
+    assert_eq!(cached.labels(), batch.labels());
+    assert_eq!(
+        tm.predict_planes(cached.planes(), &params),
+        tm.predict_planes(batch.planes(), &params)
+    );
+    let packed = sets.pack_planes(&shape);
+    assert_eq!(packed.validation_planes.labels(), batch.labels());
+    assert_eq!(packed.validation.len(), val.len());
+    assert!(
+        (tm.accuracy_planes(&packed.validation_planes, &params) - acc_batch).abs() < 1e-12
+    );
+}
+
+#[test]
+fn transpose_roundtrip_and_tail_masks() {
+    let shape = TmShape { classes: 2, max_clauses: 4, features: 40, states: 8 };
+    let mut rng = Xoshiro256::new(9);
+    let inputs = random_inputs(&shape, 70, &mut rng);
+    let planes = BitPlanes::from_inputs(&shape, &inputs);
+    assert_eq!(planes.len(), 70);
+    assert_eq!(planes.lanes(), 2);
+    assert_eq!(planes.literals(), 80);
+    assert_eq!(planes.lane_mask(0), !0u64);
+    assert_eq!(planes.lane_mask(1), (1u64 << 6) - 1);
+    for (i, x) in inputs.iter().enumerate() {
+        for k in 0..shape.literals() {
+            assert_eq!(planes.literal(k, i), x.literal(k), "lit {k} row {i}");
+        }
+    }
+}
+
+#[test]
+fn empty_batch_yields_empty_results() {
+    let shape = TmShape::iris();
+    let tm = MultiTm::new(&shape).unwrap();
+    let p = TmParams::paper_offline(&shape);
+    let planes = BitPlanes::from_inputs(&shape, &[]);
+    assert!(planes.is_empty());
+    assert!(tm.evaluate_planes(&planes, &p, EvalMode::Infer).is_empty());
+    assert!(tm.predict_planes(&planes, &p).is_empty());
+    let batch = PlaneBatch::from_labelled(&shape, &[]);
+    assert_eq!(tm.accuracy_planes(&batch, &p), 0.0);
+}
