@@ -15,8 +15,9 @@ use crate::tm::clause::Input;
 use crate::tm::engine::train_step_fast;
 use crate::tm::machine::MultiTm;
 use crate::tm::params::TmParams;
+use crate::tm::rescore::{RescoreCache, RescoreStats};
 use crate::tm::rng::{StepRands, Xoshiro256};
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
 /// Cumulative (EWMA) accuracy estimate from spot checks.
 #[derive(Debug, Clone)]
@@ -121,6 +122,51 @@ pub fn monitor_and_retrain(
         spot_checks: monitor.samples(),
         accuracy_after: tm.accuracy_planes(&eval_planes, params),
     })
+}
+
+/// Trajectory of an interleaved train/re-score run
+/// ([`online_rescore_run`]): the full-set accuracy after every re-score
+/// interval, plus the incremental engine's work counters.
+#[derive(Debug, Clone)]
+pub struct RescoreTrace {
+    /// Accuracy over the eval batch after each `rescore_every` steps.
+    pub accuracies: Vec<f64>,
+    /// The re-scorer's cumulative counters — `dirty_fraction()` is the
+    /// fraction of clause visits that actually had to be re-ANDed.
+    pub stats: RescoreStats,
+}
+
+/// The paper's headline interleaved loop as a driver: train online step
+/// by step, re-scoring the whole cached eval batch after every
+/// `rescore_every` steps through the incremental dirty-clause engine
+/// ([`RescoreCache`]). Each point of the returned trajectory is
+/// **bit-identical** to what a cold `accuracy_planes` pass at the same
+/// step would report — the engine only skips clauses whose TA actions
+/// did not flip since the previous re-score, which is what makes a
+/// dense monitoring cadence (`rescore_every = 1`) affordable at all
+/// (see EXPERIMENTS.md §Perf and the perf_table online-monitor row).
+pub fn online_rescore_run(
+    tm: &mut MultiTm,
+    params: &TmParams,
+    train: &[(Input, usize)],
+    eval: &PlaneBatch,
+    rescore_every: usize,
+    seed: u64,
+) -> Result<RescoreTrace> {
+    ensure!(rescore_every > 0, "rescore_every must be positive");
+    let shape = tm.shape().clone();
+    let mut rng = Xoshiro256::new(seed);
+    let mut rands = StepRands::draw(&mut rng, &shape);
+    let mut cache = RescoreCache::new();
+    let mut accuracies = Vec::new();
+    for (i, (x, y)) in train.iter().enumerate() {
+        rands.refill(&mut rng, &shape);
+        train_step_fast(tm, x, *y, params, &rands);
+        if (i + 1) % rescore_every == 0 {
+            accuracies.push(cache.accuracy(tm, eval, params));
+        }
+    }
+    Ok(RescoreTrace { accuracies, stats: cache.stats() })
 }
 
 #[cfg(test)]
@@ -231,6 +277,44 @@ mod tests {
             out.accuracy_after,
             faulted_untreated
         );
+    }
+
+    /// The interleaved driver's trajectory is bit-identical to running
+    /// the same schedule with a cold full-set re-score at every point.
+    #[test]
+    fn online_rescore_run_matches_cold_trajectory() {
+        let shape = TmShape::iris();
+        let plan = BlockPlan::stratified(iris::booleanised(), 5, 13).unwrap();
+        let sets = plan.sets(&[0, 1, 2, 3, 4], SetAllocation::paper()).unwrap();
+        let train = sets.offline.pack(&shape);
+        let eval = PlaneBatch::from_labelled(&shape, &sets.validation.pack(&shape));
+        let params = TmParams::paper_offline(&shape);
+
+        let mut incremental = MultiTm::new(&shape).unwrap();
+        let stream: Vec<_> = train.iter().cycle().take(90).cloned().collect();
+        let trace =
+            online_rescore_run(&mut incremental, &params, &stream, &eval, 3, 0xAB).unwrap();
+        assert_eq!(trace.accuracies.len(), 30);
+
+        // Cold oracle: identical schedule, cold accuracy_planes per point.
+        let mut cold = MultiTm::new(&shape).unwrap();
+        let mut rng = Xoshiro256::new(0xAB);
+        let mut rands = StepRands::draw(&mut rng, &shape);
+        let mut cold_curve = Vec::new();
+        for (i, (x, y)) in stream.iter().enumerate() {
+            rands.refill(&mut rng, &shape);
+            train_step_fast(&mut cold, x, *y, &params, &rands);
+            if (i + 1) % 3 == 0 {
+                cold_curve.push(cold.accuracy_planes(&eval, &params));
+            }
+        }
+        assert_eq!(trace.accuracies, cold_curve, "bit-identical trajectories");
+        // Offline training flips actions while it learns, but never all
+        // 48 clauses between every pair of points.
+        let f = trace.stats.dirty_fraction();
+        assert!(f < 1.0, "dirty fraction {f}");
+        assert!(trace.stats.clean_clauses > 0);
+        assert!(online_rescore_run(&mut cold, &params, &stream, &eval, 0, 1).is_err());
     }
 
     #[test]

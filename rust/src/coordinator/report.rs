@@ -73,8 +73,12 @@ pub fn figure_summary(r: &FigureResult) -> String {
     }
     let _ = writeln!(
         s,
-        "  mean cycles/run {:.0}  handshake stalls {:.0}  power {:.3} W",
-        r.mean_cycles, r.mean_stall_cycles, r.mean_power_w
+        "  mean cycles/run {:.0}  handshake stalls {:.0}  power {:.3} W  \
+         rescore dirty {:.1}%",
+        r.mean_cycles,
+        r.mean_stall_cycles,
+        r.mean_power_w,
+        r.mean_dirty_fraction * 100.0
     );
     s
 }

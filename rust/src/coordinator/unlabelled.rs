@@ -10,13 +10,14 @@
 //! margin clears a threshold; the unseen-class detector flags datapoints
 //! whose *best* sum is low (no class's clauses claim them).
 
-use crate::tm::bitplane::BitPlanes;
+use crate::tm::bitplane::{BitPlanes, PlaneBatch};
 use crate::tm::clause::{EvalMode, Input};
 use crate::tm::engine::train_step_fast;
 use crate::tm::machine::MultiTm;
 use crate::tm::params::TmParams;
+use crate::tm::rescore::RescoreCache;
 use crate::tm::rng::{StepRands, Xoshiro256};
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
 /// Vote-margin confidence of one inference.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -89,6 +90,39 @@ pub fn unlabelled_pass(
     Ok(stats)
 }
 
+/// Interleaved unlabelled learning with continuous monitoring: run the
+/// pseudo-label pass in chunks of `rescore_every` datapoints, re-scoring
+/// the whole cached `eval` batch after each chunk through the
+/// incremental dirty-clause engine. Returns the aggregated pass stats
+/// plus the accuracy trajectory — each point bit-identical to a cold
+/// `accuracy_planes` pass at the same step (pseudo-label training
+/// converges fast under the margin gate, so most chunks flip few TA
+/// actions and the re-score cost collapses with the dirty fraction).
+pub fn unlabelled_pass_monitored(
+    tm: &mut MultiTm,
+    data: &[(Input, usize)],
+    params_infer: &TmParams,
+    params_train: &TmParams,
+    policy: PseudoLabelPolicy,
+    rng: &mut Xoshiro256,
+    rands: &mut StepRands,
+    eval: &PlaneBatch,
+    rescore_every: usize,
+    cache: &mut RescoreCache,
+) -> Result<(UnlabelledStats, Vec<f64>)> {
+    ensure!(rescore_every > 0, "rescore_every must be positive");
+    let mut total = UnlabelledStats::default();
+    let mut curve = Vec::with_capacity(data.len().div_ceil(rescore_every));
+    for chunk in data.chunks(rescore_every) {
+        let s = unlabelled_pass(tm, chunk, params_infer, params_train, policy, rng, rands)?;
+        total.seen += s.seen;
+        total.trained += s.trained;
+        total.pseudo_correct += s.pseudo_correct;
+        curve.push(cache.accuracy(tm, eval, params_infer));
+    }
+    Ok((total, curve))
+}
+
 /// Unseen-class detector (§7): a datapoint whose best clamped sum is
 /// below `min_best_sum` belongs to no known class's clause patterns.
 #[derive(Debug, Clone, Copy)]
@@ -117,12 +151,33 @@ impl UnseenClassDetector {
         }
         let planes = BitPlanes::from_labelled(tm.shape(), data);
         let sums = tm.evaluate_planes(&planes, params, EvalMode::Infer);
-        let n = data.len();
-        let nc = params.active_classes;
+        Self::rate_from_sums(self.min_best_sum, &sums, data.len(), params.active_classes)
+    }
+
+    /// [`UnseenClassDetector::flag_rate`] off a cached transpose through
+    /// the incremental engine — for drivers that re-run the detector over
+    /// the same batch while training interleaves (drift watch): only
+    /// dirtied clauses are re-ANDed, and the rate is identical to the
+    /// cold path's.
+    pub fn flag_rate_planes(
+        &self,
+        tm: &MultiTm,
+        cache: &mut RescoreCache,
+        planes: &BitPlanes,
+        params: &TmParams,
+    ) -> f64 {
+        if planes.is_empty() {
+            return 0.0;
+        }
+        let sums = cache.evaluate(tm, planes, params, EvalMode::Infer);
+        Self::rate_from_sums(self.min_best_sum, &sums, planes.len(), params.active_classes)
+    }
+
+    fn rate_from_sums(min_best: i32, sums: &[i32], n: usize, nc: usize) -> f64 {
         let flagged = (0..n)
             .filter(|&i| {
                 let best = (0..nc).map(|c| sums[c * n + i]).max().unwrap_or(0);
-                best < self.min_best_sum
+                best < min_best
             })
             .count();
         flagged as f64 / n as f64
@@ -285,6 +340,76 @@ mod tests {
         }
         gain /= n as f64;
         assert!(gain > 0.0, "unlabelled learning mean gain {gain:.3}");
+    }
+
+    /// The monitored pass equals running plain `unlabelled_pass` chunk by
+    /// chunk with a cold full-set accuracy after each chunk — same stats,
+    /// bit-identical curve.
+    #[test]
+    fn monitored_pass_matches_cold_chunked_oracle() {
+        let shape = TmShape::iris();
+        let p_off = TmParams::paper_offline(&shape);
+        let p_on = TmParams::paper_online(&shape);
+        let plan = BlockPlan::stratified(iris::booleanised(), 5, 20).unwrap();
+        let sets = plan.sets(&[0, 1, 2, 3, 4], SetAllocation::paper()).unwrap();
+        let train = sets.offline.truncate(20).pack(&shape);
+        let online = sets.online.pack(&shape);
+        let eval = PlaneBatch::from_labelled(&shape, &sets.validation.pack(&shape));
+        let policy = PseudoLabelPolicy { min_margin: 2 };
+
+        let mut a = trained_on(&train, &shape, &p_off, 10, 2);
+        let mut rng_a = Xoshiro256::new(6);
+        let mut rands_a = StepRands::draw(&mut rng_a, &shape);
+        let mut cache = RescoreCache::new();
+        let (stats_a, curve_a) = unlabelled_pass_monitored(
+            &mut a, &online, &p_off, &p_on, policy, &mut rng_a, &mut rands_a, &eval, 10,
+            &mut cache,
+        )
+        .unwrap();
+        assert_eq!(curve_a.len(), 6, "60 rows / 10 per chunk");
+
+        let mut b = trained_on(&train, &shape, &p_off, 10, 2);
+        let mut rng_b = Xoshiro256::new(6);
+        let mut rands_b = StepRands::draw(&mut rng_b, &shape);
+        let mut stats_b = UnlabelledStats::default();
+        let mut curve_b = Vec::new();
+        for chunk in online.chunks(10) {
+            let s = unlabelled_pass(
+                &mut b, chunk, &p_off, &p_on, policy, &mut rng_b, &mut rands_b,
+            )
+            .unwrap();
+            stats_b.seen += s.seen;
+            stats_b.trained += s.trained;
+            stats_b.pseudo_correct += s.pseudo_correct;
+            curve_b.push(b.accuracy_planes(&eval, &p_off));
+        }
+        assert_eq!(curve_a, curve_b, "bit-identical accuracy trajectories");
+        assert_eq!(stats_a.seen, stats_b.seen);
+        assert_eq!(stats_a.trained, stats_b.trained);
+        assert_eq!(stats_a.pseudo_correct, stats_b.pseudo_correct);
+        assert!(cache.stats().clean_clauses > 0, "incremental path engaged");
+    }
+
+    #[test]
+    fn cached_flag_rate_matches_cold_flag_rate() {
+        let shape = TmShape::iris();
+        let params = TmParams::paper_offline(&shape);
+        let plan = BlockPlan::stratified(iris::booleanised(), 5, 20).unwrap();
+        let sets = plan.sets(&[0, 1, 2, 3, 4], SetAllocation::paper()).unwrap();
+        let train = sets.offline.pack(&shape);
+        let online = sets.online.pack(&shape);
+        let mut tm = trained_on(&train, &shape, &params, 10, 3);
+        let det = UnseenClassDetector { min_best_sum: 2 };
+        let planes = BitPlanes::from_labelled(&shape, &online);
+        let mut cache = RescoreCache::new();
+        for round in 0..3 {
+            let cold = det.flag_rate(&mut tm, &online, &params);
+            let cached = det.flag_rate_planes(&tm, &mut cache, &planes, &params);
+            assert_eq!(cold, cached, "round {round}");
+            // Nudge the machine between rounds so later rounds exercise
+            // the dirty path, not just a clean cache.
+            tm.set_clause_fault(round % 3, round, Some(round % 2 == 0));
+        }
     }
 
     #[test]

@@ -10,11 +10,15 @@
 //! mode: cycle cost = pipeline fill + one cycle per stored row (filtered
 //! rows still occupy their ROM read slot).
 //!
-//! Scoring runs the sample-sliced bitplane kernel
-//! ([`MultiTm::predict_planes`], bit-identical to the row-major batch
-//! path) over a per-(set, filter) transposed-plane cache: every analysis
-//! point rescores the same stored sets, so the transpose is paid once
-//! per filter configuration instead of once per analysis.
+//! Scoring runs the **incremental dirty-clause re-scorer**
+//! ([`crate::tm::rescore::RescoreCache`], bit-identical to a cold
+//! sample-sliced [`MultiTm::predict_planes`] pass and to the row-major
+//! batch path) over a per-(set, filter) transposed-plane cache: every
+//! analysis point rescores the same stored sets, so the transpose is
+//! paid once per filter configuration and each re-score touches only the
+//! clauses whose TA actions flipped since the previous analysis point —
+//! the dominant cost of the interleaved online train/analyse loop
+//! (paper Fig 3) collapses with the dirty fraction as the TM converges.
 
 use crate::data::filter::ClassFilter;
 use crate::fpga::clock::{Clock, Module};
@@ -25,6 +29,7 @@ use crate::tm::bitplane::PlaneBatch;
 use crate::tm::clause::Input;
 use crate::tm::machine::MultiTm;
 use crate::tm::params::{TmParams, TmShape};
+use crate::tm::rescore::{RescoreCache, RescoreStats};
 use anyhow::Result;
 
 /// One analysis record (what gets offloaded over AXI).
@@ -70,18 +75,24 @@ pub struct AccuracyAnalyzer {
     /// the filter; a row fingerprint (inputs + labels) guards staleness
     /// in case the bank is ever remapped under a live analyzer.
     planes: Vec<(SetId, ClassFilter, u64, PlaneBatch)>,
+    /// Incremental re-scorer over the cached plane batches: fired-masks
+    /// and vote tallies survive between analysis points; only clauses
+    /// dirtied by the interleaved training are re-ANDed.
+    rescore: RescoreCache,
 }
 
 /// Order-sensitive FNV-style fingerprint of a streamed row set (packed
 /// literal words + labels) — O(rows · words), far cheaper than the
-/// transpose it guards.
+/// transpose it guards. Shares the fold definition with
+/// [`BitPlanes::fingerprint`](crate::tm::bitplane::BitPlanes) so the two
+/// invalidation layers cannot drift.
 fn stream_fingerprint(rows: &[(Input, usize)]) -> u64 {
-    const FNV_PRIME: u64 = 0x100_0000_01b3;
-    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    use crate::tm::bitplane::{fnv_fold, FNV_OFFSET};
+    let mut h = FNV_OFFSET;
     for (x, y) in rows {
-        h = (h ^ (*y as u64 + 1)).wrapping_mul(FNV_PRIME);
+        h = fnv_fold(h, *y as u64 + 1);
         for &w in x.words() {
-            h = (h ^ w).wrapping_mul(FNV_PRIME);
+            h = fnv_fold(h, w);
         }
     }
     h
@@ -89,18 +100,32 @@ fn stream_fingerprint(rows: &[(Input, usize)]) -> u64 {
 
 impl AccuracyAnalyzer {
     pub fn new(mode: HistoryMode) -> Self {
-        AccuracyAnalyzer { mode, history: Vec::new(), planes: Vec::new() }
+        AccuracyAnalyzer {
+            mode,
+            history: Vec::new(),
+            planes: Vec::new(),
+            rescore: RescoreCache::new(),
+        }
+    }
+
+    /// Cumulative incremental re-scoring counters (dirty fraction etc.) —
+    /// surfaced in the system's [`crate::fpga::system::RunReport`].
+    pub fn rescore_stats(&self) -> RescoreStats {
+        self.rescore.stats()
     }
 
     /// Transposed planes for one streamed set, cached per (set, filter);
-    /// rebuilt if the stream's fingerprint no longer matches the cache.
+    /// rebuilt if the stream's fingerprint no longer matches the cache
+    /// (a rebuilt batch carries a new plane fingerprint, which in turn
+    /// invalidates the re-scorer's entry for it). Returns the cache
+    /// index so the caller can split field borrows.
     fn cached_planes(
         &mut self,
         set: SetId,
         filter: ClassFilter,
         shape: &TmShape,
         rows: &[(Input, usize)],
-    ) -> &PlaneBatch {
+    ) -> usize {
         let fp = stream_fingerprint(rows);
         match self.planes.iter().position(|(s, f, _, _)| *s == set && *f == filter) {
             Some(i) => {
@@ -108,12 +133,12 @@ impl AccuracyAnalyzer {
                     self.planes[i].2 = fp;
                     self.planes[i].3 = PlaneBatch::from_labelled(shape, rows);
                 }
-                &self.planes[i].3
+                i
             }
             None => {
                 self.planes
                     .push((set, filter, fp, PlaneBatch::from_labelled(shape, rows)));
-                &self.planes.last().unwrap().3
+                self.planes.len() - 1
             }
         }
     }
@@ -145,12 +170,15 @@ impl AccuracyAnalyzer {
         clock.set_enabled(Module::TmCore, false);
         clock.toggle(Module::AccuracyAnalysis, rows.len() as u64);
 
-        // Sample-sliced inference off the cached transpose (bit-identical
-        // to per-row `predict` and the row-major batch path — see
-        // rust/tests/integration_bitplane.rs).
+        // Incremental sample-sliced inference off the cached transpose:
+        // only clauses dirtied since the previous analysis of this batch
+        // are re-ANDed (bit-identical to per-row `predict`, the row-major
+        // batch path and a cold plane pass — see
+        // rust/tests/integration_bitplane.rs and integration_rescore.rs).
         let errors = {
-            let batch = self.cached_planes(set, mm.filter, tm.shape(), &rows);
-            let preds = tm.predict_planes(batch.planes(), params);
+            let i = self.cached_planes(set, mm.filter, tm.shape(), &rows);
+            let batch = &self.planes[i].3;
+            let preds = self.rescore.predict(tm, batch.planes(), params);
             preds.iter().zip(batch.labels().iter()).filter(|(p, y)| p != y).count()
         };
         let rec = AccuracyRecord {
@@ -244,6 +272,32 @@ mod tests {
         assert_eq!(rec.cycles, 30);
         assert_eq!(rec.iteration, 2);
         assert!(an.history.is_empty(), "offload mode keeps no RAM history");
+    }
+
+    #[test]
+    fn repeated_analysis_is_incremental_and_identical() {
+        let shape = TmShape::iris();
+        let mut tm = MultiTm::new(&shape).unwrap();
+        let p = TmParams::paper_offline(&shape);
+        let mm = MemoryManager::new(&shape);
+        let mut b = bank();
+        let mut clock = Clock::new();
+        let mut an = AccuracyAnalyzer::new(HistoryMode::OnChipRam);
+        let a = an
+            .analyze(&mut tm, &p, &mm, &mut b, SetId::Validation, 0, &mut clock)
+            .unwrap();
+        let cold = an.rescore_stats();
+        assert_eq!(cold.cold_builds, 1, "first analysis builds the cache");
+        // Nothing trained in between: the second analysis must serve
+        // every clause from cache and report identical errors.
+        let b2 = an
+            .analyze(&mut tm, &p, &mm, &mut b, SetId::Validation, 1, &mut clock)
+            .unwrap();
+        assert_eq!(a.errors, b2.errors);
+        let warm = an.rescore_stats();
+        assert_eq!(warm.cold_builds, 1);
+        assert_eq!(warm.dirty_clauses, 0, "no TA flipped between analyses");
+        assert!(warm.clean_clauses > cold.clean_clauses);
     }
 
     #[test]

@@ -36,6 +36,18 @@ pub struct WordUpdate {
     pub now_exclude: u64,
 }
 
+impl WordUpdate {
+    /// Did any TA cross the include/exclude boundary? This is the signal
+    /// the machine forwards into its per-clause dirty tracking
+    /// (`tm::rescore`): a clause whose actions did not flip cannot change
+    /// any cached fired-mask, so word updates with pure within-half moves
+    /// leave incremental re-scoring caches untouched.
+    #[inline]
+    pub fn action_flipped(&self) -> bool {
+        (self.now_include | self.now_exclude) != 0
+    }
+}
+
 /// What a saturating transition did — used by the machine to keep its
 /// packed include-action cache coherent without re-scanning all TAs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -308,11 +320,7 @@ mod tests {
             let c = rng.next_below(s.classes);
             let j = rng.next_below(s.max_clauses);
             let w = rng.next_below(s.words());
-            let valid: u64 = if (w + 1) * 64 <= s.literals() {
-                !0
-            } else {
-                (1u64 << (s.literals() - w * 64)) - 1
-            };
+            let valid = crate::tm::params::word_mask(s.literals(), w);
             let inc = rng.next_u64() & valid;
             let dec = rng.next_u64() & valid & !inc;
             let up = a.update_word(c, j, w, inc, dec);

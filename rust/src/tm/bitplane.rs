@@ -30,7 +30,7 @@
 
 use crate::tm::clause::{EvalMode, Input};
 use crate::tm::machine::{argmax_rows, MultiTm, SPAWN_WORK};
-use crate::tm::params::{TmParams, TmShape};
+use crate::tm::params::{word_mask, TmParams, TmShape};
 
 /// A batch of inputs transposed into literal-major bitplanes:
 /// `plane(k)[l]` packs the value of literal `k` for samples
@@ -42,6 +42,12 @@ pub struct BitPlanes {
     literals: usize,
     lanes: usize,
     len: usize,
+    /// Content fingerprint (FNV over shape + plane words), stamped at
+    /// transpose time — the batch-identity key of the incremental
+    /// re-scorer's caches (`tm::rescore`): equal content ⇒ equal
+    /// fingerprint, so a rebuilt-but-identical batch keeps its cache and
+    /// a mutated batch conservatively invalidates it.
+    fingerprint: u64,
 }
 
 impl BitPlanes {
@@ -73,7 +79,15 @@ impl BitPlanes {
                 }
             }
         }
-        BitPlanes { planes, literals, lanes, len: n }
+        // Order-sensitive FNV over the content (shared fold with the
+        // analyzer's stream fingerprint) — O(literals · lanes), a small
+        // fraction of the transpose above.
+        let mut h = fnv_fold(FNV_OFFSET, n as u64);
+        h = fnv_fold(h, literals as u64);
+        for &w in &planes {
+            h = fnv_fold(h, w);
+        }
+        BitPlanes { planes, literals, lanes, len: n, fingerprint: h }
     }
 
     /// Number of samples in the batch.
@@ -105,17 +119,18 @@ impl BitPlanes {
         self.planes[lit * self.lanes + lane]
     }
 
+    /// Content fingerprint (see the field doc).
+    #[inline]
+    pub fn fingerprint(&self) -> u64 {
+        self.fingerprint
+    }
+
     /// Bits of `lane` that correspond to real samples (the tail lane of a
     /// non-multiple-of-64 batch is partial).
     #[inline]
     pub fn lane_mask(&self, lane: usize) -> u64 {
         debug_assert!(lane < self.lanes);
-        let remaining = self.len - lane * 64;
-        if remaining >= 64 {
-            !0u64
-        } else {
-            (1u64 << remaining) - 1
-        }
+        word_mask(self.len, lane)
     }
 
     /// Value of literal `k` in sample `i` (the transpose inverse; used by
@@ -164,6 +179,20 @@ impl PlaneBatch {
     }
 }
 
+/// FNV-1a 64-bit offset basis — the seed of both content fingerprints
+/// ([`BitPlanes::fingerprint`] and the analyzer's stream fingerprint in
+/// `fpga::accuracy`): one definition so the two invalidation layers
+/// cannot drift apart.
+pub(crate) const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// One FNV-1a-style fold step over a 64-bit value (shared with
+/// `fpga::accuracy::stream_fingerprint`).
+#[inline]
+pub(crate) fn fnv_fold(h: u64, v: u64) -> u64 {
+    const FNV_PRIME: u64 = 0x100_0000_01b3;
+    (h ^ v).wrapping_mul(FNV_PRIME)
+}
+
 /// Ripple-carry add of a 64-lane 0/1 mask into a bit-sliced counter
 /// (`counter[b]` holds bit `b` of all 64 lane counts).
 #[inline]
@@ -179,6 +208,45 @@ fn add_mask(counter: &mut [u64], mut mask: u64) {
     debug_assert_eq!(mask, 0, "bit-sliced counter overflow");
 }
 
+/// Fired-mask of one clause over one 64-sample lane: force gate first,
+/// the empty-clause convention second, then the AND chain over the
+/// effective included literals' planes (early exit on all-zero). The
+/// single definition of clause semantics in the sliced domain — shared
+/// by the batched kernel below and the incremental re-scorer
+/// (`tm::rescore`) so the two cannot drift apart.
+#[inline]
+pub(crate) fn clause_fired_mask(
+    planes: &BitPlanes,
+    lane: usize,
+    valid: u64,
+    train: bool,
+    force: i8,
+    lits: &[u32],
+) -> u64 {
+    match force {
+        0 => 0u64,
+        1 => valid,
+        _ if lits.is_empty() => {
+            // Empty clause: fires in train mode only.
+            if train {
+                valid
+            } else {
+                0
+            }
+        }
+        _ => {
+            let mut m = valid;
+            for &k in lits {
+                m &= planes.plane_word(k as usize, lane);
+                if m == 0 {
+                    break;
+                }
+            }
+            m
+        }
+    }
+}
+
 /// Lane-invariant evaluation prep for one class: per clause, the force
 /// state and the *effective* (post-fault-gate) included literals —
 /// computed once per `evaluate_planes` call and shared read-only by
@@ -189,6 +257,17 @@ struct ClassPrep {
     lits: Vec<u32>,
     /// Per clause: (force state, start, end) — the range into `lits`.
     clauses: Vec<(i8, usize, usize)>,
+}
+
+impl ClassPrep {
+    /// No clause of this class can fire: nothing is effectively included
+    /// anywhere, no clause is forced to 1, and inference mode silences
+    /// empty clauses — so the class's sums are identically zero and the
+    /// whole lane sweep can be skipped (common for over-provisioned or
+    /// freshly reset classes).
+    fn silent(&self, train: bool) -> bool {
+        !train && self.lits.is_empty() && self.clauses.iter().all(|&(f, _, _)| f != 1)
+    }
 }
 
 impl MultiTm {
@@ -221,6 +300,10 @@ impl MultiTm {
         // Lane-invariant per-class prep (force states + effective
         // includes), computed once and shared by every chunk task.
         let preps: Vec<ClassPrep> = (0..nc).map(|c| self.class_prep(c, params)).collect();
+        // Silent classes (no effective includes, no force-1, infer mode)
+        // produce identically-zero sums: skip their lane sweeps entirely
+        // — the sums buffer is already zeroed.
+        let train = mode == EvalMode::Train;
         let work = n * nc * params.active_clauses;
         let workers = if work < SPAWN_WORK {
             1
@@ -229,6 +312,9 @@ impl MultiTm {
         };
         if workers <= 1 {
             for (c, chunk) in sums.chunks_mut(n).enumerate() {
+                if preps[c].silent(train) {
+                    continue;
+                }
                 self.class_plane_sums(&preps[c], planes, params, mode, 0, chunk);
             }
             return sums;
@@ -240,6 +326,9 @@ impl MultiTm {
         let chunk_samples = planes.lanes().div_ceil(chunks_per_class) * 64;
         let mut tasks: Vec<(usize, usize, &mut [i32])> = Vec::new();
         for (c, class_chunk) in sums.chunks_mut(n).enumerate() {
+            if preps[c].silent(train) {
+                continue;
+            }
             let mut lane0 = 0usize;
             for sub in class_chunk.chunks_mut(chunk_samples) {
                 tasks.push((c, lane0, sub));
@@ -270,31 +359,16 @@ impl MultiTm {
     }
 
     /// Build one class's [`ClassPrep`]: apply the fault gates to the
-    /// packed action words and extract the effective included literals,
-    /// once per clause (not per 64-sample lane).
+    /// packed action words and extract the effective included literals
+    /// ([`MultiTm::push_eff_lits`]), once per clause (not per 64-sample
+    /// lane).
     fn class_prep(&self, c: usize, params: &TmParams) -> ClassPrep {
-        let shape = self.shape();
-        let words = shape.words();
-        let base = c * shape.max_clauses;
-        let fault_free = self.fault().is_fault_free();
         let mut lits: Vec<u32> = Vec::new();
         let mut clauses: Vec<(i8, usize, usize)> =
             Vec::with_capacity(params.active_clauses);
         for j in 0..params.active_clauses {
-            let row = base + j;
-            let force = self.clause_force[row];
             let start = lits.len();
-            if force < 0 {
-                for w in 0..words {
-                    let raw = self.actions[row * words + w];
-                    let aw = if fault_free { raw } else { self.fault().apply(c, j, w, raw) };
-                    let mut a = aw;
-                    while a != 0 {
-                        lits.push((w * 64) as u32 + a.trailing_zeros());
-                        a &= a - 1;
-                    }
-                }
-            }
+            let force = self.push_eff_lits(c, j, &mut lits);
             clauses.push((force, start, lits.len()));
         }
         ClassPrep { lits, clauses }
@@ -331,28 +405,8 @@ impl MultiTm {
             pos.fill(0);
             neg.fill(0);
             for (j, &(force, start, end)) in prep.clauses.iter().enumerate() {
-                let m = match force {
-                    0 => 0u64,
-                    1 => valid,
-                    _ if start == end => {
-                        // Empty clause: fires in train mode only.
-                        if train {
-                            valid
-                        } else {
-                            0
-                        }
-                    }
-                    _ => {
-                        let mut m = valid;
-                        for &k in &prep.lits[start..end] {
-                            m &= planes.plane_word(k as usize, lane);
-                            if m == 0 {
-                                break;
-                            }
-                        }
-                        m
-                    }
-                };
+                let m =
+                    clause_fired_mask(planes, lane, valid, train, force, &prep.lits[start..end]);
                 if m != 0 {
                     add_mask(if j % 2 == 0 { &mut pos } else { &mut neg }, m);
                 }

@@ -81,10 +81,13 @@ pub fn eval_clause(action_words: &[u64], input: &Input, mode: EvalMode) -> bool 
     debug_assert_eq!(action_words.len(), input.words.len());
     let mut any_include = false;
     for (a, l) in action_words.iter().zip(input.words.iter()) {
+        if *a == 0 {
+            continue; // include-sparse: skip empty action words
+        }
         if a & !l != 0 {
             return false; // an included literal is 0
         }
-        any_include |= *a != 0;
+        any_include = true;
     }
     any_include || mode == EvalMode::Train
 }

@@ -35,20 +35,8 @@
 use crate::tm::clause::{EvalMode, Input};
 use crate::tm::feedback::{class_signs, StepActivity};
 use crate::tm::machine::MultiTm;
-use crate::tm::params::{polarity, TmParams, TmShape};
+use crate::tm::params::{polarity, word_mask, TmParams, TmShape};
 use crate::tm::rng::{neg_class_from_draw, BernoulliPlan, StepRands, Xoshiro256};
-
-/// Valid-literal mask for word `w` of a row of `literals` literals.
-#[inline]
-fn valid_mask(literals: usize, w: usize) -> u64 {
-    let lo = w * 64;
-    let n = literals - lo;
-    if n >= 64 {
-        !0u64
-    } else {
-        (1u64 << n) - 1
-    }
-}
 
 /// One training step with bit-parallel feedback, consuming the same eager
 /// [`StepRands`] record as the scalar oracle — and producing bit-identical
@@ -91,7 +79,7 @@ pub fn train_step_fast(
                 // strict-< comparisons the scalar path makes, packed.
                 act.type1_clauses += 1;
                 for w in 0..words {
-                    let valid = valid_mask(lits, w);
+                    let valid = word_mask(lits, w);
                     let lo = w * 64;
                     let n = (lits - lo).min(64);
                     let (mut reinforce, mut weaken) = (0u64, 0u64);
@@ -120,7 +108,7 @@ pub fn train_step_fast(
                 // toward include.
                 act.type2_clauses += 1;
                 for w in 0..words {
-                    let valid = valid_mask(lits, w);
+                    let valid = word_mask(lits, w);
                     let a = tm.action_words(c, j)[w];
                     let eff = if fault_free { a } else { tm.fault().apply(c, j, w, a) };
                     let inc = !input.words()[w] & !eff & valid;
@@ -237,7 +225,7 @@ pub fn train_step_lazy(
                     continue;
                 }
                 for w in 0..words {
-                    let valid = valid_mask(lits, w);
+                    let valid = word_mask(lits, w);
                     let iw = input.words()[w];
                     let (inc, dec) = if out {
                         let (reinforce, weaken) = plan.masks(rng);
@@ -254,7 +242,7 @@ pub fn train_step_lazy(
             } else if out {
                 act.type2_clauses += 1;
                 for w in 0..words {
-                    let valid = valid_mask(lits, w);
+                    let valid = word_mask(lits, w);
                     let a = tm.action_words(c, j)[w];
                     let eff = if fault_free { a } else { tm.fault().apply(c, j, w, a) };
                     let inc = !input.words()[w] & !eff & valid;

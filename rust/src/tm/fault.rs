@@ -60,16 +60,15 @@ impl FaultMap {
     }
 
     /// Bits of word `w` that correspond to real literals (the rest stay 0
-    /// so padding never leaks into clause evaluation).
+    /// so padding never leaks into clause evaluation). Defensive zero for
+    /// fully-out-of-range words; in-range words share the one tail-mask
+    /// definition ([`crate::tm::params::word_mask`]).
     fn width_mask(shape: &TmShape, w: usize) -> u64 {
         let lits = shape.literals();
-        let lo = w * 64;
-        if lo + 64 <= lits {
-            u64::MAX
-        } else if lo >= lits {
+        if w * 64 >= lits {
             0
         } else {
-            (1u64 << (lits - lo)) - 1
+            crate::tm::params::word_mask(lits, w)
         }
     }
 

@@ -17,9 +17,19 @@ use crate::tm::clause::{EvalMode, Input};
 use crate::tm::fault::FaultMap;
 use crate::tm::params::{polarity, TmParams, TmShape};
 use anyhow::Result;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Process-unique machine ids, so incremental re-scoring caches
+/// (`tm::rescore`) can tell two machines — including a clone and its
+/// original, whose revision clocks would otherwise alias — apart.
+static NEXT_MACHINE_UID: AtomicU64 = AtomicU64::new(1);
+
+fn next_machine_uid() -> u64 {
+    NEXT_MACHINE_UID.fetch_add(1, Ordering::Relaxed)
+}
 
 /// Multiclass Tsetlin machine.
-#[derive(Debug, Clone)]
+#[derive(Debug)]
 pub struct MultiTm {
     shape: TmShape,
     ta: TaBlock,
@@ -39,6 +49,44 @@ pub struct MultiTm {
     pub(crate) clause_out: Vec<bool>,
     /// Scratch: per-class sums of the last evaluation.
     pub(crate) sums: Vec<i32>,
+    /// Cache-binding id (see [`next_machine_uid`]).
+    uid: u64,
+    /// Monotone mutation clock: bumped once per event that can change any
+    /// clause's effective evaluation (TA action flip, clause-force edit,
+    /// fault-map load, bulk state load). The counter itself is never read
+    /// directly — `clause_rev`/`global_rev` record *which* value a given
+    /// mutation stamped, so `tm::rescore` caches can re-score only the
+    /// clauses whose stamp moved past the one they last saw.
+    rev: u64,
+    /// Per clause row: `rev` at the row's last action/force flip.
+    clause_rev: Vec<u64>,
+    /// `rev` at the last whole-machine invalidation (fault-map load,
+    /// [`MultiTm::rebuild_actions`] bulk rebuild, raw fault-map access).
+    global_rev: u64,
+}
+
+impl Clone for MultiTm {
+    /// Clones carry the revision clock but get a **fresh cache-binding
+    /// id**: a clone diverges from its original on the very next feedback
+    /// step, so a [`crate::tm::rescore::RescoreCache`] bound to one must
+    /// do a full rebuild when handed the other rather than trusting
+    /// revision values that stopped being comparable at the fork.
+    fn clone(&self) -> Self {
+        MultiTm {
+            shape: self.shape.clone(),
+            ta: self.ta.clone(),
+            fault: self.fault.clone(),
+            actions: self.actions.clone(),
+            clause_force: self.clause_force.clone(),
+            clause_faults: self.clause_faults,
+            clause_out: self.clause_out.clone(),
+            sums: self.sums.clone(),
+            uid: next_machine_uid(),
+            rev: self.rev,
+            clause_rev: self.clause_rev.clone(),
+            global_rev: self.global_rev,
+        }
+    }
 }
 
 impl MultiTm {
@@ -55,6 +103,10 @@ impl MultiTm {
             clause_faults: 0,
             clause_out: vec![false; rows],
             sums: vec![0; shape.classes],
+            uid: next_machine_uid(),
+            rev: 0,
+            clause_rev: vec![0; rows],
+            global_rev: 0,
         };
         tm.rebuild_actions();
         Ok(tm)
@@ -81,13 +133,51 @@ impl MultiTm {
         &self.fault
     }
 
+    /// Stamp one clause row as changed (action flip or force edit).
+    #[inline]
+    fn mark_clause_dirty(&mut self, row: usize) {
+        self.rev += 1;
+        self.clause_rev[row] = self.rev;
+    }
+
+    /// Stamp the whole machine as changed (fault-map load, bulk rebuild).
+    fn mark_all_dirty(&mut self) {
+        self.rev += 1;
+        self.global_rev = self.rev;
+    }
+
+    /// Cache-binding id: process-unique, fresh per construction *and* per
+    /// clone (read by `tm::rescore`).
+    #[inline]
+    pub fn uid(&self) -> u64 {
+        self.uid
+    }
+
+    /// Revision stamp of one clause row: the mutation-clock value of the
+    /// latest event that could have changed the row's effective
+    /// evaluation — its own action/force flips or any whole-machine
+    /// invalidation. A cache entry recorded at stamp `r` is still exact
+    /// iff `row_rev` has not moved past `r`.
+    #[inline]
+    pub(crate) fn row_rev(&self, row: usize) -> u64 {
+        self.clause_rev[row].max(self.global_rev)
+    }
+
     /// Program the fault-gate mappings (the fault controller write port).
     /// The true-action cache is unaffected: gates sit after the registers.
     pub fn set_fault_map(&mut self, map: FaultMap) {
         self.fault = map;
+        // Gates rewire effective actions everywhere: conservatively dirty
+        // every clause (per-gate diffing is not worth the bookkeeping for
+        // an MCU-rate event).
+        self.mark_all_dirty();
     }
 
     pub fn fault_map_mut(&mut self) -> &mut FaultMap {
+        // The caller holds a raw write port into the gates; assume the
+        // worst (stamp before handing the borrow out — the cache can only
+        // observe the machine again once the &mut borrow ends).
+        self.mark_all_dirty();
         &mut self.fault
     }
 
@@ -102,11 +192,15 @@ impl MultiTm {
             (true, false) => self.clause_faults -= 1,
             _ => {}
         }
-        self.clause_force[row] = match force {
+        let v = match force {
             None => -1,
             Some(false) => 0,
             Some(true) => 1,
         };
+        if self.clause_force[row] != v {
+            self.clause_force[row] = v;
+            self.mark_clause_dirty(row);
+        }
     }
 
     /// Programmed clause-output fault, if any.
@@ -140,6 +234,9 @@ impl MultiTm {
                 }
             }
         }
+        // Bulk path: any clause may have changed — conservatively dirty
+        // everything rather than diffing the rebuilt cache.
+        self.mark_all_dirty();
     }
 
     #[inline]
@@ -176,26 +273,63 @@ impl MultiTm {
         let mut any = false;
         if self.fault.is_fault_free() {
             // Fast path (O(1) check): the gates are identity — evaluate
-            // straight off the packed action cache.
+            // straight off the packed action cache. Trained clauses are
+            // include-sparse, so most multiword rows are all-zero: skip
+            // them without touching the input word.
             for w in 0..words {
                 let a = self.actions[row * words + w];
+                if a == 0 {
+                    continue;
+                }
                 if a & !input.words()[w] != 0 {
                     return false;
                 }
-                any |= a != 0;
+                any = true;
             }
         } else {
-            // Apply the gates word-by-word without allocating.
+            // Apply the gates word-by-word without allocating. The
+            // zero-word skip runs *after* the gates: a stuck-at-1 gate
+            // can raise bits out of an all-zero action word.
             for w in 0..words {
                 let eff =
                     self.fault.apply(class, clause, w, self.actions[row * words + w]);
+                if eff == 0 {
+                    continue;
+                }
                 if eff & !input.words()[w] != 0 {
                     return false;
                 }
-                any |= eff != 0;
+                any = true;
             }
         }
         any || mode == EvalMode::Train
+    }
+
+    /// Append the *effective* (post-fault-gate) included literal indices
+    /// of one clause to `lits`, returning the clause-force state
+    /// (`-1` = none, `0`/`1` = output forced; forced clauses push no
+    /// literals — their output ignores the input). Shared by the
+    /// sample-sliced kernel's lane-invariant prep (`tm::bitplane`) and
+    /// the incremental re-scorer (`tm::rescore`) so the gate algebra
+    /// cannot drift between the two.
+    pub(crate) fn push_eff_lits(&self, class: usize, clause: usize, lits: &mut Vec<u32>) -> i8 {
+        let words = self.shape.words();
+        let row = self.row(class, clause);
+        let force = self.clause_force[row];
+        if force >= 0 {
+            return force;
+        }
+        let fault_free = self.fault.is_fault_free();
+        for w in 0..words {
+            let raw = self.actions[row * words + w];
+            let aw = if fault_free { raw } else { self.fault.apply(class, clause, w, raw) };
+            let mut a = aw;
+            while a != 0 {
+                lits.push((w * 64) as u32 + a.trailing_zeros());
+                a &= a - 1;
+            }
+        }
+        force
     }
 
     /// Single-word fault-free clause predicate: fires iff no included
@@ -451,6 +585,7 @@ impl MultiTm {
             let w = self.shape.words();
             let row = self.row(class, clause);
             self.actions[row * w + lit / 64] |= 1u64 << (lit % 64);
+            self.mark_clause_dirty(row);
         }
     }
 
@@ -460,6 +595,7 @@ impl MultiTm {
             let w = self.shape.words();
             let row = self.row(class, clause);
             self.actions[row * w + lit / 64] &= !(1u64 << (lit % 64));
+            self.mark_clause_dirty(row);
         }
     }
 
@@ -483,11 +619,12 @@ impl MultiTm {
             return (0, 0);
         }
         let up = self.ta.update_word(class, clause, word, inc_mask, dec_mask);
-        if up.now_include != 0 || up.now_exclude != 0 {
+        if up.action_flipped() {
             let w = self.shape.words();
             let row = self.row(class, clause);
             let a = &mut self.actions[row * w + word];
             *a = (*a | up.now_include) & !up.now_exclude;
+            self.mark_clause_dirty(row);
         }
         (up.applied_incs, up.applied_decs)
     }
@@ -911,7 +1048,7 @@ mod tests {
             let mut b = a.clone();
             let c = rng.next_below(s.classes);
             let j = rng.next_below(s.max_clauses);
-            let valid = (1u64 << s.literals()) - 1;
+            let valid = crate::tm::params::word_mask(s.literals(), 0);
             let inc = rng.next_u64() & valid;
             let dec = rng.next_u64() & valid & !inc;
             let (ai, ad) = a.apply_word_feedback(c, j, 0, inc, dec);
@@ -934,6 +1071,54 @@ mod tests {
             assert_eq!(a.actions, b.actions, "trial {trial}");
             assert_eq!((ai, ad), (bi, bd), "trial {trial}");
         }
+    }
+
+    /// The revision clock moves exactly when a clause's effective
+    /// evaluation can change: action flips and force edits stamp the row,
+    /// within-half TA moves do not, fault-map loads stamp everything.
+    #[test]
+    fn revision_clock_tracks_effective_changes() {
+        let s = shape();
+        let mut tm = MultiTm::new(&s).unwrap();
+        let r0 = tm.row_rev(0);
+        // Within-half move (99 -> 100 flips; so start from a deep state).
+        tm.ta_increment(0, 0, 0); // 99 -> 100: NowInclude, flips
+        let r1 = tm.row_rev(0);
+        assert!(r1 > r0, "boundary crossing must stamp the row");
+        tm.ta_increment(0, 0, 0); // 100 -> 101: same action
+        assert_eq!(tm.row_rev(0), r1, "within-half move must not stamp");
+        let other = tm.row_rev(s.max_clauses); // class 1, clause 0
+        // Word feedback with a flip stamps only its row.
+        tm.apply_word_feedback(0, 1, 0, 0b1, 0); // 99 -> 100 on lit 0
+        assert!(tm.row_rev(1) > r1);
+        assert_eq!(tm.row_rev(s.max_clauses), other);
+        // Saturated / non-flip word feedback leaves the stamp alone.
+        let r2 = tm.row_rev(1);
+        tm.apply_word_feedback(0, 1, 0, 0b1, 0); // 100 -> 101
+        assert_eq!(tm.row_rev(1), r2);
+        // Force edits stamp; re-setting the same value does not.
+        tm.set_clause_fault(0, 2, Some(true));
+        let r3 = tm.row_rev(2);
+        assert!(r3 > r2);
+        tm.set_clause_fault(0, 2, Some(true));
+        assert_eq!(tm.row_rev(2), r3);
+        // Fault-map load stamps every row (conservative).
+        let before: Vec<u64> = (0..4).map(|r| tm.row_rev(r)).collect();
+        tm.set_fault_map(crate::tm::fault::FaultMap::none(&s));
+        for (r, &b) in before.iter().enumerate() {
+            assert!(tm.row_rev(r) > b, "row {r} must be globally stamped");
+        }
+    }
+
+    #[test]
+    fn clones_get_fresh_uids() {
+        let s = shape();
+        let a = MultiTm::new(&s).unwrap();
+        let b = a.clone();
+        let c = MultiTm::new(&s).unwrap();
+        assert_ne!(a.uid(), b.uid(), "clone must not alias the original");
+        assert_ne!(a.uid(), c.uid());
+        assert_ne!(b.uid(), c.uid());
     }
 
     /// Smoke: training decreases nothing structurally — full training

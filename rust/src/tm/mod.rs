@@ -10,7 +10,10 @@
 //! with an additional lazy-randomness mode for the hot loops. Batched
 //! inference has a row-major path (`machine.rs`) and a sample-sliced
 //! bitplane path ([`bitplane`], 64 samples per AND) that are
-//! differentially pinned bit-identical.
+//! differentially pinned bit-identical; [`rescore`] adds the incremental
+//! dirty-clause re-scoring engine over cached plane batches for the
+//! interleaved online train/infer loop, pinned bit-identical to a cold
+//! plane pass.
 
 pub mod automaton;
 pub mod bitplane;
@@ -21,6 +24,7 @@ pub mod fault;
 pub mod feedback;
 pub mod machine;
 pub mod params;
+pub mod rescore;
 pub mod rng;
 pub mod state;
 
@@ -31,5 +35,6 @@ pub use engine::{train_step_fast, train_step_lazy, EpochStats, FeedbackPlan};
 pub use fault::{Fault, FaultMap};
 pub use feedback::{train_step, StepActivity};
 pub use machine::{argmax_class, MultiTm};
-pub use params::{polarity, TmParams, TmShape};
+pub use params::{polarity, word_mask, TmParams, TmShape};
+pub use rescore::{RescoreCache, RescoreStats};
 pub use rng::{BernoulliPlan, StepRands, Xoshiro256};

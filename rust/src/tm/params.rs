@@ -204,6 +204,24 @@ pub fn polarity(clause: usize) -> i32 {
     }
 }
 
+/// THE tail mask of this repo: the valid bits of 64-bit word `word` of a
+/// `len`-bit packed row — all-ones for full words, a low-bit partial mask
+/// for the tail word of a non-multiple-of-64 row. Shared by the literal
+/// tails of the word-parallel feedback engine (`tm::engine`), the sample
+/// tails of the bitplane lanes (`tm::bitplane::BitPlanes::lane_mask`) and
+/// the incremental re-scorer (`tm::rescore`), so the tail semantics
+/// cannot drift between the packed domains.
+#[inline]
+pub fn word_mask(len: usize, word: usize) -> u64 {
+    debug_assert!(word * 64 < len, "word {word} out of range for {len} bits");
+    let n = len - word * 64;
+    if n >= 64 {
+        !0u64
+    } else {
+        (1u64 << n) - 1
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -294,6 +312,20 @@ mod tests {
         assert!((p.p_weaken() - 0.5).abs() < 1e-6, "styles agree at s = 2");
         p.boost_true_positive = true;
         assert_eq!(p.p_reinforce(), 1.0);
+    }
+
+    #[test]
+    fn word_mask_covers_full_and_tail_words() {
+        assert_eq!(word_mask(64, 0), !0u64);
+        assert_eq!(word_mask(128, 1), !0u64);
+        assert_eq!(word_mask(32, 0), (1u64 << 32) - 1);
+        assert_eq!(word_mask(80, 1), (1u64 << 16) - 1);
+        assert_eq!(word_mask(65, 1), 1);
+        // One bit per valid position, none past the tail.
+        for len in [1usize, 63, 64, 65, 100, 128] {
+            let total: u32 = (0..len.div_ceil(64)).map(|w| word_mask(len, w).count_ones()).sum();
+            assert_eq!(total as usize, len, "len {len}");
+        }
     }
 
     #[test]

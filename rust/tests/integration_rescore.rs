@@ -1,0 +1,249 @@
+//! Incremental dirty-clause re-scoring ⇄ cold-pass differential suite.
+//!
+//! `RescoreCache::evaluate` must be **bit-identical** to a cold
+//! `MultiTm::evaluate_planes` pass at every point of an interleaved
+//! online run, over every invalidation corner: randomized train/infer
+//! schedules through both the eager (`train_step_fast`) and lazy
+//! (`train_step_lazy`) engines, mid-run TA fault-map injection and raw
+//! fault-map edits, clause-output force overrides, run-time parameter
+//! moves (T, active clauses, active classes), multiword shapes,
+//! non-multiple-of-64 batches, machine clones, checkpoint-style bulk
+//! state reloads, and batches whose content changes under the cache
+//! (fingerprint invalidation).
+
+use tm_fpga::tm::*;
+
+fn random_rows(
+    shape: &TmShape,
+    n: usize,
+    rng: &mut Xoshiro256,
+) -> Vec<(Input, usize)> {
+    (0..n)
+        .map(|_| {
+            let bits: Vec<bool> =
+                (0..shape.features).map(|_| rng.next_f32() < 0.5).collect();
+            (Input::pack(shape, &bits), rng.next_below(shape.classes))
+        })
+        .collect()
+}
+
+/// Machine with uniformly random TA states (random include patterns).
+fn random_machine(shape: &TmShape, seed: u64) -> (MultiTm, Xoshiro256) {
+    let mut rng = Xoshiro256::new(seed);
+    let states: Vec<u32> = (0..shape.num_tas())
+        .map(|_| rng.next_below(2 * shape.states as usize) as u32)
+        .collect();
+    (MultiTm::from_states(shape, states).unwrap(), rng)
+}
+
+/// One re-score point: the incremental result must equal the cold pass
+/// bit-for-bit, in both modes, and the prediction/accuracy wrappers must
+/// agree with their cold twins. The caller's cache stays pure-Infer (the
+/// monitor regime it models); Train mode goes through a throwaway cache,
+/// since a mode switch rebuilds an entry by design.
+fn assert_rescore_matches(
+    cache: &mut RescoreCache,
+    tm: &MultiTm,
+    batch: &PlaneBatch,
+    params: &TmParams,
+    ctx: &str,
+) {
+    let inc = cache.evaluate(tm, batch.planes(), params, EvalMode::Infer);
+    let cold = tm.evaluate_planes(batch.planes(), params, EvalMode::Infer);
+    assert_eq!(inc, cold, "{ctx}: sums diverged (Infer)");
+    let mut train_cache = RescoreCache::new();
+    let inc_t = train_cache.evaluate(tm, batch.planes(), params, EvalMode::Train);
+    let cold_t = tm.evaluate_planes(batch.planes(), params, EvalMode::Train);
+    assert_eq!(inc_t, cold_t, "{ctx}: sums diverged (Train)");
+    assert_eq!(
+        cache.predict(tm, batch.planes(), params),
+        tm.predict_planes(batch.planes(), params),
+        "{ctx}: predictions diverged"
+    );
+    let a = cache.accuracy(tm, batch, params);
+    let b = tm.accuracy_planes(batch, params);
+    assert_eq!(a, b, "{ctx}: accuracy diverged");
+}
+
+#[test]
+fn randomized_interleaved_schedules_stay_bit_identical() {
+    for (si, shape) in [
+        TmShape::iris(),                                                 // 1 word
+        TmShape { classes: 4, max_clauses: 6, features: 40, states: 8 }, // 2 words, partial
+    ]
+    .iter()
+    .enumerate()
+    {
+        let (mut tm, mut rng) = random_machine(shape, 0x0D17 + si as u64);
+        let mut params = TmParams::paper_offline(shape);
+        let n = [70usize, 129][si]; // engages multi-lane + partial tails
+        let rows = random_rows(shape, n, &mut rng);
+        let batch = PlaneBatch::from_labelled(shape, &rows);
+        let mut cache = RescoreCache::new();
+        let mut rands = StepRands::draw(&mut rng, shape);
+        let plan = FeedbackPlan::new(&params);
+        for step in 0..120usize {
+            // Randomized interleave: train (both engines), mutate faults
+            // and forces mid-run, wobble the run-time parameters.
+            match rng.next_below(10) {
+                0..=4 => {
+                    let (x, y) = &rows[rng.next_below(rows.len())];
+                    rands.refill(&mut rng, shape);
+                    train_step_fast(&mut tm, x, *y, &params, &rands);
+                }
+                5..=6 => {
+                    let (x, y) = &rows[rng.next_below(rows.len())];
+                    train_step_lazy(&mut tm, x, *y, &params, &plan, &mut rng);
+                }
+                7 => {
+                    let c = rng.next_below(shape.classes);
+                    let j = rng.next_below(shape.max_clauses);
+                    let force = match rng.next_below(3) {
+                        0 => None,
+                        1 => Some(false),
+                        _ => Some(true),
+                    };
+                    tm.set_clause_fault(c, j, force);
+                }
+                8 => {
+                    let rate = [0.0, 0.1, 0.25][rng.next_below(3)];
+                    let kind =
+                        if rng.next_f32() < 0.5 { Fault::StuckAt0 } else { Fault::StuckAt1 };
+                    let map =
+                        FaultMap::even_spread(shape, rate, kind, 0xFA + step as u64).unwrap();
+                    tm.set_fault_map(map);
+                }
+                _ => {
+                    params.t = [1, 5, 15][rng.next_below(3)];
+                    if rng.next_f32() < 0.3 {
+                        params.active_clauses = [2, 4, shape.max_clauses][rng.next_below(3)];
+                        params.active_classes = 1 + rng.next_below(shape.classes);
+                    }
+                }
+            }
+            if step % 3 == 0 {
+                assert_rescore_matches(
+                    &mut cache,
+                    &tm,
+                    &batch,
+                    &params,
+                    &format!("shape {si} step {step}"),
+                );
+            }
+        }
+        // The schedule must have exercised the incremental path, not
+        // degenerated into rebuild-every-time.
+        assert!(cache.stats().clean_clauses > 0, "shape {si}: no clean serves");
+        assert!(cache.stats().dirty_clauses > 0, "shape {si}: no dirty re-scores");
+    }
+}
+
+#[test]
+fn raw_fault_map_edits_conservatively_invalidate() {
+    let shape = TmShape::iris();
+    let (mut tm, mut rng) = random_machine(&shape, 0x2222);
+    let params = TmParams::paper_offline(&shape);
+    let rows = random_rows(&shape, 50, &mut rng);
+    let batch = PlaneBatch::from_labelled(&shape, &rows);
+    let mut cache = RescoreCache::new();
+    assert_rescore_matches(&mut cache, &tm, &batch, &params, "before edit");
+    // Editing gates through the raw write port must dirty the cache even
+    // though no TA state moved.
+    tm.fault_map_mut().set(0, 0, 3, Fault::StuckAt1);
+    tm.fault_map_mut().set(1, 2, 17, Fault::StuckAt0);
+    assert_rescore_matches(&mut cache, &tm, &batch, &params, "after edit");
+}
+
+#[test]
+fn checkpoint_reload_and_clone_are_safe() {
+    let shape = TmShape::iris();
+    let (mut tm, mut rng) = random_machine(&shape, 0x3333);
+    let params = TmParams::paper_offline(&shape);
+    let rows = random_rows(&shape, 65, &mut rng);
+    let batch = PlaneBatch::from_labelled(&shape, &rows);
+    let mut cache = RescoreCache::new();
+    assert_rescore_matches(&mut cache, &tm, &batch, &params, "initial");
+    // Clone + diverge: the same cache must rebuild for the clone (fresh
+    // uid), then again for the original, and stay exact for both.
+    let mut fork = tm.clone();
+    let mut rands = StepRands::draw(&mut rng, &shape);
+    for step in 0..10 {
+        let (x, y) = &rows[step % rows.len()];
+        rands.refill(&mut rng, &shape);
+        train_step_fast(&mut fork, x, *y, &params, &rands);
+    }
+    assert_rescore_matches(&mut cache, &fork, &batch, &params, "diverged clone");
+    assert_rescore_matches(&mut cache, &tm, &batch, &params, "original after clone");
+    // Checkpoint-style bulk reload: from_states machines carry fresh
+    // uids; a reload of *different* states must never read stale masks.
+    let reloaded = MultiTm::from_states(&shape, fork.ta().states().to_vec()).unwrap();
+    assert_rescore_matches(&mut cache, &reloaded, &batch, &params, "bulk reload");
+}
+
+#[test]
+fn fingerprint_invalidation_tracks_batch_content() {
+    let shape = TmShape::iris();
+    let (tm, mut rng) = random_machine(&shape, 0x4444);
+    let params = TmParams::paper_offline(&shape);
+    let rows_a = random_rows(&shape, 40, &mut rng);
+    let mut rows_b = rows_a.clone();
+    // Same length, exactly one feature flipped: a guaranteed-distinct batch.
+    let mut bits: Vec<bool> =
+        (0..shape.features).map(|k| rows_a[7].0.literal(k)).collect();
+    bits[0] = !bits[0];
+    rows_b[7].0 = Input::pack(&shape, &bits);
+    let batch_a = PlaneBatch::from_labelled(&shape, &rows_a);
+    let batch_b = PlaneBatch::from_labelled(&shape, &rows_b);
+    assert_ne!(
+        batch_a.planes().fingerprint(),
+        batch_b.planes().fingerprint(),
+        "content change must move the fingerprint"
+    );
+    // A re-transpose of identical content keeps the fingerprint (and the
+    // cache entry).
+    let batch_a2 = PlaneBatch::from_labelled(&shape, &rows_a);
+    assert_eq!(batch_a.planes().fingerprint(), batch_a2.planes().fingerprint());
+
+    let mut cache = RescoreCache::new();
+    assert_rescore_matches(&mut cache, &tm, &batch_a, &params, "batch a");
+    let builds_after_a = cache.stats().cold_builds;
+    assert_rescore_matches(&mut cache, &tm, &batch_b, &params, "batch b");
+    assert!(
+        cache.stats().cold_builds > builds_after_a,
+        "different content must cold-build"
+    );
+    // Alternating batches stays exact (both entries live side by side).
+    assert_rescore_matches(&mut cache, &tm, &batch_a2, &params, "batch a again");
+    assert_rescore_matches(&mut cache, &tm, &batch_b, &params, "batch b again");
+}
+
+#[test]
+fn online_convergence_drives_dirty_fraction_down() {
+    // The paper's scenario: under the online config (s = 1) on a trained
+    // machine, T-threshold feedback is rare — later re-scores must serve
+    // mostly clean clauses, and every point must stay bit-identical.
+    let shape = TmShape::iris();
+    let p_off = TmParams::paper_offline(&shape);
+    let p_on = TmParams::paper_online(&shape);
+    let mut rng = Xoshiro256::new(0x5555);
+    let rows = random_rows(&shape, 60, &mut rng);
+    let mut tm = MultiTm::new(&shape).unwrap();
+    for _ in 0..10 {
+        tm.train_epoch(&rows, &p_off, &mut rng);
+    }
+    let batch = PlaneBatch::from_labelled(&shape, &rows);
+    let mut cache = RescoreCache::new();
+    let mut rands = StepRands::draw(&mut rng, &shape);
+    for step in 0..80usize {
+        let (x, y) = &rows[step % rows.len()];
+        rands.refill(&mut rng, &shape);
+        train_step_fast(&mut tm, x, *y, &p_on, &rands);
+        assert_rescore_matches(&mut cache, &tm, &batch, &p_off, &format!("step {step}"));
+    }
+    let stats = cache.stats();
+    assert!(
+        stats.dirty_fraction() < 0.5,
+        "converged online run should be mostly clean, got {:.3} ({stats:?})",
+        stats.dirty_fraction()
+    );
+}
