@@ -57,8 +57,16 @@ pub fn bench<F: FnMut()>(
 /// Next `BENCH_<n>.json` path under `root`: one past the highest
 /// existing index (gap-tolerant — BENCH_1 was generated but never
 /// committed in PR 1), so each perf_table run appends a fresh file to
-/// the perf trajectory instead of overwriting it.
+/// the perf trajectory instead of overwriting it. The returned path is
+/// only a *candidate*: two concurrent runs can compute the same index,
+/// so writers must claim it atomically — use [`write_json_next`], which
+/// retries past whoever won the race.
 pub fn next_bench_path(root: &str) -> String {
+    format!("{root}/BENCH_{}.json", max_bench_index(root) + 1)
+}
+
+/// Highest existing `BENCH_<n>.json` index under `root` (0 when none).
+fn max_bench_index(root: &str) -> u32 {
     let mut max_n = 0u32;
     if let Ok(entries) = std::fs::read_dir(root) {
         for e in entries.flatten() {
@@ -73,13 +81,13 @@ pub fn next_bench_path(root: &str) -> String {
             }
         }
     }
-    format!("{root}/BENCH_{}.json", max_n + 1)
+    max_n
 }
 
-/// Write results as machine-readable JSON (one object per row:
+/// Render results as machine-readable JSON (one object per row:
 /// `{name, mean_s, min_s, max_s, items_per_rep, throughput}`) so the perf
 /// trajectory can be tracked across PRs (see EXPERIMENTS.md §Perf).
-pub fn write_json(path: &str, results: &[BenchResult]) -> std::io::Result<()> {
+fn render_json(results: &[BenchResult]) -> String {
     let mut s = String::from("[\n");
     for (i, r) in results.iter().enumerate() {
         s.push_str(&format!(
@@ -95,7 +103,276 @@ pub fn write_json(path: &str, results: &[BenchResult]) -> std::io::Result<()> {
         ));
     }
     s.push_str("]\n");
-    std::fs::write(path, s)
+    s
+}
+
+/// Write results to the next free `BENCH_<n>.json` under `root`,
+/// tolerating concurrent writers: the full body is written to a
+/// process-private temp file first, then the target name is claimed
+/// atomically (`hard_link` fails with `AlreadyExists` if a concurrent
+/// run took the index — rescan and retry one higher). Two racing runs
+/// therefore end up with two distinct files instead of one clobbering
+/// the other, and a reader never observes a half-written
+/// `BENCH_<n>.json` (on filesystems without hard links the O_EXCL
+/// fallback keeps the no-clobber claim atomic but the content lands a
+/// write call later). Returns the claimed path.
+pub fn write_json_next(root: &str, results: &[BenchResult]) -> std::io::Result<String> {
+    let body = render_json(results);
+    let tmp = format!("{root}/.BENCH.tmp.{}", std::process::id());
+    std::fs::write(&tmp, &body)?;
+    let claimed = claim_next_bench(root, &tmp, &body);
+    // The temp file must not outlive the call on any path (the pattern
+    // is gitignored as a crash backstop, but errors should not leak it).
+    let _ = std::fs::remove_file(&tmp);
+    claimed
+}
+
+/// The claim loop of [`write_json_next`]: find the next free index and
+/// take it atomically; the caller owns temp-file cleanup.
+fn claim_next_bench(root: &str, tmp: &str, body: &str) -> std::io::Result<String> {
+    loop {
+        let target = next_bench_path(root);
+        match std::fs::hard_link(tmp, &target) {
+            Ok(()) => return Ok(target),
+            Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+                // Lost the race for this index; the rescan inside
+                // next_bench_path now sees the winner and goes higher.
+                continue;
+            }
+            Err(_) => {
+                // Filesystem without hard links: claim the name with
+                // O_EXCL (atomic, no clobber) and write the body through
+                // the claimed handle straight away.
+                match std::fs::OpenOptions::new().write(true).create_new(true).open(&target) {
+                    Ok(mut f) => {
+                        use std::io::Write;
+                        if let Err(e) = f.write_all(body.as_bytes()) {
+                            // Never leave a claimed-but-truncated file
+                            // for the schema checker to trip over.
+                            drop(f);
+                            let _ = std::fs::remove_file(&target);
+                            return Err(e);
+                        }
+                        return Ok(target);
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => continue,
+                    Err(e) => return Err(e),
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// `--validate` mode: BENCH_<n>.json schema checking + regression gate
+// (the CI bench-compare step; see .github/workflows/ci.yml).
+// ---------------------------------------------------------------------
+
+/// One parsed row of a `BENCH_<n>.json` file.
+#[derive(Debug, Clone)]
+pub struct BenchRow {
+    pub name: String,
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+    pub items_per_rep: u64,
+    pub throughput: f64,
+}
+
+impl BenchRow {
+    /// A zero stub: authored without a toolchain (mean 0), carries no
+    /// measurement — schema-checked but exempt from the regression gate.
+    pub fn is_zero_stub(&self) -> bool {
+        self.mean_s == 0.0
+    }
+}
+
+/// Parse and schema-check one bench JSON document: a non-empty array of
+/// objects with exactly the six known keys, finite non-negative timing
+/// fields, integral `items_per_rep`, unique non-empty names, and a
+/// `throughput` consistent with `items_per_rep / mean_s` (within the
+/// file format's 3-decimal rounding) wherever both are non-zero.
+pub fn parse_bench_rows(text: &str) -> anyhow::Result<Vec<BenchRow>> {
+    use tm_fpga::runtime::json::Json;
+    let doc = Json::parse(text)?;
+    let arr = doc.as_arr()?;
+    anyhow::ensure!(!arr.is_empty(), "bench json must contain at least one row");
+    let mut rows = Vec::with_capacity(arr.len());
+    let mut seen = std::collections::BTreeSet::new();
+    for (i, row) in arr.iter().enumerate() {
+        let obj = row.as_obj().map_err(|e| anyhow::anyhow!("row {i}: {e}"))?;
+        const KEYS: [&str; 6] =
+            ["name", "mean_s", "min_s", "max_s", "items_per_rep", "throughput"];
+        for k in obj.keys() {
+            anyhow::ensure!(
+                KEYS.contains(&k.as_str()),
+                "row {i}: unknown key {k:?} (schema allows {KEYS:?})"
+            );
+        }
+        let num = |key: &str| -> anyhow::Result<f64> {
+            match row.get(key).map_err(|e| anyhow::anyhow!("row {i}: {e}"))? {
+                Json::Num(v) => Ok(*v),
+                _ => anyhow::bail!("row {i}: {key} must be a number"),
+            }
+        };
+        let name = row
+            .get("name")
+            .and_then(|v| v.as_str())
+            .map_err(|e| anyhow::anyhow!("row {i}: {e}"))?
+            .to_string();
+        anyhow::ensure!(!name.is_empty(), "row {i}: empty name");
+        anyhow::ensure!(seen.insert(name.clone()), "row {i}: duplicate name {name:?}");
+        let mean_s = num("mean_s")?;
+        let min_s = num("min_s")?;
+        let max_s = num("max_s")?;
+        let throughput = num("throughput")?;
+        for (key, v) in
+            [("mean_s", mean_s), ("min_s", min_s), ("max_s", max_s), ("throughput", throughput)]
+        {
+            anyhow::ensure!(
+                v.is_finite() && v >= 0.0,
+                "row {i} ({name}): {key} must be finite and >= 0, got {v}"
+            );
+        }
+        let items = row
+            .get("items_per_rep")
+            .map_err(|e| anyhow::anyhow!("row {i}: {e}"))?
+            .as_usize()
+            .map_err(|e| anyhow::anyhow!("row {i} ({name}): items_per_rep: {e}"))?
+            as u64;
+        if mean_s > 0.0 && items > 0 {
+            let expect = items as f64 / mean_s;
+            // mean_s is written with 9 decimals and throughput with 3:
+            // the recomputation can differ by the mean's quantisation
+            // (relative 1e-9/mean_s — large for nanosecond-scale rows)
+            // plus the throughput's own absolute rounding.
+            let tol = expect * (1e-9 / mean_s + 1e-6) + 0.01;
+            anyhow::ensure!(
+                (throughput - expect).abs() <= tol,
+                "row {i} ({name}): throughput {throughput} inconsistent with \
+                 items_per_rep/mean_s = {expect:.3}"
+            );
+        }
+        rows.push(BenchRow { name, mean_s, min_s, max_s, items_per_rep: items, throughput });
+    }
+    Ok(rows)
+}
+
+/// Read + schema-check one bench JSON file; returns its rows.
+pub fn validate_bench_file(path: &str) -> anyhow::Result<Vec<BenchRow>> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+    parse_bench_rows(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))
+}
+
+/// Regression gate: rows of `cur` that got slower by more than
+/// `max_regression` (e.g. 0.25 = +25%) vs the same-named row in `prev`.
+/// Gates on the **fastest** repetition (`min_s`) when both artifacts
+/// recorded one — the noise-immune statistic on heterogeneous CI
+/// runners — falling back to `mean_s` for headline `perf_row:` entries
+/// that record only a mean. Zero stubs on either side carry no
+/// measurement and are skipped, as are rows without a prior
+/// counterpart.
+pub fn bench_regressions(
+    prev: &[BenchRow],
+    cur: &[BenchRow],
+    max_regression: f64,
+) -> Vec<String> {
+    let mut out = Vec::new();
+    for c in cur {
+        if c.is_zero_stub() {
+            continue;
+        }
+        let Some(p) = prev.iter().find(|p| p.name == c.name) else { continue };
+        if p.is_zero_stub() {
+            continue;
+        }
+        let (metric, cur_t, prev_t) = if c.min_s > 0.0 && p.min_s > 0.0 {
+            ("min", c.min_s, p.min_s)
+        } else {
+            ("mean", c.mean_s, p.mean_s)
+        };
+        if cur_t > prev_t * (1.0 + max_regression) {
+            out.push(format!(
+                "{}: {metric} {cur_t:.6}s vs prior {prev_t:.6}s (+{:.1}%, gate {:.0}%)",
+                c.name,
+                (cur_t / prev_t - 1.0) * 100.0,
+                max_regression * 100.0
+            ));
+        }
+    }
+    out
+}
+
+/// Allowed slowdown before the regression gate trips.
+pub const MAX_REGRESSION: f64 = 0.25;
+
+/// Entry point of the bench binaries' `--validate` mode
+/// (`cargo bench --bench perf_table -- --validate [--against PREV.json]
+/// FILE...`): schema-check every file; with `--against`, additionally
+/// fail on any measured row regressing more than
+/// [`MAX_REGRESSION`] vs the prior file. Returns the process exit code.
+pub fn validate_main(args: &[String]) -> i32 {
+    let mut against: Option<String> = None;
+    let mut files: Vec<String> = Vec::new();
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        if a == "--against" {
+            match it.next() {
+                Some(p) => against = Some(p.clone()),
+                None => {
+                    eprintln!("--against requires a path");
+                    return 2;
+                }
+            }
+        } else {
+            files.push(a.clone());
+        }
+    }
+    if files.is_empty() {
+        eprintln!("usage: -- --validate [--against PREV.json] BENCH_*.json");
+        return 2;
+    }
+    let mut failed = false;
+    let mut parsed: Vec<(String, Vec<BenchRow>)> = Vec::new();
+    for f in &files {
+        match validate_bench_file(f) {
+            Ok(rows) => {
+                println!("ok: {f} ({} rows)", rows.len());
+                parsed.push((f.clone(), rows));
+            }
+            Err(e) => {
+                eprintln!("SCHEMA FAIL: {e:#}");
+                failed = true;
+            }
+        }
+    }
+    if let Some(prev_path) = against {
+        match validate_bench_file(&prev_path) {
+            Ok(prev) => {
+                for (f, cur) in &parsed {
+                    let regressions = bench_regressions(&prev, cur, MAX_REGRESSION);
+                    if regressions.is_empty() {
+                        println!(
+                            "regression gate: {f} vs {prev_path}: OK \
+                             (no measured row slower than +{:.0}%)",
+                            MAX_REGRESSION * 100.0
+                        );
+                    } else {
+                        failed = true;
+                        for r in &regressions {
+                            eprintln!("PERF REGRESSION: {f} vs {prev_path}: {r}");
+                        }
+                    }
+                }
+            }
+            Err(e) => {
+                eprintln!("SCHEMA FAIL (baseline): {e:#}");
+                failed = true;
+            }
+        }
+    }
+    i32::from(failed)
 }
 
 /// Print a results table.

@@ -70,6 +70,13 @@ impl Cli {
         }
     }
 
+    pub fn flag_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{name} expects a float, got {v:?}")),
+        }
+    }
+
     pub fn flag_bool(&self, name: &str, default: bool) -> Result<bool> {
         match self.flag(name) {
             None => Ok(default),
@@ -105,6 +112,11 @@ COMMANDS
                           log     [--ordering 0,1,2,3,4] [--iterations N=16]
                           [--online-learning BOOL=true] [--filter CLASS]
                           [--seed N]
+  serve                   deterministic serving soak: sharded micro-batched
+                          online inference vs the scalar oracle
+                          [--shards N=2] [--events N=1000] [--batch N=64]
+                          [--deadline TICKS=8] [--labelled F=0.2]
+                          [--gap TICKS=1.0] [--seed N=42] [--warmup N=4]
   perf                    §6 performance table (FPGA model vs software paths)
                           [--iters N=20] [--pjrt-steps N=60]
   power                   §6 power table (gating / over-provisioning)
@@ -146,6 +158,14 @@ mod tests {
         assert!(!c.flag_bool("online-learning", true).unwrap());
         assert_eq!(c.flag_usize("filter", 99).unwrap(), 0);
         assert!(c.flag_bool("verbose", false).unwrap());
+    }
+
+    #[test]
+    fn f64_flags_keep_precision() {
+        let c = parse("serve --gap 0.125");
+        assert_eq!(c.flag_f64("gap", 1.0).unwrap(), 0.125);
+        assert_eq!(parse("serve").flag_f64("gap", 1.5).unwrap(), 1.5, "default");
+        assert!(parse("serve --gap wide").flag_f64("gap", 1.0).is_err());
     }
 
     #[test]

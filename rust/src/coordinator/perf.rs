@@ -259,6 +259,59 @@ pub fn online_monitor_comparison(batch_rows: usize, steps: usize) -> (f64, f64, 
     )
 }
 
+/// The ISSUE-4 acceptance comparison: request-at-a-time serving through
+/// the sharded micro-batching front door (`crate::serve`) on a
+/// `requests`-request burst trace, on a realistically trained machine.
+/// Three arms, all through the same server machinery so only the policy
+/// differs: batch-1 on a single shard (the no-coalescing floor),
+/// micro-batched (64-wide) on a single shard, and micro-batched across
+/// `shards` shards. Each arm does one untimed warmup run and `reps`
+/// timed runs, keeping the **fastest** — a full pool spawn + drive +
+/// join per run, so single-shot thread-scheduling noise on shared CI
+/// runners cannot feed the 25% bench-compare regression gate. Returns
+/// `(batch1_rps, micro_1shard_rps, micro_sharded_rps, mean_width)` —
+/// samples served per wall-clock second and the sharded arm's achieved
+/// mean batch width.
+pub fn serve_comparison(requests: usize, shards: usize, reps: usize) -> (f64, f64, f64, f64) {
+    use crate::serve::{run_trace, BatcherConfig, ServeConfig, ServeEvent, ShardServer};
+    let shape = TmShape::iris();
+    let params = TmParams::paper_offline(&shape);
+    let data = bench_data(&shape);
+    let tm = trained_machine(&shape, &params, &data);
+    let events: Vec<ServeEvent> = data
+        .iter()
+        .map(|(x, _)| x.clone())
+        .cycle()
+        .take(requests)
+        .map(|input| ServeEvent::Infer { at_tick: 0, input })
+        .collect();
+
+    let arm = |n_shards: usize, max_batch: usize| -> (f64, f64) {
+        let bcfg = BatcherConfig { max_batch, latency_budget: 1 };
+        let mut best = f64::INFINITY;
+        let mut width = 0.0;
+        for rep in 0..=reps.max(1) {
+            let cfg = ServeConfig { shards: n_shards, params: params.clone(), base_seed: 7 };
+            let t0 = Instant::now();
+            let mut server = ShardServer::new(&tm, &cfg).unwrap();
+            let drive = run_trace(&mut server, &events, &bcfg);
+            let outcome = server.finish().unwrap();
+            let secs = t0.elapsed().as_secs_f64();
+            assert_eq!(outcome.responses.len(), requests, "every request answered");
+            if rep > 0 {
+                best = best.min(secs); // rep 0 is the untimed warmup
+            }
+            width = drive.mean_batch_width();
+        }
+        (requests as f64 / best, width)
+    };
+    let (batch1, w1) = arm(1, 1);
+    debug_assert!((w1 - 1.0).abs() < 1e-9);
+    let (micro_one, _) = arm(1, 64);
+    let (micro_sharded, width) = arm(shards, 64);
+    (batch1, micro_one, micro_sharded, width)
+}
+
 /// Measured throughput of the naive scalar baseline.
 pub fn baseline_row(iters: usize) -> PerfRow {
     let shape = TmShape::iris();
@@ -540,6 +593,20 @@ mod tests {
         let (cold, inc, dirty) = online_monitor_comparison(256, 6);
         assert!(cold > 0.0 && inc > 0.0);
         assert!((0.0..=1.0).contains(&dirty), "dirty fraction {dirty}");
+    }
+
+    #[test]
+    fn serve_comparison_measures_and_answers_everything() {
+        // Wall-clock ratio acceptance (≥3× micro-batch floor) lives in
+        // the perf_table bench at realistic request counts; here only
+        // sanity-check the plumbing (every arm answers every request —
+        // asserted inside — and rates/width are sane).
+        let (batch1, micro_one, micro_sharded, width) = serve_comparison(192, 2, 1);
+        assert!(batch1 > 0.0 && micro_one > 0.0 && micro_sharded > 0.0);
+        assert!(
+            (1.0..=64.0).contains(&width),
+            "mean micro-batch width {width} out of range"
+        );
     }
 
     #[test]

@@ -1,0 +1,211 @@
+//! Deterministic replay/soak driver for the serving layer.
+//!
+//! Builds a warm-trained machine, generates a seeded Poisson-ish arrival
+//! trace off the modular online input interface (ROM source → geometric
+//! gaps, no wall clock), drives it through the sharded micro-batching
+//! server, and cross-checks **every** response bit-identically against
+//! the scalar [`ScalarOracle`] fed the same sequence. Because every
+//! moving part is deterministic — trace generation, batching decisions,
+//! the sequenced replica update log — a soak either agrees exactly or
+//! has found a real ordering/replication bug; there is no tolerance
+//! band.
+
+use crate::data::blocks::{BlockPlan, SetAllocation};
+use crate::data::filter::ClassFilter;
+use crate::data::iris;
+use crate::data::online::{arrival_trace, RomSource, TraceConfig};
+use crate::serve::{
+    run_trace, BatcherConfig, DriveStats, ScalarOracle, ServeConfig, ServeEvent, ShardServer,
+    ShardStats,
+};
+use crate::tm::clause::Input;
+use crate::tm::machine::MultiTm;
+use crate::tm::params::{TmParams, TmShape};
+use crate::tm::rng::Xoshiro256;
+use crate::tm::update::UpdateKind;
+use anyhow::Result;
+use std::time::Instant;
+
+/// Soak-run configuration (iris shape, paper-offline params).
+#[derive(Debug, Clone)]
+pub struct SoakConfig {
+    /// Shard replicas in the server under test.
+    pub shards: usize,
+    /// Arrival-trace length (requests + labelled updates).
+    pub events: usize,
+    /// Micro-batch lane cap, 1..=64.
+    pub max_batch: usize,
+    /// Flush deadline in virtual ticks.
+    pub latency_budget: u64,
+    /// Fraction of arrivals that carry a label (online updates).
+    pub labelled_fraction: f32,
+    /// Mean inter-arrival gap in ticks (0 = a single burst).
+    pub mean_gap: f64,
+    /// Master seed: warm-up training, trace generation and the replica
+    /// update log all derive from it.
+    pub seed: u64,
+    /// Offline epochs to warm-train the served machine first, so
+    /// predictions are non-trivial.
+    pub warmup_epochs: usize,
+}
+
+impl Default for SoakConfig {
+    fn default() -> Self {
+        SoakConfig {
+            shards: 2,
+            events: 1000,
+            max_batch: 64,
+            latency_budget: 8,
+            labelled_fraction: 0.2,
+            mean_gap: 1.0,
+            seed: 42,
+            warmup_epochs: 4,
+        }
+    }
+}
+
+/// What one soak run produced and whether it agreed with the oracle.
+#[derive(Debug, Clone)]
+pub struct SoakReport {
+    /// Driver counters (flush breakdown, achieved batch width).
+    pub drive: DriveStats,
+    /// Server responses, sorted by request id.
+    pub responses: Vec<(u64, usize)>,
+    /// Per-shard work counters.
+    pub shards: Vec<ShardStats>,
+    /// Id-matched differences vs the scalar oracle: wrong predictions
+    /// plus rows present on only one side, each counted once.
+    pub mismatches: usize,
+    /// Wall-clock seconds of the server arm (drive + join), for the
+    /// throughput line; never used in any decision.
+    pub wall_s: f64,
+}
+
+impl SoakReport {
+    /// Bit-identical agreement with the scalar oracle.
+    pub fn agrees(&self) -> bool {
+        self.mismatches == 0
+    }
+
+    /// Served inference samples per wall-clock second.
+    pub fn samples_per_s(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            self.responses.len() as f64 / self.wall_s
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Build the soak's event stream: warm-trained machine + packed trace.
+fn soak_events(cfg: &SoakConfig, shape: &TmShape) -> Result<(MultiTm, Vec<ServeEvent>)> {
+    let params = TmParams::paper_offline(shape);
+    let plan = BlockPlan::stratified(iris::booleanised(), 5, cfg.seed)?;
+    let sets = plan.sets(&[0, 1, 2, 3, 4], SetAllocation::paper())?;
+    let train = sets.offline.pack(shape);
+    let mut tm = MultiTm::new(shape)?;
+    let mut rng = Xoshiro256::new(cfg.seed);
+    for _ in 0..cfg.warmup_epochs {
+        tm.train_epoch(&train, &params, &mut rng);
+    }
+    let mut source = RomSource::new(iris::booleanised().clone(), ClassFilter::disabled())?;
+    let trace = arrival_trace(
+        &mut source,
+        &TraceConfig {
+            events: cfg.events,
+            labelled_fraction: cfg.labelled_fraction,
+            mean_gap: cfg.mean_gap,
+            seed: cfg.seed ^ 0x7ACE_7ACE,
+        },
+    )?;
+    let events = trace
+        .events
+        .iter()
+        .map(|e| {
+            let input = Input::pack(shape, &e.bits);
+            match e.label {
+                Some(label) => ServeEvent::Update {
+                    at_tick: e.at_tick,
+                    kind: UpdateKind::Learn { input, label },
+                },
+                None => ServeEvent::Infer { at_tick: e.at_tick, input },
+            }
+        })
+        .collect();
+    Ok((tm, events))
+}
+
+/// Run one soak: sharded server vs scalar oracle on the same trace.
+pub fn run_soak(cfg: &SoakConfig) -> Result<SoakReport> {
+    let shape = TmShape::iris();
+    let params = TmParams::paper_offline(&shape);
+    let bcfg = BatcherConfig { max_batch: cfg.max_batch, latency_budget: cfg.latency_budget };
+    bcfg.validate()?;
+    let (tm, events) = soak_events(cfg, &shape)?;
+
+    let scfg = ServeConfig { shards: cfg.shards, params: params.clone(), base_seed: cfg.seed };
+    let mut server = ShardServer::new(&tm, &scfg)?;
+    let t0 = Instant::now();
+    let drive = run_trace(&mut server, &events, &bcfg);
+    let outcome = server.finish()?;
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    let mut oracle = ScalarOracle::new(tm, params, cfg.seed);
+    run_trace(&mut oracle, &events, &bcfg);
+    let expected = oracle.into_responses();
+
+    // Id-matched diff over the two id-sorted response lists: a wrong
+    // prediction counts once, and a dropped/extra row counts once —
+    // without skewing every later comparison the way a positional zip
+    // would after a single lost response.
+    let (a, b) = (&outcome.responses, &expected);
+    let (mut i, mut j, mut mismatches) = (0usize, 0usize, 0usize);
+    while i < a.len() && j < b.len() {
+        match a[i].0.cmp(&b[j].0) {
+            std::cmp::Ordering::Equal => {
+                if a[i].1 != b[j].1 {
+                    mismatches += 1;
+                }
+                i += 1;
+                j += 1;
+            }
+            std::cmp::Ordering::Less => {
+                mismatches += 1;
+                i += 1;
+            }
+            std::cmp::Ordering::Greater => {
+                mismatches += 1;
+                j += 1;
+            }
+        }
+    }
+    mismatches += (a.len() - i) + (b.len() - j);
+
+    Ok(SoakReport {
+        drive,
+        responses: outcome.responses,
+        shards: outcome.shards,
+        mismatches,
+        wall_s,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// One quick end-to-end agreement check; the heavy differential
+    /// matrix (shard counts × batch widths × fault injection) lives in
+    /// `rust/tests/integration_serve.rs`.
+    #[test]
+    fn default_soak_agrees_with_oracle() {
+        let cfg = SoakConfig { events: 300, warmup_epochs: 2, ..Default::default() };
+        let rep = run_soak(&cfg).unwrap();
+        assert!(rep.agrees(), "{} mismatches", rep.mismatches);
+        assert!(rep.drive.infer_requests > 0 && rep.drive.updates > 0);
+        assert_eq!(rep.responses.len() as u64, rep.drive.infer_requests);
+        assert_eq!(rep.drive.width_sum, rep.drive.infer_requests);
+        let width = rep.drive.mean_batch_width();
+        assert!(width >= 1.0, "mean width {width}");
+    }
+}

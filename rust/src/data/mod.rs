@@ -14,4 +14,7 @@ pub use blocks::{all_orderings, BlockPlan, PackedSets, SetAllocation, Sets};
 pub use booleanize::Booleanizer;
 pub use dataset::{BoolDataset, RawDataset};
 pub use filter::ClassFilter;
-pub use online::{CyclicBuffer, OnlineDataManager, OnlineSource, RomSource};
+pub use online::{
+    arrival_trace, ArrivalTrace, CyclicBuffer, OnlineDataManager, OnlineSource, RomSource,
+    TraceConfig, TraceEvent,
+};

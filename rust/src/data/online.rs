@@ -12,7 +12,8 @@
 
 use crate::data::dataset::BoolDataset;
 use crate::data::filter::ClassFilter;
-use anyhow::{bail, Result};
+use crate::tm::rng::Xoshiro256;
+use anyhow::{bail, ensure, Result};
 
 /// Anything that can produce online datapoints (the paper's replaceable
 /// input-parser IP: ROM today, UART/Ethernet via the MCU tomorrow).
@@ -133,6 +134,82 @@ impl<T> CyclicBuffer<T> {
         self.len -= 1;
         item
     }
+}
+
+/// One event of a synthetic request-arrival trace: a row from the
+/// modular input interface stamped with a virtual arrival tick.
+/// `label: Some(_)` means the sample arrived labelled (an online-learning
+/// update for the serving layer); `None` means it is a pure inference
+/// request.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceEvent {
+    pub at_tick: u64,
+    pub bits: Vec<bool>,
+    pub label: Option<usize>,
+}
+
+/// Shape of a synthetic arrival trace.
+#[derive(Debug, Clone)]
+pub struct TraceConfig {
+    /// Events to generate (fewer if the source runs dry).
+    pub events: usize,
+    /// Probability that a row arrives labelled (0 ⇒ pure inference
+    /// traffic, 1 ⇒ pure online-training traffic).
+    pub labelled_fraction: f32,
+    /// Mean inter-arrival gap in virtual ticks. Gaps are geometric
+    /// (the discrete memoryless distribution — Poisson-ish arrivals on
+    /// a tick clock); 0 pins every event to tick 0 (a burst).
+    pub mean_gap: f64,
+    /// Seed of the trace's own generator (arrival times and labelling
+    /// are independent of the data source).
+    pub seed: u64,
+}
+
+/// A generated arrival trace: events with non-decreasing ticks.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArrivalTrace {
+    pub events: Vec<TraceEvent>,
+}
+
+/// Largest geometric gap the sampler will emit (keeps a pathological
+/// `mean_gap` from spinning; the tail beyond this is astronomically
+/// unlikely for any sane mean).
+const MAX_GAP: u64 = 1 << 20;
+
+/// Generate a synthetic arrival trace by pulling rows from any
+/// [`OnlineSource`] (the paper's replaceable input-parser IP) and
+/// stamping them with seeded geometric inter-arrival gaps and a seeded
+/// labelled/unlabelled coin. Fully deterministic in
+/// `(source state, cfg)` — gap sampling counts Bernoulli failures
+/// instead of taking logarithms, so the trace is bit-reproducible across
+/// platforms. Stops early (without error) if the source runs dry.
+pub fn arrival_trace<S: OnlineSource>(source: &mut S, cfg: &TraceConfig) -> Result<ArrivalTrace> {
+    ensure!(
+        (0.0..=1.0).contains(&cfg.labelled_fraction),
+        "TraceConfig: labelled_fraction must be in [0, 1], got {}",
+        cfg.labelled_fraction
+    );
+    ensure!(
+        cfg.mean_gap >= 0.0 && cfg.mean_gap.is_finite(),
+        "TraceConfig: mean_gap must be finite and >= 0, got {}",
+        cfg.mean_gap
+    );
+    let mut rng = Xoshiro256::new(cfg.seed);
+    // Geometric success probability with the requested mean gap.
+    let p = (1.0 / (1.0 + cfg.mean_gap)) as f32;
+    let mut tick = 0u64;
+    let mut events = Vec::with_capacity(cfg.events);
+    while events.len() < cfg.events {
+        let Some((bits, label)) = source.next_row() else { break };
+        let labelled = rng.next_f32() < cfg.labelled_fraction;
+        events.push(TraceEvent { at_tick: tick, bits, label: labelled.then_some(label) });
+        let mut gap = 0u64;
+        while gap < MAX_GAP && rng.next_f32() >= p {
+            gap += 1;
+        }
+        tick += gap;
+    }
+    Ok(ArrivalTrace { events })
 }
 
 /// The online data manager (§3.5.1): pulls from the source into the
@@ -268,6 +345,71 @@ mod tests {
         // Next request pulls straight from the source.
         assert!(mgr.request_row().is_some());
         assert_eq!(mgr.source().produced(), 6 + 0 + 0 + 5 - 5 + 0); // 5 produced + 1 direct
+    }
+
+    #[test]
+    fn arrival_trace_is_deterministic_and_monotone() {
+        let cfg = TraceConfig {
+            events: 200,
+            labelled_fraction: 0.3,
+            mean_gap: 2.0,
+            seed: 0xACE,
+        };
+        let mut s1 = RomSource::new(iris::booleanised().clone(), ClassFilter::disabled())
+            .unwrap();
+        let mut s2 = s1.clone();
+        let a = arrival_trace(&mut s1, &cfg).unwrap();
+        let b = arrival_trace(&mut s2, &cfg).unwrap();
+        assert_eq!(a, b, "same seed + source state => same trace");
+        assert_eq!(a.events.len(), 200);
+        for w in a.events.windows(2) {
+            assert!(w[0].at_tick <= w[1].at_tick, "ticks must be non-decreasing");
+        }
+        let labelled = a.events.iter().filter(|e| e.label.is_some()).count();
+        assert!(
+            (30..=90).contains(&labelled),
+            "labelled fraction way off: {labelled}/200"
+        );
+        // Mean gap in the right ballpark (geometric with mean 2).
+        let span = a.events.last().unwrap().at_tick;
+        let mean = span as f64 / 199.0;
+        assert!((1.0..=3.5).contains(&mean), "mean gap {mean}");
+    }
+
+    #[test]
+    fn arrival_trace_edge_fractions_and_burst() {
+        let mut src =
+            RomSource::new(iris::booleanised().clone(), ClassFilter::disabled()).unwrap();
+        let burst = arrival_trace(
+            &mut src,
+            &TraceConfig { events: 50, labelled_fraction: 0.0, mean_gap: 0.0, seed: 1 },
+        )
+        .unwrap();
+        assert!(burst.events.iter().all(|e| e.at_tick == 0), "mean_gap 0 is a burst");
+        assert!(burst.events.iter().all(|e| e.label.is_none()));
+        let all_labelled = arrival_trace(
+            &mut src,
+            &TraceConfig { events: 50, labelled_fraction: 1.0, mean_gap: 1.0, seed: 1 },
+        )
+        .unwrap();
+        assert!(all_labelled.events.iter().all(|e| e.label.is_some()));
+        // Invalid configs are rejected.
+        let bad = TraceConfig { events: 1, labelled_fraction: 1.5, mean_gap: 1.0, seed: 1 };
+        assert!(arrival_trace(&mut src, &bad).is_err());
+        let bad = TraceConfig { events: 1, labelled_fraction: 0.5, mean_gap: -1.0, seed: 1 };
+        assert!(arrival_trace(&mut src, &bad).is_err());
+    }
+
+    #[test]
+    fn arrival_trace_stops_when_source_dries() {
+        let one = BoolDataset { rows: vec![vec![true]], labels: vec![0], n_classes: 1 };
+        let mut src = RomSource::new(one, ClassFilter::removing(0)).unwrap();
+        let t = arrival_trace(
+            &mut src,
+            &TraceConfig { events: 10, labelled_fraction: 0.5, mean_gap: 1.0, seed: 2 },
+        )
+        .unwrap();
+        assert!(t.events.is_empty(), "dry source => empty trace, no error");
     }
 
     #[test]

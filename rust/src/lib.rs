@@ -21,5 +21,6 @@ pub mod coordinator;
 pub mod data;
 pub mod fpga;
 pub mod runtime;
+pub mod serve;
 pub mod testkit;
 pub mod tm;

@@ -31,6 +31,7 @@ fn dispatch(cli: &Cli) -> Result<()> {
     match cli.command.as_str() {
         "fig" => cmd_fig(cli),
         "run" => cmd_run(cli),
+        "serve" => cmd_serve(cli),
         "perf" => cmd_perf(cli),
         "power" => cmd_power(),
         "sweep" => cmd_sweep(cli),
@@ -107,6 +108,58 @@ fn cmd_run(cli: &Cli) -> Result<()> {
         rep.power.total_w, rep.power.mcu_w, rep.power.fabric_w
     );
     Ok(())
+}
+
+fn cmd_serve(cli: &Cli) -> Result<()> {
+    // Flag fallbacks come from SoakConfig::default() so the CLI, the
+    // soak driver and the help text cannot drift apart.
+    let d = tm_fpga::coordinator::SoakConfig::default();
+    let cfg = tm_fpga::coordinator::SoakConfig {
+        shards: cli.flag_usize("shards", d.shards)?,
+        events: cli.flag_usize("events", d.events)?,
+        max_batch: cli.flag_usize("batch", d.max_batch)?,
+        latency_budget: cli.flag_u64("deadline", d.latency_budget)?,
+        labelled_fraction: cli.flag_f32("labelled", d.labelled_fraction)?,
+        mean_gap: cli.flag_f64("gap", d.mean_gap)?,
+        seed: cli.flag_u64("seed", d.seed)?,
+        warmup_epochs: cli.flag_usize("warmup", d.warmup_epochs)?,
+    };
+    let rep = coordinator::run_soak(&cfg)?;
+    println!(
+        "serving soak: {} events over {} shard(s) (batch cap {}, deadline {} ticks)",
+        cfg.events, cfg.shards, cfg.max_batch, cfg.latency_budget
+    );
+    println!(
+        "  inference requests : {} ({} responses)",
+        rep.drive.infer_requests,
+        rep.responses.len()
+    );
+    println!("  online updates     : {}", rep.drive.updates);
+    println!(
+        "  micro-batches      : {} ({} full / {} deadline / {} final), mean width {:.1}",
+        rep.drive.batches,
+        rep.drive.full_flushes,
+        rep.drive.deadline_flushes,
+        rep.drive.final_flushes,
+        rep.drive.mean_batch_width()
+    );
+    for s in &rep.shards {
+        println!(
+            "  shard {}            : {} batches, {} samples, {} updates applied",
+            s.shard, s.batches, s.samples, s.updates
+        );
+    }
+    println!(
+        "  throughput         : {:.0} samples/s ({:.3}s wall)",
+        rep.samples_per_s(),
+        rep.wall_s
+    );
+    if rep.agrees() {
+        println!("  oracle check       : OK (bit-identical to the scalar MultiTm oracle)");
+        Ok(())
+    } else {
+        bail!("{} responses diverged from the scalar oracle", rep.mismatches)
+    }
 }
 
 fn cmd_perf(cli: &Cli) -> Result<()> {

@@ -1,0 +1,334 @@
+//! Request coalescing under a latency budget, on a virtual clock.
+//!
+//! The batcher holds at most one *open* micro-batch. A request joins the
+//! open batch; the batch flushes when it reaches `max_batch` lanes
+//! (**full** flush) or when the driver's clock reaches the first
+//! request's arrival tick plus `latency_budget` (**deadline** flush) —
+//! whichever comes first. Whatever is still open when the trace ends is
+//! flushed as the **final** batch. All decisions are functions of the
+//! event sequence and the config alone — no wall clock — so the same
+//! trace always produces the same batches, which is what lets the soak
+//! driver cross-check the threaded server bit-for-bit against a scalar
+//! oracle.
+
+use crate::serve::ServeBackend;
+use crate::tm::clause::Input;
+use crate::tm::update::UpdateKind;
+use anyhow::{ensure, Result};
+
+/// A single-sample inference request admitted to the batcher. `id` is
+/// assigned in arrival order and is how responses are matched back.
+#[derive(Debug, Clone)]
+pub struct PendingRequest {
+    pub id: u64,
+    pub input: Input,
+}
+
+/// Micro-batching policy.
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    /// Flush when this many requests are open. 1..=64 (one 64-sample
+    /// bitplane lane — `max_batch = 1` disables coalescing entirely).
+    pub max_batch: usize,
+    /// Flush when `now − oldest_arrival ≥ latency_budget` (virtual
+    /// ticks). 0 means a batch never survives past its arrival tick.
+    pub latency_budget: u64,
+}
+
+impl BatcherConfig {
+    pub fn validate(&self) -> Result<()> {
+        ensure!(
+            (1..=64).contains(&self.max_batch),
+            "BatcherConfig: max_batch must be in 1..=64 (one bitplane lane), got {}",
+            self.max_batch
+        );
+        Ok(())
+    }
+}
+
+/// The micro-batcher: one open batch plus its oldest arrival tick.
+#[derive(Debug)]
+pub struct MicroBatcher {
+    cfg: BatcherConfig,
+    open: Vec<PendingRequest>,
+    /// Arrival tick of `open[0]`; meaningful only when `open` is
+    /// non-empty.
+    oldest: u64,
+}
+
+impl MicroBatcher {
+    /// Panics on an invalid config (drivers validate user input first).
+    pub fn new(cfg: BatcherConfig) -> Self {
+        assert!(cfg.validate().is_ok(), "invalid BatcherConfig");
+        let cap = cfg.max_batch;
+        MicroBatcher { cfg, open: Vec::with_capacity(cap), oldest: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.open.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.open.is_empty()
+    }
+
+    /// The open batch's deadline has passed at `now`.
+    pub fn due(&self, now: u64) -> bool {
+        !self.open.is_empty() && now >= self.oldest.saturating_add(self.cfg.latency_budget)
+    }
+
+    /// Admit one request arriving at `now`; returns the batch when this
+    /// push filled it.
+    pub fn push(&mut self, req: PendingRequest, now: u64) -> Option<Vec<PendingRequest>> {
+        if self.open.is_empty() {
+            self.oldest = now;
+        }
+        self.open.push(req);
+        if self.open.len() >= self.cfg.max_batch {
+            self.flush()
+        } else {
+            None
+        }
+    }
+
+    /// Take the open batch (deadline / end-of-trace flushes).
+    pub fn flush(&mut self) -> Option<Vec<PendingRequest>> {
+        if self.open.is_empty() {
+            None
+        } else {
+            Some(std::mem::take(&mut self.open))
+        }
+    }
+}
+
+/// One event of a serving trace, stamped with its (virtual) arrival
+/// tick. Ticks must be non-decreasing along the trace.
+#[derive(Debug, Clone)]
+pub enum ServeEvent {
+    /// An unlabelled sample: an inference request wanting a response.
+    Infer { at_tick: u64, input: Input },
+    /// A sequenced model update (labelled sample, fault edit).
+    Update { at_tick: u64, kind: UpdateKind },
+}
+
+impl ServeEvent {
+    pub fn at_tick(&self) -> u64 {
+        match self {
+            ServeEvent::Infer { at_tick, .. } | ServeEvent::Update { at_tick, .. } => *at_tick,
+        }
+    }
+}
+
+/// Counters of one [`run_trace`] drive — flush-cause breakdown and the
+/// achieved batch width the perf rows report.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DriveStats {
+    pub infer_requests: u64,
+    pub updates: u64,
+    pub batches: u64,
+    /// Batches flushed because they reached `max_batch` lanes.
+    pub full_flushes: u64,
+    /// Batches flushed because their latency budget expired.
+    pub deadline_flushes: u64,
+    /// The end-of-trace flush (0 or 1).
+    pub final_flushes: u64,
+    /// Summed width of all flushed batches (= `infer_requests` once the
+    /// trace is fully drained).
+    pub width_sum: u64,
+}
+
+enum FlushKind {
+    Full,
+    Deadline,
+    Final,
+}
+
+impl DriveStats {
+    fn record(&mut self, width: usize, kind: FlushKind) {
+        self.batches += 1;
+        self.width_sum += width as u64;
+        match kind {
+            FlushKind::Full => self.full_flushes += 1,
+            FlushKind::Deadline => self.deadline_flushes += 1,
+            FlushKind::Final => self.final_flushes += 1,
+        }
+    }
+
+    /// Mean achieved micro-batch width (samples per flushed batch).
+    pub fn mean_batch_width(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.width_sum as f64 / self.batches as f64
+        }
+    }
+}
+
+/// Drive a serving trace through a backend: updates are forwarded in
+/// arrival order, inference requests are micro-batched, deadline flushes
+/// happen before any event at or past the deadline tick is processed,
+/// and the tail batch is flushed at end of trace. Request ids are
+/// assigned 0.. in arrival order over the `Infer` events.
+///
+/// The whole function is deterministic given (`events`, `cfg`), so
+/// running it once against [`crate::serve::ShardServer`] and once
+/// against [`crate::serve::ScalarOracle`] scores the *same* batches
+/// against the *same* sequenced updates — the differential contract of
+/// `rust/tests/integration_serve.rs`.
+pub fn run_trace<B: ServeBackend>(
+    backend: &mut B,
+    events: &[ServeEvent],
+    cfg: &BatcherConfig,
+) -> DriveStats {
+    let mut batcher = MicroBatcher::new(cfg.clone());
+    let mut stats = DriveStats::default();
+    let mut next_id = 0u64;
+    let mut clock = 0u64;
+    for ev in events {
+        debug_assert!(ev.at_tick() >= clock, "trace ticks must be non-decreasing");
+        // Monotonize in release builds too: a backwards tick would
+        // otherwise silently disable deadline flushing (time cannot run
+        // backwards, so an out-of-order event reads as "now").
+        let now = ev.at_tick().max(clock);
+        clock = now;
+        if batcher.due(now) {
+            if let Some(batch) = batcher.flush() {
+                stats.record(batch.len(), FlushKind::Deadline);
+                backend.infer_batch(batch);
+            }
+        }
+        match ev {
+            ServeEvent::Infer { at_tick, input } => {
+                let req = PendingRequest { id: next_id, input: input.clone() };
+                next_id += 1;
+                stats.infer_requests += 1;
+                if let Some(batch) = batcher.push(req, *at_tick) {
+                    stats.record(batch.len(), FlushKind::Full);
+                    backend.infer_batch(batch);
+                }
+            }
+            ServeEvent::Update { kind, .. } => {
+                stats.updates += 1;
+                backend.update(kind.clone());
+            }
+        }
+    }
+    if let Some(batch) = batcher.flush() {
+        stats.record(batch.len(), FlushKind::Final);
+        backend.infer_batch(batch);
+    }
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tm::params::TmShape;
+
+    fn input(bit: usize) -> Input {
+        let s = TmShape::iris();
+        let mut bits = vec![false; s.features];
+        bits[bit % s.features] = true;
+        Input::pack(&s, &bits)
+    }
+
+    /// A recording backend: logs batch widths and update count.
+    #[derive(Default)]
+    struct Recorder {
+        widths: Vec<usize>,
+        ids: Vec<u64>,
+        updates: usize,
+    }
+
+    impl ServeBackend for Recorder {
+        fn update(&mut self, _kind: UpdateKind) {
+            self.updates += 1;
+        }
+
+        fn infer_batch(&mut self, batch: Vec<PendingRequest>) {
+            self.widths.push(batch.len());
+            self.ids.extend(batch.iter().map(|r| r.id));
+        }
+    }
+
+    fn infer_at(tick: u64, bit: usize) -> ServeEvent {
+        ServeEvent::Infer { at_tick: tick, input: input(bit) }
+    }
+
+    #[test]
+    fn config_bounds_enforced() {
+        assert!(BatcherConfig { max_batch: 0, latency_budget: 1 }.validate().is_err());
+        assert!(BatcherConfig { max_batch: 65, latency_budget: 1 }.validate().is_err());
+        assert!(BatcherConfig { max_batch: 1, latency_budget: 0 }.validate().is_ok());
+        assert!(BatcherConfig { max_batch: 64, latency_budget: 0 }.validate().is_ok());
+    }
+
+    #[test]
+    fn full_flush_at_max_batch() {
+        let cfg = BatcherConfig { max_batch: 4, latency_budget: 100 };
+        let events: Vec<ServeEvent> = (0..10).map(|i| infer_at(0, i)).collect();
+        let mut rec = Recorder::default();
+        let stats = run_trace(&mut rec, &events, &cfg);
+        assert_eq!(rec.widths, vec![4, 4, 2], "two full + one final flush");
+        assert_eq!(rec.ids, (0..10).collect::<Vec<u64>>(), "ids in arrival order");
+        assert_eq!(stats.full_flushes, 2);
+        assert_eq!(stats.final_flushes, 1);
+        assert_eq!(stats.deadline_flushes, 0);
+        assert_eq!(stats.infer_requests, 10);
+        assert_eq!(stats.width_sum, 10);
+    }
+
+    #[test]
+    fn deadline_flush_before_late_event() {
+        let cfg = BatcherConfig { max_batch: 64, latency_budget: 5 };
+        // Requests at ticks 0 and 3 share a batch (3 < 0+5); the request
+        // at tick 5 arrives at the deadline, so the open batch flushes
+        // first and the late request starts a new one.
+        let events = vec![infer_at(0, 0), infer_at(3, 1), infer_at(5, 2)];
+        let mut rec = Recorder::default();
+        let stats = run_trace(&mut rec, &events, &cfg);
+        assert_eq!(rec.widths, vec![2, 1]);
+        assert_eq!(stats.deadline_flushes, 1);
+        assert_eq!(stats.final_flushes, 1);
+        assert_eq!(stats.mean_batch_width(), 1.5);
+    }
+
+    #[test]
+    fn zero_budget_never_coalesces_across_events() {
+        let cfg = BatcherConfig { max_batch: 64, latency_budget: 0 };
+        let events = vec![infer_at(0, 0), infer_at(0, 1), infer_at(1, 2)];
+        let mut rec = Recorder::default();
+        let stats = run_trace(&mut rec, &events, &cfg);
+        assert_eq!(rec.widths, vec![1, 1, 1]);
+        assert_eq!(stats.batches, stats.infer_requests);
+    }
+
+    #[test]
+    fn updates_pass_through_without_flushing() {
+        let cfg = BatcherConfig { max_batch: 8, latency_budget: 10 };
+        let events = vec![
+            infer_at(0, 0),
+            ServeEvent::Update {
+                at_tick: 1,
+                kind: UpdateKind::ClauseFault { class: 0, clause: 0, force: Some(true) },
+            },
+            infer_at(2, 1),
+        ];
+        let mut rec = Recorder::default();
+        let stats = run_trace(&mut rec, &events, &cfg);
+        assert_eq!(rec.updates, 1);
+        assert_eq!(rec.widths, vec![2], "update did not split the batch");
+        assert_eq!(stats.updates, 1);
+        assert_eq!(stats.final_flushes, 1);
+    }
+
+    #[test]
+    fn empty_trace_is_a_no_op() {
+        let cfg = BatcherConfig { max_batch: 8, latency_budget: 1 };
+        let mut rec = Recorder::default();
+        let stats = run_trace(&mut rec, &[], &cfg);
+        assert_eq!(stats, DriveStats::default());
+        assert!(rec.widths.is_empty());
+        assert_eq!(stats.mean_batch_width(), 0.0);
+    }
+}

@@ -1,0 +1,59 @@
+//! The sharded online-inference serving layer — the front door the fast
+//! engines were missing.
+//!
+//! Every driver so far assumed a pre-packed offline dataset; the paper's
+//! operating regime is the opposite: single-sample requests arriving one
+//! at a time, with labelled samples interleaved mid-stream ("training can
+//! be interleaved with inference during operation", §1) behind the
+//! modular data-input interface of §3.5. This module serves that regime
+//! without giving up the batch-oriented fast paths:
+//!
+//! - [`MicroBatcher`] coalesces single-sample inference requests into
+//!   up-to-64-wide micro-batches under a latency budget — flush on a full
+//!   64-lane batch or on deadline, whichever comes first — so requests
+//!   reach the sample-sliced kernel (`tm::bitplane`, 64 samples per AND)
+//!   instead of the scalar path. Time is *virtual* (ticks supplied by the
+//!   caller), so every batching decision is deterministic and replayable.
+//! - [`ShardServer`] replicates one [`crate::tm::MultiTm`] across worker
+//!   threads. Labelled samples become sequenced [`crate::tm::ShardUpdate`]
+//!   log entries broadcast to every shard over its FIFO work channel;
+//!   each replica applies them in sequence order through
+//!   `MultiTm::apply_update` (word-parallel `train_step_fast` on
+//!   randomness derived from `(base_seed, seq)`), so all replicas
+//!   converge bit-identically and a micro-batch is scored against
+//!   exactly the updates that arrived before its flush — on whichever
+//!   shard it lands.
+//! - [`ScalarOracle`] is the single-threaded reference: the same update
+//!   log applied to one machine, every response computed by the scalar
+//!   row-major `predict`. The soak driver (`coordinator::soak`) pins the
+//!   server's responses **bit-identical** to the oracle's across shard
+//!   counts, batch widths and mid-stream fault injection
+//!   (`rust/tests/integration_serve.rs`).
+//!
+//! MATADOR (arXiv 2403.10538) and the runtime-tunable eFPGA TM
+//! (arXiv 2502.07823) both make the point that edge TM deployments are
+//! won or lost at this system-integration layer — streaming I/O and
+//! run-time reconfiguration — not in the core datapath.
+
+pub mod batcher;
+pub mod oracle;
+pub mod shard;
+
+use crate::tm::update::UpdateKind;
+
+pub use batcher::{run_trace, BatcherConfig, DriveStats, MicroBatcher, PendingRequest, ServeEvent};
+pub use oracle::ScalarOracle;
+pub use shard::{MicroBatch, ServeConfig, ServeOutcome, ShardServer, ShardStats};
+
+/// Anything that can consume the deterministic event stream produced by
+/// [`run_trace`]: the sharded server and the scalar oracle implement
+/// this, so one driver exercises both and batching decisions can never
+/// drift between the arm under test and its reference.
+pub trait ServeBackend {
+    /// A sequenced model update arrived (labelled sample / fault edit).
+    /// Takes effect before any *later-flushed* micro-batch is scored.
+    fn update(&mut self, kind: UpdateKind);
+    /// A flushed micro-batch of inference requests, scored against the
+    /// model state after every update received so far.
+    fn infer_batch(&mut self, batch: Vec<PendingRequest>);
+}

@@ -1,0 +1,127 @@
+//! The single-threaded serving reference.
+//!
+//! One machine, the same sequenced update log, every response computed
+//! by the scalar row-major [`MultiTm::predict`] at the moment the batch
+//! flushes. Anything the sharded server answers must match this
+//! bit-for-bit — the oracle is deliberately boring so that the
+//! interesting machinery (replica broadcast, micro-batch placement, the
+//! sample-sliced kernel) has a fixed point to be measured against.
+
+use crate::serve::batcher::PendingRequest;
+use crate::serve::ServeBackend;
+use crate::tm::machine::MultiTm;
+use crate::tm::params::TmParams;
+use crate::tm::rng::StepRands;
+use crate::tm::update::{ShardUpdate, UpdateKind};
+
+/// Scalar reference backend for [`crate::serve::run_trace`].
+pub struct ScalarOracle {
+    tm: MultiTm,
+    params: TmParams,
+    base_seed: u64,
+    seq: u64,
+    responses: Vec<(u64, usize)>,
+    /// Update-randomness scratch (allocated on first Learn update).
+    rands: Option<StepRands>,
+}
+
+impl ScalarOracle {
+    /// Must be handed a clone of the same initial machine, the same
+    /// params and the same base seed as the server it checks.
+    pub fn new(tm: MultiTm, params: TmParams, base_seed: u64) -> Self {
+        ScalarOracle { tm, params, base_seed, seq: 0, responses: Vec::new(), rands: None }
+    }
+
+    /// `(request_id, predicted_class)`, sorted by request id — already
+    /// in order by construction: ids are assigned in arrival order and
+    /// batches flush in arrival order on this single-threaded backend.
+    pub fn into_responses(self) -> Vec<(u64, usize)> {
+        debug_assert!(
+            self.responses.windows(2).all(|w| w[0].0 <= w[1].0),
+            "oracle responses must already be id-sorted"
+        );
+        self.responses
+    }
+
+    /// The machine after every update applied so far (for post-trace
+    /// state checks).
+    pub fn machine(&self) -> &MultiTm {
+        &self.tm
+    }
+}
+
+impl ServeBackend for ScalarOracle {
+    fn update(&mut self, kind: UpdateKind) {
+        self.seq += 1;
+        let u = ShardUpdate { seq: self.seq, kind };
+        self.tm.apply_update_with(&u, &self.params, self.base_seed, &mut self.rands);
+    }
+
+    fn infer_batch(&mut self, batch: Vec<PendingRequest>) {
+        for req in batch {
+            let pred = self.tm.predict(&req.input, &self.params);
+            self.responses.push((req.id, pred));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::batcher::{run_trace, BatcherConfig, ServeEvent};
+    use crate::tm::clause::Input;
+    use crate::tm::params::TmShape;
+    use crate::tm::rng::Xoshiro256;
+
+    /// The oracle through the driver equals a hand-rolled sequential
+    /// loop: apply updates as they arrive, predict at flush time.
+    #[test]
+    fn oracle_is_the_sequential_semantics() {
+        let s = TmShape::iris();
+        let p = TmParams::paper_offline(&s);
+        let tm = MultiTm::new(&s).unwrap();
+        let mut rng = Xoshiro256::new(0x0AC1E);
+        let events: Vec<ServeEvent> = (0..60)
+            .map(|i| {
+                let input =
+                    Input::pack(&s, &crate::testkit::gen::bool_vec(&mut rng, s.features, 0.5));
+                if i % 4 == 0 {
+                    ServeEvent::Update {
+                        at_tick: i as u64,
+                        kind: UpdateKind::Learn { input, label: i % 3 },
+                    }
+                } else {
+                    ServeEvent::Infer { at_tick: i as u64, input }
+                }
+            })
+            .collect();
+        let cfg = BatcherConfig { max_batch: 1, latency_budget: 0 };
+        let mut oracle = ScalarOracle::new(tm.clone(), p.clone(), 0xBEE);
+        run_trace(&mut oracle, &events, &cfg);
+        let got = oracle.into_responses();
+
+        // Hand-rolled: with max_batch 1 every request is served at its
+        // arrival point, after all preceding updates.
+        let mut manual = tm.clone();
+        let mut seq = 0u64;
+        let mut id = 0u64;
+        let mut want = Vec::new();
+        for ev in &events {
+            match ev {
+                ServeEvent::Update { kind, .. } => {
+                    seq += 1;
+                    manual.apply_update(
+                        &ShardUpdate { seq, kind: kind.clone() },
+                        &p,
+                        0xBEE,
+                    );
+                }
+                ServeEvent::Infer { input, .. } => {
+                    want.push((id, manual.predict(input, &p)));
+                    id += 1;
+                }
+            }
+        }
+        assert_eq!(got, want);
+    }
+}

@@ -1,0 +1,281 @@
+//! The shard pool: replicated machines behind FIFO work channels.
+//!
+//! Each shard worker owns a full replica of the initial [`MultiTm`] and a
+//! `std::sync::mpsc` receiver. The dispatcher (whoever drives
+//! [`crate::serve::run_trace`]) broadcasts every sequenced
+//! [`ShardUpdate`] to *all* shards and deals flushed micro-batches
+//! round-robin to one shard each. Because each channel is FIFO and
+//! updates are sent before any batch that flushed after them, a replica
+//! has applied exactly the updates with `seq ≤` the batch's flush point
+//! by the time it scores the batch — and since replica updates are
+//! deterministic in `(base_seed, seq)` (`MultiTm::apply_update`) and
+//! `predict_planes` is bit-identical to the row-major path, every
+//! response is independent of shard count, thread scheduling and batch
+//! placement. That is the whole determinism argument; the soak suite
+//! checks it against the scalar oracle rather than trusting it.
+//!
+//! Shutdown is by channel closure: [`ShardServer::finish`] drops the
+//! work senders, workers drain and exit, and the response channel closes
+//! once the last worker clone of its sender is gone — no sentinel
+//! messages, no possibility of a worker outliving the pool.
+
+use crate::serve::batcher::PendingRequest;
+use crate::serve::ServeBackend;
+use crate::tm::bitplane::BitPlanes;
+use crate::tm::clause::Input;
+use crate::tm::machine::MultiTm;
+use crate::tm::params::TmParams;
+use crate::tm::update::{ShardUpdate, UpdateKind};
+use anyhow::{anyhow, ensure, Result};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+/// A flushed micro-batch: request ids plus their packed inputs. The
+/// bitplane transpose happens on the scoring shard (it is a pure
+/// function of the batch, so placement cannot affect results), keeping
+/// the dispatcher thread off the critical path — consecutive batches'
+/// transposes overlap across shards.
+#[derive(Debug)]
+pub struct MicroBatch {
+    pub ids: Vec<u64>,
+    pub inputs: Vec<Input>,
+}
+
+/// Shard-pool configuration.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Worker replicas (≥ 1).
+    pub shards: usize,
+    /// Run-time parameters every replica serves and learns under.
+    pub params: TmParams,
+    /// Base seed of the replica update log's derived randomness.
+    pub base_seed: u64,
+}
+
+/// Per-shard work counters, reported by [`ShardServer::finish`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardStats {
+    pub shard: usize,
+    /// Sequenced updates applied by this replica (same on every shard).
+    pub updates: u64,
+    /// Micro-batches this shard scored.
+    pub batches: u64,
+    /// Inference samples this shard scored.
+    pub samples: u64,
+}
+
+/// What one drive through the server produced.
+#[derive(Debug)]
+pub struct ServeOutcome {
+    /// `(request_id, predicted_class)`, sorted by request id.
+    pub responses: Vec<(u64, usize)>,
+    /// Per-shard work counters, in shard order.
+    pub shards: Vec<ShardStats>,
+    /// Updates broadcast over the pool's lifetime.
+    pub updates: u64,
+}
+
+enum Work {
+    /// Shared, not cloned: the dispatcher is the serialization point of
+    /// the serving loop, so a broadcast costs one refcount bump per
+    /// shard instead of a deep copy of the update's packed input.
+    Update(Arc<ShardUpdate>),
+    Batch(MicroBatch),
+}
+
+/// Work-queue depth per shard. Bounded so a dispatcher outrunning its
+/// shards blocks (backpressure) instead of buffering the whole trace in
+/// channel memory; deep enough that the bound is never felt at sane
+/// batch sizes. Deadlock-free by construction: workers drain their
+/// queue unconditionally and only ever send on the *unbounded* response
+/// channel, so a blocked dispatcher always unblocks.
+const WORK_QUEUE_DEPTH: usize = 1024;
+
+/// The running shard pool. Feed it through the [`ServeBackend`] trait
+/// (usually via [`crate::serve::run_trace`]), then call
+/// [`ShardServer::finish`] to join the workers and collect responses
+/// (responses accumulate until then — drain per-trace, not per-epoch).
+pub struct ShardServer {
+    senders: Vec<mpsc::SyncSender<Work>>,
+    handles: Vec<JoinHandle<ShardStats>>,
+    results: mpsc::Receiver<(Vec<u64>, Vec<usize>)>,
+    next_shard: usize,
+    seq: u64,
+}
+
+impl ShardServer {
+    /// Spawn `cfg.shards` workers, each owning a clone of `tm`.
+    pub fn new(tm: &MultiTm, cfg: &ServeConfig) -> Result<Self> {
+        ensure!(cfg.shards >= 1, "ServeConfig: shards must be >= 1, got {}", cfg.shards);
+        cfg.params.validate(tm.shape())?;
+        let (res_tx, res_rx) = mpsc::channel();
+        let mut senders = Vec::with_capacity(cfg.shards);
+        let mut handles = Vec::with_capacity(cfg.shards);
+        for shard in 0..cfg.shards {
+            let (tx, rx) = mpsc::sync_channel::<Work>(WORK_QUEUE_DEPTH);
+            let mut replica = tm.clone();
+            let params = cfg.params.clone();
+            let base_seed = cfg.base_seed;
+            let out = res_tx.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut stats = ShardStats { shard, updates: 0, batches: 0, samples: 0 };
+                // Per-worker randomness scratch: refilled per update,
+                // allocated once (see MultiTm::apply_update_with).
+                let mut rands = None;
+                while let Ok(work) = rx.recv() {
+                    match work {
+                        Work::Update(u) => {
+                            replica.apply_update_with(&u, &params, base_seed, &mut rands);
+                            stats.updates += 1;
+                        }
+                        Work::Batch(b) => {
+                            let planes =
+                                BitPlanes::from_inputs(replica.shape(), &b.inputs);
+                            let preds = replica.predict_planes(&planes, &params);
+                            stats.batches += 1;
+                            stats.samples += preds.len() as u64;
+                            // One message per scored batch (not per
+                            // sample) keeps channel overhead off the
+                            // timed serving hot path. Receiver only
+                            // drops after join: the send can't fail
+                            // while we run.
+                            let _ = out.send((b.ids, preds));
+                        }
+                    }
+                }
+                stats
+            }));
+            senders.push(tx);
+        }
+        // Only worker clones of the response sender remain: the channel
+        // closes exactly when the last worker exits.
+        drop(res_tx);
+        Ok(ShardServer { senders, handles, results: res_rx, next_shard: 0, seq: 0 })
+    }
+
+    /// Close the work channels, join every worker and collect all
+    /// responses, sorted by request id.
+    pub fn finish(self) -> Result<ServeOutcome> {
+        let ShardServer { senders, handles, results, seq, .. } = self;
+        drop(senders);
+        let mut shards = Vec::with_capacity(handles.len());
+        for h in handles {
+            shards.push(h.join().map_err(|_| anyhow!("serve shard worker panicked"))?);
+        }
+        // All response senders are gone: this drains and terminates.
+        let mut responses: Vec<(u64, usize)> = Vec::new();
+        for (ids, preds) in results.iter() {
+            responses.extend(ids.into_iter().zip(preds));
+        }
+        responses.sort_unstable_by_key(|&(id, _)| id);
+        Ok(ServeOutcome { responses, shards, updates: seq })
+    }
+}
+
+impl ServeBackend for ShardServer {
+    fn update(&mut self, kind: UpdateKind) {
+        self.seq += 1;
+        let update = Arc::new(ShardUpdate { seq: self.seq, kind });
+        for tx in &self.senders {
+            let _ = tx.send(Work::Update(update.clone()));
+        }
+    }
+
+    fn infer_batch(&mut self, batch: Vec<PendingRequest>) {
+        if batch.is_empty() {
+            return;
+        }
+        let ids: Vec<u64> = batch.iter().map(|r| r.id).collect();
+        let inputs: Vec<Input> = batch.into_iter().map(|r| r.input).collect();
+        let _ = self.senders[self.next_shard].send(Work::Batch(MicroBatch { ids, inputs }));
+        self.next_shard = (self.next_shard + 1) % self.senders.len();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tm::params::TmShape;
+    use crate::tm::rng::Xoshiro256;
+
+    fn shape() -> TmShape {
+        TmShape::iris()
+    }
+
+    fn random_input(rng: &mut Xoshiro256, s: &TmShape) -> Input {
+        Input::pack(s, &crate::testkit::gen::bool_vec(rng, s.features, 0.5))
+    }
+
+    #[test]
+    fn rejects_zero_shards_and_bad_params() {
+        let s = shape();
+        let tm = MultiTm::new(&s).unwrap();
+        let mut cfg = ServeConfig {
+            shards: 0,
+            params: TmParams::paper_offline(&s),
+            base_seed: 1,
+        };
+        assert!(ShardServer::new(&tm, &cfg).is_err());
+        cfg.shards = 1;
+        cfg.params.active_clauses = 7; // odd: invalid
+        assert!(ShardServer::new(&tm, &cfg).is_err());
+    }
+
+    #[test]
+    fn responses_cover_every_request_exactly_once() {
+        let s = shape();
+        let p = TmParams::paper_offline(&s);
+        let mut rng = Xoshiro256::new(0x51AB);
+        let states: Vec<u32> =
+            (0..s.num_tas()).map(|_| rng.next_below(2 * s.states as usize) as u32).collect();
+        let tm = MultiTm::from_states(&s, states).unwrap();
+        let cfg = ServeConfig { shards: 3, params: p.clone(), base_seed: 9 };
+        let mut server = ShardServer::new(&tm, &cfg).unwrap();
+        let mut scalar = tm.clone();
+        let mut expected = Vec::new();
+        let mut id = 0u64;
+        for round in 0..12 {
+            let batch: Vec<PendingRequest> = (0..(round % 5) + 1)
+                .map(|_| {
+                    let input = random_input(&mut rng, &s);
+                    expected.push((id, scalar.predict(&input, &p)));
+                    let req = PendingRequest { id, input };
+                    id += 1;
+                    req
+                })
+                .collect();
+            server.infer_batch(batch);
+        }
+        server.infer_batch(Vec::new()); // empty batches are dropped
+        let out = server.finish().unwrap();
+        assert_eq!(out.responses, expected);
+        assert_eq!(out.updates, 0);
+        let scored: u64 = out.shards.iter().map(|st| st.samples).sum();
+        assert_eq!(scored, id);
+        let batches: u64 = out.shards.iter().map(|st| st.batches).sum();
+        assert_eq!(batches, 12, "empty batch was not dispatched");
+    }
+
+    #[test]
+    fn updates_reach_every_shard() {
+        let s = shape();
+        let p = TmParams::paper_offline(&s);
+        let tm = MultiTm::new(&s).unwrap();
+        let cfg = ServeConfig { shards: 4, params: p, base_seed: 2 };
+        let mut server = ShardServer::new(&tm, &cfg).unwrap();
+        let mut rng = Xoshiro256::new(1);
+        for i in 0..10 {
+            server.update(UpdateKind::Learn {
+                input: random_input(&mut rng, &s),
+                label: i % 3,
+            });
+        }
+        let out = server.finish().unwrap();
+        assert_eq!(out.updates, 10);
+        assert_eq!(out.shards.len(), 4);
+        for st in &out.shards {
+            assert_eq!(st.updates, 10, "shard {} missed a broadcast", st.shard);
+        }
+    }
+}

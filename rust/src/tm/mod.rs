@@ -27,6 +27,7 @@ pub mod params;
 pub mod rescore;
 pub mod rng;
 pub mod state;
+pub mod update;
 
 pub use automaton::TaBlock;
 pub use bitplane::{BitPlanes, PlaneBatch};
@@ -38,3 +39,4 @@ pub use machine::{argmax_class, MultiTm};
 pub use params::{polarity, word_mask, TmParams, TmShape};
 pub use rescore::{RescoreCache, RescoreStats};
 pub use rng::{BernoulliPlan, StepRands, Xoshiro256};
+pub use update::{ShardUpdate, UpdateKind};

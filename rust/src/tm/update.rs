@@ -1,0 +1,262 @@
+//! The sequenced online-update log shared by the serving layer's shard
+//! replicas (`crate::serve`) and its scalar oracle.
+//!
+//! The paper's operating mode interleaves training with inference during
+//! operation; the serving layer replicates one [`MultiTm`] across shard
+//! workers and must keep every replica **bit-identical** without any
+//! cross-thread state sharing. The contract here makes that trivial:
+//! an update is a [`ShardUpdate`] — a monotone sequence number plus what
+//! happened (a labelled sample, or a clause-output fault edit) — and
+//! *all* randomness a `Learn` update consumes is derived from
+//! `(base_seed, seq)` alone ([`update_rands`]). Replicas that apply the
+//! same log in sequence order therefore converge to the same TA states,
+//! action caches and mutation-clock observable behaviour as the scalar
+//! oracle fed the same log, regardless of which thread applies it or
+//! when (`train_step_fast` is deterministic given its [`StepRands`]).
+//!
+//! This is the software form of the paper's §3.5 online data manager
+//! feeding TM management: arrival order *is* the log order, and the log
+//! is the only channel through which serving-time learning mutates a
+//! model.
+
+use crate::tm::clause::Input;
+use crate::tm::engine::train_step_fast;
+use crate::tm::feedback::StepActivity;
+use crate::tm::machine::MultiTm;
+use crate::tm::params::{TmParams, TmShape};
+use crate::tm::rng::{StepRands, Xoshiro256};
+
+/// What one sequenced update does to a replica.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum UpdateKind {
+    /// A labelled sample arriving mid-stream: one online training step
+    /// through the word-parallel engine.
+    Learn { input: Input, label: usize },
+    /// A clause-output fault edit (§7 fault injection) arriving over the
+    /// same sequenced channel, so fault campaigns replay deterministically
+    /// against serving traffic; `None` clears the gate.
+    ClauseFault { class: usize, clause: usize, force: Option<bool> },
+}
+
+/// One entry of the replica update log: a sequence number (1-based,
+/// assigned in arrival order by whoever owns the log) plus the update.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardUpdate {
+    pub seq: u64,
+    pub kind: UpdateKind,
+}
+
+/// The eager step randomness of update `seq` under `base_seed` — a fresh
+/// splitmix-seeded generator per update, so randomness depends only on
+/// `(base_seed, seq)` and never on which replica draws it or how many
+/// updates it applied before.
+pub fn update_rands(shape: &TmShape, base_seed: u64, seq: u64) -> StepRands {
+    let mut rng = Xoshiro256::new(update_seed(base_seed, seq));
+    StepRands::draw(&mut rng, shape)
+}
+
+/// Refill a pre-allocated record with update `seq`'s randomness — the
+/// allocation-free hot-path twin of [`update_rands`], producing
+/// bit-identical draws (`StepRands::draw` is exactly a zeroed allocation
+/// plus this refill).
+pub fn update_rands_into(rands: &mut StepRands, shape: &TmShape, base_seed: u64, seq: u64) {
+    let mut rng = Xoshiro256::new(update_seed(base_seed, seq));
+    rands.refill(&mut rng, shape);
+}
+
+/// Golden-ratio spread keeps distinct (base_seed, seq) pairs from
+/// colliding before Xoshiro256::new's splitmix mixing.
+#[inline]
+fn update_seed(base_seed: u64, seq: u64) -> u64 {
+    base_seed ^ seq.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+impl MultiTm {
+    /// Apply one sequenced update to this replica. `Learn` runs a
+    /// [`train_step_fast`] step on randomness derived from
+    /// `(base_seed, update.seq)` and returns its activity; fault edits
+    /// return `None`. Applying the same log in sequence order with the
+    /// same `base_seed` and `params` leaves any two replicas of the same
+    /// initial machine bit-identical.
+    pub fn apply_update(
+        &mut self,
+        update: &ShardUpdate,
+        params: &TmParams,
+        base_seed: u64,
+    ) -> Option<StepActivity> {
+        self.apply_update_with(update, params, base_seed, &mut None)
+    }
+
+    /// [`MultiTm::apply_update`] with a caller-owned randomness scratch:
+    /// the record is allocated on first use and refilled per update
+    /// thereafter ([`update_rands_into`]), so long-lived appliers — the
+    /// shard workers and the serving oracle — pay zero steady-state
+    /// allocation. Bit-identical to the allocating path.
+    pub fn apply_update_with(
+        &mut self,
+        update: &ShardUpdate,
+        params: &TmParams,
+        base_seed: u64,
+        scratch: &mut Option<StepRands>,
+    ) -> Option<StepActivity> {
+        match &update.kind {
+            UpdateKind::Learn { input, label } => {
+                let shape = self.shape().clone();
+                match scratch {
+                    Some(r) => update_rands_into(r, &shape, base_seed, update.seq),
+                    None => *scratch = Some(update_rands(&shape, base_seed, update.seq)),
+                }
+                let rands = scratch.as_ref().expect("scratch was just filled");
+                Some(train_step_fast(self, input, *label, params, rands))
+            }
+            UpdateKind::ClauseFault { class, clause, force } => {
+                self.set_clause_fault(*class, *clause, *force);
+                None
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tm::clause::EvalMode;
+
+    fn shape() -> TmShape {
+        TmShape::iris()
+    }
+
+    fn random_log(n: usize, seed: u64) -> Vec<ShardUpdate> {
+        let s = shape();
+        let mut rng = Xoshiro256::new(seed);
+        (0..n)
+            .map(|i| {
+                let kind = if rng.next_f32() < 0.9 {
+                    let bits = crate::testkit::gen::bool_vec(&mut rng, s.features, 0.5);
+                    UpdateKind::Learn {
+                        input: Input::pack(&s, &bits),
+                        label: rng.next_below(s.classes),
+                    }
+                } else {
+                    UpdateKind::ClauseFault {
+                        class: rng.next_below(s.classes),
+                        clause: rng.next_below(s.max_clauses),
+                        force: [None, Some(false), Some(true)][rng.next_below(3)],
+                    }
+                };
+                ShardUpdate { seq: (i + 1) as u64, kind }
+            })
+            .collect()
+    }
+
+    /// Replicas fed the same log converge bit-identically, even when one
+    /// of them interleaves (read-only) inference between updates.
+    #[test]
+    fn same_log_converges_replicas() {
+        let s = shape();
+        let p = TmParams::paper_offline(&s);
+        let base = MultiTm::new(&s).unwrap();
+        let log = random_log(120, 0xA11CE);
+        let mut a = base.clone();
+        let mut b = base.clone();
+        let mut rng = Xoshiro256::new(7);
+        let probe =
+            Input::pack(&s, &crate::testkit::gen::bool_vec(&mut rng, s.features, 0.5));
+        for u in &log {
+            a.apply_update(u, &p, 0xBA5E);
+            b.apply_update(u, &p, 0xBA5E);
+            // Replica b also serves inference mid-log; this must not
+            // perturb convergence (evaluate only touches scratch).
+            b.evaluate(&probe, &p, EvalMode::Infer);
+        }
+        assert_eq!(a.ta().states(), b.ta().states());
+        for c in 0..s.classes {
+            for j in 0..s.max_clauses {
+                assert_eq!(a.action_words(c, j), b.action_words(c, j));
+                assert_eq!(a.clause_fault(c, j), b.clause_fault(c, j));
+            }
+        }
+    }
+
+    /// The scratch path is bit-identical to the allocating path along a
+    /// whole log, and fills its scratch on first use.
+    #[test]
+    fn scratch_path_matches_allocating_path() {
+        let s = shape();
+        let p = TmParams::paper_offline(&s);
+        let base = MultiTm::new(&s).unwrap();
+        let log = random_log(80, 0x5CAC);
+        let mut plain = base.clone();
+        let mut scratched = base.clone();
+        let mut scratch = None;
+        for u in &log {
+            let a = plain.apply_update(u, &p, 0x11);
+            let b = scratched.apply_update_with(u, &p, 0x11, &mut scratch);
+            assert_eq!(a, b, "seq {}", u.seq);
+        }
+        assert_eq!(plain.ta().states(), scratched.ta().states());
+        assert!(scratch.is_some(), "a Learn update must have filled the scratch");
+    }
+
+    /// Update randomness depends on (base_seed, seq) only: the same
+    /// update applied by two fresh machines moves them identically, and
+    /// a different base seed or seq moves them differently.
+    #[test]
+    fn learn_randomness_is_keyed_by_seed_and_seq() {
+        let s = shape();
+        let a = update_rands(&s, 1, 5);
+        let b = update_rands(&s, 1, 5);
+        assert_eq!(a.clause_rand, b.clause_rand);
+        assert_eq!(a.ta_rand, b.ta_rand);
+        assert_eq!(a.neg_class_draw, b.neg_class_draw);
+        let c = update_rands(&s, 2, 5);
+        let d = update_rands(&s, 1, 6);
+        assert_ne!(a.ta_rand, c.ta_rand);
+        assert_ne!(a.ta_rand, d.ta_rand);
+    }
+
+    /// Learn updates are exactly a train_step_fast on the derived draws.
+    #[test]
+    fn learn_update_is_train_step_fast() {
+        let s = shape();
+        let p = TmParams::paper_offline(&s);
+        let mut via_update = MultiTm::new(&s).unwrap();
+        let mut manual = MultiTm::new(&s).unwrap();
+        let mut rng = Xoshiro256::new(3);
+        for seq in 1..=60u64 {
+            let x = Input::pack(&s, &crate::testkit::gen::bool_vec(&mut rng, s.features, 0.5));
+            let y = (seq % 3) as usize;
+            let u = ShardUpdate {
+                seq,
+                kind: UpdateKind::Learn { input: x.clone(), label: y },
+            };
+            let act = via_update.apply_update(&u, &p, 0xF00D).unwrap();
+            let rands = update_rands(&s, 0xF00D, seq);
+            let act2 = train_step_fast(&mut manual, &x, y, &p, &rands);
+            assert_eq!(act, act2, "seq {seq}");
+            assert_eq!(via_update.ta().states(), manual.ta().states(), "seq {seq}");
+        }
+    }
+
+    /// Fault updates program the clause-output gate and return no
+    /// activity.
+    #[test]
+    fn fault_update_programs_gate() {
+        let s = shape();
+        let p = TmParams::paper_offline(&s);
+        let mut tm = MultiTm::new(&s).unwrap();
+        let u = ShardUpdate {
+            seq: 1,
+            kind: UpdateKind::ClauseFault { class: 1, clause: 2, force: Some(true) },
+        };
+        assert!(tm.apply_update(&u, &p, 0).is_none());
+        assert_eq!(tm.clause_fault(1, 2), Some(true));
+        let clear = ShardUpdate {
+            seq: 2,
+            kind: UpdateKind::ClauseFault { class: 1, clause: 2, force: None },
+        };
+        tm.apply_update(&clear, &p, 0);
+        assert_eq!(tm.clause_fault(1, 2), None);
+        assert_eq!(tm.clause_fault_count(), 0);
+    }
+}

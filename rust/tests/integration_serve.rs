@@ -1,0 +1,297 @@
+//! Differential soak suite for the sharded serving layer (`serve/`):
+//! randomized arrival traces with interleaved labelled/unlabelled
+//! samples, shard counts 1/2/4, flush-deadline edge cases (batch widths
+//! 1 and 64), mid-stream fault injection — every server response pinned
+//! **bit-identical** to the scalar `MultiTm` oracle fed the same
+//! sequence, and identical across shard counts.
+
+use tm_fpga::coordinator::{run_soak, SoakConfig};
+use tm_fpga::serve::{
+    run_trace, BatcherConfig, ScalarOracle, ServeConfig, ServeEvent, ShardServer,
+};
+use tm_fpga::tm::{Input, MultiTm, TmParams, TmShape, UpdateKind, Xoshiro256};
+
+fn shape() -> TmShape {
+    TmShape::iris()
+}
+
+fn random_input(rng: &mut Xoshiro256, s: &TmShape) -> Input {
+    Input::pack(s, &tm_fpga::testkit::gen::bool_vec(rng, s.features, 0.5))
+}
+
+/// Random machine with realistic include density.
+fn random_machine(s: &TmShape, seed: u64) -> MultiTm {
+    let mut rng = Xoshiro256::new(seed);
+    let states: Vec<u32> =
+        (0..s.num_tas()).map(|_| rng.next_below(2 * s.states as usize) as u32).collect();
+    MultiTm::from_states(s, states).unwrap()
+}
+
+/// Drive `events` through a sharded server and the scalar oracle with
+/// the same batching config; assert bit-identical responses and return
+/// them.
+fn differential(
+    tm: &MultiTm,
+    params: &TmParams,
+    events: &[ServeEvent],
+    shards: usize,
+    bcfg: &BatcherConfig,
+    base_seed: u64,
+) -> Vec<(u64, usize)> {
+    let scfg = ServeConfig { shards, params: params.clone(), base_seed };
+    let mut server = ShardServer::new(tm, &scfg).unwrap();
+    let drive = run_trace(&mut server, events, bcfg);
+    let outcome = server.finish().unwrap();
+
+    let mut oracle = ScalarOracle::new(tm.clone(), params.clone(), base_seed);
+    let drive2 = run_trace(&mut oracle, events, bcfg);
+    assert_eq!(drive, drive2, "batching decisions must not depend on the backend");
+    let expected = oracle.into_responses();
+
+    assert_eq!(
+        outcome.responses, expected,
+        "{shards}-shard responses diverged from the scalar oracle"
+    );
+    assert_eq!(outcome.responses.len() as u64, drive.infer_requests);
+    let scored: u64 = outcome.shards.iter().map(|s| s.samples).sum();
+    assert_eq!(scored, drive.infer_requests, "every request scored exactly once");
+    for st in &outcome.shards {
+        assert_eq!(st.updates, drive.updates, "shard {} missed an update", st.shard);
+    }
+    outcome.responses
+}
+
+/// The headline acceptance: randomized interleaved traces agree with
+/// the oracle on shard counts 1, 2 and 4, and the responses are
+/// identical across shard counts (placement-independent).
+#[test]
+fn soak_bit_identical_across_shard_counts() {
+    for (trial, seed) in [0xA0u64, 0xB1, 0xC2].into_iter().enumerate() {
+        let cfg = SoakConfig {
+            events: 500,
+            warmup_epochs: 2,
+            labelled_fraction: 0.25,
+            mean_gap: [0.0, 1.0, 3.0][trial],
+            latency_budget: [1, 4, 16][trial],
+            seed,
+            ..Default::default()
+        };
+        let mut per_shard_responses = Vec::new();
+        for shards in [1usize, 2, 4] {
+            let rep = run_soak(&SoakConfig { shards, ..cfg.clone() }).unwrap();
+            assert!(
+                rep.agrees(),
+                "trial {trial} shards {shards}: {} mismatches",
+                rep.mismatches
+            );
+            assert!(rep.drive.updates > 0, "trace must interleave labelled samples");
+            assert!(rep.drive.infer_requests > 0);
+            assert_eq!(rep.responses.len() as u64, rep.drive.infer_requests);
+            per_shard_responses.push(rep.responses);
+        }
+        assert_eq!(
+            per_shard_responses[0], per_shard_responses[1],
+            "trial {trial}: 1-shard vs 2-shard responses"
+        );
+        assert_eq!(
+            per_shard_responses[1], per_shard_responses[2],
+            "trial {trial}: 2-shard vs 4-shard responses"
+        );
+    }
+}
+
+/// Batch width 1: coalescing disabled, every request flushes alone.
+#[test]
+fn batch_width_one_is_request_at_a_time() {
+    let cfg = SoakConfig {
+        shards: 2,
+        events: 300,
+        max_batch: 1,
+        labelled_fraction: 0.2,
+        warmup_epochs: 2,
+        ..Default::default()
+    };
+    let rep = run_soak(&cfg).unwrap();
+    assert!(rep.agrees(), "{} mismatches", rep.mismatches);
+    assert_eq!(rep.drive.batches, rep.drive.infer_requests);
+    assert_eq!(rep.drive.full_flushes, rep.drive.infer_requests);
+    assert_eq!(rep.drive.deadline_flushes, 0);
+    assert_eq!(rep.drive.mean_batch_width(), 1.0);
+}
+
+/// Batch width 64: a pure burst of unlabelled requests packs full
+/// 64-wide lanes exactly (640 requests = ten 64-wide batches, no tail).
+#[test]
+fn burst_fills_full_64_wide_batches() {
+    let cfg = SoakConfig {
+        shards: 4,
+        events: 640,
+        max_batch: 64,
+        latency_budget: 1,
+        labelled_fraction: 0.0,
+        mean_gap: 0.0,
+        warmup_epochs: 2,
+        ..Default::default()
+    };
+    let rep = run_soak(&cfg).unwrap();
+    assert!(rep.agrees(), "{} mismatches", rep.mismatches);
+    assert_eq!(rep.drive.infer_requests, 640);
+    assert_eq!(rep.drive.batches, 10);
+    assert_eq!(rep.drive.full_flushes, 10);
+    assert_eq!(rep.drive.deadline_flushes, 0);
+    assert_eq!(rep.drive.final_flushes, 0);
+    assert_eq!(rep.drive.mean_batch_width(), 64.0);
+    // Round-robin dealt 10 batches over 4 shards: 3/3/2/2.
+    let mut per_shard: Vec<u64> = rep.shards.iter().map(|s| s.batches).collect();
+    per_shard.sort_unstable();
+    assert_eq!(per_shard, vec![2, 2, 3, 3]);
+}
+
+/// Deadline flushes dominate under sparse arrivals with a tight budget;
+/// a huge budget never deadline-flushes.
+#[test]
+fn deadline_edge_cases() {
+    let base = SoakConfig {
+        shards: 2,
+        events: 400,
+        labelled_fraction: 0.0,
+        warmup_epochs: 2,
+        ..Default::default()
+    };
+    // Tight budget, sparse arrivals: no batch survives past its arrival
+    // tick, so nothing coalesces across ticks.
+    let tight = run_soak(&SoakConfig {
+        latency_budget: 0,
+        mean_gap: 2.0,
+        ..base.clone()
+    })
+    .unwrap();
+    assert!(tight.agrees());
+    assert!(
+        tight.drive.deadline_flushes > 0,
+        "sparse arrivals under budget 0 must deadline-flush"
+    );
+    // Unbounded budget: only full and final flushes exist.
+    let loose = run_soak(&SoakConfig {
+        latency_budget: u64::MAX,
+        mean_gap: 2.0,
+        ..base
+    })
+    .unwrap();
+    assert!(loose.agrees());
+    assert_eq!(loose.drive.deadline_flushes, 0);
+    assert_eq!(loose.drive.final_flushes, 1);
+    assert_eq!(
+        loose.drive.full_flushes,
+        loose.drive.infer_requests / 64,
+        "every non-tail batch fills to 64"
+    );
+}
+
+/// Mid-stream fault injection: clause-output force edits ride the same
+/// sequenced update channel as labelled samples, and the sharded
+/// responses stay bit-identical to the oracle through the campaign.
+#[test]
+fn mid_stream_fault_injection_stays_bit_identical() {
+    let s = shape();
+    let p = TmParams::paper_offline(&s);
+    let tm = random_machine(&s, 0xFA01);
+    let mut rng = Xoshiro256::new(0xFA02);
+    let mut events = Vec::new();
+    let mut tick = 0u64;
+    for i in 0..400usize {
+        tick += (i % 3 == 0) as u64;
+        if i % 37 == 5 {
+            // Mid-stream fault campaign. The rotation exercises all
+            // three gate states; the Some(true) edit pins *positive*
+            // clause (2, 0) high, so class 2 carries a standing +1 vote
+            // the fault-free control lacks — predictions provably move.
+            let (class, clause, force) = match (i / 37) % 3 {
+                0 => (2, 0, Some(true)),
+                1 => (0, 3, Some(false)),
+                _ => (1, 6, None),
+            };
+            events.push(ServeEvent::Update {
+                at_tick: tick,
+                kind: UpdateKind::ClauseFault { class, clause, force },
+            });
+        } else if i % 5 == 0 {
+            events.push(ServeEvent::Update {
+                at_tick: tick,
+                kind: UpdateKind::Learn {
+                    input: random_input(&mut rng, &s),
+                    label: i % s.classes,
+                },
+            });
+        } else {
+            events.push(ServeEvent::Infer { at_tick: tick, input: random_input(&mut rng, &s) });
+        }
+    }
+    let bcfg = BatcherConfig { max_batch: 32, latency_budget: 2 };
+    let with_faults = differential(&tm, &p, &events, 4, &bcfg, 0xF411);
+    assert!(!with_faults.is_empty());
+
+    // Same trace with the fault edits stripped, as a control: the
+    // campaign must actually have moved some predictions (forced clause
+    // outputs shift votes), otherwise the test proves nothing.
+    let stripped: Vec<ServeEvent> = events
+        .iter()
+        .filter(|e| {
+            !matches!(e, ServeEvent::Update { kind: UpdateKind::ClauseFault { .. }, .. })
+        })
+        .cloned()
+        .collect();
+    let control = differential(&tm, &p, &stripped, 4, &bcfg, 0xF411);
+    assert_eq!(control.len(), with_faults.len(), "same inference requests either way");
+    assert_ne!(
+        with_faults, control,
+        "the fault campaign must actually move some predictions, or the \
+         differential above proved nothing about fault handling"
+    );
+}
+
+/// The whole soak is a pure function of its config: two runs produce
+/// identical responses, flush breakdowns and shard assignments.
+#[test]
+fn soak_is_deterministic_across_runs() {
+    let cfg = SoakConfig { events: 350, warmup_epochs: 2, shards: 3, ..Default::default() };
+    let a = run_soak(&cfg).unwrap();
+    let b = run_soak(&cfg).unwrap();
+    assert!(a.agrees() && b.agrees());
+    assert_eq!(a.responses, b.responses);
+    assert_eq!(a.drive, b.drive);
+    let widths_a: Vec<_> = a.shards.iter().map(|s| (s.batches, s.samples)).collect();
+    let widths_b: Vec<_> = b.shards.iter().map(|s| (s.batches, s.samples)).collect();
+    assert_eq!(widths_a, widths_b, "round-robin placement is deterministic");
+}
+
+/// Degenerate traffic mixes: all-labelled traces answer nothing (pure
+/// online training), all-unlabelled traces update nothing — both agree
+/// with the oracle and terminate cleanly.
+#[test]
+fn degenerate_traffic_mixes() {
+    let all_updates = run_soak(&SoakConfig {
+        events: 200,
+        labelled_fraction: 1.0,
+        warmup_epochs: 1,
+        shards: 4,
+        ..Default::default()
+    })
+    .unwrap();
+    assert!(all_updates.agrees());
+    assert_eq!(all_updates.drive.infer_requests, 0);
+    assert_eq!(all_updates.drive.updates, 200);
+    assert!(all_updates.responses.is_empty());
+
+    let all_infer = run_soak(&SoakConfig {
+        events: 200,
+        labelled_fraction: 0.0,
+        warmup_epochs: 1,
+        shards: 4,
+        ..Default::default()
+    })
+    .unwrap();
+    assert!(all_infer.agrees());
+    assert_eq!(all_infer.drive.updates, 0);
+    assert_eq!(all_infer.responses.len(), 200);
+}
