@@ -39,6 +39,26 @@ fn main() {
     if args.first().map(String::as_str) == Some("--validate") {
         std::process::exit(harness::validate_main(&args[1..]));
     }
+    // `-- --write-stub <note> <perf_row name>...` authors a zeroed,
+    // schema-valid BENCH_<n>.json through the real renderer — the
+    // committed-stub path for toolchain-less environments.
+    if args.first().map(String::as_str) == Some("--write-stub") {
+        if args.len() < 2 {
+            eprintln!("usage: -- --write-stub <meta note> [perf_row name]...");
+            std::process::exit(2);
+        }
+        let root = std::env::var("CARGO_MANIFEST_DIR").unwrap_or_else(|_| ".".into());
+        match harness::write_zero_stub(&root, &args[1], &args[2..]) {
+            Ok(path) => {
+                println!("wrote {path}");
+                std::process::exit(0);
+            }
+            Err(e) => {
+                eprintln!("failed to write stub: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
 
     println!("=== §6 performance table ===\n");
     let iters = std::env::var("PERF_ITERS")
@@ -107,6 +127,24 @@ fn main() {
         inc_rs,
         cold_rs,
         dirty
+    );
+
+    // The ISSUE-5 acceptance comparison: converged-phase training epochs
+    // through the per-step lazy engine vs the lane-speculative trainer
+    // (64 samples per clause AND, mid-lane flip repair), bit-identity
+    // asserted inside the driver. The floor applies to the converged
+    // phase, where the T-threshold has made flips per lane rare; the
+    // printed mean flips/lane is the regime check.
+    let (train_per_step, train_lane, train_flips) =
+        perf::train_lane_comparison(1024, (iters / 10).max(2));
+    println!(
+        "lane-speculative training vs per-step engine (converged epochs, \
+         4×32-clause×128-literal shape, 1k rows): {:.1}× ({:.0} vs {:.0} \
+         steps/s; mean flips/lane {:.2}) — PR-5 acceptance floor: 3×",
+        train_lane / train_per_step,
+        train_lane,
+        train_per_step,
+        train_flips
     );
 
     // The ISSUE-4 acceptance comparison: request-at-a-time serving
@@ -316,6 +354,22 @@ fn main() {
         name: "perf_row: online-monitor re-scores/s 1k batch (incremental dirty-clause)"
             .into(),
         mean_s: if inc_rs > 0.0 { 1.0 / inc_rs } else { 0.0 },
+        min_s: 0.0,
+        max_s: 0.0,
+        reps: iters,
+        items_per_rep: 1,
+    });
+    json_rows.push(harness::BenchResult {
+        name: "perf_row: train steps/s converged epoch (per-step lazy engine)".into(),
+        mean_s: if train_per_step > 0.0 { 1.0 / train_per_step } else { 0.0 },
+        min_s: 0.0,
+        max_s: 0.0,
+        reps: iters,
+        items_per_rep: 1,
+    });
+    json_rows.push(harness::BenchResult {
+        name: "perf_row: train steps/s converged epoch (lane-speculative)".into(),
+        mean_s: if train_lane > 0.0 { 1.0 / train_lane } else { 0.0 },
         min_s: 0.0,
         max_s: 0.0,
         reps: iters,

@@ -10,13 +10,13 @@
 //! (§5.3.2: "additional clauses can be enabled for this retraining to
 //! further mitigate the effect of faulty TAs").
 
-use crate::tm::bitplane::PlaneBatch;
+use crate::tm::bitplane::{BitPlanes, PlaneBatch};
 use crate::tm::clause::Input;
-use crate::tm::engine::train_step_fast;
 use crate::tm::machine::MultiTm;
 use crate::tm::params::TmParams;
 use crate::tm::rescore::{RescoreCache, RescoreStats};
-use crate::tm::rng::{StepRands, Xoshiro256};
+use crate::tm::rng::Xoshiro256;
+use crate::tm::train_planes::{train_rows_seq, TrainScratch};
 use anyhow::{ensure, Result};
 
 /// Cumulative (EWMA) accuracy estimate from spot checks.
@@ -99,17 +99,18 @@ pub fn monitor_and_retrain(
         {
             triggered = true;
             estimate_at_trigger = monitor.estimate();
-            // On-chip retrain with over-provisioned clauses enabled.
+            // On-chip retrain with over-provisioned clauses enabled,
+            // through the lane-speculative engine: one transpose of the
+            // retrain set, reused across every epoch — bit-identical to
+            // the historical per-step refill + train_step_fast loop.
             params.active_clauses =
                 policy.retrain_clauses.min(tm.shape().max_clauses);
             let shape = tm.shape().clone();
             let mut rng = Xoshiro256::new(seed);
-            let mut rands = StepRands::draw(&mut rng, &shape);
+            let mut scratch = TrainScratch::seeded(&mut rng, &shape);
+            let retrain_planes = BitPlanes::from_labelled(&shape, retrain_data);
             for _ in 0..policy.retrain_epochs {
-                for (rx, ry) in retrain_data {
-                    rands.refill(&mut rng, &shape);
-                    train_step_fast(tm, rx, *ry, params, &rands);
-                }
+                train_rows_seq(tm, retrain_data, &retrain_planes, params, &mut rng, &mut scratch);
             }
         }
     }
@@ -156,13 +157,18 @@ pub fn online_rescore_run(
     ensure!(rescore_every > 0, "rescore_every must be positive");
     let shape = tm.shape().clone();
     let mut rng = Xoshiro256::new(seed);
-    let mut rands = StepRands::draw(&mut rng, &shape);
+    let mut scratch = TrainScratch::seeded(&mut rng, &shape);
     let mut cache = RescoreCache::new();
     let mut accuracies = Vec::new();
-    for (i, (x, y)) in train.iter().enumerate() {
-        rands.refill(&mut rng, &shape);
-        train_step_fast(tm, x, *y, params, &rands);
-        if (i + 1) % rescore_every == 0 {
+    // Each re-score interval is one lane-speculative run: same refill
+    // order as the historical per-step loop (bit-identical trajectory),
+    // clause evaluation amortized across the interval's samples. The
+    // tail chunk (shorter than an interval) trains but does not score,
+    // exactly like the per-step `(i + 1) % rescore_every` gate.
+    for chunk in train.chunks(rescore_every) {
+        let planes = BitPlanes::from_labelled(&shape, chunk);
+        train_rows_seq(tm, chunk, &planes, params, &mut rng, &mut scratch);
+        if chunk.len() == rescore_every {
             accuracies.push(cache.accuracy(tm, eval, params));
         }
     }
@@ -174,8 +180,10 @@ mod tests {
     use super::*;
     use crate::data::blocks::{BlockPlan, SetAllocation};
     use crate::data::iris;
+    use crate::tm::engine::train_step_fast;
     use crate::tm::fault::{Fault, FaultMap};
     use crate::tm::params::TmShape;
+    use crate::tm::rng::StepRands;
 
     #[test]
     fn ewma_tracks_accuracy() {

@@ -9,10 +9,12 @@
 
 use crate::data::blocks::{BlockPlan, SetAllocation};
 use crate::data::iris;
-use crate::tm::engine::train_step_fast;
+use crate::tm::bitplane::BitPlanes;
+use crate::tm::clause::Input;
 use crate::tm::machine::MultiTm;
 use crate::tm::params::{TmParams, TmShape};
-use crate::tm::rng::{StepRands, Xoshiro256};
+use crate::tm::rng::Xoshiro256;
+use crate::tm::train_planes::{train_rows_seq, TrainScratch};
 use anyhow::Result;
 
 /// Result of one replay-vs-plain comparison.
@@ -46,13 +48,18 @@ pub fn run_with_replay(
     let p_on = TmParams::paper_online(&shape);
     let mut tm = MultiTm::new(&shape)?;
     let mut rng = Xoshiro256::new(seed ^ 0x5EED_CAFE);
-    let mut rands = StepRands::draw(&mut rng, &shape);
+    let mut scratch = TrainScratch::seeded(&mut rng, &shape);
 
+    let offline_train_planes = BitPlanes::from_labelled(&shape, &offline_train);
     for _ in 0..10 {
-        for (x, y) in &offline_train {
-            rands.refill(&mut rng, &shape);
-            train_step_fast(&mut tm, x, *y, &p_off, &rands);
-        }
+        train_rows_seq(
+            &mut tm,
+            &offline_train,
+            &offline_train_planes,
+            &p_off,
+            &mut rng,
+            &mut scratch,
+        );
     }
 
     let mut out = ReplayOutcome {
@@ -63,21 +70,26 @@ pub fn run_with_replay(
 
     let mut replay_pos = 0usize;
     for _ in 1..=iterations {
+        // The pass's schedule — online rows with one offline row spliced
+        // in after every `k` — is a pure function of the counters, not of
+        // training, so the whole pass precomputes and lane-trains as one
+        // batch (bit-identical refill order to the per-step loop).
+        let mut pass: Vec<(Input, usize)> = Vec::with_capacity(2 * online.len());
         let mut since_replay = 0usize;
         for (x, y) in &online {
-            rands.refill(&mut rng, &shape);
-            train_step_fast(&mut tm, x, *y, &p_on, &rands);
+            pass.push((x.clone(), *y));
             since_replay += 1;
             if let Some(k) = replay_interval {
                 if since_replay >= k {
                     since_replay = 0;
                     let (rx, ry) = &offline_train[replay_pos % offline_train.len()];
                     replay_pos += 1;
-                    rands.refill(&mut rng, &shape);
-                    train_step_fast(&mut tm, rx, *ry, &p_on, &rands);
+                    pass.push((rx.clone(), *ry));
                 }
             }
         }
+        let pass_planes = BitPlanes::from_labelled(&shape, &pass);
+        train_rows_seq(&mut tm, &pass, &pass_planes, &p_on, &mut rng, &mut scratch);
         out.offline_curve.push(tm.accuracy(&offline_full, &p_off));
         out.validation_curve.push(tm.accuracy(&validation, &p_off));
         out.online_curve.push(tm.accuracy(&online, &p_off));

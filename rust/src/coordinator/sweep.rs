@@ -15,10 +15,11 @@
 
 use crate::data::blocks::{all_orderings, BlockPlan, PackedSets, SetAllocation};
 use crate::data::iris;
-use crate::tm::engine::train_step_fast;
+use crate::tm::bitplane::BitPlanes;
 use crate::tm::machine::MultiTm;
 use crate::tm::params::{TmParams, TmShape};
-use crate::tm::rng::{StepRands, Xoshiro256};
+use crate::tm::rng::Xoshiro256;
+use crate::tm::train_planes::{train_rows_seq, TrainScratch};
 use anyhow::Result;
 use std::sync::mpsc;
 
@@ -82,12 +83,13 @@ pub fn evaluate_cell(
         params.validate(shape)?;
         let mut tm = MultiTm::new(shape)?;
         let mut rng = Xoshiro256::new(seed.wrapping_add(i as u64));
-        let mut rands = StepRands::draw(&mut rng, shape);
+        // Lane-speculative training: one transpose of the 20-row train
+        // slice per fold, reused across every epoch of the cell —
+        // bit-identical to the historical per-step refill loop.
+        let mut scratch = TrainScratch::seeded(&mut rng, shape);
+        let train_planes = BitPlanes::from_labelled(shape, train);
         for _ in 0..epochs {
-            for (x, y) in train {
-                rands.refill(&mut rng, shape);
-                train_step_fast(&mut tm, x, *y, &params, &rands);
-            }
+            train_rows_seq(&mut tm, train, &train_planes, &params, &mut rng, &mut scratch);
         }
         val_acc += tm.accuracy_planes(&fold.validation_planes, &params);
         train_acc += tm.accuracy_planes(&fold.offline_planes, &params);

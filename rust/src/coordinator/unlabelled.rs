@@ -12,11 +12,12 @@
 
 use crate::tm::bitplane::{BitPlanes, PlaneBatch};
 use crate::tm::clause::{EvalMode, Input};
-use crate::tm::engine::train_step_fast;
+use crate::tm::engine::train_step_fast_with;
 use crate::tm::machine::MultiTm;
 use crate::tm::params::TmParams;
 use crate::tm::rescore::RescoreCache;
 use crate::tm::rng::{StepRands, Xoshiro256};
+use crate::tm::train_planes::TrainScratch;
 use anyhow::{ensure, Result};
 
 /// Vote-margin confidence of one inference.
@@ -74,13 +75,18 @@ pub fn unlabelled_pass(
 ) -> Result<UnlabelledStats> {
     let shape = tm.shape().clone();
     let mut stats = UnlabelledStats::default();
+    // Pseudo-labelling is inherently per-step (each step's label is the
+    // prediction the previous steps trained), so the lane engine does
+    // not apply — but the step scratch still hoists the per-step sign
+    // allocation out of the loop.
+    let mut scratch = TrainScratch::new();
     for (x, y) in data {
         stats.seen += 1;
         let c = confidence(tm, x, params_infer);
         if c.margin >= policy.min_margin {
             rands.refill(rng, &shape);
             // Word-parallel engine, bit-identical to the scalar oracle.
-            train_step_fast(tm, x, c.prediction, params_train, rands);
+            train_step_fast_with(tm, x, c.prediction, params_train, rands, &mut scratch);
             stats.trained += 1;
             if c.prediction == *y {
                 stats.pseudo_correct += 1;
@@ -190,6 +196,7 @@ mod tests {
     use crate::data::blocks::{BlockPlan, SetAllocation};
     use crate::data::filter::ClassFilter;
     use crate::data::iris;
+    use crate::tm::engine::train_step_fast;
     use crate::tm::params::TmShape;
 
     fn trained_on(

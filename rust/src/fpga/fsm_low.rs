@@ -13,11 +13,12 @@
 
 use crate::fpga::clock::{Clock, Module};
 use crate::tm::clause::Input;
-use crate::tm::engine::train_step_fast;
+use crate::tm::engine::train_step_fast_with;
 use crate::tm::feedback::StepActivity;
 use crate::tm::machine::MultiTm;
 use crate::tm::params::TmParams;
 use crate::tm::rng::StepRands;
+use crate::tm::train_planes::TrainScratch;
 
 /// Cycles to fill the mem→I/O→compute pipeline before the 1-per-clock
 /// steady state.
@@ -62,12 +63,16 @@ pub struct OpResult {
     pub cycles: u64,
 }
 
-/// The per-datapoint engine. Owns no data — it sequences the TM core.
+/// The per-datapoint engine. Owns no model data — it sequences the TM
+/// core (plus a reusable feedback scratch so the per-datapoint step
+/// allocates nothing in steady state).
 #[derive(Debug, Clone)]
 pub struct DatapointEngine {
     state: LlState,
     /// Total datapoints processed (throughput statistics).
     pub processed: u64,
+    /// Per-step feedback scratch (sign buffer), reused across ops.
+    scratch: TrainScratch,
 }
 
 impl Default for DatapointEngine {
@@ -78,7 +83,7 @@ impl Default for DatapointEngine {
 
 impl DatapointEngine {
     pub fn new() -> Self {
-        DatapointEngine { state: LlState::Idle, processed: 0 }
+        DatapointEngine { state: LlState::Idle, processed: 0, scratch: TrainScratch::new() }
     }
 
     pub fn state(&self) -> LlState {
@@ -127,7 +132,8 @@ impl DatapointEngine {
                 // Word-parallel engine — bit-identical to the scalar
                 // oracle given the same StepRands, so the RTL model's
                 // numerics (and cycle/toggle accounting) are unchanged.
-                let act = train_step_fast(tm, x, *target, params, rands);
+                let act =
+                    train_step_fast_with(tm, x, *target, params, rands, &mut self.scratch);
                 clock.toggle(Module::TmCore, act.total_updates() as u64);
                 act
             }

@@ -24,9 +24,11 @@ use crate::fpga::memmgr::MemoryManager;
 use crate::fpga::online::OnlineInputPath;
 use crate::fpga::power::{PowerModel, PowerReport};
 use crate::fpga::rom::{Port, RomBank, SetId};
+use crate::tm::bitplane::BitPlanes;
 use crate::tm::machine::MultiTm;
 use crate::tm::params::{TmParams, TmShape};
-use crate::tm::rng::{StepRands, Xoshiro256};
+use crate::tm::rng::Xoshiro256;
+use crate::tm::train_planes::{train_rows_seq, TrainScratch};
 use anyhow::{bail, Result};
 
 /// Full system configuration (the paper's pre-synthesis parameters plus
@@ -135,7 +137,7 @@ pub struct FpgaSystem {
     pub mcu: Mcu,
     pub hl: HighLevelManager,
     rng: Xoshiro256,
-    rands: StepRands,
+    scratch: TrainScratch,
     online_learning: bool,
 }
 
@@ -177,7 +179,10 @@ impl FpgaSystem {
         regs.write(Reg::Ctrl, ctrl_v);
 
         let mut rng = Xoshiro256::new(cfg.seed);
-        let rands = StepRands::draw(&mut rng, &cfg.shape);
+        // The seeded scratch consumes the same construction-time draw the
+        // old StepRands field did, so existing run trajectories (and the
+        // figure suites pinned to them) are unchanged.
+        let scratch = TrainScratch::seeded(&mut rng, &cfg.shape);
         let hl = HighLevelManager::new(cfg.offline_epochs, cfg.online_iterations);
         Ok(FpgaSystem {
             online_learning: cfg.online_learning,
@@ -194,7 +199,7 @@ impl FpgaSystem {
             online,
             hl,
             rng,
-            rands,
+            scratch,
             cfg,
         })
     }
@@ -228,15 +233,15 @@ impl FpgaSystem {
         });
         self.clock.set_enabled(Module::TmCore, false);
         let shape = self.cfg.shape.clone();
-        for (x, y) in &rows {
-            self.rands.refill(&mut self.rng, &shape);
-            // Word-parallel engine (bit-identical to the scalar oracle
-            // given the same StepRands — figures are unchanged).
-            let act =
-                crate::tm::engine::train_step_fast(&mut self.tm, x, *y, &params, &self.rands);
-            self.clock.toggle(Module::TmCore, act.total_updates() as u64);
-            self.engine.processed += 1;
-        }
+        // Lane-speculative training (bit-identical to the historical
+        // per-step refill + train_step_fast loop — figures are
+        // unchanged); switching activity is toggled in aggregate, which
+        // the activity counters accumulate identically.
+        let planes = BitPlanes::from_labelled(&shape, &rows);
+        let stats =
+            train_rows_seq(&mut self.tm, &rows, &planes, &params, &mut self.rng, &mut self.scratch);
+        self.clock.toggle(Module::TmCore, stats.activity.total_updates() as u64);
+        self.engine.processed += stats.steps as u64;
         Ok(())
     }
 
@@ -371,16 +376,21 @@ impl FpgaSystem {
         }
         let _ = busy;
         let shape = self.cfg.shape.clone();
+        // Drain the pass's rows first (the source and cyclic buffer are
+        // independent of training), then lane-train them in one batch —
+        // same per-row refill order, bit-identical trajectory.
+        let mut rows: Vec<(crate::tm::clause::Input, usize)> = Vec::with_capacity(n);
         for _ in 0..n {
             let Some((x, y)) = self.online.request(&mut self.bank)? else {
                 break; // source fully filtered/dry
             };
-            self.rands.refill(&mut self.rng, &shape);
-            let act =
-                crate::tm::engine::train_step_fast(&mut self.tm, &x, y, &params, &self.rands);
-            self.clock.toggle(Module::TmCore, act.total_updates() as u64);
-            self.engine.processed += 1;
+            rows.push((x, y));
         }
+        let planes = BitPlanes::from_labelled(&shape, &rows);
+        let stats =
+            train_rows_seq(&mut self.tm, &rows, &planes, &params, &mut self.rng, &mut self.scratch);
+        self.clock.toggle(Module::TmCore, stats.activity.total_updates() as u64);
+        self.engine.processed += stats.steps as u64;
         Ok(())
     }
 

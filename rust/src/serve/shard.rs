@@ -14,6 +14,14 @@
 //! placement. That is the whole determinism argument; the soak suite
 //! checks it against the scalar oracle rather than trusting it.
 //!
+//! Workers additionally coalesce **consecutive `Learn` updates** into
+//! ≤64-wide runs and train them through the lane-speculative engine
+//! (`tm::train_planes`) in one batched pass. The run boundaries depend
+//! on queue timing and are therefore nondeterministic — which is safe
+//! precisely because the lane path is bit-identical to applying the
+//! same updates one by one: randomness is keyed per update, so batch
+//! shape cannot leak into replica state.
+//!
 //! Shutdown is by channel closure: [`ShardServer::finish`] drops the
 //! work senders, workers drain and exit, and the response channel closes
 //! once the last worker clone of its sender is gone — no sentinel
@@ -25,7 +33,9 @@ use crate::tm::bitplane::BitPlanes;
 use crate::tm::clause::Input;
 use crate::tm::machine::MultiTm;
 use crate::tm::params::TmParams;
-use crate::tm::update::{ShardUpdate, UpdateKind};
+use crate::tm::rng::StepRands;
+use crate::tm::train_planes::TrainScratch;
+use crate::tm::update::{update_rands_into, ShardUpdate, UpdateKind};
 use anyhow::{anyhow, ensure, Result};
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -120,27 +130,109 @@ impl ShardServer {
             let out = res_tx.clone();
             handles.push(std::thread::spawn(move || {
                 let mut stats = ShardStats { shard, updates: 0, batches: 0, samples: 0 };
-                // Per-worker randomness scratch: refilled per update,
-                // allocated once (see MultiTm::apply_update_with).
-                let mut rands = None;
-                while let Ok(work) = rx.recv() {
-                    match work {
-                        Work::Update(u) => {
-                            replica.apply_update_with(&u, &params, base_seed, &mut rands);
-                            stats.updates += 1;
+                // Per-worker randomness scratch (single-update runs) and
+                // lane scratch (coalesced Learn runs), allocated once.
+                let mut rands: Option<StepRands> = None;
+                let mut scratch = TrainScratch::new();
+                // Consecutive Learn updates coalesce into a pending run
+                // and train through the lane-speculative engine in one
+                // ≤64-wide batch. Because the lane path is bit-identical
+                // to applying each update in sequence (randomness is
+                // keyed by `(base_seed, seq)`, not by batch shape), run
+                // boundaries — queue drained, fault edit, batch to
+                // score, full lane, shutdown — cannot affect results.
+                let mut run: Vec<Arc<ShardUpdate>> = Vec::new();
+                'worker: loop {
+                    // Block only with an empty pending run (the run is
+                    // always flushed before the worker sleeps).
+                    let first = match rx.recv() {
+                        Ok(w) => w,
+                        Err(_) => break 'worker,
+                    };
+                    let mut next = Some(first);
+                    while let Some(work) = next.take() {
+                        match work {
+                            Work::Update(u) => {
+                                stats.updates += 1;
+                                match &u.kind {
+                                    UpdateKind::Learn { .. } => {
+                                        run.push(u);
+                                        if run.len() == 64 {
+                                            flush_learn_run(
+                                                &mut replica,
+                                                &mut run,
+                                                &params,
+                                                base_seed,
+                                                &mut rands,
+                                                &mut scratch,
+                                            );
+                                        }
+                                    }
+                                    UpdateKind::ClauseFault { .. } => {
+                                        // Fault edits must land in log
+                                        // order relative to the Learns
+                                        // around them.
+                                        flush_learn_run(
+                                            &mut replica,
+                                            &mut run,
+                                            &params,
+                                            base_seed,
+                                            &mut rands,
+                                            &mut scratch,
+                                        );
+                                        replica.apply_update_with(
+                                            &u, &params, base_seed, &mut rands,
+                                        );
+                                    }
+                                }
+                            }
+                            Work::Batch(b) => {
+                                // Score against every update received
+                                // before the batch (FIFO order).
+                                flush_learn_run(
+                                    &mut replica,
+                                    &mut run,
+                                    &params,
+                                    base_seed,
+                                    &mut rands,
+                                    &mut scratch,
+                                );
+                                let planes =
+                                    BitPlanes::from_inputs(replica.shape(), &b.inputs);
+                                let preds = replica.predict_planes(&planes, &params);
+                                stats.batches += 1;
+                                stats.samples += preds.len() as u64;
+                                // One message per scored batch (not per
+                                // sample) keeps channel overhead off the
+                                // timed serving hot path. Receiver only
+                                // drops after join: the send can't fail
+                                // while we run.
+                                let _ = out.send((b.ids, preds));
+                            }
                         }
-                        Work::Batch(b) => {
-                            let planes =
-                                BitPlanes::from_inputs(replica.shape(), &b.inputs);
-                            let preds = replica.predict_planes(&planes, &params);
-                            stats.batches += 1;
-                            stats.samples += preds.len() as u64;
-                            // One message per scored batch (not per
-                            // sample) keeps channel overhead off the
-                            // timed serving hot path. Receiver only
-                            // drops after join: the send can't fail
-                            // while we run.
-                            let _ = out.send((b.ids, preds));
+                        match rx.try_recv() {
+                            Ok(w) => next = Some(w),
+                            Err(mpsc::TryRecvError::Empty) => {
+                                flush_learn_run(
+                                    &mut replica,
+                                    &mut run,
+                                    &params,
+                                    base_seed,
+                                    &mut rands,
+                                    &mut scratch,
+                                );
+                            }
+                            Err(mpsc::TryRecvError::Disconnected) => {
+                                flush_learn_run(
+                                    &mut replica,
+                                    &mut run,
+                                    &params,
+                                    base_seed,
+                                    &mut rands,
+                                    &mut scratch,
+                                );
+                                break 'worker;
+                            }
                         }
                     }
                 }
@@ -170,6 +262,60 @@ impl ShardServer {
         }
         responses.sort_unstable_by_key(|&(id, _)| id);
         Ok(ServeOutcome { responses, shards, updates: seq })
+    }
+}
+
+/// Apply a pending run of coalesced `Learn` updates to a replica —
+/// bit-identical to `apply_update_with` per update in sequence order:
+/// single-update runs go through exactly that path, longer runs through
+/// the lane-speculative trainer with each sample's randomness keyed by
+/// its own `(base_seed, seq)` pair. Clears the run.
+fn flush_learn_run(
+    replica: &mut MultiTm,
+    run: &mut Vec<Arc<ShardUpdate>>,
+    params: &TmParams,
+    base_seed: u64,
+    rands: &mut Option<StepRands>,
+    scratch: &mut TrainScratch,
+) {
+    match run.len() {
+        0 => return,
+        1 => {
+            // A 1-wide lane would pay the transpose for nothing.
+            replica.apply_update_with(&run[0], params, base_seed, rands);
+        }
+        _ => {
+            let shape = replica.shape().clone();
+            let planes = BitPlanes::from_rows(&shape, run.len(), |i| learn_input(&run[i]));
+            replica.train_plane_batch_by(
+                run.as_slice(),
+                learn_input_of,
+                learn_label_of,
+                &planes,
+                params,
+                |i, r| update_rands_into(r, &shape, base_seed, run[i].seq),
+                scratch,
+            );
+        }
+    }
+    run.clear();
+}
+
+fn learn_input(u: &ShardUpdate) -> &Input {
+    match &u.kind {
+        UpdateKind::Learn { input, .. } => input,
+        UpdateKind::ClauseFault { .. } => unreachable!("learn runs hold Learn updates only"),
+    }
+}
+
+fn learn_input_of(u: &Arc<ShardUpdate>) -> &Input {
+    learn_input(u)
+}
+
+fn learn_label_of(u: &Arc<ShardUpdate>) -> usize {
+    match &u.kind {
+        UpdateKind::Learn { label, .. } => *label,
+        UpdateKind::ClauseFault { .. } => unreachable!("learn runs hold Learn updates only"),
     }
 }
 

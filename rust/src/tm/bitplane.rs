@@ -62,6 +62,18 @@ impl BitPlanes {
         Self::build(shape, rows.len(), |i| &rows[i].0)
     }
 
+    /// Transpose `n` rows produced by an arbitrary projection — the
+    /// generic entry the lane-speculative trainer (`tm::train_planes`)
+    /// and the serve workers' coalesced Learn runs use for row types
+    /// that are not `(Input, usize)` tuples.
+    pub(crate) fn from_rows<'a>(
+        shape: &TmShape,
+        n: usize,
+        row: impl Fn(usize) -> &'a Input,
+    ) -> Self {
+        Self::build(shape, n, row)
+    }
+
     fn build<'a>(shape: &TmShape, n: usize, row: impl Fn(usize) -> &'a Input) -> Self {
         let literals = shape.literals();
         let lanes = n.div_ceil(64);
@@ -194,9 +206,11 @@ pub(crate) fn fnv_fold(h: u64, v: u64) -> u64 {
 }
 
 /// Ripple-carry add of a 64-lane 0/1 mask into a bit-sliced counter
-/// (`counter[b]` holds bit `b` of all 64 lane counts).
+/// (`counter[b]` holds bit `b` of all 64 lane counts). Shared with the
+/// lane-speculative trainer (`tm::train_planes`), which tallies one
+/// lane's speculative vote totals through the same adder.
 #[inline]
-fn add_mask(counter: &mut [u64], mut mask: u64) {
+pub(crate) fn add_mask(counter: &mut [u64], mut mask: u64) {
     for plane in counter.iter_mut() {
         let carry = *plane & mask;
         *plane ^= mask;
@@ -414,11 +428,12 @@ impl MultiTm {
             for b in 0..lane_len {
                 let mut p = 0i32;
                 let mut q = 0i32;
-                for (w, &plane) in pos.iter().enumerate() {
-                    p |= (((plane >> b) & 1) as i32) << w;
-                }
-                for (w, &plane) in neg.iter().enumerate() {
-                    q |= (((plane >> b) & 1) as i32) << w;
+                // Single zip over both counters (same width by
+                // construction) — one bounds check pair eliminated per
+                // counter bit.
+                for (w, (&pp, &nn)) in pos.iter().zip(neg.iter()).enumerate() {
+                    p |= (((pp >> b) & 1) as i32) << w;
+                    q |= (((nn >> b) & 1) as i32) << w;
                 }
                 out[s0 + b] = (p - q).clamp(-t, t);
             }

@@ -28,21 +28,30 @@
 //!    quantised to 2^-16), not bit-identical; the eager `StepRands` path
 //!    remains the parity oracle against the L2 HLO graph.
 //!
-//! [`MultiTm::train_epoch`] drives the lazy path over a labelled set;
-//! batched inference lives in `MultiTm::evaluate_batch`/`predict_batch`
-//! (machine.rs), which fan classes out across scoped threads.
+//! [`MultiTm::train_epoch`] drives the lazy path over a labelled set —
+//! since PR 5 through the lane-speculative walker (`tm::train_planes`),
+//! which batches clause evaluation 64 samples per AND and stays
+//! bit-identical to the per-step loop; batched inference lives in
+//! `MultiTm::evaluate_batch`/`predict_batch` (machine.rs), which fan
+//! classes out across scoped threads.
 
+use crate::tm::bitplane::BitPlanes;
 use crate::tm::clause::{EvalMode, Input};
-use crate::tm::feedback::{class_signs, StepActivity};
+use crate::tm::feedback::StepActivity;
 use crate::tm::machine::MultiTm;
 use crate::tm::params::{polarity, word_mask, TmParams, TmShape};
-use crate::tm::rng::{neg_class_from_draw, BernoulliPlan, StepRands, Xoshiro256};
+use crate::tm::rng::{BernoulliPlan, StepRands, Xoshiro256};
+use crate::tm::train_planes::{fill_signs, TrainScratch};
 
 /// One training step with bit-parallel feedback, consuming the same eager
 /// [`StepRands`] record as the scalar oracle — and producing bit-identical
 /// TA states, activity counts and action caches. This is the engine the
 /// deterministic drivers (FPGA system model, figure sweeps, unlabelled
 /// learning) run on.
+///
+/// Allocates a throwaway sign buffer per call; hot loops should carry a
+/// [`TrainScratch`] and call [`train_step_fast_with`] instead (or batch
+/// whole row runs through `MultiTm::train_plane_batch`).
 pub fn train_step_fast(
     tm: &mut MultiTm,
     input: &Input,
@@ -50,14 +59,28 @@ pub fn train_step_fast(
     params: &TmParams,
     rands: &StepRands,
 ) -> StepActivity {
+    train_step_fast_with(tm, input, target, params, rands, &mut TrainScratch::new())
+}
+
+/// [`train_step_fast`] with a caller-owned [`TrainScratch`]: the per-step
+/// sign buffer lives in the scratch, so long-lived steppers pay zero
+/// steady-state allocation. Bit-identical to the allocating path.
+pub fn train_step_fast_with(
+    tm: &mut MultiTm,
+    input: &Input,
+    target: usize,
+    params: &TmParams,
+    rands: &StepRands,
+    scratch: &mut TrainScratch,
+) -> StepActivity {
     let shape = tm.shape().clone();
     tm.evaluate(input, params, EvalMode::Train);
-    let signs = class_signs(target, rands, shape.classes, params.active_classes);
+    let signs = scratch.signs_mut(shape.classes);
+    fill_signs(signs, target, params.active_classes, || rands.neg_class_draw);
 
     let two_t = (2 * params.t) as f32;
     let p_reinforce = params.p_reinforce();
     let p_weaken = params.p_weaken();
-    let words = shape.words();
     let lits = shape.literals();
     let fault_free = tm.fault().is_fault_free();
     let mut act = StepActivity::default();
@@ -78,7 +101,7 @@ pub fn train_step_fast(
                 // Type I: masks from the eager per-TA draws — the same
                 // strict-< comparisons the scalar path makes, packed.
                 act.type1_clauses += 1;
-                for w in 0..words {
+                for (w, &iw) in input.words().iter().enumerate() {
                     let valid = word_mask(lits, w);
                     let lo = w * 64;
                     let n = (lits - lo).min(64);
@@ -92,7 +115,6 @@ pub fn train_step_fast(
                             weaken |= 1u64 << k;
                         }
                     }
-                    let iw = input.words()[w];
                     let (inc, dec) = if out {
                         (iw & reinforce & valid, !iw & weaken & valid)
                     } else {
@@ -107,11 +129,11 @@ pub fn train_step_fast(
                 // whose effective (post-fault-gate) action is exclude
                 // toward include.
                 act.type2_clauses += 1;
-                for w in 0..words {
+                for (w, &iw) in input.words().iter().enumerate() {
                     let valid = word_mask(lits, w);
                     let a = tm.action_words(c, j)[w];
                     let eff = if fault_free { a } else { tm.fault().apply(c, j, w, a) };
-                    let inc = !input.words()[w] & !eff & valid;
+                    let inc = !iw & !eff & valid;
                     let (i, _) = tm.apply_word_feedback(c, j, w, inc, 0);
                     act.ta_increments += i;
                 }
@@ -146,15 +168,23 @@ impl FeedbackPlan {
         FeedbackPlan { reinforce, weaken, shared }
     }
 
-    /// Draw the (reinforce, weaken) masks for one word.
+    /// Draw the (reinforce, weaken) masks for one word — shared with the
+    /// lane-speculative walker (`tm::train_planes`), which must consume
+    /// the generator exactly as [`train_step_lazy`] does.
     #[inline]
-    fn masks(&self, rng: &mut Xoshiro256) -> (u64, u64) {
+    pub(crate) fn masks(&self, rng: &mut Xoshiro256) -> (u64, u64) {
         if self.shared {
             let m = self.weaken.mask(rng);
             (m, m)
         } else {
             (self.reinforce.mask(rng), self.weaken.mask(rng))
         }
+    }
+
+    /// Draw only the weaken mask (the `out = 0` Type-I economy path).
+    #[inline]
+    pub(crate) fn weaken_mask(&self, rng: &mut Xoshiro256) -> u64 {
+        self.weaken.mask(rng)
     }
 
     /// Type I is entirely inactive (both event probabilities quantise to
@@ -181,22 +211,29 @@ pub fn train_step_lazy(
     plan: &FeedbackPlan,
     rng: &mut Xoshiro256,
 ) -> StepActivity {
+    train_step_lazy_with(tm, input, target, params, plan, rng, &mut TrainScratch::new())
+}
+
+/// [`train_step_lazy`] with a caller-owned [`TrainScratch`] (see
+/// [`train_step_fast_with`]). Bit-identical to the allocating path.
+pub fn train_step_lazy_with(
+    tm: &mut MultiTm,
+    input: &Input,
+    target: usize,
+    params: &TmParams,
+    plan: &FeedbackPlan,
+    rng: &mut Xoshiro256,
+    scratch: &mut TrainScratch,
+) -> StepActivity {
     let shape = tm.shape().clone();
     tm.evaluate(input, params, EvalMode::Train);
 
     // Signs, from a single draw (canonical order: neg-class draw first,
     // mirroring StepRands::draw).
-    let mut signs = vec![0i8; shape.classes];
-    if target < params.active_classes {
-        signs[target] = 1;
-        if let Some(neg) = neg_class_from_draw(rng.next_u64(), target, params.active_classes)
-        {
-            signs[neg] = -1;
-        }
-    }
+    let signs = scratch.signs_mut(shape.classes);
+    fill_signs(signs, target, params.active_classes, || rng.next_u64());
 
     let two_t = (2 * params.t) as f32;
-    let words = shape.words();
     let lits = shape.literals();
     let fault_free = tm.fault().is_fault_free();
     let type1_inert = plan.type1_inert();
@@ -224,16 +261,15 @@ pub fn train_step_lazy(
                 if type1_inert {
                     continue;
                 }
-                for w in 0..words {
+                for (w, &iw) in input.words().iter().enumerate() {
                     let valid = word_mask(lits, w);
-                    let iw = input.words()[w];
                     let (inc, dec) = if out {
                         let (reinforce, weaken) = plan.masks(rng);
                         (iw & reinforce & valid, !iw & weaken & valid)
                     } else {
                         // out = 0 consults only the weaken event — don't
                         // burn draws on an unused reinforce mask.
-                        (0, plan.weaken.mask(rng) & valid)
+                        (0, plan.weaken_mask(rng) & valid)
                     };
                     let (i, d) = tm.apply_word_feedback(c, j, w, inc, dec);
                     act.ta_increments += i;
@@ -241,11 +277,11 @@ pub fn train_step_lazy(
                 }
             } else if out {
                 act.type2_clauses += 1;
-                for w in 0..words {
+                for (w, &iw) in input.words().iter().enumerate() {
                     let valid = word_mask(lits, w);
                     let a = tm.action_words(c, j)[w];
                     let eff = if fault_free { a } else { tm.fault().apply(c, j, w, a) };
-                    let inc = !input.words()[w] & !eff & valid;
+                    let inc = !iw & !eff & valid;
                     let (i, _) = tm.apply_word_feedback(c, j, w, inc, 0);
                     act.ta_increments += i;
                 }
@@ -265,7 +301,7 @@ pub struct EpochStats {
 }
 
 impl EpochStats {
-    fn absorb(&mut self, a: StepActivity) {
+    pub(crate) fn absorb(&mut self, a: StepActivity) {
         self.steps += 1;
         self.activity.type1_clauses += a.type1_clauses;
         self.activity.type2_clauses += a.type2_clauses;
@@ -276,10 +312,15 @@ impl EpochStats {
 
 impl MultiTm {
     /// One labelled pass over `data` through the lazy word-parallel
-    /// engine — the epoch driver of the fast path. Training is inherently
-    /// sequential (each step reads the states the previous one wrote), so
-    /// the parallelism here is word-level; batched *inference* fans out
-    /// across threads in [`MultiTm::evaluate_batch`].
+    /// engine. Training is inherently sequential (each step reads the
+    /// states the previous one wrote), so instead of thread fan-out this
+    /// runs the **lane-speculative** walk
+    /// (`MultiTm::train_plane_batch_lazy`, `tm::train_planes`): clause
+    /// evaluation is batched 64 samples per AND and repaired only for
+    /// the rare mid-lane action flips — bit-identical, draw for draw, to
+    /// the historical per-step [`train_step_lazy`] loop (asserted by
+    /// `train_epoch_is_deterministic_step_loop` below and the
+    /// `integration_train_planes` suite).
     pub fn train_epoch(
         &mut self,
         data: &[(Input, usize)],
@@ -287,11 +328,9 @@ impl MultiTm {
         rng: &mut Xoshiro256,
     ) -> EpochStats {
         let plan = FeedbackPlan::new(params);
-        let mut stats = EpochStats::default();
-        for (x, y) in data {
-            stats.absorb(train_step_lazy(self, x, *y, params, &plan, rng));
-        }
-        stats
+        let planes = BitPlanes::from_labelled(self.shape(), data);
+        let mut scratch = TrainScratch::new();
+        self.train_plane_batch_lazy(data, &planes, params, &plan, rng, &mut scratch)
     }
 }
 

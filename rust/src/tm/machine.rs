@@ -270,18 +270,19 @@ impl MultiTm {
     ) -> bool {
         let words = self.shape.words();
         let row = self.row(class, clause);
+        let actions = &self.actions[row * words..(row + 1) * words];
         let mut any = false;
         if self.fault.is_fault_free() {
             // Fast path (O(1) check): the gates are identity — evaluate
             // straight off the packed action cache. Trained clauses are
             // include-sparse, so most multiword rows are all-zero: skip
-            // them without touching the input word.
-            for w in 0..words {
-                let a = self.actions[row * words + w];
+            // them without touching the input word. The zip walks both
+            // packed rows without per-word bounds checks.
+            for (&a, &iw) in actions.iter().zip(input.words()) {
                 if a == 0 {
                     continue;
                 }
-                if a & !input.words()[w] != 0 {
+                if a & !iw != 0 {
                     return false;
                 }
                 any = true;
@@ -290,13 +291,12 @@ impl MultiTm {
             // Apply the gates word-by-word without allocating. The
             // zero-word skip runs *after* the gates: a stuck-at-1 gate
             // can raise bits out of an all-zero action word.
-            for w in 0..words {
-                let eff =
-                    self.fault.apply(class, clause, w, self.actions[row * words + w]);
+            for (w, (&a, &iw)) in actions.iter().zip(input.words()).enumerate() {
+                let eff = self.fault.apply(class, clause, w, a);
                 if eff == 0 {
                     continue;
                 }
-                if eff & !input.words()[w] != 0 {
+                if eff & !iw != 0 {
                     return false;
                 }
                 any = true;

@@ -13,7 +13,10 @@
 //! differentially pinned bit-identical; [`rescore`] adds the incremental
 //! dirty-clause re-scoring engine over cached plane batches for the
 //! interleaved online train/infer loop, pinned bit-identical to a cold
-//! plane pass.
+//! plane pass; [`train_planes`] is the training-side twin — a
+//! lane-speculative 64-wide trainer that batch-evaluates clause
+//! fired-masks per lane, repairs only mid-lane action flips, and stays
+//! bit-identical to the per-step engines.
 
 pub mod automaton;
 pub mod bitplane;
@@ -27,16 +30,21 @@ pub mod params;
 pub mod rescore;
 pub mod rng;
 pub mod state;
+pub mod train_planes;
 pub mod update;
 
 pub use automaton::TaBlock;
 pub use bitplane::{BitPlanes, PlaneBatch};
 pub use clause::{EvalMode, Input};
-pub use engine::{train_step_fast, train_step_lazy, EpochStats, FeedbackPlan};
+pub use engine::{
+    train_step_fast, train_step_fast_with, train_step_lazy, train_step_lazy_with, EpochStats,
+    FeedbackPlan,
+};
 pub use fault::{Fault, FaultMap};
 pub use feedback::{train_step, StepActivity};
 pub use machine::{argmax_class, MultiTm};
 pub use params::{polarity, word_mask, TmParams, TmShape};
 pub use rescore::{RescoreCache, RescoreStats};
 pub use rng::{BernoulliPlan, StepRands, Xoshiro256};
+pub use train_planes::{train_rows_seq, TrainScratch};
 pub use update::{ShardUpdate, UpdateKind};

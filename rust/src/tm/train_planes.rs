@@ -1,0 +1,813 @@
+//! Lane-speculative 64-wide training — the training-side twin of the
+//! sample-sliced inference kernel (`tm::bitplane`, PR 2) and the
+//! dirty-clause re-scorer (`tm::rescore`, PR 3).
+//!
+//! The paper's T-threshold makes feedback — and therefore TA action
+//! flips — increasingly rare as the machine converges, yet every
+//! training step still pays a full clause evaluation: MATADOR
+//! (arXiv 2403.10538) and the runtime-tunable eFPGA TM
+//! (arXiv 2502.07823) both observe that clause evaluation, not
+//! feedback, dominates TM training cost. This module amortizes that
+//! evaluation across a 64-sample lane:
+//!
+//! 1. **Speculate**: for one `BitPlanes` lane, compute every active
+//!    clause's fired-mask in one bit-sliced pass (the shared
+//!    [`clause_fired_mask`] AND kernel) and tally per-sample *unclamped*
+//!    vote totals through the shared ripple-carry adder ([`add_mask`]).
+//! 2. **Walk**: visit the lane's samples strictly in order, reading each
+//!    sample's clause outputs and class sums out of the precomputed
+//!    masks/totals and applying feedback exactly as the scalar engine
+//!    would — same comparisons, same `apply_word_feedback` word
+//!    sequence, same randomness consumption.
+//! 3. **Repair**: when a feedback application flips any include/exclude
+//!    action bit (observable as a [`MultiTm::row_rev`] move, stamped by
+//!    the `TaBlock::update_word` flip masks from PR 3), only the flipped
+//!    clauses' fired-masks are re-ANDed and the vote totals patched by
+//!    delta — for the *remaining* samples of the lane only.
+//!
+//! The result is **bit-identical** to running the scalar step
+//! sample-by-sample with the same randomness — eager
+//! ([`MultiTm::train_plane_batch`] vs a `train_step_fast` loop given the
+//! same per-sample [`StepRands`]) and lazy
+//! ([`MultiTm::train_plane_batch_lazy`] vs a `train_step_lazy` loop
+//! given the same generator) — while the common converged case (zero
+//! flips in a lane) pays one batched evaluation instead of 64 scalar
+//! ones. `rust/tests/integration_train_planes.rs` is the differential
+//! proof across non-×64 tails, mid-lane flip repair under low-T
+//! configs, fault/force injection between batches, and clones.
+//!
+//! Correctness rests on three invariants of the scalar step:
+//!
+//! - a step's clause outputs and class sums are snapshotted *before* any
+//!   of its feedback is applied (the scalar engine evaluates first), so
+//!   deferring repair to the end of each sample cannot be observed;
+//! - each active clause receives at most one feedback application per
+//!   step, and Type II reads only its *own* clause's live action words,
+//!   so intra-step liveness reduces to prior-step state;
+//! - a clause's fired-mask can change mid-lane only through an action
+//!   flip (training never edits force gates or fault maps), and every
+//!   flip stamps the mutation clock — so `row_rev` is a sound, complete
+//!   dirtiness signal for the lane's speculative state.
+
+use crate::tm::bitplane::{add_mask, clause_fired_mask, BitPlanes};
+use crate::tm::clause::Input;
+use crate::tm::engine::{EpochStats, FeedbackPlan};
+use crate::tm::machine::MultiTm;
+use crate::tm::params::{polarity, word_mask, TmParams};
+use crate::tm::rng::{neg_class_from_draw, StepRands, Xoshiro256};
+
+/// Reusable scratch for the training hot paths: the per-step sign
+/// buffer the scalar engines used to allocate per call (hoisted here —
+/// see `train_step_fast_with` / `train_step_lazy_with`), the eager
+/// randomness record, and the lane-speculative state (fired-masks,
+/// unclamped vote totals, ripple counters, effective-literal and repair
+/// buffers). One scratch serves machines of any shape back to back:
+/// every buffer is re-sized on entry and fully rewritten before use.
+///
+/// Also carries the lane engine's observability counters
+/// ([`TrainScratch::lane_flips`] / [`TrainScratch::lanes_walked`]):
+/// mean flips per lane is the quantity that decides whether the
+/// speculative batch pays off, and the perf_table training scenario
+/// prints it next to the measured speedup.
+#[derive(Debug, Clone, Default)]
+pub struct TrainScratch {
+    /// Per-step class signs (`+1` target, `-1` contrast, `0` untouched).
+    signs: Vec<i8>,
+    /// Eager per-sample randomness record, refilled by the caller's
+    /// provider; `None` until first eager use (the lazy path never
+    /// touches it).
+    pub(crate) rands: Option<StepRands>,
+    /// Current lane's fired-masks, `[c * active_clauses + j]`.
+    fired: Vec<u64>,
+    /// Current lane's unclamped vote totals, `[c * 64 + sample_bit]`.
+    totals: Vec<i32>,
+    /// Bit-sliced ripple counters for the speculative tally.
+    pos: Vec<u64>,
+    neg: Vec<u64>,
+    /// Effective included literal indices of the clause being (re)ANDed.
+    lits: Vec<u32>,
+    /// Clauses fed back during the current step: `(class, clause,
+    /// row_rev before feedback)` — the repair worklist.
+    touched: Vec<(u32, u32, u64)>,
+    /// Cumulative flip-repair events (one per clause whose actions
+    /// flipped during a walked sample).
+    lane_flips: u64,
+    /// Cumulative 64-sample lanes walked.
+    lanes_walked: u64,
+}
+
+impl TrainScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Scratch whose eager randomness record is pre-drawn from `rng` —
+    /// the drivers' historical `StepRands::draw` + per-step `refill`
+    /// discipline. Constructing the scratch this way consumes exactly
+    /// the draws the old per-step loops consumed before their first
+    /// refill, so wiring the lane engine into an existing driver moves
+    /// no trajectory.
+    pub fn seeded(rng: &mut Xoshiro256, shape: &crate::tm::params::TmShape) -> Self {
+        let mut s = Self::new();
+        s.rands = Some(StepRands::draw(rng, shape));
+        s
+    }
+
+    /// Flip-repair events observed so far (cumulative across batches).
+    pub fn lane_flips(&self) -> u64 {
+        self.lane_flips
+    }
+
+    /// 64-sample lanes walked so far (cumulative across batches).
+    pub fn lanes_walked(&self) -> u64 {
+        self.lanes_walked
+    }
+
+    /// Mean flip repairs per walked lane — the quantity the speculative
+    /// engine bets on being near zero at convergence.
+    pub fn mean_flips_per_lane(&self) -> f64 {
+        if self.lanes_walked == 0 {
+            0.0
+        } else {
+            self.lane_flips as f64 / self.lanes_walked as f64
+        }
+    }
+
+    /// Zero the observability counters (buffers are unaffected).
+    pub fn reset_counters(&mut self) {
+        self.lane_flips = 0;
+        self.lanes_walked = 0;
+    }
+
+    /// Per-step sign buffer of length `classes`, zeroed.
+    pub(crate) fn signs_mut(&mut self, classes: usize) -> &mut [i8] {
+        self.signs.clear();
+        self.signs.resize(classes, 0);
+        &mut self.signs
+    }
+
+    /// Take the eager randomness record, reallocating when the shape
+    /// moved (a scratch can serve differently-shaped machines in turn).
+    fn take_rands(&mut self, shape: &crate::tm::params::TmShape) -> StepRands {
+        let nc = shape.classes * shape.max_clauses;
+        let nt = nc * shape.literals();
+        match self.rands.take() {
+            Some(r) if r.clause_rand.len() == nc && r.ta_rand.len() == nt => r,
+            _ => StepRands {
+                clause_rand: vec![0.0; nc],
+                ta_rand: vec![0.0; nt],
+                neg_class_draw: 0,
+            },
+        }
+    }
+
+    /// Size every lane buffer for one walk and clear the worklist.
+    fn ensure(&mut self, classes: usize, nc: usize, najc: usize, width: usize) {
+        self.signs.clear();
+        self.signs.resize(classes, 0);
+        self.fired.clear();
+        self.fired.resize(nc * najc, 0);
+        self.totals.clear();
+        self.totals.resize(nc * 64, 0);
+        self.pos.clear();
+        self.pos.resize(width, 0);
+        self.neg.clear();
+        self.neg.resize(width, 0);
+        self.touched.clear();
+        self.lits.clear();
+    }
+}
+
+/// The per-step randomness discipline of a lane walk. The walker is
+/// written once against this trait; the eager implementation reads a
+/// caller-provided [`StepRands`] record positionally (bit-identity with
+/// `train_step_fast`), the lazy one consumes a generator in exactly the
+/// decision order `train_step_lazy` does (bit-identity with it).
+trait StepDraws {
+    /// Lazy skips a signed class's per-clause selection draws entirely
+    /// when `p_sel <= 0`; eager reads are positional and must not skip
+    /// (forced test records can hold negative draws that select at
+    /// `p_sel = 0`, exactly like the scalar engines).
+    const SKIPS_NONPOSITIVE_PSEL: bool;
+    /// Prepare sample `i`'s randomness (eager: refill the record).
+    fn begin(&mut self, i: usize);
+    /// The contrast-class draw — called only when the target class is
+    /// active, matching both scalar paths' consumption.
+    fn neg_draw(&mut self) -> u64;
+    /// Type I is entirely inert (lazy plan with both event
+    /// probabilities quantised to zero); eager always applies masks.
+    fn type1_inert(&self) -> bool;
+    /// Clause-selection draw for `(c, j)`.
+    fn clause(&mut self, c: usize, j: usize) -> f32;
+    /// `(reinforce, weaken)` masks for the `n` literals starting at
+    /// `lo` of clause `(c, j)`; `out` is the clause output (the lazy
+    /// path draws only the weaken mask when `out = 0`).
+    fn type1_masks(&mut self, c: usize, j: usize, lo: usize, n: usize, out: bool)
+        -> (u64, u64);
+}
+
+/// Eager discipline: every value comes out of a [`StepRands`] record
+/// the provider refills per sample. Reads consume nothing, so mask
+/// computation is identical whatever the clause output — exactly like
+/// `train_step_fast`.
+struct EagerDraws<'a, F: FnMut(usize, &mut StepRands)> {
+    shape: &'a crate::tm::params::TmShape,
+    rands: StepRands,
+    fill: F,
+    p_reinforce: f32,
+    p_weaken: f32,
+}
+
+impl<F: FnMut(usize, &mut StepRands)> StepDraws for EagerDraws<'_, F> {
+    const SKIPS_NONPOSITIVE_PSEL: bool = false;
+
+    #[inline]
+    fn begin(&mut self, i: usize) {
+        (self.fill)(i, &mut self.rands);
+    }
+
+    #[inline]
+    fn neg_draw(&mut self) -> u64 {
+        self.rands.neg_class_draw
+    }
+
+    #[inline]
+    fn type1_inert(&self) -> bool {
+        false
+    }
+
+    #[inline]
+    fn clause(&mut self, c: usize, j: usize) -> f32 {
+        self.rands.clause(self.shape, c, j)
+    }
+
+    #[inline]
+    fn type1_masks(
+        &mut self,
+        c: usize,
+        j: usize,
+        lo: usize,
+        n: usize,
+        _out: bool,
+    ) -> (u64, u64) {
+        let (mut reinforce, mut weaken) = (0u64, 0u64);
+        for k in 0..n {
+            let r = self.rands.ta(self.shape, c, j, lo + k);
+            if r < self.p_reinforce {
+                reinforce |= 1u64 << k;
+            }
+            if r < self.p_weaken {
+                weaken |= 1u64 << k;
+            }
+        }
+        (reinforce, weaken)
+    }
+}
+
+/// Lazy discipline: draws come off the generator in `train_step_lazy`'s
+/// canonical decision order — neg-class word, per-clause selection
+/// uniforms of the signed classes only (skipped wholesale at
+/// `p_sel <= 0`), then bit-sliced Bernoulli masks only for selected
+/// Type-I clauses.
+struct LazyDraws<'a> {
+    plan: &'a FeedbackPlan,
+    rng: &'a mut Xoshiro256,
+}
+
+impl StepDraws for LazyDraws<'_> {
+    const SKIPS_NONPOSITIVE_PSEL: bool = true;
+
+    #[inline]
+    fn begin(&mut self, _i: usize) {}
+
+    #[inline]
+    fn neg_draw(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    #[inline]
+    fn type1_inert(&self) -> bool {
+        self.plan.type1_inert()
+    }
+
+    #[inline]
+    fn clause(&mut self, _c: usize, _j: usize) -> f32 {
+        self.rng.next_f32()
+    }
+
+    #[inline]
+    fn type1_masks(
+        &mut self,
+        _c: usize,
+        _j: usize,
+        _lo: usize,
+        _n: usize,
+        out: bool,
+    ) -> (u64, u64) {
+        if out {
+            self.plan.masks(self.rng)
+        } else {
+            // out = 0 consults only the weaken event — same draw
+            // economy as train_step_lazy.
+            (0, self.plan.weaken_mask(self.rng))
+        }
+    }
+}
+
+fn row_input(r: &(Input, usize)) -> &Input {
+    &r.0
+}
+
+fn row_label(r: &(Input, usize)) -> usize {
+    r.1
+}
+
+/// THE per-step sign rule, in one place: `+1` on an active target, `-1`
+/// on the contrast class picked from one draw (`draw` is consulted only
+/// when the target is active — the lazy path's draw economy). `signs`
+/// must arrive zeroed. Shared by the lane walker and both `_with` step
+/// engines so the contrast-class rule cannot drift between them.
+#[inline]
+pub(crate) fn fill_signs(
+    signs: &mut [i8],
+    target: usize,
+    active: usize,
+    draw: impl FnOnce() -> u64,
+) {
+    if target < active {
+        signs[target] = 1;
+        if let Some(neg) = neg_class_from_draw(draw(), target, active) {
+            signs[neg] = -1;
+        }
+    }
+}
+
+impl MultiTm {
+    /// Lane-speculative eager training over a transposed batch:
+    /// **bit-identical** to
+    ///
+    /// ```ignore
+    /// for i in 0..rows.len() {
+    ///     fill(i, &mut rands);
+    ///     train_step_fast(tm, &rows[i].0, rows[i].1, params, &rands);
+    /// }
+    /// ```
+    ///
+    /// given the same per-sample records — TA states, action caches,
+    /// activity counts and mutation-clock stamps all agree
+    /// (`rust/tests/integration_train_planes.rs`). `planes` must be the
+    /// transpose of `rows`' inputs (checked bit-for-bit in debug
+    /// builds). The provider is called once per sample, in order, so a
+    /// sequential-refill provider reproduces the drivers' historical
+    /// rng stream and a keyed provider (serve updates) stays
+    /// order-independent.
+    pub fn train_plane_batch(
+        &mut self,
+        rows: &[(Input, usize)],
+        planes: &BitPlanes,
+        params: &TmParams,
+        fill: impl FnMut(usize, &mut StepRands),
+        scratch: &mut TrainScratch,
+    ) -> EpochStats {
+        self.train_plane_batch_by(rows, row_input, row_label, planes, params, fill, scratch)
+    }
+
+    /// [`MultiTm::train_plane_batch`] over arbitrary row types — the
+    /// serve workers feed coalesced `Arc<ShardUpdate>` Learn runs
+    /// through this without cloning their inputs.
+    pub fn train_plane_batch_by<T>(
+        &mut self,
+        items: &[T],
+        input_of: fn(&T) -> &Input,
+        label_of: fn(&T) -> usize,
+        planes: &BitPlanes,
+        params: &TmParams,
+        fill: impl FnMut(usize, &mut StepRands),
+        scratch: &mut TrainScratch,
+    ) -> EpochStats {
+        let shape = self.shape().clone();
+        let rands = scratch.take_rands(&shape);
+        let mut draws = EagerDraws {
+            shape: &shape,
+            rands,
+            fill,
+            p_reinforce: params.p_reinforce(),
+            p_weaken: params.p_weaken(),
+        };
+        let stats =
+            walk_lanes(self, items, input_of, label_of, planes, params, &mut draws, scratch);
+        scratch.rands = Some(draws.rands);
+        stats
+    }
+
+    /// Lane-speculative lazy training: **bit-identical** to a
+    /// `train_step_lazy` loop over the same rows with the same plan and
+    /// generator — this is what [`MultiTm::train_epoch`] runs on.
+    pub fn train_plane_batch_lazy(
+        &mut self,
+        rows: &[(Input, usize)],
+        planes: &BitPlanes,
+        params: &TmParams,
+        plan: &FeedbackPlan,
+        rng: &mut Xoshiro256,
+        scratch: &mut TrainScratch,
+    ) -> EpochStats {
+        let mut draws = LazyDraws { plan, rng };
+        walk_lanes(self, rows, row_input, row_label, planes, params, &mut draws, scratch)
+    }
+}
+
+/// Train `rows` through the lane engine under the deterministic
+/// drivers' sequential-refill discipline — bit-identical to
+///
+/// ```ignore
+/// for (x, y) in rows {
+///     rands.refill(rng, &shape);
+///     train_step_fast(tm, x, *y, params, &rands);
+/// }
+/// ```
+///
+/// (`fpga::system`, `coordinator::{monitor, sweep, replay}` all ran
+/// exactly that loop; they now run this). Pair with
+/// [`TrainScratch::seeded`] to reproduce the historical
+/// `StepRands::draw`-before-the-loop consumption.
+pub fn train_rows_seq(
+    tm: &mut MultiTm,
+    rows: &[(Input, usize)],
+    planes: &BitPlanes,
+    params: &TmParams,
+    rng: &mut Xoshiro256,
+    scratch: &mut TrainScratch,
+) -> EpochStats {
+    let shape = tm.shape().clone();
+    tm.train_plane_batch(rows, planes, params, |_, r| r.refill(rng, &shape), scratch)
+}
+
+/// The lane walker: speculate, walk, repair — once per 64-sample lane.
+#[allow(clippy::too_many_arguments)]
+fn walk_lanes<T, D: StepDraws>(
+    tm: &mut MultiTm,
+    items: &[T],
+    input_of: fn(&T) -> &Input,
+    label_of: fn(&T) -> usize,
+    planes: &BitPlanes,
+    params: &TmParams,
+    draws: &mut D,
+    scratch: &mut TrainScratch,
+) -> EpochStats {
+    let shape = tm.shape().clone();
+    assert_eq!(
+        planes.literals(),
+        shape.literals(),
+        "plane/machine literal width mismatch"
+    );
+    assert_eq!(planes.len(), items.len(), "plane/row count mismatch");
+    let mut stats = EpochStats::default();
+    let nc = params.active_classes;
+    let najc = params.active_clauses;
+    if items.is_empty() || nc == 0 {
+        return stats;
+    }
+    // The planes must be the transpose of the rows — a desynced pair
+    // would silently train on wrong clause outputs. Full bit check in
+    // debug builds only (O(rows × literals)).
+    #[cfg(debug_assertions)]
+    for (i, it) in items.iter().enumerate() {
+        let x = input_of(it);
+        for k in 0..shape.literals() {
+            debug_assert_eq!(
+                planes.literal(k, i),
+                x.literal(k),
+                "planes desynced from rows at sample {i}, literal {k}"
+            );
+        }
+    }
+    let t = params.t;
+    let two_t = (2 * t) as f32;
+    let lits = shape.literals();
+    let max_clauses = shape.max_clauses;
+    let fault_free = tm.fault().is_fault_free();
+    // Counter width: enough bits for `active_clauses / 2` fired clauses
+    // per polarity (same sizing as the inference kernel).
+    let half = najc / 2;
+    let width = (usize::BITS - half.leading_zeros()) as usize;
+    scratch.ensure(shape.classes, nc, najc, width);
+
+    for lane in 0..planes.lanes() {
+        scratch.lanes_walked += 1;
+        let s0 = lane * 64;
+        let lane_len = (items.len() - s0).min(64);
+        let valid = planes.lane_mask(lane);
+
+        // --- 1. Speculate: every clause's fired-mask + per-sample
+        // unclamped vote totals, in one bit-sliced pass.
+        for c in 0..nc {
+            scratch.pos.fill(0);
+            scratch.neg.fill(0);
+            for j in 0..najc {
+                scratch.lits.clear();
+                let force = tm.push_eff_lits(c, j, &mut scratch.lits);
+                let m = clause_fired_mask(planes, lane, valid, true, force, &scratch.lits);
+                scratch.fired[c * najc + j] = m;
+                if m != 0 {
+                    let counter =
+                        if j % 2 == 0 { &mut scratch.pos } else { &mut scratch.neg };
+                    add_mask(counter, m);
+                }
+            }
+            for b in 0..lane_len {
+                let mut p = 0i32;
+                let mut q = 0i32;
+                for (w, (&pp, &nn)) in
+                    scratch.pos.iter().zip(scratch.neg.iter()).enumerate()
+                {
+                    p |= (((pp >> b) & 1) as i32) << w;
+                    q |= (((nn >> b) & 1) as i32) << w;
+                }
+                scratch.totals[c * 64 + b] = p - q;
+            }
+        }
+
+        // --- 2. Walk the lane's samples in order.
+        for b in 0..lane_len {
+            let g = s0 + b;
+            draws.begin(g);
+            stats.steps += 1;
+            let target = label_of(&items[g]);
+            let input = input_of(&items[g]);
+
+            // Signs, from the scratch buffer (no per-step allocation):
+            // canonical order — neg-class draw first, exactly like
+            // class_signs / train_step_lazy.
+            scratch.signs[..nc].fill(0);
+            fill_signs(&mut scratch.signs, target, nc, || draws.neg_draw());
+            scratch.touched.clear();
+            let type1_inert = draws.type1_inert();
+
+            for c in 0..nc {
+                let sign = scratch.signs[c];
+                if sign == 0 {
+                    continue;
+                }
+                // The step's class sum: clamp at read, like the scalar
+                // engines read the T-clamped evaluation scratch.
+                let v = scratch.totals[c * 64 + b].clamp(-t, t) as f32;
+                let p_sel = (t as f32 - sign as f32 * v) / two_t;
+                if D::SKIPS_NONPOSITIVE_PSEL && p_sel <= 0.0 {
+                    continue;
+                }
+                for j in 0..najc {
+                    if !(draws.clause(c, j) < p_sel) {
+                        continue;
+                    }
+                    let out = ((scratch.fired[c * najc + j] >> b) & 1) != 0;
+                    let row = c * max_clauses + j;
+                    // Remember the pre-feedback revision stamp: a move
+                    // past it after this step means an action flipped
+                    // and the lane's speculation needs repair.
+                    scratch.touched.push((c as u32, j as u32, tm.row_rev(row)));
+                    if sign as i32 * polarity(j) == 1 {
+                        stats.activity.type1_clauses += 1;
+                        if type1_inert {
+                            continue;
+                        }
+                        for (w, &iw) in input.words().iter().enumerate() {
+                            let vm = word_mask(lits, w);
+                            let lo = w * 64;
+                            let n = (lits - lo).min(64);
+                            let (reinforce, weaken) = draws.type1_masks(c, j, lo, n, out);
+                            let (inc, dec) = if out {
+                                (iw & reinforce & vm, !iw & weaken & vm)
+                            } else {
+                                (0, weaken & vm)
+                            };
+                            let (ai, ad) = tm.apply_word_feedback(c, j, w, inc, dec);
+                            stats.activity.ta_increments += ai;
+                            stats.activity.ta_decrements += ad;
+                        }
+                    } else if out {
+                        stats.activity.type2_clauses += 1;
+                        for (w, &iw) in input.words().iter().enumerate() {
+                            let vm = word_mask(lits, w);
+                            let a = tm.action_words(c, j)[w];
+                            let eff =
+                                if fault_free { a } else { tm.fault().apply(c, j, w, a) };
+                            let inc = !iw & !eff & vm;
+                            let (ai, _) = tm.apply_word_feedback(c, j, w, inc, 0);
+                            stats.activity.ta_increments += ai;
+                        }
+                    }
+                }
+            }
+
+            // --- 3. Repair: re-AND only the clauses whose actions
+            // flipped during this step, for the remaining samples.
+            for k in 0..scratch.touched.len() {
+                let (cu, ju, rev_before) = scratch.touched[k];
+                let (c, j) = (cu as usize, ju as usize);
+                if tm.row_rev(c * max_clauses + j) <= rev_before {
+                    continue; // feedback landed but no action flipped
+                }
+                scratch.lane_flips += 1;
+                // Bits strictly after the current sample, within the
+                // lane's valid range (`b + 1 == 64` would overflow the
+                // shift — and has nothing left to repair).
+                let rem = if b >= 63 { 0 } else { valid & (!0u64 << (b + 1)) };
+                if rem == 0 {
+                    continue;
+                }
+                scratch.lits.clear();
+                let force = tm.push_eff_lits(c, j, &mut scratch.lits);
+                let new = clause_fired_mask(planes, lane, valid, true, force, &scratch.lits);
+                let slot = c * najc + j;
+                let old = scratch.fired[slot];
+                let pol = polarity(j);
+                let mut gained = new & !old & rem;
+                while gained != 0 {
+                    let bit = gained.trailing_zeros() as usize;
+                    scratch.totals[c * 64 + bit] += pol;
+                    gained &= gained - 1;
+                }
+                let mut lost = old & !new & rem;
+                while lost != 0 {
+                    let bit = lost.trailing_zeros() as usize;
+                    scratch.totals[c * 64 + bit] -= pol;
+                    lost &= lost - 1;
+                }
+                scratch.fired[slot] = (old & !rem) | (new & rem);
+            }
+        }
+    }
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tm::engine::{train_step_fast, train_step_lazy};
+    use crate::tm::params::TmShape;
+
+    fn shape() -> TmShape {
+        TmShape::iris()
+    }
+
+    fn random_rows(s: &TmShape, n: usize, rng: &mut Xoshiro256) -> Vec<(Input, usize)> {
+        (0..n)
+            .map(|i| {
+                let bits: Vec<bool> =
+                    (0..s.features).map(|_| rng.next_f32() < 0.5).collect();
+                (Input::pack(s, &bits), i % s.classes)
+            })
+            .collect()
+    }
+
+    /// Eager lane batches are bit-identical to the sequential
+    /// train_step_fast loop under the same refill discipline.
+    #[test]
+    fn eager_lane_matches_scalar_loop() {
+        let s = shape();
+        let p = TmParams::paper_offline(&s);
+        for &n in &[1usize, 5, 63, 64, 65, 130] {
+            let mut data_rng = Xoshiro256::new(0x1000 + n as u64);
+            let rows = random_rows(&s, n, &mut data_rng);
+            let planes = BitPlanes::from_labelled(&s, &rows);
+
+            let mut scalar = MultiTm::new(&s).unwrap();
+            let mut rng_a = Xoshiro256::new(7);
+            let mut rands = StepRands::draw(&mut rng_a, &s);
+            let mut act_a = EpochStats::default();
+            for (x, y) in &rows {
+                rands.refill(&mut rng_a, &s);
+                let a = train_step_fast(&mut scalar, x, *y, &p, &rands);
+                act_a.steps += 1;
+                act_a.activity.type1_clauses += a.type1_clauses;
+                act_a.activity.type2_clauses += a.type2_clauses;
+                act_a.activity.ta_increments += a.ta_increments;
+                act_a.activity.ta_decrements += a.ta_decrements;
+            }
+
+            let mut lane = MultiTm::new(&s).unwrap();
+            let mut rng_b = Xoshiro256::new(7);
+            let mut scratch = TrainScratch::seeded(&mut rng_b, &s);
+            let act_b = train_rows_seq(&mut lane, &rows, &planes, &p, &mut rng_b, &mut scratch);
+
+            assert_eq!(act_a, act_b, "n = {n}");
+            assert_eq!(scalar.ta().states(), lane.ta().states(), "n = {n}");
+            for c in 0..s.classes {
+                for j in 0..s.max_clauses {
+                    assert_eq!(scalar.action_words(c, j), lane.action_words(c, j), "n = {n}");
+                }
+            }
+        }
+    }
+
+    /// Low T makes selection (and flips) frequent: the repair path must
+    /// run and still be bit-identical.
+    #[test]
+    fn repair_path_exercised_at_low_t() {
+        let s = shape();
+        let mut p = TmParams::paper_offline(&s);
+        p.t = 1; // maximal selection pressure
+        let mut data_rng = Xoshiro256::new(0xF11);
+        let rows = random_rows(&s, 200, &mut data_rng);
+        let planes = BitPlanes::from_labelled(&s, &rows);
+
+        let mut scalar = MultiTm::new(&s).unwrap();
+        let mut rng_a = Xoshiro256::new(3);
+        let mut rands = StepRands::draw(&mut rng_a, &s);
+        for (x, y) in &rows {
+            rands.refill(&mut rng_a, &s);
+            train_step_fast(&mut scalar, x, *y, &p, &rands);
+        }
+
+        let mut lane = MultiTm::new(&s).unwrap();
+        let mut rng_b = Xoshiro256::new(3);
+        let mut scratch = TrainScratch::seeded(&mut rng_b, &s);
+        train_rows_seq(&mut lane, &rows, &planes, &p, &mut rng_b, &mut scratch);
+
+        assert_eq!(scalar.ta().states(), lane.ta().states());
+        assert!(
+            scratch.lane_flips() > 0,
+            "a fresh machine at T = 1 must flip actions mid-lane"
+        );
+        assert_eq!(scratch.lanes_walked(), 200usize.div_ceil(64) as u64);
+        assert!(scratch.mean_flips_per_lane() > 0.0);
+        scratch.reset_counters();
+        assert_eq!(scratch.lane_flips(), 0);
+        assert_eq!(scratch.lanes_walked(), 0);
+    }
+
+    /// The lazy lane walk is bit-identical to the train_step_lazy loop
+    /// (and therefore train_epoch's historical behaviour).
+    #[test]
+    fn lazy_lane_matches_scalar_lazy_loop() {
+        let s = shape();
+        for (ti, t) in [1i32, 15].into_iter().enumerate() {
+            let mut p = TmParams::paper_offline(&s);
+            p.t = t;
+            let plan = FeedbackPlan::new(&p);
+            let mut data_rng = Xoshiro256::new(0x2A + ti as u64);
+            let rows = random_rows(&s, 130, &mut data_rng);
+            let planes = BitPlanes::from_labelled(&s, &rows);
+
+            let mut scalar = MultiTm::new(&s).unwrap();
+            let mut rng_a = Xoshiro256::new(99);
+            for (x, y) in &rows {
+                train_step_lazy(&mut scalar, x, *y, &p, &plan, &mut rng_a);
+            }
+
+            let mut lane = MultiTm::new(&s).unwrap();
+            let mut rng_b = Xoshiro256::new(99);
+            let mut scratch = TrainScratch::new();
+            lane.train_plane_batch_lazy(&rows, &planes, &p, &plan, &mut rng_b, &mut scratch);
+
+            assert_eq!(scalar.ta().states(), lane.ta().states(), "T = {t}");
+            // The two generators must also end in the same position:
+            // identical consumption, draw for draw.
+            assert_eq!(rng_a.next_u64(), rng_b.next_u64(), "T = {t}");
+        }
+    }
+
+    /// Empty batches are a no-op.
+    #[test]
+    fn empty_batch_is_noop() {
+        let s = shape();
+        let p = TmParams::paper_offline(&s);
+        let mut tm = MultiTm::new(&s).unwrap();
+        let rows: Vec<(Input, usize)> = Vec::new();
+        let planes = BitPlanes::from_labelled(&s, &rows);
+        let mut rng = Xoshiro256::new(1);
+        let mut scratch = TrainScratch::new();
+        let stats = train_rows_seq(&mut tm, &rows, &planes, &p, &mut rng, &mut scratch);
+        assert_eq!(stats, EpochStats::default());
+        assert_eq!(scratch.lanes_walked(), 0);
+    }
+
+    /// One scratch serves differently-shaped machines back to back.
+    #[test]
+    fn scratch_survives_shape_changes() {
+        let small = shape();
+        let big = TmShape { classes: 2, max_clauses: 4, features: 40, states: 8 };
+        let mut scratch = TrainScratch::new();
+        for (si, s) in [&small, &big, &small].into_iter().enumerate() {
+            let p = TmParams::paper_offline(s);
+            let mut data_rng = Xoshiro256::new(0x600 + si as u64);
+            let rows = random_rows(s, 70, &mut data_rng);
+            let planes = BitPlanes::from_labelled(s, &rows);
+
+            let mut scalar = MultiTm::new(s).unwrap();
+            let mut rng_a = Xoshiro256::new(42);
+            let mut rands = StepRands::draw(&mut rng_a, s);
+            for (x, y) in &rows {
+                rands.refill(&mut rng_a, s);
+                train_step_fast(&mut scalar, x, *y, &p, &rands);
+            }
+
+            let mut lane = MultiTm::new(s).unwrap();
+            let mut rng_b = Xoshiro256::new(42);
+            let _ = StepRands::draw(&mut rng_b, s); // mirror the seed draw
+            train_rows_seq(&mut lane, &rows, &planes, &p, &mut rng_b, &mut scratch);
+            assert_eq!(scalar.ta().states(), lane.ta().states(), "round {si}");
+        }
+    }
+}

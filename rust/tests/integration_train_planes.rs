@@ -1,0 +1,411 @@
+//! Lane-speculative trainer ⇄ per-step engine differential suite.
+//!
+//! `MultiTm::train_plane_batch` must be **bit-identical** to running
+//! `train_step_fast` sample-by-sample with the same per-sample
+//! [`StepRands`] — TA states, action caches, activity counts and
+//! subsequent predictions — across everything that can perturb the
+//! lane speculation: non-×64 tails, mid-lane action flips (low-T
+//! configs that flip constantly), TA fault maps and clause-force
+//! overrides injected between batches, clones, over-provisioned
+//! active sets, and multiword literal rows. The lazy twin
+//! (`train_plane_batch_lazy`) is held to the same standard against
+//! `train_step_lazy`, generator position included; the serve-style
+//! keyed path is held to run-partition independence (any chunking of a
+//! `Learn` log trains to the same replica as applying it one update at
+//! a time).
+
+use tm_fpga::tm::params::SStyle;
+use tm_fpga::tm::train_planes::train_rows_seq;
+use tm_fpga::tm::update::{update_rands_into, ShardUpdate, UpdateKind};
+use tm_fpga::tm::*;
+
+fn random_rows(s: &TmShape, n: usize, rng: &mut Xoshiro256) -> Vec<(Input, usize)> {
+    (0..n)
+        .map(|i| {
+            let bits: Vec<bool> = (0..s.features).map(|_| rng.next_f32() < 0.5).collect();
+            (Input::pack(s, &bits), i % s.classes)
+        })
+        .collect()
+}
+
+fn assert_machines_identical(a: &MultiTm, b: &MultiTm, ctx: &str) {
+    assert_eq!(a.ta().states(), b.ta().states(), "TA states diverged: {ctx}");
+    let s = a.shape();
+    for c in 0..s.classes {
+        for j in 0..s.max_clauses {
+            assert_eq!(
+                a.action_words(c, j),
+                b.action_words(c, j),
+                "action cache diverged at ({c},{j}): {ctx}"
+            );
+        }
+    }
+}
+
+/// Drive the same batch schedule through the scalar per-step loop and
+/// the lane engine (identical rng streams) and assert bit-identity
+/// after every batch.
+fn assert_lane_matches_scalar(
+    shape: &TmShape,
+    params: &TmParams,
+    batch_sizes: &[usize],
+    fault_rate: f64,
+    seed: u64,
+) {
+    let mut scalar = MultiTm::new(shape).unwrap();
+    let mut lane = MultiTm::new(shape).unwrap();
+    if fault_rate > 0.0 {
+        let map =
+            FaultMap::even_spread(shape, fault_rate, Fault::StuckAt0, seed ^ 0x7A17).unwrap();
+        scalar.set_fault_map(map.clone());
+        lane.set_fault_map(map);
+    }
+    let mut data_rng = Xoshiro256::new(seed);
+    let mut rng_a = Xoshiro256::new(seed ^ 0xA);
+    let mut rng_b = Xoshiro256::new(seed ^ 0xA);
+    let mut rands = StepRands::draw(&mut rng_a, shape);
+    let mut scratch = TrainScratch::seeded(&mut rng_b, shape);
+    let mut act_a = EpochStats::default();
+    let mut act_b = EpochStats::default();
+    for (bi, &n) in batch_sizes.iter().enumerate() {
+        let rows = random_rows(shape, n, &mut data_rng);
+        for (x, y) in &rows {
+            rands.refill(&mut rng_a, shape);
+            let a = train_step_fast(&mut scalar, x, *y, params, &rands);
+            act_a.steps += 1;
+            act_a.activity.type1_clauses += a.type1_clauses;
+            act_a.activity.type2_clauses += a.type2_clauses;
+            act_a.activity.ta_increments += a.ta_increments;
+            act_a.activity.ta_decrements += a.ta_decrements;
+        }
+        let planes = BitPlanes::from_labelled(shape, &rows);
+        let b = train_rows_seq(&mut lane, &rows, &planes, params, &mut rng_b, &mut scratch);
+        act_b.steps += b.steps;
+        act_b.activity.type1_clauses += b.activity.type1_clauses;
+        act_b.activity.type2_clauses += b.activity.type2_clauses;
+        act_b.activity.ta_increments += b.activity.ta_increments;
+        act_b.activity.ta_decrements += b.activity.ta_decrements;
+        assert_eq!(act_a, act_b, "activity diverged after batch {bi} (n = {n})");
+        assert_machines_identical(&scalar, &lane, &format!("batch {bi} (n = {n})"));
+    }
+    // Predictions off the trained machines agree too.
+    let probe = random_rows(shape, 40, &mut data_rng);
+    for (i, (x, _)) in probe.iter().enumerate() {
+        assert_eq!(scalar.predict(x, params), lane.predict(x, params), "probe {i}");
+    }
+}
+
+#[test]
+fn eager_parity_iris_offline_mixed_tails() {
+    let s = TmShape::iris();
+    let p = TmParams::paper_offline(&s);
+    assert_lane_matches_scalar(&s, &p, &[1, 5, 63, 64, 65, 130, 2], 0.0, 0x51);
+}
+
+#[test]
+fn eager_parity_low_t_flip_storm() {
+    // T = 1 keeps selection probability maximal on a fresh machine:
+    // actions flip constantly mid-lane, exercising the repair path on
+    // nearly every sample.
+    let s = TmShape::iris();
+    let mut p = TmParams::paper_offline(&s);
+    p.t = 1;
+    assert_lane_matches_scalar(&s, &p, &[64, 64, 64, 130], 0.0, 0x52);
+
+    // And with boost (reinforcement always fires — maximal movement).
+    let mut pb = TmParams::paper_offline(&s);
+    pb.t = 2;
+    pb.boost_true_positive = true;
+    assert_lane_matches_scalar(&s, &pb, &[100, 100], 0.0, 0x53);
+}
+
+#[test]
+fn eager_parity_online_s1_and_canonical() {
+    let s = TmShape::iris();
+    assert_lane_matches_scalar(&s, &TmParams::paper_online(&s), &[70, 70], 0.0, 0x54);
+    let mut p = TmParams::paper_offline(&s);
+    p.s = 2.0;
+    p.s_style = SStyle::Canonical;
+    assert_lane_matches_scalar(&s, &p, &[70, 70], 0.0, 0x55);
+}
+
+#[test]
+fn eager_parity_multiword_faults_overprovisioning() {
+    for (i, s) in [
+        TmShape { classes: 3, max_clauses: 8, features: 40, states: 16 },
+        TmShape { classes: 2, max_clauses: 4, features: 64, states: 8 },
+    ]
+    .into_iter()
+    .enumerate()
+    {
+        let mut p = TmParams::paper_offline(&s);
+        p.t = 3;
+        p.active_clauses = s.max_clauses - 2;
+        p.active_classes = s.classes - 1;
+        assert_lane_matches_scalar(&s, &p, &[33, 65, 64], 0.20, 0x60 + i as u64);
+    }
+}
+
+/// Faults and clause forces injected *between* lane batches: the lane
+/// engine must pick up the new effective-literal algebra exactly like
+/// the scalar loop does.
+#[test]
+fn interleaved_fault_and_force_schedule() {
+    let s = TmShape::iris();
+    let p = TmParams::paper_offline(&s);
+    let mut scalar = MultiTm::new(&s).unwrap();
+    let mut lane = MultiTm::new(&s).unwrap();
+    let mut data_rng = Xoshiro256::new(0x99);
+    let mut rng_a = Xoshiro256::new(0x9A);
+    let mut rng_b = Xoshiro256::new(0x9A);
+    let mut rands = StepRands::draw(&mut rng_a, &s);
+    let mut scratch = TrainScratch::seeded(&mut rng_b, &s);
+    for round in 0..6 {
+        // Mutate both machines identically between batches.
+        match round % 3 {
+            0 => {
+                let map =
+                    FaultMap::even_spread(&s, 0.15, Fault::StuckAt1, 40 + round as u64)
+                        .unwrap();
+                scalar.set_fault_map(map.clone());
+                lane.set_fault_map(map);
+            }
+            1 => {
+                scalar.set_clause_fault(0, round % 16, Some(round % 2 == 0));
+                lane.set_clause_fault(0, round % 16, Some(round % 2 == 0));
+            }
+            _ => {
+                scalar.set_clause_fault(0, (round - 1) % 16, None);
+                lane.set_clause_fault(0, (round - 1) % 16, None);
+                scalar.set_fault_map(FaultMap::none(&s));
+                lane.set_fault_map(FaultMap::none(&s));
+            }
+        }
+        let rows = random_rows(&s, 40 + round * 13, &mut data_rng);
+        for (x, y) in &rows {
+            rands.refill(&mut rng_a, &s);
+            train_step_fast(&mut scalar, x, *y, &p, &rands);
+        }
+        let planes = BitPlanes::from_labelled(&s, &rows);
+        train_rows_seq(&mut lane, &rows, &planes, &p, &mut rng_b, &mut scratch);
+        assert_machines_identical(&scalar, &lane, &format!("round {round}"));
+    }
+}
+
+/// Clones forked mid-schedule keep bit-parity on both sides of the
+/// fork, sharing one scratch across all four machines.
+#[test]
+fn clones_keep_parity_with_shared_scratch() {
+    let s = TmShape::iris();
+    let mut p = TmParams::paper_offline(&s);
+    p.t = 2; // flip-heavy
+    let mut data_rng = Xoshiro256::new(0x77);
+    let warm = random_rows(&s, 90, &mut data_rng);
+    let cont_a = random_rows(&s, 70, &mut data_rng);
+    let cont_b = random_rows(&s, 70, &mut data_rng);
+
+    let mut scalar = MultiTm::new(&s).unwrap();
+    let mut lane = MultiTm::new(&s).unwrap();
+    let mut rng_a = Xoshiro256::new(0x78);
+    let mut rng_b = Xoshiro256::new(0x78);
+    let mut rands = StepRands::draw(&mut rng_a, &s);
+    let mut scratch = TrainScratch::seeded(&mut rng_b, &s);
+    for (x, y) in &warm {
+        rands.refill(&mut rng_a, &s);
+        train_step_fast(&mut scalar, x, *y, &p, &rands);
+    }
+    let warm_planes = BitPlanes::from_labelled(&s, &warm);
+    train_rows_seq(&mut lane, &warm, &warm_planes, &p, &mut rng_b, &mut scratch);
+    assert_machines_identical(&scalar, &lane, "warmup");
+
+    // Fork: the original continues on cont_a, the clone on cont_b.
+    let mut scalar_fork = scalar.clone();
+    let mut lane_fork = lane.clone();
+    for (x, y) in &cont_a {
+        rands.refill(&mut rng_a, &s);
+        train_step_fast(&mut scalar, x, *y, &p, &rands);
+    }
+    let planes_a = BitPlanes::from_labelled(&s, &cont_a);
+    train_rows_seq(&mut lane, &cont_a, &planes_a, &p, &mut rng_b, &mut scratch);
+    assert_machines_identical(&scalar, &lane, "original after fork");
+
+    for (x, y) in &cont_b {
+        rands.refill(&mut rng_a, &s);
+        train_step_fast(&mut scalar_fork, x, *y, &p, &rands);
+    }
+    let planes_b = BitPlanes::from_labelled(&s, &cont_b);
+    train_rows_seq(&mut lane_fork, &cont_b, &planes_b, &p, &mut rng_b, &mut scratch);
+    assert_machines_identical(&scalar_fork, &lane_fork, "clone after fork");
+}
+
+/// The lazy lane twin consumes the generator exactly like the per-step
+/// lazy loop, across shapes and a flip-heavy low-T config.
+#[test]
+fn lazy_parity_across_shapes() {
+    for (i, s) in [
+        TmShape::iris(),
+        TmShape { classes: 2, max_clauses: 4, features: 40, states: 8 },
+    ]
+    .into_iter()
+    .enumerate()
+    {
+        for t in [1i32, 15] {
+            let mut p = TmParams::paper_offline(&s);
+            p.t = t;
+            let plan = FeedbackPlan::new(&p);
+            let mut data_rng = Xoshiro256::new(0x200 + i as u64);
+            let rows = random_rows(&s, 130, &mut data_rng);
+            let mut scalar = MultiTm::new(&s).unwrap();
+            let mut rng_a = Xoshiro256::new(5);
+            for (x, y) in &rows {
+                train_step_lazy(&mut scalar, x, *y, &p, &plan, &mut rng_a);
+            }
+            let mut lane = MultiTm::new(&s).unwrap();
+            let mut rng_b = Xoshiro256::new(5);
+            let planes = BitPlanes::from_labelled(&s, &rows);
+            let mut scratch = TrainScratch::new();
+            lane.train_plane_batch_lazy(&rows, &planes, &p, &plan, &mut rng_b, &mut scratch);
+            assert_machines_identical(&scalar, &lane, &format!("shape {i}, T = {t}"));
+            assert_eq!(
+                rng_a.next_u64(),
+                rng_b.next_u64(),
+                "generator positions diverged (shape {i}, T = {t})"
+            );
+        }
+    }
+}
+
+/// train_epoch (now lane-backed) stays bit-identical to the historical
+/// per-step lazy loop on a machine carrying TA faults.
+#[test]
+fn train_epoch_parity_under_faults() {
+    let s = TmShape::iris();
+    let p = TmParams::paper_offline(&s);
+    let map = FaultMap::even_spread(&s, 0.2, Fault::StuckAt0, 9).unwrap();
+    let mut data_rng = Xoshiro256::new(0x300);
+    let rows = random_rows(&s, 100, &mut data_rng);
+
+    let mut by_epoch = MultiTm::new(&s).unwrap();
+    by_epoch.set_fault_map(map.clone());
+    let mut rng_a = Xoshiro256::new(31);
+    let stats = by_epoch.train_epoch(&rows, &p, &mut rng_a);
+    assert_eq!(stats.steps, rows.len());
+
+    let plan = FeedbackPlan::new(&p);
+    let mut by_step = MultiTm::new(&s).unwrap();
+    by_step.set_fault_map(map);
+    let mut rng_b = Xoshiro256::new(31);
+    for (x, y) in &rows {
+        train_step_lazy(&mut by_step, x, *y, &p, &plan, &mut rng_b);
+    }
+    assert_machines_identical(&by_epoch, &by_step, "train_epoch vs lazy loop");
+}
+
+/// Serve-style keyed randomness: any partition of a Learn log into
+/// coalesced runs trains to the same replica as applying the updates
+/// one at a time — run boundaries cannot leak into state.
+#[test]
+fn keyed_learn_runs_are_partition_independent() {
+    let s = TmShape::iris();
+    let p = TmParams::paper_offline(&s);
+    let base_seed = 0xF00D;
+    let mut data_rng = Xoshiro256::new(0x400);
+    let log: Vec<ShardUpdate> = (0..150)
+        .map(|i| {
+            let bits: Vec<bool> =
+                (0..s.features).map(|_| data_rng.next_f32() < 0.5).collect();
+            ShardUpdate {
+                seq: (i + 1) as u64,
+                kind: UpdateKind::Learn {
+                    input: Input::pack(&s, &bits),
+                    label: i % s.classes,
+                },
+            }
+        })
+        .collect();
+
+    // Reference: one update at a time.
+    let mut reference = MultiTm::new(&s).unwrap();
+    let mut rands = None;
+    for u in &log {
+        reference.apply_update_with(u, &p, base_seed, &mut rands);
+    }
+
+    fn learn_input(u: &ShardUpdate) -> &Input {
+        match &u.kind {
+            UpdateKind::Learn { input, .. } => input,
+            UpdateKind::ClauseFault { .. } => unreachable!(),
+        }
+    }
+    fn learn_label(u: &ShardUpdate) -> usize {
+        match &u.kind {
+            UpdateKind::Learn { label, .. } => *label,
+            UpdateKind::ClauseFault { .. } => unreachable!(),
+        }
+    }
+
+    for (pi, partition) in
+        [vec![150usize], vec![64, 64, 22], vec![1, 63, 64, 20, 2], vec![5; 30]]
+            .into_iter()
+            .enumerate()
+    {
+        assert_eq!(partition.iter().sum::<usize>(), log.len());
+        let mut lane = MultiTm::new(&s).unwrap();
+        let mut scratch = TrainScratch::new();
+        let mut off = 0usize;
+        for run_len in partition {
+            let run = &log[off..off + run_len];
+            off += run_len;
+            let rows: Vec<(Input, usize)> =
+                run.iter().map(|u| (learn_input(u).clone(), learn_label(u))).collect();
+            let planes = BitPlanes::from_labelled(&s, &rows);
+            lane.train_plane_batch(
+                &rows,
+                &planes,
+                &p,
+                |i, r| update_rands_into(r, &s, base_seed, run[i].seq),
+                &mut scratch,
+            );
+        }
+        assert_machines_identical(&reference, &lane, &format!("partition {pi}"));
+    }
+}
+
+/// Flip accounting: the observability counters move under a flip-heavy
+/// config and stay near zero on a converged machine — the regime the
+/// speculative engine bets on.
+#[test]
+fn flip_counters_reflect_convergence() {
+    let s = TmShape::iris();
+    let p = TmParams::paper_offline(&s);
+    // Learnable workload (per-class prototypes + noise): the machine
+    // must actually converge for the flip rate to decay.
+    let rows = tm_fpga::data::synthetic::prototype_dataset(s.classes, 110, s.features, 0.03, 0x500)
+        .unwrap()
+        .pack(&s);
+    let planes = BitPlanes::from_labelled(&s, &rows);
+
+    // Fresh machine: learning means flips.
+    let mut tm = MultiTm::new(&s).unwrap();
+    let mut rng = Xoshiro256::new(1);
+    let mut cold = TrainScratch::seeded(&mut rng, &s);
+    train_rows_seq(&mut tm, &rows, &planes, &p, &mut rng, &mut cold);
+    assert!(cold.lane_flips() > 0, "a fresh machine must flip while learning");
+
+    // Many epochs later: the same pass flips far less.
+    for _ in 0..20 {
+        let mut warm_rng = Xoshiro256::new(2);
+        let mut warm = TrainScratch::seeded(&mut warm_rng, &s);
+        train_rows_seq(&mut tm, &rows, &planes, &p, &mut warm_rng, &mut warm);
+        let _ = warm.mean_flips_per_lane();
+    }
+    let mut final_rng = Xoshiro256::new(3);
+    let mut converged = TrainScratch::seeded(&mut final_rng, &s);
+    train_rows_seq(&mut tm, &rows, &planes, &p, &mut final_rng, &mut converged);
+    assert!(
+        converged.mean_flips_per_lane() < cold.mean_flips_per_lane(),
+        "converged flips/lane {:.2} must undercut fresh flips/lane {:.2}",
+        converged.mean_flips_per_lane(),
+        cold.mean_flips_per_lane()
+    );
+}
