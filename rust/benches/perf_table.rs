@@ -170,6 +170,24 @@ fn main() {
         serve_b1
     );
 
+    // The ISSUE-6 recovery-latency scenario: worst-case shard recovery
+    // (decode + CRC-verify the snapshot, replay the retained log suffix)
+    // as a function of checkpoint cadence, on a 512-update Learn log.
+    // Dense checkpoints buy short replay at a per-interval snapshot
+    // cost; the trade-off is quantified in EXPERIMENTS.md §Robustness.
+    let recovery_reps = (iters / 10).max(3);
+    let recovery = [8u64, 64, 256].map(|interval| {
+        let (secs, replayed) = perf::recovery_comparison(512, interval, recovery_reps);
+        (interval, secs, replayed)
+    });
+    for (interval, secs, replayed) in &recovery {
+        println!(
+            "recovery restore+replay (ckpt interval {interval}, 512-update log): \
+             {:.3} ms ({replayed} updates replayed)",
+            secs * 1e3
+        );
+    }
+
     println!("\n=== §6 power table ===\n");
     match perf::power_table() {
         Ok(rows) => {
@@ -399,6 +417,18 @@ fn main() {
         reps: iters,
         items_per_rep: 1,
     });
+    for (interval, secs, _) in &recovery {
+        json_rows.push(harness::BenchResult {
+            name: format!(
+                "perf_row: recovery restore+replay (ckpt interval {interval}, 512-update log)"
+            ),
+            mean_s: *secs,
+            min_s: 0.0,
+            max_s: 0.0,
+            reps: recovery_reps,
+            items_per_rep: 1,
+        });
+    }
     let root = std::env::var("CARGO_MANIFEST_DIR").unwrap_or_else(|_| ".".into());
     match harness::write_json_next(&root, &json_rows) {
         Ok(path) => println!("\nwrote {path}"),

@@ -117,6 +117,12 @@ COMMANDS
                           [--shards N=2] [--events N=1000] [--batch N=64]
                           [--deadline TICKS=8] [--labelled F=0.2]
                           [--gap TICKS=1.0] [--seed N=42] [--warmup N=4]
+                          with --chaos-seed N: seeded fault drill (kills,
+                          stalls, checkpoint corruption) asserting
+                          post-recovery bit-identity   [--kills N=2]
+                          [--stalls N=1] [--corrupts N=1]
+                          [--malformed-every N=97] [--checkpoint-every N=32]
+                          [--recovery-lag OPS=0] [--degraded-depth N]
   perf                    §6 performance table (FPGA model vs software paths)
                           [--iters N=20] [--pjrt-steps N=60]
   power                   §6 power table (gating / over-provisioning)

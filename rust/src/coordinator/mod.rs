@@ -18,10 +18,13 @@ pub use metrics::{Curve, Stat};
 pub use monitor::{monitor_and_retrain, AccuracyMonitor, RetrainPolicy};
 pub use perf::{
     baseline_row, engine_row, fpga_model_row, native_row, perf_table, pjrt_epoch_row,
-    pjrt_row, plane_comparison, plane_infer_row, power_table, serve_comparison,
+    pjrt_row, plane_comparison, plane_infer_row, power_table, recovery_comparison,
+    serve_comparison,
 };
 pub use replay::{retention, run_with_replay};
-pub use soak::{run_soak, SoakConfig, SoakReport};
+pub use soak::{
+    run_chaos_soak, run_soak, ChaosReport, ChaosSoakConfig, SoakConfig, SoakReport,
+};
 pub use report::{figure_csv, figure_summary, sparkline, write_figure_csv};
 pub use sweep::{run_sweep, sweep_csv, SweepConfig, SweepPoint};
 pub use unlabelled::{confidence, unlabelled_pass, Confidence, PseudoLabelPolicy, UnseenClassDetector};

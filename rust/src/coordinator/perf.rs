@@ -350,14 +350,14 @@ pub fn serve_comparison(requests: usize, shards: usize, reps: usize) -> (f64, f6
         .collect();
 
     let arm = |n_shards: usize, max_batch: usize| -> (f64, f64) {
-        let bcfg = BatcherConfig { max_batch, latency_budget: 1 };
+        let bcfg = BatcherConfig { max_batch, latency_budget: 1, ..Default::default() };
         let mut best = f64::INFINITY;
         let mut width = 0.0;
         for rep in 0..=reps.max(1) {
-            let cfg = ServeConfig { shards: n_shards, params: params.clone(), base_seed: 7 };
+            let cfg = ServeConfig::new(n_shards, params.clone(), 7);
             let t0 = Instant::now();
             let mut server = ShardServer::new(&tm, &cfg).unwrap();
-            let drive = run_trace(&mut server, &events, &bcfg);
+            let drive = run_trace(&mut server, &events, &bcfg).unwrap();
             let outcome = server.finish().unwrap();
             let secs = t0.elapsed().as_secs_f64();
             assert_eq!(outcome.responses.len(), requests, "every request answered");
@@ -373,6 +373,63 @@ pub fn serve_comparison(requests: usize, shards: usize, reps: usize) -> (f64, f6
     let (micro_one, _) = arm(1, 64);
     let (micro_sharded, width) = arm(shards, 64);
     (batch1, micro_one, micro_sharded, width)
+}
+
+/// The PR-6 recovery-latency scenario: checkpoint interval vs replay
+/// cost. Builds a `total_updates`-long Learn log on a realistically
+/// trained machine, checkpoints at the last multiple of `interval`
+/// before the end of the log (the worst-case kill point for that
+/// cadence; `interval = 0` means genesis-only, replaying everything),
+/// then times exactly what `ShardServer` recovery does: decode + verify
+/// the snapshot, replay the log suffix on `(base_seed, seq)`-keyed
+/// randomness. Fastest of `reps` timed runs; returns
+/// `(seconds, replayed_updates)`. Each run's recovered state is checked
+/// identical across reps — timing a nondeterministic recovery would be
+/// meaningless.
+pub fn recovery_comparison(total_updates: u64, interval: u64, reps: usize) -> (f64, u64) {
+    use crate::serve::{restore, snapshot_bytes};
+    use crate::tm::update::{ShardUpdate, UpdateKind};
+    let shape = TmShape::iris();
+    let params = TmParams::paper_offline(&shape);
+    let data = bench_data(&shape);
+    let tm = trained_machine(&shape, &params, &data);
+    let base_seed = 7u64;
+    let log: Vec<ShardUpdate> = (1..=total_updates)
+        .map(|seq| {
+            let (x, y) = &data[(seq as usize - 1) % data.len()];
+            ShardUpdate { seq, kind: UpdateKind::Learn { input: x.clone(), label: *y } }
+        })
+        .collect();
+    let ckpt_seq = if interval == 0 {
+        0
+    } else {
+        (total_updates.saturating_sub(1) / interval) * interval
+    };
+    let mut live = tm.clone();
+    let mut rands: Option<StepRands> = None;
+    for u in &log[..ckpt_seq as usize] {
+        live.apply_update_with(u, &params, base_seed, &mut rands);
+    }
+    let snap = snapshot_bytes(&live, &params, ckpt_seq);
+    let replayed = total_updates - ckpt_seq;
+
+    let mut best = f64::INFINITY;
+    let mut digest: Option<u64> = None;
+    for _ in 0..reps.max(1) {
+        let t0 = Instant::now();
+        let mut restored = restore(&snap).unwrap();
+        let mut r: Option<StepRands> = None;
+        for u in &log[ckpt_seq as usize..] {
+            restored.machine.apply_update_with(u, &params, base_seed, &mut r);
+        }
+        best = best.min(t0.elapsed().as_secs_f64());
+        let d = restored.machine.state_digest();
+        if let Some(prev) = digest {
+            assert_eq!(prev, d, "recovery must be deterministic across reps");
+        }
+        digest = Some(d);
+    }
+    (best, replayed)
 }
 
 /// Measured throughput of the naive scalar baseline.

@@ -9,14 +9,21 @@
 //! the sequenced replica update log — a soak either agrees exactly or
 //! has found a real ordering/replication bug; there is no tolerance
 //! band.
+//!
+//! [`run_chaos_soak`] turns the same differential into a fault drill: a
+//! seeded [`ChaosPlan`] kills, stalls and checkpoint-corrupts shards
+//! mid-trace (optionally mixing malformed requests into the stream),
+//! and the report asserts that the *recovered* server still matches the
+//! never-failed oracle bit-for-bit — responses, final replica states,
+//! and exact accounting of shed and quarantined requests.
 
 use crate::data::blocks::{BlockPlan, SetAllocation};
 use crate::data::filter::ClassFilter;
 use crate::data::iris;
 use crate::data::online::{arrival_trace, RomSource, TraceConfig};
 use crate::serve::{
-    run_trace, BatcherConfig, DriveStats, ScalarOracle, ServeConfig, ServeEvent, ShardServer,
-    ShardStats,
+    run_trace, BatcherConfig, ChaosPlan, ChaosSpec, DriveStats, RecoveryStats, ScalarOracle,
+    ServeConfig, ServeEvent, ShardServer, ShardStats,
 };
 use crate::tm::clause::Input;
 use crate::tm::machine::MultiTm;
@@ -97,6 +104,75 @@ impl SoakReport {
     }
 }
 
+/// Chaos-soak configuration: a base soak plus the fault schedule's
+/// shape and the server's fault policy.
+#[derive(Debug, Clone)]
+pub struct ChaosSoakConfig {
+    pub soak: SoakConfig,
+    /// Seed for [`ChaosPlan::seeded`] — independent of the trace seed,
+    /// so one trace can be drilled under many schedules.
+    pub chaos_seed: u64,
+    pub kills: usize,
+    pub stalls: usize,
+    pub corrupts: usize,
+    /// Replace every Nth inference request's input with one packed
+    /// under the wrong shape (`0` = off) — exercises admission
+    /// quarantine on both arms identically.
+    pub malformed_every: usize,
+    /// Server checkpoint cadence (updates per snapshot marker).
+    pub checkpoint_every: u64,
+    /// Operations a dead shard waits before recovery (0 = next op).
+    pub recovery_lag: u64,
+    /// Degraded-mode absorption cap per surviving shard.
+    pub degraded_depth: u64,
+}
+
+impl Default for ChaosSoakConfig {
+    fn default() -> Self {
+        ChaosSoakConfig {
+            soak: SoakConfig::default(),
+            chaos_seed: 0xC4A0_5EED,
+            kills: 2,
+            stalls: 1,
+            corrupts: 1,
+            malformed_every: 97,
+            checkpoint_every: 32,
+            recovery_lag: 0,
+            degraded_depth: u64::MAX,
+        }
+    }
+}
+
+/// What one chaos soak produced.
+#[derive(Debug, Clone)]
+pub struct ChaosReport {
+    pub drive: DriveStats,
+    /// The generated fault schedule (for logs / reproduction).
+    pub plan: ChaosPlan,
+    /// Server responses, sorted by request id (shed ids absent).
+    pub responses: Vec<(u64, usize)>,
+    /// Request ids shed with an overload response, sorted.
+    pub shed: Vec<u64>,
+    pub recovery: RecoveryStats,
+    /// Id-matched response differences vs the oracle, with shed ids
+    /// excused (they are accounted, not lost).
+    pub mismatches: usize,
+    /// Every final shard replica is bit-identical to the oracle's
+    /// machine after the full update log.
+    pub replicas_match_oracle: bool,
+    /// `responses + shed` covers the admitted request count exactly.
+    pub accounting_exact: bool,
+    pub wall_s: f64,
+}
+
+impl ChaosReport {
+    /// Post-recovery bit-identity with the never-failed oracle run,
+    /// with every non-response explicitly accounted.
+    pub fn agrees(&self) -> bool {
+        self.mismatches == 0 && self.replicas_match_oracle && self.accounting_exact
+    }
+}
+
 /// Build the soak's event stream: warm-trained machine + packed trace.
 fn soak_events(cfg: &SoakConfig, shape: &TmShape) -> Result<(MultiTm, Vec<ServeEvent>)> {
     let params = TmParams::paper_offline(shape);
@@ -135,57 +211,151 @@ fn soak_events(cfg: &SoakConfig, shape: &TmShape) -> Result<(MultiTm, Vec<ServeE
     Ok((tm, events))
 }
 
-/// Run one soak: sharded server vs scalar oracle on the same trace.
-pub fn run_soak(cfg: &SoakConfig) -> Result<SoakReport> {
-    let shape = TmShape::iris();
-    let params = TmParams::paper_offline(&shape);
-    let bcfg = BatcherConfig { max_batch: cfg.max_batch, latency_budget: cfg.latency_budget };
-    bcfg.validate()?;
-    let (tm, events) = soak_events(cfg, &shape)?;
-
-    let scfg = ServeConfig { shards: cfg.shards, params: params.clone(), base_seed: cfg.seed };
-    let mut server = ShardServer::new(&tm, &scfg)?;
-    let t0 = Instant::now();
-    let drive = run_trace(&mut server, &events, &bcfg);
-    let outcome = server.finish()?;
-    let wall_s = t0.elapsed().as_secs_f64();
-
-    let mut oracle = ScalarOracle::new(tm, params, cfg.seed);
-    run_trace(&mut oracle, &events, &bcfg);
-    let expected = oracle.into_responses();
-
-    // Id-matched diff over the two id-sorted response lists: a wrong
-    // prediction counts once, and a dropped/extra row counts once —
-    // without skewing every later comparison the way a positional zip
-    // would after a single lost response.
-    let (a, b) = (&outcome.responses, &expected);
+/// Id-matched diff over two id-sorted response lists: a wrong
+/// prediction counts once, a row on only one side counts once — without
+/// skewing every later comparison the way a positional zip would after
+/// a single lost response. Oracle-only rows whose id is in `shed`
+/// (sorted) are excused: the server declined them *explicitly*.
+fn diff_responses(server: &[(u64, usize)], oracle: &[(u64, usize)], shed: &[u64]) -> usize {
+    let is_shed = |id: u64| shed.binary_search(&id).is_ok();
     let (mut i, mut j, mut mismatches) = (0usize, 0usize, 0usize);
-    while i < a.len() && j < b.len() {
-        match a[i].0.cmp(&b[j].0) {
+    while i < server.len() && j < oracle.len() {
+        match server[i].0.cmp(&oracle[j].0) {
             std::cmp::Ordering::Equal => {
-                if a[i].1 != b[j].1 {
+                if server[i].1 != oracle[j].1 {
                     mismatches += 1;
                 }
                 i += 1;
                 j += 1;
             }
             std::cmp::Ordering::Less => {
+                // Server-only row: the oracle answers everything, so
+                // this is always wrong.
                 mismatches += 1;
                 i += 1;
             }
             std::cmp::Ordering::Greater => {
-                mismatches += 1;
+                if !is_shed(oracle[j].0) {
+                    mismatches += 1;
+                }
                 j += 1;
             }
         }
     }
-    mismatches += (a.len() - i) + (b.len() - j);
+    mismatches += server.len() - i;
+    while j < oracle.len() {
+        if !is_shed(oracle[j].0) {
+            mismatches += 1;
+        }
+        j += 1;
+    }
+    mismatches
+}
+
+/// Run one soak: sharded server vs scalar oracle on the same trace.
+pub fn run_soak(cfg: &SoakConfig) -> Result<SoakReport> {
+    let shape = TmShape::iris();
+    let params = TmParams::paper_offline(&shape);
+    let bcfg = BatcherConfig {
+        max_batch: cfg.max_batch,
+        latency_budget: cfg.latency_budget,
+        expect_literals: Some(shape.literals()),
+    };
+    bcfg.validate()?;
+    let (tm, events) = soak_events(cfg, &shape)?;
+
+    let scfg = ServeConfig::new(cfg.shards, params.clone(), cfg.seed);
+    let mut server = ShardServer::new(&tm, &scfg)?;
+    let t0 = Instant::now();
+    let drive = run_trace(&mut server, &events, &bcfg)?;
+    let outcome = server.finish()?;
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    let mut oracle = ScalarOracle::new(tm, params, cfg.seed);
+    run_trace(&mut oracle, &events, &bcfg)?;
+    let expected = oracle.into_responses();
+    let mismatches = diff_responses(&outcome.responses, &expected, &[]);
 
     Ok(SoakReport {
         drive,
         responses: outcome.responses,
         shards: outcome.shards,
         mismatches,
+        wall_s,
+    })
+}
+
+/// Run one chaos soak: the same server-vs-oracle differential with a
+/// seeded fault schedule driving kills, stalls, checkpoint corruption
+/// and (optionally) malformed requests through the trace. The oracle
+/// arm never fails; agreement therefore proves post-recovery
+/// bit-identity, and the report carries the exact shed/quarantine
+/// accounting.
+pub fn run_chaos_soak(cfg: &ChaosSoakConfig) -> Result<ChaosReport> {
+    let shape = TmShape::iris();
+    let params = TmParams::paper_offline(&shape);
+    let bcfg = BatcherConfig {
+        max_batch: cfg.soak.max_batch,
+        latency_budget: cfg.soak.latency_budget,
+        expect_literals: Some(shape.literals()),
+    };
+    bcfg.validate()?;
+    let (tm, mut events) = soak_events(&cfg.soak, &shape)?;
+
+    // Malformed-request injection happens in the *trace*, upstream of
+    // both arms, so the admission quarantine fires identically for the
+    // server and the oracle.
+    if cfg.malformed_every > 0 {
+        let wrong_shape = TmShape { features: shape.features + 1, ..shape.clone() };
+        let mut infer_idx = 0usize;
+        for ev in events.iter_mut() {
+            if let ServeEvent::Infer { input, .. } = ev {
+                infer_idx += 1;
+                if infer_idx % cfg.malformed_every == 0 {
+                    *input = Input::pack(&wrong_shape, &vec![false; wrong_shape.features]);
+                }
+            }
+        }
+    }
+
+    let total_updates =
+        events.iter().filter(|e| matches!(e, ServeEvent::Update { .. })).count() as u64;
+    let spec = ChaosSpec { kills: cfg.kills, stalls: cfg.stalls, corrupts: cfg.corrupts };
+    let plan = ChaosPlan::seeded(cfg.chaos_seed, cfg.soak.shards, total_updates, &spec);
+
+    let mut scfg = ServeConfig::new(cfg.soak.shards, params.clone(), cfg.soak.seed);
+    scfg.fault.checkpoint_every = cfg.checkpoint_every;
+    scfg.fault.recovery_lag = cfg.recovery_lag;
+    scfg.fault.degraded_depth = cfg.degraded_depth;
+    let mut server = ShardServer::with_chaos(&tm, &scfg, plan.clone())?;
+    let t0 = Instant::now();
+    let drive = run_trace(&mut server, &events, &bcfg)?;
+    let outcome = server.finish()?;
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    let mut oracle = ScalarOracle::new(tm, params, cfg.soak.seed);
+    let oracle_drive = run_trace(&mut oracle, &events, &bcfg)?;
+    let oracle_digest = oracle.machine().state_digest();
+    let expected = oracle.into_responses();
+
+    let mismatches = diff_responses(&outcome.responses, &expected, &outcome.shed);
+    let replicas_match_oracle = !outcome.replicas.is_empty()
+        && outcome.replicas.iter().all(|r| r.state_digest() == oracle_digest);
+    // Both arms must have seen the same stream (quarantine included),
+    // and every admitted request must be either answered or shed.
+    let accounting_exact = drive == oracle_drive
+        && (outcome.responses.len() + outcome.shed.len()) as u64 == drive.infer_requests
+        && outcome.recovery.shed_requests == outcome.shed.len() as u64;
+
+    Ok(ChaosReport {
+        drive,
+        plan,
+        responses: outcome.responses,
+        shed: outcome.shed,
+        recovery: outcome.recovery,
+        mismatches,
+        replicas_match_oracle,
+        accounting_exact,
         wall_s,
     })
 }
@@ -207,5 +377,33 @@ mod tests {
         assert_eq!(rep.drive.width_sum, rep.drive.infer_requests);
         let width = rep.drive.mean_batch_width();
         assert!(width >= 1.0, "mean width {width}");
+    }
+
+    /// One quick chaos drill: kills + a stall + a checkpoint corruption
+    /// + malformed requests, still bit-identical after recovery. The
+    /// kill-at-every-seq sweep lives in
+    /// `rust/tests/integration_recovery.rs`.
+    #[test]
+    fn default_chaos_soak_recovers_and_agrees() {
+        let cfg = ChaosSoakConfig {
+            soak: SoakConfig { events: 400, warmup_epochs: 2, ..Default::default() },
+            checkpoint_every: 16,
+            malformed_every: 41,
+            ..Default::default()
+        };
+        let rep = run_chaos_soak(&cfg).unwrap();
+        assert!(!rep.plan.events.is_empty());
+        assert!(rep.drive.quarantined > 0, "malformed injection must fire");
+        assert!(
+            rep.agrees(),
+            "{} mismatches, replicas_match={}, accounting={}",
+            rep.mismatches,
+            rep.replicas_match_oracle,
+            rep.accounting_exact
+        );
+        assert!(
+            rep.recovery.recoveries >= rep.recovery.worker_panics.min(1),
+            "fired kills must be recovered"
+        );
     }
 }

@@ -124,6 +124,9 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         seed: cli.flag_u64("seed", d.seed)?,
         warmup_epochs: cli.flag_usize("warmup", d.warmup_epochs)?,
     };
+    if cli.flag("chaos-seed").is_some() {
+        return cmd_serve_chaos(cli, cfg);
+    }
     let rep = coordinator::run_soak(&cfg)?;
     println!(
         "serving soak: {} events over {} shard(s) (batch cap {}, deadline {} ticks)",
@@ -159,6 +162,70 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         Ok(())
     } else {
         bail!("{} responses diverged from the scalar oracle", rep.mismatches)
+    }
+}
+
+fn cmd_serve_chaos(cli: &Cli, soak: tm_fpga::coordinator::SoakConfig) -> Result<()> {
+    let d = tm_fpga::coordinator::ChaosSoakConfig::default();
+    let cfg = tm_fpga::coordinator::ChaosSoakConfig {
+        chaos_seed: cli.flag_u64("chaos-seed", d.chaos_seed)?,
+        kills: cli.flag_usize("kills", d.kills)?,
+        stalls: cli.flag_usize("stalls", d.stalls)?,
+        corrupts: cli.flag_usize("corrupts", d.corrupts)?,
+        malformed_every: cli.flag_usize("malformed-every", d.malformed_every)?,
+        checkpoint_every: cli.flag_u64("checkpoint-every", d.checkpoint_every)?,
+        recovery_lag: cli.flag_u64("recovery-lag", d.recovery_lag)?,
+        degraded_depth: cli.flag_u64("degraded-depth", d.degraded_depth)?,
+        soak,
+    };
+    let rep = coordinator::run_chaos_soak(&cfg)?;
+    println!(
+        "chaos soak: {} events over {} shard(s), seed {:#x}, {} scheduled fault(s), \
+         checkpoint every {} update(s)",
+        cfg.soak.events,
+        cfg.soak.shards,
+        cfg.chaos_seed,
+        rep.plan.events.len(),
+        cfg.checkpoint_every
+    );
+    println!(
+        "  inference requests : {} ({} responses, {} shed, {} quarantined)",
+        rep.drive.infer_requests,
+        rep.responses.len(),
+        rep.shed.len(),
+        rep.drive.quarantined
+    );
+    println!("  online updates     : {}", rep.drive.updates);
+    println!(
+        "  chaos events       : {} fired / {} skipped (target already down)",
+        rep.recovery.chaos_events_fired, rep.recovery.chaos_events_skipped
+    );
+    println!(
+        "  worker panics      : {} ({} recoveries)",
+        rep.recovery.worker_panics, rep.recovery.recoveries
+    );
+    println!(
+        "  snapshots          : {} stored, {} rejected as corrupt",
+        rep.recovery.snapshots_stored, rep.recovery.corrupt_snapshots_rejected
+    );
+    println!(
+        "  replay             : {} updates replayed, {} batches re-dispatched",
+        rep.recovery.replayed_updates, rep.recovery.redispatched_batches
+    );
+    println!("  wall               : {:.3}s", rep.wall_s);
+    if rep.agrees() {
+        println!(
+            "  oracle check       : OK (post-recovery bit-identical to the scalar oracle, \
+             shed/quarantine accounting exact)"
+        );
+        Ok(())
+    } else {
+        bail!(
+            "chaos soak diverged: {} mismatches, replicas_match_oracle={}, accounting_exact={}",
+            rep.mismatches,
+            rep.replicas_match_oracle,
+            rep.accounting_exact
+        )
     }
 }
 

@@ -10,11 +10,18 @@
 //! trace always produces the same batches, which is what lets the soak
 //! driver cross-check the threaded server bit-for-bit against a scalar
 //! oracle.
+//!
+//! Admission is where malformed requests die: when the config pins the
+//! model's literal width, a request packed under the wrong shape is
+//! rejected with a typed [`BadRequest`] *before* it can join a batch —
+//! a wrong-width row silently packed into a 64-sample bitplane lane
+//! would corrupt every other sample in the lane. Rejections are counted
+//! ([`DriveStats::quarantined`]), never silently dropped.
 
 use crate::serve::ServeBackend;
 use crate::tm::clause::Input;
 use crate::tm::update::UpdateKind;
-use anyhow::{ensure, Result};
+use anyhow::{ensure, Context, Result};
 
 /// A single-sample inference request admitted to the batcher. `id` is
 /// assigned in arrival order and is how responses are matched back.
@@ -23,6 +30,28 @@ pub struct PendingRequest {
     pub id: u64,
     pub input: Input,
 }
+
+/// A request rejected at admission: its input's literal count does not
+/// match the served model's. The id is consumed (responses keep their
+/// arrival-order alignment) and the request is quarantined.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BadRequest {
+    pub id: u64,
+    pub got_literals: usize,
+    pub want_literals: usize,
+}
+
+impl std::fmt::Display for BadRequest {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "request {} malformed: {} literals where the served model wants {}",
+            self.id, self.got_literals, self.want_literals
+        )
+    }
+}
+
+impl std::error::Error for BadRequest {}
 
 /// Micro-batching policy.
 #[derive(Debug, Clone)]
@@ -33,6 +62,16 @@ pub struct BatcherConfig {
     /// Flush when `now − oldest_arrival ≥ latency_budget` (virtual
     /// ticks). 0 means a batch never survives past its arrival tick.
     pub latency_budget: u64,
+    /// When set, requests whose input does not carry exactly this many
+    /// literals are rejected at admission with [`BadRequest`]. `None`
+    /// disables the check (trusted, pre-validated traces).
+    pub expect_literals: Option<usize>,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { max_batch: 64, latency_budget: 8, expect_literals: None }
+    }
 }
 
 impl BatcherConfig {
@@ -42,6 +81,13 @@ impl BatcherConfig {
             "BatcherConfig: max_batch must be in 1..=64 (one bitplane lane), got {}",
             self.max_batch
         );
+        if let Some(want) = self.expect_literals {
+            ensure!(
+                want > 0 && want % 2 == 0,
+                "BatcherConfig: expect_literals must be a positive even literal count \
+                 (x and ¬x pairs), got {want}"
+            );
+        }
         Ok(())
     }
 }
@@ -57,11 +103,12 @@ pub struct MicroBatcher {
 }
 
 impl MicroBatcher {
-    /// Panics on an invalid config (drivers validate user input first).
-    pub fn new(cfg: BatcherConfig) -> Self {
-        assert!(cfg.validate().is_ok(), "invalid BatcherConfig");
+    /// Errors on an invalid config — propagated, not panicked, so a bad
+    /// CLI flag surfaces as a message instead of a backtrace.
+    pub fn new(cfg: BatcherConfig) -> Result<Self> {
+        cfg.validate()?;
         let cap = cfg.max_batch;
-        MicroBatcher { cfg, open: Vec::with_capacity(cap), oldest: 0 }
+        Ok(MicroBatcher { cfg, open: Vec::with_capacity(cap), oldest: 0 })
     }
 
     pub fn len(&self) -> usize {
@@ -77,8 +124,25 @@ impl MicroBatcher {
         !self.open.is_empty() && now >= self.oldest.saturating_add(self.cfg.latency_budget)
     }
 
-    /// Admit one request arriving at `now`; returns the batch when this
-    /// push filled it.
+    /// Validate and admit one request arriving at `now`. A wrong-width
+    /// input is rejected *before* it can touch the open batch; on
+    /// success behaves as [`MicroBatcher::push`].
+    pub fn admit(
+        &mut self,
+        req: PendingRequest,
+        now: u64,
+    ) -> std::result::Result<Option<Vec<PendingRequest>>, BadRequest> {
+        if let Some(want) = self.cfg.expect_literals {
+            let got = req.input.literals();
+            if got != want {
+                return Err(BadRequest { id: req.id, got_literals: got, want_literals: want });
+            }
+        }
+        Ok(self.push(req, now))
+    }
+
+    /// Admit one request arriving at `now` without shape validation;
+    /// returns the batch when this push filled it.
     pub fn push(&mut self, req: PendingRequest, now: u64) -> Option<Vec<PendingRequest>> {
         if self.open.is_empty() {
             self.oldest = now;
@@ -123,6 +187,7 @@ impl ServeEvent {
 /// achieved batch width the perf rows report.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct DriveStats {
+    /// Requests admitted to batches (excludes quarantined ones).
     pub infer_requests: u64,
     pub updates: u64,
     pub batches: u64,
@@ -135,6 +200,10 @@ pub struct DriveStats {
     /// Summed width of all flushed batches (= `infer_requests` once the
     /// trace is fully drained).
     pub width_sum: u64,
+    /// Requests rejected at admission ([`BadRequest`]). Their ids are
+    /// consumed but never reach a backend; `infer_requests +
+    /// quarantined` equals the trace's `Infer` event count.
+    pub quarantined: u64,
 }
 
 enum FlushKind {
@@ -168,19 +237,22 @@ impl DriveStats {
 /// arrival order, inference requests are micro-batched, deadline flushes
 /// happen before any event at or past the deadline tick is processed,
 /// and the tail batch is flushed at end of trace. Request ids are
-/// assigned 0.. in arrival order over the `Infer` events.
+/// assigned 0.. in arrival order over the `Infer` events — including
+/// quarantined ones, so ids stay aligned between a backend and its
+/// oracle regardless of rejections.
 ///
 /// The whole function is deterministic given (`events`, `cfg`), so
 /// running it once against [`crate::serve::ShardServer`] and once
 /// against [`crate::serve::ScalarOracle`] scores the *same* batches
 /// against the *same* sequenced updates — the differential contract of
-/// `rust/tests/integration_serve.rs`.
+/// `rust/tests/integration_serve.rs`. Errors only on an invalid config;
+/// malformed *requests* are quarantined and counted, not fatal.
 pub fn run_trace<B: ServeBackend>(
     backend: &mut B,
     events: &[ServeEvent],
     cfg: &BatcherConfig,
-) -> DriveStats {
-    let mut batcher = MicroBatcher::new(cfg.clone());
+) -> Result<DriveStats> {
+    let mut batcher = MicroBatcher::new(cfg.clone()).context("serve trace driver")?;
     let mut stats = DriveStats::default();
     let mut next_id = 0u64;
     let mut clock = 0u64;
@@ -201,10 +273,14 @@ pub fn run_trace<B: ServeBackend>(
             ServeEvent::Infer { at_tick, input } => {
                 let req = PendingRequest { id: next_id, input: input.clone() };
                 next_id += 1;
-                stats.infer_requests += 1;
-                if let Some(batch) = batcher.push(req, *at_tick) {
-                    stats.record(batch.len(), FlushKind::Full);
-                    backend.infer_batch(batch);
+                match batcher.admit(req, *at_tick) {
+                    Ok(Some(batch)) => {
+                        stats.infer_requests += 1;
+                        stats.record(batch.len(), FlushKind::Full);
+                        backend.infer_batch(batch);
+                    }
+                    Ok(None) => stats.infer_requests += 1,
+                    Err(_rejected) => stats.quarantined += 1,
                 }
             }
             ServeEvent::Update { kind, .. } => {
@@ -217,7 +293,7 @@ pub fn run_trace<B: ServeBackend>(
         stats.record(batch.len(), FlushKind::Final);
         backend.infer_batch(batch);
     }
-    stats
+    Ok(stats)
 }
 
 #[cfg(test)]
@@ -255,20 +331,34 @@ mod tests {
         ServeEvent::Infer { at_tick: tick, input: input(bit) }
     }
 
+    fn cfg(max_batch: usize, latency_budget: u64) -> BatcherConfig {
+        BatcherConfig { max_batch, latency_budget, ..Default::default() }
+    }
+
     #[test]
     fn config_bounds_enforced() {
-        assert!(BatcherConfig { max_batch: 0, latency_budget: 1 }.validate().is_err());
-        assert!(BatcherConfig { max_batch: 65, latency_budget: 1 }.validate().is_err());
-        assert!(BatcherConfig { max_batch: 1, latency_budget: 0 }.validate().is_ok());
-        assert!(BatcherConfig { max_batch: 64, latency_budget: 0 }.validate().is_ok());
+        assert!(cfg(0, 1).validate().is_err());
+        assert!(cfg(65, 1).validate().is_err());
+        assert!(cfg(1, 0).validate().is_ok());
+        assert!(cfg(64, 0).validate().is_ok());
+        let odd = BatcherConfig { expect_literals: Some(31), ..Default::default() };
+        assert!(odd.validate().is_err(), "literal counts come in x/¬x pairs");
+        assert!(MicroBatcher::new(cfg(0, 1)).is_err(), "constructor propagates, not panics");
+    }
+
+    #[test]
+    fn invalid_config_is_a_typed_error_from_the_driver() {
+        let mut rec = Recorder::default();
+        let err = run_trace(&mut rec, &[infer_at(0, 0)], &cfg(0, 1));
+        assert!(err.is_err());
+        assert!(rec.widths.is_empty(), "nothing reaches the backend");
     }
 
     #[test]
     fn full_flush_at_max_batch() {
-        let cfg = BatcherConfig { max_batch: 4, latency_budget: 100 };
         let events: Vec<ServeEvent> = (0..10).map(|i| infer_at(0, i)).collect();
         let mut rec = Recorder::default();
-        let stats = run_trace(&mut rec, &events, &cfg);
+        let stats = run_trace(&mut rec, &events, &cfg(4, 100)).unwrap();
         assert_eq!(rec.widths, vec![4, 4, 2], "two full + one final flush");
         assert_eq!(rec.ids, (0..10).collect::<Vec<u64>>(), "ids in arrival order");
         assert_eq!(stats.full_flushes, 2);
@@ -276,17 +366,17 @@ mod tests {
         assert_eq!(stats.deadline_flushes, 0);
         assert_eq!(stats.infer_requests, 10);
         assert_eq!(stats.width_sum, 10);
+        assert_eq!(stats.quarantined, 0);
     }
 
     #[test]
     fn deadline_flush_before_late_event() {
-        let cfg = BatcherConfig { max_batch: 64, latency_budget: 5 };
         // Requests at ticks 0 and 3 share a batch (3 < 0+5); the request
         // at tick 5 arrives at the deadline, so the open batch flushes
         // first and the late request starts a new one.
         let events = vec![infer_at(0, 0), infer_at(3, 1), infer_at(5, 2)];
         let mut rec = Recorder::default();
-        let stats = run_trace(&mut rec, &events, &cfg);
+        let stats = run_trace(&mut rec, &events, &cfg(64, 5)).unwrap();
         assert_eq!(rec.widths, vec![2, 1]);
         assert_eq!(stats.deadline_flushes, 1);
         assert_eq!(stats.final_flushes, 1);
@@ -295,17 +385,15 @@ mod tests {
 
     #[test]
     fn zero_budget_never_coalesces_across_events() {
-        let cfg = BatcherConfig { max_batch: 64, latency_budget: 0 };
         let events = vec![infer_at(0, 0), infer_at(0, 1), infer_at(1, 2)];
         let mut rec = Recorder::default();
-        let stats = run_trace(&mut rec, &events, &cfg);
+        let stats = run_trace(&mut rec, &events, &cfg(64, 0)).unwrap();
         assert_eq!(rec.widths, vec![1, 1, 1]);
         assert_eq!(stats.batches, stats.infer_requests);
     }
 
     #[test]
     fn updates_pass_through_without_flushing() {
-        let cfg = BatcherConfig { max_batch: 8, latency_budget: 10 };
         let events = vec![
             infer_at(0, 0),
             ServeEvent::Update {
@@ -315,7 +403,7 @@ mod tests {
             infer_at(2, 1),
         ];
         let mut rec = Recorder::default();
-        let stats = run_trace(&mut rec, &events, &cfg);
+        let stats = run_trace(&mut rec, &events, &cfg(8, 10)).unwrap();
         assert_eq!(rec.updates, 1);
         assert_eq!(rec.widths, vec![2], "update did not split the batch");
         assert_eq!(stats.updates, 1);
@@ -324,11 +412,41 @@ mod tests {
 
     #[test]
     fn empty_trace_is_a_no_op() {
-        let cfg = BatcherConfig { max_batch: 8, latency_budget: 1 };
         let mut rec = Recorder::default();
-        let stats = run_trace(&mut rec, &[], &cfg);
+        let stats = run_trace(&mut rec, &[], &cfg(8, 1)).unwrap();
         assert_eq!(stats, DriveStats::default());
         assert!(rec.widths.is_empty());
         assert_eq!(stats.mean_batch_width(), 0.0);
+    }
+
+    /// A wrong-width request is rejected at admission with exact
+    /// accounting: its id is consumed (alignment preserved) but it never
+    /// reaches a batch or the backend.
+    #[test]
+    fn malformed_requests_are_quarantined_at_admission() {
+        let s = TmShape::iris();
+        let wrong_shape = TmShape { features: s.features + 3, ..s.clone() };
+        let malformed = ServeEvent::Infer {
+            at_tick: 1,
+            input: Input::pack(&wrong_shape, &vec![false; wrong_shape.features]),
+        };
+        let events = vec![infer_at(0, 0), malformed, infer_at(2, 1)];
+        let config = BatcherConfig {
+            max_batch: 8,
+            latency_budget: 10,
+            expect_literals: Some(s.literals()),
+        };
+        let mut rec = Recorder::default();
+        let stats = run_trace(&mut rec, &events, &config).unwrap();
+        assert_eq!(stats.quarantined, 1);
+        assert_eq!(stats.infer_requests, 2);
+        assert_eq!(rec.widths, vec![2], "the survivors still share one batch");
+        assert_eq!(rec.ids, vec![0, 2], "the malformed request's id 1 was consumed");
+
+        // Without the width contract the same trace admits everything.
+        let mut rec2 = Recorder::default();
+        let lax = run_trace(&mut rec2, &events, &cfg(8, 10)).unwrap();
+        assert_eq!(lax.quarantined, 0);
+        assert_eq!(lax.infer_requests, 3);
     }
 }

@@ -1,0 +1,164 @@
+//! Deterministic fault schedules for the serving stack.
+//!
+//! A [`ChaosPlan`] is a list of faults keyed to points of the sequenced
+//! update log — kill shard `k` after update `s`, stall worker `w` for
+//! `n` work items, corrupt the `n`-th checkpoint shard `c` ships. The
+//! supervisor arms each event exactly when the log clock reaches its
+//! trigger, so the same plan against the same trace produces the same
+//! failure history on every run — which is what lets the chaos soak
+//! assert *bit-identity* with the never-failed oracle rather than
+//! eyeballing "it recovered". Plans are either hand-built (the recovery
+//! suite's kill-at-every-seq sweep) or generated from a seed
+//! ([`ChaosPlan::seeded`], the `--chaos-seed` CLI path).
+//!
+//! Malformed-request injection is deliberately *not* here: requests are
+//! driver-side objects, so the chaos soak rewrites the trace itself
+//! (`coordinator::soak::run_chaos_soak`) and the batcher quarantines
+//! them at admission — both arms see the identical stream.
+
+use crate::tm::rng::Xoshiro256;
+
+/// How a scheduled kill lands.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KillKind {
+    /// The worker panics as soon as the kill command reaches it — after
+    /// the trigger update, before anything later.
+    Immediate,
+    /// The worker is armed and panics when its *next micro-batch*
+    /// arrives, mid-scoring — the batch is lost with it and must be
+    /// recovered by re-dispatch.
+    OnNextBatch,
+}
+
+/// One scheduled fault.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ChaosEvent {
+    /// Kill shard `shard` once update `after_seq` has been broadcast.
+    Kill { shard: usize, after_seq: u64, kind: KillKind },
+    /// Stall shard `shard` after update `after_seq`: its worker buffers
+    /// the next `items` work items without processing (or replying —
+    /// heartbeats go stale), then drains them in order and resumes.
+    Stall { shard: usize, after_seq: u64, items: usize },
+    /// Corrupt the `nth` (1-based) checkpoint shard `shard` ships to the
+    /// supervisor — a single byte flip, exactly what the restore CRC
+    /// must catch, forcing fallback to an older snapshot.
+    CorruptSnapshot { shard: usize, nth: u64 },
+}
+
+/// Shape of a seeded schedule: how many of each fault to draw.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChaosSpec {
+    pub kills: usize,
+    pub stalls: usize,
+    pub corrupts: usize,
+}
+
+/// A deterministic fault schedule.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ChaosPlan {
+    pub events: Vec<ChaosEvent>,
+}
+
+impl ChaosPlan {
+    /// Generate a schedule from a seed: `spec.kills` kills (alternating
+    /// immediate / on-next-batch) and `spec.stalls` stalls at distinct
+    /// update seqs drawn from `1..=total_updates`, spread over `shards`
+    /// shards, plus `spec.corrupts` checkpoint corruptions. The same
+    /// `(seed, shards, total_updates, spec)` always yields the same
+    /// plan.
+    pub fn seeded(seed: u64, shards: usize, total_updates: u64, spec: &ChaosSpec) -> ChaosPlan {
+        let mut plan = ChaosPlan::default();
+        if shards == 0 || total_updates == 0 {
+            return plan;
+        }
+        let mut rng = Xoshiro256::new(seed);
+        let mut used_seqs: Vec<u64> = Vec::new();
+        let mut draw_seq = |rng: &mut Xoshiro256| -> u64 {
+            // Distinct trigger seqs keep events from racing each other
+            // at one log point; with more events than updates the
+            // distinctness requirement is dropped rather than looping
+            // forever.
+            for _ in 0..64 {
+                let s = 1 + rng.next_below(total_updates as usize) as u64;
+                if !used_seqs.contains(&s) || used_seqs.len() >= total_updates as usize {
+                    used_seqs.push(s);
+                    return s;
+                }
+            }
+            1 + rng.next_below(total_updates as usize) as u64
+        };
+        for i in 0..spec.kills {
+            plan.events.push(ChaosEvent::Kill {
+                shard: rng.next_below(shards),
+                after_seq: draw_seq(&mut rng),
+                kind: if i % 2 == 0 { KillKind::Immediate } else { KillKind::OnNextBatch },
+            });
+        }
+        for _ in 0..spec.stalls {
+            plan.events.push(ChaosEvent::Stall {
+                shard: rng.next_below(shards),
+                after_seq: draw_seq(&mut rng),
+                items: 3 + rng.next_below(17),
+            });
+        }
+        for _ in 0..spec.corrupts {
+            plan.events.push(ChaosEvent::CorruptSnapshot {
+                shard: rng.next_below(shards),
+                nth: 1 + rng.next_below(3) as u64,
+            });
+        }
+        plan.events.sort_by_key(|e| match e {
+            ChaosEvent::Kill { after_seq, .. } | ChaosEvent::Stall { after_seq, .. } => *after_seq,
+            ChaosEvent::CorruptSnapshot { .. } => 0,
+        });
+        plan
+    }
+
+    /// Number of scheduled kill events.
+    pub fn kills(&self) -> usize {
+        self.events.iter().filter(|e| matches!(e, ChaosEvent::Kill { .. })).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seeded_plans_are_deterministic() {
+        let spec = ChaosSpec { kills: 3, stalls: 2, corrupts: 1 };
+        let a = ChaosPlan::seeded(7, 4, 100, &spec);
+        let b = ChaosPlan::seeded(7, 4, 100, &spec);
+        let c = ChaosPlan::seeded(8, 4, 100, &spec);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(a.kills(), 3);
+        assert_eq!(a.events.len(), 6);
+    }
+
+    #[test]
+    fn seeded_plans_respect_bounds() {
+        let spec = ChaosSpec { kills: 8, stalls: 8, corrupts: 4 };
+        let plan = ChaosPlan::seeded(0xC4A05, 3, 50, &spec);
+        for ev in &plan.events {
+            match ev {
+                ChaosEvent::Kill { shard, after_seq, .. }
+                | ChaosEvent::Stall { shard, after_seq, items: _ } => {
+                    assert!(*shard < 3);
+                    assert!((1..=50).contains(after_seq));
+                }
+                ChaosEvent::CorruptSnapshot { shard, nth } => {
+                    assert!(*shard < 3);
+                    assert!((1..=3).contains(nth));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_inputs_yield_empty_plans() {
+        let spec = ChaosSpec { kills: 2, stalls: 2, corrupts: 2 };
+        assert!(ChaosPlan::seeded(1, 0, 100, &spec).events.is_empty());
+        assert!(ChaosPlan::seeded(1, 4, 0, &spec).events.is_empty());
+    }
+}

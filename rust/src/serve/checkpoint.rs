@@ -1,0 +1,401 @@
+//! Versioned, checksummed serving snapshots: everything a shard replica
+//! needs to resume bit-identically from a point in the update log.
+//!
+//! The base checkpoint format (`tm::state`, "TMFP" v1) captures TA
+//! states only — enough for offline retrain flows, not for crash
+//! recovery of a *serving* replica, whose observable behaviour also
+//! depends on the clause-output force gates, the TA fault-gate words and
+//! the run-time params, and whose position in the sequenced update log
+//! must be known exactly for replay. This module's "TMFS" v2 format
+//! carries all of it:
+//!
+//! ```text
+//! magic    u32 = 0x544D_4653  ("TMFS")
+//! version  u32 = 2
+//! classes  u32, max_clauses u32, features u32, states u32
+//! seq      u64                      (last applied ShardUpdate seq)
+//! s        u32 (f32 bits), t i32
+//! active_clauses u32, active_classes u32
+//! boost    u8,  s_style u8, pad u8×2
+//! ta       u32[num_tas]             (TA states)
+//! force    u8[rows]                 (clause-output gates; 0xFF = free)
+//! and      u64[rows*words], or u64[rows*words]   (TA fault gates)
+//! a_crc    u32   (FNV-1a over the action-cache bytes at snapshot time)
+//! crc      u32   (FNV-1a over every preceding byte)
+//! ```
+//!
+//! Restore is **paranoid by design**: bad magic/version, any length
+//! mismatch, a trailing-CRC mismatch, invalid shape/params/gate
+//! encodings, and an action cache that no longer matches the TA states
+//! (`a_crc`, recomputed from the rebuilt cache) are all hard errors — a
+//! corrupted snapshot is rejected, never silently loaded, and the
+//! supervisor falls back to an older one plus a longer replay.
+//!
+//! The mutation clock (`MultiTm` uid/revision stamps) is deliberately
+//! *not* serialized: uids are process-unique and re-scoring caches bind
+//! to them, so a restored machine starting a fresh clock is exactly the
+//! conservative behaviour the cache contract requires. The `seq` stamp
+//! is the log clock — the only clock replay needs.
+
+use crate::tm::fault::FaultMap;
+use crate::tm::machine::MultiTm;
+use crate::tm::params::{SStyle, TmParams, TmShape};
+use crate::tm::state::fnv1a;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+const MAGIC: u32 = 0x544D_4653;
+const VERSION: u32 = 2;
+
+/// A decoded serving snapshot: the replica, the params it served under,
+/// and the seq of the last update it has applied.
+#[derive(Debug)]
+pub struct ServeSnapshot {
+    pub seq: u64,
+    pub params: TmParams,
+    pub machine: MultiTm,
+}
+
+fn push_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Little-endian cursor over the snapshot bytes; every read is
+/// bounds-checked so truncation anywhere surfaces as a typed error.
+struct Cursor<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.bytes.len() - self.pos < n {
+            bail!(
+                "serve snapshot: truncated ({} bytes left at offset {}, want {n})",
+                self.bytes.len() - self.pos,
+                self.pos
+            );
+        }
+        let s = &self.bytes[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(le_u32(self.take(4)?))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        let mut a = [0u8; 8];
+        a.copy_from_slice(b);
+        Ok(u64::from_le_bytes(a))
+    }
+}
+
+/// `b` must hold exactly 4 bytes (guaranteed by every caller's
+/// length-checked `take`/`split_at`/`chunks_exact`).
+fn le_u32(b: &[u8]) -> u32 {
+    u32::from_le_bytes([b[0], b[1], b[2], b[3]])
+}
+
+/// FNV-1a over the packed action-cache words — the cross-check that the
+/// TA payload and the action cache describe the same machine.
+fn action_crc(tm: &MultiTm) -> u32 {
+    let s = tm.shape();
+    let mut h: u32 = 0x811C_9DC5;
+    for c in 0..s.classes {
+        for j in 0..s.max_clauses {
+            for &w in tm.action_words(c, j) {
+                for b in w.to_le_bytes() {
+                    h ^= b as u32;
+                    h = h.wrapping_mul(0x0100_0193);
+                }
+            }
+        }
+    }
+    h
+}
+
+/// Serialize a serving snapshot: replica state + params, stamped with
+/// the last applied update `seq`.
+pub fn snapshot_bytes(tm: &MultiTm, params: &TmParams, seq: u64) -> Vec<u8> {
+    let s = tm.shape();
+    let rows = s.classes * s.max_clauses;
+    let (and_words, or_words) = tm.fault().words();
+    let mut buf = Vec::with_capacity(
+        48 + tm.ta().states().len() * 4 + rows + (and_words.len() + or_words.len()) * 8 + 8,
+    );
+    push_u32(&mut buf, MAGIC);
+    push_u32(&mut buf, VERSION);
+    push_u32(&mut buf, s.classes as u32);
+    push_u32(&mut buf, s.max_clauses as u32);
+    push_u32(&mut buf, s.features as u32);
+    push_u32(&mut buf, s.states);
+    push_u64(&mut buf, seq);
+    push_u32(&mut buf, params.s.to_bits());
+    push_u32(&mut buf, params.t as u32);
+    push_u32(&mut buf, params.active_clauses as u32);
+    push_u32(&mut buf, params.active_classes as u32);
+    buf.push(params.boost_true_positive as u8);
+    buf.push(match params.s_style {
+        SStyle::Canonical => 0,
+        SStyle::InactionBiased => 1,
+    });
+    buf.extend_from_slice(&[0u8, 0u8]);
+    for &st in tm.ta().states() {
+        push_u32(&mut buf, st);
+    }
+    for &f in tm.clause_force_codes() {
+        buf.push(f as u8); // -1 encodes as 0xFF
+    }
+    for &w in and_words.iter().chain(or_words) {
+        push_u64(&mut buf, w);
+    }
+    push_u32(&mut buf, action_crc(tm));
+    let crc = fnv1a(&buf);
+    push_u32(&mut buf, crc);
+    buf
+}
+
+/// Decode and verify a snapshot produced by [`snapshot_bytes`]. Any
+/// corruption or truncation is a hard error; a successful restore is a
+/// machine bit-identical (states, gates, action cache) to the one
+/// snapshotted.
+pub fn restore(bytes: &[u8]) -> Result<ServeSnapshot> {
+    // Trailing CRC over everything before it, checked first: a random
+    // bit-flip anywhere (header included) fails here before any field is
+    // trusted.
+    if bytes.len() < 4 {
+        bail!("serve snapshot: truncated ({} bytes)", bytes.len());
+    }
+    let (body, crc_bytes) = bytes.split_at(bytes.len() - 4);
+    let want_crc = le_u32(crc_bytes);
+    if fnv1a(body) != want_crc {
+        bail!("serve snapshot: CRC mismatch");
+    }
+    let mut r = Cursor { bytes: body, pos: 0 };
+    if r.u32()? != MAGIC {
+        bail!("serve snapshot: bad magic");
+    }
+    let ver = r.u32()?;
+    if ver != VERSION {
+        bail!("serve snapshot: unsupported version {ver}");
+    }
+    let shape = TmShape {
+        classes: r.u32()? as usize,
+        max_clauses: r.u32()? as usize,
+        features: r.u32()? as usize,
+        states: r.u32()?,
+    };
+    shape.validate().context("serve snapshot shape")?;
+    let seq = r.u64()?;
+    let params = TmParams {
+        s: f32::from_bits(r.u32()?),
+        t: r.u32()? as i32,
+        active_clauses: r.u32()? as usize,
+        active_classes: r.u32()? as usize,
+        boost_true_positive: match r.take(1)?[0] {
+            0 => false,
+            1 => true,
+            v => bail!("serve snapshot: invalid boost flag {v}"),
+        },
+        s_style: match r.take(1)?[0] {
+            0 => SStyle::Canonical,
+            1 => SStyle::InactionBiased,
+            v => bail!("serve snapshot: invalid s_style {v}"),
+        },
+    };
+    r.take(2)?; // pad
+    params.validate(&shape).context("serve snapshot params")?;
+
+    let n = shape.num_tas();
+    let mut states = Vec::with_capacity(n);
+    for chunk in r.take(n * 4)?.chunks_exact(4) {
+        states.push(le_u32(chunk));
+    }
+    let rows = shape.classes * shape.max_clauses;
+    let force: Vec<i8> = r.take(rows)?.iter().map(|&b| b as i8).collect();
+    let gate_words = rows * shape.words();
+    let mut and_words = Vec::with_capacity(gate_words);
+    for chunk in r.take(gate_words * 8)?.chunks_exact(8) {
+        let mut a = [0u8; 8];
+        a.copy_from_slice(chunk);
+        and_words.push(u64::from_le_bytes(a));
+    }
+    let mut or_words = Vec::with_capacity(gate_words);
+    for chunk in r.take(gate_words * 8)?.chunks_exact(8) {
+        let mut a = [0u8; 8];
+        a.copy_from_slice(chunk);
+        or_words.push(u64::from_le_bytes(a));
+    }
+    let want_action_crc = r.u32()?;
+    if r.pos != body.len() {
+        bail!("serve snapshot: {} trailing bytes", body.len() - r.pos);
+    }
+
+    let mut machine = MultiTm::from_states(&shape, states).context("serve snapshot TA states")?;
+    machine.load_clause_force_codes(&force).context("serve snapshot clause forces")?;
+    machine.set_fault_map(
+        FaultMap::from_words(&shape, and_words, or_words).context("serve snapshot fault gates")?,
+    );
+    // The action cache was rebuilt from the restored TA states; if its
+    // CRC disagrees with the one recorded at snapshot time, the states
+    // and the cache described different machines — refuse to serve it.
+    if action_crc(&machine) != want_action_crc {
+        bail!("serve snapshot: action cache does not match TA states");
+    }
+    Ok(ServeSnapshot { seq, params, machine })
+}
+
+/// Save a serving snapshot to a file.
+pub fn save_snapshot(tm: &MultiTm, params: &TmParams, seq: u64, path: &Path) -> Result<()> {
+    std::fs::write(path, snapshot_bytes(tm, params, seq))
+        .with_context(|| format!("writing {}", path.display()))
+}
+
+/// Load and verify a serving snapshot from a file.
+pub fn load_snapshot(path: &Path) -> Result<ServeSnapshot> {
+    let bytes =
+        std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    restore(&bytes).with_context(|| format!("restoring {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tm::fault::Fault;
+    use crate::tm::rng::Xoshiro256;
+    use crate::tm::update::{ShardUpdate, UpdateKind};
+
+    fn snapshot_machine() -> (MultiTm, TmParams) {
+        let s = TmShape::iris();
+        let mut rng = Xoshiro256::new(0x57A7E);
+        let mut tm = crate::testkit::gen::machine(&mut rng, &s);
+        let p = TmParams::paper_online(&s);
+        // Non-trivial gates on both levels so the payload sections carry
+        // real content.
+        tm.set_clause_fault(0, 3, Some(true));
+        tm.set_clause_fault(2, 1, Some(false));
+        tm.fault_map_mut().set(1, 2, 5, Fault::StuckAt0);
+        tm.fault_map_mut().set(0, 0, 31, Fault::StuckAt1);
+        (tm, p)
+    }
+
+    #[test]
+    fn roundtrip_preserves_full_serving_state() {
+        let (tm, p) = snapshot_machine();
+        let snap = restore(&snapshot_bytes(&tm, &p, 1234)).unwrap();
+        assert_eq!(snap.seq, 1234);
+        assert_eq!(snap.params, p);
+        assert_eq!(snap.machine.ta().states(), tm.ta().states());
+        assert_eq!(snap.machine.clause_force_codes(), tm.clause_force_codes());
+        assert_eq!(snap.machine.fault(), tm.fault());
+        assert_eq!(snap.machine.state_digest(), tm.state_digest());
+    }
+
+    #[test]
+    fn restored_replica_resumes_bit_identically() {
+        // The recovery contract in miniature: snapshot at seq c, replay
+        // updates (c, n] — the restored machine must land exactly where
+        // the unfailed one does.
+        let (mut live, p) = snapshot_machine();
+        let s = live.shape().clone();
+        let mut rng = Xoshiro256::new(0xFEED);
+        let mut log = Vec::new();
+        for seq in 1..=40u64 {
+            let kind = if seq % 7 == 0 {
+                UpdateKind::ClauseFault {
+                    class: rng.next_below(s.classes),
+                    clause: rng.next_below(s.max_clauses),
+                    force: [None, Some(false), Some(true)][rng.next_below(3)],
+                }
+            } else {
+                UpdateKind::Learn {
+                    input: crate::tm::clause::Input::pack(
+                        &s,
+                        &crate::testkit::gen::bool_vec(&mut rng, s.features, 0.5),
+                    ),
+                    label: rng.next_below(s.classes),
+                }
+            };
+            log.push(ShardUpdate { seq, kind });
+        }
+        let mut snap_bytes = None;
+        for u in &log {
+            live.apply_update(u, &p, 0xBA5E);
+            if u.seq == 25 {
+                snap_bytes = Some(snapshot_bytes(&live, &p, 25));
+            }
+        }
+        let snap = restore(&snap_bytes.unwrap()).unwrap();
+        let mut recovered = snap.machine;
+        for u in log.iter().filter(|u| u.seq > snap.seq) {
+            recovered.apply_update(u, &snap.params, 0xBA5E);
+        }
+        assert_eq!(recovered.ta().states(), live.ta().states());
+        assert_eq!(recovered.state_digest(), live.state_digest());
+    }
+
+    #[test]
+    fn every_single_bit_flip_is_detected() {
+        let (tm, p) = snapshot_machine();
+        let bytes = snapshot_bytes(&tm, &p, 7);
+        // Stride through the snapshot flipping one bit per position —
+        // header, payload sections and both CRCs included.
+        for pos in (0..bytes.len()).step_by(13) {
+            let mut bad = bytes.clone();
+            bad[pos] ^= 1 << (pos % 8);
+            assert!(restore(&bad).is_err(), "flip at byte {pos} went undetected");
+        }
+    }
+
+    #[test]
+    fn every_truncation_is_detected() {
+        let (tm, p) = snapshot_machine();
+        let bytes = snapshot_bytes(&tm, &p, 7);
+        for keep in (0..bytes.len()).step_by(17) {
+            assert!(restore(&bytes[..keep]).is_err(), "truncation to {keep} bytes loaded");
+        }
+        assert!(restore(&[]).is_err());
+        // Extension is rejected too (the trailing CRC moves).
+        let mut long = bytes.clone();
+        long.extend_from_slice(&[0u8; 8]);
+        assert!(restore(&long).is_err());
+    }
+
+    #[test]
+    fn bad_magic_and_version_rejected() {
+        let (tm, p) = snapshot_machine();
+        let good = snapshot_bytes(&tm, &p, 7);
+        // Patch the field, then re-stamp the trailing CRC so only the
+        // magic/version check can reject it.
+        let patch = |at: usize, v: u32| {
+            let mut b = good.clone();
+            b[at..at + 4].copy_from_slice(&v.to_le_bytes());
+            let n = b.len();
+            let crc = fnv1a(&b[..n - 4]);
+            b[n - 4..].copy_from_slice(&crc.to_le_bytes());
+            b
+        };
+        assert!(restore(&patch(0, 0x544D_4650)).is_err(), "v1 magic must not decode as v2");
+        assert!(restore(&patch(4, 3)).is_err(), "unknown version");
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let (tm, p) = snapshot_machine();
+        let dir = std::env::temp_dir().join("tmfpga_serve_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("shard0.snap");
+        save_snapshot(&tm, &p, 99, &path).unwrap();
+        let snap = load_snapshot(&path).unwrap();
+        assert_eq!(snap.seq, 99);
+        assert_eq!(snap.machine.state_digest(), tm.state_digest());
+        std::fs::remove_file(&path).ok();
+    }
+}

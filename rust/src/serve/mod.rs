@@ -14,21 +14,33 @@
 //!   reach the sample-sliced kernel (`tm::bitplane`, 64 samples per AND)
 //!   instead of the scalar path. Time is *virtual* (ticks supplied by the
 //!   caller), so every batching decision is deterministic and replayable.
-//! - [`ShardServer`] replicates one [`crate::tm::MultiTm`] across worker
-//!   threads. Labelled samples become sequenced [`crate::tm::ShardUpdate`]
-//!   log entries broadcast to every shard over its FIFO work channel;
-//!   each replica applies them in sequence order through
-//!   `MultiTm::apply_update` (word-parallel `train_step_fast` on
-//!   randomness derived from `(base_seed, seq)`), so all replicas
-//!   converge bit-identically and a micro-batch is scored against
-//!   exactly the updates that arrived before its flush — on whichever
-//!   shard it lands.
+//!   Malformed requests (wrong literal width) are rejected at admission
+//!   with a typed [`BadRequest`] and quarantined — counted, never packed
+//!   into a lane they would corrupt.
+//! - [`ShardServer`] (`supervisor`) replicates one [`crate::tm::MultiTm`]
+//!   across supervised worker threads (`shard`). Labelled samples become
+//!   sequenced [`crate::tm::ShardUpdate`] log entries broadcast to every
+//!   shard over its FIFO work channel; each replica applies them in
+//!   sequence order on randomness derived from `(base_seed, seq)`, so
+//!   all replicas converge bit-identically and a micro-batch is scored
+//!   against exactly the updates that arrived before its flush — on
+//!   whichever shard it lands.
+//! - **Fault tolerance** (PR 6): workers run under `catch_unwind` and
+//!   periodically ship checksummed snapshots (`checkpoint`); the
+//!   supervisor respawns a dead shard from its newest valid checkpoint,
+//!   replays the retained log suffix and re-dispatches its unscored
+//!   batches — recovered runs are bit-identical to unfailed ones. Under
+//!   overload (all shards down, or survivors past
+//!   [`FaultPolicy::degraded_depth`]) requests are *shed* with explicit
+//!   accounting, never silently dropped. Deterministic fault schedules
+//!   ([`ChaosPlan`], `chaos`) drive the whole machinery under test.
 //! - [`ScalarOracle`] is the single-threaded reference: the same update
 //!   log applied to one machine, every response computed by the scalar
 //!   row-major `predict`. The soak driver (`coordinator::soak`) pins the
 //!   server's responses **bit-identical** to the oracle's across shard
-//!   counts, batch widths and mid-stream fault injection
-//!   (`rust/tests/integration_serve.rs`).
+//!   counts, batch widths, mid-stream fault injection and injected
+//!   worker failures (`rust/tests/integration_serve.rs`,
+//!   `rust/tests/integration_recovery.rs`).
 //!
 //! MATADOR (arXiv 2403.10538) and the runtime-tunable eFPGA TM
 //! (arXiv 2502.07823) both make the point that edge TM deployments are
@@ -36,14 +48,24 @@
 //! run-time reconfiguration — not in the core datapath.
 
 pub mod batcher;
+pub mod chaos;
+pub mod checkpoint;
 pub mod oracle;
 pub mod shard;
+pub mod supervisor;
 
 use crate::tm::update::UpdateKind;
 
-pub use batcher::{run_trace, BatcherConfig, DriveStats, MicroBatcher, PendingRequest, ServeEvent};
+pub use batcher::{
+    run_trace, BadRequest, BatcherConfig, DriveStats, MicroBatcher, PendingRequest, ServeEvent,
+};
+pub use chaos::{ChaosEvent, ChaosPlan, ChaosSpec, KillKind};
+pub use checkpoint::{load_snapshot, restore, save_snapshot, snapshot_bytes, ServeSnapshot};
 pub use oracle::ScalarOracle;
-pub use shard::{MicroBatch, ServeConfig, ServeOutcome, ShardServer, ShardStats};
+pub use shard::{MicroBatch, ShardStats};
+pub use supervisor::{
+    FaultPolicy, RecoveryStats, ServeConfig, ServeOutcome, ShardServer, RETAINED_SNAPSHOTS,
+};
 
 /// Anything that can consume the deterministic event stream produced by
 /// [`run_trace`]: the sharded server and the scalar oracle implement

@@ -79,8 +79,8 @@ mod tests {
     fn oracle_is_the_sequential_semantics() {
         let s = TmShape::iris();
         let p = TmParams::paper_offline(&s);
-        let tm = MultiTm::new(&s).unwrap();
         let mut rng = Xoshiro256::new(0x0AC1E);
+        let tm = crate::testkit::gen::machine(&mut rng, &s);
         let events: Vec<ServeEvent> = (0..60)
             .map(|i| {
                 let input =
@@ -95,9 +95,9 @@ mod tests {
                 }
             })
             .collect();
-        let cfg = BatcherConfig { max_batch: 1, latency_budget: 0 };
+        let cfg = BatcherConfig { max_batch: 1, latency_budget: 0, ..Default::default() };
         let mut oracle = ScalarOracle::new(tm.clone(), p.clone(), 0xBEE);
-        run_trace(&mut oracle, &events, &cfg);
+        run_trace(&mut oracle, &events, &cfg).unwrap();
         let got = oracle.into_responses();
 
         // Hand-rolled: with max_batch 1 every request is served at its

@@ -1,8 +1,8 @@
-//! The shard pool: replicated machines behind FIFO work channels.
+//! Shard workers: replicated machines behind FIFO work channels.
 //!
-//! Each shard worker owns a full replica of the initial [`MultiTm`] and a
-//! `std::sync::mpsc` receiver. The dispatcher (whoever drives
-//! [`crate::serve::run_trace`]) broadcasts every sequenced
+//! Each shard worker owns a full replica of the served [`MultiTm`] and a
+//! `std::sync::mpsc` receiver. The supervisor
+//! ([`crate::serve::ShardServer`]) broadcasts every sequenced
 //! [`ShardUpdate`] to *all* shards and deals flushed micro-batches
 //! round-robin to one shard each. Because each channel is FIFO and
 //! updates are sent before any batch that flushed after them, a replica
@@ -22,13 +22,25 @@
 //! same updates one by one: randomness is keyed per update, so batch
 //! shape cannot leak into replica state.
 //!
-//! Shutdown is by channel closure: [`ShardServer::finish`] drops the
-//! work senders, workers drain and exit, and the response channel closes
-//! once the last worker clone of its sender is gone — no sentinel
-//! messages, no possibility of a worker outliving the pool.
+//! Since PR 6 the worker loop runs under `catch_unwind`: a panic —
+//! organic or injected by the chaos harness ([`ChaosCmd`]) — is caught
+//! at the thread boundary, reported as a [`Reply::Dead`] notice, and
+//! surfaced through the join as a `panicked` exit instead of poisoning
+//! the pool; the supervisor then respawns the shard from its latest
+//! valid checkpoint and replays the retained log suffix. Workers also
+//! answer [`Work::Snapshot`] markers with a checksummed
+//! (`serve::checkpoint`) snapshot of their replica stamped with the last
+//! applied seq, and honour deterministic stall windows (buffer `n` work
+//! items unprocessed, then drain them in order — delaying, never
+//! reordering).
+//!
+//! Shutdown is by channel closure: the supervisor drops the work
+//! senders, workers drain and exit (returning a final snapshot for
+//! post-trace state checks), and the response channel closes once the
+//! last worker clone of its sender is gone — no sentinel messages, no
+//! possibility of a worker outliving the pool.
 
-use crate::serve::batcher::PendingRequest;
-use crate::serve::ServeBackend;
+use crate::serve::checkpoint;
 use crate::tm::bitplane::BitPlanes;
 use crate::tm::clause::Input;
 use crate::tm::machine::MultiTm;
@@ -36,9 +48,10 @@ use crate::tm::params::TmParams;
 use crate::tm::rng::StepRands;
 use crate::tm::train_planes::TrainScratch;
 use crate::tm::update::{update_rands_into, ShardUpdate, UpdateKind};
-use anyhow::{anyhow, ensure, Result};
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc;
-use std::sync::Arc;
+use std::sync::{Arc, Once};
 use std::thread::JoinHandle;
 
 /// A flushed micro-batch: request ids plus their packed inputs. The
@@ -52,22 +65,15 @@ pub struct MicroBatch {
     pub inputs: Vec<Input>,
 }
 
-/// Shard-pool configuration.
-#[derive(Debug, Clone)]
-pub struct ServeConfig {
-    /// Worker replicas (≥ 1).
-    pub shards: usize,
-    /// Run-time parameters every replica serves and learns under.
-    pub params: TmParams,
-    /// Base seed of the replica update log's derived randomness.
-    pub base_seed: u64,
-}
-
-/// Per-shard work counters, reported by [`ShardServer::finish`].
+/// Per-shard work counters, reported by
+/// [`crate::serve::ShardServer::finish`]. Counters are summed across a
+/// shard's incarnations; replayed updates and re-dispatched batches
+/// count again on the incarnation that re-applies them.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ShardStats {
     pub shard: usize,
-    /// Sequenced updates applied by this replica (same on every shard).
+    /// Sequenced updates applied by this replica (same on every shard in
+    /// a failure-free run).
     pub updates: u64,
     /// Micro-batches this shard scored.
     pub batches: u64,
@@ -75,193 +81,333 @@ pub struct ShardStats {
     pub samples: u64,
 }
 
-/// What one drive through the server produced.
-#[derive(Debug)]
-pub struct ServeOutcome {
-    /// `(request_id, predicted_class)`, sorted by request id.
-    pub responses: Vec<(u64, usize)>,
-    /// Per-shard work counters, in shard order.
-    pub shards: Vec<ShardStats>,
-    /// Updates broadcast over the pool's lifetime.
-    pub updates: u64,
-}
-
-enum Work {
-    /// Shared, not cloned: the dispatcher is the serialization point of
+/// Work items a shard worker consumes, in FIFO order.
+pub(crate) enum Work {
+    /// Shared, not cloned: the supervisor is the serialization point of
     /// the serving loop, so a broadcast costs one refcount bump per
     /// shard instead of a deep copy of the update's packed input.
     Update(Arc<ShardUpdate>),
     Batch(MicroBatch),
+    /// Snapshot the replica now (at the seq of the last applied update)
+    /// and ship it to the supervisor as [`Reply::Snapshot`].
+    Snapshot,
+    Chaos(ChaosCmd),
+}
+
+/// Injected-fault commands (sent only by a supervisor driving a
+/// [`crate::serve::ChaosPlan`]).
+#[derive(Debug, Clone, Copy)]
+pub(crate) enum ChaosCmd {
+    /// Panic immediately (unwound at the thread boundary, reported,
+    /// recovered by the supervisor).
+    Die,
+    /// Arm the worker: panic when the next micro-batch arrives, losing
+    /// the batch with it.
+    DieOnNextBatch,
+    /// Buffer the next `items` work items unprocessed (no replies, no
+    /// heartbeats), then drain them in order and resume.
+    Stall { items: usize },
+}
+
+/// What workers send back on the (unbounded) response channel.
+pub(crate) enum Reply {
+    /// A scored micro-batch; `applied_seq` doubles as the shard's
+    /// heartbeat (the log position it has provably reached).
+    Scored { shard: usize, ids: Vec<u64>, preds: Vec<usize>, applied_seq: u64 },
+    /// A checksummed replica snapshot answering a [`Work::Snapshot`]
+    /// marker, stamped with the last applied seq.
+    Snapshot { shard: usize, seq: u64, bytes: Vec<u8> },
+    /// The worker's loop panicked (chaos kill or organic bug); sent from
+    /// the `catch_unwind` boundary just before the thread exits.
+    Dead { shard: usize, gen: u64, cause: String },
+}
+
+/// How a worker thread ended, returned through its join handle.
+pub(crate) struct WorkerExit {
+    pub stats: ShardStats,
+    /// Snapshot of the final replica state (clean exits only) — the
+    /// supervisor decodes these for [`crate::serve::ServeOutcome`]'s
+    /// post-trace replica checks.
+    pub final_snapshot: Option<Vec<u8>>,
+    pub panicked: bool,
 }
 
 /// Work-queue depth per shard. Bounded so a dispatcher outrunning its
 /// shards blocks (backpressure) instead of buffering the whole trace in
 /// channel memory; deep enough that the bound is never felt at sane
 /// batch sizes. Deadlock-free by construction: workers drain their
-/// queue unconditionally and only ever send on the *unbounded* response
-/// channel, so a blocked dispatcher always unblocks.
-const WORK_QUEUE_DEPTH: usize = 1024;
+/// queue unconditionally (stalled workers still *receive* — they buffer)
+/// and only ever send on the *unbounded* response channel, so a blocked
+/// dispatcher always unblocks.
+pub(crate) const WORK_QUEUE_DEPTH: usize = 1024;
 
-/// The running shard pool. Feed it through the [`ServeBackend`] trait
-/// (usually via [`crate::serve::run_trace`]), then call
-/// [`ShardServer::finish`] to join the workers and collect responses
-/// (responses accumulate until then — drain per-trace, not per-epoch).
-pub struct ShardServer {
-    senders: Vec<mpsc::SyncSender<Work>>,
-    handles: Vec<JoinHandle<ShardStats>>,
-    results: mpsc::Receiver<(Vec<u64>, Vec<usize>)>,
-    next_shard: usize,
-    seq: u64,
+/// Marker panic payload for chaos kills: the quiet hook (installed once,
+/// process-wide) suppresses the default "thread panicked" stderr report
+/// for these — they are *scheduled* faults whose whole point is to be
+/// caught and recovered, and libtest does not capture spawned threads'
+/// panic output — while leaving organic panics as loud as ever.
+pub(crate) struct ChaosKill;
+
+static QUIET_CHAOS_HOOK: Once = Once::new();
+
+pub(crate) fn install_quiet_chaos_hook() {
+    QUIET_CHAOS_HOOK.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            if info.payload().downcast_ref::<ChaosKill>().is_none() {
+                prev(info);
+            }
+        }));
+    });
 }
 
-impl ShardServer {
-    /// Spawn `cfg.shards` workers, each owning a clone of `tm`.
-    pub fn new(tm: &MultiTm, cfg: &ServeConfig) -> Result<Self> {
-        ensure!(cfg.shards >= 1, "ServeConfig: shards must be >= 1, got {}", cfg.shards);
-        cfg.params.validate(tm.shape())?;
-        let (res_tx, res_rx) = mpsc::channel();
-        let mut senders = Vec::with_capacity(cfg.shards);
-        let mut handles = Vec::with_capacity(cfg.shards);
-        for shard in 0..cfg.shards {
-            let (tx, rx) = mpsc::sync_channel::<Work>(WORK_QUEUE_DEPTH);
-            let mut replica = tm.clone();
-            let params = cfg.params.clone();
-            let base_seed = cfg.base_seed;
-            let out = res_tx.clone();
-            handles.push(std::thread::spawn(move || {
-                let mut stats = ShardStats { shard, updates: 0, batches: 0, samples: 0 };
-                // Per-worker randomness scratch (single-update runs) and
-                // lane scratch (coalesced Learn runs), allocated once.
-                let mut rands: Option<StepRands> = None;
-                let mut scratch = TrainScratch::new();
-                // Consecutive Learn updates coalesce into a pending run
-                // and train through the lane-speculative engine in one
-                // ≤64-wide batch. Because the lane path is bit-identical
-                // to applying each update in sequence (randomness is
-                // keyed by `(base_seed, seq)`, not by batch shape), run
-                // boundaries — queue drained, fault edit, batch to
-                // score, full lane, shutdown — cannot affect results.
-                let mut run: Vec<Arc<ShardUpdate>> = Vec::new();
-                'worker: loop {
-                    // Block only with an empty pending run (the run is
-                    // always flushed before the worker sleeps).
-                    let first = match rx.recv() {
-                        Ok(w) => w,
-                        Err(_) => break 'worker,
-                    };
-                    let mut next = Some(first);
-                    while let Some(work) = next.take() {
-                        match work {
-                            Work::Update(u) => {
-                                stats.updates += 1;
-                                match &u.kind {
-                                    UpdateKind::Learn { .. } => {
-                                        run.push(u);
-                                        if run.len() == 64 {
-                                            flush_learn_run(
-                                                &mut replica,
-                                                &mut run,
-                                                &params,
-                                                base_seed,
-                                                &mut rands,
-                                                &mut scratch,
-                                            );
-                                        }
-                                    }
-                                    UpdateKind::ClauseFault { .. } => {
-                                        // Fault edits must land in log
-                                        // order relative to the Learns
-                                        // around them.
-                                        flush_learn_run(
-                                            &mut replica,
-                                            &mut run,
-                                            &params,
-                                            base_seed,
-                                            &mut rands,
-                                            &mut scratch,
-                                        );
-                                        replica.apply_update_with(
-                                            &u, &params, base_seed, &mut rands,
-                                        );
-                                    }
-                                }
-                            }
-                            Work::Batch(b) => {
-                                // Score against every update received
-                                // before the batch (FIFO order).
-                                flush_learn_run(
-                                    &mut replica,
-                                    &mut run,
-                                    &params,
-                                    base_seed,
-                                    &mut rands,
-                                    &mut scratch,
-                                );
-                                let planes =
-                                    BitPlanes::from_inputs(replica.shape(), &b.inputs);
-                                let preds = replica.predict_planes(&planes, &params);
-                                stats.batches += 1;
-                                stats.samples += preds.len() as u64;
-                                // One message per scored batch (not per
-                                // sample) keeps channel overhead off the
-                                // timed serving hot path. Receiver only
-                                // drops after join: the send can't fail
-                                // while we run.
-                                let _ = out.send((b.ids, preds));
-                            }
-                        }
-                        match rx.try_recv() {
-                            Ok(w) => next = Some(w),
-                            Err(mpsc::TryRecvError::Empty) => {
-                                flush_learn_run(
-                                    &mut replica,
-                                    &mut run,
-                                    &params,
-                                    base_seed,
-                                    &mut rands,
-                                    &mut scratch,
-                                );
-                            }
-                            Err(mpsc::TryRecvError::Disconnected) => {
-                                flush_learn_run(
-                                    &mut replica,
-                                    &mut run,
-                                    &params,
-                                    base_seed,
-                                    &mut rands,
-                                    &mut scratch,
-                                );
-                                break 'worker;
-                            }
-                        }
+/// Everything a worker owns between work items.
+struct WorkerState {
+    replica: MultiTm,
+    /// Seq of the last update received into the replica (or its pending
+    /// learn run). The run is always flushed before this value is
+    /// observable (batch scoring, snapshots), so at those points the
+    /// replica state *is* the log state at `applied_seq`.
+    applied_seq: u64,
+    /// Coalesced consecutive Learn updates (≤ 64, lane-trained on flush).
+    run: Vec<Arc<ShardUpdate>>,
+    rands: Option<StepRands>,
+    scratch: TrainScratch,
+    /// Armed by [`ChaosCmd::DieOnNextBatch`].
+    doomed: bool,
+    /// Remaining stall window ([`ChaosCmd::Stall`]), in work items.
+    stall: usize,
+    /// Work buffered during the stall window, drained in order on wake.
+    held: VecDeque<Work>,
+}
+
+/// Spawn one shard worker (incarnation `gen`) owning `replica`, which
+/// has applied the log up to `start_seq`. Returns its bounded work
+/// sender and join handle; replies go to `out`.
+pub(crate) fn spawn_worker(
+    shard: usize,
+    gen: u64,
+    replica: MultiTm,
+    start_seq: u64,
+    params: TmParams,
+    base_seed: u64,
+    out: mpsc::Sender<Reply>,
+) -> (mpsc::SyncSender<Work>, JoinHandle<WorkerExit>) {
+    install_quiet_chaos_hook();
+    let (tx, rx) = mpsc::sync_channel::<Work>(WORK_QUEUE_DEPTH);
+    let handle = std::thread::spawn(move || {
+        let mut stats = ShardStats { shard, updates: 0, batches: 0, samples: 0 };
+        let mut w = WorkerState {
+            replica,
+            applied_seq: start_seq,
+            run: Vec::new(),
+            rands: None,
+            scratch: TrainScratch::new(),
+            doomed: false,
+            stall: 0,
+            held: VecDeque::new(),
+        };
+        // The unwind boundary: `stats` and `w` live outside so a caught
+        // panic still reports the work done before it. `AssertUnwindSafe`
+        // is sound here because a panicked incarnation's state is never
+        // reused — the supervisor rebuilds from a checkpoint.
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            worker_loop(&rx, &out, &mut w, &mut stats, shard, &params, base_seed);
+        }));
+        match result {
+            Ok(()) => WorkerExit {
+                stats,
+                final_snapshot: Some(checkpoint::snapshot_bytes(
+                    &w.replica,
+                    &params,
+                    w.applied_seq,
+                )),
+                panicked: false,
+            },
+            Err(payload) => {
+                let cause = if payload.downcast_ref::<ChaosKill>().is_some() {
+                    "chaos kill".to_string()
+                } else if let Some(s) = payload.downcast_ref::<&str>() {
+                    (*s).to_string()
+                } else if let Some(s) = payload.downcast_ref::<String>() {
+                    s.clone()
+                } else {
+                    "non-string panic payload".to_string()
+                };
+                // Best-effort liveness notice; the join result is the
+                // authoritative detection path.
+                let _ = out.send(Reply::Dead { shard, gen, cause });
+                WorkerExit { stats, final_snapshot: None, panicked: true }
+            }
+        }
+    });
+    (tx, handle)
+}
+
+fn worker_loop(
+    rx: &mpsc::Receiver<Work>,
+    out: &mpsc::Sender<Reply>,
+    w: &mut WorkerState,
+    stats: &mut ShardStats,
+    shard: usize,
+    params: &TmParams,
+    base_seed: u64,
+) {
+    'worker: loop {
+        // Block only with an empty pending run (the run is always
+        // flushed before the worker sleeps).
+        let first = match rx.recv() {
+            Ok(work) => work,
+            Err(_) => break 'worker,
+        };
+        let mut next = Some(first);
+        while let Some(work) = next.take() {
+            absorb(work, w, stats, out, shard, params, base_seed);
+            match rx.try_recv() {
+                Ok(work) => next = Some(work),
+                Err(mpsc::TryRecvError::Empty) => {
+                    if w.stall == 0 {
+                        flush_learn_run(
+                            &mut w.replica,
+                            &mut w.run,
+                            params,
+                            base_seed,
+                            &mut w.rands,
+                            &mut w.scratch,
+                        );
                     }
                 }
-                stats
-            }));
-            senders.push(tx);
+                Err(mpsc::TryRecvError::Disconnected) => break 'worker,
+            }
         }
-        // Only worker clones of the response sender remain: the channel
-        // closes exactly when the last worker exits.
-        drop(res_tx);
-        Ok(ShardServer { senders, handles, results: res_rx, next_shard: 0, seq: 0 })
     }
+    // Channel closed mid-stall: the window ends at shutdown — drain the
+    // buffer in order so held work is delayed, never lost.
+    w.stall = 0;
+    let held: Vec<Work> = w.held.drain(..).collect();
+    for work in held {
+        process(work, w, stats, out, shard, params, base_seed);
+    }
+    flush_learn_run(&mut w.replica, &mut w.run, params, base_seed, &mut w.rands, &mut w.scratch);
+}
 
-    /// Close the work channels, join every worker and collect all
-    /// responses, sorted by request id.
-    pub fn finish(self) -> Result<ServeOutcome> {
-        let ShardServer { senders, handles, results, seq, .. } = self;
-        drop(senders);
-        let mut shards = Vec::with_capacity(handles.len());
-        for h in handles {
-            shards.push(h.join().map_err(|_| anyhow!("serve shard worker panicked"))?);
+/// Route one work item through the stall buffer or straight to
+/// [`process`].
+#[allow(clippy::too_many_arguments)]
+fn absorb(
+    work: Work,
+    w: &mut WorkerState,
+    stats: &mut ShardStats,
+    out: &mpsc::Sender<Reply>,
+    shard: usize,
+    params: &TmParams,
+    base_seed: u64,
+) {
+    if w.stall > 0 {
+        w.held.push_back(work);
+        w.stall -= 1;
+        if w.stall == 0 {
+            let held: Vec<Work> = w.held.drain(..).collect();
+            for item in held {
+                process(item, w, stats, out, shard, params, base_seed);
+            }
         }
-        // All response senders are gone: this drains and terminates.
-        let mut responses: Vec<(u64, usize)> = Vec::new();
-        for (ids, preds) in results.iter() {
-            responses.extend(ids.into_iter().zip(preds));
+    } else {
+        process(work, w, stats, out, shard, params, base_seed);
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn process(
+    work: Work,
+    w: &mut WorkerState,
+    stats: &mut ShardStats,
+    out: &mpsc::Sender<Reply>,
+    shard: usize,
+    params: &TmParams,
+    base_seed: u64,
+) {
+    match work {
+        Work::Update(u) => {
+            stats.updates += 1;
+            let seq = u.seq;
+            match &u.kind {
+                UpdateKind::Learn { .. } => {
+                    w.run.push(u);
+                    if w.run.len() == 64 {
+                        flush_learn_run(
+                            &mut w.replica,
+                            &mut w.run,
+                            params,
+                            base_seed,
+                            &mut w.rands,
+                            &mut w.scratch,
+                        );
+                    }
+                }
+                UpdateKind::ClauseFault { .. } => {
+                    // Fault edits must land in log order relative to the
+                    // Learns around them.
+                    flush_learn_run(
+                        &mut w.replica,
+                        &mut w.run,
+                        params,
+                        base_seed,
+                        &mut w.rands,
+                        &mut w.scratch,
+                    );
+                    w.replica.apply_update_with(&u, params, base_seed, &mut w.rands);
+                }
+            }
+            w.applied_seq = seq;
         }
-        responses.sort_unstable_by_key(|&(id, _)| id);
-        Ok(ServeOutcome { responses, shards, updates: seq })
+        Work::Batch(b) => {
+            if w.doomed {
+                // The armed kill lands exactly when the batch does: the
+                // batch is lost with the worker and must be recovered by
+                // supervisor re-dispatch.
+                std::panic::panic_any(ChaosKill);
+            }
+            // Score against every update received before the batch
+            // (FIFO order).
+            flush_learn_run(
+                &mut w.replica,
+                &mut w.run,
+                params,
+                base_seed,
+                &mut w.rands,
+                &mut w.scratch,
+            );
+            let planes = BitPlanes::from_inputs(w.replica.shape(), &b.inputs);
+            let preds = w.replica.predict_planes(&planes, params);
+            stats.batches += 1;
+            stats.samples += preds.len() as u64;
+            // One message per scored batch (not per sample) keeps
+            // channel overhead off the timed serving hot path.
+            let _ = out.send(Reply::Scored {
+                shard,
+                ids: b.ids,
+                preds,
+                applied_seq: w.applied_seq,
+            });
+        }
+        Work::Snapshot => {
+            flush_learn_run(
+                &mut w.replica,
+                &mut w.run,
+                params,
+                base_seed,
+                &mut w.rands,
+                &mut w.scratch,
+            );
+            let bytes = checkpoint::snapshot_bytes(&w.replica, params, w.applied_seq);
+            let _ = out.send(Reply::Snapshot { shard, seq: w.applied_seq, bytes });
+        }
+        Work::Chaos(cmd) => match cmd {
+            ChaosCmd::Die => std::panic::panic_any(ChaosKill),
+            ChaosCmd::DieOnNextBatch => w.doomed = true,
+            ChaosCmd::Stall { items } => w.stall = items,
+        },
     }
 }
 
@@ -319,26 +465,6 @@ fn learn_label_of(u: &Arc<ShardUpdate>) -> usize {
     }
 }
 
-impl ServeBackend for ShardServer {
-    fn update(&mut self, kind: UpdateKind) {
-        self.seq += 1;
-        let update = Arc::new(ShardUpdate { seq: self.seq, kind });
-        for tx in &self.senders {
-            let _ = tx.send(Work::Update(update.clone()));
-        }
-    }
-
-    fn infer_batch(&mut self, batch: Vec<PendingRequest>) {
-        if batch.is_empty() {
-            return;
-        }
-        let ids: Vec<u64> = batch.iter().map(|r| r.id).collect();
-        let inputs: Vec<Input> = batch.into_iter().map(|r| r.input).collect();
-        let _ = self.senders[self.next_shard].send(Work::Batch(MicroBatch { ids, inputs }));
-        self.next_shard = (self.next_shard + 1) % self.senders.len();
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -349,79 +475,125 @@ mod tests {
         TmShape::iris()
     }
 
-    fn random_input(rng: &mut Xoshiro256, s: &TmShape) -> Input {
-        Input::pack(s, &crate::testkit::gen::bool_vec(rng, s.features, 0.5))
-    }
-
+    /// The worker primitive end-to-end: updates, a snapshot marker, a
+    /// batch, then channel-closure shutdown with a final snapshot.
     #[test]
-    fn rejects_zero_shards_and_bad_params() {
-        let s = shape();
-        let tm = MultiTm::new(&s).unwrap();
-        let mut cfg = ServeConfig {
-            shards: 0,
-            params: TmParams::paper_offline(&s),
-            base_seed: 1,
-        };
-        assert!(ShardServer::new(&tm, &cfg).is_err());
-        cfg.shards = 1;
-        cfg.params.active_clauses = 7; // odd: invalid
-        assert!(ShardServer::new(&tm, &cfg).is_err());
-    }
-
-    #[test]
-    fn responses_cover_every_request_exactly_once() {
+    fn worker_applies_updates_snapshots_and_scores() {
         let s = shape();
         let p = TmParams::paper_offline(&s);
-        let mut rng = Xoshiro256::new(0x51AB);
-        let states: Vec<u32> =
-            (0..s.num_tas()).map(|_| rng.next_below(2 * s.states as usize) as u32).collect();
-        let tm = MultiTm::from_states(&s, states).unwrap();
-        let cfg = ServeConfig { shards: 3, params: p.clone(), base_seed: 9 };
-        let mut server = ShardServer::new(&tm, &cfg).unwrap();
-        let mut scalar = tm.clone();
-        let mut expected = Vec::new();
-        let mut id = 0u64;
-        for round in 0..12 {
-            let batch: Vec<PendingRequest> = (0..(round % 5) + 1)
-                .map(|_| {
-                    let input = random_input(&mut rng, &s);
-                    expected.push((id, scalar.predict(&input, &p)));
-                    let req = PendingRequest { id, input };
-                    id += 1;
-                    req
-                })
-                .collect();
-            server.infer_batch(batch);
-        }
-        server.infer_batch(Vec::new()); // empty batches are dropped
-        let out = server.finish().unwrap();
-        assert_eq!(out.responses, expected);
-        assert_eq!(out.updates, 0);
-        let scored: u64 = out.shards.iter().map(|st| st.samples).sum();
-        assert_eq!(scored, id);
-        let batches: u64 = out.shards.iter().map(|st| st.batches).sum();
-        assert_eq!(batches, 12, "empty batch was not dispatched");
-    }
+        let mut rng = Xoshiro256::new(0x11AB);
+        let tm = crate::testkit::gen::machine(&mut rng, &s);
+        let (res_tx, res_rx) = mpsc::channel();
+        let (tx, handle) = spawn_worker(0, 0, tm.clone(), 0, p.clone(), 5, res_tx);
 
-    #[test]
-    fn updates_reach_every_shard() {
-        let s = shape();
-        let p = TmParams::paper_offline(&s);
-        let tm = MultiTm::new(&s).unwrap();
-        let cfg = ServeConfig { shards: 4, params: p, base_seed: 2 };
-        let mut server = ShardServer::new(&tm, &cfg).unwrap();
-        let mut rng = Xoshiro256::new(1);
-        for i in 0..10 {
-            server.update(UpdateKind::Learn {
-                input: random_input(&mut rng, &s),
-                label: i % 3,
+        let mut oracle = tm.clone();
+        for seq in 1..=10u64 {
+            let input =
+                Input::pack(&s, &crate::testkit::gen::bool_vec(&mut rng, s.features, 0.5));
+            let u = Arc::new(ShardUpdate {
+                seq,
+                kind: UpdateKind::Learn { input, label: seq as usize % s.classes },
             });
+            oracle.apply_update(&u, &p, 5);
+            tx.send(Work::Update(u)).unwrap();
         }
-        let out = server.finish().unwrap();
-        assert_eq!(out.updates, 10);
-        assert_eq!(out.shards.len(), 4);
-        for st in &out.shards {
-            assert_eq!(st.updates, 10, "shard {} missed a broadcast", st.shard);
+        tx.send(Work::Snapshot).unwrap();
+        let probe = Input::pack(&s, &crate::testkit::gen::bool_vec(&mut rng, s.features, 0.5));
+        tx.send(Work::Batch(MicroBatch { ids: vec![42], inputs: vec![probe.clone()] }))
+            .unwrap();
+        drop(tx);
+        let exit = handle.join().unwrap();
+        assert!(!exit.panicked);
+        assert_eq!(exit.stats.updates, 10);
+        assert_eq!(exit.stats.batches, 1);
+
+        let mut got_snapshot = false;
+        let mut got_scored = false;
+        for reply in res_rx.iter() {
+            match reply {
+                Reply::Snapshot { seq, bytes, .. } => {
+                    assert_eq!(seq, 10);
+                    let snap = checkpoint::restore(&bytes).unwrap();
+                    assert_eq!(snap.machine.state_digest(), oracle.state_digest());
+                    got_snapshot = true;
+                }
+                Reply::Scored { ids, preds, applied_seq, .. } => {
+                    assert_eq!(ids, vec![42]);
+                    assert_eq!(applied_seq, 10);
+                    assert_eq!(preds, vec![oracle.predict(&probe, &p)]);
+                    got_scored = true;
+                }
+                Reply::Dead { .. } => panic!("clean run produced a Dead notice"),
+            }
+        }
+        assert!(got_snapshot && got_scored);
+        let final_snap = checkpoint::restore(&exit.final_snapshot.unwrap()).unwrap();
+        assert_eq!(final_snap.seq, 10);
+        assert_eq!(final_snap.machine.state_digest(), oracle.state_digest());
+    }
+
+    /// A chaos kill is caught at the unwind boundary: Dead notice,
+    /// panicked exit, no process-level fallout.
+    #[test]
+    fn chaos_kill_is_caught_and_reported() {
+        let s = shape();
+        let p = TmParams::paper_offline(&s);
+        let tm = MultiTm::new(&s).unwrap();
+        let (res_tx, res_rx) = mpsc::channel();
+        let (tx, handle) = spawn_worker(3, 7, tm, 0, p, 1, res_tx);
+        tx.send(Work::Chaos(ChaosCmd::Die)).unwrap();
+        let exit = handle.join().unwrap();
+        assert!(exit.panicked);
+        assert!(exit.final_snapshot.is_none());
+        match res_rx.recv().unwrap() {
+            Reply::Dead { shard, gen, cause } => {
+                assert_eq!((shard, gen), (3, 7));
+                assert_eq!(cause, "chaos kill");
+            }
+            _ => panic!("expected a Dead notice"),
+        }
+    }
+
+    /// A stall window delays work without reordering or dropping it:
+    /// the stalled worker's final state matches an unstalled twin.
+    #[test]
+    fn stall_delays_but_never_reorders() {
+        let s = shape();
+        let p = TmParams::paper_offline(&s);
+        let mut rng = Xoshiro256::new(0x57A);
+        let tm = crate::testkit::gen::machine(&mut rng, &s);
+        let updates: Vec<Arc<ShardUpdate>> = (1..=8u64)
+            .map(|seq| {
+                let input =
+                    Input::pack(&s, &crate::testkit::gen::bool_vec(&mut rng, s.features, 0.5));
+                Arc::new(ShardUpdate {
+                    seq,
+                    kind: UpdateKind::Learn { input, label: seq as usize % s.classes },
+                })
+            })
+            .collect();
+        let run = |stall_after: Option<usize>| -> u64 {
+            let (res_tx, _res_rx) = mpsc::channel();
+            let (tx, handle) = spawn_worker(0, 0, tm.clone(), 0, p.clone(), 9, res_tx);
+            for (i, u) in updates.iter().enumerate() {
+                if stall_after == Some(i) {
+                    tx.send(Work::Chaos(ChaosCmd::Stall { items: 3 })).unwrap();
+                }
+                tx.send(Work::Update(u.clone())).unwrap();
+            }
+            drop(tx);
+            let exit = handle.join().unwrap();
+            assert!(!exit.panicked);
+            assert_eq!(exit.stats.updates, 8);
+            let snap = checkpoint::restore(&exit.final_snapshot.unwrap()).unwrap();
+            assert_eq!(snap.seq, 8);
+            snap.machine.state_digest()
+        };
+        let clean = run(None);
+        // Stall windows at several points, including one the shutdown
+        // drain must cut short (stall issued with < 3 items left).
+        for stall_after in [0, 3, 6] {
+            assert_eq!(run(Some(stall_after)), clean, "stall after item {stall_after}");
         }
     }
 }

@@ -1,0 +1,913 @@
+//! The supervising shard server: dispatch, checkpoints, recovery.
+//!
+//! [`ShardServer`] is the serialization point of the serving loop. It
+//! owns the sequenced update log, broadcasts every update to all shard
+//! workers (`serve::shard`), deals flushed micro-batches round-robin,
+//! and — since PR 6 — keeps the pool *fault-tolerant*:
+//!
+//! - **Checkpoints.** Every [`FaultPolicy::checkpoint_every`] updates
+//!   the supervisor sends each live shard a snapshot marker; workers
+//!   answer with a checksummed replica snapshot (`serve::checkpoint`)
+//!   stamped with the last applied seq. The newest
+//!   [`RETAINED_SNAPSHOTS`] per shard are kept, seeded with a genesis
+//!   snapshot at seq 0 so recovery is always possible.
+//! - **Supervision.** Workers run under `catch_unwind`; a panic
+//!   (organic or chaos-injected) surfaces as a `Dead` notice / failed
+//!   send / panicked join, never as a poisoned pool. After
+//!   [`FaultPolicy::recovery_lag`] further operations the supervisor
+//!   respawns the shard from its newest snapshot that passes CRC
+//!   verification (corrupt ones are rejected and counted, falling back
+//!   to an older snapshot and a longer replay), replays the retained
+//!   log suffix, and re-dispatches the shard's unscored batches at
+//!   their original flush points — so the recovered run is
+//!   **bit-identical** to one that never failed.
+//! - **Degraded modes.** While a shard is down, surviving shards absorb
+//!   its batches up to [`FaultPolicy::degraded_depth`] each; beyond
+//!   that (or with every shard down) batches are *shed*: their ids are
+//!   returned in [`ServeOutcome::shed`] and counted in
+//!   [`RecoveryStats`] — an explicit overload response, never a silent
+//!   drop.
+//!
+//! Why replay is exact: all update randomness is keyed by
+//! `(base_seed, seq)` (`tm::update`), so applying the log suffix to a
+//! restored snapshot reproduces the lost replica bit-for-bit; and FIFO
+//! work channels mean a batch's responses depend only on its flush seq,
+//! which the supervisor recorded at dispatch. Exactly-once scoring
+//! holds because a dead worker's sends all happen-before its join: any
+//! batch it scored is drained from the outstanding set before the
+//! supervisor decides what to re-dispatch. `finish` additionally
+//! verifies that no request id was answered twice.
+//!
+//! Determinism of the *failure handling itself* (which batches shed,
+//! how many updates replayed) comes from driving faults off the
+//! deterministic op/seq clocks via [`ChaosPlan`], not wall-clock
+//! timeouts; worker heartbeats (the applied seq stamped on every scored
+//! batch) are surfaced through [`ShardServer::heartbeats`] as a
+//! liveness cross-check.
+
+use crate::serve::batcher::PendingRequest;
+use crate::serve::chaos::{ChaosEvent, ChaosPlan, KillKind};
+use crate::serve::checkpoint;
+use crate::serve::shard::{
+    spawn_worker, ChaosCmd, MicroBatch, Reply, ShardStats, Work, WorkerExit,
+};
+use crate::serve::ServeBackend;
+use crate::tm::clause::Input;
+use crate::tm::machine::MultiTm;
+use crate::tm::params::TmParams;
+use crate::tm::update::{ShardUpdate, UpdateKind};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+/// Newest checkpoints retained per shard. Two, not one: a corrupted
+/// newest snapshot must leave an older one to fall back to (at the
+/// price of a longer replay).
+pub const RETAINED_SNAPSHOTS: usize = 2;
+
+/// Fault-tolerance policy knobs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultPolicy {
+    /// Send snapshot markers every this many updates (`0` = genesis
+    /// snapshot only — recovery replays the whole log).
+    pub checkpoint_every: u64,
+    /// Operations (updates + batch dispatches) a shard stays down
+    /// before the supervisor recovers it. `0` recovers at the next
+    /// operation; larger values leave a window in which surviving
+    /// shards absorb the load (or shed it).
+    pub recovery_lag: u64,
+    /// Batches each surviving shard may absorb during an outage before
+    /// further batches are shed with an explicit overload response.
+    pub degraded_depth: u64,
+}
+
+impl Default for FaultPolicy {
+    fn default() -> Self {
+        FaultPolicy { checkpoint_every: 64, recovery_lag: 0, degraded_depth: u64::MAX }
+    }
+}
+
+/// Configuration for [`ShardServer`].
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Worker replica count (≥ 1).
+    pub shards: usize,
+    pub params: TmParams,
+    /// Base seed for the `(base_seed, seq)` update-randomness contract.
+    pub base_seed: u64,
+    pub fault: FaultPolicy,
+}
+
+impl ServeConfig {
+    pub fn new(shards: usize, params: TmParams, base_seed: u64) -> Self {
+        ServeConfig { shards, params, base_seed, fault: FaultPolicy::default() }
+    }
+}
+
+/// Fault-handling counters, reported in [`ServeOutcome`]. Exact by
+/// construction: every shed request id is also listed in
+/// [`ServeOutcome::shed`], and the chaos suite asserts the counters
+/// against the schedule.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RecoveryStats {
+    /// Successful shard recoveries (respawn + replay).
+    pub recoveries: u64,
+    /// Worker incarnations that ended by panic (chaos or organic).
+    pub worker_panics: u64,
+    /// Snapshots received and retained from workers (genesis excluded).
+    pub snapshots_stored: u64,
+    /// Snapshots that failed verification at restore time and were
+    /// discarded in favour of an older one.
+    pub corrupt_snapshots_rejected: u64,
+    /// Log updates re-sent to respawned workers.
+    pub replayed_updates: u64,
+    /// Unscored batches re-dispatched to their shard's new incarnation.
+    pub redispatched_batches: u64,
+    /// Batches shed with an overload response instead of dispatched.
+    pub shed_batches: u64,
+    /// Request ids inside those shed batches.
+    pub shed_requests: u64,
+    /// Chaos events that armed (their precondition held when due).
+    pub chaos_events_fired: u64,
+    /// Chaos events skipped because their target was not live when due.
+    pub chaos_events_skipped: u64,
+}
+
+/// What a serving run produced, returned by [`ShardServer::finish`].
+#[derive(Debug)]
+pub struct ServeOutcome {
+    /// `(request_id, predicted_class)`, sorted by request id. Shed
+    /// requests are absent here and listed in `shed` instead.
+    pub responses: Vec<(u64, usize)>,
+    /// Per-shard work counters (summed over a shard's incarnations).
+    pub shards: Vec<ShardStats>,
+    /// Total sequenced updates applied.
+    pub updates: u64,
+    /// Request ids shed with an overload response, sorted.
+    pub shed: Vec<u64>,
+    pub recovery: RecoveryStats,
+    /// Each shard's final replica, decoded from its verified exit
+    /// snapshot — bit-identical across shards (and to the oracle) in
+    /// any run whose failures were all recovered.
+    pub replicas: Vec<MultiTm>,
+}
+
+/// A retained checkpoint: the log seq it captures plus the verified
+/// byte image (verification happens at restore time, so corruption
+/// injected *after* storage is still caught).
+struct Snapshot {
+    seq: u64,
+    bytes: Vec<u8>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum SlotHealth {
+    Live,
+    /// Armed by a `DieOnNextBatch` chaos kill: still applying updates,
+    /// will panic on its next dispatched batch.
+    Doomed,
+    /// Inside a known stall window: work is buffered, not processed.
+    /// `left` counts work items until the worker drains and resumes.
+    Stalled { left: u64 },
+    /// Down since operation `since_op`; recovered once
+    /// `ops - since_op > recovery_lag`.
+    Dead { since_op: u64 },
+}
+
+/// A dispatched-but-unscored batch, remembered so a shard death cannot
+/// lose it: `flush_seq` pins the exact log position it must be scored
+/// at if re-dispatched.
+struct OutstandingBatch {
+    flush_seq: u64,
+    ids: Vec<u64>,
+    inputs: Vec<Input>,
+}
+
+struct Slot {
+    shard: usize,
+    /// Incarnation counter; bumped on every respawn so late replies
+    /// from a dead incarnation cannot flip the new one's health.
+    gen: u64,
+    tx: Option<mpsc::SyncSender<Work>>,
+    join: Option<JoinHandle<WorkerExit>>,
+    health: SlotHealth,
+    /// Oldest-first retained checkpoints (genesis-seeded).
+    snaps: VecDeque<Snapshot>,
+    /// Lifetime snapshot count for this shard (all incarnations) — the
+    /// coordinate chaos `CorruptSnapshot { nth }` events key on.
+    snaps_received: u64,
+    /// Dispatch-ordered unscored batches.
+    outstanding: VecDeque<OutstandingBatch>,
+    /// Batches absorbed while some other shard was down (degraded-mode
+    /// load accounting; reset when the outage ends).
+    outage_absorbed: u64,
+    /// Highest log seq this shard has provably reached (stamped on its
+    /// scored batches and snapshots).
+    last_heartbeat: u64,
+    /// Last panic cause reported by this slot's current incarnation.
+    last_cause: Option<String>,
+}
+
+struct ChaosState {
+    plan: ChaosPlan,
+    fired: Vec<bool>,
+}
+
+/// Replicated, supervised serving pool. See the module docs for the
+/// determinism and recovery arguments.
+pub struct ShardServer {
+    params: TmParams,
+    base_seed: u64,
+    policy: FaultPolicy,
+    slots: Vec<Slot>,
+    res_tx: mpsc::Sender<Reply>,
+    res_rx: mpsc::Receiver<Reply>,
+    next_shard: usize,
+    /// Update log clock: seq of the last broadcast update.
+    seq: u64,
+    /// Operation clock (updates + batch dispatches) — the deterministic
+    /// time base for recovery lag.
+    ops: u64,
+    /// Retained update log, trimmed below the minimum checkpointed seq
+    /// across shards (their *oldest* retained snapshots, so any
+    /// fallback replay is still covered).
+    log: VecDeque<Arc<ShardUpdate>>,
+    responses: Vec<(u64, usize)>,
+    shed: Vec<u64>,
+    /// Per-shard stats accumulated from joined (dead) incarnations.
+    agg: Vec<ShardStats>,
+    recovery: RecoveryStats,
+    chaos: Option<ChaosState>,
+    /// First unrecoverable error; surfaced by `finish`.
+    fatal: Option<anyhow::Error>,
+}
+
+impl ShardServer {
+    /// Spin up `cfg.shards` worker replicas of `tm`.
+    pub fn new(tm: &MultiTm, cfg: &ServeConfig) -> Result<Self> {
+        Self::build(tm, cfg, None)
+    }
+
+    /// Same, with a deterministic fault schedule armed.
+    pub fn with_chaos(tm: &MultiTm, cfg: &ServeConfig, plan: ChaosPlan) -> Result<Self> {
+        Self::build(tm, cfg, Some(plan))
+    }
+
+    fn build(tm: &MultiTm, cfg: &ServeConfig, plan: Option<ChaosPlan>) -> Result<Self> {
+        if cfg.shards == 0 {
+            bail!("serve: shard count must be >= 1");
+        }
+        cfg.params
+            .validate(tm.shape())
+            .context("serve: params do not fit the served model")?;
+        let (res_tx, res_rx) = mpsc::channel();
+        let genesis = checkpoint::snapshot_bytes(tm, &cfg.params, 0);
+        let mut slots = Vec::with_capacity(cfg.shards);
+        let mut agg = Vec::with_capacity(cfg.shards);
+        for shard in 0..cfg.shards {
+            let (tx, join) = spawn_worker(
+                shard,
+                0,
+                tm.clone(),
+                0,
+                cfg.params.clone(),
+                cfg.base_seed,
+                res_tx.clone(),
+            );
+            let mut snaps = VecDeque::with_capacity(RETAINED_SNAPSHOTS + 1);
+            snaps.push_back(Snapshot { seq: 0, bytes: genesis.clone() });
+            slots.push(Slot {
+                shard,
+                gen: 0,
+                tx: Some(tx),
+                join: Some(join),
+                health: SlotHealth::Live,
+                snaps,
+                snaps_received: 0,
+                outstanding: VecDeque::new(),
+                outage_absorbed: 0,
+                last_heartbeat: 0,
+                last_cause: None,
+            });
+            agg.push(ShardStats { shard, updates: 0, batches: 0, samples: 0 });
+        }
+        Ok(ShardServer {
+            params: cfg.params.clone(),
+            base_seed: cfg.base_seed,
+            policy: cfg.fault,
+            slots,
+            res_tx,
+            res_rx,
+            next_shard: 0,
+            seq: 0,
+            ops: 0,
+            log: VecDeque::new(),
+            responses: Vec::new(),
+            shed: Vec::new(),
+            agg,
+            recovery: RecoveryStats::default(),
+            chaos: plan.map(|plan| {
+                let fired = vec![false; plan.events.len()];
+                ChaosState { plan, fired }
+            }),
+            fatal: None,
+        })
+    }
+
+    /// Per-shard heartbeat: the highest log seq each shard has provably
+    /// applied.
+    pub fn heartbeats(&self) -> Vec<u64> {
+        self.slots.iter().map(|s| s.last_heartbeat).collect()
+    }
+
+    /// Send one work item to a shard, maintaining the supervisor's
+    /// model of its stall window and detecting hung-up (dead) workers.
+    fn send_work(&mut self, shard: usize, work: Work) {
+        let slot = &mut self.slots[shard];
+        let Some(tx) = slot.tx.as_ref() else { return };
+        let sent = tx.send(work).is_ok();
+        if let SlotHealth::Stalled { left } = &mut slot.health {
+            *left = left.saturating_sub(1);
+        }
+        if slot.health == (SlotHealth::Stalled { left: 0 }) {
+            slot.health = SlotHealth::Live;
+        }
+        if !sent && !matches!(slot.health, SlotHealth::Dead { .. }) {
+            slot.health = SlotHealth::Dead { since_op: self.ops };
+        }
+    }
+
+    fn drain_replies(&mut self) {
+        while let Ok(reply) = self.res_rx.try_recv() {
+            self.handle_reply(reply);
+        }
+    }
+
+    fn handle_reply(&mut self, reply: Reply) {
+        match reply {
+            Reply::Scored { shard, ids, preds, applied_seq } => {
+                let slot = &mut self.slots[shard];
+                slot.last_heartbeat = slot.last_heartbeat.max(applied_seq);
+                if let Some(first) = ids.first() {
+                    if let Some(pos) =
+                        slot.outstanding.iter().position(|b| b.ids.first() == Some(first))
+                    {
+                        slot.outstanding.remove(pos);
+                    }
+                }
+                self.responses.extend(ids.into_iter().zip(preds));
+            }
+            Reply::Snapshot { shard, seq, mut bytes } => {
+                self.slots[shard].snaps_received += 1;
+                let nth = self.slots[shard].snaps_received;
+                if let Some(chaos) = &mut self.chaos {
+                    for (i, ev) in chaos.plan.events.iter().enumerate() {
+                        if chaos.fired[i] {
+                            continue;
+                        }
+                        if let ChaosEvent::CorruptSnapshot { shard: s, nth: n } = ev {
+                            if *s == shard && *n == nth {
+                                chaos.fired[i] = true;
+                                self.recovery.chaos_events_fired += 1;
+                                // One flipped byte mid-image: exactly the
+                                // damage the restore-time CRC must catch.
+                                let mid = bytes.len() / 2;
+                                bytes[mid] ^= 0x40;
+                                break;
+                            }
+                        }
+                    }
+                }
+                self.recovery.snapshots_stored += 1;
+                let slot = &mut self.slots[shard];
+                slot.last_heartbeat = slot.last_heartbeat.max(seq);
+                slot.snaps.push_back(Snapshot { seq, bytes });
+                while slot.snaps.len() > RETAINED_SNAPSHOTS {
+                    slot.snaps.pop_front();
+                }
+            }
+            Reply::Dead { shard, gen, cause } => {
+                let slot = &mut self.slots[shard];
+                if gen == slot.gen {
+                    slot.last_cause = Some(cause);
+                    if !matches!(slot.health, SlotHealth::Dead { .. }) {
+                        slot.health = SlotHealth::Dead { since_op: self.ops };
+                    }
+                }
+            }
+        }
+    }
+
+    /// Fire chaos events scheduled at update `seq`. Events whose target
+    /// is not live when due are skipped (and counted): a second kill on
+    /// an already-dead shard is a no-op, not a double fault.
+    fn fire_chaos_at(&mut self, seq: u64) {
+        let due: Vec<(usize, ChaosEvent)> = match &self.chaos {
+            None => return,
+            Some(chaos) => chaos
+                .plan
+                .events
+                .iter()
+                .enumerate()
+                .filter(|(i, ev)| !chaos.fired[*i] && trigger_seq(ev) == Some(seq))
+                .map(|(i, ev)| (i, ev.clone()))
+                .collect(),
+        };
+        for (i, ev) in due {
+            if let Some(chaos) = &mut self.chaos {
+                chaos.fired[i] = true;
+            }
+            let (shard, live) = match &ev {
+                ChaosEvent::Kill { shard, .. } | ChaosEvent::Stall { shard, .. } => {
+                    (*shard, self.slots[*shard].health == SlotHealth::Live)
+                }
+                ChaosEvent::CorruptSnapshot { .. } => continue, // keyed on receipt, not seq
+            };
+            if !live {
+                self.recovery.chaos_events_skipped += 1;
+                continue;
+            }
+            self.recovery.chaos_events_fired += 1;
+            match ev {
+                ChaosEvent::Kill { kind: KillKind::Immediate, .. } => {
+                    self.send_work(shard, Work::Chaos(ChaosCmd::Die));
+                    self.slots[shard].health = SlotHealth::Dead { since_op: self.ops };
+                }
+                ChaosEvent::Kill { kind: KillKind::OnNextBatch, .. } => {
+                    self.send_work(shard, Work::Chaos(ChaosCmd::DieOnNextBatch));
+                    self.slots[shard].health = SlotHealth::Doomed;
+                }
+                ChaosEvent::Stall { items, .. } => {
+                    self.send_work(shard, Work::Chaos(ChaosCmd::Stall { items }));
+                    self.slots[shard].health = SlotHealth::Stalled { left: items as u64 };
+                }
+                ChaosEvent::CorruptSnapshot { .. } => unreachable!(),
+            }
+        }
+    }
+
+    fn run_due_recoveries(&mut self) {
+        if self.fatal.is_some() {
+            return;
+        }
+        for i in 0..self.slots.len() {
+            if let SlotHealth::Dead { since_op } = self.slots[i].health {
+                if self.ops.saturating_sub(since_op) > self.policy.recovery_lag {
+                    if let Err(e) = self.recover(i) {
+                        self.fatal = Some(e);
+                        return;
+                    }
+                }
+            }
+        }
+        if !self.slots.iter().any(|s| matches!(s.health, SlotHealth::Dead { .. })) {
+            for s in &mut self.slots {
+                s.outage_absorbed = 0;
+            }
+        }
+    }
+
+    /// Respawn a dead shard from its newest valid checkpoint, replay
+    /// the log suffix, and re-dispatch its unscored batches at their
+    /// original flush points.
+    fn recover(&mut self, shard: usize) -> Result<()> {
+        // Tear down: close the channel, then join. The join is the
+        // synchronization point — every reply the dead incarnation sent
+        // happens-before it, so the drain below sees the complete
+        // record of what was actually scored and snapshotted.
+        self.slots[shard].tx = None;
+        if let Some(join) = self.slots[shard].join.take() {
+            let exit = join
+                .join()
+                .map_err(|_| anyhow!("serve: shard {shard} panicked outside its unwind boundary"))?;
+            self.merge_stats(shard, exit.stats);
+            if exit.panicked {
+                self.recovery.worker_panics += 1;
+            }
+        }
+        self.drain_replies();
+
+        // Newest snapshot that passes verification wins; corrupt ones
+        // are rejected (counted) and the next-older tried — a longer
+        // replay, never a silent load.
+        let (snap_seq, machine) = loop {
+            let Some(snap) = self.slots[shard].snaps.back() else {
+                let cause = self.slots[shard]
+                    .last_cause
+                    .clone()
+                    .unwrap_or_else(|| "worker panic".into());
+                bail!(
+                    "serve: shard {shard} died ({cause}) with no checkpoint passing \
+                     verification to recover from"
+                );
+            };
+            let ledger_seq = snap.seq;
+            match checkpoint::restore(&snap.bytes) {
+                Ok(restored) if restored.seq == ledger_seq => {
+                    break (ledger_seq, restored.machine);
+                }
+                _ => {
+                    self.slots[shard].snaps.pop_back();
+                    self.recovery.corrupt_snapshots_rejected += 1;
+                }
+            }
+        };
+        if snap_seq < self.seq {
+            let covered =
+                self.log.front().map(|u| u.seq <= snap_seq + 1).unwrap_or(false);
+            if !covered {
+                bail!(
+                    "serve: shard {shard} needs replay from seq {snap_seq} but the log \
+                     was trimmed past it"
+                );
+            }
+        }
+
+        self.slots[shard].gen += 1;
+        self.slots[shard].last_cause = None;
+        let (tx, join) = spawn_worker(
+            shard,
+            self.slots[shard].gen,
+            machine,
+            snap_seq,
+            self.params.clone(),
+            self.base_seed,
+            self.res_tx.clone(),
+        );
+
+        // Interleaved replay: updates up to each unscored batch's flush
+        // seq, the batch, then the rest of the log — the new
+        // incarnation sees the exact FIFO prefix structure the dead one
+        // did. Sends may block on the bounded queue; the fresh worker
+        // drains concurrently, so this always makes progress.
+        let outstanding: Vec<OutstandingBatch> =
+            self.slots[shard].outstanding.drain(..).collect();
+        let mut applied = snap_seq;
+        for b in outstanding {
+            self.recovery.replayed_updates +=
+                log_suffix_send(&self.log, &tx, applied, b.flush_seq)?;
+            applied = applied.max(b.flush_seq);
+            tx.send(Work::Batch(MicroBatch { ids: b.ids.clone(), inputs: b.inputs.clone() }))
+                .map_err(|_| anyhow!("serve: respawned shard {shard} hung up during replay"))?;
+            self.recovery.redispatched_batches += 1;
+            self.slots[shard].outstanding.push_back(b);
+        }
+        self.recovery.replayed_updates += log_suffix_send(&self.log, &tx, applied, self.seq)?;
+
+        self.slots[shard].tx = Some(tx);
+        self.slots[shard].join = Some(join);
+        self.slots[shard].health = SlotHealth::Live;
+        self.recovery.recoveries += 1;
+        Ok(())
+    }
+
+    fn merge_stats(&mut self, shard: usize, stats: ShardStats) {
+        let a = &mut self.agg[shard];
+        a.updates += stats.updates;
+        a.batches += stats.batches;
+        a.samples += stats.samples;
+    }
+
+    /// Drop log entries below the minimum seq any shard's *oldest*
+    /// retained snapshot captures — everything an arbitrary future
+    /// recovery (including corruption fallback) could need to replay
+    /// stays resident; the rest is released. This is what bounds log
+    /// memory: with periodic checkpoints the ring holds a couple of
+    /// checkpoint intervals, not the trace.
+    fn trim_log(&mut self) {
+        let floor = self
+            .slots
+            .iter()
+            .map(|s| s.snaps.front().map(|snap| snap.seq).unwrap_or(0))
+            .min()
+            .unwrap_or(0);
+        while matches!(self.log.front(), Some(u) if u.seq <= floor) {
+            self.log.pop_front();
+        }
+    }
+
+    /// Join every worker and assemble the outcome. Dead shards are
+    /// recovered first (ignoring the lag) so their outstanding work is
+    /// served; a worker that dies *during* shutdown is recovered and
+    /// re-joined, boundedly. Errors if any request id was answered
+    /// twice or an unrecoverable failure occurred.
+    pub fn finish(mut self) -> Result<ServeOutcome> {
+        if self.fatal.is_none() {
+            for i in 0..self.slots.len() {
+                if matches!(self.slots[i].health, SlotHealth::Dead { .. }) {
+                    if let Err(e) = self.recover(i) {
+                        self.fatal = Some(e);
+                        break;
+                    }
+                }
+            }
+        }
+        if let Some(e) = self.fatal.take() {
+            return Err(e);
+        }
+        let n = self.slots.len();
+        let mut replicas: Vec<Option<MultiTm>> = (0..n).map(|_| None).collect();
+        let mut rounds = 0;
+        loop {
+            for slot in &mut self.slots {
+                slot.tx = None;
+            }
+            let mut died = Vec::new();
+            for i in 0..n {
+                let Some(join) = self.slots[i].join.take() else { continue };
+                let exit = join.join().map_err(|_| {
+                    anyhow!("serve: shard {i} panicked outside its unwind boundary")
+                })?;
+                self.merge_stats(i, exit.stats);
+                if exit.panicked {
+                    self.recovery.worker_panics += 1;
+                    self.slots[i].health = SlotHealth::Dead { since_op: self.ops };
+                    died.push(i);
+                } else if let Some(bytes) = exit.final_snapshot {
+                    let snap = checkpoint::restore(&bytes).with_context(|| {
+                        format!("serve: shard {i}'s final replica snapshot failed verification")
+                    })?;
+                    replicas[i] = Some(snap.machine);
+                }
+            }
+            self.drain_replies();
+            if died.is_empty() {
+                break;
+            }
+            rounds += 1;
+            if rounds > 4 {
+                bail!("serve: a shard worker kept dying during shutdown");
+            }
+            for i in died {
+                self.recover(i)?;
+            }
+        }
+
+        for slot in &self.slots {
+            if !slot.outstanding.is_empty() {
+                bail!("serve: shard {} finished with unscored batches", slot.shard);
+            }
+        }
+        let mut responses = std::mem::take(&mut self.responses);
+        responses.sort_unstable_by_key(|&(id, _)| id);
+        if let Some(w) = responses.windows(2).find(|w| w[0].0 == w[1].0) {
+            bail!("serve: request {} was scored more than once", w[0].0);
+        }
+        let mut shed = std::mem::take(&mut self.shed);
+        shed.sort_unstable();
+        let replicas = replicas
+            .into_iter()
+            .enumerate()
+            .map(|(i, r)| r.with_context(|| format!("serve: shard {i} left no final replica")))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ServeOutcome {
+            responses,
+            shards: self.agg.clone(),
+            updates: self.seq,
+            shed,
+            recovery: self.recovery,
+            replicas,
+        })
+    }
+}
+
+/// Which update seq (if any) an event triggers at.
+fn trigger_seq(ev: &ChaosEvent) -> Option<u64> {
+    match ev {
+        ChaosEvent::Kill { after_seq, .. } | ChaosEvent::Stall { after_seq, .. } => {
+            Some(*after_seq)
+        }
+        ChaosEvent::CorruptSnapshot { .. } => None,
+    }
+}
+
+/// Send the log slice `(from_excl, to_incl]` to a worker; returns how
+/// many updates that was.
+fn log_suffix_send(
+    log: &VecDeque<Arc<ShardUpdate>>,
+    tx: &mpsc::SyncSender<Work>,
+    from_excl: u64,
+    to_incl: u64,
+) -> Result<u64> {
+    let mut sent = 0u64;
+    let mut expect = from_excl + 1;
+    for u in log {
+        if u.seq > from_excl && u.seq <= to_incl {
+            if u.seq != expect {
+                bail!("serve: update log has a gap at seq {expect}");
+            }
+            expect += 1;
+            tx.send(Work::Update(u.clone()))
+                .map_err(|_| anyhow!("serve: respawned worker hung up during replay"))?;
+            sent += 1;
+        }
+    }
+    if from_excl < to_incl && sent != to_incl - from_excl {
+        bail!(
+            "serve: replay needs updates ({from_excl}, {to_incl}] but the log only held {sent} \
+             of them"
+        );
+    }
+    Ok(sent)
+}
+
+impl ServeBackend for ShardServer {
+    fn update(&mut self, kind: UpdateKind) {
+        if self.fatal.is_some() {
+            return;
+        }
+        self.ops += 1;
+        self.run_due_recoveries();
+        self.drain_replies();
+        self.seq += 1;
+        let u = Arc::new(ShardUpdate { seq: self.seq, kind });
+        self.log.push_back(u.clone());
+        for i in 0..self.slots.len() {
+            if !matches!(self.slots[i].health, SlotHealth::Dead { .. }) {
+                self.send_work(i, Work::Update(u.clone()));
+            }
+        }
+        if self.policy.checkpoint_every > 0 && self.seq % self.policy.checkpoint_every == 0 {
+            for i in 0..self.slots.len() {
+                if !matches!(self.slots[i].health, SlotHealth::Dead { .. }) {
+                    self.send_work(i, Work::Snapshot);
+                }
+            }
+        }
+        self.fire_chaos_at(self.seq);
+        self.trim_log();
+    }
+
+    fn infer_batch(&mut self, batch: Vec<PendingRequest>) {
+        if batch.is_empty() || self.fatal.is_some() {
+            return;
+        }
+        self.ops += 1;
+        self.run_due_recoveries();
+        self.drain_replies();
+        let (ids, inputs): (Vec<u64>, Vec<Input>) =
+            batch.into_iter().map(|r| (r.id, r.input)).unzip();
+        let flush_seq = self.seq;
+        let n = self.slots.len();
+        let any_dead =
+            self.slots.iter().any(|s| matches!(s.health, SlotHealth::Dead { .. }));
+        let start = self.next_shard;
+        self.next_shard = (self.next_shard + 1) % n;
+        let mut target = None;
+        for k in 0..n {
+            let i = (start + k) % n;
+            let dispatchable =
+                matches!(self.slots[i].health, SlotHealth::Live | SlotHealth::Doomed);
+            let overloaded =
+                any_dead && self.slots[i].outage_absorbed >= self.policy.degraded_depth;
+            if dispatchable && !overloaded {
+                target = Some(i);
+                break;
+            }
+        }
+        let Some(i) = target else {
+            // Explicit overload response: ids are accounted in both the
+            // shed list and the counters, never silently dropped.
+            self.recovery.shed_batches += 1;
+            self.recovery.shed_requests += ids.len() as u64;
+            self.shed.extend(ids);
+            return;
+        };
+        if any_dead {
+            self.slots[i].outage_absorbed += 1;
+        }
+        let doomed = self.slots[i].health == SlotHealth::Doomed;
+        self.slots[i].outstanding.push_back(OutstandingBatch {
+            flush_seq,
+            ids: ids.clone(),
+            inputs: inputs.clone(),
+        });
+        self.send_work(i, Work::Batch(MicroBatch { ids, inputs }));
+        if doomed {
+            // The armed kill fires on this batch: account the shard
+            // dead as of this op so recovery (and re-dispatch of the
+            // batch we just lost) is scheduled deterministically.
+            self.slots[i].health = SlotHealth::Dead { since_op: self.ops };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::batcher::{run_trace, BatcherConfig, ServeEvent};
+    use crate::serve::chaos::{ChaosEvent, KillKind};
+    use crate::serve::ScalarOracle;
+    use crate::tm::params::TmShape;
+    use crate::tm::rng::Xoshiro256;
+
+    fn trace(n: usize, seed: u64, s: &TmShape) -> Vec<ServeEvent> {
+        let mut rng = Xoshiro256::new(seed);
+        (0..n)
+            .map(|i| {
+                let input =
+                    Input::pack(s, &crate::testkit::gen::bool_vec(&mut rng, s.features, 0.5));
+                if i % 3 == 0 {
+                    ServeEvent::Update {
+                        at_tick: i as u64,
+                        kind: UpdateKind::Learn { input, label: i % s.classes },
+                    }
+                } else {
+                    ServeEvent::Infer { at_tick: i as u64, input }
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn rejects_zero_shards_and_bad_params() {
+        let s = TmShape::iris();
+        let tm = MultiTm::new(&s).unwrap();
+        let p = TmParams::paper_offline(&s);
+        assert!(ShardServer::new(&tm, &ServeConfig::new(0, p.clone(), 1)).is_err());
+        let mut bad = p;
+        bad.active_clauses = s.max_clauses + 1;
+        assert!(ShardServer::new(&tm, &ServeConfig::new(2, bad, 1)).is_err());
+    }
+
+    #[test]
+    fn responses_cover_every_request_exactly_once() {
+        let s = TmShape::iris();
+        let p = TmParams::paper_offline(&s);
+        let mut rng = Xoshiro256::new(0xC0FE);
+        let tm = crate::testkit::gen::machine(&mut rng, &s);
+        let events = trace(120, 0x11, &s);
+        let bcfg = BatcherConfig { max_batch: 8, latency_budget: 2, ..Default::default() };
+        let mut server = ShardServer::new(&tm, &ServeConfig::new(3, p, 9)).unwrap();
+        let drive = run_trace(&mut server, &events, &bcfg).unwrap();
+        let out = server.finish().unwrap();
+        assert_eq!(out.responses.len() as u64, drive.infer_requests);
+        assert!(out.shed.is_empty());
+        let ids: Vec<u64> = out.responses.iter().map(|&(id, _)| id).collect();
+        let want: Vec<u64> = (0..drive.infer_requests).collect();
+        assert_eq!(ids, want);
+        assert_eq!(out.shards.iter().map(|st| st.batches).sum::<u64>(), drive.batches);
+        assert_eq!(out.shards.iter().map(|st| st.samples).sum::<u64>(), drive.infer_requests);
+    }
+
+    #[test]
+    fn updates_reach_every_shard() {
+        let s = TmShape::iris();
+        let p = TmParams::paper_offline(&s);
+        let mut rng = Xoshiro256::new(0xFACE);
+        let tm = crate::testkit::gen::machine(&mut rng, &s);
+        let events = trace(90, 0x22, &s);
+        let bcfg = BatcherConfig { max_batch: 4, latency_budget: 1, ..Default::default() };
+        let mut server = ShardServer::new(&tm, &ServeConfig::new(4, p, 3)).unwrap();
+        let drive = run_trace(&mut server, &events, &bcfg).unwrap();
+        let out = server.finish().unwrap();
+        assert!(drive.updates > 0);
+        for st in &out.shards {
+            assert_eq!(st.updates, drive.updates, "shard {}", st.shard);
+        }
+        assert_eq!(out.updates, drive.updates);
+        // Every replica converged to the same state.
+        let d0 = out.replicas[0].state_digest();
+        for r in &out.replicas[1..] {
+            assert_eq!(r.state_digest(), d0);
+        }
+    }
+
+    /// One immediate kill, recovered next op: responses and final
+    /// replicas bit-identical to the oracle, nothing shed.
+    #[test]
+    fn immediate_kill_recovers_bit_identically() {
+        let s = TmShape::iris();
+        let p = TmParams::paper_online(&s);
+        let mut rng = Xoshiro256::new(0xDEAD);
+        let tm = crate::testkit::gen::machine(&mut rng, &s);
+        let events = trace(100, 0x33, &s);
+        let bcfg = BatcherConfig { max_batch: 8, latency_budget: 2, ..Default::default() };
+        let mut cfg = ServeConfig::new(2, p.clone(), 5);
+        cfg.fault.checkpoint_every = 4;
+        let plan = ChaosPlan {
+            events: vec![ChaosEvent::Kill {
+                shard: 1,
+                after_seq: 9,
+                kind: KillKind::Immediate,
+            }],
+        };
+        let mut server = ShardServer::with_chaos(&tm, &cfg, plan).unwrap();
+        run_trace(&mut server, &events, &bcfg).unwrap();
+        let out = server.finish().unwrap();
+        assert_eq!(out.recovery.recoveries, 1);
+        assert_eq!(out.recovery.worker_panics, 1);
+        assert!(out.shed.is_empty());
+
+        let mut oracle = ScalarOracle::new(tm.clone(), p, 5);
+        run_trace(&mut oracle, &events, &bcfg).unwrap();
+        let oracle_digest = oracle.machine().state_digest();
+        let want = oracle.into_responses();
+        assert_eq!(out.responses, want);
+        for r in &out.replicas {
+            assert_eq!(r.state_digest(), oracle_digest, "replica diverged from oracle");
+        }
+    }
+}

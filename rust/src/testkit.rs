@@ -44,10 +44,24 @@ where
 
 /// Generator helpers.
 pub mod gen {
+    use crate::tm::machine::MultiTm;
+    use crate::tm::params::TmShape;
     use crate::tm::rng::Xoshiro256;
 
     pub fn bool_vec(rng: &mut Xoshiro256, len: usize, p_true: f32) -> Vec<bool> {
         (0..len).map(|_| rng.next_f32() < p_true).collect()
+    }
+
+    /// Random machine with realistic include density: TA states drawn
+    /// uniformly over the full `0..2·states` range. This is the one
+    /// seeding path the serving/recovery suites share — it centralizes
+    /// the `from_states(..)` boilerplate those tests used to hand-roll.
+    pub fn machine(rng: &mut Xoshiro256, shape: &TmShape) -> MultiTm {
+        let states: Vec<u32> = (0..shape.num_tas())
+            .map(|_| rng.next_below(2 * shape.states as usize) as u32)
+            .collect();
+        MultiTm::from_states(shape, states)
+            .expect("uniformly drawn TA states are always in range")
     }
 
     pub fn usize_in(rng: &mut Xoshiro256, lo: usize, hi: usize) -> usize {

@@ -187,6 +187,47 @@ impl FaultMap {
         Ok(map)
     }
 
+    /// Raw gate words `(and_words, or_words)` in row-major layout
+    /// (`[row * words + w]`) — the serve-checkpoint payload view.
+    pub fn words(&self) -> (&[u64], &[u64]) {
+        (&self.and_words, &self.or_words)
+    }
+
+    /// Rebuild a map from raw gate words (checkpoint restore). Rejects
+    /// wrong lengths, gate bits escaping the literal width, and the
+    /// unreachable `(and = 0, or = 1)` encoding — [`FaultMap::set`] never
+    /// writes it, and `apply` and `get` would disagree on its meaning —
+    /// then recounts `faulty` from scratch so the O(1) counter is exact.
+    pub fn from_words(shape: &TmShape, and_words: Vec<u64>, or_words: Vec<u64>) -> Result<Self> {
+        let rows = shape.classes * shape.max_clauses;
+        let words = shape.words();
+        if and_words.len() != rows * words || or_words.len() != rows * words {
+            bail!(
+                "FaultMap::from_words: want {} words per plane, got {} and / {} or",
+                rows * words,
+                and_words.len(),
+                or_words.len()
+            );
+        }
+        let mut faulty = 0usize;
+        for row in 0..rows {
+            for w in 0..words {
+                let i = row * words + w;
+                let width = Self::width_mask(shape, w);
+                let (a, o) = (and_words[i], or_words[i]);
+                if a & !width != 0 || o & !width != 0 {
+                    bail!("FaultMap::from_words: gate bits escape the literal width (row {row} word {w})");
+                }
+                if o & !a != 0 {
+                    bail!("FaultMap::from_words: inconsistent (and=0, or=1) gate encoding (row {row} word {w})");
+                }
+                // StuckAt0 = cleared AND bit; StuckAt1 = set OR bit.
+                faulty += ((width & !a) | o).count_ones() as usize;
+            }
+        }
+        Ok(FaultMap { shape: shape.clone(), and_words, or_words, faulty })
+    }
+
     /// Dense boolean views for the L2 HLO inputs (`[classes, clauses,
     /// literals]`, row-major, 1.0 = gate bit set).
     pub fn to_dense(&self) -> (Vec<f32>, Vec<f32>) {
@@ -337,6 +378,36 @@ mod tests {
         assert_eq!(and_d[at(2, 15, 31)], 1.0);
         assert_eq!(or_d[at(2, 15, 31)], 1.0);
         assert_eq!(and_d[at(1, 0, 0)], 1.0);
+    }
+
+    #[test]
+    fn words_roundtrip_preserves_everything() {
+        let s = shape();
+        let mut m = FaultMap::even_spread(&s, 0.15, Fault::StuckAt0, 9).unwrap();
+        m.set(1, 3, 7, Fault::StuckAt1);
+        let (a, o) = m.words();
+        let back = FaultMap::from_words(&s, a.to_vec(), o.to_vec()).unwrap();
+        assert_eq!(back, m);
+        assert_eq!(back.count(), back.recount());
+    }
+
+    #[test]
+    fn from_words_rejects_bad_input() {
+        let s = shape();
+        let m = FaultMap::none(&s);
+        let (a, o) = m.words();
+        // Wrong length.
+        assert!(FaultMap::from_words(&s, a[1..].to_vec(), o.to_vec()).is_err());
+        // Padding escape: iris rows are 32 literals wide, bit 40 is pad.
+        let mut bad_or = o.to_vec();
+        bad_or[0] = 1u64 << 40;
+        assert!(FaultMap::from_words(&s, a.to_vec(), bad_or).is_err());
+        // Inconsistent (and=0, or=1) encoding within the width.
+        let mut bad_a = a.to_vec();
+        let mut bad_o = o.to_vec();
+        bad_a[0] &= !1u64;
+        bad_o[0] |= 1u64;
+        assert!(FaultMap::from_words(&s, bad_a, bad_o).is_err());
     }
 
     #[test]

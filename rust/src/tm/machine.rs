@@ -217,6 +217,61 @@ impl MultiTm {
         self.clause_faults
     }
 
+    /// Clause-output force codes, one per clause row (`-1` = fault-free,
+    /// `0`/`1` = forced) — the serve-checkpoint payload view.
+    pub fn clause_force_codes(&self) -> &[i8] {
+        &self.clause_force
+    }
+
+    /// Program every clause-output gate from checkpoint codes (the bulk
+    /// twin of [`MultiTm::set_clause_fault`], going through it per row so
+    /// the fault counter and mutation clock stay exact).
+    pub fn load_clause_force_codes(&mut self, codes: &[i8]) -> Result<()> {
+        let rows = self.shape.classes * self.shape.max_clauses;
+        anyhow::ensure!(
+            codes.len() == rows,
+            "clause force codes: want {} rows, got {}",
+            rows,
+            codes.len()
+        );
+        for (row, &code) in codes.iter().enumerate() {
+            let force = match code {
+                -1 => None,
+                0 => Some(false),
+                1 => Some(true),
+                other => anyhow::bail!("clause force codes: invalid code {other} at row {row}"),
+            };
+            self.set_clause_fault(row / self.shape.max_clauses, row % self.shape.max_clauses, force);
+        }
+        Ok(())
+    }
+
+    /// FNV-1a-64 digest over the full serve-visible replica state: TA
+    /// states, clause-output force codes and the TA fault-gate words.
+    /// Two machines with equal digests behave identically under every
+    /// serve-path operation (the action cache is a pure function of the
+    /// TA states), so recovery tests can compare replicas in O(1) space.
+    pub fn state_digest(&self) -> u64 {
+        let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+        let mut eat = |bytes: &[u8]| {
+            for &b in bytes {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x0000_0100_0000_01B3);
+            }
+        };
+        for &st in self.ta.states() {
+            eat(&st.to_le_bytes());
+        }
+        for &f in &self.clause_force {
+            eat(&[f as u8]);
+        }
+        let (and_words, or_words) = self.fault.words();
+        for &w in and_words.iter().chain(or_words) {
+            eat(&w.to_le_bytes());
+        }
+        h
+    }
+
     /// Recompute the packed action cache from TA states (used after bulk
     /// state loads; incremental updates handle the common path).
     pub fn rebuild_actions(&mut self) {

@@ -25,7 +25,7 @@ use std::path::Path;
 const MAGIC: u32 = 0x544D_4650;
 const VERSION: u32 = 1;
 
-fn fnv1a(bytes: &[u8]) -> u32 {
+pub(crate) fn fnv1a(bytes: &[u8]) -> u32 {
     let mut h: u32 = 0x811C_9DC5;
     for &b in bytes {
         h ^= b as u32;

@@ -1,0 +1,437 @@
+//! Fault-tolerance differential suite for the serving stack: every
+//! failure mode the supervisor handles — immediate kills at *every*
+//! update seq, mid-batch kills, corrupted checkpoints, stall windows,
+//! overload shedding, malformed requests — is driven against the scalar
+//! `MultiTm` oracle, and the recovered run must be **bit-identical** to
+//! the run that never failed: same responses, same final replica
+//! states, and exact shed/quarantine accounting. There is no tolerance
+//! band anywhere; a single diverging prediction is a real replay bug.
+
+use std::path::Path;
+use tm_fpga::coordinator::{run_chaos_soak, ChaosSoakConfig, SoakConfig};
+use tm_fpga::serve::{
+    load_snapshot, restore, run_trace, save_snapshot, snapshot_bytes, BatcherConfig, ChaosEvent,
+    ChaosPlan, KillKind, ScalarOracle, ServeConfig, ServeEvent, ServeOutcome, ShardServer,
+};
+use tm_fpga::tm::{Input, MultiTm, TmParams, TmShape, UpdateKind, Xoshiro256};
+
+fn shape() -> TmShape {
+    TmShape::iris()
+}
+
+/// Random machine with realistic include density (testkit seeding).
+fn machine(seed: u64) -> MultiTm {
+    let mut rng = Xoshiro256::new(seed);
+    tm_fpga::testkit::gen::machine(&mut rng, &shape())
+}
+
+/// Interleaved trace: every third event is a labelled (Learn) update.
+fn trace(n: usize, seed: u64) -> Vec<ServeEvent> {
+    let s = shape();
+    let mut rng = Xoshiro256::new(seed);
+    (0..n)
+        .map(|i| {
+            let input = Input::pack(&s, &tm_fpga::testkit::gen::bool_vec(&mut rng, s.features, 0.5));
+            if i % 3 == 0 {
+                ServeEvent::Update {
+                    at_tick: i as u64,
+                    kind: UpdateKind::Learn { input, label: i % s.classes },
+                }
+            } else {
+                ServeEvent::Infer { at_tick: i as u64, input }
+            }
+        })
+        .collect()
+}
+
+fn update_count(events: &[ServeEvent]) -> u64 {
+    events.iter().filter(|e| matches!(e, ServeEvent::Update { .. })).count() as u64
+}
+
+const BASE_SEED: u64 = 0xBA5E;
+
+fn bcfg() -> BatcherConfig {
+    BatcherConfig { max_batch: 8, latency_budget: 2, ..Default::default() }
+}
+
+/// Drive one chaos-armed server and the never-failing oracle over the
+/// same trace; returns `(outcome, oracle_responses, oracle_digest)`.
+fn run_pair(
+    tm: &MultiTm,
+    params: &TmParams,
+    events: &[ServeEvent],
+    shards: usize,
+    plan: ChaosPlan,
+    tune: impl FnOnce(&mut ServeConfig),
+) -> (ServeOutcome, Vec<(u64, usize)>, u64) {
+    let bcfg = bcfg();
+    let mut cfg = ServeConfig::new(shards, params.clone(), BASE_SEED);
+    tune(&mut cfg);
+    let mut server = ShardServer::with_chaos(tm, &cfg, plan).unwrap();
+    run_trace(&mut server, events, &bcfg).unwrap();
+    let out = server.finish().unwrap();
+
+    let mut oracle = ScalarOracle::new(tm.clone(), params.clone(), BASE_SEED);
+    run_trace(&mut oracle, events, &bcfg).unwrap();
+    let digest = oracle.machine().state_digest();
+    (out, oracle.into_responses(), digest)
+}
+
+/// Every oracle response is either answered bit-identically or listed
+/// in `shed`; nothing extra exists on the server side.
+fn assert_partition(out: &ServeOutcome, want: &[(u64, usize)], ctx: &str) {
+    assert_eq!(
+        out.responses.len() + out.shed.len(),
+        want.len(),
+        "{ctx}: responses + shed must cover every admitted request"
+    );
+    assert_eq!(
+        out.recovery.shed_requests,
+        out.shed.len() as u64,
+        "{ctx}: shed counter vs shed id list"
+    );
+    let mut answered = out.responses.iter().peekable();
+    for &(id, pred) in want {
+        if out.shed.binary_search(&id).is_ok() {
+            continue;
+        }
+        match answered.next() {
+            Some(&(got_id, got_pred)) => {
+                assert_eq!(got_id, id, "{ctx}: response id order");
+                assert_eq!(got_pred, pred, "{ctx}: request {id} diverged from the oracle");
+            }
+            None => panic!("{ctx}: request {id} neither answered nor shed"),
+        }
+    }
+    assert!(answered.next().is_none(), "{ctx}: server answered an id the oracle never saw");
+}
+
+/// The headline acceptance: an immediate kill after **every single
+/// update seq**, across shard counts 1/2/4, recovers bit-identically —
+/// same responses, same final replicas, nothing shed.
+#[test]
+fn kill_at_every_update_seq_recovers_bit_identically() {
+    let s = shape();
+    let p = TmParams::paper_online(&s);
+    let tm = machine(0x60D);
+    let events = trace(75, 0x41);
+    let updates = update_count(&events);
+    assert!(updates >= 20, "trace too short to sweep");
+    for shards in [1usize, 2, 4] {
+        for kill_seq in 1..=updates {
+            let plan = ChaosPlan {
+                events: vec![ChaosEvent::Kill {
+                    shard: kill_seq as usize % shards,
+                    after_seq: kill_seq,
+                    kind: KillKind::Immediate,
+                }],
+            };
+            let ctx = format!("shards {shards}, kill@{kill_seq}");
+            let (out, want, digest) = run_pair(&tm, &p, &events, shards, plan, |c| {
+                c.fault.checkpoint_every = 4;
+            });
+            assert_eq!(out.recovery.worker_panics, 1, "{ctx}");
+            assert_eq!(out.recovery.recoveries, 1, "{ctx}");
+            assert!(out.shed.is_empty(), "{ctx}: nothing may shed under lag 0");
+            assert_eq!(out.responses, want, "{ctx}: responses diverged");
+            for r in &out.replicas {
+                assert_eq!(r.state_digest(), digest, "{ctx}: replica diverged");
+            }
+        }
+    }
+}
+
+/// A worker killed *mid-batch* (the armed `OnNextBatch` kill) takes the
+/// batch down with it; the supervisor re-dispatches it to the respawned
+/// incarnation at the original flush seq, so responses still match.
+#[test]
+fn killed_mid_batch_is_redispatched_exactly() {
+    let s = shape();
+    let p = TmParams::paper_online(&s);
+    let tm = machine(0x7A2);
+    let events = trace(90, 0x52);
+    let plan = ChaosPlan {
+        events: vec![ChaosEvent::Kill { shard: 1, after_seq: 5, kind: KillKind::OnNextBatch }],
+    };
+    let (out, want, digest) =
+        run_pair(&tm, &p, &events, 2, plan, |c| c.fault.checkpoint_every = 4);
+    assert_eq!(out.recovery.worker_panics, 1);
+    assert_eq!(out.recovery.recoveries, 1);
+    assert!(
+        out.recovery.redispatched_batches >= 1,
+        "the batch that died with the worker must be re-dispatched"
+    );
+    assert!(out.shed.is_empty());
+    assert_eq!(out.responses, want);
+    for r in &out.replicas {
+        assert_eq!(r.state_digest(), digest);
+    }
+}
+
+/// A corrupted newest checkpoint is rejected at restore time and
+/// recovery falls back to the older retained snapshot — a strictly
+/// longer replay, never a silent load of damaged state.
+#[test]
+fn corrupted_checkpoint_falls_back_to_an_older_snapshot() {
+    let s = shape();
+    let p = TmParams::paper_online(&s);
+    let tm = machine(0x0C0);
+    let events = trace(100, 0x63);
+    assert!(update_count(&events) >= 14);
+    // checkpoint_every = 5: shard 0 snapshots at seqs 5, 10, ... — its
+    // 2nd snapshot (seq 10) is the newest retained one when the kill at
+    // seq 12 is recovered.
+    let kill = ChaosEvent::Kill { shard: 0, after_seq: 12, kind: KillKind::Immediate };
+    let clean_plan = ChaosPlan { events: vec![kill.clone()] };
+    let corrupt_plan = ChaosPlan {
+        events: vec![ChaosEvent::CorruptSnapshot { shard: 0, nth: 2 }, kill],
+    };
+    let tune = |c: &mut ServeConfig| c.fault.checkpoint_every = 5;
+    let (clean, want, digest) = run_pair(&tm, &p, &events, 2, clean_plan, tune);
+    let (corr, want2, digest2) = run_pair(&tm, &p, &events, 2, corrupt_plan, tune);
+    assert_eq!(want, want2, "same trace, same oracle");
+    assert_eq!(digest, digest2);
+
+    assert_eq!(clean.recovery.corrupt_snapshots_rejected, 0);
+    assert_eq!(corr.recovery.corrupt_snapshots_rejected, 1, "the flipped byte must be caught");
+    assert_eq!(corr.recovery.recoveries, 1);
+    assert!(
+        corr.recovery.replayed_updates > clean.recovery.replayed_updates,
+        "fallback to the older snapshot must replay a longer suffix \
+         ({} vs {} updates)",
+        corr.recovery.replayed_updates,
+        clean.recovery.replayed_updates
+    );
+    for (out, label) in [(&clean, "clean"), (&corr, "corrupt")] {
+        assert_eq!(out.responses, want, "{label} run diverged");
+        assert!(out.shed.is_empty(), "{label} run shed requests");
+        for r in &out.replicas {
+            assert_eq!(r.state_digest(), digest, "{label} replica diverged");
+        }
+    }
+}
+
+/// A stalled worker buffers its window and drains in order: no
+/// recovery, no reordering, responses bit-identical.
+#[test]
+fn stall_then_resume_stays_bit_identical() {
+    let s = shape();
+    let p = TmParams::paper_online(&s);
+    let tm = machine(0x57A);
+    let events = trace(80, 0x74);
+    let plan = ChaosPlan {
+        events: vec![ChaosEvent::Stall { shard: 1, after_seq: 6, items: 9 }],
+    };
+    let (out, want, digest) = run_pair(&tm, &p, &events, 2, plan, |c| {
+        c.fault.checkpoint_every = 8;
+    });
+    assert_eq!(out.recovery.chaos_events_fired, 1);
+    assert_eq!(out.recovery.worker_panics, 0, "a stall is not a death");
+    assert_eq!(out.recovery.recoveries, 0);
+    assert!(out.shed.is_empty());
+    assert_eq!(out.responses, want);
+    for r in &out.replicas {
+        assert_eq!(r.state_digest(), digest);
+    }
+}
+
+/// Single shard + a recovery lag: every batch flushed during the outage
+/// is shed with exact, deterministic accounting — and everything that
+/// *was* answered still matches the oracle.
+#[test]
+fn shed_requests_are_accounted_exactly_and_deterministically() {
+    let s = shape();
+    let p = TmParams::paper_online(&s);
+    let tm = machine(0x5ED);
+    let events = trace(90, 0x85);
+    let plan = ChaosPlan {
+        events: vec![ChaosEvent::Kill { shard: 0, after_seq: 8, kind: KillKind::Immediate }],
+    };
+    let tune = |c: &mut ServeConfig| {
+        c.fault.checkpoint_every = 4;
+        c.fault.recovery_lag = 6;
+    };
+    let (a, want, digest) = run_pair(&tm, &p, &events, 1, plan.clone(), tune);
+    let (b, _, _) = run_pair(&tm, &p, &events, 1, plan, tune);
+
+    assert!(!a.shed.is_empty(), "a 1-shard outage under lag must shed");
+    assert!(a.recovery.shed_batches > 0);
+    assert_eq!(a.shed, b.shed, "shed decisions must be deterministic");
+    assert_eq!(a.responses, b.responses);
+    assert_eq!(a.recovery, b.recovery, "recovery counters must be deterministic");
+    assert_partition(&a, &want, "1-shard outage");
+    // The update log still reaches the recovered shard in full: its
+    // final replica matches the oracle even though some *responses*
+    // were shed.
+    for r in &a.replicas {
+        assert_eq!(r.state_digest(), digest);
+    }
+}
+
+/// Degraded mode: while a shard is down, the survivor absorbs only
+/// `degraded_depth` batches before further ones are shed.
+#[test]
+fn degraded_depth_caps_survivor_absorption() {
+    let s = shape();
+    let p = TmParams::paper_online(&s);
+    let tm = machine(0xDE6);
+    let events = trace(100, 0x96);
+    let plan = ChaosPlan {
+        events: vec![ChaosEvent::Kill { shard: 0, after_seq: 5, kind: KillKind::Immediate }],
+    };
+    let (out, want, digest) = run_pair(&tm, &p, &events, 2, plan, |c| {
+        c.fault.checkpoint_every = 4;
+        c.fault.recovery_lag = 40;
+        c.fault.degraded_depth = 2;
+    });
+    assert!(
+        out.recovery.shed_batches > 0,
+        "a long outage under depth 2 must overflow the survivor"
+    );
+    assert_partition(&out, &want, "degraded 2-shard outage");
+    for r in &out.replicas {
+        assert_eq!(r.state_digest(), digest);
+    }
+}
+
+/// Checkpoint images round-trip bit-identically, and any single-byte
+/// flip or truncation is rejected at restore time — corruption can
+/// never load silently.
+#[test]
+fn checkpoint_roundtrip_and_corruption_rejection() {
+    let tm = machine(0x7EA);
+    let p = TmParams::paper_offline(&shape());
+    let bytes = snapshot_bytes(&tm, &p, 1234);
+    let snap = restore(&bytes).unwrap();
+    assert_eq!(snap.seq, 1234);
+    assert_eq!(snap.machine.state_digest(), tm.state_digest());
+
+    let step = (bytes.len() / 13).max(1);
+    for pos in (0..bytes.len()).step_by(step) {
+        let mut bad = bytes.clone();
+        bad[pos] ^= 0x01;
+        assert!(restore(&bad).is_err(), "bit-flip at byte {pos} must be rejected");
+    }
+    for cut in [0usize, 1, 3, bytes.len() / 2, bytes.len() - 1] {
+        assert!(restore(&bytes[..cut]).is_err(), "truncation to {cut} bytes must be rejected");
+    }
+
+    let path = Path::new(env!("CARGO_TARGET_TMPDIR")).join("recovery_roundtrip.tmfs");
+    save_snapshot(&tm, &p, 77, &path).unwrap();
+    let loaded = load_snapshot(&path).unwrap();
+    assert_eq!(loaded.seq, 77);
+    assert_eq!(loaded.machine.state_digest(), tm.state_digest());
+    std::fs::remove_file(&path).ok();
+}
+
+/// A kill landing on the very last update is recovered during
+/// `finish`, so the outcome still covers every request and replica.
+#[test]
+fn kill_at_the_final_update_is_recovered_at_finish() {
+    let s = shape();
+    let p = TmParams::paper_online(&s);
+    let tm = machine(0xF1A);
+    let events = trace(76, 0xA7); // event 75 is an Update: the last seq
+    let updates = update_count(&events);
+    assert!(matches!(events.last(), Some(ServeEvent::Update { .. })));
+    let plan = ChaosPlan {
+        events: vec![ChaosEvent::Kill {
+            shard: 1,
+            after_seq: updates,
+            kind: KillKind::Immediate,
+        }],
+    };
+    let (out, want, digest) =
+        run_pair(&tm, &p, &events, 2, plan, |c| c.fault.checkpoint_every = 4);
+    assert_eq!(out.recovery.recoveries, 1);
+    assert!(out.shed.is_empty());
+    assert_eq!(out.responses, want);
+    for r in &out.replicas {
+        assert_eq!(r.state_digest(), digest);
+    }
+}
+
+/// Malformed requests are quarantined at admission with exact id
+/// accounting: the survivors' responses are bit-identical to the
+/// oracle's, and no quarantined id is ever answered.
+#[test]
+fn malformed_requests_never_reach_a_shard() {
+    let s = shape();
+    let p = TmParams::paper_online(&s);
+    let tm = machine(0xBAD);
+    let wrong = TmShape { features: s.features + 1, ..s.clone() };
+    let mut events = trace(80, 0xB8);
+    let mut malformed_ids = Vec::new();
+    let mut id = 0u64;
+    for ev in events.iter_mut() {
+        if let ServeEvent::Infer { input, .. } = ev {
+            if id % 7 == 3 {
+                *input = Input::pack(&wrong, &vec![false; wrong.features]);
+                malformed_ids.push(id);
+            }
+            id += 1;
+        }
+    }
+    let bcfg = BatcherConfig {
+        max_batch: 8,
+        latency_budget: 2,
+        expect_literals: Some(s.literals()),
+    };
+    let cfg = ServeConfig::new(2, p.clone(), BASE_SEED);
+    let mut server = ShardServer::new(&tm, &cfg).unwrap();
+    let drive = run_trace(&mut server, &events, &bcfg).unwrap();
+    let out = server.finish().unwrap();
+
+    let mut oracle = ScalarOracle::new(tm.clone(), p, BASE_SEED);
+    let oracle_drive = run_trace(&mut oracle, &events, &bcfg).unwrap();
+    let want = oracle.into_responses();
+
+    assert_eq!(drive.quarantined, malformed_ids.len() as u64, "exact quarantine count");
+    assert_eq!(drive, oracle_drive, "both arms quarantine identically");
+    assert_eq!(drive.infer_requests + drive.quarantined, id, "ids partition");
+    assert_eq!(out.responses, want);
+    for bad in &malformed_ids {
+        assert!(
+            out.responses.binary_search_by_key(bad, |&(i, _)| i).is_err(),
+            "quarantined id {bad} must never be answered"
+        );
+    }
+}
+
+/// Seeded chaos schedules across seeds × shard counts through the full
+/// soak driver (kills + stalls + checkpoint corruption + malformed
+/// requests): every combination recovers to bit-identity with exact
+/// accounting.
+#[test]
+fn seeded_chaos_matrix_agrees_across_seeds_and_shard_counts() {
+    for shards in [1usize, 2, 4] {
+        for chaos_seed in [0xAA11u64, 0xBB22, 0xCC33] {
+            let cfg = ChaosSoakConfig {
+                soak: SoakConfig {
+                    shards,
+                    events: 260,
+                    warmup_epochs: 1,
+                    ..Default::default()
+                },
+                chaos_seed,
+                kills: 2,
+                stalls: 1,
+                corrupts: 1,
+                malformed_every: 29,
+                checkpoint_every: 8,
+                ..Default::default()
+            };
+            let rep = run_chaos_soak(&cfg).unwrap();
+            assert!(!rep.plan.events.is_empty());
+            assert!(
+                rep.agrees(),
+                "shards {shards} chaos_seed {chaos_seed:#x}: {} mismatches, \
+                 replicas_match={}, accounting={}",
+                rep.mismatches,
+                rep.replicas_match_oracle,
+                rep.accounting_exact
+            );
+            assert!(rep.drive.quarantined > 0, "malformed injection must fire");
+        }
+    }
+}

@@ -19,12 +19,11 @@ fn random_input(rng: &mut Xoshiro256, s: &TmShape) -> Input {
     Input::pack(s, &tm_fpga::testkit::gen::bool_vec(rng, s.features, 0.5))
 }
 
-/// Random machine with realistic include density.
+/// Random machine with realistic include density (testkit seeding, the
+/// same generator the oracle/recovery suites use).
 fn random_machine(s: &TmShape, seed: u64) -> MultiTm {
     let mut rng = Xoshiro256::new(seed);
-    let states: Vec<u32> =
-        (0..s.num_tas()).map(|_| rng.next_below(2 * s.states as usize) as u32).collect();
-    MultiTm::from_states(s, states).unwrap()
+    tm_fpga::testkit::gen::machine(&mut rng, s)
 }
 
 /// Drive `events` through a sharded server and the scalar oracle with
@@ -38,13 +37,13 @@ fn differential(
     bcfg: &BatcherConfig,
     base_seed: u64,
 ) -> Vec<(u64, usize)> {
-    let scfg = ServeConfig { shards, params: params.clone(), base_seed };
+    let scfg = ServeConfig::new(shards, params.clone(), base_seed);
     let mut server = ShardServer::new(tm, &scfg).unwrap();
-    let drive = run_trace(&mut server, events, bcfg);
+    let drive = run_trace(&mut server, events, bcfg).unwrap();
     let outcome = server.finish().unwrap();
 
     let mut oracle = ScalarOracle::new(tm.clone(), params.clone(), base_seed);
-    let drive2 = run_trace(&mut oracle, events, bcfg);
+    let drive2 = run_trace(&mut oracle, events, bcfg).unwrap();
     assert_eq!(drive, drive2, "batching decisions must not depend on the backend");
     let expected = oracle.into_responses();
 
@@ -227,7 +226,7 @@ fn mid_stream_fault_injection_stays_bit_identical() {
             events.push(ServeEvent::Infer { at_tick: tick, input: random_input(&mut rng, &s) });
         }
     }
-    let bcfg = BatcherConfig { max_batch: 32, latency_budget: 2 };
+    let bcfg = BatcherConfig { max_batch: 32, latency_budget: 2, ..Default::default() };
     let with_faults = differential(&tm, &p, &events, 4, &bcfg, 0xF411);
     assert!(!with_faults.is_empty());
 
