@@ -27,6 +27,7 @@
 
 mod harness;
 
+use anyhow::Result;
 use tm_fpga::coordinator::perf;
 
 fn main() {
@@ -60,6 +61,13 @@ fn main() {
         }
     }
 
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
     println!("=== §6 performance table ===\n");
     let iters = std::env::var("PERF_ITERS")
         .ok()
@@ -68,10 +76,10 @@ fn main() {
     // Named bindings (not vec indices) so inserting a row can never
     // silently re-point a ratio at the wrong column.
     let fpga_row = perf::fpga_model_row();
-    let engine_row = perf::engine_row(iters);
-    let planes_row = perf::plane_infer_row(iters);
-    let native_row = perf::native_row(iters);
-    let naive_row = perf::baseline_row(iters);
+    let engine_row = perf::engine_row(iters)?;
+    let planes_row = perf::plane_infer_row(iters)?;
+    let native_row = perf::native_row(iters)?;
+    let naive_row = perf::baseline_row(iters)?;
     let fpga = fpga_row.train_dps;
     let engine = engine_row.train_dps;
     let oracle = native_row.train_dps;
@@ -101,7 +109,7 @@ fn main() {
 
     // The ISSUE-2 acceptance comparison: sample-sliced vs row-major
     // batched inference on a 1k-row single-word batch.
-    let (row_major, plane, transpose_s) = perf::plane_comparison(1000, (iters / 2).max(5));
+    let (row_major, plane, transpose_s) = perf::plane_comparison(1000, (iters / 2).max(5))?;
     println!(
         "sample-sliced planes vs row-major evaluate_batch (1k rows): \
          {:.1}× ({:.0} vs {:.0} rows/s; transpose {:.3} ms, amortised by \
@@ -117,7 +125,7 @@ fn main() {
     // full re-scoring vs the incremental dirty-clause engine, on a
     // converged machine under the paper's online config (s = 1, T = 15 —
     // the regime where the T-threshold makes flips rare).
-    let (cold_rs, inc_rs, dirty) = perf::online_monitor_comparison(1000, (iters * 2).max(40));
+    let (cold_rs, inc_rs, dirty) = perf::online_monitor_comparison(1000, (iters * 2).max(40))?;
     println!(
         "incremental dirty-clause re-scoring vs full evaluate_planes \
          (online-monitor loop, 1k-row batch): {:.1}× ({:.0} vs {:.0} \
@@ -136,7 +144,7 @@ fn main() {
     // phase, where the T-threshold has made flips per lane rare; the
     // printed mean flips/lane is the regime check.
     let (train_per_step, train_lane, train_flips) =
-        perf::train_lane_comparison(1024, (iters / 10).max(2));
+        perf::train_lane_comparison(1024, (iters / 10).max(2))?;
     println!(
         "lane-speculative training vs per-step engine (converged epochs, \
          4×32-clause×128-literal shape, 1k rows): {:.1}× ({:.0} vs {:.0} \
@@ -152,7 +160,7 @@ fn main() {
     // burst trace — batch-1 single-shard vs micro-batched (64-wide),
     // single-shard and sharded.
     let (serve_b1, serve_m1, serve_m4, serve_width) =
-        perf::serve_comparison(1000, 4, (iters / 10).max(3));
+        perf::serve_comparison(1000, 4, (iters / 10).max(3))?;
     println!(
         "micro-batched serving vs batch-1 (1k-request trace, 1 shard): \
          {:.1}× ({:.0} vs {:.0} samples/s; mean batch width {:.1}) — \
@@ -176,10 +184,11 @@ fn main() {
     // Dense checkpoints buy short replay at a per-interval snapshot
     // cost; the trade-off is quantified in EXPERIMENTS.md §Robustness.
     let recovery_reps = (iters / 10).max(3);
-    let recovery = [8u64, 64, 256].map(|interval| {
-        let (secs, replayed) = perf::recovery_comparison(512, interval, recovery_reps);
-        (interval, secs, replayed)
-    });
+    let mut recovery = Vec::new();
+    for interval in [8u64, 64, 256] {
+        let (secs, replayed) = perf::recovery_comparison(512, interval, recovery_reps)?;
+        recovery.push((interval, secs, replayed));
+    }
     for (interval, secs, replayed) in &recovery {
         println!(
             "recovery restore+replay (ckpt interval {interval}, 512-update log): \
@@ -203,18 +212,14 @@ fn main() {
     use tm_fpga::tm::*;
     let shape = TmShape::iris();
     let params = TmParams::paper_offline(&shape);
-    let plan = BlockPlan::stratified(iris::booleanised(), 5, 21).unwrap();
-    let data = plan
-        .sets(&[0, 1, 2, 3, 4], SetAllocation::paper())
-        .unwrap()
-        .online
-        .pack(&shape);
+    let plan = BlockPlan::stratified(iris::booleanised(), 5, 21)?;
+    let data = plan.sets(&[0, 1, 2, 3, 4], SetAllocation::paper())?.online.pack(&shape);
     let n_rows = data.len() as u64;
     let mut micro = Vec::new();
 
     {
         // Seed baseline: eager StepRands refill + scalar train_step.
-        let mut tm = MultiTm::new(&shape).unwrap();
+        let mut tm = MultiTm::new(&shape)?;
         let mut rng = Xoshiro256::new(1);
         let mut rands = StepRands::draw(&mut rng, &shape);
         micro.push(harness::bench(
@@ -233,7 +238,7 @@ fn main() {
     {
         // Bit-parallel feedback on the same eager draws (isolates the
         // word-batched apply from the lazy-randomness win).
-        let mut tm = MultiTm::new(&shape).unwrap();
+        let mut tm = MultiTm::new(&shape)?;
         let mut rng = Xoshiro256::new(1);
         let mut rands = StepRands::draw(&mut rng, &shape);
         micro.push(harness::bench(
@@ -251,7 +256,7 @@ fn main() {
     }
     {
         // The full word-parallel engine: lazy bit-sliced randomness.
-        let mut tm = MultiTm::new(&shape).unwrap();
+        let mut tm = MultiTm::new(&shape)?;
         let mut rng = Xoshiro256::new(1);
         micro.push(harness::bench(
             "train_epoch x60 (word-parallel engine)",
@@ -436,8 +441,8 @@ fn main() {
             // A lost BENCH_<n>.json must fail the perf-smoke step loudly:
             // otherwise the CI regression gate silently compares against
             // the committed zero stubs and reads as green.
-            eprintln!("\nfailed to write bench json: {e}");
-            std::process::exit(1);
+            anyhow::bail!("failed to write bench json: {e}");
         }
     }
+    Ok(())
 }

@@ -134,6 +134,13 @@ COMMANDS
                           attribution    [--seed N] [--row N]
   parity                  verify native vs PJRT bit-parity on a trajectory
                           [--steps N=60]
+  verify                  replay the committed scenario corpus through every
+                          engine pair (bit-identity), exit nonzero on any
+                          divergence   [--fixtures DIR=rust/tests/corpus]
+                          with --grow N: also generate and replay N seeded
+                          random schedules, shrinking any divergence to a
+                          minimal fixture    [--steps N=100] [--seed N=42]
+                          [--out DIR=rust/tests/corpus]
   help                    this text
 
 The binary is self-contained after `make artifacts` (PJRT paths need the

@@ -31,7 +31,7 @@ use crate::data::iris;
 use crate::fpga::mcu::McuAction;
 use crate::fpga::system::{FpgaSystem, SystemConfig};
 use crate::tm::fault::{Fault, FaultMap};
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 use std::sync::mpsc;
 
 /// The figures of §5 (plus `All`).
@@ -120,7 +120,7 @@ pub struct FigureResult {
 }
 
 /// Stage the system for `figure` on one ordering.
-pub fn configure(figure: Figure, seed: u64) -> (SystemConfig, Vec<(usize, McuAction)>) {
+pub fn configure(figure: Figure, seed: u64) -> Result<(SystemConfig, Vec<(usize, McuAction)>)> {
     let mut cfg = SystemConfig::paper();
     cfg.seed = seed;
     let mut schedule = Vec::new();
@@ -143,16 +143,16 @@ pub fn configure(figure: Figure, seed: u64) -> (SystemConfig, Vec<(usize, McuAct
         Figure::Fig8 => {
             cfg.online_learning = false;
             let map = FaultMap::even_spread(&cfg.shape, 0.20, Fault::StuckAt0, seed ^ 0xF417)
-                .expect("fault map");
+                .context("fig8 fault map")?;
             schedule.push((6, McuAction::InjectFaults(map)));
         }
         Figure::Fig9 => {
             let map = FaultMap::even_spread(&cfg.shape, 0.20, Fault::StuckAt0, seed ^ 0xF417)
-                .expect("fault map");
+                .context("fig9 fault map")?;
             schedule.push((6, McuAction::InjectFaults(map)));
         }
     }
-    (cfg, schedule)
+    Ok((cfg, schedule))
 }
 
 /// Run one figure over the cross-validation sweep.
@@ -184,16 +184,20 @@ pub fn run_figure(figure: Figure, opts: &SweepOptions) -> Result<FigureResult> {
             let blocks = &blocks;
             scope.spawn(move || {
                 for (i, ord) in chunk {
-                    let (mut cfg, schedule) = configure(figure, opts.seed + *i as u64);
-                    cfg.seed = opts.seed.wrapping_add(1000).wrapping_add(*i as u64);
                     let run = (|| -> Result<_> {
+                        let (mut cfg, schedule) = configure(figure, opts.seed + *i as u64)?;
+                        cfg.seed = opts.seed.wrapping_add(1000).wrapping_add(*i as u64);
                         let mut sys = FpgaSystem::new(cfg, blocks, ord)?;
                         for (it, action) in &schedule {
                             sys.mcu.schedule(*it, action.clone());
                         }
                         sys.run()
                     })();
-                    tx.send((*i, run)).expect("channel");
+                    // A closed receiver means the collector already bailed
+                    // on an earlier error; stop producing, don't panic.
+                    if tx.send((*i, run)).is_err() {
+                        return;
+                    }
                 }
             });
         }
@@ -206,7 +210,11 @@ pub fn run_figure(figure: Figure, opts: &SweepOptions) -> Result<FigureResult> {
     for (i, run) in rx {
         runs[i] = Some(run?);
     }
-    let runs: Vec<_> = runs.into_iter().map(|r| r.unwrap()).collect();
+    let runs: Vec<_> = runs
+        .into_iter()
+        .enumerate()
+        .map(|(i, r)| r.with_context(|| format!("worker never reported ordering {i}")))
+        .collect::<Result<_>>()?;
 
     let offline = Curve::aggregate(&runs.iter().map(|r| r.offline_curve.clone()).collect::<Vec<_>>());
     let validation =

@@ -67,10 +67,10 @@ impl Curve {
 
     /// Net accuracy change over the curve (the paper's "+12%" deltas).
     pub fn delta(&self) -> f64 {
-        if self.points.len() < 2 {
-            return 0.0;
+        match (self.points.first(), self.points.last()) {
+            (Some(first), Some(last)) if self.points.len() >= 2 => last.mean - first.mean,
+            _ => 0.0,
         }
-        self.points.last().unwrap().mean - self.points[0].mean
     }
 
     /// Largest single-step drop (used to locate fault/class events).

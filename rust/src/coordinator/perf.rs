@@ -23,7 +23,7 @@ use crate::tm::feedback::train_step;
 use crate::tm::machine::MultiTm;
 use crate::tm::params::{TmParams, TmShape};
 use crate::tm::rng::{StepRands, Xoshiro256};
-use anyhow::Result;
+use anyhow::{bail, Result};
 use std::time::Instant;
 
 /// One row of the §6 performance table.
@@ -37,18 +37,18 @@ pub struct PerfRow {
     pub note: String,
 }
 
-fn bench_data(shape: &TmShape) -> Vec<(crate::tm::clause::Input, usize)> {
-    let plan = BlockPlan::stratified(iris::booleanised(), 5, 21).unwrap();
-    let sets = plan.sets(&[0, 1, 2, 3, 4], SetAllocation::paper()).unwrap();
-    sets.online.pack(shape)
+fn bench_data(shape: &TmShape) -> Result<Vec<(crate::tm::clause::Input, usize)>> {
+    let plan = BlockPlan::stratified(iris::booleanised(), 5, 21)?;
+    let sets = plan.sets(&[0, 1, 2, 3, 4], SetAllocation::paper())?;
+    Ok(sets.online.pack(shape))
 }
 
 /// Measured throughput of the optimized native path.
-pub fn native_row(iters: usize) -> PerfRow {
+pub fn native_row(iters: usize) -> Result<PerfRow> {
     let shape = TmShape::iris();
     let params = TmParams::paper_offline(&shape);
-    let data = bench_data(&shape);
-    let mut tm = MultiTm::new(&shape).unwrap();
+    let data = bench_data(&shape)?;
+    let mut tm = MultiTm::new(&shape)?;
     let mut rng = Xoshiro256::new(1);
     let mut rands = StepRands::draw(&mut rng, &shape);
 
@@ -74,23 +74,23 @@ pub fn native_row(iters: usize) -> PerfRow {
     }
     let infer_dps = n as f64 / t0.elapsed().as_secs_f64();
     std::hint::black_box(sink);
-    PerfRow {
+    Ok(PerfRow {
         path: "rust native (scalar oracle)".into(),
         train_dps,
         infer_dps,
         note: "eager StepRands + per-literal feedback (L2 parity twin)".into(),
-    }
+    })
 }
 
 /// Measured throughput of the word-parallel engine: lazy step randomness
 /// (bit-sliced Bernoulli masks, drawn only for selected clauses) +
 /// word-batched TA feedback for training, and the class-fanned batched
 /// inference path.
-pub fn engine_row(iters: usize) -> PerfRow {
+pub fn engine_row(iters: usize) -> Result<PerfRow> {
     let shape = TmShape::iris();
     let params = TmParams::paper_offline(&shape);
-    let data = bench_data(&shape);
-    let mut tm = MultiTm::new(&shape).unwrap();
+    let data = bench_data(&shape)?;
+    let mut tm = MultiTm::new(&shape)?;
     let mut rng = Xoshiro256::new(1);
 
     let t0 = Instant::now();
@@ -112,12 +112,12 @@ pub fn engine_row(iters: usize) -> PerfRow {
     }
     let infer_dps = n as f64 / t0.elapsed().as_secs_f64();
     std::hint::black_box(sink);
-    PerfRow {
+    Ok(PerfRow {
         path: "rust native (word-parallel engine)".into(),
         train_dps,
         infer_dps,
         note: "lazy bit-sliced rands + word-batched feedback".into(),
-    }
+    })
 }
 
 /// Train a machine to realistic include density (an untrained machine
@@ -127,23 +127,23 @@ fn trained_machine(
     shape: &TmShape,
     params: &TmParams,
     data: &[(Input, usize)],
-) -> MultiTm {
-    let mut tm = MultiTm::new(shape).unwrap();
+) -> Result<MultiTm> {
+    let mut tm = MultiTm::new(shape)?;
     let mut rng = Xoshiro256::new(1);
     for _ in 0..10 {
         tm.train_epoch(data, params, &mut rng);
     }
-    tm
+    Ok(tm)
 }
 
 /// Measured throughput of the sample-sliced (bitplane) inference engine:
 /// batched prediction off a once-transposed plane cache. Inference-only —
 /// the train column is 0 (training stays on the word-parallel engine).
-pub fn plane_infer_row(iters: usize) -> PerfRow {
+pub fn plane_infer_row(iters: usize) -> Result<PerfRow> {
     let shape = TmShape::iris();
     let params = TmParams::paper_offline(&shape);
-    let data = bench_data(&shape);
-    let tm = trained_machine(&shape, &params, &data);
+    let data = bench_data(&shape)?;
+    let tm = trained_machine(&shape, &params, &data)?;
     let batch = PlaneBatch::from_labelled(&shape, &data);
 
     let t0 = Instant::now();
@@ -156,12 +156,12 @@ pub fn plane_infer_row(iters: usize) -> PerfRow {
     }
     let infer_dps = n as f64 / t0.elapsed().as_secs_f64();
     std::hint::black_box(sink);
-    PerfRow {
+    Ok(PerfRow {
         path: "rust native (sample-sliced planes)".into(),
         train_dps: 0.0,
         infer_dps,
         note: "64 samples per AND off cached dataset bitplanes".into(),
-    }
+    })
 }
 
 /// The ISSUE-2 acceptance comparison: row-major `evaluate_batch` vs the
@@ -170,11 +170,11 @@ pub fn plane_infer_row(iters: usize) -> PerfRow {
 /// `(row_major_rows_per_s, plane_rows_per_s, transpose_seconds)`; the
 /// transpose is reported separately because the cached-plane drivers
 /// amortise it across every rescore.
-pub fn plane_comparison(batch_rows: usize, reps: usize) -> (f64, f64, f64) {
+pub fn plane_comparison(batch_rows: usize, reps: usize) -> Result<(f64, f64, f64)> {
     let shape = TmShape::iris();
     let params = TmParams::paper_offline(&shape);
-    let data = bench_data(&shape);
-    let tm = trained_machine(&shape, &params, &data);
+    let data = bench_data(&shape)?;
+    let tm = trained_machine(&shape, &params, &data)?;
     let inputs: Vec<Input> =
         data.iter().map(|(x, _)| x.clone()).cycle().take(batch_rows).collect();
 
@@ -193,7 +193,7 @@ pub fn plane_comparison(batch_rows: usize, reps: usize) -> (f64, f64, f64) {
         std::hint::black_box(tm.evaluate_planes(&planes, &params, EvalMode::Infer));
     }
     let plane = (reps * inputs.len()) as f64 / t0.elapsed().as_secs_f64();
-    (row_major, plane, transpose_s)
+    Ok((row_major, plane, transpose_s))
 }
 
 /// The ISSUE-3 acceptance comparison: the interleaved online-monitor
@@ -207,16 +207,16 @@ pub fn plane_comparison(batch_rows: usize, reps: usize) -> (f64, f64, f64) {
 /// feedback (and therefore TA action flips) is rare. Only re-score time
 /// is accumulated; the identical training steps are excluded from both
 /// clocks. Returns `(cold_rescores_per_s, incremental_rescores_per_s,
-/// measured_dirty_fraction)` and panics if the two arms' final sums ever
-/// diverge (they are asserted bit-identical).
-pub fn online_monitor_comparison(batch_rows: usize, steps: usize) -> (f64, f64, f64) {
+/// measured_dirty_fraction)` and errors if the two arms' final sums ever
+/// diverge (they are checked bit-identical).
+pub fn online_monitor_comparison(batch_rows: usize, steps: usize) -> Result<(f64, f64, f64)> {
     use crate::tm::engine::train_step_fast;
     use crate::tm::rescore::RescoreCache;
     let shape = TmShape::iris();
     let p_train = TmParams::paper_online(&shape); // s = 1: the §5 online config
     let p_score = TmParams::paper_offline(&shape);
-    let data = bench_data(&shape);
-    let tm0 = trained_machine(&shape, &p_score, &data);
+    let data = bench_data(&shape)?;
+    let tm0 = trained_machine(&shape, &p_score, &data)?;
     let rows: Vec<(Input, usize)> =
         data.iter().cloned().cycle().take(batch_rows).collect();
     let batch = PlaneBatch::from_labelled(&shape, &rows);
@@ -251,12 +251,14 @@ pub fn online_monitor_comparison(batch_rows: usize, steps: usize) -> (f64, f64, 
         inc_sums = cache.evaluate(&tm, batch.planes(), &p_score, EvalMode::Infer);
         inc_t += t0.elapsed();
     }
-    assert_eq!(cold_sums, inc_sums, "incremental re-score must be bit-identical");
-    (
+    if cold_sums != inc_sums {
+        bail!("incremental re-score diverged from the cold full re-score");
+    }
+    Ok((
         steps as f64 / cold_t.as_secs_f64(),
         steps as f64 / inc_t.as_secs_f64(),
         cache.stats().dirty_fraction(),
-    )
+    ))
 }
 
 /// The ISSUE-5 acceptance comparison: training epochs on a **converged**
@@ -272,20 +274,19 @@ pub fn online_monitor_comparison(batch_rows: usize, steps: usize) -> (f64, f64, 
 /// rare. The batch transpose is built once and reused across epochs,
 /// as the wired drivers do. Returns `(per_step_steps_per_s,
 /// lane_steps_per_s, mean_flips_per_lane)`.
-pub fn train_lane_comparison(rows_n: usize, epochs: usize) -> (f64, f64, f64) {
+pub fn train_lane_comparison(rows_n: usize, epochs: usize) -> Result<(f64, f64, f64)> {
     use crate::data::synthetic::prototype_dataset;
     use crate::tm::engine::{train_step_lazy, FeedbackPlan};
     use crate::tm::train_planes::TrainScratch;
     let shape = TmShape { classes: 4, max_clauses: 32, features: 64, states: 100 };
     let params = TmParams::paper_offline(&shape);
-    let data = prototype_dataset(shape.classes, rows_n.div_ceil(shape.classes), 64, 0.03, 0xBEE5)
-        .unwrap()
+    let data = prototype_dataset(shape.classes, rows_n.div_ceil(shape.classes), 64, 0.03, 0xBEE5)?
         .pack(&shape);
 
     // Converge first (untimed): after these epochs the class sums sit at
     // the T clamp for most samples and p_sel ≈ 0 — the converged phase
     // the acceptance floor is defined over.
-    let mut tm0 = MultiTm::new(&shape).unwrap();
+    let mut tm0 = MultiTm::new(&shape)?;
     let mut rng = Xoshiro256::new(11);
     for _ in 0..10 {
         tm0.train_epoch(&data, &params, &mut rng);
@@ -314,12 +315,10 @@ pub fn train_lane_comparison(rows_n: usize, epochs: usize) -> (f64, f64, f64) {
         tm_b.train_plane_batch_lazy(&data, &planes, &params, &plan, &mut rng_b, &mut scratch);
     }
     let lane = (epochs * data.len()) as f64 / t0.elapsed().as_secs_f64();
-    assert_eq!(
-        tm_a.ta().states(),
-        tm_b.ta().states(),
-        "lane arm must be bit-identical to the per-step arm"
-    );
-    (per_step, lane, scratch.mean_flips_per_lane())
+    if tm_a.ta().states() != tm_b.ta().states() {
+        bail!("lane arm diverged from the per-step arm (must be bit-identical)");
+    }
+    Ok((per_step, lane, scratch.mean_flips_per_lane()))
 }
 
 /// The ISSUE-4 acceptance comparison: request-at-a-time serving through
@@ -335,12 +334,16 @@ pub fn train_lane_comparison(rows_n: usize, epochs: usize) -> (f64, f64, f64) {
 /// `(batch1_rps, micro_1shard_rps, micro_sharded_rps, mean_width)` —
 /// samples served per wall-clock second and the sharded arm's achieved
 /// mean batch width.
-pub fn serve_comparison(requests: usize, shards: usize, reps: usize) -> (f64, f64, f64, f64) {
+pub fn serve_comparison(
+    requests: usize,
+    shards: usize,
+    reps: usize,
+) -> Result<(f64, f64, f64, f64)> {
     use crate::serve::{run_trace, BatcherConfig, ServeConfig, ServeEvent, ShardServer};
     let shape = TmShape::iris();
     let params = TmParams::paper_offline(&shape);
-    let data = bench_data(&shape);
-    let tm = trained_machine(&shape, &params, &data);
+    let data = bench_data(&shape)?;
+    let tm = trained_machine(&shape, &params, &data)?;
     let events: Vec<ServeEvent> = data
         .iter()
         .map(|(x, _)| x.clone())
@@ -349,30 +352,35 @@ pub fn serve_comparison(requests: usize, shards: usize, reps: usize) -> (f64, f6
         .map(|input| ServeEvent::Infer { at_tick: 0, input })
         .collect();
 
-    let arm = |n_shards: usize, max_batch: usize| -> (f64, f64) {
+    let arm = |n_shards: usize, max_batch: usize| -> Result<(f64, f64)> {
         let bcfg = BatcherConfig { max_batch, latency_budget: 1, ..Default::default() };
         let mut best = f64::INFINITY;
         let mut width = 0.0;
         for rep in 0..=reps.max(1) {
             let cfg = ServeConfig::new(n_shards, params.clone(), 7);
             let t0 = Instant::now();
-            let mut server = ShardServer::new(&tm, &cfg).unwrap();
-            let drive = run_trace(&mut server, &events, &bcfg).unwrap();
-            let outcome = server.finish().unwrap();
+            let mut server = ShardServer::new(&tm, &cfg)?;
+            let drive = run_trace(&mut server, &events, &bcfg)?;
+            let outcome = server.finish()?;
             let secs = t0.elapsed().as_secs_f64();
-            assert_eq!(outcome.responses.len(), requests, "every request answered");
+            if outcome.responses.len() != requests {
+                bail!(
+                    "serve arm answered {} of {requests} requests",
+                    outcome.responses.len()
+                );
+            }
             if rep > 0 {
                 best = best.min(secs); // rep 0 is the untimed warmup
             }
             width = drive.mean_batch_width();
         }
-        (requests as f64 / best, width)
+        Ok((requests as f64 / best, width))
     };
-    let (batch1, w1) = arm(1, 1);
+    let (batch1, w1) = arm(1, 1)?;
     debug_assert!((w1 - 1.0).abs() < 1e-9);
-    let (micro_one, _) = arm(1, 64);
-    let (micro_sharded, width) = arm(shards, 64);
-    (batch1, micro_one, micro_sharded, width)
+    let (micro_one, _) = arm(1, 64)?;
+    let (micro_sharded, width) = arm(shards, 64)?;
+    Ok((batch1, micro_one, micro_sharded, width))
 }
 
 /// The PR-6 recovery-latency scenario: checkpoint interval vs replay
@@ -386,13 +394,13 @@ pub fn serve_comparison(requests: usize, shards: usize, reps: usize) -> (f64, f6
 /// `(seconds, replayed_updates)`. Each run's recovered state is checked
 /// identical across reps — timing a nondeterministic recovery would be
 /// meaningless.
-pub fn recovery_comparison(total_updates: u64, interval: u64, reps: usize) -> (f64, u64) {
+pub fn recovery_comparison(total_updates: u64, interval: u64, reps: usize) -> Result<(f64, u64)> {
     use crate::serve::{restore, snapshot_bytes};
     use crate::tm::update::{ShardUpdate, UpdateKind};
     let shape = TmShape::iris();
     let params = TmParams::paper_offline(&shape);
-    let data = bench_data(&shape);
-    let tm = trained_machine(&shape, &params, &data);
+    let data = bench_data(&shape)?;
+    let tm = trained_machine(&shape, &params, &data)?;
     let base_seed = 7u64;
     let log: Vec<ShardUpdate> = (1..=total_updates)
         .map(|seq| {
@@ -417,7 +425,7 @@ pub fn recovery_comparison(total_updates: u64, interval: u64, reps: usize) -> (f
     let mut digest: Option<u64> = None;
     for _ in 0..reps.max(1) {
         let t0 = Instant::now();
-        let mut restored = restore(&snap).unwrap();
+        let mut restored = restore(&snap)?;
         let mut r: Option<StepRands> = None;
         for u in &log[ckpt_seq as usize..] {
             restored.machine.apply_update_with(u, &params, base_seed, &mut r);
@@ -425,18 +433,20 @@ pub fn recovery_comparison(total_updates: u64, interval: u64, reps: usize) -> (f
         best = best.min(t0.elapsed().as_secs_f64());
         let d = restored.machine.state_digest();
         if let Some(prev) = digest {
-            assert_eq!(prev, d, "recovery must be deterministic across reps");
+            if prev != d {
+                bail!("recovery must be deterministic across reps");
+            }
         }
         digest = Some(d);
     }
-    (best, replayed)
+    Ok((best, replayed))
 }
 
 /// Measured throughput of the naive scalar baseline.
-pub fn baseline_row(iters: usize) -> PerfRow {
+pub fn baseline_row(iters: usize) -> Result<PerfRow> {
     let shape = TmShape::iris();
     let params = TmParams::paper_offline(&shape);
-    let data = bench_data(&shape);
+    let data = bench_data(&shape)?;
     let mut tm = NaiveTm::new(&shape);
     let mut rng = Xoshiro256::new(1);
     let mut rands = StepRands::draw(&mut rng, &shape);
@@ -463,12 +473,12 @@ pub fn baseline_row(iters: usize) -> PerfRow {
     }
     let infer_dps = n as f64 / t0.elapsed().as_secs_f64();
     std::hint::black_box(sink);
-    PerfRow {
+    Ok(PerfRow {
         path: "software baseline (naive scalar)".into(),
         train_dps,
         infer_dps,
         note: "the paper's software comparator".into(),
-    }
+    })
 }
 
 /// The modelled FPGA: 1 datapoint/clock pipelined at the reference clock.
@@ -493,7 +503,7 @@ pub fn pjrt_row(steps: usize) -> Result<Option<PerfRow>> {
     let exe = crate::runtime::TmExecutor::load(&client, &dir)?;
     let shape = exe.meta.shape.clone();
     let params = TmParams::paper_offline(&shape);
-    let data = bench_data(&shape);
+    let data = bench_data(&shape)?;
     let mut tm = MultiTm::new(&shape)?;
     let mut rng = Xoshiro256::new(1);
 
@@ -542,7 +552,7 @@ pub fn pjrt_epoch_row(passes: usize) -> Result<Option<PerfRow>> {
     }
     let shape = exe.meta.shape.clone();
     let params = TmParams::paper_online(&shape);
-    let data = bench_data(&shape);
+    let data = bench_data(&shape)?;
     let n = exe.meta.epoch_steps.min(data.len());
     let mut tm = MultiTm::new(&shape)?;
     let mut rng = Xoshiro256::new(2);
@@ -679,8 +689,8 @@ mod tests {
 
     #[test]
     fn native_beats_naive() {
-        let native = native_row(3);
-        let naive = baseline_row(3);
+        let native = native_row(3).unwrap();
+        let naive = baseline_row(3).unwrap();
         assert!(
             native.infer_dps > naive.infer_dps,
             "bit-parallel {:.0} should beat naive {:.0}",
@@ -695,11 +705,11 @@ mod tests {
         // As with engine_row: wall-clock ratio assertions live in the
         // perf_table bench at realistic iteration counts; here only
         // sanity-check the measurement plumbing.
-        let r = plane_infer_row(3);
+        let r = plane_infer_row(3).unwrap();
         assert!(r.infer_dps > 0.0);
         assert_eq!(r.train_dps, 0.0, "plane path is inference-only");
         assert!(r.path.contains("sample-sliced"));
-        let (row_major, plane, transpose_s) = plane_comparison(256, 2);
+        let (row_major, plane, transpose_s) = plane_comparison(256, 2).unwrap();
         assert!(row_major > 0.0 && plane > 0.0);
         assert!(transpose_s >= 0.0);
     }
@@ -710,7 +720,7 @@ mod tests {
         // ≥5× wall-clock acceptance lives in the perf_table bench at
         // realistic batch/step counts (timing assertions in `cargo test`
         // are flaky by construction).
-        let (cold, inc, dirty) = online_monitor_comparison(256, 6);
+        let (cold, inc, dirty) = online_monitor_comparison(256, 6).unwrap();
         assert!(cold > 0.0 && inc > 0.0);
         assert!((0.0..=1.0).contains(&dirty), "dirty fraction {dirty}");
     }
@@ -721,7 +731,7 @@ mod tests {
         // the ≥3× wall-clock acceptance lives in the perf_table bench at
         // realistic row/epoch counts (timing assertions in `cargo test`
         // are flaky by construction).
-        let (per_step, lane, flips) = train_lane_comparison(128, 1);
+        let (per_step, lane, flips) = train_lane_comparison(128, 1).unwrap();
         assert!(per_step > 0.0 && lane > 0.0);
         assert!(flips >= 0.0, "mean flips/lane {flips}");
     }
@@ -732,7 +742,7 @@ mod tests {
         // the perf_table bench at realistic request counts; here only
         // sanity-check the plumbing (every arm answers every request —
         // asserted inside — and rates/width are sane).
-        let (batch1, micro_one, micro_sharded, width) = serve_comparison(192, 2, 1);
+        let (batch1, micro_one, micro_sharded, width) = serve_comparison(192, 2, 1).unwrap();
         assert!(batch1 > 0.0 && micro_one > 0.0 && micro_sharded > 0.0);
         assert!(
             (1.0..=64.0).contains(&width),
@@ -746,7 +756,7 @@ mod tests {
         // perf_table bench at realistic iteration counts — wall-clock
         // comparisons inside `cargo test` on shared CI runners are
         // flaky by construction, so here only sanity-check the row.
-        let engine = engine_row(6);
+        let engine = engine_row(6).unwrap();
         assert!(engine.train_dps > 0.0);
         assert!(engine.infer_dps > 0.0);
         assert!(engine.path.contains("word-parallel"));

@@ -134,14 +134,18 @@ pub fn run_sweep(cfg: &SweepConfig) -> Result<Vec<SweepPoint>> {
                         continue;
                     }
                     let r = evaluate_cell(shape, *s, *t, folds, cfg.epochs, cfg.seed);
-                    tx.send(r).expect("channel");
+                    // A closed receiver means the collector already bailed
+                    // on an earlier error; stop producing, don't panic.
+                    if tx.send(r).is_err() {
+                        return;
+                    }
                 }
             });
         }
         drop(tx);
     });
     let mut points: Vec<SweepPoint> = rx.into_iter().collect::<Result<_>>()?;
-    points.sort_by(|a, b| b.val_accuracy.partial_cmp(&a.val_accuracy).unwrap());
+    points.sort_by(|a, b| b.val_accuracy.total_cmp(&a.val_accuracy));
     Ok(points)
 }
 

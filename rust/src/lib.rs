@@ -24,3 +24,4 @@ pub mod runtime;
 pub mod serve;
 pub mod testkit;
 pub mod tm;
+pub mod verify;

@@ -2,7 +2,7 @@
 //!
 //! See `tmfpga help` (or [`tm_fpga::cli::USAGE`]) for the command set.
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 use std::path::PathBuf;
 use tm_fpga::cli::{Cli, USAGE};
 use tm_fpga::coordinator::{
@@ -37,6 +37,7 @@ fn dispatch(cli: &Cli) -> Result<()> {
         "sweep" => cmd_sweep(cli),
         "replay" => cmd_replay(cli),
         "parity" => cmd_parity(cli),
+        "verify" => cmd_verify(cli),
         "explain" => cmd_explain(cli),
         "help" | "--help" | "-h" => {
             println!("{USAGE}");
@@ -234,10 +235,10 @@ fn cmd_perf(cli: &Cli) -> Result<()> {
     let pjrt_steps = cli.flag_usize("pjrt-steps", 60)?;
     let mut rows = vec![
         coordinator::fpga_model_row(),
-        coordinator::engine_row(iters),
-        coordinator::plane_infer_row(iters),
-        coordinator::native_row(iters),
-        coordinator::baseline_row(iters),
+        coordinator::engine_row(iters)?,
+        coordinator::plane_infer_row(iters)?,
+        coordinator::native_row(iters)?,
+        coordinator::baseline_row(iters)?,
     ];
     match coordinator::pjrt_row(pjrt_steps)? {
         Some(r) => rows.push(r),
@@ -352,6 +353,96 @@ fn cmd_explain(cli: &Cli) -> Result<()> {
     let (x, y) = &val[row.min(val.len() - 1)];
     println!("\nattribution for validation row {row} (true class {y}):");
     print!("{}", tm_fpga::tm::explain::report(&mut tm, x, &params));
+    Ok(())
+}
+
+fn cmd_verify(cli: &Cli) -> Result<()> {
+    use tm_fpga::verify::{corpus, shrink};
+    // Phase 1: replay every committed fixture through the five-lane
+    // replayer; any divergence is a regression and fails the run.
+    let fixtures: PathBuf = cli.flag("fixtures").unwrap_or("rust/tests/corpus").into();
+    let mut replayed = 0usize;
+    let mut checks = 0u64;
+    if fixtures.is_dir() {
+        let mut paths: Vec<PathBuf> = std::fs::read_dir(&fixtures)
+            .with_context(|| format!("reading {}", fixtures.display()))?
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .filter(|p| p.extension().is_some_and(|x| x == "ron"))
+            .collect();
+        paths.sort();
+        for path in &paths {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading {}", path.display()))?;
+            let sched = corpus::Schedule::parse(&text)
+                .with_context(|| format!("parsing {}", path.display()))?;
+            match corpus::replay(&sched) {
+                Ok(rep) => {
+                    replayed += 1;
+                    checks += rep.checks;
+                    println!(
+                        "  {} : OK ({} steps, {} cross-checks)",
+                        path.display(),
+                        rep.steps,
+                        rep.checks
+                    );
+                }
+                Err(d) => bail!("fixture {} diverged at {d}", path.display()),
+            }
+        }
+    }
+    println!(
+        "corpus replay: {replayed} fixture(s), {checks} cross-checks, \
+         all engine pairs bit-identical"
+    );
+    // Phase 2 (optional): seeded corpus growth. Every divergence is
+    // shrunk to a minimal schedule, written as a fixture, and fails the
+    // run so CI turns it into a committed regression.
+    let grow_n = cli.flag_usize("grow", 0)?;
+    if grow_n > 0 {
+        let steps = cli.flag_usize("steps", 100)?;
+        let seed = cli.flag_u64("seed", 42)?;
+        let out: PathBuf = cli.flag("out").unwrap_or("rust/tests/corpus").into();
+        let shapes = [
+            ("iris", tm_fpga::tm::TmShape::iris()),
+            // A >64-feature shape so the multi-word tail-mask paths are
+            // grown over too, not just iris's single-word planes.
+            (
+                "wide",
+                tm_fpga::tm::TmShape { classes: 2, max_clauses: 8, features: 80, states: 50 },
+            ),
+        ];
+        let mut found_any = false;
+        for (name, shape) in &shapes {
+            let t0 = std::time::Instant::now();
+            let outcome = shrink::grow(shape, seed, grow_n, steps);
+            println!(
+                "corpus growth [{name}]: {} schedule(s), {} clean step(s), \
+                 {} divergence(s) in {:.1}s",
+                outcome.schedules,
+                outcome.clean_steps,
+                outcome.found.len(),
+                t0.elapsed().as_secs_f64()
+            );
+            for r in &outcome.found {
+                let fname = format!("repro_{name}_{seed:016x}_{}", r.found_at);
+                let path = shrink::write_fixture(&out, &fname, &r.schedule)?;
+                eprintln!(
+                    "  reproducer ({} steps, from schedule {}): {}\n    wrote {}",
+                    r.schedule.steps.len(),
+                    r.found_at,
+                    r.divergence,
+                    path.display()
+                );
+                found_any = true;
+            }
+        }
+        if found_any {
+            bail!(
+                "corpus growth found divergences; minimized fixtures written — \
+                 fix the engines and commit them as regressions"
+            );
+        }
+    }
     Ok(())
 }
 

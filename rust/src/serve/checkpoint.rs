@@ -249,6 +249,7 @@ pub fn restore(bytes: &[u8]) -> Result<ServeSnapshot> {
     if action_crc(&machine) != want_action_crc {
         bail!("serve snapshot: action cache does not match TA states");
     }
+    crate::verify::contracts::enforce(&machine, "checkpoint::restore");
     Ok(ServeSnapshot { seq, params, machine })
 }
 

@@ -44,12 +44,47 @@ where
 
 /// Generator helpers.
 pub mod gen {
+    use crate::tm::clause::Input;
     use crate::tm::machine::MultiTm;
     use crate::tm::params::TmShape;
     use crate::tm::rng::Xoshiro256;
 
     pub fn bool_vec(rng: &mut Xoshiro256, len: usize, p_true: f32) -> Vec<bool> {
         (0..len).map(|_| rng.next_f32() < p_true).collect()
+    }
+
+    /// One packed random input with p=0.5 feature density.
+    pub fn input(rng: &mut Xoshiro256, shape: &TmShape) -> Input {
+        Input::pack(shape, &bool_vec(rng, shape.features, 0.5))
+    }
+
+    /// `n` packed random inputs with p=0.5 feature density — the input
+    /// half of every integration suite's dataset builder.
+    pub fn inputs(rng: &mut Xoshiro256, shape: &TmShape, n: usize) -> Vec<Input> {
+        (0..n).map(|_| input(rng, shape)).collect()
+    }
+
+    /// `n` labelled rows with uniformly random labels — the shared
+    /// dataset builder for the engine/corpus suites.
+    pub fn rows(rng: &mut Xoshiro256, shape: &TmShape, n: usize) -> Vec<(Input, usize)> {
+        (0..n)
+            .map(|_| {
+                let x = Input::pack(shape, &bool_vec(rng, shape.features, 0.5));
+                (x, rng.next_below(shape.classes))
+            })
+            .collect()
+    }
+
+    /// `n` labelled rows with cyclic labels (`i % classes`) — keeps every
+    /// class represented even in tiny batches, as the plane-training
+    /// suites require.
+    pub fn rows_cyclic(rng: &mut Xoshiro256, shape: &TmShape, n: usize) -> Vec<(Input, usize)> {
+        (0..n)
+            .map(|i| {
+                let x = Input::pack(shape, &bool_vec(rng, shape.features, 0.5));
+                (x, i % shape.classes)
+            })
+            .collect()
     }
 
     /// Random machine with realistic include density: TA states drawn
@@ -62,6 +97,14 @@ pub mod gen {
             .collect();
         MultiTm::from_states(shape, states)
             .expect("uniformly drawn TA states are always in range")
+    }
+
+    /// A random machine plus an independent clone — the oracle/subject
+    /// pair every cross-engine equivalence test starts from.
+    pub fn machine_pair(rng: &mut Xoshiro256, shape: &TmShape) -> (MultiTm, MultiTm) {
+        let a = machine(rng, shape);
+        let b = a.clone();
+        (a, b)
     }
 
     pub fn usize_in(rng: &mut Xoshiro256, lo: usize, hi: usize) -> usize {

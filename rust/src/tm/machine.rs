@@ -72,7 +72,7 @@ impl Clone for MultiTm {
     /// do a full rebuild when handed the other rather than trusting
     /// revision values that stopped being comparable at the fork.
     fn clone(&self) -> Self {
-        MultiTm {
+        let fork = MultiTm {
             shape: self.shape.clone(),
             ta: self.ta.clone(),
             fault: self.fault.clone(),
@@ -85,7 +85,9 @@ impl Clone for MultiTm {
             rev: self.rev,
             clause_rev: self.clause_rev.clone(),
             global_rev: self.global_rev,
-        }
+        };
+        crate::verify::contracts::enforce(&fork, "MultiTm::clone");
+        fork
     }
 }
 
@@ -161,6 +163,15 @@ impl MultiTm {
     #[inline]
     pub(crate) fn row_rev(&self, row: usize) -> u64 {
         self.clause_rev[row].max(self.global_rev)
+    }
+
+    /// Mutation-clock counters `(rev, clause_rev, global_rev)` — read by
+    /// the invariant checker (`crate::verify::contracts`), which asserts
+    /// the per-row and global stamps never run ahead of the master
+    /// counter.
+    #[inline]
+    pub(crate) fn rev_counters(&self) -> (u64, &[u64], u64) {
+        (self.rev, &self.clause_rev, self.global_rev)
     }
 
     /// Program the fault-gate mappings (the fault controller write port).
@@ -292,6 +303,7 @@ impl MultiTm {
         // Bulk path: any clause may have changed — conservatively dirty
         // everything rather than diffing the rebuilt cache.
         self.mark_all_dirty();
+        crate::verify::contracts::enforce(self, "MultiTm::rebuild_actions");
     }
 
     #[inline]
@@ -642,6 +654,7 @@ impl MultiTm {
             self.actions[row * w + lit / 64] |= 1u64 << (lit % 64);
             self.mark_clause_dirty(row);
         }
+        crate::verify::contracts::enforce_ta(self, class, clause, lit);
     }
 
     #[inline]
@@ -652,6 +665,7 @@ impl MultiTm {
             self.actions[row * w + lit / 64] &= !(1u64 << (lit % 64));
             self.mark_clause_dirty(row);
         }
+        crate::verify::contracts::enforce_ta(self, class, clause, lit);
     }
 
     /// Word-batched TA feedback: apply disjoint increment/decrement masks
@@ -681,6 +695,7 @@ impl MultiTm {
             *a = (*a | up.now_include) & !up.now_exclude;
             self.mark_clause_dirty(row);
         }
+        crate::verify::contracts::enforce_word(self, class, clause, word);
         (up.applied_incs, up.applied_decs)
     }
 

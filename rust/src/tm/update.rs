@@ -99,7 +99,7 @@ impl MultiTm {
         base_seed: u64,
         scratch: &mut Option<StepRands>,
     ) -> Option<StepActivity> {
-        match &update.kind {
+        let activity = match &update.kind {
             UpdateKind::Learn { input, label } => {
                 let shape = self.shape().clone();
                 match scratch {
@@ -113,7 +113,9 @@ impl MultiTm {
                 self.set_clause_fault(*class, *clause, *force);
                 None
             }
-        }
+        };
+        crate::verify::contracts::enforce(self, "MultiTm::apply_update");
+        activity
     }
 }
 

@@ -1,0 +1,367 @@
+//! Machine-level invariant contracts (ROADMAP item 5).
+//!
+//! Every engine in this repo — scalar oracle, word-parallel eager, lazy,
+//! lane-speculative, plane inference, rescore cache, serve replicas —
+//! mutates or reads the same [`MultiTm`] representation. The invariants
+//! they all rely on are written down **once** here and audited by
+//! [`check_invariants`]:
+//!
+//! 1. **TA states in range** — exactly `num_tas()` states, each within
+//!    `0..=max_state()` (the repo's saturating-counter convention; see
+//!    `tm::automaton`).
+//! 2. **Action-cache coherence** — every packed action bit equals
+//!    `state >= include_threshold()` for its TA, so the word engines and
+//!    the scalar oracle can never disagree about an include.
+//! 3. **Tail bits clear** — action words and both fault gate planes carry
+//!    no bits beyond the literal width ([`word_mask`]); padding must
+//!    never leak into a clause AND.
+//! 4. **Fault-gate consistency** — the OR plane is a subset of the AND
+//!    plane (`FaultMap::set` never writes `(and=0, or=1)`), and the O(1)
+//!    faulty counter matches a recount from the gate words.
+//! 5. **Clause-force gates** — force codes are `{-1, 0, 1}` and
+//!    `clause_fault_count()` equals the number of non-clear codes.
+//! 6. **Mutation-clock monotonicity** — the master revision counter is
+//!    never behind the global stamp or any per-row stamp (the rescore
+//!    cache's incremental-rebuild correctness hangs on this ordering).
+//! 7. **Clone/restore uid freshness** — the machine uid is nonzero
+//!    (allocator starts at 1; uid 0 would alias "no machine" in caches).
+//! 8. **Scratch geometry** — the evaluation scratch holds one clause
+//!    output per clause row and one sum per class.
+//!
+//! Vote-total and fingerprint *stability* (evaluation must not move the
+//! state digest) are schedule-level properties and are asserted by the
+//! corpus replayer (`crate::verify::corpus`) around every inference step.
+//!
+//! The `contracts` cargo feature wires these checks into the mutation hot
+//! paths — `apply_word_feedback` and the scalar TA transitions (localized
+//! O(1)/O(word) checks), `apply_update`, checkpoint restore, rebuild and
+//! clone (full audits). Without the feature the hooks below compile to
+//! empty inline functions: the release path pays nothing.
+
+use crate::tm::machine::MultiTm;
+use crate::tm::params::word_mask;
+
+/// Audit every structural invariant of `tm`. Returns the first violation
+/// rendered for humans, or `Ok(())` if the machine is internally
+/// consistent. Always compiled (the corpus replayer and tests call it
+/// directly); only the *hooks* are feature-gated.
+pub fn check_invariants(tm: &MultiTm) -> Result<(), String> {
+    let s = tm.shape();
+    if let Err(e) = s.validate() {
+        return Err(format!("shape invalid: {e:#}"));
+    }
+    let rows = s.classes * s.max_clauses;
+    let words = s.words();
+
+    // 1. TA state vector geometry + range.
+    let states = tm.ta().states();
+    if states.len() != s.num_tas() {
+        return Err(format!(
+            "TA block holds {} states, shape wants {}",
+            states.len(),
+            s.num_tas()
+        ));
+    }
+    let max = s.max_state();
+    for (i, &st) in states.iter().enumerate() {
+        if st > max {
+            return Err(format!("TA {i} state {st} escapes 0..={max}"));
+        }
+    }
+
+    // 2 + 3 (action side). Per-word coherence and tail bits.
+    if tm.actions.len() != rows * words {
+        return Err(format!(
+            "action cache holds {} words, want {}",
+            tm.actions.len(),
+            rows * words
+        ));
+    }
+    for c in 0..s.classes {
+        for j in 0..s.max_clauses {
+            for w in 0..words {
+                check_word(tm, c, j, w)?;
+            }
+        }
+    }
+
+    // 3 (gate side) + 4. Fault planes within width, OR ⊆ AND, counter
+    // exact.
+    let (and_words, or_words) = tm.fault().words();
+    if and_words.len() != rows * words || or_words.len() != rows * words {
+        return Err(format!(
+            "fault planes hold {}/{} words, want {}",
+            and_words.len(),
+            or_words.len(),
+            rows * words
+        ));
+    }
+    for row in 0..rows {
+        for w in 0..words {
+            let i = row * words + w;
+            let width = word_mask(s.literals(), w);
+            let (a, o) = (and_words[i], or_words[i]);
+            if a & !width != 0 || o & !width != 0 {
+                return Err(format!(
+                    "fault gate bits escape the literal width at row {row} word {w}"
+                ));
+            }
+            if o & !a != 0 {
+                return Err(format!(
+                    "unreachable (and=0, or=1) fault encoding at row {row} word {w}"
+                ));
+            }
+        }
+    }
+    if tm.fault().count() != tm.fault().recount() {
+        return Err(format!(
+            "fault counter {} disagrees with recount {}",
+            tm.fault().count(),
+            tm.fault().recount()
+        ));
+    }
+
+    // 5. Clause-force gate codes and their counter.
+    let codes = tm.clause_force_codes();
+    if codes.len() != rows {
+        return Err(format!("clause force table holds {} codes, want {rows}", codes.len()));
+    }
+    let mut forced = 0usize;
+    for (row, &code) in codes.iter().enumerate() {
+        match code {
+            -1 | 0 | 1 => {}
+            other => return Err(format!("clause force code {other} at row {row}")),
+        }
+        if code >= 0 {
+            forced += 1;
+        }
+    }
+    if forced != tm.clause_fault_count() {
+        return Err(format!(
+            "clause fault counter {} disagrees with {forced} programmed gates",
+            tm.clause_fault_count()
+        ));
+    }
+
+    // 6. Mutation-clock ordering.
+    let (rev, clause_rev, global_rev) = tm.rev_counters();
+    if global_rev > rev {
+        return Err(format!("global revision {global_rev} runs ahead of master {rev}"));
+    }
+    if clause_rev.len() != rows {
+        return Err(format!("clause clock holds {} stamps, want {rows}", clause_rev.len()));
+    }
+    for (row, &cr) in clause_rev.iter().enumerate() {
+        if cr > rev {
+            return Err(format!("row {row} revision {cr} runs ahead of master {rev}"));
+        }
+    }
+
+    // 7. Uid freshness.
+    if tm.uid() == 0 {
+        return Err("machine uid is 0 (allocator starts at 1)".into());
+    }
+
+    // 8. Scratch geometry.
+    if tm.clause_out.len() != rows {
+        return Err(format!(
+            "clause-output scratch holds {} slots, want {rows}",
+            tm.clause_out.len()
+        ));
+    }
+    if tm.sums.len() != s.classes {
+        return Err(format!(
+            "vote scratch holds {} slots, want {}",
+            tm.sums.len(),
+            s.classes
+        ));
+    }
+    Ok(())
+}
+
+/// Localized coherence check for one packed action word: tail bits clear
+/// and every bit equal to its TA's include decision. O(64) — cheap enough
+/// to run after every `apply_word_feedback` under the `contracts`
+/// feature.
+pub fn check_word(tm: &MultiTm, class: usize, clause: usize, word: usize) -> Result<(), String> {
+    let s = tm.shape();
+    let lits = s.literals();
+    let mask = word_mask(lits, word);
+    let got = tm.action_words(class, clause)[word];
+    if got & !mask != 0 {
+        return Err(format!(
+            "action word ({class},{clause},{word}) has tail bits set: {got:#018x} outside {mask:#018x}"
+        ));
+    }
+    let mut want = 0u64;
+    for k in 0..64 {
+        let lit = word * 64 + k;
+        if lit >= lits {
+            break;
+        }
+        let st = tm.ta().state(class, clause, lit);
+        if st > s.max_state() {
+            return Err(format!(
+                "TA ({class},{clause},{lit}) state {st} escapes 0..={}",
+                s.max_state()
+            ));
+        }
+        if st >= s.include_threshold() {
+            want |= 1u64 << k;
+        }
+    }
+    if got != want {
+        return Err(format!(
+            "action word ({class},{clause},{word}) incoherent: cached {got:#018x}, states say {want:#018x}"
+        ));
+    }
+    Ok(())
+}
+
+/// Localized coherence check for one TA: state in range and its cached
+/// action bit equal to the include decision. O(1) — runs after every
+/// scalar `ta_increment`/`ta_decrement` under the `contracts` feature.
+pub fn check_ta(tm: &MultiTm, class: usize, clause: usize, lit: usize) -> Result<(), String> {
+    let s = tm.shape();
+    let st = tm.ta().state(class, clause, lit);
+    if st > s.max_state() {
+        return Err(format!(
+            "TA ({class},{clause},{lit}) state {st} escapes 0..={}",
+            s.max_state()
+        ));
+    }
+    let cached = tm.action_words(class, clause)[lit / 64] >> (lit % 64) & 1 != 0;
+    let want = st >= s.include_threshold();
+    if cached != want {
+        return Err(format!(
+            "TA ({class},{clause},{lit}) action bit cached {cached}, state {st} says {want}"
+        ));
+    }
+    Ok(())
+}
+
+/// Full-audit hook. `site` names the mutation for the panic message.
+/// Compiled to nothing without the `contracts` feature.
+#[cfg(feature = "contracts")]
+pub fn enforce(tm: &MultiTm, site: &str) {
+    if let Err(e) = check_invariants(tm) {
+        panic!("contract violation after {site}: {e}");
+    }
+}
+
+/// Full-audit hook (release stub: the `contracts` feature is off, so
+/// this inlines to nothing and the hot paths carry zero overhead).
+#[cfg(not(feature = "contracts"))]
+#[inline(always)]
+pub fn enforce(_tm: &MultiTm, _site: &str) {}
+
+/// Word-local hook for `apply_word_feedback`.
+#[cfg(feature = "contracts")]
+pub fn enforce_word(tm: &MultiTm, class: usize, clause: usize, word: usize) {
+    if let Err(e) = check_word(tm, class, clause, word) {
+        panic!("contract violation after apply_word_feedback: {e}");
+    }
+}
+
+/// Word-local hook (release stub; see [`enforce`]).
+#[cfg(not(feature = "contracts"))]
+#[inline(always)]
+pub fn enforce_word(_tm: &MultiTm, _class: usize, _clause: usize, _word: usize) {}
+
+/// TA-local hook for the scalar transitions.
+#[cfg(feature = "contracts")]
+pub fn enforce_ta(tm: &MultiTm, class: usize, clause: usize, lit: usize) {
+    if let Err(e) = check_ta(tm, class, clause, lit) {
+        panic!("contract violation after scalar TA transition: {e}");
+    }
+}
+
+/// TA-local hook (release stub; see [`enforce`]).
+#[cfg(not(feature = "contracts"))]
+#[inline(always)]
+pub fn enforce_ta(_tm: &MultiTm, _class: usize, _clause: usize, _lit: usize) {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tm::params::{TmParams, TmShape};
+    use crate::tm::rng::{StepRands, Xoshiro256};
+
+    fn shape() -> TmShape {
+        TmShape::iris()
+    }
+
+    fn trained(seed: u64) -> MultiTm {
+        let s = shape();
+        let p = TmParams::paper_offline(&s);
+        let mut rng = Xoshiro256::new(seed);
+        let mut tm = crate::testkit::gen::machine(&mut rng, &s);
+        for i in 0..40 {
+            let bits = crate::testkit::gen::bool_vec(&mut rng, s.features, 0.5);
+            let x = crate::tm::clause::Input::pack(&s, &bits);
+            let rands = StepRands::draw(&mut rng, &s);
+            crate::tm::feedback::train_step(&mut tm, &x, i % s.classes, &p, &rands);
+        }
+        tm
+    }
+
+    #[test]
+    fn fresh_and_trained_machines_are_consistent() {
+        let fresh = MultiTm::new(&shape()).unwrap();
+        check_invariants(&fresh).unwrap();
+        let tm = trained(11);
+        check_invariants(&tm).unwrap();
+        check_invariants(&tm.clone()).unwrap();
+    }
+
+    #[test]
+    fn corrupted_action_cache_is_caught() {
+        let mut tm = trained(12);
+        tm.actions[0] ^= 1;
+        let err = check_invariants(&tm).unwrap_err();
+        assert!(err.contains("incoherent"), "got: {err}");
+        assert!(check_word(&tm, 0, 0, 0).is_err());
+        assert!(check_ta(&tm, 0, 0, 0).is_err());
+    }
+
+    #[test]
+    fn action_tail_bits_are_caught() {
+        // iris rows are 32 literals wide; bit 40 is padding.
+        let mut tm = trained(13);
+        tm.actions[0] |= 1u64 << 40;
+        let err = check_invariants(&tm).unwrap_err();
+        assert!(err.contains("tail bits"), "got: {err}");
+    }
+
+    #[test]
+    fn corrupted_force_code_is_caught() {
+        let mut tm = trained(14);
+        tm.clause_force[3] = 5;
+        let err = check_invariants(&tm).unwrap_err();
+        assert!(err.contains("force code"), "got: {err}");
+    }
+
+    #[test]
+    fn force_counter_drift_is_caught() {
+        let mut tm = trained(15);
+        // Program a gate behind the counter's back.
+        tm.clause_force[0] = 1;
+        let err = check_invariants(&tm).unwrap_err();
+        assert!(err.contains("clause fault counter"), "got: {err}");
+        // Programming through the API keeps the counter exact.
+        let mut tm = trained(15);
+        tm.set_clause_fault(0, 0, Some(true));
+        check_invariants(&tm).unwrap();
+    }
+
+    #[test]
+    fn faulted_and_forced_machines_stay_consistent() {
+        use crate::tm::fault::{Fault, FaultMap};
+        let s = shape();
+        let mut tm = trained(16);
+        let map = FaultMap::even_spread(&s, 0.2, Fault::StuckAt1, 77).unwrap();
+        tm.set_fault_map(map);
+        tm.set_clause_fault(1, 2, Some(false));
+        check_invariants(&tm).unwrap();
+    }
+}

@@ -1,0 +1,853 @@
+//! Scenario corpus: one serializable schedule language replayed through
+//! **every** engine pair with bit-identity asserted after every step
+//! (ROADMAP item 5). This replaces the hand-rolled schedule loops the
+//! five differential suites each grew independently — a fixture under
+//! `rust/tests/corpus/*.ron` exercises all of them at once, and any new
+//! engine plugs in by joining a replay lane here (see EXPERIMENTS.md
+//! §Verification).
+//!
+//! ## Lanes
+//!
+//! A schedule drives five machines forked from one seeded start:
+//!
+//! | lane | engine | identity class |
+//! |------|--------|----------------|
+//! | `oracle` | scalar `train_step` | eager |
+//! | `fast` | word-parallel `train_step_fast` | eager |
+//! | `lane` | lane-speculative `train_plane_batch` | eager |
+//! | `lazy` | per-step `train_step_lazy` | lazy |
+//! | `lazy-lane` | `train_plane_batch_lazy` | lazy |
+//!
+//! The three eager lanes consume identical per-sample [`StepRands`] and
+//! must stay **bit-identical to each other**; the two lazy lanes share a
+//! same-seeded generator and must stay bit-identical to each other (plus
+//! generator-position equality, checked by draining one draw from both
+//! after every training step). Serve-update steps apply the same
+//! sequenced log to every lane through its own path (scalar keyed
+//! replay, `apply_update`, coalesced `train_plane_batch` runs), so the
+//! serving layer's replica-convergence contract rides the same fixture.
+//! Inference steps assert tri-parity (row-major, batch, bit-plane, and
+//! rescore-cache sums) and digest stability; checkpoint steps round-trip
+//! every lane through the TMFS snapshot codec and assert uid freshness.
+//!
+//! ## Fixture format
+//!
+//! The offline image carries no serde, so fixtures are a line-oriented
+//! text format under the `.ron` extension (one value per `key=value`
+//! token, `#` comments, order fixed):
+//!
+//! ```text
+//! tmfpga-corpus v1
+//! shape classes=3 clauses=16 features=16 states=100
+//! params s_bits=1068876431 t=15 active_clauses=16 active_classes=3 boost=0 style=1
+//! base_seed 99
+//! step train rows=20 seed=7
+//! step force class=0 clause=3 code=1
+//! step checkpoint
+//! end
+//! ```
+//!
+//! `s_bits` is the IEEE-754 bit pattern of `s` (`f32::to_bits`) so the
+//! round-trip is exact. Schedules are grown and minimized by
+//! [`crate::verify::shrink`].
+
+use crate::serve::{restore, snapshot_bytes};
+use crate::tm::bitplane::{BitPlanes, PlaneBatch};
+use crate::tm::clause::{EvalMode, Input};
+use crate::tm::engine::{train_step_fast, train_step_lazy, EpochStats, FeedbackPlan};
+use crate::tm::fault::{Fault, FaultMap};
+use crate::tm::feedback::train_step;
+use crate::tm::machine::MultiTm;
+use crate::tm::params::{SStyle, TmParams, TmShape};
+use crate::tm::rescore::RescoreCache;
+use crate::tm::rng::{StepRands, Xoshiro256};
+use crate::tm::train_planes::TrainScratch;
+use crate::tm::update::{update_rands, update_rands_into, ShardUpdate, UpdateKind};
+use anyhow::{bail, Context, Result};
+use std::fmt;
+
+/// One step of a replayable schedule. Payload sizes are `u32` and seeds
+/// are explicit so fixtures are self-contained and text-stable.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Step {
+    /// Train `rows` seeded samples through all five lanes.
+    Train { rows: u32, seed: u64 },
+    /// Score `rows` seeded samples; assert row/batch/plane/digest parity.
+    Infer { rows: u32, seed: u64 },
+    /// Re-score the persistent monitor batch through the rescore cache
+    /// against a cold plane evaluation.
+    Rescore { seed: u64 },
+    /// Program a seeded even-spread stuck-at fault map on every lane
+    /// (`bp` = basis points of TAs faulted; kind 0 clears, 1 = stuck-at-0,
+    /// 2 = stuck-at-1).
+    Fault { bp: u32, kind: u8, seed: u64 },
+    /// Program one clause-output force gate (code -1 clears, 0/1 force).
+    Force { class: u32, clause: u32, code: i8 },
+    /// Fork the fast lane; assert fresh uid + bit-identical state.
+    Clone,
+    /// Snapshot/restore every lane through the TMFS codec; lanes continue
+    /// on the restored machines (fresh uids).
+    Checkpoint,
+    /// Apply `updates` sequenced shard updates (Learn + ClauseFault mix)
+    /// to every lane through its own application path.
+    Serve { updates: u32, seed: u64 },
+    /// Swap the training hyper-parameters mid-schedule.
+    Params { t: i32, s_bits: u32, active_clauses: u32, active_classes: u32 },
+}
+
+impl Step {
+    fn to_line(&self) -> String {
+        match self {
+            Step::Train { rows, seed } => format!("step train rows={rows} seed={seed}"),
+            Step::Infer { rows, seed } => format!("step infer rows={rows} seed={seed}"),
+            Step::Rescore { seed } => format!("step rescore seed={seed}"),
+            Step::Fault { bp, kind, seed } => {
+                format!("step fault bp={bp} kind={kind} seed={seed}")
+            }
+            Step::Force { class, clause, code } => {
+                format!("step force class={class} clause={clause} code={code}")
+            }
+            Step::Clone => "step clone".into(),
+            Step::Checkpoint => "step checkpoint".into(),
+            Step::Serve { updates, seed } => {
+                format!("step serve updates={updates} seed={seed}")
+            }
+            Step::Params { t, s_bits, active_clauses, active_classes } => format!(
+                "step params t={t} s_bits={s_bits} active_clauses={active_clauses} active_classes={active_classes}"
+            ),
+        }
+    }
+}
+
+/// A complete replayable scenario: machine geometry, starting
+/// hyper-parameters, the seed every lane forks from, and the step list.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Schedule {
+    pub shape: TmShape,
+    pub params: TmParams,
+    pub base_seed: u64,
+    pub steps: Vec<Step>,
+}
+
+impl Schedule {
+    /// A schedule over `shape` with the paper's offline hyper-parameters
+    /// and no steps yet.
+    pub fn new(shape: &TmShape, base_seed: u64) -> Self {
+        Schedule {
+            shape: shape.clone(),
+            params: TmParams::paper_offline(shape),
+            base_seed,
+            steps: Vec::new(),
+        }
+    }
+
+    /// Serialize to the fixture text format (see the module docs).
+    pub fn to_text(&self) -> String {
+        let mut out = String::new();
+        out.push_str("tmfpga-corpus v1\n");
+        out.push_str(&format!(
+            "shape classes={} clauses={} features={} states={}\n",
+            self.shape.classes, self.shape.max_clauses, self.shape.features, self.shape.states
+        ));
+        let style = match self.params.s_style {
+            SStyle::Canonical => 0,
+            SStyle::InactionBiased => 1,
+        };
+        out.push_str(&format!(
+            "params s_bits={} t={} active_clauses={} active_classes={} boost={} style={style}\n",
+            self.params.s.to_bits(),
+            self.params.t,
+            self.params.active_clauses,
+            self.params.active_classes,
+            u8::from(self.params.boost_true_positive),
+        ));
+        out.push_str(&format!("base_seed {}\n", self.base_seed));
+        for step in &self.steps {
+            out.push_str(&step.to_line());
+            out.push('\n');
+        }
+        out.push_str("end\n");
+        out
+    }
+
+    /// Parse the fixture text format. Strict: unknown step kinds, missing
+    /// keys and trailing garbage are errors, so a corrupted fixture fails
+    /// loudly instead of silently replaying a different scenario.
+    pub fn parse(text: &str) -> Result<Schedule> {
+        let mut lines = text
+            .lines()
+            .map(str::trim)
+            .filter(|l| !l.is_empty() && !l.starts_with('#'));
+        let header = lines.next().context("empty fixture")?;
+        if header != "tmfpga-corpus v1" {
+            bail!("bad fixture header {header:?} (want \"tmfpga-corpus v1\")");
+        }
+
+        let shape_line = lines.next().context("missing shape line")?;
+        let toks: Vec<&str> = shape_line.split_whitespace().collect();
+        if toks.first() != Some(&"shape") {
+            bail!("expected shape line, got {shape_line:?}");
+        }
+        let shape = TmShape {
+            classes: get(&toks, "classes")?,
+            max_clauses: get(&toks, "clauses")?,
+            features: get(&toks, "features")?,
+            states: get(&toks, "states")?,
+        };
+
+        let params_line = lines.next().context("missing params line")?;
+        let toks: Vec<&str> = params_line.split_whitespace().collect();
+        if toks.first() != Some(&"params") {
+            bail!("expected params line, got {params_line:?}");
+        }
+        let style: u8 = get(&toks, "style")?;
+        let boost: u8 = get(&toks, "boost")?;
+        let params = TmParams {
+            s: f32::from_bits(get(&toks, "s_bits")?),
+            t: get(&toks, "t")?,
+            active_clauses: get(&toks, "active_clauses")?,
+            active_classes: get(&toks, "active_classes")?,
+            boost_true_positive: boost != 0,
+            s_style: match style {
+                0 => SStyle::Canonical,
+                1 => SStyle::InactionBiased,
+                other => bail!("unknown s style code {other}"),
+            },
+        };
+
+        let seed_line = lines.next().context("missing base_seed line")?;
+        let mut seed_toks = seed_line.split_whitespace();
+        let base_seed = match (seed_toks.next(), seed_toks.next(), seed_toks.next()) {
+            (Some("base_seed"), Some(v), None) => {
+                v.parse::<u64>().map_err(|e| anyhow::Error::msg(format!("bad base_seed {v:?} ({e})")))?
+            }
+            _ => bail!("expected base_seed line, got {seed_line:?}"),
+        };
+
+        let mut steps = Vec::new();
+        let mut ended = false;
+        for line in lines {
+            if ended {
+                bail!("trailing content after end: {line:?}");
+            }
+            if line == "end" {
+                ended = true;
+                continue;
+            }
+            let toks: Vec<&str> = line.split_whitespace().collect();
+            if toks.first() != Some(&"step") || toks.len() < 2 {
+                bail!("expected step line, got {line:?}");
+            }
+            let step = match toks[1] {
+                "train" => Step::Train { rows: get(&toks, "rows")?, seed: get(&toks, "seed")? },
+                "infer" => Step::Infer { rows: get(&toks, "rows")?, seed: get(&toks, "seed")? },
+                "rescore" => Step::Rescore { seed: get(&toks, "seed")? },
+                "fault" => Step::Fault {
+                    bp: get(&toks, "bp")?,
+                    kind: get(&toks, "kind")?,
+                    seed: get(&toks, "seed")?,
+                },
+                "force" => Step::Force {
+                    class: get(&toks, "class")?,
+                    clause: get(&toks, "clause")?,
+                    code: get(&toks, "code")?,
+                },
+                "clone" => Step::Clone,
+                "checkpoint" => Step::Checkpoint,
+                "serve" => {
+                    Step::Serve { updates: get(&toks, "updates")?, seed: get(&toks, "seed")? }
+                }
+                "params" => Step::Params {
+                    t: get(&toks, "t")?,
+                    s_bits: get(&toks, "s_bits")?,
+                    active_clauses: get(&toks, "active_clauses")?,
+                    active_classes: get(&toks, "active_classes")?,
+                },
+                other => bail!("unknown step kind {other:?}"),
+            };
+            steps.push(step);
+        }
+        if !ended {
+            bail!("fixture missing end line");
+        }
+        Ok(Schedule { shape, params, base_seed, steps })
+    }
+}
+
+/// Find `key=value` among `toks` and parse the value.
+fn get<T: std::str::FromStr>(toks: &[&str], key: &str) -> Result<T>
+where
+    T::Err: fmt::Display,
+{
+    for tok in toks {
+        if let Some(v) = tok.strip_prefix(key).and_then(|r| r.strip_prefix('=')) {
+            return v
+                .parse::<T>()
+                .map_err(|e| anyhow::Error::msg(format!("bad value for {key}: {v:?} ({e})")));
+        }
+    }
+    bail!("missing key {key} in {toks:?}")
+}
+
+/// Replay knobs. The injection flag exists solely so the shrinker's own
+/// test suite can plant a known divergence and prove the minimizer finds
+/// it — never set it outside tests.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ReplayOptions {
+    /// After each eager training step, if any clause-output force gate is
+    /// programmed, nudge one TA of the `fast` lane by one state — a
+    /// deliberate off-by-one divergence.
+    pub inject_train_offby1: bool,
+}
+
+/// First bit-identity or contract failure of a replay: the step index it
+/// surfaced after (== `steps.len()` for end-of-schedule checks) and what
+/// disagreed.
+#[derive(Debug, Clone)]
+pub struct Divergence {
+    pub step: usize,
+    pub what: String,
+}
+
+impl fmt::Display for Divergence {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "step {}: {}", self.step, self.what)
+    }
+}
+
+/// Replay accounting for reporting (`tmfpga verify`).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Report {
+    /// Steps executed.
+    pub steps: usize,
+    /// Cross-lane identity comparisons + contract audits that passed.
+    pub checks: u64,
+}
+
+/// Replay `s` through every lane with default options.
+pub fn replay(s: &Schedule) -> Result<Report, Divergence> {
+    replay_opts(s, &ReplayOptions::default())
+}
+
+/// Replay `s` through every lane. Returns the first [`Divergence`], or a
+/// [`Report`] when the whole schedule holds.
+pub fn replay_opts(s: &Schedule, opts: &ReplayOptions) -> Result<Report, Divergence> {
+    let shape = &s.shape;
+    if let Err(e) = shape.validate() {
+        return Err(Divergence { step: 0, what: format!("invalid shape: {e}") });
+    }
+    let mut params = s.params.clone();
+    if let Err(e) = params.validate(shape) {
+        return Err(Divergence { step: 0, what: format!("invalid params: {e}") });
+    }
+
+    // All five lanes fork from one seeded machine.
+    let mut init_rng = Xoshiro256::new(s.base_seed);
+    let oracle_init = crate::testkit::gen::machine(&mut init_rng, shape);
+    let mut a = oracle_init.clone(); // scalar oracle
+    let mut b = oracle_init.clone(); // word-parallel eager
+    let mut c = oracle_init.clone(); // lane-speculative eager
+    let mut d = oracle_init.clone(); // lazy per-step
+    let mut e = oracle_init; // lazy lane-speculative
+
+    // The lazy pair shares a generator seed; position equality is checked
+    // by draining one draw from both after every training step.
+    let mut rng_d = Xoshiro256::new(mix(s.base_seed, 0x1A2B));
+    let mut rng_e = Xoshiro256::new(mix(s.base_seed, 0x1A2B));
+    let mut scratch_c = TrainScratch::new();
+    let mut scratch_e = TrainScratch::new();
+
+    // Rescore-cache lane state: a persistent monitor batch (stable
+    // fingerprint across Rescore steps) so incremental revalidation — and
+    // its forced cold rebuild after checkpoint restore — is actually
+    // exercised.
+    let mut cache = RescoreCache::new();
+    let monitor_rows = rows_from_seed(shape, 24, mix(s.base_seed, 0x4E5C));
+    let monitor = PlaneBatch::from_labelled(shape, &monitor_rows);
+    let mut expect_cold = true; // nothing cached yet
+
+    let mut serve_scratch: Option<StepRands> = None;
+    let mut next_seq: u64 = 1;
+    let mut checks: u64 = 0;
+
+    for (i, step) in s.steps.iter().enumerate() {
+        match step {
+            Step::Train { rows, seed } => {
+                let data = rows_from_seed(shape, *rows as usize, mix(s.base_seed, *seed));
+                let mut rec_rng = Xoshiro256::new(mix(s.base_seed, seed ^ 0x7EA1));
+                let recs: Vec<StepRands> =
+                    data.iter().map(|_| StepRands::draw(&mut rec_rng, shape)).collect();
+
+                let mut act_a = EpochStats::default();
+                let mut act_b = EpochStats::default();
+                for ((x, y), r) in data.iter().zip(&recs) {
+                    act_a.absorb(train_step(&mut a, x, *y, &params, r));
+                    act_b.absorb(train_step_fast(&mut b, x, *y, &params, r));
+                }
+                let planes = BitPlanes::from_labelled(shape, &data);
+                let act_c = c.train_plane_batch(
+                    &data,
+                    &planes,
+                    &params,
+                    |j, r| r.clone_from(&recs[j]),
+                    &mut scratch_c,
+                );
+                if act_a != act_b || act_a != act_c {
+                    return Err(Divergence {
+                        step: i,
+                        what: format!(
+                            "eager activity diverged: oracle {act_a:?} fast {act_b:?} lane {act_c:?}"
+                        ),
+                    });
+                }
+
+                let plan = FeedbackPlan::new(&params);
+                let mut act_d = EpochStats::default();
+                for (x, y) in &data {
+                    act_d.absorb(train_step_lazy(&mut d, x, *y, &params, &plan, &mut rng_d));
+                }
+                let act_e =
+                    e.train_plane_batch_lazy(&data, &planes, &params, &plan, &mut rng_e, &mut scratch_e);
+                if act_d != act_e {
+                    return Err(Divergence {
+                        step: i,
+                        what: format!("lazy activity diverged: step {act_d:?} lane {act_e:?}"),
+                    });
+                }
+                if rng_d.next_u64() != rng_e.next_u64() {
+                    return Err(Divergence {
+                        step: i,
+                        what: "lazy generator positions diverged".into(),
+                    });
+                }
+                checks += 3;
+
+                if opts.inject_train_offby1 && b.clause_fault_count() > 0 {
+                    inject_offby1(&mut b);
+                }
+            }
+            Step::Infer { rows, seed } => {
+                let data = rows_from_seed(shape, *rows as usize, mix(s.base_seed, *seed));
+                if !data.is_empty() {
+                    let inputs: Vec<Input> = data.iter().map(|(x, _)| x.clone()).collect();
+                    let digest = b.state_digest();
+                    let batch = b.evaluate_batch(&inputs, &params, EvalMode::Infer);
+                    let planes = BitPlanes::from_inputs(shape, &inputs);
+                    let sliced = b.evaluate_planes(&planes, &params, EvalMode::Infer);
+                    if batch != sliced {
+                        return Err(Divergence {
+                            step: i,
+                            what: "row-major vs bit-plane sums diverged".into(),
+                        });
+                    }
+                    for (row, x) in inputs.iter().enumerate() {
+                        let sums = a.evaluate(x, &params, EvalMode::Infer).to_vec();
+                        for cls in 0..params.active_classes {
+                            if batch[cls * inputs.len() + row] != sums[cls] {
+                                return Err(Divergence {
+                                    step: i,
+                                    what: format!(
+                                        "scalar vs batch sum diverged at row {row} class {cls}"
+                                    ),
+                                });
+                            }
+                        }
+                    }
+                    if b.predict_batch(&inputs, &params) != b.predict_planes(&planes, &params) {
+                        return Err(Divergence {
+                            step: i,
+                            what: "batch vs plane predictions diverged".into(),
+                        });
+                    }
+                    if b.state_digest() != digest {
+                        return Err(Divergence {
+                            step: i,
+                            what: "inference moved the state digest".into(),
+                        });
+                    }
+                    checks += 4;
+                }
+            }
+            Step::Rescore { seed } => {
+                let cold_before = cache.stats().cold_builds;
+                let inc = cache.evaluate(&b, monitor.planes(), &params, EvalMode::Infer);
+                let cold = b.evaluate_planes(monitor.planes(), &params, EvalMode::Infer);
+                if inc != cold {
+                    return Err(Divergence {
+                        step: i,
+                        what: "rescore cache sums diverged from cold evaluation".into(),
+                    });
+                }
+                if expect_cold && cache.stats().cold_builds == cold_before {
+                    return Err(Divergence {
+                        step: i,
+                        what: "stale rescore entry validated against a fresh machine uid".into(),
+                    });
+                }
+                expect_cold = false;
+                // A seeded throwaway batch churns the cache's entry ring.
+                let extra = rows_from_seed(shape, 8, mix(s.base_seed, *seed));
+                if !extra.is_empty() {
+                    let batch = PlaneBatch::from_labelled(shape, &extra);
+                    let inc = cache.evaluate(&b, batch.planes(), &params, EvalMode::Infer);
+                    let cold = b.evaluate_planes(batch.planes(), &params, EvalMode::Infer);
+                    if inc != cold {
+                        return Err(Divergence {
+                            step: i,
+                            what: "rescore cache sums diverged on throwaway batch".into(),
+                        });
+                    }
+                }
+                checks += 2;
+            }
+            Step::Fault { bp, kind, seed } => {
+                let map = match kind {
+                    0 => FaultMap::none(shape),
+                    k => {
+                        let fault = if *k == 1 { Fault::StuckAt0 } else { Fault::StuckAt1 };
+                        let fraction = f64::from((*bp).min(10_000)) / 10_000.0;
+                        match FaultMap::even_spread(shape, fraction, fault, mix(s.base_seed, *seed))
+                        {
+                            Ok(m) => m,
+                            Err(e2) => {
+                                return Err(Divergence {
+                                    step: i,
+                                    what: format!("even_spread failed: {e2}"),
+                                })
+                            }
+                        }
+                    }
+                };
+                for m in [&mut a, &mut b, &mut c, &mut d, &mut e] {
+                    m.set_fault_map(map.clone());
+                }
+            }
+            Step::Force { class, clause, code } => {
+                let cls = *class as usize % shape.classes;
+                let j = *clause as usize % shape.max_clauses;
+                let force = match code {
+                    0 => Some(false),
+                    1 => Some(true),
+                    _ => None,
+                };
+                for m in [&mut a, &mut b, &mut c, &mut d, &mut e] {
+                    m.set_clause_fault(cls, j, force);
+                }
+            }
+            Step::Clone => {
+                let fork = b.clone();
+                if fork.uid() == b.uid() {
+                    return Err(Divergence { step: i, what: "clone kept the original uid".into() });
+                }
+                if let Err(what) = diff(&fork, &b, "clone/original") {
+                    return Err(Divergence { step: i, what });
+                }
+                checks += 1;
+            }
+            Step::Checkpoint => {
+                let lanes = [
+                    (&mut a, "oracle"),
+                    (&mut b, "fast"),
+                    (&mut c, "lane"),
+                    (&mut d, "lazy"),
+                    (&mut e, "lazy-lane"),
+                ];
+                for (m, name) in lanes {
+                    let bytes = snapshot_bytes(m, &params, next_seq);
+                    let snap = match restore(&bytes) {
+                        Ok(snap) => snap,
+                        Err(e2) => {
+                            return Err(Divergence {
+                                step: i,
+                                what: format!("{name}: snapshot restore failed: {e2:#}"),
+                            })
+                        }
+                    };
+                    if snap.seq != next_seq {
+                        return Err(Divergence {
+                            step: i,
+                            what: format!("{name}: snapshot seq {} != {next_seq}", snap.seq),
+                        });
+                    }
+                    if snap.machine.state_digest() != m.state_digest() {
+                        return Err(Divergence {
+                            step: i,
+                            what: format!("{name}: restore moved the state digest"),
+                        });
+                    }
+                    if snap.machine.uid() == m.uid() {
+                        return Err(Divergence {
+                            step: i,
+                            what: format!("{name}: restored machine kept the snapshot uid"),
+                        });
+                    }
+                    *m = snap.machine;
+                    checks += 1;
+                }
+                // Every lane now carries a fresh uid: the rescore cache
+                // must cold-rebuild at the next Rescore step even though
+                // the monitor fingerprint is unchanged (the
+                // load_snapshot/uid contract, see ISSUE 7 satellite 3).
+                expect_cold = true;
+            }
+            Step::Serve { updates, seed } => {
+                let log = gen_updates(shape, *updates as usize, mix(s.base_seed, *seed), &mut next_seq);
+                // Scalar oracle: keyed replay of the log.
+                for u in &log {
+                    match &u.kind {
+                        UpdateKind::Learn { input, label } => {
+                            let r = update_rands(shape, s.base_seed, u.seq);
+                            train_step(&mut a, input, *label, &params, &r);
+                        }
+                        UpdateKind::ClauseFault { class, clause, force } => {
+                            a.set_clause_fault(*class, *clause, *force);
+                        }
+                    }
+                }
+                // Replica paths: allocating, scratch-carrying, and plain.
+                for u in &log {
+                    b.apply_update_with(u, &params, s.base_seed, &mut serve_scratch);
+                    d.apply_update(u, &params, s.base_seed);
+                    e.apply_update(u, &params, s.base_seed);
+                }
+                // Lane path: coalesced Learn runs through the keyed
+                // bit-plane trainer, fault edits applied at run breaks —
+                // exactly the shard workers' batching discipline.
+                let mut run: Vec<(Input, usize, u64)> = Vec::new();
+                for u in &log {
+                    match &u.kind {
+                        UpdateKind::Learn { input, label } => {
+                            run.push((input.clone(), *label, u.seq));
+                        }
+                        UpdateKind::ClauseFault { class, clause, force } => {
+                            flush_learn_run(&mut c, &run, &params, s.base_seed, &mut scratch_c);
+                            run.clear();
+                            c.set_clause_fault(*class, *clause, *force);
+                        }
+                    }
+                }
+                flush_learn_run(&mut c, &run, &params, s.base_seed, &mut scratch_c);
+            }
+            Step::Params { t, s_bits, active_clauses, active_classes } => {
+                let mut np = params.clone();
+                np.t = *t;
+                np.s = f32::from_bits(*s_bits);
+                np.active_clauses = (*active_clauses as usize).clamp(1, shape.max_clauses);
+                np.active_classes = (*active_classes as usize).clamp(1, shape.classes);
+                if let Err(e2) = np.validate(shape) {
+                    return Err(Divergence { step: i, what: format!("params step invalid: {e2}") });
+                }
+                params = np;
+            }
+        }
+        checks += cross_check(i, &a, &b, &c, &d, &e)?;
+    }
+    Ok(Report { steps: s.steps.len(), checks })
+}
+
+/// Golden-ratio seed mixing so per-step seeds never collide with the
+/// base seed's other derivations.
+#[inline]
+fn mix(base: u64, salt: u64) -> u64 {
+    base ^ salt.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+/// Seeded labelled rows for one step.
+fn rows_from_seed(shape: &TmShape, n: usize, seed: u64) -> Vec<(Input, usize)> {
+    let mut rng = Xoshiro256::new(seed);
+    crate::testkit::gen::rows(&mut rng, shape, n)
+}
+
+/// The planted off-by-one: bump the first non-saturated TA of clause
+/// (0,0) on one lane, guaranteeing a state delta the cross-check sees.
+fn inject_offby1(tm: &mut MultiTm) {
+    let shape = tm.shape().clone();
+    for lit in 0..shape.literals() {
+        if tm.ta().state(0, 0, lit) < shape.max_state() {
+            tm.ta_increment(0, 0, lit);
+            return;
+        }
+    }
+}
+
+/// One coalesced Learn run through the keyed lane trainer.
+fn flush_learn_run(
+    tm: &mut MultiTm,
+    run: &[(Input, usize, u64)],
+    params: &TmParams,
+    base_seed: u64,
+    scratch: &mut TrainScratch,
+) {
+    if run.is_empty() {
+        return;
+    }
+    let shape = tm.shape().clone();
+    let rows: Vec<(Input, usize)> = run.iter().map(|(x, y, _)| (x.clone(), *y)).collect();
+    let planes = BitPlanes::from_labelled(&shape, &rows);
+    tm.train_plane_batch(
+        &rows,
+        &planes,
+        params,
+        |i, r| update_rands_into(r, &shape, base_seed, run[i].2),
+        scratch,
+    );
+}
+
+/// Seeded shard-update log (≈85% Learn, 15% clause-fault edits),
+/// consuming sequence numbers from the replayer's log head.
+fn gen_updates(shape: &TmShape, n: usize, seed: u64, next_seq: &mut u64) -> Vec<ShardUpdate> {
+    let mut rng = Xoshiro256::new(seed);
+    (0..n)
+        .map(|_| {
+            let seq = *next_seq;
+            *next_seq += 1;
+            let kind = if rng.next_f32() < 0.85 {
+                let bits = crate::testkit::gen::bool_vec(&mut rng, shape.features, 0.5);
+                UpdateKind::Learn {
+                    input: Input::pack(shape, &bits),
+                    label: rng.next_below(shape.classes),
+                }
+            } else {
+                UpdateKind::ClauseFault {
+                    class: rng.next_below(shape.classes),
+                    clause: rng.next_below(shape.max_clauses),
+                    force: [None, Some(false), Some(true)][rng.next_below(3)],
+                }
+            };
+            ShardUpdate { seq, kind }
+        })
+        .collect()
+}
+
+/// Full bit-identity comparison of two machines (states, action caches,
+/// force gates, fault planes, digest).
+fn diff(x: &MultiTm, y: &MultiTm, pair: &str) -> Result<(), String> {
+    if x.ta().states() != y.ta().states() {
+        return Err(format!("{pair}: TA states diverged"));
+    }
+    let s = x.shape();
+    for c in 0..s.classes {
+        for j in 0..s.max_clauses {
+            if x.action_words(c, j) != y.action_words(c, j) {
+                return Err(format!("{pair}: action cache diverged at ({c},{j})"));
+            }
+        }
+    }
+    if x.clause_force_codes() != y.clause_force_codes() {
+        return Err(format!("{pair}: clause force gates diverged"));
+    }
+    if x.clause_fault_count() != y.clause_fault_count() {
+        return Err(format!("{pair}: clause fault counters diverged"));
+    }
+    if x.fault().words() != y.fault().words() {
+        return Err(format!("{pair}: fault gate planes diverged"));
+    }
+    if x.state_digest() != y.state_digest() {
+        return Err(format!("{pair}: state digests diverged"));
+    }
+    Ok(())
+}
+
+/// Post-step identity + contract sweep: the three eager lanes against the
+/// oracle, the lazy pair against each other, and (under the `contracts`
+/// feature) a full invariant audit of every lane.
+fn cross_check(
+    step: usize,
+    a: &MultiTm,
+    b: &MultiTm,
+    c: &MultiTm,
+    d: &MultiTm,
+    e: &MultiTm,
+) -> Result<u64, Divergence> {
+    let mut checks = 0u64;
+    for (x, y, pair) in [(a, b, "oracle/fast"), (a, c, "oracle/lane"), (d, e, "lazy/lazy-lane")] {
+        diff(x, y, pair).map_err(|what| Divergence { step, what })?;
+        checks += 1;
+    }
+    #[cfg(feature = "contracts")]
+    for (m, name) in [(a, "oracle"), (b, "fast"), (c, "lane"), (d, "lazy"), (e, "lazy-lane")] {
+        super::contracts::check_invariants(m).map_err(|e2| Divergence {
+            step,
+            what: format!("contract violation on {name} lane: {e2}"),
+        })?;
+        checks += 1;
+    }
+    Ok(checks)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo() -> Schedule {
+        let shape = TmShape::iris();
+        let mut s = Schedule::new(&shape, 0xBEEF);
+        s.steps = vec![
+            Step::Train { rows: 12, seed: 1 },
+            Step::Infer { rows: 8, seed: 2 },
+            Step::Force { class: 0, clause: 3, code: 1 },
+            Step::Rescore { seed: 3 },
+            Step::Fault { bp: 800, kind: 1, seed: 4 },
+            Step::Train { rows: 6, seed: 5 },
+            Step::Clone,
+            Step::Serve { updates: 9, seed: 6 },
+            Step::Checkpoint,
+            Step::Rescore { seed: 7 },
+            Step::Params { t: 5, s_bits: 1.0f32.to_bits(), active_clauses: 8, active_classes: 2 },
+            Step::Train { rows: 5, seed: 8 },
+        ];
+        s
+    }
+
+    #[test]
+    fn text_round_trips_exactly() {
+        let s = demo();
+        let text = s.to_text();
+        let back = Schedule::parse(&text).unwrap();
+        assert_eq!(back, s);
+        assert_eq!(back.to_text(), text);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(Schedule::parse("").is_err());
+        assert!(Schedule::parse("tmfpga-corpus v2\n").is_err());
+        let mut text = demo().to_text();
+        text.push_str("step train rows=1 seed=1\n");
+        assert!(Schedule::parse(&text).is_err(), "content after end must be rejected");
+        let text = demo().to_text().replace("step train", "step banana");
+        assert!(Schedule::parse(&text).is_err());
+        let text = demo().to_text().replace("rows=12", "rows=x");
+        assert!(Schedule::parse(&text).is_err());
+    }
+
+    #[test]
+    fn demo_schedule_replays_clean() {
+        let rep = replay(&demo()).unwrap();
+        assert_eq!(rep.steps, demo().steps.len());
+        assert!(rep.checks > 0);
+    }
+
+    #[test]
+    fn injection_without_force_gate_is_inert() {
+        let shape = TmShape::iris();
+        let mut s = Schedule::new(&shape, 7);
+        s.steps = vec![Step::Train { rows: 10, seed: 1 }, Step::Train { rows: 10, seed: 2 }];
+        let opts = ReplayOptions { inject_train_offby1: true };
+        assert!(replay_opts(&s, &opts).is_ok(), "no force gate -> no injection");
+    }
+
+    #[test]
+    fn injection_with_force_gate_diverges() {
+        let shape = TmShape::iris();
+        let mut s = Schedule::new(&shape, 7);
+        s.steps = vec![
+            Step::Force { class: 1, clause: 2, code: 0 },
+            Step::Train { rows: 4, seed: 1 },
+        ];
+        assert!(replay(&s).is_ok(), "clean replay must pass");
+        let opts = ReplayOptions { inject_train_offby1: true };
+        let d = replay_opts(&s, &opts).unwrap_err();
+        assert_eq!(d.step, 1, "divergence surfaces at the train step");
+    }
+}

@@ -1,0 +1,20 @@
+//! Unified verification harness (ROADMAP item 5): machine-level
+//! invariant **contracts**, a replayable scenario **corpus** asserting
+//! bit-identity across every engine pair, and seeded corpus **growth**
+//! with delta-debugging shrink of any divergence to a minimal committed
+//! fixture.
+//!
+//! - [`contracts`] — `check_invariants(&MultiTm)` plus feature-gated
+//!   hooks (`--features contracts`) wired into the mutation hot paths;
+//!   zero release-path cost when the feature is off.
+//! - [`corpus`] — the schedule language (`rust/tests/corpus/*.ron`), the
+//!   five-lane replayer, and the divergence report.
+//! - [`shrink`] — seeded schedule generation, ddmin minimization, and
+//!   fixture writing; driven by `tmfpga verify --grow` in CI.
+//!
+//! EXPERIMENTS.md §Verification documents the contract list, the fixture
+//! format, and how a new engine joins the replay matrix.
+
+pub mod contracts;
+pub mod corpus;
+pub mod shrink;

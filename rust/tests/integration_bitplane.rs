@@ -9,25 +9,19 @@
 //! to engage the class × sample-chunk thread fan-out.
 
 use tm_fpga::data::{blocks::BlockPlan, iris, SetAllocation};
+use tm_fpga::testkit::gen;
 use tm_fpga::tm::*;
 
 fn random_inputs(shape: &TmShape, n: usize, rng: &mut Xoshiro256) -> Vec<Input> {
-    (0..n)
-        .map(|_| {
-            let bits: Vec<bool> =
-                (0..shape.features).map(|_| rng.next_f32() < 0.5).collect();
-            Input::pack(shape, &bits)
-        })
-        .collect()
+    gen::inputs(rng, shape, n)
 }
 
-/// Machine with uniformly random TA states (random include patterns).
+/// Machine with uniformly random TA states (random include patterns),
+/// plus the continued RNG stream for dataset draws.
 fn random_machine(shape: &TmShape, seed: u64) -> (MultiTm, Xoshiro256) {
     let mut rng = Xoshiro256::new(seed);
-    let states: Vec<u32> = (0..shape.num_tas())
-        .map(|_| rng.next_below(2 * shape.states as usize) as u32)
-        .collect();
-    (MultiTm::from_states(shape, states).unwrap(), rng)
+    let tm = gen::machine(&mut rng, shape);
+    (tm, rng)
 }
 
 /// Assert plane and row-major evaluation agree bit-for-bit in both modes,

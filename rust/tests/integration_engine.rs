@@ -10,6 +10,7 @@
 //! statistical equivalence on the paper's iris workload instead.
 
 use tm_fpga::data::{blocks::BlockPlan, iris, SetAllocation};
+use tm_fpga::testkit::gen;
 use tm_fpga::tm::params::SStyle;
 use tm_fpga::tm::*;
 
@@ -26,9 +27,7 @@ fn assert_bit_identical(shape: &TmShape, params: &TmParams, fault_rate: f64, see
     }
     let mut rng = Xoshiro256::new(seed);
     for step in 0..steps {
-        let bits: Vec<bool> =
-            (0..shape.features).map(|_| rng.next_f32() < 0.5).collect();
-        let x = Input::pack(shape, &bits);
+        let x = gen::input(&mut rng, shape);
         let target = step % shape.classes;
         let r = StepRands::draw(&mut rng, shape);
         let a = train_step(&mut oracle, &x, target, params, &r);
@@ -193,8 +192,7 @@ fn mixed_workload_keeps_action_cache_coherent() {
     let mut tm = MultiTm::new(&shape).unwrap();
     let mut rng = Xoshiro256::new(0xC0DE);
     for step in 0..500 {
-        let bits: Vec<bool> = (0..16).map(|_| rng.next_f32() < 0.5).collect();
-        let x = Input::pack(&shape, &bits);
+        let x = gen::input(&mut rng, &shape);
         match step % 3 {
             0 => {
                 let r = StepRands::draw(&mut rng, &shape);

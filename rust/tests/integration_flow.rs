@@ -9,7 +9,7 @@ use tm_fpga::fpga::mcu::McuAction;
 #[test]
 fn figure_staging_matches_paper_protocol() {
     // Fig 4: plain config.
-    let (cfg, sched) = configure(Figure::Fig4, 1);
+    let (cfg, sched) = configure(Figure::Fig4, 1).unwrap();
     assert!(cfg.online_learning && cfg.initial_filter.is_none());
     assert!(sched.is_empty());
     assert_eq!(cfg.offline_epochs, 10);
@@ -20,20 +20,20 @@ fn figure_staging_matches_paper_protocol() {
     assert_eq!(cfg.t, 15);
 
     // Fig 5: filter on, never lifted.
-    let (cfg, sched) = configure(Figure::Fig5, 1);
+    let (cfg, sched) = configure(Figure::Fig5, 1).unwrap();
     assert_eq!(cfg.initial_filter, Some(0));
     assert!(sched.is_empty());
 
     // Fig 6: filter lifted before pass 6, learning off.
-    let (cfg, sched) = configure(Figure::Fig6, 1);
+    let (cfg, sched) = configure(Figure::Fig6, 1).unwrap();
     assert!(!cfg.online_learning);
     assert_eq!(sched.len(), 1);
     assert_eq!(sched[0].0, 6);
     assert!(matches!(sched[0].1, McuAction::SetFilter { enabled: false, class: 0 }));
 
     // Fig 8/9: 20% stuck-at-0, same map for the same seed.
-    let (_, s8) = configure(Figure::Fig8, 9);
-    let (_, s9) = configure(Figure::Fig9, 9);
+    let (_, s8) = configure(Figure::Fig8, 9).unwrap();
+    let (_, s9) = configure(Figure::Fig9, 9).unwrap();
     match (&s8[0].1, &s9[0].1) {
         (McuAction::InjectFaults(a), McuAction::InjectFaults(b)) => {
             assert_eq!(a, b, "frozen/online comparisons share the fault map");

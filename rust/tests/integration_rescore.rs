@@ -11,6 +11,8 @@
 //! state reloads, and batches whose content changes under the cache
 //! (fingerprint invalidation).
 
+use tm_fpga::serve::{restore, snapshot_bytes};
+use tm_fpga::testkit::gen;
 use tm_fpga::tm::*;
 
 fn random_rows(
@@ -18,22 +20,15 @@ fn random_rows(
     n: usize,
     rng: &mut Xoshiro256,
 ) -> Vec<(Input, usize)> {
-    (0..n)
-        .map(|_| {
-            let bits: Vec<bool> =
-                (0..shape.features).map(|_| rng.next_f32() < 0.5).collect();
-            (Input::pack(shape, &bits), rng.next_below(shape.classes))
-        })
-        .collect()
+    gen::rows(rng, shape, n)
 }
 
-/// Machine with uniformly random TA states (random include patterns).
+/// Machine with uniformly random TA states (random include patterns),
+/// plus the continued RNG stream for dataset draws.
 fn random_machine(shape: &TmShape, seed: u64) -> (MultiTm, Xoshiro256) {
     let mut rng = Xoshiro256::new(seed);
-    let states: Vec<u32> = (0..shape.num_tas())
-        .map(|_| rng.next_below(2 * shape.states as usize) as u32)
-        .collect();
-    (MultiTm::from_states(shape, states).unwrap(), rng)
+    let tm = gen::machine(&mut rng, shape);
+    (tm, rng)
 }
 
 /// One re-score point: the incremental result must equal the cold pass
@@ -246,4 +241,84 @@ fn online_convergence_drives_dirty_fraction_down() {
         "converged online run should be mostly clean, got {:.3} ({stats:?})",
         stats.dirty_fraction()
     );
+}
+
+/// The mutation-clock / checkpoint contract (ISSUE 7 satellite 3): a
+/// machine restored from snapshot bytes carries a **fresh** uid, so a
+/// RescoreCache entry built against the pre-snapshot machine can never
+/// validate against the restored one — the first re-score after restore
+/// must cold-rebuild even though neither the TA states nor the batch
+/// fingerprint moved.
+#[test]
+fn restored_snapshot_gets_fresh_uid_and_forces_cold_rescore() {
+    let shape = TmShape::iris();
+    let (tm, mut rng) = random_machine(&shape, 0x6666);
+    let params = TmParams::paper_offline(&shape);
+    let rows = random_rows(&shape, 40, &mut rng);
+    let batch = PlaneBatch::from_labelled(&shape, &rows);
+    let mut cache = RescoreCache::new();
+    assert_rescore_matches(&mut cache, &tm, &batch, &params, "before snapshot");
+
+    let snap = restore(&snapshot_bytes(&tm, &params, 7)).unwrap();
+    assert_eq!(snap.seq, 7);
+    assert_eq!(
+        snap.machine.state_digest(),
+        tm.state_digest(),
+        "restore must reproduce the TA state bit-for-bit"
+    );
+    assert_ne!(
+        snap.machine.uid(),
+        tm.uid(),
+        "restore must mint a fresh mutation clock, not resurrect the snapshot's"
+    );
+
+    // Same batch fingerprint, same states — but the uid moved, so the
+    // cache must treat the restored machine as unknown.
+    let cold_before = cache.stats().cold_builds;
+    assert_rescore_matches(&mut cache, &snap.machine, &batch, &params, "restored");
+    assert!(
+        cache.stats().cold_builds > cold_before,
+        "stale entry validated against a restored machine uid"
+    );
+
+    // Restores never alias each other either: snapshotting the restored
+    // machine and restoring again mints yet another uid.
+    let again = restore(&snapshot_bytes(&snap.machine, &params, 8)).unwrap();
+    assert_ne!(again.machine.uid(), snap.machine.uid());
+    assert_ne!(again.machine.uid(), tm.uid());
+    assert_eq!(again.machine.state_digest(), tm.state_digest());
+}
+
+/// Training the restored machine moves only *its* clock: the cache must
+/// rebuild whenever it alternates between the original and the diverged
+/// restore (their uids never alias), and both machines re-score exactly
+/// at every point.
+#[test]
+fn restored_machine_clock_is_independent_of_the_original() {
+    let shape = TmShape::iris();
+    let (tm, mut rng) = random_machine(&shape, 0x7777);
+    let params = TmParams::paper_offline(&shape);
+    let rows = random_rows(&shape, 50, &mut rng);
+    let batch = PlaneBatch::from_labelled(&shape, &rows);
+    let mut snap = restore(&snapshot_bytes(&tm, &params, 1)).unwrap();
+
+    let mut cache = RescoreCache::new();
+    assert_rescore_matches(&mut cache, &tm, &batch, &params, "original");
+    let builds_after_original = cache.stats().cold_builds;
+
+    // Diverge the restored machine: its evaluations must never be served
+    // from the original's entry (or vice versa).
+    let mut rands = StepRands::draw(&mut rng, &shape);
+    for step in 0..20 {
+        let (x, y) = &rows[step % rows.len()];
+        rands.refill(&mut rng, &shape);
+        train_step_fast(&mut snap.machine, x, *y, &params, &rands);
+    }
+    assert_rescore_matches(&mut cache, &snap.machine, &batch, &params, "diverged restore");
+    assert!(
+        cache.stats().cold_builds > builds_after_original,
+        "diverged restore must not be served from the original's entry"
+    );
+    assert_rescore_matches(&mut cache, &tm, &batch, &params, "original after divergence");
+    assert_rescore_matches(&mut cache, &snap.machine, &batch, &params, "restore again");
 }

@@ -14,18 +14,14 @@
 //! `Learn` log trains to the same replica as applying it one update at
 //! a time).
 
+use tm_fpga::testkit::gen;
 use tm_fpga::tm::params::SStyle;
 use tm_fpga::tm::train_planes::train_rows_seq;
 use tm_fpga::tm::update::{update_rands_into, ShardUpdate, UpdateKind};
 use tm_fpga::tm::*;
 
 fn random_rows(s: &TmShape, n: usize, rng: &mut Xoshiro256) -> Vec<(Input, usize)> {
-    (0..n)
-        .map(|i| {
-            let bits: Vec<bool> = (0..s.features).map(|_| rng.next_f32() < 0.5).collect();
-            (Input::pack(s, &bits), i % s.classes)
-        })
-        .collect()
+    gen::rows_cyclic(rng, s, n)
 }
 
 fn assert_machines_identical(a: &MultiTm, b: &MultiTm, ctx: &str) {
@@ -311,16 +307,12 @@ fn keyed_learn_runs_are_partition_independent() {
     let base_seed = 0xF00D;
     let mut data_rng = Xoshiro256::new(0x400);
     let log: Vec<ShardUpdate> = (0..150)
-        .map(|i| {
-            let bits: Vec<bool> =
-                (0..s.features).map(|_| data_rng.next_f32() < 0.5).collect();
-            ShardUpdate {
-                seq: (i + 1) as u64,
-                kind: UpdateKind::Learn {
-                    input: Input::pack(&s, &bits),
-                    label: i % s.classes,
-                },
-            }
+        .map(|i| ShardUpdate {
+            seq: (i + 1) as u64,
+            kind: UpdateKind::Learn {
+                input: gen::input(&mut data_rng, &s),
+                label: i % s.classes,
+            },
         })
         .collect();
 

@@ -1,0 +1,84 @@
+//! Contract-feature harness (runs only under `--features contracts`):
+//! the full invariant audit rides every corpus replay via the per-step
+//! cross-check, and the shrinker proves it can reduce a planted
+//! divergence in a long random schedule to a ≤ 5-step reproducer.
+#![cfg(feature = "contracts")]
+
+use tm_fpga::tm::params::TmShape;
+use tm_fpga::verify::corpus::{replay, replay_opts, ReplayOptions, Step};
+use tm_fpga::verify::shrink::{random_schedule, shrink_failure};
+
+/// With the feature on, every replay step audits all five lanes through
+/// `check_invariants` — a clean seeded replay therefore certifies the
+/// hooks and the invariants together.
+#[test]
+fn contract_audits_pass_on_clean_replays() {
+    for (name, shape) in [
+        ("iris", TmShape::iris()),
+        ("wide", TmShape { classes: 2, max_clauses: 8, features: 80, states: 50 }),
+    ] {
+        for seed in 0..2u64 {
+            let s = random_schedule(&shape, seed, 30);
+            let rep = replay(&s)
+                .unwrap_or_else(|d| panic!("{name} seed {seed}: contract/identity failure {d}"));
+            // Train steps contribute 3 identity checks + 5 audits; every
+            // step contributes 3 pair diffs + 5 audits — so the audit
+            // count must dominate the step count.
+            assert!(rep.checks >= 8 * rep.steps as u64, "{name}: audits did not run");
+        }
+    }
+}
+
+/// Shrinker self-test (ISSUE 7 satellite 4): plant the known off-by-one
+/// divergence (`inject_train_offby1` nudges one TA on the `fast` lane
+/// after eager training whenever a clause force gate is programmed),
+/// find a 200-step random schedule that trips it, and prove the
+/// minimizer cuts the schedule to a ≤ 5-step reproducer that still
+/// fails with the injection and passes without it.
+#[test]
+fn shrinker_reduces_planted_divergence_to_minimal_reproducer() {
+    let shape = TmShape::iris();
+    let inject = ReplayOptions { inject_train_offby1: true };
+
+    let mut found = None;
+    for seed in 0..32u64 {
+        let s = random_schedule(&shape, seed, 200);
+        if replay_opts(&s, &inject).is_err() {
+            found = Some((seed, s));
+            break;
+        }
+    }
+    let (seed, schedule) = found.expect(
+        "no 200-step schedule in seeds 0..32 programs a force gate before a train step — \
+         the generator mix must have regressed",
+    );
+
+    // The schedule is clean without the injection: the divergence is the
+    // planted fault, not a real engine bug.
+    replay(&schedule).unwrap_or_else(|d| panic!("seed {seed} dirty without injection: {d}"));
+
+    let min = shrink_failure(&schedule, &inject).expect("failing schedule must shrink");
+    assert!(
+        min.steps.len() <= 5,
+        "minimizer left {} steps (want <= 5): {:?}",
+        min.steps.len(),
+        min.steps
+    );
+    // The minimal reproducer needs a force gate armed when a train step
+    // runs — two steps is the theoretical floor.
+    assert!(min.steps.len() >= 2, "a lone step cannot arm and trip the injection");
+    assert!(
+        min.steps.iter().any(|s| matches!(s, Step::Force { code, .. } if *code >= 0)),
+        "reproducer lost the arming force gate: {:?}",
+        min.steps
+    );
+    assert!(
+        min.steps.iter().any(|s| matches!(s, Step::Train { .. })),
+        "reproducer lost the training step (the only kind that injects): {:?}",
+        min.steps
+    );
+
+    // Minimized: still fails with the injection, still clean without.
+    assert!(replay_opts(&min, &inject).is_err(), "minimized schedule no longer reproduces");
+    replay(&min).unwrap_or_else(|d| panic!("minimized schedule dirty without injection: {d}"));
+}
