@@ -99,6 +99,94 @@ impl Cli {
     }
 }
 
+/// A bad flag *combination* (as opposed to a malformed value): the
+/// caller gets usage text and exit code 2, not a stack trace.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct UsageError(pub String);
+
+impl std::fmt::Display for UsageError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "usage: {}", self.0)
+    }
+}
+
+impl std::error::Error for UsageError {}
+
+fn usage(msg: impl Into<String>) -> anyhow::Error {
+    anyhow::Error::new(UsageError(msg.into()))
+}
+
+/// Reject invalid `serve` flag combinations before any work starts.
+/// The three serve modes are mutually exclusive: `--chaos-seed` (shard
+/// fault drill), `--net-chaos-seed` (network chaos soak) and `--listen`
+/// (real sockets); mode-specific knobs without their mode flag are
+/// usage errors, as are out-of-range values with no sane meaning.
+pub fn validate_serve(cli: &Cli) -> Result<()> {
+    let has = |n: &str| cli.flag(n).is_some();
+    let chaos = has("chaos-seed");
+    let net_chaos = has("net-chaos-seed");
+    let listen = has("listen");
+    if chaos && net_chaos {
+        return Err(usage(
+            "--chaos-seed and --net-chaos-seed are exclusive; run one drill at a time",
+        ));
+    }
+    if listen && (chaos || net_chaos) {
+        return Err(usage(
+            "--listen serves real sockets; chaos drills use the simulated transport",
+        ));
+    }
+    if has("drill") && !listen {
+        return Err(usage("--drill runs a loopback client against --listen; add --listen ADDR"));
+    }
+    const DRILL_KNOBS: [&str; 6] =
+        ["kills", "stalls", "corrupts", "malformed-every", "recovery-lag", "degraded-depth"];
+    for knob in DRILL_KNOBS {
+        if has(knob) && !chaos {
+            return Err(usage(format!("--{knob} is a fault-drill knob; add --chaos-seed N")));
+        }
+    }
+    if has("checkpoint-every") && !chaos && !net_chaos {
+        return Err(usage("--checkpoint-every needs --chaos-seed N or --net-chaos-seed N"));
+    }
+    for knob in ["clients", "net-requests", "write-cap", "max-in-flight"] {
+        if has(knob) && !net_chaos && !listen {
+            return Err(usage(format!(
+                "--{knob} is a network-serving knob; add --net-chaos-seed N or --listen ADDR"
+            )));
+        }
+    }
+    if cli.flag_usize("shards", 2)? == 0 {
+        return Err(usage("--shards must be >= 1"));
+    }
+    if cli.flag_usize("events", 1000)? == 0 {
+        return Err(usage("--events must be >= 1"));
+    }
+    let batch = cli.flag_usize("batch", 64)?;
+    if !(1..=64).contains(&batch) {
+        return Err(usage("--batch must be in 1..=64 (one bitplane lane)"));
+    }
+    let labelled = cli.flag_f32("labelled", 0.2)?;
+    if !(0.0..=1.0).contains(&labelled) {
+        return Err(usage("--labelled is a fraction in [0, 1]"));
+    }
+    if chaos && cli.flag_u64("degraded-depth", 1)? == 0 {
+        return Err(usage("--degraded-depth 0 would shed every batch; omit it for unbounded"));
+    }
+    if (net_chaos || listen)
+        && (cli.flag_usize("clients", 8)? == 0
+            || cli.flag_u64("net-requests", 40)? == 0
+            || cli.flag_u64("write-cap", 8)? == 0
+            || cli.flag_u64("max-in-flight", 256)? == 0
+            || cli.flag_u64("drill", 64)? == 0)
+    {
+        return Err(usage(
+            "--clients/--net-requests/--write-cap/--max-in-flight/--drill must be >= 1",
+        ));
+    }
+    Ok(())
+}
+
 pub const USAGE: &str = "\
 tmfpga — FPGA online-learning Tsetlin machine (Prescott et al., 2023) reproduction
 
@@ -123,6 +211,17 @@ COMMANDS
                           [--stalls N=1] [--corrupts N=1]
                           [--malformed-every N=97] [--checkpoint-every N=32]
                           [--recovery-lag OPS=0] [--degraded-depth N]
+                          with --net-chaos-seed N: deterministic network
+                          chaos soak (torn frames, half-open peers,
+                          disconnects, slow-loris readers, floods) through
+                          the simulated transport, asserting per-request
+                          bit-identity vs the oracle   [--clients N=8]
+                          [--net-requests N=40] [--write-cap N=8]
+                          [--max-in-flight N=256]
+                          with --listen ADDR: serve the line protocol on a
+                          real TCP socket (port 0 picks a free port);
+                          --drill N runs an in-process loopback client with
+                          N requests, then drains
   perf                    §6 performance table (FPGA model vs software paths)
                           [--iters N=20] [--pjrt-steps N=60]
   power                   §6 power table (gating / over-provisioning)
@@ -201,5 +300,55 @@ mod tests {
     fn empty_args_is_help() {
         let c = Cli::parse(std::iter::empty::<String>()).unwrap();
         assert_eq!(c.command, "help");
+    }
+
+    fn usage_err(s: &str) -> UsageError {
+        let err = validate_serve(&parse(s)).expect_err(s);
+        err.downcast_ref::<UsageError>().unwrap_or_else(|| panic!("untyped error for {s}")).clone()
+    }
+
+    #[test]
+    fn serve_mode_flags_are_exclusive() {
+        assert!(validate_serve(&parse("serve")).is_ok());
+        assert!(validate_serve(&parse("serve --chaos-seed 1 --kills 2 --recovery-lag 0")).is_ok());
+        assert!(validate_serve(&parse("serve --net-chaos-seed 7 --clients 4")).is_ok());
+        assert!(validate_serve(&parse("serve --listen 127.0.0.1:0 --drill 64")).is_ok());
+        usage_err("serve --chaos-seed 1 --net-chaos-seed 2");
+        usage_err("serve --listen 127.0.0.1:0 --chaos-seed 1");
+        usage_err("serve --listen 127.0.0.1:0 --net-chaos-seed 1");
+        usage_err("serve --drill 64");
+    }
+
+    #[test]
+    fn serve_mode_knobs_need_their_mode() {
+        // The exact flag set the CI recovery drill passes must stay
+        // valid, including an explicit --recovery-lag 0.
+        let ci = "serve --events 600 --chaos-seed 3141592653 --checkpoint-every 16 \
+                  --kills 2 --stalls 1 --corrupts 1";
+        assert!(validate_serve(&parse(ci)).is_ok());
+        usage_err("serve --kills 2");
+        usage_err("serve --recovery-lag 0");
+        usage_err("serve --checkpoint-every 16");
+        usage_err("serve --clients 4");
+        usage_err("serve --net-requests 40");
+        assert!(validate_serve(&parse("serve --net-chaos-seed 1 --checkpoint-every 8")).is_ok());
+    }
+
+    #[test]
+    fn serve_value_ranges_are_enforced() {
+        usage_err("serve --shards 0");
+        usage_err("serve --events 0");
+        usage_err("serve --batch 0");
+        usage_err("serve --batch 65");
+        usage_err("serve --labelled 1.5");
+        usage_err("serve --chaos-seed 1 --degraded-depth 0");
+        usage_err("serve --net-chaos-seed 1 --clients 0");
+        usage_err("serve --net-chaos-seed 1 --net-requests 0");
+        usage_err("serve --listen 127.0.0.1:0 --drill 0");
+        // Malformed values stay plain parse errors, not usage errors.
+        assert!(validate_serve(&parse("serve --shards two"))
+            .unwrap_err()
+            .downcast_ref::<UsageError>()
+            .is_none());
     }
 }

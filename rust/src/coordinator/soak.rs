@@ -21,9 +21,10 @@ use crate::data::blocks::{BlockPlan, SetAllocation};
 use crate::data::filter::ClassFilter;
 use crate::data::iris;
 use crate::data::online::{arrival_trace, RomSource, TraceConfig};
+use crate::net::{run_sim, seeded_scripts, NetConfig, NetStats, Outcome, ScriptConfig};
 use crate::serve::{
-    run_trace, BatcherConfig, ChaosPlan, ChaosSpec, DriveStats, RecoveryStats, ScalarOracle,
-    ServeConfig, ServeEvent, ShardServer, ShardStats,
+    run_trace, BatcherConfig, ChaosPlan, ChaosSpec, DriveStats, NetChaosPlan, NetChaosSpec,
+    RecoveryStats, ScalarOracle, ServeConfig, ServeEvent, ShardServer, ShardStats,
 };
 use crate::tm::clause::Input;
 use crate::tm::machine::MultiTm;
@@ -31,6 +32,7 @@ use crate::tm::params::{TmParams, TmShape};
 use crate::tm::rng::Xoshiro256;
 use crate::tm::update::UpdateKind;
 use anyhow::Result;
+use std::collections::BTreeMap;
 use std::time::Instant;
 
 /// Soak-run configuration (iris shape, paper-offline params).
@@ -360,6 +362,204 @@ pub fn run_chaos_soak(cfg: &ChaosSoakConfig) -> Result<ChaosReport> {
     })
 }
 
+/// Network-soak configuration: scripted clients with connection-level
+/// chaos against the full front end, optionally with shard faults
+/// layered underneath.
+#[derive(Debug, Clone)]
+pub struct NetSoakConfig {
+    pub clients: usize,
+    pub requests_per_client: u64,
+    /// Fraction of requests that are `learn` frames.
+    pub labelled_fraction: f32,
+    /// Deadline budget stamped on every infer request.
+    pub ttl: Option<u64>,
+    /// Master seed: served machine, client scripts and update rands.
+    pub seed: u64,
+    /// Seed for the connection-fault schedule, independent of `seed` so
+    /// one workload can be drilled under many schedules.
+    pub net_chaos_seed: u64,
+    pub spec: NetChaosSpec,
+    pub shards: usize,
+    pub max_batch: usize,
+    pub latency_budget: u64,
+    /// Per-session frame-debt cap (slow-client shed threshold).
+    pub write_buffer_cap: u64,
+    /// Global frame-debt cap (admission threshold).
+    pub max_in_flight: u64,
+    /// Optional shard-fault schedule (kills/stalls/corruptions) under
+    /// the connection chaos; the oracle arm still never fails.
+    pub shard_spec: Option<ChaosSpec>,
+    pub shard_chaos_seed: u64,
+    pub checkpoint_every: u64,
+}
+
+impl Default for NetSoakConfig {
+    fn default() -> Self {
+        NetSoakConfig {
+            clients: 8,
+            requests_per_client: 40,
+            labelled_fraction: 0.25,
+            ttl: Some(3),
+            seed: 42,
+            net_chaos_seed: 0x0005_EED5,
+            spec: NetChaosSpec::full_matrix(),
+            shards: 2,
+            max_batch: 16,
+            latency_budget: 4,
+            write_buffer_cap: 8,
+            max_in_flight: 256,
+            shard_spec: None,
+            shard_chaos_seed: 0xC4A0_5EED,
+            checkpoint_every: 16,
+        }
+    }
+}
+
+/// What one network soak produced, with the cross-arm verdicts.
+#[derive(Debug, Clone)]
+pub struct NetSoakReport {
+    /// Front-end accounting over the sharded server.
+    pub server: NetStats,
+    /// Front-end accounting over the scalar oracle.
+    pub oracle: NetStats,
+    /// The generated connection-fault schedule.
+    pub plan: NetChaosPlan,
+    /// Per-request outcome disagreements between the arms, after
+    /// excusing explicit server-side overload sheds.
+    pub outcome_mismatches: usize,
+    /// Requests the degraded server shed with a typed overload answer
+    /// where the never-failing oracle predicted.
+    pub excused_server_shed: usize,
+    /// All stats equal across arms (production-side counters excluded
+    /// exactly when shard faults make them legitimately diverge).
+    pub stats_match: bool,
+    /// Every server replica's final state digest equals the oracle's.
+    pub replicas_match: bool,
+    /// Per-arm exactly-once identity: every admitted infer is answered,
+    /// expired or explicitly shed — nothing lost, nothing doubled.
+    pub accounting_exact: bool,
+    pub wall_s: f64,
+}
+
+impl NetSoakReport {
+    /// Bit-identity with the oracle arm plus exact accounting.
+    pub fn agrees(&self) -> bool {
+        self.outcome_mismatches == 0
+            && self.stats_match
+            && self.replicas_match
+            && self.accounting_exact
+    }
+}
+
+/// Per-request outcome diff: `(mismatches, excused server sheds)`. The
+/// oracle arm never sheds server-side, so a server `ServerShed` against
+/// an oracle prediction is accounted, not lost.
+fn diff_outcomes(
+    server: &BTreeMap<(usize, u64), Outcome>,
+    oracle: &BTreeMap<(usize, u64), Outcome>,
+) -> (usize, usize) {
+    let mut mismatches = 0usize;
+    let mut excused = 0usize;
+    for (key, so) in server {
+        match oracle.get(key) {
+            Some(oo) if so == oo => {}
+            Some(_) if matches!(so, Outcome::ServerShed) => excused += 1,
+            _ => mismatches += 1,
+        }
+    }
+    for key in oracle.keys() {
+        if !server.contains_key(key) {
+            mismatches += 1;
+        }
+    }
+    (mismatches, excused)
+}
+
+/// Run one network chaos soak: identical scripted clients (torn frames,
+/// half-open peers, disconnects, slow-loris readers, floods — all on
+/// the virtual clock) drive two copies of the front end, one over the
+/// sharded server and one over the scalar oracle. Because admission,
+/// shedding and deadline decisions are pure functions of the scripts,
+/// the arms must agree on *every* per-request outcome and counter; any
+/// divergence is a real serving bug, not noise.
+pub fn run_net_soak(cfg: &NetSoakConfig) -> Result<NetSoakReport> {
+    let shape = TmShape::iris();
+    let params = TmParams::paper_online(&shape);
+    let mut rng = Xoshiro256::new(cfg.seed);
+    let tm = crate::testkit::gen::machine(&mut rng, &shape);
+
+    let plan =
+        NetChaosPlan::seeded(cfg.net_chaos_seed, cfg.clients, cfg.requests_per_client, &cfg.spec);
+    let script_cfg = ScriptConfig {
+        clients: cfg.clients,
+        requests_per_client: cfg.requests_per_client,
+        labelled_fraction: cfg.labelled_fraction,
+        features: shape.features,
+        classes: shape.classes,
+        ttl: cfg.ttl,
+    };
+    let scripts = seeded_scripts(cfg.seed ^ 0x00AD_BEEF, &script_cfg, &plan);
+    let ncfg = NetConfig {
+        batch: BatcherConfig {
+            max_batch: cfg.max_batch,
+            latency_budget: cfg.latency_budget,
+            expect_literals: None,
+        },
+        max_in_flight: cfg.max_in_flight,
+        write_buffer_cap: cfg.write_buffer_cap,
+        ..Default::default()
+    };
+
+    let mut scfg = ServeConfig::new(cfg.shards, params.clone(), cfg.seed);
+    scfg.fault.checkpoint_every = cfg.checkpoint_every;
+    let server = match &cfg.shard_spec {
+        Some(spec) => {
+            let total = cfg.clients as u64 * cfg.requests_per_client;
+            let shard_plan = ChaosPlan::seeded(cfg.shard_chaos_seed, cfg.shards, total, spec);
+            ShardServer::with_chaos(&tm, &scfg, shard_plan)?
+        }
+        None => ShardServer::new(&tm, &scfg)?,
+    };
+    let t0 = Instant::now();
+    let (srep, _stransport) = run_sim(server, scripts.clone(), &shape, ncfg.clone())?;
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    let oracle = ScalarOracle::new(tm, params, cfg.seed);
+    let (orep, _otransport) = run_sim(oracle, scripts, &shape, ncfg)?;
+
+    let (outcome_mismatches, excused_server_shed) = diff_outcomes(&srep.outcomes, &orep.outcomes);
+    let oracle_digest = orep.replicas.first().map(MultiTm::state_digest);
+    let replicas_match = !srep.replicas.is_empty()
+        && srep.replicas.iter().all(|r| Some(r.state_digest()) == oracle_digest);
+
+    // Production-side counters (preds, server sheds) legitimately
+    // diverge when shard faults shed work; every control-side counter
+    // must match exactly.
+    let mut s_norm = srep.stats;
+    let mut o_norm = orep.stats;
+    s_norm.preds = 0;
+    s_norm.server_shed = 0;
+    o_norm.preds = 0;
+    o_norm.server_shed = 0;
+    let stats_match = s_norm == o_norm && orep.stats.server_shed == 0;
+    let exact = |st: &NetStats| st.infers == st.preds + st.deadline_expired + st.server_shed;
+    let accounting_exact = exact(&srep.stats)
+        && exact(&orep.stats)
+        && excused_server_shed as u64 == srep.stats.server_shed;
+
+    Ok(NetSoakReport {
+        server: srep.stats,
+        oracle: orep.stats,
+        plan,
+        outcome_mismatches,
+        excused_server_shed,
+        stats_match,
+        replicas_match,
+        accounting_exact,
+        wall_s,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -404,6 +604,29 @@ mod tests {
         assert!(
             rep.recovery.recoveries >= rep.recovery.worker_panics.min(1),
             "fired kills must be recovered"
+        );
+    }
+
+    /// One quick network chaos soak: the full connection-fault matrix
+    /// (torn frames, half-open, disconnect, slow-loris, flood) over the
+    /// sharded server must agree with the oracle arm on every outcome.
+    /// The heavier per-fault × shard-fault matrix lives in
+    /// `rust/tests/integration_net.rs`.
+    #[test]
+    fn default_net_soak_agrees_with_oracle() {
+        let cfg = NetSoakConfig::default();
+        let rep = run_net_soak(&cfg).unwrap();
+        assert_eq!(rep.plan.faulted(), 5, "full matrix deals five faulted clients");
+        assert!(rep.server.infers > 0 && rep.server.learns > 0, "{:?}", rep.server);
+        assert!(
+            rep.agrees(),
+            "mismatches={} stats_match={} replicas={} accounting={}\nserver {:?}\noracle {:?}",
+            rep.outcome_mismatches,
+            rep.stats_match,
+            rep.replicas_match,
+            rep.accounting_exact,
+            rep.server,
+            rep.oracle
         );
     }
 }

@@ -4,7 +4,7 @@
 
 use anyhow::{bail, Context, Result};
 use std::path::PathBuf;
-use tm_fpga::cli::{Cli, USAGE};
+use tm_fpga::cli::{validate_serve, Cli, UsageError, USAGE};
 use tm_fpga::coordinator::{
     self, experiment::Figure, report, SweepConfig, SweepOptions,
 };
@@ -23,6 +23,10 @@ fn main() {
     };
     if let Err(e) = dispatch(&cli) {
         eprintln!("error: {e:#}");
+        if e.downcast_ref::<UsageError>().is_some() {
+            eprintln!("{USAGE}");
+            std::process::exit(2);
+        }
         std::process::exit(1);
     }
 }
@@ -112,6 +116,13 @@ fn cmd_run(cli: &Cli) -> Result<()> {
 }
 
 fn cmd_serve(cli: &Cli) -> Result<()> {
+    validate_serve(cli)?;
+    if cli.flag("net-chaos-seed").is_some() {
+        return cmd_serve_net(cli);
+    }
+    if cli.flag("listen").is_some() {
+        return cmd_serve_listen(cli);
+    }
     // Flag fallbacks come from SoakConfig::default() so the CLI, the
     // soak driver and the help text cannot drift apart.
     let d = tm_fpga::coordinator::SoakConfig::default();
@@ -227,6 +238,102 @@ fn cmd_serve_chaos(cli: &Cli, soak: tm_fpga::coordinator::SoakConfig) -> Result<
             rep.replicas_match_oracle,
             rep.accounting_exact
         )
+    }
+}
+
+fn cmd_serve_net(cli: &Cli) -> Result<()> {
+    let d = tm_fpga::coordinator::NetSoakConfig::default();
+    let cfg = tm_fpga::coordinator::NetSoakConfig {
+        clients: cli.flag_usize("clients", d.clients)?,
+        requests_per_client: cli.flag_u64("net-requests", d.requests_per_client)?,
+        labelled_fraction: cli.flag_f32("labelled", d.labelled_fraction)?,
+        seed: cli.flag_u64("seed", d.seed)?,
+        net_chaos_seed: cli.flag_u64("net-chaos-seed", d.net_chaos_seed)?,
+        shards: cli.flag_usize("shards", d.shards)?,
+        max_batch: cli.flag_usize("batch", d.max_batch)?,
+        latency_budget: cli.flag_u64("deadline", d.latency_budget)?,
+        write_buffer_cap: cli.flag_u64("write-cap", d.write_buffer_cap)?,
+        max_in_flight: cli.flag_u64("max-in-flight", d.max_in_flight)?,
+        checkpoint_every: cli.flag_u64("checkpoint-every", d.checkpoint_every)?,
+        ..d
+    };
+    let rep = coordinator::run_net_soak(&cfg)?;
+    println!(
+        "network chaos soak: {} client(s) × {} request(s), seed {:#x}, {} faulted client(s)",
+        cfg.clients,
+        cfg.requests_per_client,
+        cfg.net_chaos_seed,
+        rep.plan.faulted()
+    );
+    println!("  infers / learns    : {} / {}", rep.server.infers, rep.server.learns);
+    println!("  preds              : {}", rep.server.preds);
+    println!("  deadline expired   : {}", rep.server.deadline_expired);
+    println!("  admission rejected : {}", rep.server.admission_rejected);
+    println!("  slow-client shed   : {}", rep.server.shed_requests);
+    println!("  quarantined        : {}", rep.server.quarantined);
+    println!("  frame errors       : {}", rep.server.frame_errors);
+    println!("  wall               : {:.3}s", rep.wall_s);
+    if rep.agrees() {
+        println!(
+            "  oracle check       : OK (per-request outcomes, counters and final \
+             replicas bit-identical)"
+        );
+        Ok(())
+    } else {
+        bail!(
+            "network soak diverged: {} outcome mismatches, stats_match={}, \
+             replicas_match={}, accounting_exact={}",
+            rep.outcome_mismatches,
+            rep.stats_match,
+            rep.replicas_match,
+            rep.accounting_exact
+        )
+    }
+}
+
+fn cmd_serve_listen(cli: &Cli) -> Result<()> {
+    use tm_fpga::net::{loopback_drill, run_tcp, NetConfig, TcpTransport};
+    let addr = cli.flag("listen").context("--listen needs an address")?;
+    let seed = cli.flag_u64("seed", 42)?;
+    let shards = cli.flag_usize("shards", 2)?;
+    let shape = tm_fpga::tm::TmShape::iris();
+    let params = TmParams::paper_online(&shape);
+    let mut rng = Xoshiro256::new(seed);
+    let tm = tm_fpga::testkit::gen::machine(&mut rng, &shape);
+    let scfg = tm_fpga::serve::ServeConfig::new(shards, params, seed);
+    let server = tm_fpga::serve::ShardServer::new(&tm, &scfg)?;
+    let transport = TcpTransport::bind(addr)?;
+    let bound = transport.local_addr();
+    // Generous caps: on real sockets, frame debt includes
+    // response-production lag, not just client slowness.
+    let ncfg = NetConfig { max_in_flight: 4096, write_buffer_cap: 1024, ..Default::default() };
+    println!("serving on {bound} (protocol v1, {shards} shard(s))");
+    if cli.flag("drill").is_some() {
+        let n = cli.flag_u64("drill", 64)?;
+        let features = shape.features;
+        let client = std::thread::spawn(move || loopback_drill(bound, n, features, seed ^ 0xD8));
+        let rep = run_tcp(server, transport, &shape, ncfg, Some(30_000))?;
+        let drill = client.join().map_err(|_| anyhow::anyhow!("drill client panicked"))??;
+        println!(
+            "  drill client       : {} preds, {} errs, stats frame infers={}",
+            drill.preds, drill.errs, drill.stats.infers
+        );
+        println!(
+            "  server accounting  : {} infers, {} preds, {} frames in",
+            rep.stats.infers, rep.stats.preds, rep.stats.frames_in
+        );
+        if drill.preds != n || drill.errs != 0 || rep.stats.infers != n {
+            bail!("loopback drill lost responses: {}/{n} preds, {} errs", drill.preds, drill.errs);
+        }
+        println!("  drill              : OK (all {n} requests answered, graceful drain)");
+        Ok(())
+    } else {
+        let rep = run_tcp(server, transport, &shape, ncfg, None)?;
+        println!(
+            "drained: {} infers, {} learns, {} preds, {} connection(s)",
+            rep.stats.infers, rep.stats.learns, rep.stats.preds, rep.stats.connections
+        );
+        Ok(())
     }
 }
 

@@ -1,0 +1,956 @@
+//! The network front end: per-client sessions over a [`NetBackend`].
+//!
+//! One single-threaded control loop owns everything nondeterministic a
+//! network creates — accepts, torn reads, slow readers, disconnects —
+//! and reduces it to the deterministic serving core the rest of the
+//! crate already trusts: admitted inference requests flow through the
+//! same [`MicroBatcher`] and the same sequenced update log as the
+//! in-process drivers. Robustness is the design driver:
+//!
+//! - **Deadlines.** Every infer request carries a budget (its `ttl` or
+//!   the configured default) that becomes an absolute [`Deadline`] on
+//!   the virtual clock. Expiry is decided exactly once, at flush
+//!   ([`split_expired`]): expired requests are answered with a typed
+//!   `err kind=deadline`, dispatched ones are always scored — never a
+//!   silent drop, and never an arm-dependent race.
+//! - **Backpressure.** The only flow-control quantity is *frame debt*:
+//!   `promised − granted` per session, where every request promises
+//!   exactly one response frame and [`NetConn::granted`] counts what
+//!   the peer absorbed. A session past [`NetConfig::write_buffer_cap`]
+//!   is a slow client: further requests are shed (counted in
+//!   `shed_requests`, no frame queued — the client is not reading
+//!   anyway), which is also what bounds the per-connection write queue.
+//!   Past [`NetConfig::max_in_flight`] of *global* debt the admission
+//!   controller answers `err kind=admission`. Both quantities are pure
+//!   functions of the scripted transport, so the sharded server and the
+//!   scalar oracle make bit-identical control decisions under chaos.
+//! - **Bounded reads.** [`FrameBuffer`] caps the bytes a connection may
+//!   hold without a newline and reads are chunked, so a hostile frame
+//!   costs at most `max_frame_bytes + read_chunk` — never an unbounded
+//!   allocation. Unparseable input is a typed `err kind=frame` and a
+//!   close.
+//! - **In-order release.** Shards answer out of order; clients must
+//!   not. Each admitted infer holds a slot in its session's queue and
+//!   responses release strictly in request order, whatever order the
+//!   backend produces them.
+//! - **Graceful drain.** `drain`: stop accepting → flush the batcher
+//!   (deadline-checking the tail) → finalize the backend (join
+//!   workers, verify the exactly-once audit, checkpoint replicas) →
+//!   answer everything still routed → final `bye` stats frame → close.
+//!
+//! On a real socket ([`run_tcp`]) `granted` is frames flushed into the
+//! kernel, so debt conflates response-production lag with client
+//! slowness — honest backpressure, sized by generous default caps. The
+//! deterministic contract is exercised through [`SimTransport`].
+
+use crate::net::proto::{self, ErrKind, FrameBuffer, Request, Response, WireStats, PROTO_VERSION};
+use crate::net::sim::{scripts_end, ClientScript, SimTransport};
+use crate::net::transport::{NetConn, ReadOutcome, TcpTransport, Transport};
+use crate::serve::batcher::{split_expired, BatcherConfig, MicroBatcher, PendingRequest};
+use crate::serve::NetBackend;
+use crate::tm::clause::Input;
+use crate::tm::machine::MultiTm;
+use crate::tm::params::TmShape;
+use crate::tm::rng::Xoshiro256;
+use crate::tm::update::{Deadline, UpdateKind};
+use anyhow::{bail, Context, Result};
+use std::collections::{BTreeMap, HashSet, VecDeque};
+
+/// Front-end policy knobs.
+#[derive(Debug, Clone)]
+pub struct NetConfig {
+    pub batch: BatcherConfig,
+    /// Global frame-debt ceiling: admission rejects past this.
+    pub max_in_flight: u64,
+    /// Per-session frame-debt ceiling: slow-client shed past this.
+    pub write_buffer_cap: u64,
+    /// Longest legal frame; also bounds unterminated read buffers.
+    pub max_frame_bytes: usize,
+    /// Bytes per non-blocking read.
+    pub read_chunk: usize,
+    /// Deadline budget for infer requests that carry no `ttl`.
+    pub default_ttl: Option<u64>,
+    /// Record every applied update (the corpus-replay hook).
+    pub record_updates: bool,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            batch: BatcherConfig::default(),
+            max_in_flight: 256,
+            write_buffer_cap: 32,
+            max_frame_bytes: 4096,
+            read_chunk: 1024,
+            default_ttl: None,
+            record_updates: false,
+        }
+    }
+}
+
+impl NetConfig {
+    pub fn validate(&self) -> Result<()> {
+        self.batch.validate()?;
+        if self.max_in_flight == 0 || self.write_buffer_cap == 0 {
+            bail!("net: max_in_flight and write_buffer_cap must be >= 1");
+        }
+        if self.max_frame_bytes < 64 || self.read_chunk == 0 {
+            bail!("net: max_frame_bytes must be >= 64 and read_chunk >= 1");
+        }
+        Ok(())
+    }
+}
+
+/// Exact front-end accounting. Every request that reaches a parse ends
+/// in exactly one of these counters' stories; the chaos soak asserts
+/// them equal across backends and consistent with the outcome map.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct NetStats {
+    pub connections: u64,
+    pub frames_in: u64,
+    /// Infer requests admitted to the batcher.
+    pub infers: u64,
+    /// Learn requests applied as sequenced updates.
+    pub learns: u64,
+    /// Pred frames produced (admitted − expired − server-shed).
+    pub preds: u64,
+    /// Admitted requests answered `err kind=deadline` at flush.
+    pub deadline_expired: u64,
+    /// Requests answered `err kind=admission` (global debt ceiling).
+    pub admission_rejected: u64,
+    /// Requests shed without a frame (per-session debt ceiling).
+    pub shed_requests: u64,
+    /// Dispatched requests shed by the degraded backend.
+    pub server_shed: u64,
+    /// Semantically invalid requests (width, label, duplicate id).
+    pub quarantined: u64,
+    /// Connections killed for unparseable/oversized frames.
+    pub frame_errors: u64,
+    /// Requests refused because the server was draining.
+    pub draining_rejected: u64,
+    pub stats_served: u64,
+    pub drains: u64,
+}
+
+impl NetStats {
+    fn wire(&self) -> WireStats {
+        WireStats {
+            infers: self.infers,
+            learns: self.learns,
+            preds: self.preds,
+            shed: self.shed_requests + self.server_shed,
+            deadline: self.deadline_expired,
+            admission: self.admission_rejected,
+            quarantined: self.quarantined,
+            frame_errors: self.frame_errors,
+        }
+    }
+}
+
+/// How one infer/learn request ended, keyed `(session, client id)` in
+/// the report — the cross-arm comparison unit of the net soak.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Outcome {
+    Pred(usize),
+    LearnAck(u64),
+    DeadlineExpired,
+    AdmissionRejected,
+    SlowShed,
+    ServerShed,
+    BadRequest,
+    Draining,
+}
+
+/// What a finished front-end run produced.
+#[derive(Debug)]
+pub struct NetReport {
+    pub stats: NetStats,
+    /// `(session index, client request id)` → outcome.
+    pub outcomes: BTreeMap<(usize, u64), Outcome>,
+    /// Final replica state(s) from the backend's drain checkpoint.
+    pub replicas: Vec<MultiTm>,
+    /// The applied update log (when [`NetConfig::record_updates`]).
+    pub updates: Vec<UpdateKind>,
+}
+
+enum SlotFill {
+    Pred(usize),
+    Deadline,
+    Overload,
+}
+
+struct Session<C> {
+    conn: C,
+    fb: FrameBuffer,
+    hello_done: bool,
+    /// Response frames promised to this client.
+    promised: u64,
+    /// Read side exhausted (EOF seen).
+    eof: bool,
+    /// Hard-closed (frame error / version reject); no further parsing.
+    dead: bool,
+    /// Admitted infer global-ids, in request order (release order).
+    slots: VecDeque<u64>,
+    /// Filled but not yet releasable (an earlier slot is still open).
+    ready: BTreeMap<u64, Response>,
+    /// Client ids seen on this connection (duplicates are rejected).
+    used_ids: HashSet<u64>,
+}
+
+impl<C> Session<C> {
+    fn new(conn: C, max_frame_bytes: usize) -> Self {
+        Session {
+            conn,
+            fb: FrameBuffer::new(max_frame_bytes),
+            hello_done: false,
+            promised: 0,
+            eof: false,
+            dead: false,
+            slots: VecDeque::new(),
+            ready: BTreeMap::new(),
+            used_ids: HashSet::new(),
+        }
+    }
+}
+
+/// The front end proper. Generic over transport (TCP or scripted sim)
+/// and backend (sharded server or scalar oracle) — all four pairings
+/// run the identical control loop.
+pub struct FrontEnd<B: NetBackend, T: Transport> {
+    backend: B,
+    transport: T,
+    cfg: NetConfig,
+    shape: TmShape,
+    sessions: Vec<Session<T::Conn>>,
+    batcher: MicroBatcher,
+    /// Outstanding global id → (session, client id).
+    routes: BTreeMap<u64, (usize, u64)>,
+    next_global: u64,
+    /// Applied-update clock (mirrors the backend's seq).
+    seq: u64,
+    stats: NetStats,
+    outcomes: BTreeMap<(usize, u64), Outcome>,
+    draining: bool,
+    updates: Vec<UpdateKind>,
+}
+
+impl<B: NetBackend, T: Transport> FrontEnd<B, T> {
+    pub fn new(backend: B, transport: T, shape: TmShape, cfg: NetConfig) -> Result<Self> {
+        cfg.validate().context("net front end")?;
+        let batcher = MicroBatcher::new(cfg.batch.clone()).context("net front end")?;
+        Ok(FrontEnd {
+            backend,
+            transport,
+            cfg,
+            shape,
+            sessions: Vec::new(),
+            batcher,
+            routes: BTreeMap::new(),
+            next_global: 0,
+            seq: 0,
+            stats: NetStats::default(),
+            outcomes: BTreeMap::new(),
+            draining: false,
+            updates: Vec::new(),
+        })
+    }
+
+    pub fn stats(&self) -> NetStats {
+        self.stats
+    }
+
+    /// A client requested drain (or the owner set it): the loop should
+    /// stop ticking and call [`FrontEnd::drain`].
+    pub fn is_draining(&self) -> bool {
+        self.draining
+    }
+
+    fn session_debt(sess: &Session<T::Conn>) -> u64 {
+        sess.promised.saturating_sub(sess.conn.granted())
+    }
+
+    fn global_debt(&self) -> u64 {
+        self.sessions.iter().map(|s| Self::session_debt(s)).sum()
+    }
+
+    /// Promise and immediately write one response frame.
+    fn immediate(&mut self, s: usize, resp: Response) {
+        let sess = &mut self.sessions[s];
+        sess.promised += 1;
+        sess.conn.write_frame(resp.encode().as_bytes());
+    }
+
+    /// Release the session's in-order response queue as far as it is
+    /// filled.
+    fn release(&mut self, s: usize) {
+        let sess = &mut self.sessions[s];
+        while let Some(&gid) = sess.slots.front() {
+            let Some(resp) = sess.ready.remove(&gid) else { break };
+            sess.slots.pop_front();
+            sess.conn.write_frame(resp.encode().as_bytes());
+        }
+    }
+
+    /// Fill an admitted request's slot; true if the id was still
+    /// routed.
+    fn fill_slot(&mut self, gid: u64, fill: SlotFill) -> bool {
+        let Some((s, cid)) = self.routes.remove(&gid) else { return false };
+        let (resp, outcome) = match fill {
+            SlotFill::Pred(class) => (Response::Pred { id: cid, class }, Outcome::Pred(class)),
+            SlotFill::Deadline => {
+                (Response::Err { id: Some(cid), kind: ErrKind::Deadline }, Outcome::DeadlineExpired)
+            }
+            SlotFill::Overload => {
+                (Response::Err { id: Some(cid), kind: ErrKind::Overload }, Outcome::ServerShed)
+            }
+        };
+        self.outcomes.insert((s, cid), outcome);
+        self.sessions[s].ready.insert(gid, resp);
+        self.release(s);
+        true
+    }
+
+    /// Deadline-check and dispatch a flushed batch.
+    fn dispatch(&mut self, batch: Vec<PendingRequest>, now: u64) {
+        let (live, expired) = split_expired(batch, now);
+        for gid in expired {
+            if self.fill_slot(gid, SlotFill::Deadline) {
+                self.stats.deadline_expired += 1;
+            }
+        }
+        if !live.is_empty() {
+            self.backend.infer_batch(live);
+        }
+    }
+
+    /// Pull whatever the backend has produced and route it.
+    fn route_backend(&mut self) {
+        for (gid, class) in self.backend.poll_responses() {
+            if self.fill_slot(gid, SlotFill::Pred(class)) {
+                self.stats.preds += 1;
+            }
+        }
+        for gid in self.backend.poll_shed() {
+            if self.fill_slot(gid, SlotFill::Overload) {
+                self.stats.server_shed += 1;
+            }
+        }
+    }
+
+    fn handle_infer(&mut self, s: usize, cid: u64, ttl: Option<u64>, bits: &[bool], now: u64) {
+        let debt = Self::session_debt(&self.sessions[s]);
+        if debt >= self.cfg.write_buffer_cap {
+            // The client is not consuming responses; queueing another
+            // frame would grow an unread buffer. Shed with accounting,
+            // no frame.
+            self.stats.shed_requests += 1;
+            self.outcomes.insert((s, cid), Outcome::SlowShed);
+            return;
+        }
+        if self.draining {
+            self.stats.draining_rejected += 1;
+            self.outcomes.insert((s, cid), Outcome::Draining);
+            self.immediate(s, Response::Err { id: Some(cid), kind: ErrKind::Draining });
+            return;
+        }
+        if !self.sessions[s].used_ids.insert(cid) || bits.len() != self.shape.features {
+            self.stats.quarantined += 1;
+            self.outcomes.insert((s, cid), Outcome::BadRequest);
+            self.immediate(s, Response::Err { id: Some(cid), kind: ErrKind::BadRequest });
+            return;
+        }
+        if self.global_debt() >= self.cfg.max_in_flight {
+            self.stats.admission_rejected += 1;
+            self.outcomes.insert((s, cid), Outcome::AdmissionRejected);
+            self.immediate(s, Response::Err { id: Some(cid), kind: ErrKind::Admission });
+            return;
+        }
+        let gid = self.next_global;
+        self.next_global += 1;
+        self.sessions[s].promised += 1;
+        self.sessions[s].slots.push_back(gid);
+        self.routes.insert(gid, (s, cid));
+        self.stats.infers += 1;
+        let deadline = ttl.or(self.cfg.default_ttl).map(|t| Deadline::after(now, t));
+        let input = Input::pack(&self.shape, bits);
+        if let Some(batch) = self.batcher.push(PendingRequest { id: gid, input, deadline }, now) {
+            self.dispatch(batch, now);
+        }
+    }
+
+    fn handle_learn(&mut self, s: usize, cid: u64, label: usize, bits: &[bool]) {
+        let debt = Self::session_debt(&self.sessions[s]);
+        if debt >= self.cfg.write_buffer_cap {
+            self.stats.shed_requests += 1;
+            self.outcomes.insert((s, cid), Outcome::SlowShed);
+            return;
+        }
+        if self.draining {
+            self.stats.draining_rejected += 1;
+            self.outcomes.insert((s, cid), Outcome::Draining);
+            self.immediate(s, Response::Err { id: Some(cid), kind: ErrKind::Draining });
+            return;
+        }
+        if !self.sessions[s].used_ids.insert(cid)
+            || bits.len() != self.shape.features
+            || label >= self.shape.classes
+        {
+            self.stats.quarantined += 1;
+            self.outcomes.insert((s, cid), Outcome::BadRequest);
+            self.immediate(s, Response::Err { id: Some(cid), kind: ErrKind::BadRequest });
+            return;
+        }
+        let input = Input::pack(&self.shape, bits);
+        let kind = UpdateKind::Learn { input, label };
+        if self.cfg.record_updates {
+            self.updates.push(kind.clone());
+        }
+        self.backend.update(kind);
+        self.seq += 1;
+        self.stats.learns += 1;
+        self.outcomes.insert((s, cid), Outcome::LearnAck(self.seq));
+        self.immediate(s, Response::LearnOk { id: cid, seq: self.seq });
+    }
+
+    fn handle_request(&mut self, s: usize, req: Request, now: u64) {
+        if !self.sessions[s].hello_done {
+            match req {
+                Request::Hello { version } if version == PROTO_VERSION => {
+                    self.sessions[s].hello_done = true;
+                    self.immediate(s, Response::HelloOk { version: PROTO_VERSION });
+                }
+                Request::Hello { .. } => {
+                    self.immediate(s, Response::Err { id: None, kind: ErrKind::Version });
+                    self.sessions[s].conn.close();
+                    self.sessions[s].dead = true;
+                }
+                _ => {
+                    self.stats.quarantined += 1;
+                    self.immediate(s, Response::Err { id: None, kind: ErrKind::BadRequest });
+                    self.sessions[s].conn.close();
+                    self.sessions[s].dead = true;
+                }
+            }
+            return;
+        }
+        match req {
+            Request::Hello { .. } => {
+                self.stats.quarantined += 1;
+                self.immediate(s, Response::Err { id: None, kind: ErrKind::BadRequest });
+            }
+            Request::Stats { id } => {
+                self.stats.stats_served += 1;
+                let wire = self.stats.wire();
+                self.immediate(s, Response::Stats { id, stats: wire });
+            }
+            Request::Drain { id } => {
+                self.stats.drains += 1;
+                self.draining = true;
+                self.immediate(s, Response::DrainOk { id });
+            }
+            Request::Infer { id, ttl, bits } => self.handle_infer(s, id, ttl, &bits, now),
+            Request::Learn { id, label, bits } => self.handle_learn(s, id, label, &bits),
+        }
+    }
+
+    /// Read, reassemble and process everything session `s` has for us.
+    fn pump_session(&mut self, s: usize, now: u64) {
+        if self.sessions[s].dead {
+            return;
+        }
+        let mut lines = Vec::new();
+        let mut frame_err = false;
+        {
+            let read_chunk = self.cfg.read_chunk;
+            let sess = &mut self.sessions[s];
+            let mut chunk = Vec::with_capacity(read_chunk);
+            while !sess.eof {
+                chunk.clear();
+                match sess.conn.read_into(&mut chunk, read_chunk) {
+                    ReadOutcome::Data(_) => {
+                        sess.fb.push(&chunk);
+                        match sess.fb.frames() {
+                            Ok(fs) => lines.extend(fs),
+                            Err(_) => {
+                                frame_err = true;
+                                break;
+                            }
+                        }
+                    }
+                    ReadOutcome::WouldBlock => break,
+                    ReadOutcome::Eof => sess.eof = true,
+                }
+            }
+        }
+        for line in lines {
+            if self.sessions[s].dead {
+                break;
+            }
+            self.stats.frames_in += 1;
+            match proto::parse_request(&line) {
+                Ok(req) => self.handle_request(s, req, now),
+                Err(_) => {
+                    frame_err = true;
+                    break;
+                }
+            }
+        }
+        if frame_err && !self.sessions[s].dead {
+            self.stats.frame_errors += 1;
+            self.immediate(s, Response::Err { id: None, kind: ErrKind::Frame });
+            self.sessions[s].conn.close();
+            self.sessions[s].dead = true;
+        }
+    }
+
+    /// One turn of the control loop at virtual tick `now`.
+    pub fn tick(&mut self, now: u64) {
+        self.transport.advance(now);
+        if !self.draining {
+            while let Some(conn) = self.transport.poll_accept() {
+                self.stats.connections += 1;
+                self.sessions.push(Session::new(conn, self.cfg.max_frame_bytes));
+            }
+        }
+        if self.batcher.due(now) {
+            if let Some(batch) = self.batcher.flush() {
+                self.dispatch(batch, now);
+            }
+        }
+        for s in 0..self.sessions.len() {
+            self.pump_session(s, now);
+        }
+        self.route_backend();
+        for sess in &mut self.sessions {
+            sess.conn.flush();
+        }
+    }
+
+    /// Graceful drain: flush the batcher tail (deadline-checked),
+    /// finalize the backend (joins workers, verifies the exactly-once
+    /// audit, checkpoints replicas), answer everything still in flight,
+    /// send every live client a final `bye` stats frame, and close.
+    /// Errors if any admitted request would finish unanswered.
+    pub fn drain(mut self, now: u64) -> Result<(NetReport, T)> {
+        self.draining = true;
+        if let Some(batch) = self.batcher.flush() {
+            self.dispatch(batch, now);
+        }
+        let fin = self.backend.finalize()?;
+        for (gid, class) in fin.responses {
+            if self.fill_slot(gid, SlotFill::Pred(class)) {
+                self.stats.preds += 1;
+            }
+        }
+        for gid in fin.shed {
+            if self.fill_slot(gid, SlotFill::Overload) {
+                self.stats.server_shed += 1;
+            }
+        }
+        if !self.routes.is_empty() {
+            bail!("net: {} admitted requests finished unanswered", self.routes.len());
+        }
+        let bye = Response::Bye { stats: self.stats.wire() };
+        for sess in &mut self.sessions {
+            if sess.conn.writable() {
+                sess.promised += 1;
+                sess.conn.write_frame(bye.encode().as_bytes());
+                sess.conn.flush();
+            }
+            sess.conn.close();
+        }
+        self.transport.advance(now);
+        let report = NetReport {
+            stats: self.stats,
+            outcomes: self.outcomes,
+            replicas: fin.replicas,
+            updates: self.updates,
+        };
+        Ok((report, self.transport))
+    }
+}
+
+/// Drive scripted clients to completion against `backend`: tick from 0
+/// past the last scripted action plus the batcher's budget, then drain.
+/// Fully deterministic in `(backend determinism, scripts, cfg)`.
+pub fn run_sim<B: NetBackend>(
+    backend: B,
+    scripts: Vec<ClientScript>,
+    shape: &TmShape,
+    cfg: NetConfig,
+) -> Result<(NetReport, SimTransport)> {
+    let horizon = scripts_end(&scripts) + cfg.batch.latency_budget + 2;
+    let transport = SimTransport::new(scripts);
+    let mut fe = FrontEnd::new(backend, transport, shape.clone(), cfg)?;
+    let mut now = 0;
+    while now <= horizon {
+        fe.tick(now);
+        if fe.is_draining() {
+            break;
+        }
+        now += 1;
+    }
+    fe.drain(now)
+}
+
+/// Serve real sockets: tick the front end roughly every millisecond
+/// until a client requests drain (or `max_idle_ticks` elapse with no
+/// inbound frames and no open work — the CI drill's safety net).
+pub fn run_tcp<B: NetBackend>(
+    backend: B,
+    transport: TcpTransport,
+    shape: &TmShape,
+    cfg: NetConfig,
+    max_idle_ticks: Option<u64>,
+) -> Result<NetReport> {
+    let mut fe = FrontEnd::new(backend, transport, shape.clone(), cfg)?;
+    let mut now = 0u64;
+    let mut idle = 0u64;
+    loop {
+        let before = fe.stats().frames_in;
+        fe.tick(now);
+        if fe.is_draining() {
+            // A few settle ticks so in-flight shard replies land before
+            // the drain barrier does the final collection.
+            for _ in 0..3 {
+                now += 1;
+                fe.tick(now);
+            }
+            return Ok(fe.drain(now)?.0);
+        }
+        if fe.stats().frames_in == before {
+            idle += 1;
+            if let Some(cap) = max_idle_ticks {
+                if idle > cap {
+                    return Ok(fe.drain(now)?.0);
+                }
+            }
+        } else {
+            idle = 0;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(1));
+        now += 1;
+    }
+}
+
+/// What the loopback drill observed, client-side.
+#[derive(Debug)]
+pub struct DrillReport {
+    pub preds: u64,
+    pub errs: u64,
+    pub stats: WireStats,
+    pub bye: WireStats,
+}
+
+/// The CI loopback drill client: speak the real protocol over a real
+/// socket — hello, `requests` infers, a stats probe, then drain — and
+/// account every response frame until the server's final `bye`.
+pub fn loopback_drill(
+    addr: std::net::SocketAddr,
+    requests: u64,
+    features: usize,
+    seed: u64,
+) -> Result<DrillReport> {
+    use std::io::{BufRead, BufReader, Write};
+    let mut stream = std::net::TcpStream::connect(addr)
+        .with_context(|| format!("drill: connecting {addr}"))?;
+    stream.set_read_timeout(Some(std::time::Duration::from_secs(10))).ok();
+    let mut reader = BufReader::new(stream.try_clone().context("drill: cloning stream")?);
+    let mut rng = Xoshiro256::new(seed);
+
+    let mut expect = |reader: &mut BufReader<std::net::TcpStream>| -> Result<Response> {
+        let mut line = String::new();
+        let n = reader.read_line(&mut line).context("drill: reading response")?;
+        if n == 0 {
+            bail!("drill: server hung up early");
+        }
+        proto::parse_response(line.trim_end())
+    };
+
+    stream.write_all(Request::Hello { version: PROTO_VERSION }.encode().as_bytes())?;
+    match expect(&mut reader)? {
+        Response::HelloOk { version } if version == PROTO_VERSION => {}
+        other => bail!("drill: expected ok hello, got {other:?}"),
+    }
+
+    for cid in 1..=requests {
+        let bits: Vec<bool> = (0..features).map(|_| rng.next_f32() < 0.5).collect();
+        let req = Request::Infer { id: cid, ttl: None, bits };
+        stream.write_all(req.encode().as_bytes())?;
+    }
+    stream.write_all(Request::Stats { id: requests + 1 }.encode().as_bytes())?;
+    stream.write_all(Request::Drain { id: requests + 2 }.encode().as_bytes())?;
+
+    let mut preds = 0u64;
+    let mut errs = 0u64;
+    let mut stats = None;
+    let mut bye = None;
+    while bye.is_none() {
+        match expect(&mut reader)? {
+            Response::Pred { .. } => preds += 1,
+            Response::Err { .. } => errs += 1,
+            Response::Stats { stats: s, .. } => stats = Some(s),
+            Response::DrainOk { .. } => {}
+            Response::Bye { stats: s } => bye = Some(s),
+            other => bail!("drill: unexpected frame {other:?}"),
+        }
+    }
+    Ok(DrillReport {
+        preds,
+        errs,
+        stats: stats.context("drill: no stats frame seen")?,
+        bye: bye.expect("loop exits only with bye"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::sim::ClientOp;
+    use crate::serve::ScalarOracle;
+    use crate::tm::params::TmParams;
+
+    fn oracle() -> (ScalarOracle, TmShape) {
+        let s = TmShape::iris();
+        let p = TmParams::paper_online(&s);
+        let mut rng = Xoshiro256::new(0x0E0E);
+        let tm = crate::testkit::gen::machine(&mut rng, &s);
+        (ScalarOracle::new(tm, p, 0xBA5E), s)
+    }
+
+    fn send(at: u64, req: Request) -> ClientOp {
+        ClientOp::Send { at, bytes: req.encode().into_bytes() }
+    }
+
+    fn bits(s: &TmShape, seed: u64) -> Vec<bool> {
+        let mut rng = Xoshiro256::new(seed);
+        (0..s.features).map(|_| rng.next_f32() < 0.5).collect()
+    }
+
+    #[test]
+    fn healthy_session_end_to_end() {
+        let (oracle, s) = oracle();
+        let scripts = vec![ClientScript {
+            connect_at: 0,
+            ops: vec![
+                ClientOp::ReadAllow { at: 0, frames: 100 },
+                send(0, Request::Hello { version: 1 }),
+                send(1, Request::Infer { id: 1, ttl: None, bits: bits(&s, 1) }),
+                send(2, Request::Learn { id: 2, label: 1, bits: bits(&s, 2) }),
+                send(3, Request::Infer { id: 3, ttl: None, bits: bits(&s, 3) }),
+                send(4, Request::Stats { id: 4 }),
+            ],
+        }];
+        let cfg = NetConfig {
+            batch: BatcherConfig { max_batch: 8, latency_budget: 2, ..Default::default() },
+            ..Default::default()
+        };
+        let (report, tr) = run_sim(oracle, scripts, &s, cfg).unwrap();
+        assert_eq!(report.stats.infers, 2);
+        assert_eq!(report.stats.learns, 1);
+        assert_eq!(report.stats.preds, 2);
+        assert_eq!(report.stats.quarantined, 0);
+        assert_eq!(report.stats.frame_errors, 0);
+        assert!(matches!(report.outcomes[&(0, 1)], Outcome::Pred(_)));
+        assert_eq!(report.outcomes[&(0, 2)], Outcome::LearnAck(1));
+        assert!(matches!(report.outcomes[&(0, 3)], Outcome::Pred(_)));
+        let delivered = tr.delivered(0);
+        assert_eq!(delivered[0], Response::HelloOk { version: 1 }.encode());
+        // Responses: hello-ok, learn-ok (immediate), two preds in
+        // request order, stats, bye.
+        assert_eq!(delivered.len(), 6);
+        assert!(delivered[1].starts_with("ok id=2 seq=1"));
+        assert!(delivered.last().unwrap().starts_with("bye "));
+        let pred_lines: Vec<&String> =
+            delivered.iter().filter(|l| l.starts_with("pred")).collect();
+        assert!(pred_lines[0].starts_with("pred id=1 "));
+        assert!(pred_lines[1].starts_with("pred id=3 "));
+    }
+
+    #[test]
+    fn deadline_budget_expires_with_typed_response() {
+        let (oracle, s) = oracle();
+        // Budget 2 but the batch sits for 6 ticks (latency budget), so
+        // the first request expires; the second (ttl 100) survives.
+        let scripts = vec![ClientScript {
+            connect_at: 0,
+            ops: vec![
+                ClientOp::ReadAllow { at: 0, frames: 100 },
+                send(0, Request::Hello { version: 1 }),
+                send(1, Request::Infer { id: 1, ttl: Some(2), bits: bits(&s, 1) }),
+                send(1, Request::Infer { id: 2, ttl: Some(100), bits: bits(&s, 2) }),
+            ],
+        }];
+        let cfg = NetConfig {
+            batch: BatcherConfig { max_batch: 8, latency_budget: 6, ..Default::default() },
+            ..Default::default()
+        };
+        let (report, tr) = run_sim(oracle, scripts, &s, cfg).unwrap();
+        assert_eq!(report.stats.deadline_expired, 1);
+        assert_eq!(report.stats.preds, 1);
+        assert_eq!(report.outcomes[&(0, 1)], Outcome::DeadlineExpired);
+        assert!(matches!(report.outcomes[&(0, 2)], Outcome::Pred(_)));
+        // In-order release: the deadline err for id 1 precedes the pred
+        // for id 2.
+        let delivered = tr.delivered(0);
+        let i_err = delivered.iter().position(|l| l.starts_with("err id=1")).unwrap();
+        let i_pred = delivered.iter().position(|l| l.starts_with("pred id=2")).unwrap();
+        assert!(i_err < i_pred);
+        assert!(delivered[i_err].contains("kind=deadline"));
+    }
+
+    #[test]
+    fn version_negotiation_and_missing_hello() {
+        let (oracle, s) = oracle();
+        let scripts = vec![
+            ClientScript {
+                connect_at: 0,
+                ops: vec![
+                    ClientOp::ReadAllow { at: 0, frames: 10 },
+                    send(0, Request::Hello { version: 9 }),
+                ],
+            },
+            ClientScript {
+                connect_at: 1,
+                ops: vec![
+                    ClientOp::ReadAllow { at: 1, frames: 10 },
+                    send(1, Request::Stats { id: 1 }),
+                ],
+            },
+        ];
+        let (report, tr) = run_sim(oracle, scripts, &s, NetConfig::default()).unwrap();
+        assert_eq!(report.stats.connections, 2);
+        assert!(tr.delivered(0)[0].starts_with("err kind=version"));
+        assert!(tr.delivered(1)[0].starts_with("err kind=bad-request"));
+        assert_eq!(report.stats.quarantined, 1);
+    }
+
+    #[test]
+    fn hostile_frames_are_capped_and_typed() {
+        let (oracle, s) = oracle();
+        let scripts = vec![
+            // A 200-byte line against a 128-byte cap, no newline.
+            ClientScript {
+                connect_at: 0,
+                ops: vec![
+                    ClientOp::ReadAllow { at: 0, frames: 10 },
+                    send(0, Request::Hello { version: 1 }),
+                    ClientOp::Send { at: 1, bytes: vec![b'x'; 200] },
+                ],
+            },
+            // Unparseable verb.
+            ClientScript {
+                connect_at: 0,
+                ops: vec![
+                    ClientOp::ReadAllow { at: 0, frames: 10 },
+                    send(0, Request::Hello { version: 1 }),
+                    ClientOp::Send { at: 1, bytes: b"explode id=1\n".to_vec() },
+                ],
+            },
+        ];
+        let cfg = NetConfig { max_frame_bytes: 128, ..Default::default() };
+        let (report, tr) = run_sim(oracle, scripts, &s, cfg).unwrap();
+        assert_eq!(report.stats.frame_errors, 2);
+        for c in 0..2 {
+            let delivered = tr.delivered(c);
+            assert!(
+                delivered.iter().any(|l| l.starts_with("err kind=frame")),
+                "client {c} got {delivered:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn slow_client_is_shed_and_admission_rejects() {
+        let (oracle, s) = oracle();
+        // Client grants only 2 frames ever; hello-ok consumes part of
+        // the window, then debt builds until the cap (3) sheds.
+        let mut ops = vec![
+            ClientOp::ReadAllow { at: 0, frames: 2 },
+            send(0, Request::Hello { version: 1 }),
+        ];
+        for cid in 1..=8 {
+            let req = Request::Infer { id: cid, ttl: None, bits: bits(&s, cid) };
+            ops.push(send(1 + cid, req));
+        }
+        let scripts = vec![ClientScript { connect_at: 0, ops }];
+        let cfg = NetConfig {
+            batch: BatcherConfig { max_batch: 1, latency_budget: 0, ..Default::default() },
+            write_buffer_cap: 3,
+            max_in_flight: 100,
+            ..Default::default()
+        };
+        let (report, _tr) = run_sim(oracle, scripts, &s, cfg).unwrap();
+        // Debt: promised rises with hello + preds while granted stays
+        // at 2 → once debt hits 3, every later request is shed.
+        assert!(report.stats.shed_requests > 0, "slow client never shed: {:?}", report.stats);
+        assert_eq!(
+            report.stats.infers + report.stats.shed_requests,
+            8,
+            "every request accounted exactly once: {:?}",
+            report.stats
+        );
+        let sheds = report
+            .outcomes
+            .values()
+            .filter(|o| matches!(o, Outcome::SlowShed))
+            .count() as u64;
+        assert_eq!(sheds, report.stats.shed_requests);
+
+        // Same shape, but a tiny global ceiling: admission rejects with
+        // a typed answer instead of silence.
+        let (oracle2, _) = oracle_pair();
+        let mut ops = vec![
+            ClientOp::ReadAllow { at: 0, frames: 1 }, // hello consumes it
+            send(0, Request::Hello { version: 1 }),
+        ];
+        for cid in 1..=5 {
+            let req = Request::Infer { id: cid, ttl: None, bits: bits(&s, cid) };
+            ops.push(send(1 + cid, req));
+        }
+        ops.push(ClientOp::ReadAllow { at: 20, frames: 100 });
+        let scripts = vec![ClientScript { connect_at: 0, ops }];
+        let cfg = NetConfig {
+            batch: BatcherConfig { max_batch: 1, latency_budget: 0, ..Default::default() },
+            write_buffer_cap: 100,
+            max_in_flight: 2,
+            ..Default::default()
+        };
+        let (report, tr) = run_sim(oracle2, scripts, &s, cfg).unwrap();
+        assert!(report.stats.admission_rejected > 0, "{:?}", report.stats);
+        assert!(tr.delivered(0).iter().any(|l| l.contains("kind=admission")));
+    }
+
+    fn oracle_pair() -> (ScalarOracle, TmShape) {
+        oracle()
+    }
+
+    #[test]
+    fn drain_request_stops_intake_and_says_bye() {
+        let (oracle, s) = oracle();
+        let scripts = vec![ClientScript {
+            connect_at: 0,
+            ops: vec![
+                ClientOp::ReadAllow { at: 0, frames: 100 },
+                send(0, Request::Hello { version: 1 }),
+                send(1, Request::Infer { id: 1, ttl: None, bits: bits(&s, 1) }),
+                send(2, Request::Drain { id: 2 }),
+            ],
+        }];
+        let (report, tr) = run_sim(oracle, scripts, &s, NetConfig::default()).unwrap();
+        assert_eq!(report.stats.drains, 1);
+        assert_eq!(report.stats.preds, 1, "in-flight work is answered before close");
+        let delivered = tr.delivered(0);
+        assert!(delivered.iter().any(|l| l.starts_with("ok drain id=2")));
+        let bye = delivered.last().unwrap();
+        assert!(bye.starts_with("bye "), "final frame is the stats bye, got {bye:?}");
+        let parsed = proto::parse_response(bye.trim_end()).unwrap();
+        match parsed {
+            Response::Bye { stats } => {
+                assert_eq!(stats.infers, 1);
+                assert_eq!(stats.preds, 1);
+            }
+            other => panic!("expected bye, got {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,34 @@
+//! Network-facing serving front end.
+//!
+//! Layers, bottom up:
+//!
+//! - [`proto`] — the line-delimited, versioned request/response wire
+//!   protocol and the allocation-bounded [`proto::FrameBuffer`].
+//! - [`transport`] — the [`transport::Transport`] / byte-connection
+//!   boundary, with the real non-blocking TCP implementation.
+//! - [`sim`] — the deterministic in-memory transport: scripted clients
+//!   on the virtual clock, including connection-level chaos (torn
+//!   frames, half-open peers, hard disconnects, slow-loris readers,
+//!   floods) generated from a seeded [`crate::serve::NetChaosPlan`].
+//! - [`frontend`] — the control loop tying a transport to a
+//!   [`crate::serve::NetBackend`]: sessions, admission control,
+//!   deadline budgets, debt-based backpressure and graceful drain.
+//!
+//! The same [`frontend::FrontEnd`] drives all transport × backend
+//! pairings, which is what lets the network chaos soak
+//! (`coordinator::soak::run_net_soak`) demand bit-identical behaviour
+//! from the sharded server and the scalar oracle under identical
+//! scripted abuse.
+
+pub mod frontend;
+pub mod proto;
+pub mod sim;
+pub mod transport;
+
+pub use frontend::{
+    loopback_drill, run_sim, run_tcp, DrillReport, FrontEnd, NetConfig, NetReport, NetStats,
+    Outcome,
+};
+pub use proto::{ErrKind, FrameBuffer, Request, Response, WireStats, PROTO_VERSION};
+pub use sim::{seeded_scripts, ClientOp, ClientScript, ScriptConfig, SimTransport};
+pub use transport::{NetConn, ReadOutcome, TcpTransport, Transport};

@@ -1,0 +1,531 @@
+//! The line-delimited, versioned wire protocol of the serving front
+//! end.
+//!
+//! One frame per `\n`-terminated ASCII line, `verb key=value ...`. The
+//! first frame on every connection must be `hello v=1`; the server
+//! answers `ok hello v=1` (or a typed `err kind=version` and a close —
+//! version negotiation is explicit, never silent). Requests carry a
+//! client-chosen per-connection id echoed on the response, so a client
+//! can pipeline freely; the front end releases `infer` responses in
+//! request order per connection regardless of shard completion order.
+//!
+//! ```text
+//! -> hello v=1                          <- ok hello v=1
+//! -> infer id=7 ttl=5 bits=0110...      <- pred id=7 class=2
+//! -> learn id=8 label=1 bits=0011...    <- ok id=8 seq=42
+//! -> stats id=9                         <- stats id=9 infers=.. ...
+//! -> drain id=10                        <- ok drain id=10 … bye infers=.. ...
+//! any rejected request                  <- err id=N kind=<reason>
+//! ```
+//!
+//! Parsing is **paranoid by design**: [`FrameBuffer`] bounds how many
+//! bytes a connection may accumulate without producing a newline, so a
+//! hostile peer can never force an unbounded allocation; every line is
+//! tokenized strictly (unknown verbs, unknown keys, duplicate or
+//! missing fields, non-digit values and non-ASCII bytes are all typed
+//! errors). Field *semantics* (bit-width vs the served model, label
+//! range, admission) are the front end's job — this module only
+//! guarantees that what comes out of a parse is structurally sound and
+//! cost-bounded.
+
+use anyhow::{anyhow, bail, Result};
+
+/// The one protocol version this build speaks.
+pub const PROTO_VERSION: u32 = 1;
+
+/// A parsed client request.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Request {
+    /// Mandatory first frame: version negotiation.
+    Hello { version: u32 },
+    /// Score one sample. `ttl` is a per-request deadline budget in
+    /// virtual ticks (absent = the front end's default).
+    Infer { id: u64, ttl: Option<u64>, bits: Vec<bool> },
+    /// One online training step.
+    Learn { id: u64, label: usize, bits: Vec<bool> },
+    /// Counter snapshot.
+    Stats { id: u64 },
+    /// Begin graceful drain: stop accepting, flush, checkpoint, close.
+    Drain { id: u64 },
+}
+
+/// Why a request was rejected — every rejection is typed and answered,
+/// never a silent drop.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrKind {
+    /// The request's deadline budget expired before dispatch.
+    Deadline,
+    /// The admission controller's in-flight depth is exhausted.
+    Admission,
+    /// Structurally valid frame, semantically unusable (wrong bit
+    /// width, label out of range, duplicate id, missing hello).
+    BadRequest,
+    /// Unsupported protocol version in `hello`.
+    Version,
+    /// Unparseable or oversized frame (connection is closed after).
+    Frame,
+    /// The server is draining and accepts no new work.
+    Draining,
+    /// Dispatched but shed by the degraded backend under overload.
+    Overload,
+}
+
+impl ErrKind {
+    fn as_str(self) -> &'static str {
+        match self {
+            ErrKind::Deadline => "deadline",
+            ErrKind::Admission => "admission",
+            ErrKind::BadRequest => "bad-request",
+            ErrKind::Version => "version",
+            ErrKind::Frame => "frame",
+            ErrKind::Draining => "draining",
+            ErrKind::Overload => "overload",
+        }
+    }
+
+    fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "deadline" => ErrKind::Deadline,
+            "admission" => ErrKind::Admission,
+            "bad-request" => ErrKind::BadRequest,
+            "version" => ErrKind::Version,
+            "frame" => ErrKind::Frame,
+            "draining" => ErrKind::Draining,
+            "overload" => ErrKind::Overload,
+            other => bail!("proto: unknown err kind {other:?}"),
+        })
+    }
+}
+
+/// The counters a `stats` response and the final `bye` frame carry.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WireStats {
+    pub infers: u64,
+    pub learns: u64,
+    pub preds: u64,
+    pub shed: u64,
+    pub deadline: u64,
+    pub admission: u64,
+    pub quarantined: u64,
+    pub frame_errors: u64,
+}
+
+impl WireStats {
+    fn encode_fields(&self, out: &mut String) {
+        use std::fmt::Write;
+        let _ = write!(
+            out,
+            "infers={} learns={} preds={} shed={} deadline={} admission={} quarantined={} \
+             frame_errors={}",
+            self.infers,
+            self.learns,
+            self.preds,
+            self.shed,
+            self.deadline,
+            self.admission,
+            self.quarantined,
+            self.frame_errors
+        );
+    }
+}
+
+/// A server response frame.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Response {
+    HelloOk { version: u32 },
+    Pred { id: u64, class: usize },
+    LearnOk { id: u64, seq: u64 },
+    DrainOk { id: u64 },
+    Stats { id: u64, stats: WireStats },
+    Err { id: Option<u64>, kind: ErrKind },
+    /// The final frame of a graceful drain, after which the connection
+    /// closes.
+    Bye { stats: WireStats },
+}
+
+impl Request {
+    /// Wire form, newline-terminated.
+    pub fn encode(&self) -> String {
+        let mut s = match self {
+            Request::Hello { version } => format!("hello v={version}"),
+            Request::Infer { id, ttl, bits } => {
+                let mut s = format!("infer id={id}");
+                if let Some(t) = ttl {
+                    s.push_str(&format!(" ttl={t}"));
+                }
+                s.push_str(" bits=");
+                push_bits(&mut s, bits);
+                s
+            }
+            Request::Learn { id, label, bits } => {
+                let mut s = format!("learn id={id} label={label} bits=");
+                push_bits(&mut s, bits);
+                s
+            }
+            Request::Stats { id } => format!("stats id={id}"),
+            Request::Drain { id } => format!("drain id={id}"),
+        };
+        s.push('\n');
+        s
+    }
+}
+
+impl Response {
+    /// Wire form, newline-terminated.
+    pub fn encode(&self) -> String {
+        let mut s = match self {
+            Response::HelloOk { version } => format!("ok hello v={version}"),
+            Response::Pred { id, class } => format!("pred id={id} class={class}"),
+            Response::LearnOk { id, seq } => format!("ok id={id} seq={seq}"),
+            Response::DrainOk { id } => format!("ok drain id={id}"),
+            Response::Stats { id, stats } => {
+                let mut s = format!("stats id={id} ");
+                stats.encode_fields(&mut s);
+                s
+            }
+            Response::Err { id, kind } => match id {
+                Some(id) => format!("err id={id} kind={}", kind.as_str()),
+                None => format!("err kind={}", kind.as_str()),
+            },
+            Response::Bye { stats } => {
+                let mut s = "bye ".to_string();
+                stats.encode_fields(&mut s);
+                s
+            }
+        };
+        s.push('\n');
+        s
+    }
+}
+
+fn push_bits(s: &mut String, bits: &[bool]) {
+    s.reserve(bits.len());
+    for &b in bits {
+        s.push(if b { '1' } else { '0' });
+    }
+}
+
+/// Strict key=value field collector: every key consumed at most once,
+/// unknown keys rejected, leftovers rejected.
+struct Fields<'a> {
+    pairs: Vec<(&'a str, &'a str)>,
+}
+
+impl<'a> Fields<'a> {
+    fn parse(tokens: std::str::SplitAsciiWhitespace<'a>) -> Result<Self> {
+        let mut pairs = Vec::new();
+        for tok in tokens {
+            let (k, v) = tok
+                .split_once('=')
+                .ok_or_else(|| anyhow!("proto: token {tok:?} is not key=value"))?;
+            if v.is_empty() {
+                bail!("proto: empty value for key {k:?}");
+            }
+            if pairs.iter().any(|&(pk, _)| pk == k) {
+                bail!("proto: duplicate key {k:?}");
+            }
+            pairs.push((k, v));
+        }
+        Ok(Fields { pairs })
+    }
+
+    fn take(&mut self, key: &str) -> Option<&'a str> {
+        let i = self.pairs.iter().position(|&(k, _)| k == key)?;
+        Some(self.pairs.remove(i).1)
+    }
+
+    fn want(&mut self, key: &str) -> Result<&'a str> {
+        self.take(key).ok_or_else(|| anyhow!("proto: missing key {key:?}"))
+    }
+
+    fn finish(self) -> Result<()> {
+        if let Some((k, _)) = self.pairs.first() {
+            bail!("proto: unknown key {k:?}");
+        }
+        Ok(())
+    }
+}
+
+fn parse_u64(v: &str) -> Result<u64> {
+    if v.len() > 20 || !v.bytes().all(|b| b.is_ascii_digit()) {
+        bail!("proto: {v:?} is not an unsigned integer");
+    }
+    v.parse::<u64>().map_err(|_| anyhow!("proto: integer {v:?} out of range"))
+}
+
+fn parse_bits(v: &str) -> Result<Vec<bool>> {
+    v.bytes()
+        .map(|b| match b {
+            b'0' => Ok(false),
+            b'1' => Ok(true),
+            _ => bail!("proto: bits must be 0/1, got byte {b:#04x}"),
+        })
+        .collect()
+}
+
+/// Parse one request line (no trailing newline). Errors are frame-level
+/// (`err kind=frame` territory): the caller decides whether to answer
+/// or hang up, but a failed parse never partially applies.
+pub fn parse_request(line: &str) -> Result<Request> {
+    let mut tokens = line.split_ascii_whitespace();
+    let verb = tokens.next().ok_or_else(|| anyhow!("proto: empty frame"))?;
+    let mut f = Fields::parse(tokens)?;
+    let req = match verb {
+        "hello" => Request::Hello { version: parse_u64(f.want("v")?)? as u32 },
+        "infer" => Request::Infer {
+            id: parse_u64(f.want("id")?)?,
+            ttl: f.take("ttl").map(parse_u64).transpose()?,
+            bits: parse_bits(f.want("bits")?)?,
+        },
+        "learn" => Request::Learn {
+            id: parse_u64(f.want("id")?)?,
+            label: parse_u64(f.want("label")?)? as usize,
+            bits: parse_bits(f.want("bits")?)?,
+        },
+        "stats" => Request::Stats { id: parse_u64(f.want("id")?)? },
+        "drain" => Request::Drain { id: parse_u64(f.want("id")?)? },
+        other => bail!("proto: unknown verb {other:?}"),
+    };
+    f.finish()?;
+    Ok(req)
+}
+
+/// Parse one response line (no trailing newline) — the client half,
+/// used by the loopback drill and the tests.
+pub fn parse_response(line: &str) -> Result<Response> {
+    let mut tokens = line.split_ascii_whitespace();
+    let verb = tokens.next().ok_or_else(|| anyhow!("proto: empty frame"))?;
+    let sub = match verb {
+        "ok" => {
+            let mut peek = tokens.clone();
+            match peek.next() {
+                Some("hello") => {
+                    tokens.next();
+                    Some("hello")
+                }
+                Some("drain") => {
+                    tokens.next();
+                    Some("drain")
+                }
+                _ => None,
+            }
+        }
+        _ => None,
+    };
+    let mut f = Fields::parse(tokens)?;
+    let parse_stats = |f: &mut Fields| -> Result<WireStats> {
+        Ok(WireStats {
+            infers: parse_u64(f.want("infers")?)?,
+            learns: parse_u64(f.want("learns")?)?,
+            preds: parse_u64(f.want("preds")?)?,
+            shed: parse_u64(f.want("shed")?)?,
+            deadline: parse_u64(f.want("deadline")?)?,
+            admission: parse_u64(f.want("admission")?)?,
+            quarantined: parse_u64(f.want("quarantined")?)?,
+            frame_errors: parse_u64(f.want("frame_errors")?)?,
+        })
+    };
+    let resp = match (verb, sub) {
+        ("ok", Some("hello")) => Response::HelloOk { version: parse_u64(f.want("v")?)? as u32 },
+        ("ok", Some("drain")) => Response::DrainOk { id: parse_u64(f.want("id")?)? },
+        ("ok", None) => Response::LearnOk {
+            id: parse_u64(f.want("id")?)?,
+            seq: parse_u64(f.want("seq")?)?,
+        },
+        ("pred", _) => Response::Pred {
+            id: parse_u64(f.want("id")?)?,
+            class: parse_u64(f.want("class")?)? as usize,
+        },
+        ("stats", _) => {
+            Response::Stats { id: parse_u64(f.want("id")?)?, stats: parse_stats(&mut f)? }
+        }
+        ("err", _) => Response::Err {
+            id: f.take("id").map(parse_u64).transpose()?,
+            kind: ErrKind::parse(f.want("kind")?)?,
+        },
+        ("bye", _) => Response::Bye { stats: parse_stats(&mut f)? },
+        (other, _) => bail!("proto: unknown verb {other:?}"),
+    };
+    f.finish()?;
+    Ok(resp)
+}
+
+/// Reassembles newline-delimited frames from arbitrarily torn byte
+/// slivers, under a hard per-line byte cap: the moment the unterminated
+/// tail exceeds `max_frame_bytes`, the buffer errors — a hostile peer
+/// streaming garbage without newlines costs at most one cap's worth of
+/// memory, never an unbounded allocation.
+#[derive(Debug)]
+pub struct FrameBuffer {
+    buf: Vec<u8>,
+    max_frame_bytes: usize,
+}
+
+impl FrameBuffer {
+    pub fn new(max_frame_bytes: usize) -> Self {
+        FrameBuffer { buf: Vec::new(), max_frame_bytes }
+    }
+
+    /// Append raw bytes (any fragmentation).
+    pub fn push(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Drain every complete line, then enforce the cap on what remains:
+    /// an unterminated tail longer than the cap (or a non-UTF-8 line)
+    /// is a frame error. Call after every `push` so the buffer can
+    /// never hold more than one cap plus one read chunk.
+    pub fn frames(&mut self) -> Result<Vec<String>> {
+        let mut out = Vec::new();
+        while let Some(pos) = self.buf.iter().position(|&b| b == b'\n') {
+            let line: Vec<u8> = self.buf.drain(..=pos).collect();
+            let line = &line[..line.len() - 1];
+            if line.len() > self.max_frame_bytes {
+                bail!(
+                    "proto: frame of {} bytes exceeds the {}-byte cap",
+                    line.len(),
+                    self.max_frame_bytes
+                );
+            }
+            let line = std::str::from_utf8(line)
+                .map_err(|_| anyhow!("proto: frame is not valid UTF-8"))?;
+            out.push(line.to_string());
+        }
+        if self.buf.len() > self.max_frame_bytes {
+            bail!(
+                "proto: unterminated frame already {} bytes, cap is {}",
+                self.buf.len(),
+                self.max_frame_bytes
+            );
+        }
+        Ok(out)
+    }
+
+    /// Bytes currently buffered without a terminating newline.
+    pub fn pending(&self) -> usize {
+        self.buf.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip_req(req: Request) {
+        let wire = req.encode();
+        assert!(wire.ends_with('\n'));
+        assert_eq!(parse_request(wire.trim_end()).unwrap(), req, "wire: {wire:?}");
+    }
+
+    fn roundtrip_resp(resp: Response) {
+        let wire = resp.encode();
+        assert!(wire.ends_with('\n'));
+        assert_eq!(parse_response(wire.trim_end()).unwrap(), resp, "wire: {wire:?}");
+    }
+
+    #[test]
+    fn requests_roundtrip() {
+        roundtrip_req(Request::Hello { version: 1 });
+        roundtrip_req(Request::Infer { id: 7, ttl: Some(5), bits: vec![true, false, true] });
+        roundtrip_req(Request::Infer { id: 8, ttl: None, bits: vec![false; 16] });
+        roundtrip_req(Request::Learn { id: 9, label: 2, bits: vec![true; 4] });
+        roundtrip_req(Request::Stats { id: 10 });
+        roundtrip_req(Request::Drain { id: u64::MAX });
+    }
+
+    #[test]
+    fn responses_roundtrip() {
+        let stats = WireStats {
+            infers: 1,
+            learns: 2,
+            preds: 3,
+            shed: 4,
+            deadline: 5,
+            admission: 6,
+            quarantined: 7,
+            frame_errors: 8,
+        };
+        roundtrip_resp(Response::HelloOk { version: 1 });
+        roundtrip_resp(Response::Pred { id: 3, class: 2 });
+        roundtrip_resp(Response::LearnOk { id: 4, seq: 17 });
+        roundtrip_resp(Response::DrainOk { id: 11 });
+        roundtrip_resp(Response::Stats { id: 9, stats });
+        for kind in [
+            ErrKind::Deadline,
+            ErrKind::Admission,
+            ErrKind::BadRequest,
+            ErrKind::Version,
+            ErrKind::Frame,
+            ErrKind::Draining,
+            ErrKind::Overload,
+        ] {
+            roundtrip_resp(Response::Err { id: Some(5), kind });
+            roundtrip_resp(Response::Err { id: None, kind });
+        }
+        roundtrip_resp(Response::Bye { stats });
+    }
+
+    #[test]
+    fn hostile_lines_are_typed_errors() {
+        for bad in [
+            "",
+            "zap id=1",
+            "infer id=1",                        // missing bits
+            "infer id=1 bits=01 bits=10",        // duplicate key
+            "infer id=1 bits=01 color=red",      // unknown key
+            "infer id=x bits=01",                // non-numeric id
+            "infer id=1 bits=012",               // non-binary bit
+            "infer id=99999999999999999999999999 bits=0", // overlong integer
+            "infer id= bits=01",                 // empty value
+            "learn id=1 bits=01",                // missing label
+            "hello",                             // missing version
+        ] {
+            assert!(parse_request(bad).is_err(), "parsed hostile line {bad:?}");
+        }
+        assert!(parse_response("ok id=1").is_err(), "missing seq");
+        assert!(parse_response("err id=1 kind=sideways").is_err());
+        assert!(parse_response("bye infers=1").is_err(), "truncated stats");
+    }
+
+    #[test]
+    fn frame_buffer_reassembles_torn_frames() {
+        let mut fb = FrameBuffer::new(64);
+        let wire = Request::Infer { id: 3, ttl: None, bits: vec![true, false] }.encode();
+        // One byte per push: the torn-frame worst case.
+        let mut got = Vec::new();
+        for b in wire.as_bytes() {
+            fb.push(std::slice::from_ref(b));
+            got.extend(fb.frames().unwrap());
+        }
+        assert_eq!(got.len(), 1);
+        assert_eq!(
+            parse_request(&got[0]).unwrap(),
+            Request::Infer { id: 3, ttl: None, bits: vec![true, false] }
+        );
+        assert_eq!(fb.pending(), 0);
+        // Two frames in one sliver.
+        fb.push(b"stats id=1\nstats id=2\nsta");
+        let two = fb.frames().unwrap();
+        assert_eq!(two, vec!["stats id=1".to_string(), "stats id=2".to_string()]);
+        assert_eq!(fb.pending(), 3);
+    }
+
+    #[test]
+    fn frame_buffer_caps_hostile_streams() {
+        // No newline at all: errors as soon as the tail passes the cap.
+        let mut fb = FrameBuffer::new(16);
+        fb.push(&[b'a'; 16]);
+        assert!(fb.frames().is_ok(), "at the cap is still legal");
+        fb.push(b"a");
+        assert!(fb.frames().is_err(), "one past the cap errors");
+        // A terminated line past the cap errors too.
+        let mut fb = FrameBuffer::new(16);
+        fb.push(&[b'b'; 30]);
+        fb.push(b"\n");
+        assert!(fb.frames().is_err());
+        // Non-UTF-8 is a frame error, not a panic.
+        let mut fb = FrameBuffer::new(16);
+        fb.push(&[0xFF, 0xFE, b'\n']);
+        assert!(fb.frames().is_err());
+    }
+}

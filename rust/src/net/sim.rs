@@ -1,0 +1,461 @@
+//! The deterministic in-memory transport: scripted clients on the
+//! virtual clock.
+//!
+//! Every connection-level failure mode the front end must survive —
+//! torn frames, half-open peers, disconnects mid-response, slow-loris
+//! readers, floods — is expressed as a [`ClientScript`]: a connect tick
+//! plus a list of tick-stamped [`ClientOp`]s. [`SimTransport::advance`]
+//! replays the scripts against the clock, so the byte stream the front
+//! end sees (and the read window each client grants) is a pure function
+//! of `(scripts, tick)` — which is what lets `run_net_soak` drive the
+//! sharded server and the scalar oracle through *bit-identical*
+//! connection chaos and compare outcomes exactly.
+//!
+//! The one determinism subtlety lives in [`NetConn::granted`]: the
+//! simulator reports the *scripted* cumulative read window, not the
+//! frames actually handed over. Actual delivery depends on when the
+//! backend produced a response (arm-dependent under faults); the window
+//! is script-only. Every backpressure and admission decision therefore
+//! computes identically in both soak arms, while delivered-frame
+//! assertions remain available per client for the tests that want them.
+
+use crate::net::proto::Request;
+use crate::net::transport::{NetConn, ReadOutcome, Transport};
+use crate::serve::chaos::{NetChaosPlan, NetFault};
+use crate::tm::rng::Xoshiro256;
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::rc::Rc;
+
+/// One scripted action of a simulated client.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ClientOp {
+    /// Put bytes on the wire at `at` — any fragmentation; a frame torn
+    /// across several `Send`s (and ticks) arrives exactly that torn.
+    Send { at: u64, bytes: Vec<u8> },
+    /// Grant the server a window of `frames` further response frames.
+    ReadAllow { at: u64, frames: u64 },
+    /// Half-open from `at`: the client's write side goes silent (no
+    /// more `Send`s take effect, EOF after the buffer drains) while its
+    /// read side keeps consuming responses.
+    CloseWrite { at: u64 },
+    /// Hard disconnect at `at`: nothing further is sent, received or
+    /// granted; frames queued toward this client are dropped.
+    Abort { at: u64 },
+}
+
+impl ClientOp {
+    pub fn at(&self) -> u64 {
+        match self {
+            ClientOp::Send { at, .. }
+            | ClientOp::ReadAllow { at, .. }
+            | ClientOp::CloseWrite { at }
+            | ClientOp::Abort { at } => *at,
+        }
+    }
+}
+
+/// A simulated client: when it connects and everything it ever does.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ClientScript {
+    pub connect_at: u64,
+    pub ops: Vec<ClientOp>,
+}
+
+impl ClientScript {
+    /// Last tick at which this script does anything.
+    pub fn end(&self) -> u64 {
+        self.ops.iter().map(ClientOp::at).max().unwrap_or(self.connect_at)
+    }
+}
+
+/// Shared per-client endpoint state (transport and conn halves).
+#[derive(Debug, Default)]
+struct Endpoint {
+    /// Bytes sent by the client, not yet read by the server.
+    inbound: VecDeque<u8>,
+    /// Frames queued by the server, not yet consumed by the client.
+    outbound: VecDeque<Vec<u8>>,
+    /// Cumulative scripted read window.
+    allowance: u64,
+    /// Frames the client has actually consumed (delivery record).
+    delivered: Vec<String>,
+    /// Frames dropped because the connection was gone.
+    dropped: u64,
+    write_closed: bool,
+    aborted: bool,
+    /// Server-side hangup.
+    server_closed: bool,
+}
+
+impl Endpoint {
+    /// Hand queued frames to the client as far as its window reaches.
+    fn pump(&mut self) {
+        while !self.aborted && (self.delivered.len() as u64) < self.allowance {
+            let Some(frame) = self.outbound.pop_front() else { break };
+            self.delivered.push(String::from_utf8_lossy(&frame).into_owned());
+        }
+    }
+}
+
+/// The scripted transport: replays [`ClientScript`]s on the virtual
+/// clock. Clients are accepted in index order on their connect tick.
+pub struct SimTransport {
+    scripts: Vec<ClientScript>,
+    endpoints: Vec<Rc<RefCell<Endpoint>>>,
+    /// Per client, how many ops have been replayed.
+    cursor: Vec<usize>,
+    /// Clients whose connect tick has arrived but which were not yet
+    /// accepted.
+    pending_accept: VecDeque<usize>,
+    connected: Vec<bool>,
+    now: u64,
+}
+
+impl SimTransport {
+    pub fn new(scripts: Vec<ClientScript>) -> Self {
+        let n = scripts.len();
+        SimTransport {
+            scripts,
+            endpoints: (0..n).map(|_| Rc::new(RefCell::new(Endpoint::default()))).collect(),
+            cursor: vec![0; n],
+            pending_accept: VecDeque::new(),
+            connected: vec![false; n],
+            now: 0,
+        }
+    }
+
+    /// Delivery record of client `i` — the frames it consumed, in
+    /// order.
+    pub fn delivered(&self, i: usize) -> Vec<String> {
+        self.endpoints[i].borrow().delivered.clone()
+    }
+
+    /// Frames dropped toward client `i` (aborted connection).
+    pub fn dropped(&self, i: usize) -> u64 {
+        self.endpoints[i].borrow().dropped
+    }
+}
+
+impl Transport for SimTransport {
+    type Conn = SimConn;
+
+    fn advance(&mut self, now: u64) {
+        self.now = now;
+        for i in 0..self.scripts.len() {
+            if !self.connected[i] && self.scripts[i].connect_at <= now {
+                self.connected[i] = true;
+                self.pending_accept.push_back(i);
+            }
+            let mut ep = self.endpoints[i].borrow_mut();
+            while self.cursor[i] < self.scripts[i].ops.len() {
+                let op = &self.scripts[i].ops[self.cursor[i]];
+                if op.at() > now || ep.aborted {
+                    break;
+                }
+                self.cursor[i] += 1;
+                match op {
+                    ClientOp::Send { bytes, .. } => {
+                        if !ep.write_closed {
+                            ep.inbound.extend(bytes.iter().copied());
+                        }
+                    }
+                    ClientOp::ReadAllow { frames, .. } => {
+                        ep.allowance = ep.allowance.saturating_add(*frames);
+                    }
+                    ClientOp::CloseWrite { .. } => ep.write_closed = true,
+                    ClientOp::Abort { .. } => {
+                        ep.aborted = true;
+                        ep.dropped += ep.outbound.len() as u64;
+                        ep.outbound.clear();
+                        ep.inbound.clear();
+                    }
+                }
+            }
+            ep.pump();
+        }
+    }
+
+    fn poll_accept(&mut self) -> Option<SimConn> {
+        let i = self.pending_accept.pop_front()?;
+        Some(SimConn { client: i, ep: Rc::clone(&self.endpoints[i]) })
+    }
+}
+
+/// The server's handle on one simulated connection.
+pub struct SimConn {
+    client: usize,
+    ep: Rc<RefCell<Endpoint>>,
+}
+
+impl SimConn {
+    /// Which script this connection belongs to (accept order equals
+    /// client order, but tests may want it explicit).
+    pub fn client(&self) -> usize {
+        self.client
+    }
+}
+
+impl NetConn for SimConn {
+    fn read_into(&mut self, buf: &mut Vec<u8>, max: usize) -> ReadOutcome {
+        let mut ep = self.ep.borrow_mut();
+        if ep.aborted || ep.server_closed {
+            return ReadOutcome::Eof;
+        }
+        if ep.inbound.is_empty() {
+            return if ep.write_closed { ReadOutcome::Eof } else { ReadOutcome::WouldBlock };
+        }
+        let n = max.min(ep.inbound.len());
+        buf.extend(ep.inbound.drain(..n));
+        ReadOutcome::Data(n)
+    }
+
+    fn write_frame(&mut self, frame: &[u8]) {
+        let mut ep = self.ep.borrow_mut();
+        if ep.aborted || ep.server_closed {
+            ep.dropped += 1;
+            return;
+        }
+        ep.outbound.push_back(frame.to_vec());
+        ep.pump();
+    }
+
+    fn flush(&mut self) {
+        self.ep.borrow_mut().pump();
+    }
+
+    fn granted(&self) -> u64 {
+        // Scripted window, NOT delivered count: identical in both soak
+        // arms regardless of backend response timing.
+        self.ep.borrow().allowance
+    }
+
+    fn writable(&self) -> bool {
+        let ep = self.ep.borrow();
+        !ep.aborted && !ep.server_closed
+    }
+
+    fn close(&mut self) {
+        let mut ep = self.ep.borrow_mut();
+        ep.server_closed = true;
+        ep.dropped += ep.outbound.len() as u64;
+        ep.outbound.clear();
+    }
+}
+
+/// Workload shape for [`seeded_scripts`].
+#[derive(Debug, Clone)]
+pub struct ScriptConfig {
+    pub clients: usize,
+    pub requests_per_client: u64,
+    /// Fraction of requests that are `learn` (the rest are `infer`).
+    pub labelled_fraction: f32,
+    /// Feature bits per sample (the served model's width).
+    pub features: usize,
+    pub classes: usize,
+    /// Per-request deadline budget stamped on infer requests.
+    pub ttl: Option<u64>,
+}
+
+/// An effectively-unbounded read window for healthy clients.
+const OPEN_WINDOW: u64 = 1 << 40;
+
+/// Generate one deterministic script per client from `(seed, cfg)`,
+/// with `plan.faults[i]` shaping client `i`'s misbehaviour. Healthy
+/// clients connect, grant an open read window, and stream well-formed
+/// requests; faulted ones tear frames, half-open, abort, dribble their
+/// read window, or flood — all on fixed ticks, so two transports built
+/// from the same inputs replay byte-identically.
+pub fn seeded_scripts(seed: u64, cfg: &ScriptConfig, plan: &NetChaosPlan) -> Vec<ClientScript> {
+    let mut scripts = Vec::with_capacity(cfg.clients);
+    for client in 0..cfg.clients {
+        let fault = plan.faults.get(client).copied().flatten();
+        let mut rng =
+            Xoshiro256::new(seed ^ (client as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let connect_at = client as u64;
+        let mut t = connect_at;
+        let mut ops = Vec::new();
+
+        // Read-window schedule: slow-loris dribbles, everyone else
+        // grants openly at connect.
+        match fault {
+            Some(NetFault::SlowLoris { window, every }) => {
+                // Enough grant events to (slowly) cover the whole
+                // script; debt stays high while requests outpace them.
+                let grants = cfg.requests_per_client * 2 + 8;
+                for k in 0..grants {
+                    ops.push(ClientOp::ReadAllow { at: connect_at + k * every, frames: window });
+                }
+            }
+            _ => ops.push(ClientOp::ReadAllow { at: connect_at, frames: OPEN_WINDOW }),
+        }
+
+        let hello = Request::Hello { version: 1 }.encode().into_bytes();
+        ops.push(ClientOp::Send { at: t, bytes: hello });
+        t += 1;
+
+        let mut in_tick = 0usize;
+        for cid in 1..=cfg.requests_per_client {
+            match fault {
+                Some(NetFault::HalfOpen { after_requests }) if cid > after_requests => {
+                    ops.push(ClientOp::CloseWrite { at: t });
+                    break;
+                }
+                Some(NetFault::Disconnect { after_requests }) if cid > after_requests => {
+                    ops.push(ClientOp::Abort { at: t });
+                    break;
+                }
+                _ => {}
+            }
+            let bits: Vec<bool> = (0..cfg.features).map(|_| rng.next_f32() < 0.5).collect();
+            let req = if rng.next_f32() < cfg.labelled_fraction {
+                Request::Learn { id: cid, label: rng.next_below(cfg.classes), bits }
+            } else {
+                Request::Infer { id: cid, ttl: cfg.ttl, bits }
+            };
+            let bytes = req.encode().into_bytes();
+            match fault {
+                Some(NetFault::TornFrames { fragment }) => {
+                    // One sliver per tick: the frame completes several
+                    // ticks after it started.
+                    for chunk in bytes.chunks(fragment.max(1)) {
+                        ops.push(ClientOp::Send { at: t, bytes: chunk.to_vec() });
+                        t += 1;
+                    }
+                }
+                Some(NetFault::Flood { burst }) => {
+                    ops.push(ClientOp::Send { at: t, bytes });
+                    in_tick += 1;
+                    if in_tick >= burst {
+                        in_tick = 0;
+                        t += 1;
+                    }
+                }
+                _ => {
+                    ops.push(ClientOp::Send { at: t, bytes });
+                    t += 1 + rng.next_below(3) as u64;
+                }
+            }
+        }
+        scripts.push(ClientScript { connect_at, ops });
+    }
+    scripts
+}
+
+/// Last active tick across a set of scripts.
+pub fn scripts_end(scripts: &[ClientScript]) -> u64 {
+    scripts.iter().map(ClientScript::end).max().unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::chaos::NetChaosSpec;
+
+    fn cfg() -> ScriptConfig {
+        ScriptConfig {
+            clients: 4,
+            requests_per_client: 10,
+            labelled_fraction: 0.3,
+            features: 8,
+            classes: 3,
+            ttl: Some(6),
+        }
+    }
+
+    #[test]
+    fn scripts_are_deterministic() {
+        let plan = NetChaosPlan::seeded(3, 4, 10, &NetChaosSpec::full_matrix());
+        let a = seeded_scripts(42, &cfg(), &plan);
+        let b = seeded_scripts(42, &cfg(), &plan);
+        assert_eq!(a, b);
+        assert_ne!(a, seeded_scripts(43, &cfg(), &plan));
+        assert_eq!(a.len(), 4);
+        assert!(scripts_end(&a) > 0);
+    }
+
+    #[test]
+    fn transport_replays_sends_and_windows_on_the_clock() {
+        let scripts = vec![ClientScript {
+            connect_at: 0,
+            ops: vec![
+                ClientOp::ReadAllow { at: 0, frames: 1 },
+                ClientOp::Send { at: 0, bytes: b"hel".to_vec() },
+                ClientOp::Send { at: 2, bytes: b"lo v=1\n".to_vec() },
+                ClientOp::ReadAllow { at: 4, frames: 1 },
+            ],
+        }];
+        let mut tr = SimTransport::new(scripts);
+        tr.advance(0);
+        let mut conn = tr.poll_accept().expect("client connects at tick 0");
+        assert!(tr.poll_accept().is_none());
+        let mut buf = Vec::new();
+        assert_eq!(conn.read_into(&mut buf, 64), ReadOutcome::Data(3));
+        assert_eq!(conn.read_into(&mut buf, 64), ReadOutcome::WouldBlock);
+        tr.advance(1);
+        assert_eq!(conn.read_into(&mut buf, 64), ReadOutcome::WouldBlock, "sliver not due yet");
+        tr.advance(2);
+        assert_eq!(conn.read_into(&mut buf, 64), ReadOutcome::Data(7));
+        assert_eq!(buf, b"hello v=1\n");
+        // Window of 1: first frame delivered, second waits for tick 4.
+        conn.write_frame(b"ok hello v=1\n");
+        conn.write_frame(b"pred id=1 class=0\n");
+        assert_eq!(conn.granted(), 1);
+        assert_eq!(tr.delivered(0), vec!["ok hello v=1\n".to_string()]);
+        tr.advance(4);
+        assert_eq!(conn.granted(), 2);
+        assert_eq!(tr.delivered(0).len(), 2);
+    }
+
+    #[test]
+    fn abort_drops_queued_frames_and_reads_eof() {
+        let scripts = vec![ClientScript {
+            connect_at: 0,
+            ops: vec![
+                ClientOp::Send { at: 0, bytes: b"x".to_vec() },
+                ClientOp::Abort { at: 1 },
+                // Post-abort ops are dead: neither send nor grant lands.
+                ClientOp::Send { at: 2, bytes: b"y".to_vec() },
+                ClientOp::ReadAllow { at: 2, frames: 5 },
+            ],
+        }];
+        let mut tr = SimTransport::new(scripts);
+        tr.advance(0);
+        let mut conn = tr.poll_accept().unwrap();
+        conn.write_frame(b"late\n");
+        tr.advance(1);
+        tr.advance(2);
+        let mut buf = Vec::new();
+        assert_eq!(conn.read_into(&mut buf, 8), ReadOutcome::Eof);
+        assert!(!conn.writable());
+        assert_eq!(conn.granted(), 0, "no grant lands after the abort");
+        assert_eq!(tr.dropped(0), 1);
+        conn.write_frame(b"later\n");
+        assert_eq!(tr.dropped(0), 2);
+        assert!(tr.delivered(0).is_empty());
+    }
+
+    #[test]
+    fn half_open_reads_eof_after_drain_but_still_consumes() {
+        let scripts = vec![ClientScript {
+            connect_at: 0,
+            ops: vec![
+                ClientOp::ReadAllow { at: 0, frames: 10 },
+                ClientOp::Send { at: 0, bytes: b"stats id=1\n".to_vec() },
+                ClientOp::CloseWrite { at: 1 },
+                ClientOp::Send { at: 2, bytes: b"stats id=2\n".to_vec() },
+            ],
+        }];
+        let mut tr = SimTransport::new(scripts);
+        tr.advance(0);
+        let mut conn = tr.poll_accept().unwrap();
+        let mut buf = Vec::new();
+        assert_eq!(conn.read_into(&mut buf, 64), ReadOutcome::Data(11));
+        tr.advance(1);
+        tr.advance(2);
+        assert_eq!(conn.read_into(&mut buf, 64), ReadOutcome::Eof, "write side is closed");
+        conn.write_frame(b"stats id=1 ...\n");
+        assert_eq!(tr.delivered(0).len(), 1, "read side still consumes");
+        assert!(conn.writable());
+    }
+}

@@ -20,15 +20,46 @@
 
 use crate::serve::ServeBackend;
 use crate::tm::clause::Input;
-use crate::tm::update::UpdateKind;
+use crate::tm::update::{Deadline, UpdateKind};
 use anyhow::{ensure, Context, Result};
 
 /// A single-sample inference request admitted to the batcher. `id` is
 /// assigned in arrival order and is how responses are matched back.
+/// `deadline`, when set, is the absolute virtual tick past which the
+/// request must be answered with a typed deadline response instead of
+/// being scored ([`split_expired`]); `None` means "never expires" (the
+/// in-process trace drivers, which have no per-request budgets).
 #[derive(Debug, Clone)]
 pub struct PendingRequest {
     pub id: u64,
     pub input: Input,
+    pub deadline: Option<Deadline>,
+}
+
+impl PendingRequest {
+    /// A request with no deadline budget (trusted in-process traces).
+    pub fn unbounded(id: u64, input: Input) -> Self {
+        PendingRequest { id, input, deadline: None }
+    }
+}
+
+/// Split a flushed batch into the requests still worth scoring and the
+/// ids whose deadline budget expired while they waited (strictly past
+/// their deadline tick at `now`). Expiry is checked exactly once, at
+/// flush time: a dispatched request is always scored, an expired one is
+/// never dispatched — so the deadline outcome of every request is a
+/// deterministic function of the trace and the batching config, and the
+/// two soak arms cannot disagree about it.
+pub fn split_expired(batch: Vec<PendingRequest>, now: u64) -> (Vec<PendingRequest>, Vec<u64>) {
+    let mut live = Vec::with_capacity(batch.len());
+    let mut expired = Vec::new();
+    for req in batch {
+        match req.deadline {
+            Some(d) if d.expired(now) => expired.push(req.id),
+            _ => live.push(req),
+        }
+    }
+    (live, expired)
 }
 
 /// A request rejected at admission: its input's literal count does not
@@ -271,7 +302,7 @@ pub fn run_trace<B: ServeBackend>(
         }
         match ev {
             ServeEvent::Infer { at_tick, input } => {
-                let req = PendingRequest { id: next_id, input: input.clone() };
+                let req = PendingRequest::unbounded(next_id, input.clone());
                 next_id += 1;
                 match batcher.admit(req, *at_tick) {
                     Ok(Some(batch)) => {
@@ -408,6 +439,20 @@ mod tests {
         assert_eq!(rec.widths, vec![2], "update did not split the batch");
         assert_eq!(stats.updates, 1);
         assert_eq!(stats.final_flushes, 1);
+    }
+
+    #[test]
+    fn split_expired_is_strict_and_exact() {
+        use crate::tm::update::Deadline;
+        let batch = vec![
+            PendingRequest { id: 0, input: input(0), deadline: Some(Deadline(4)) },
+            PendingRequest { id: 1, input: input(1), deadline: Some(Deadline(5)) },
+            PendingRequest { id: 2, input: input(2), deadline: None },
+            PendingRequest { id: 3, input: input(3), deadline: Some(Deadline(9)) },
+        ];
+        let (live, expired) = split_expired(batch, 5);
+        assert_eq!(expired, vec![0], "only strictly-past deadlines expire");
+        assert_eq!(live.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 2, 3]);
     }
 
     #[test]

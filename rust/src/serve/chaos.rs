@@ -120,6 +120,135 @@ impl ChaosPlan {
     }
 }
 
+/// One connection-level fault, attached to a simulated client session.
+/// Where shard chaos keys off the update-log clock, connection chaos
+/// keys off the client's own request stream — `after_requests` counts
+/// the requests the client has written before the fault lands — so the
+/// same script always fails at the same byte.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NetFault {
+    /// Deliver every frame shattered into `fragment`-byte slivers, one
+    /// sliver per tick — the parser must reassemble torn frames and
+    /// never act on a partial line.
+    TornFrames { fragment: usize },
+    /// The client half-closes after writing `after_requests` requests:
+    /// its write side goes silent (no further requests, no clean
+    /// shutdown) while its read side stays open awaiting answers.
+    HalfOpen { after_requests: u64 },
+    /// The connection aborts entirely after `after_requests` requests —
+    /// mid-response from the server's point of view; everything queued
+    /// for the client is undeliverable from that point.
+    Disconnect { after_requests: u64 },
+    /// A slow-loris reader: the client grants read windows of only
+    /// `window` response frames at a time, every `every` ticks, so the
+    /// server's write buffer for it fills and the slow-client cap must
+    /// shed with exact accounting.
+    SlowLoris { window: u64, every: u64 },
+    /// A flooder: the client fires `burst` requests per tick with no
+    /// think time, driving the admission controller past its in-flight
+    /// depth.
+    Flood { burst: usize },
+}
+
+/// Shape of a seeded connection-fault schedule: how many clients get
+/// each fault. Clients beyond the faulted ones behave normally.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct NetChaosSpec {
+    pub torn: usize,
+    pub half_open: usize,
+    pub disconnects: usize,
+    pub slow_loris: usize,
+    pub floods: usize,
+}
+
+impl NetChaosSpec {
+    /// The full matrix: one client per fault kind.
+    pub fn full_matrix() -> Self {
+        NetChaosSpec { torn: 1, half_open: 1, disconnects: 1, slow_loris: 1, floods: 1 }
+    }
+
+    fn total(&self) -> usize {
+        self.torn + self.half_open + self.disconnects + self.slow_loris + self.floods
+    }
+}
+
+/// A deterministic connection-fault schedule: at most one fault per
+/// client slot (`faults[i]` applies to client `i`, `None` = a healthy
+/// client).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct NetChaosPlan {
+    pub faults: Vec<Option<NetFault>>,
+}
+
+impl NetChaosPlan {
+    /// A plan with `clients` healthy sessions and no faults.
+    pub fn healthy(clients: usize) -> Self {
+        NetChaosPlan { faults: vec![None; clients] }
+    }
+
+    /// Generate a schedule from a seed: draw the spec'd fault kinds with
+    /// seeded parameters and deal them onto distinct client slots in a
+    /// seeded shuffle. `requests_per_client` bounds the `after_requests`
+    /// draws so half-opens and disconnects land mid-script, not after
+    /// it. The same `(seed, clients, requests_per_client, spec)` always
+    /// yields the same plan; with more faults than clients the excess is
+    /// dropped.
+    pub fn seeded(
+        seed: u64,
+        clients: usize,
+        requests_per_client: u64,
+        spec: &NetChaosSpec,
+    ) -> NetChaosPlan {
+        let mut plan = NetChaosPlan::healthy(clients);
+        if clients == 0 || requests_per_client == 0 {
+            return plan;
+        }
+        let mut rng = Xoshiro256::new(seed);
+        let mid = |rng: &mut Xoshiro256| -> u64 {
+            // Strike points in the middle half of the script, so the
+            // fault interrupts live traffic.
+            let span = (requests_per_client / 2).max(1);
+            requests_per_client / 4 + rng.next_below(span as usize) as u64
+        };
+        let mut faults = Vec::with_capacity(spec.total());
+        for _ in 0..spec.torn {
+            faults.push(NetFault::TornFrames { fragment: 1 + rng.next_below(5) });
+        }
+        for _ in 0..spec.half_open {
+            faults.push(NetFault::HalfOpen { after_requests: mid(&mut rng) });
+        }
+        for _ in 0..spec.disconnects {
+            faults.push(NetFault::Disconnect { after_requests: mid(&mut rng) });
+        }
+        for _ in 0..spec.slow_loris {
+            faults.push(NetFault::SlowLoris {
+                window: 1 + rng.next_below(2) as u64,
+                every: 3 + rng.next_below(5) as u64,
+            });
+        }
+        for _ in 0..spec.floods {
+            faults.push(NetFault::Flood { burst: 4 + rng.next_below(13) });
+        }
+        // Seeded deal onto distinct slots (partial Fisher–Yates over the
+        // client indices).
+        let mut slots: Vec<usize> = (0..clients).collect();
+        for (k, fault) in faults.into_iter().enumerate() {
+            if k >= slots.len() {
+                break;
+            }
+            let pick = k + rng.next_below(slots.len() - k);
+            slots.swap(k, pick);
+            plan.faults[slots[k]] = Some(fault);
+        }
+        plan
+    }
+
+    /// Number of faulted client slots.
+    pub fn faulted(&self) -> usize {
+        self.faults.iter().filter(|f| f.is_some()).count()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -160,5 +289,42 @@ mod tests {
         let spec = ChaosSpec { kills: 2, stalls: 2, corrupts: 2 };
         assert!(ChaosPlan::seeded(1, 0, 100, &spec).events.is_empty());
         assert!(ChaosPlan::seeded(1, 4, 0, &spec).events.is_empty());
+    }
+
+    #[test]
+    fn seeded_net_plans_are_deterministic_and_distinct_per_client() {
+        let spec = NetChaosSpec::full_matrix();
+        let a = NetChaosPlan::seeded(9, 8, 40, &spec);
+        let b = NetChaosPlan::seeded(9, 8, 40, &spec);
+        let c = NetChaosPlan::seeded(10, 8, 40, &spec);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(a.faults.len(), 8);
+        assert_eq!(a.faulted(), 5, "each matrix fault lands on its own client");
+    }
+
+    #[test]
+    fn seeded_net_plans_respect_bounds() {
+        let spec =
+            NetChaosSpec { torn: 3, half_open: 3, disconnects: 3, slow_loris: 3, floods: 3 };
+        // More faults than clients: excess dropped, never doubled up.
+        let plan = NetChaosPlan::seeded(0x5EED, 6, 20, &spec);
+        assert_eq!(plan.faulted(), 6);
+        for fault in plan.faults.iter().flatten() {
+            match fault {
+                NetFault::TornFrames { fragment } => assert!((1..=5).contains(fragment)),
+                NetFault::HalfOpen { after_requests }
+                | NetFault::Disconnect { after_requests } => {
+                    assert!((5..15).contains(after_requests), "mid-script strike");
+                }
+                NetFault::SlowLoris { window, every } => {
+                    assert!((1..=2).contains(window));
+                    assert!((3..=7).contains(every));
+                }
+                NetFault::Flood { burst } => assert!((4..=16).contains(burst)),
+            }
+        }
+        assert!(NetChaosPlan::seeded(1, 0, 20, &spec).faults.is_empty());
+        assert_eq!(NetChaosPlan::seeded(1, 4, 0, &spec).faulted(), 0);
     }
 }

@@ -56,6 +56,41 @@ pub struct ServeSnapshot {
     pub machine: MultiTm,
 }
 
+/// Typed rejection for a snapshot whose log position regresses behind
+/// the seq its consumer has provably applied: loading it would rewind
+/// the replica past updates that already took effect.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SeqRegression {
+    pub snapshot_seq: u64,
+    pub applied_seq: u64,
+}
+
+impl std::fmt::Display for SeqRegression {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "serve snapshot: seq {} regresses behind applied seq {}",
+            self.snapshot_seq, self.applied_seq
+        )
+    }
+}
+
+impl std::error::Error for SeqRegression {}
+
+/// [`restore`], plus the regression guard: the decoded snapshot must
+/// capture at least `applied_seq`. Fails with a downcastable
+/// [`SeqRegression`] otherwise — never a silently stale replica.
+pub fn restore_expecting(bytes: &[u8], applied_seq: u64) -> Result<ServeSnapshot> {
+    let snap = restore(bytes)?;
+    if snap.seq < applied_seq {
+        return Err(anyhow::Error::new(SeqRegression {
+            snapshot_seq: snap.seq,
+            applied_seq,
+        }));
+    }
+    Ok(snap)
+}
+
 fn push_u32(buf: &mut Vec<u8>, v: u32) {
     buf.extend_from_slice(&v.to_le_bytes());
 }
@@ -212,6 +247,24 @@ pub fn restore(bytes: &[u8]) -> Result<ServeSnapshot> {
     };
     r.take(2)?; // pad
     params.validate(&shape).context("serve snapshot params")?;
+
+    // Hostile-header guard: the payload size this shape implies,
+    // computed in 128-bit arithmetic (forged u32 dimensions can
+    // overflow `num_tas()` itself), checked against the bytes actually
+    // present *before* any shape-sized allocation. A forged header can
+    // cost at most the frame it arrived in, never a huge reservation.
+    let rows128 = shape.classes as u128 * shape.max_clauses as u128;
+    let lits128 = 2 * shape.features as u128;
+    let tas128 = rows128 * lits128;
+    let gate_words128 = rows128 * lits128.div_ceil(64);
+    let want_payload = tas128 * 4 + rows128 + 2 * gate_words128 * 8 + 4;
+    let have_payload = (body.len() - r.pos) as u128;
+    if want_payload != have_payload {
+        bail!(
+            "serve snapshot: header claims a {want_payload}-byte payload but {have_payload} \
+             bytes follow"
+        );
+    }
 
     let n = shape.num_tas();
     let mut states = Vec::with_capacity(n);
@@ -385,6 +438,53 @@ mod tests {
         };
         assert!(restore(&patch(0, 0x544D_4650)).is_err(), "v1 magic must not decode as v2");
         assert!(restore(&patch(4, 3)).is_err(), "unknown version");
+    }
+
+    /// A forged shape header — dimensions claiming terabytes of payload
+    /// with a valid trailing CRC — must be rejected by the size check
+    /// before any allocation, including values whose `num_tas` product
+    /// overflows 64-bit arithmetic entirely.
+    #[test]
+    fn hostile_shape_header_cannot_trigger_huge_allocation() {
+        let (tm, p) = snapshot_machine();
+        let good = snapshot_bytes(&tm, &p, 7);
+        let patch = |fields: &[(usize, u32)]| {
+            let mut b = good.clone();
+            for &(at, v) in fields {
+                b[at..at + 4].copy_from_slice(&v.to_le_bytes());
+            }
+            let n = b.len();
+            let crc = fnv1a(&b[..n - 4]);
+            b[n - 4..].copy_from_slice(&crc.to_le_bytes());
+            b
+        };
+        // Offsets: classes @8, max_clauses @12, features @16.
+        for bad in [
+            patch(&[(8, 0x4000_0000)]),                                // ~4e9 rows
+            patch(&[(16, 0x7FFF_FFFF)]),                               // huge literal rows
+            patch(&[(8, u32::MAX), (12, 0xFFFF_FFFE), (16, u32::MAX)]), // num_tas overflows
+        ] {
+            let err = restore(&bad).expect_err("hostile header must be rejected");
+            assert!(
+                err.to_string().contains("payload") || err.to_string().contains("params"),
+                "unexpected rejection path: {err:#}"
+            );
+        }
+    }
+
+    /// `restore_expecting` pins the regression contract: a snapshot
+    /// behind the consumer's applied seq fails with a downcastable
+    /// [`SeqRegression`]; at or ahead of it, restore succeeds.
+    #[test]
+    fn seq_regression_is_a_typed_error() {
+        let (tm, p) = snapshot_machine();
+        let bytes = snapshot_bytes(&tm, &p, 7);
+        assert_eq!(restore_expecting(&bytes, 7).unwrap().seq, 7);
+        assert_eq!(restore_expecting(&bytes, 0).unwrap().seq, 7);
+        let err = restore_expecting(&bytes, 8).expect_err("regressed snapshot must fail");
+        let reg = err.downcast_ref::<SeqRegression>().expect("typed SeqRegression");
+        assert_eq!(*reg, SeqRegression { snapshot_seq: 7, applied_seq: 8 });
+        assert!(err.to_string().contains("regresses behind"));
     }
 
     #[test]

@@ -54,13 +54,20 @@ pub mod oracle;
 pub mod shard;
 pub mod supervisor;
 
+use crate::tm::machine::MultiTm;
 use crate::tm::update::UpdateKind;
 
 pub use batcher::{
-    run_trace, BadRequest, BatcherConfig, DriveStats, MicroBatcher, PendingRequest, ServeEvent,
+    run_trace, split_expired, BadRequest, BatcherConfig, DriveStats, MicroBatcher,
+    PendingRequest, ServeEvent,
 };
-pub use chaos::{ChaosEvent, ChaosPlan, ChaosSpec, KillKind};
-pub use checkpoint::{load_snapshot, restore, save_snapshot, snapshot_bytes, ServeSnapshot};
+pub use chaos::{
+    ChaosEvent, ChaosPlan, ChaosSpec, KillKind, NetChaosPlan, NetChaosSpec, NetFault,
+};
+pub use checkpoint::{
+    load_snapshot, restore, restore_expecting, save_snapshot, snapshot_bytes, SeqRegression,
+    ServeSnapshot,
+};
 pub use oracle::ScalarOracle;
 pub use shard::{MicroBatch, ShardStats};
 pub use supervisor::{
@@ -78,4 +85,37 @@ pub trait ServeBackend {
     /// A flushed micro-batch of inference requests, scored against the
     /// model state after every update received so far.
     fn infer_batch(&mut self, batch: Vec<PendingRequest>);
+}
+
+/// Everything a finished [`NetBackend`] produced: the complete
+/// response and shed lists (previously polled items included, so the
+/// exactly-once audit covers the whole run) plus each replica's final
+/// state — the "checkpoint shards" leg of a graceful drain.
+#[derive(Debug)]
+pub struct NetFinal {
+    /// `(request_id, predicted_class)`, sorted by request id.
+    pub responses: Vec<(u64, usize)>,
+    /// Request ids shed with an overload response, sorted.
+    pub shed: Vec<u64>,
+    /// Final replica state(s), decoded from verified exit snapshots.
+    pub replicas: Vec<MultiTm>,
+}
+
+/// A [`ServeBackend`] the network front end (`crate::net`) can stream
+/// from: responses and shed notices are *polled incrementally* while
+/// the trace is still running (the sharded server surfaces worker
+/// replies as they land; the scalar oracle answers at flush time), and
+/// [`NetBackend::finalize`] ends the run — joining workers, collecting
+/// whatever was still in flight, and verifying the exactly-once
+/// response contract over the whole run, polled items included.
+pub trait NetBackend: ServeBackend + Sized {
+    /// Drain responses produced since the last poll, in production
+    /// order (not necessarily id order across shards).
+    fn poll_responses(&mut self) -> Vec<(u64, usize)>;
+    /// Drain request ids shed with an overload response since the last
+    /// poll.
+    fn poll_shed(&mut self) -> Vec<u64>;
+    /// Finish the run: flush everything in flight, checkpoint the
+    /// replica state(s), and return the complete record.
+    fn finalize(self) -> anyhow::Result<NetFinal>;
 }

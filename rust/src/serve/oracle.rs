@@ -8,7 +8,7 @@
 //! sample-sliced kernel) has a fixed point to be measured against.
 
 use crate::serve::batcher::PendingRequest;
-use crate::serve::ServeBackend;
+use crate::serve::{NetBackend, NetFinal, ServeBackend};
 use crate::tm::machine::MultiTm;
 use crate::tm::params::TmParams;
 use crate::tm::rng::StepRands;
@@ -21,6 +21,9 @@ pub struct ScalarOracle {
     base_seed: u64,
     seq: u64,
     responses: Vec<(u64, usize)>,
+    /// How many of `responses` have already been handed out through
+    /// [`NetBackend::poll_responses`].
+    polled: usize,
     /// Update-randomness scratch (allocated on first Learn update).
     rands: Option<StepRands>,
 }
@@ -29,7 +32,15 @@ impl ScalarOracle {
     /// Must be handed a clone of the same initial machine, the same
     /// params and the same base seed as the server it checks.
     pub fn new(tm: MultiTm, params: TmParams, base_seed: u64) -> Self {
-        ScalarOracle { tm, params, base_seed, seq: 0, responses: Vec::new(), rands: None }
+        ScalarOracle {
+            tm,
+            params,
+            base_seed,
+            seq: 0,
+            responses: Vec::new(),
+            polled: 0,
+            rands: None,
+        }
     }
 
     /// `(request_id, predicted_class)`, sorted by request id — already
@@ -62,6 +73,28 @@ impl ServeBackend for ScalarOracle {
             let pred = self.tm.predict(&req.input, &self.params);
             self.responses.push((req.id, pred));
         }
+    }
+}
+
+impl NetBackend for ScalarOracle {
+    fn poll_responses(&mut self) -> Vec<(u64, usize)> {
+        let fresh = self.responses[self.polled..].to_vec();
+        self.polled = self.responses.len();
+        fresh
+    }
+
+    fn poll_shed(&mut self) -> Vec<u64> {
+        // The single-threaded reference never sheds: every dispatched
+        // request is scored synchronously at flush time.
+        Vec::new()
+    }
+
+    fn finalize(self) -> anyhow::Result<NetFinal> {
+        Ok(NetFinal {
+            responses: self.responses,
+            shed: Vec::new(),
+            replicas: vec![self.tm],
+        })
     }
 }
 

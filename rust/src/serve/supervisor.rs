@@ -121,6 +121,10 @@ pub struct RecoveryStats {
     /// Snapshots that failed verification at restore time and were
     /// discarded in favour of an older one.
     pub corrupt_snapshots_rejected: u64,
+    /// Incoming snapshots rejected because their seq regressed behind
+    /// the newest retained one — storing them would rewind recovery
+    /// past updates the shard provably applied.
+    pub regressed_snapshots_rejected: u64,
     /// Log updates re-sent to respawned workers.
     pub replayed_updates: u64,
     /// Unscored batches re-dispatched to their shard's new incarnation.
@@ -236,6 +240,11 @@ pub struct ShardServer {
     log: VecDeque<Arc<ShardUpdate>>,
     responses: Vec<(u64, usize)>,
     shed: Vec<u64>,
+    /// Responses already handed out through [`NetBackend`] polls; merged
+    /// back in `finish` so the exactly-once audit covers the whole run.
+    streamed: Vec<(u64, usize)>,
+    /// Shed ids already handed out through [`NetBackend`] polls.
+    streamed_shed: Vec<u64>,
     /// Per-shard stats accumulated from joined (dead) incarnations.
     agg: Vec<ShardStats>,
     recovery: RecoveryStats,
@@ -306,6 +315,8 @@ impl ShardServer {
             log: VecDeque::new(),
             responses: Vec::new(),
             shed: Vec::new(),
+            streamed: Vec::new(),
+            streamed_shed: Vec::new(),
             agg,
             recovery: RecoveryStats::default(),
             chaos: plan.map(|plan| {
@@ -379,6 +390,15 @@ impl ShardServer {
                             }
                         }
                     }
+                }
+                // A snapshot whose seq regresses behind the newest
+                // retained one would rewind recovery past updates the
+                // shard provably applied: reject it, keep the ledger.
+                let newest =
+                    self.slots[shard].snaps.back().map(|snap| snap.seq).unwrap_or(0);
+                if seq < newest {
+                    self.recovery.regressed_snapshots_rejected += 1;
+                    return;
                 }
                 self.recovery.snapshots_stored += 1;
                 let slot = &mut self.slots[shard];
@@ -626,9 +646,15 @@ impl ShardServer {
                     self.slots[i].health = SlotHealth::Dead { since_op: self.ops };
                     died.push(i);
                 } else if let Some(bytes) = exit.final_snapshot {
-                    let snap = checkpoint::restore(&bytes).with_context(|| {
-                        format!("serve: shard {i}'s final replica snapshot failed verification")
-                    })?;
+                    // The exit snapshot must capture every update the
+                    // log ever broadcast; a regressed seq is a typed
+                    // error, not a silently stale replica.
+                    let snap =
+                        checkpoint::restore_expecting(&bytes, self.seq).with_context(|| {
+                            format!(
+                                "serve: shard {i}'s final replica snapshot failed verification"
+                            )
+                        })?;
                     replicas[i] = Some(snap.machine);
                 }
             }
@@ -651,11 +677,13 @@ impl ShardServer {
             }
         }
         let mut responses = std::mem::take(&mut self.responses);
+        responses.append(&mut self.streamed);
         responses.sort_unstable_by_key(|&(id, _)| id);
         if let Some(w) = responses.windows(2).find(|w| w[0].0 == w[1].0) {
             bail!("serve: request {} was scored more than once", w[0].0);
         }
         let mut shed = std::mem::take(&mut self.shed);
+        shed.append(&mut self.streamed_shed);
         shed.sort_unstable();
         let replicas = replicas
             .into_iter()
@@ -791,6 +819,30 @@ impl ServeBackend for ShardServer {
             // batch we just lost) is scheduled deterministically.
             self.slots[i].health = SlotHealth::Dead { since_op: self.ops };
         }
+    }
+}
+
+impl crate::serve::NetBackend for ShardServer {
+    fn poll_responses(&mut self) -> Vec<(u64, usize)> {
+        self.drain_replies();
+        let fresh = std::mem::take(&mut self.responses);
+        self.streamed.extend_from_slice(&fresh);
+        fresh
+    }
+
+    fn poll_shed(&mut self) -> Vec<u64> {
+        let fresh = std::mem::take(&mut self.shed);
+        self.streamed_shed.extend_from_slice(&fresh);
+        fresh
+    }
+
+    fn finalize(self) -> Result<crate::serve::NetFinal> {
+        let out = self.finish()?;
+        Ok(crate::serve::NetFinal {
+            responses: out.responses,
+            shed: out.shed,
+            replicas: out.replicas,
+        })
     }
 }
 

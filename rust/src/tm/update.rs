@@ -26,6 +26,32 @@ use crate::tm::machine::MultiTm;
 use crate::tm::params::{TmParams, TmShape};
 use crate::tm::rng::{StepRands, Xoshiro256};
 
+/// An absolute virtual-tick deadline carried by an inference request
+/// through the serving stack. The clock is the same deterministic tick
+/// base every batching decision already uses, so deadline expiry is a
+/// pure function of the trace: a request arriving at tick `t` with a
+/// time-to-live of `ttl` carries `Deadline(t + ttl)` and is *expired*
+/// at any flush happening strictly after that tick. Expired requests
+/// are answered with a typed deadline response at flush time — never
+/// dispatched, never silently dropped (`crate::net::frontend`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Deadline(pub u64);
+
+impl Deadline {
+    /// Deadline for a request arriving at `now` with `ttl` ticks to
+    /// live (saturating: a huge ttl means "never expires").
+    pub fn after(now: u64, ttl: u64) -> Self {
+        Deadline(now.saturating_add(ttl))
+    }
+
+    /// True once the virtual clock has moved strictly past the
+    /// deadline tick: a request flushed *at* its deadline still makes
+    /// it.
+    pub fn expired(&self, now: u64) -> bool {
+        now > self.0
+    }
+}
+
 /// What one sequenced update does to a replica.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum UpdateKind {
@@ -238,6 +264,18 @@ mod tests {
             assert_eq!(act, act2, "seq {seq}");
             assert_eq!(via_update.ta().states(), manual.ta().states(), "seq {seq}");
         }
+    }
+
+    /// Deadlines are inclusive of their own tick and saturate instead
+    /// of wrapping.
+    #[test]
+    fn deadline_semantics() {
+        let d = Deadline::after(10, 5);
+        assert!(!d.expired(10));
+        assert!(!d.expired(15), "a flush at the deadline tick still makes it");
+        assert!(d.expired(16));
+        let never = Deadline::after(10, u64::MAX);
+        assert!(!never.expired(u64::MAX));
     }
 
     /// Fault updates program the clause-output gate and return no

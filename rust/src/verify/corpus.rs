@@ -50,8 +50,17 @@
 //! `s_bits` is the IEEE-754 bit pattern of `s` (`f32::to_bits`) so the
 //! round-trip is exact. Schedules are grown and minimized by
 //! [`crate::verify::shrink`].
+//!
+//! Format `v2` adds the `net` step kind (a scripted client fleet driven
+//! through two network front ends with connection-level chaos, see
+//! [`crate::net`]); schedules without net steps keep serializing as
+//! `v1`, and a `v1` header containing a net step is rejected.
 
-use crate::serve::{restore, snapshot_bytes};
+use crate::net::{run_sim, seeded_scripts, NetConfig, ScriptConfig};
+use crate::serve::{
+    restore, snapshot_bytes, BatcherConfig, NetChaosPlan, NetChaosSpec, ScalarOracle,
+    ServeConfig, ShardServer,
+};
 use crate::tm::bitplane::{BitPlanes, PlaneBatch};
 use crate::tm::clause::{EvalMode, Input};
 use crate::tm::engine::{train_step_fast, train_step_lazy, EpochStats, FeedbackPlan};
@@ -91,6 +100,12 @@ pub enum Step {
     /// Apply `updates` sequenced shard updates (Learn + ClauseFault mix)
     /// to every lane through its own application path.
     Serve { updates: u32, seed: u64 },
+    /// Drive a scripted client fleet (full connection-fault matrix)
+    /// through two network front ends forked from the fast lane —
+    /// scalar oracle vs sharded server — assert identical outcomes,
+    /// stats, admitted-update logs and replica digests, then fold the
+    /// admitted log into every lane (needs fixture format v2).
+    Net { clients: u32, requests: u32, seed: u64 },
     /// Swap the training hyper-parameters mid-schedule.
     Params { t: i32, s_bits: u32, active_clauses: u32, active_classes: u32 },
 }
@@ -111,6 +126,9 @@ impl Step {
             Step::Checkpoint => "step checkpoint".into(),
             Step::Serve { updates, seed } => {
                 format!("step serve updates={updates} seed={seed}")
+            }
+            Step::Net { clients, requests, seed } => {
+                format!("step net clients={clients} requests={requests} seed={seed}")
             }
             Step::Params { t, s_bits, active_clauses, active_classes } => format!(
                 "step params t={t} s_bits={s_bits} active_clauses={active_clauses} active_classes={active_classes}"
@@ -144,7 +162,8 @@ impl Schedule {
     /// Serialize to the fixture text format (see the module docs).
     pub fn to_text(&self) -> String {
         let mut out = String::new();
-        out.push_str("tmfpga-corpus v1\n");
+        let has_net = self.steps.iter().any(|s| matches!(s, Step::Net { .. }));
+        out.push_str(if has_net { "tmfpga-corpus v2\n" } else { "tmfpga-corpus v1\n" });
         out.push_str(&format!(
             "shape classes={} clauses={} features={} states={}\n",
             self.shape.classes, self.shape.max_clauses, self.shape.features, self.shape.states
@@ -179,9 +198,11 @@ impl Schedule {
             .map(str::trim)
             .filter(|l| !l.is_empty() && !l.starts_with('#'));
         let header = lines.next().context("empty fixture")?;
-        if header != "tmfpga-corpus v1" {
-            bail!("bad fixture header {header:?} (want \"tmfpga-corpus v1\")");
-        }
+        let v2 = match header {
+            "tmfpga-corpus v1" => false,
+            "tmfpga-corpus v2" => true,
+            other => bail!("bad fixture header {other:?} (want \"tmfpga-corpus v1\" or \"v2\")"),
+        };
 
         let shape_line = lines.next().context("missing shape line")?;
         let toks: Vec<&str> = shape_line.split_whitespace().collect();
@@ -256,6 +277,16 @@ impl Schedule {
                 "checkpoint" => Step::Checkpoint,
                 "serve" => {
                     Step::Serve { updates: get(&toks, "updates")?, seed: get(&toks, "seed")? }
+                }
+                "net" => {
+                    if !v2 {
+                        bail!("net steps need a \"tmfpga-corpus v2\" fixture header");
+                    }
+                    Step::Net {
+                        clients: get(&toks, "clients")?,
+                        requests: get(&toks, "requests")?,
+                        seed: get(&toks, "seed")?,
+                    }
                 }
                 "params" => Step::Params {
                     t: get(&toks, "t")?,
@@ -592,41 +623,116 @@ pub fn replay_opts(s: &Schedule, opts: &ReplayOptions) -> Result<Report, Diverge
             }
             Step::Serve { updates, seed } => {
                 let log = gen_updates(shape, *updates as usize, mix(s.base_seed, *seed), &mut next_seq);
-                // Scalar oracle: keyed replay of the log.
-                for u in &log {
-                    match &u.kind {
-                        UpdateKind::Learn { input, label } => {
-                            let r = update_rands(shape, s.base_seed, u.seq);
-                            train_step(&mut a, input, *label, &params, &r);
-                        }
-                        UpdateKind::ClauseFault { class, clause, force } => {
-                            a.set_clause_fault(*class, *clause, *force);
-                        }
+                apply_shard_log(
+                    &log,
+                    &params,
+                    s.base_seed,
+                    [&mut a, &mut b, &mut c, &mut d, &mut e],
+                    &mut serve_scratch,
+                    &mut scratch_c,
+                );
+            }
+            Step::Net { clients, requests, seed } => {
+                // Two front ends forked from the fast lane serve the same
+                // scripted fleet (every connection-fault kind armed): the
+                // scalar oracle vs the sharded server. Everything
+                // observable must be bit-identical — outcome per request,
+                // shed/deadline/admission accounting, the admitted-update
+                // log, and the replica state the arms end with.
+                let plan = NetChaosPlan::seeded(
+                    mix(s.base_seed, seed ^ 0x4EC5),
+                    *clients as usize,
+                    u64::from(*requests),
+                    &NetChaosSpec::full_matrix(),
+                );
+                let script_cfg = ScriptConfig {
+                    clients: *clients as usize,
+                    requests_per_client: u64::from(*requests),
+                    labelled_fraction: 0.35,
+                    features: shape.features,
+                    classes: shape.classes,
+                    ttl: Some(3),
+                };
+                let scripts = seeded_scripts(mix(s.base_seed, *seed), &script_cfg, &plan);
+                let batch =
+                    BatcherConfig { max_batch: 8, latency_budget: 4, expect_literals: None };
+                let ncfg = NetConfig { batch, record_updates: true, ..NetConfig::default() };
+                let serve_seed = mix(s.base_seed, seed ^ 0x5E4E);
+                let oracle = ScalarOracle::new(b.clone(), params.clone(), serve_seed);
+                let orep = match run_sim(oracle, scripts.clone(), shape, ncfg.clone()) {
+                    Ok((rep, _)) => rep,
+                    Err(e2) => {
+                        return Err(Divergence {
+                            step: i,
+                            what: format!("net oracle arm failed: {e2:#}"),
+                        })
                     }
-                }
-                // Replica paths: allocating, scratch-carrying, and plain.
-                for u in &log {
-                    b.apply_update_with(u, &params, s.base_seed, &mut serve_scratch);
-                    d.apply_update(u, &params, s.base_seed);
-                    e.apply_update(u, &params, s.base_seed);
-                }
-                // Lane path: coalesced Learn runs through the keyed
-                // bit-plane trainer, fault edits applied at run breaks —
-                // exactly the shard workers' batching discipline.
-                let mut run: Vec<(Input, usize, u64)> = Vec::new();
-                for u in &log {
-                    match &u.kind {
-                        UpdateKind::Learn { input, label } => {
-                            run.push((input.clone(), *label, u.seq));
-                        }
-                        UpdateKind::ClauseFault { class, clause, force } => {
-                            flush_learn_run(&mut c, &run, &params, s.base_seed, &mut scratch_c);
-                            run.clear();
-                            c.set_clause_fault(*class, *clause, *force);
-                        }
+                };
+                let scfg = ServeConfig::new(2, params.clone(), serve_seed);
+                let server = match ShardServer::new(&b, &scfg) {
+                    Ok(sv) => sv,
+                    Err(e2) => {
+                        return Err(Divergence {
+                            step: i,
+                            what: format!("net shard spawn failed: {e2:#}"),
+                        })
                     }
+                };
+                let srep = match run_sim(server, scripts, shape, ncfg) {
+                    Ok((rep, _)) => rep,
+                    Err(e2) => {
+                        return Err(Divergence {
+                            step: i,
+                            what: format!("net server arm failed: {e2:#}"),
+                        })
+                    }
+                };
+                if srep.stats != orep.stats {
+                    return Err(Divergence {
+                        step: i,
+                        what: format!(
+                            "net stats diverged: server {:?} oracle {:?}",
+                            srep.stats, orep.stats
+                        ),
+                    });
                 }
-                flush_learn_run(&mut c, &run, &params, s.base_seed, &mut scratch_c);
+                if srep.outcomes != orep.outcomes {
+                    return Err(Divergence { step: i, what: "net outcome maps diverged".into() });
+                }
+                if srep.updates != orep.updates {
+                    return Err(Divergence {
+                        step: i,
+                        what: "net admitted-update logs diverged".into(),
+                    });
+                }
+                let od = orep.replicas[0].state_digest();
+                if srep.replicas.iter().any(|r| r.state_digest() != od) {
+                    return Err(Divergence {
+                        step: i,
+                        what: "net replica digests diverged from oracle".into(),
+                    });
+                }
+                checks += 4;
+                // Fold the admitted log into every lane through the
+                // shard-update paths, continuing the replay's own
+                // sequence stream.
+                let log: Vec<ShardUpdate> = orep
+                    .updates
+                    .into_iter()
+                    .map(|kind| {
+                        let seq = next_seq;
+                        next_seq += 1;
+                        ShardUpdate { seq, kind }
+                    })
+                    .collect();
+                apply_shard_log(
+                    &log,
+                    &params,
+                    s.base_seed,
+                    [&mut a, &mut b, &mut c, &mut d, &mut e],
+                    &mut serve_scratch,
+                    &mut scratch_c,
+                );
             }
             Step::Params { t, s_bits, active_clauses, active_classes } => {
                 let mut np = params.clone();
@@ -691,6 +797,57 @@ fn flush_learn_run(
         |i, r| update_rands_into(r, &shape, base_seed, run[i].2),
         scratch,
     );
+}
+
+/// Apply one sequenced shard-update log to the five lanes `[a, b, c, d,
+/// e]`, each through its own application path: scalar keyed replay,
+/// allocating `apply_update_with`, coalesced lane runs, and the plain
+/// `apply_update` pair — the same discipline the shard workers use.
+fn apply_shard_log(
+    log: &[ShardUpdate],
+    params: &TmParams,
+    base_seed: u64,
+    lanes: [&mut MultiTm; 5],
+    serve_scratch: &mut Option<StepRands>,
+    scratch_c: &mut TrainScratch,
+) {
+    let [a, b, c, d, e] = lanes;
+    let shape = a.shape().clone();
+    // Scalar oracle: keyed replay of the log.
+    for u in log {
+        match &u.kind {
+            UpdateKind::Learn { input, label } => {
+                let r = update_rands(&shape, base_seed, u.seq);
+                train_step(a, input, *label, params, &r);
+            }
+            UpdateKind::ClauseFault { class, clause, force } => {
+                a.set_clause_fault(*class, *clause, *force);
+            }
+        }
+    }
+    // Replica paths: allocating, scratch-carrying, and plain.
+    for u in log {
+        b.apply_update_with(u, params, base_seed, serve_scratch);
+        d.apply_update(u, params, base_seed);
+        e.apply_update(u, params, base_seed);
+    }
+    // Lane path: coalesced Learn runs through the keyed bit-plane
+    // trainer, fault edits applied at run breaks — exactly the shard
+    // workers' batching discipline.
+    let mut run: Vec<(Input, usize, u64)> = Vec::new();
+    for u in log {
+        match &u.kind {
+            UpdateKind::Learn { input, label } => {
+                run.push((input.clone(), *label, u.seq));
+            }
+            UpdateKind::ClauseFault { class, clause, force } => {
+                flush_learn_run(c, &run, params, base_seed, scratch_c);
+                run.clear();
+                c.set_clause_fault(*class, *clause, *force);
+            }
+        }
+    }
+    flush_learn_run(c, &run, params, base_seed, scratch_c);
 }
 
 /// Seeded shard-update log (≈85% Learn, 15% clause-fault edits),
@@ -819,6 +976,42 @@ mod tests {
         assert!(Schedule::parse(&text).is_err());
         let text = demo().to_text().replace("rows=12", "rows=x");
         assert!(Schedule::parse(&text).is_err());
+    }
+
+    #[test]
+    fn net_steps_round_trip_as_v2() {
+        let shape = TmShape::iris();
+        let mut s = Schedule::new(&shape, 0xBEEF);
+        s.steps = vec![
+            Step::Train { rows: 6, seed: 1 },
+            Step::Net { clients: 3, requests: 5, seed: 2 },
+        ];
+        let text = s.to_text();
+        assert!(text.starts_with("tmfpga-corpus v2\n"), "net step must bump the header");
+        let back = Schedule::parse(&text).unwrap();
+        assert_eq!(back, s);
+        assert_eq!(back.to_text(), text);
+        // The same step list under a v1 header must be rejected.
+        let v1 = text.replace("tmfpga-corpus v2", "tmfpga-corpus v1");
+        assert!(Schedule::parse(&v1).is_err(), "net step in a v1 fixture must fail");
+        // A v2 header without net steps still parses (and re-emits v1).
+        let plain = demo().to_text().replace("tmfpga-corpus v1", "tmfpga-corpus v2");
+        let back = Schedule::parse(&plain).unwrap();
+        assert_eq!(back, demo());
+    }
+
+    #[test]
+    fn net_step_replays_clean() {
+        let shape = TmShape::iris();
+        let mut s = Schedule::new(&shape, 0x5EED);
+        s.steps = vec![
+            Step::Train { rows: 8, seed: 1 },
+            Step::Net { clients: 4, requests: 6, seed: 2 },
+            Step::Train { rows: 4, seed: 3 },
+        ];
+        let rep = replay(&s).unwrap();
+        assert_eq!(rep.steps, 3);
+        assert!(rep.checks > 0);
     }
 
     #[test]

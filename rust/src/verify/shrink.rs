@@ -3,7 +3,7 @@
 //!
 //! [`random_schedule`] draws adversarial but *valid* schedules — the
 //! step-kind mix leans on training (where bit-identity is hardest) and
-//! sprinkles fault/force/clone/checkpoint/serve/param churn between
+//! sprinkles fault/force/clone/checkpoint/serve/net/param churn between
 //! steps. [`grow`] replays a seeded batch of them; any divergence is
 //! handed to [`shrink_failure`], which first truncates the schedule at
 //! the failing step (the replayer reports where it stopped) and then
@@ -49,8 +49,14 @@ pub fn random_schedule(shape: &TmShape, seed: u64, len: usize) -> Schedule {
                 kind: rng.next_below(3) as u8,
                 seed: rng.next_u64(),
             }
-        } else if roll < 0.90 {
+        } else if roll < 0.88 {
             Step::Serve { updates: 1 + rng.next_below(20) as u32, seed: rng.next_u64() }
+        } else if roll < 0.90 {
+            Step::Net {
+                clients: (2 + rng.next_below(3)) as u32,
+                requests: (2 + rng.next_below(6)) as u32,
+                seed: rng.next_u64(),
+            }
         } else if roll < 0.94 {
             Step::Clone
         } else if roll < 0.98 {
@@ -71,7 +77,7 @@ pub fn random_schedule(shape: &TmShape, seed: u64, len: usize) -> Schedule {
 
 /// Delta-debugging minimization: remove ever-smaller chunks of the step
 /// list while `fails` keeps returning true, then halve the payloads
-/// (train/infer/serve row counts) of the surviving steps. Returns the
+/// (train/infer/serve/net row counts) of the surviving steps. Returns the
 /// smallest failing schedule found; `fails(&result)` is guaranteed true.
 pub fn minimize(s: &Schedule, fails: &mut dyn FnMut(&Schedule) -> bool) -> Schedule {
     let mut best = s.clone();
@@ -132,6 +138,12 @@ fn halve_payload(step: &Step) -> Option<Step> {
         Step::Infer { rows, seed } if rows > 1 => Some(Step::Infer { rows: rows / 2, seed }),
         Step::Serve { updates, seed } if updates > 1 => {
             Some(Step::Serve { updates: updates / 2, seed })
+        }
+        Step::Net { clients, requests, seed } if requests > 1 => {
+            Some(Step::Net { clients, requests: requests / 2, seed })
+        }
+        Step::Net { clients, requests, seed } if clients > 1 => {
+            Some(Step::Net { clients: clients / 2, requests, seed })
         }
         _ => None,
     }

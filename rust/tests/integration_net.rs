@@ -1,0 +1,207 @@
+//! Network front-end differential suite: the serving stack behind a
+//! line-delimited wire protocol, driven by deterministic scripted
+//! clients over [`tm_fpga::net::SimTransport`] and by a real loopback
+//! socket. Every control decision — slow-client shedding, admission
+//! rejection, deadline expiry — is a pure function of the scripts, so
+//! the sharded server and the scalar oracle must make **bit-identical**
+//! decisions and predictions; accounting is exact, never approximate.
+
+use std::thread;
+use tm_fpga::coordinator::{run_net_soak, NetSoakConfig};
+use tm_fpga::net::{
+    loopback_drill, run_sim, run_tcp, ClientOp, ClientScript, NetConfig, Outcome, Request,
+    TcpTransport, PROTO_VERSION,
+};
+use tm_fpga::serve::{
+    BatcherConfig, ChaosSpec, NetChaosSpec, ScalarOracle, ServeConfig, ShardServer,
+};
+use tm_fpga::tm::{MultiTm, TmParams, TmShape, Xoshiro256};
+
+fn shape() -> TmShape {
+    TmShape::iris()
+}
+
+/// Random machine with realistic include density (testkit seeding).
+fn machine(seed: u64) -> MultiTm {
+    let mut rng = Xoshiro256::new(seed);
+    tm_fpga::testkit::gen::machine(&mut rng, &shape())
+}
+
+fn send(at: u64, req: Request) -> ClientOp {
+    ClientOp::Send { at, bytes: req.encode().into_bytes() }
+}
+
+/// A deterministic feature row for request `salt`.
+fn bit_row(salt: u64) -> Vec<bool> {
+    let mut rng = Xoshiro256::new(salt ^ 0xB17_0F0E);
+    (0..shape().features).map(|_| rng.next_f32() < 0.5).collect()
+}
+
+/// Every connection-fault kind, alone and combined, over both backend
+/// arms: zero outcome mismatches, equal stats, equal replica digests,
+/// exact per-arm accounting.
+#[test]
+fn connection_fault_matrix_agrees_with_oracle() {
+    let zero = NetChaosSpec { torn: 0, half_open: 0, disconnects: 0, slow_loris: 0, floods: 0 };
+    let cases = [
+        ("torn", NetChaosSpec { torn: 2, ..zero }),
+        ("half-open", NetChaosSpec { half_open: 2, ..zero }),
+        ("disconnect", NetChaosSpec { disconnects: 2, ..zero }),
+        ("slow-loris", NetChaosSpec { slow_loris: 2, ..zero }),
+        ("flood", NetChaosSpec { floods: 2, ..zero }),
+        ("full-matrix", NetChaosSpec::full_matrix()),
+    ];
+    for (name, spec) in cases {
+        let cfg = NetSoakConfig {
+            clients: 6,
+            requests_per_client: 24,
+            spec,
+            ..NetSoakConfig::default()
+        };
+        let rep = run_net_soak(&cfg).unwrap();
+        assert!(rep.plan.faulted() >= 1, "{name}: no fault was scheduled");
+        assert!(rep.agrees(), "{name}: arms disagreed: {rep:?}");
+        assert!(rep.server.infers > 0, "{name}: no infer survived: {:?}", rep.server);
+    }
+}
+
+/// Shard kills/stalls/corruptions *underneath* the connection chaos:
+/// explicit server-side overload sheds are the only excused outcome
+/// difference, and they are counted exactly.
+#[test]
+fn shard_faults_under_connection_chaos_stay_accounted() {
+    let cfg = NetSoakConfig {
+        shard_spec: Some(ChaosSpec { kills: 2, stalls: 1, corrupts: 1 }),
+        ..NetSoakConfig::default()
+    };
+    let rep = run_net_soak(&cfg).unwrap();
+    assert!(rep.agrees(), "arms disagreed: {rep:?}");
+    assert_eq!(rep.excused_server_shed as u64, rep.server.server_shed, "{rep:?}");
+}
+
+/// Scripts for `clients` sessions that each grant a tiny read window,
+/// then fire twelve infers into it — the degraded-client shedding path.
+fn flood_scripts(clients: usize, window: u64) -> Vec<ClientScript> {
+    (0..clients)
+        .map(|c| {
+            let mut ops = vec![ClientOp::ReadAllow { at: 0, frames: window }];
+            ops.push(send(1, Request::Hello { version: PROTO_VERSION }));
+            for cid in 1..=12u64 {
+                let bits = bit_row(c as u64 * 100 + cid);
+                ops.push(send(1 + cid, Request::Infer { id: cid, ttl: None, bits }));
+            }
+            // The client recovers late: queued frames may now deliver,
+            // but every shed decision has already been taken.
+            ops.push(ClientOp::ReadAllow { at: 40, frames: 200 });
+            ClientScript { connect_at: 0, ops }
+        })
+        .collect()
+}
+
+/// Satellite: concurrent slow clients flooding one shard. With a write
+/// window of 3 and a debt cap of 3, each session admits exactly the
+/// hello plus five infers (promised reaches the cap) and sheds the
+/// other seven — no response id duplicated, none lost, and the sharded
+/// server and scalar oracle agree bit-for-bit.
+#[test]
+fn concurrent_floods_shed_exactly_and_lose_nothing() {
+    let tm = machine(0xF10D);
+    let params = TmParams::paper_online(&shape());
+    let scripts = flood_scripts(4, 3);
+    let batch = BatcherConfig { max_batch: 4, latency_budget: 2, expect_literals: None };
+    let ncfg = NetConfig { batch, write_buffer_cap: 3, max_in_flight: 64, ..NetConfig::default() };
+
+    let scfg = ServeConfig::new(1, params.clone(), 77);
+    let server = ShardServer::new(&tm, &scfg).unwrap();
+    let (srep, tr) = run_sim(server, scripts.clone(), &shape(), ncfg.clone()).unwrap();
+    let oracle = ScalarOracle::new(tm, params, 77);
+    let (orep, _) = run_sim(oracle, scripts, &shape(), ncfg).unwrap();
+
+    assert_eq!(srep.stats.infers, 20, "{:?}", srep.stats);
+    assert_eq!(srep.stats.shed_requests, 28, "{:?}", srep.stats);
+    assert_eq!(srep.stats.preds, 20, "{:?}", srep.stats);
+    assert_eq!(srep.stats.admission_rejected, 0, "{:?}", srep.stats);
+    // Every request id lands in the outcome map exactly once.
+    assert_eq!(srep.outcomes.len(), 4 * 12);
+    for c in 0..4usize {
+        for cid in 1..=5u64 {
+            assert!(matches!(srep.outcomes[&(c, cid)], Outcome::Pred(_)), "client {c} id {cid}");
+        }
+        for cid in 6..=12u64 {
+            assert_eq!(srep.outcomes[&(c, cid)], Outcome::SlowShed, "client {c} id {cid}");
+        }
+        // Delivered frames: hello-ok, the five admitted preds in request
+        // order, and the final bye — shed requests produce no frame.
+        let frames = tr.delivered(c);
+        assert_eq!(frames.len(), 7, "client {c}: {frames:?}");
+        assert!(frames[0].starts_with("ok hello"), "{frames:?}");
+        for (k, cid) in (1..=5u64).enumerate() {
+            assert!(frames[1 + k].starts_with(&format!("pred id={cid} ")), "{frames:?}");
+        }
+        assert!(frames[6].starts_with("bye"), "{frames:?}");
+    }
+    assert_eq!(srep.stats, orep.stats);
+    assert_eq!(srep.outcomes, orep.outcomes);
+}
+
+/// Admission control: with a global in-flight depth of 3 and a client
+/// that never reads, exactly three infers are admitted and the rest get
+/// typed `admission` errors — deterministic to the request.
+#[test]
+fn admission_control_rejects_beyond_depth_with_typed_errors() {
+    let tm = machine(0xAD31);
+    let params = TmParams::paper_online(&shape());
+    let mut ops = vec![ClientOp::ReadAllow { at: 0, frames: 1 }];
+    ops.push(send(1, Request::Hello { version: PROTO_VERSION }));
+    for cid in 1..=8u64 {
+        let req = Request::Infer { id: cid, ttl: None, bits: bit_row(cid) };
+        ops.push(send(1 + cid, req));
+    }
+    ops.push(ClientOp::ReadAllow { at: 30, frames: 100 });
+    let scripts = vec![ClientScript { connect_at: 0, ops }];
+    let batch = BatcherConfig { max_batch: 4, latency_budget: 2, expect_literals: None };
+    let ncfg =
+        NetConfig { batch, write_buffer_cap: 100, max_in_flight: 3, ..NetConfig::default() };
+    let oracle = ScalarOracle::new(tm, params, 9);
+    let (rep, tr) = run_sim(oracle, scripts, &shape(), ncfg).unwrap();
+
+    assert_eq!(rep.stats.infers, 3, "{:?}", rep.stats);
+    assert_eq!(rep.stats.admission_rejected, 5, "{:?}", rep.stats);
+    assert_eq!(rep.stats.preds, 3, "{:?}", rep.stats);
+    let frames = tr.delivered(0);
+    let rejected = frames.iter().filter(|f| f.contains("kind=admission")).count();
+    assert_eq!(rejected, 5, "{frames:?}");
+    // hello-ok + 3 preds + 5 admission errors + bye.
+    assert_eq!(frames.len(), 10, "{frames:?}");
+    for cid in 1..=3u64 {
+        assert!(matches!(rep.outcomes[&(0, cid)], Outcome::Pred(_)), "id {cid}");
+    }
+    for cid in 4..=8u64 {
+        assert_eq!(rep.outcomes[&(0, cid)], Outcome::AdmissionRejected, "id {cid}");
+    }
+}
+
+/// End-to-end over a real socket: bind an ephemeral loopback port, run
+/// the drill client against the front end, and account every frame.
+#[test]
+fn tcp_loopback_drill_round_trips() {
+    let tm = machine(0x07C9);
+    let params = TmParams::paper_online(&shape());
+    let transport = TcpTransport::bind("127.0.0.1:0").unwrap();
+    let addr = transport.local_addr();
+    let n = 32u64;
+    let features = shape().features;
+    let client = thread::spawn(move || loopback_drill(addr, n, features, 0xD811).unwrap());
+    let ncfg = NetConfig { max_in_flight: 4096, write_buffer_cap: 1024, ..NetConfig::default() };
+    let oracle = ScalarOracle::new(tm, params, 5);
+    let rep = run_tcp(oracle, transport, &shape(), ncfg, Some(60_000)).unwrap();
+    let drill = client.join().unwrap();
+
+    assert_eq!(drill.preds, n, "{drill:?}");
+    assert_eq!(drill.errs, 0, "{drill:?}");
+    assert_eq!(drill.stats.infers, n, "{drill:?}");
+    assert_eq!(drill.bye.preds, n, "{drill:?}");
+    assert_eq!(rep.stats.infers, n, "{:?}", rep.stats);
+    assert_eq!(rep.stats.preds, n, "{:?}", rep.stats);
+    assert_eq!(rep.stats.frame_errors, 0, "{:?}", rep.stats);
+}
