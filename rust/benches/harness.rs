@@ -336,11 +336,74 @@ pub fn bench_regressions(
 /// Allowed slowdown before the regression gate trips.
 pub const MAX_REGRESSION: f64 = 0.25;
 
+/// Wire-telemetry schema self-check, run as part of `--validate`: the
+/// versioned per-model telemetry map that `stats` and `bye` frames
+/// carry must round-trip bit-identically through the public codec,
+/// declare [`tm_fpga::net::TELEMETRY_VERSION`], keep the width
+/// histogram at `WIDTH_BUCKETS` buckets, and leave the eight v1 scalar
+/// counters byte-identical when the map is empty. Schema drift here
+/// breaks every deployed consumer of the stats frame, so CI gates on it
+/// next to the bench-JSON schema.
+pub fn telemetry_schema_check() -> anyhow::Result<()> {
+    use tm_fpga::net::proto::{parse_response, width_bucket, WIDTH_BUCKETS};
+    use tm_fpga::net::{ModelTelemetry, Response, WireStats, TELEMETRY_VERSION};
+    let mut hist = [0u64; WIDTH_BUCKETS];
+    hist[width_bucket(1)] += 3;
+    hist[width_bucket(6)] += 2;
+    hist[width_bucket(64)] += 1;
+    let stats = WireStats {
+        infers: 9,
+        learns: 4,
+        preds: 9,
+        shed: 1,
+        deadline: 2,
+        admission: 3,
+        quarantined: 1,
+        frame_errors: 0,
+        telemetry: vec![
+            ModelTelemetry {
+                model: "tenant-a".to_string(),
+                evictions: 2,
+                rehydrations: 2,
+                full_flushes: 5,
+                deadline_flushes: 1,
+                final_flushes: 1,
+                width_hist: hist,
+                queue_depths: vec![0, 3],
+            },
+            ModelTelemetry { model: "tenant-b".to_string(), ..Default::default() },
+        ],
+    };
+    for resp in
+        [Response::Stats { id: 7, stats: stats.clone() }, Response::Bye { stats: stats.clone() }]
+    {
+        let wire = resp.encode();
+        anyhow::ensure!(
+            wire.contains(&format!(" tv={TELEMETRY_VERSION} models=")),
+            "telemetry frame must declare its version: {wire:?}"
+        );
+        let back = parse_response(wire.trim_end())
+            .map_err(|e| anyhow::anyhow!("telemetry frame failed to re-parse: {e:#}\n{wire:?}"))?;
+        anyhow::ensure!(
+            back == resp,
+            "telemetry map did not round-trip:\n sent {resp:?}\n got {back:?}"
+        );
+    }
+    // With no telemetry rows the frame is the pinned v1 byte surface.
+    let v1 = Response::Bye { stats: WireStats { telemetry: Vec::new(), ..stats } }.encode();
+    anyhow::ensure!(
+        !v1.contains("tv=") && !v1.contains("models="),
+        "empty telemetry must leave the v1 frame untouched: {v1:?}"
+    );
+    Ok(())
+}
+
 /// Entry point of the bench binaries' `--validate` mode
 /// (`cargo bench --bench perf_table -- --validate [--against PREV.json]
-/// FILE...`): schema-check every file; with `--against`, additionally
-/// fail on any measured row regressing more than
-/// [`MAX_REGRESSION`] vs the prior file. Returns the process exit code.
+/// FILE...`): telemetry-schema self-check, then schema-check every
+/// file; with `--against`, additionally fail on any measured row
+/// regressing more than [`MAX_REGRESSION`] vs the prior file. Returns
+/// the process exit code.
 pub fn validate_main(args: &[String]) -> i32 {
     let mut against: Option<String> = None;
     let mut files: Vec<String> = Vec::new();
@@ -363,6 +426,13 @@ pub fn validate_main(args: &[String]) -> i32 {
         return 2;
     }
     let mut failed = false;
+    match telemetry_schema_check() {
+        Ok(()) => println!("ok: wire telemetry schema (round-trip + v1 byte surface)"),
+        Err(e) => {
+            eprintln!("SCHEMA FAIL (wire telemetry): {e:#}");
+            failed = true;
+        }
+    }
     let mut parsed: Vec<(String, Vec<BenchRow>)> = Vec::new();
     for f in &files {
         match validate_bench_file(f) {

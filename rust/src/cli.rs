@@ -5,11 +5,15 @@ use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 
 /// Parsed command line: a subcommand, positional args, and flags.
+/// `flags` keeps the last occurrence of each flag (the common case);
+/// every occurrence is also retained in order so repeatable flags like
+/// `serve --model NAME=SPEC` can accumulate.
 #[derive(Debug, Clone, Default)]
 pub struct Cli {
     pub command: String,
     pub positional: Vec<String>,
     pub flags: BTreeMap<String, String>,
+    pub repeated: BTreeMap<String, Vec<String>>,
 }
 
 impl Cli {
@@ -24,17 +28,17 @@ impl Cli {
                     bail!("empty flag name");
                 }
                 if let Some((k, v)) = name.split_once('=') {
-                    cli.flags.insert(k.to_string(), v.to_string());
+                    cli.push_flag(k, v);
                 } else {
                     // Value = next token unless it's another flag / absent
                     // (then it's a boolean).
                     match it.peek() {
                         Some(v) if !v.starts_with("--") => {
                             let v = it.next().unwrap();
-                            cli.flags.insert(name.to_string(), v);
+                            cli.push_flag(name, &v);
                         }
                         _ => {
-                            cli.flags.insert(name.to_string(), "true".to_string());
+                            cli.push_flag(name, "true");
                         }
                     }
                 }
@@ -45,8 +49,18 @@ impl Cli {
         Ok(cli)
     }
 
+    fn push_flag(&mut self, name: &str, value: &str) {
+        self.repeated.entry(name.to_string()).or_default().push(value.to_string());
+        self.flags.insert(name.to_string(), value.to_string());
+    }
+
     pub fn flag(&self, name: &str) -> Option<&str> {
         self.flags.get(name).map(|s| s.as_str())
+    }
+
+    /// Every occurrence of a repeatable flag, in command-line order.
+    pub fn flag_all(&self, name: &str) -> &[String] {
+        self.repeated.get(name).map(Vec::as_slice).unwrap_or(&[])
     }
 
     pub fn flag_usize(&self, name: &str, default: usize) -> Result<usize> {
@@ -116,19 +130,104 @@ fn usage(msg: impl Into<String>) -> anyhow::Error {
     anyhow::Error::new(UsageError(msg.into()))
 }
 
+/// One `--model NAME=SPEC` occurrence, parsed. `SPEC` is
+/// `DATASET[:seed=N]`; the only built-in dataset geometry is `iris`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelSpec {
+    pub name: String,
+    pub dataset: String,
+    pub seed: Option<u64>,
+}
+
+/// Parse one `--model` value. Names obey the wire grammar
+/// ([`crate::hub::model::valid_model_name`]) so every model registered
+/// from the command line is addressable in `model=` protocol fields.
+pub fn parse_model_spec(s: &str) -> Result<ModelSpec> {
+    let (name, spec) = s
+        .split_once('=')
+        .ok_or_else(|| usage(format!("--model expects NAME=SPEC, got {s:?}")))?;
+    if !crate::hub::model::valid_model_name(name) {
+        return Err(usage(format!(
+            "--model name {name:?} must be 1..=32 chars of [A-Za-z0-9_-]"
+        )));
+    }
+    let mut parts = spec.split(':');
+    let dataset = parts.next().unwrap_or_default().to_string();
+    if dataset != "iris" {
+        return Err(usage(format!(
+            "--model {name}: unknown dataset {dataset:?} (only `iris` is built in)"
+        )));
+    }
+    let mut seed = None;
+    for opt in parts {
+        match opt.split_once('=') {
+            Some(("seed", v)) => {
+                seed = Some(
+                    v.parse()
+                        .with_context(|| format!("--model {name}: seed expects an integer"))?,
+                );
+            }
+            _ => {
+                return Err(usage(format!(
+                    "--model {name}: unknown option {opt:?} (expected seed=N)"
+                )))
+            }
+        }
+    }
+    Ok(ModelSpec { name: name.to_string(), dataset, seed })
+}
+
+/// All `--model` occurrences parsed, with duplicate names rejected.
+pub fn model_specs(cli: &Cli) -> Result<Vec<ModelSpec>> {
+    let mut out: Vec<ModelSpec> = Vec::new();
+    for raw in cli.flag_all("model") {
+        let spec = parse_model_spec(raw)?;
+        if out.iter().any(|m| m.name == spec.name) {
+            return Err(usage(format!("--model {} given more than once", spec.name)));
+        }
+        out.push(spec);
+    }
+    Ok(out)
+}
+
+/// The explicit `serve` subcommand mode, if one was given. Legacy
+/// invocations (no positional mode) select behaviour from flags alone
+/// and stay valid forever; `run`/`soak`/`drill` are the redesigned
+/// spellings.
+pub fn serve_mode(cli: &Cli) -> Result<Option<&str>> {
+    match cli.positional.first().map(String::as_str) {
+        None => Ok(None),
+        Some(m @ ("run" | "soak" | "drill")) => Ok(Some(m)),
+        Some(other) => Err(usage(format!(
+            "unknown serve mode {other:?}; expected run, soak or drill"
+        ))),
+    }
+}
+
 /// Reject invalid `serve` flag combinations before any work starts.
-/// The three serve modes are mutually exclusive: `--chaos-seed` (shard
+/// The legacy mode flags are mutually exclusive: `--chaos-seed` (shard
 /// fault drill), `--net-chaos-seed` (network chaos soak) and `--listen`
-/// (real sockets); mode-specific knobs without their mode flag are
-/// usage errors, as are out-of-range values with no sane meaning.
+/// (real sockets); the subcommand modes `run`/`soak`/`drill` layer on
+/// top (exclusive with the chaos flags). Mode-specific knobs without
+/// their mode are usage errors, as are out-of-range values with no
+/// sane meaning.
 pub fn validate_serve(cli: &Cli) -> Result<()> {
     let has = |n: &str| cli.flag(n).is_some();
+    let mode = serve_mode(cli)?;
     let chaos = has("chaos-seed");
     let net_chaos = has("net-chaos-seed");
     let listen = has("listen");
+    // Real-socket serving: the legacy --listen spelling, or the
+    // run/drill subcommands (which default the listen address).
+    let sockets = listen || matches!(mode, Some("run") | Some("drill"));
     if chaos && net_chaos {
         return Err(usage(
             "--chaos-seed and --net-chaos-seed are exclusive; run one drill at a time",
+        ));
+    }
+    if mode.is_some() && (chaos || net_chaos) {
+        return Err(usage(
+            "serve run/soak/drill are socket/hub modes; chaos drills use the legacy flags",
         ));
     }
     if listen && (chaos || net_chaos) {
@@ -136,8 +235,36 @@ pub fn validate_serve(cli: &Cli) -> Result<()> {
             "--listen serves real sockets; chaos drills use the simulated transport",
         ));
     }
-    if has("drill") && !listen {
+    if mode == Some("soak") && listen {
+        return Err(usage("serve soak drives the simulated clock; drop --listen"));
+    }
+    if has("drill") && !listen && mode != Some("drill") {
         return Err(usage("--drill runs a loopback client against --listen; add --listen ADDR"));
+    }
+    let specs = model_specs(cli)?;
+    if !specs.is_empty() && mode.is_none() {
+        return Err(usage("--model needs a serve mode; try serve run/soak/drill"));
+    }
+    for knob in ["tenants", "budget-models", "evict-every", "rounds"] {
+        if has(knob) && mode != Some("soak") {
+            return Err(usage(format!("--{knob} is a hub-soak knob; use serve soak")));
+        }
+    }
+    if mode == Some("soak") {
+        let tenants = cli.flag_usize("tenants", 4)?;
+        if tenants == 0 {
+            return Err(usage("--tenants must be >= 1"));
+        }
+        if !specs.is_empty() && has("tenants") && specs.len() != tenants {
+            return Err(usage(format!(
+                "--tenants {} disagrees with {} --model spec(s); drop one of them",
+                tenants,
+                specs.len()
+            )));
+        }
+        if cli.flag_usize("rounds", 4)? == 0 {
+            return Err(usage("--rounds must be >= 1"));
+        }
     }
     const DRILL_KNOBS: [&str; 6] =
         ["kills", "stalls", "corrupts", "malformed-every", "recovery-lag", "degraded-depth"];
@@ -146,11 +273,11 @@ pub fn validate_serve(cli: &Cli) -> Result<()> {
             return Err(usage(format!("--{knob} is a fault-drill knob; add --chaos-seed N")));
         }
     }
-    if has("checkpoint-every") && !chaos && !net_chaos {
-        return Err(usage("--checkpoint-every needs --chaos-seed N or --net-chaos-seed N"));
+    if has("checkpoint-every") && !chaos && !net_chaos && mode != Some("soak") {
+        return Err(usage("--checkpoint-every needs --chaos-seed N, --net-chaos-seed N or serve soak"));
     }
     for knob in ["clients", "net-requests", "write-cap", "max-in-flight"] {
-        if has(knob) && !net_chaos && !listen {
+        if has(knob) && !net_chaos && !sockets {
             return Err(usage(format!(
                 "--{knob} is a network-serving knob; add --net-chaos-seed N or --listen ADDR"
             )));
@@ -173,15 +300,16 @@ pub fn validate_serve(cli: &Cli) -> Result<()> {
     if chaos && cli.flag_u64("degraded-depth", 1)? == 0 {
         return Err(usage("--degraded-depth 0 would shed every batch; omit it for unbounded"));
     }
-    if (net_chaos || listen)
+    if (net_chaos || sockets)
         && (cli.flag_usize("clients", 8)? == 0
             || cli.flag_u64("net-requests", 40)? == 0
             || cli.flag_u64("write-cap", 8)? == 0
             || cli.flag_u64("max-in-flight", 256)? == 0
-            || cli.flag_u64("drill", 64)? == 0)
+            || cli.flag_u64("drill", 64)? == 0
+            || cli.flag_u64("requests", 64)? == 0)
     {
         return Err(usage(
-            "--clients/--net-requests/--write-cap/--max-in-flight/--drill must be >= 1",
+            "--clients/--net-requests/--write-cap/--max-in-flight/--drill/--requests must be >= 1",
         ));
     }
     Ok(())
@@ -200,8 +328,25 @@ COMMANDS
                           log     [--ordering 0,1,2,3,4] [--iterations N=16]
                           [--online-learning BOOL=true] [--filter CLASS]
                           [--seed N]
-  serve                   deterministic serving soak: sharded micro-batched
-                          online inference vs the scalar oracle
+  serve [run|soak|drill]  model serving; bare `serve` keeps the legacy
+                          single-model soak and flag spellings
+    serve run             serve the line protocol on a real TCP socket
+                          [--listen ADDR=127.0.0.1:0] [--shards N=2]
+                          [--model NAME=iris[:seed=N]]... (repeatable;
+                          registers hub models addressable via the wire
+                          `model=` field; none = one anonymous model)
+    serve soak            multi-tenant model-hub soak: N tenants interleave
+                          on one hub under a replica memory budget with
+                          forced eviction/rehydration mid-trace; every
+                          tenant must stay bit-identical to its private
+                          scalar oracle   [--tenants N=4] [--events N=200]
+                          [--rounds N=4] [--budget-models N=2]
+                          [--evict-every N=2] [--checkpoint-every N=16]
+                          [--model NAME=iris[:seed=N]]... (names tenants)
+    serve drill           loopback drill: serve on a socket and run an
+                          in-process client, then drain
+                          [--listen ADDR=127.0.0.1:0] [--requests N=64]
+                          legacy spellings (no subcommand):
                           [--shards N=2] [--events N=1000] [--batch N=64]
                           [--deadline TICKS=8] [--labelled F=0.2]
                           [--gap TICKS=1.0] [--seed N=42] [--warmup N=4]
@@ -332,6 +477,59 @@ mod tests {
         usage_err("serve --clients 4");
         usage_err("serve --net-requests 40");
         assert!(validate_serve(&parse("serve --net-chaos-seed 1 --checkpoint-every 8")).is_ok());
+    }
+
+    #[test]
+    fn repeated_flags_accumulate_in_order() {
+        let c = parse("serve soak --model a=iris --model b=iris:seed=9 --seed 1 --seed 2");
+        assert_eq!(c.flag_all("model"), ["a=iris".to_string(), "b=iris:seed=9".to_string()]);
+        assert_eq!(c.flag("model"), Some("b=iris:seed=9"), "plain accessor keeps last");
+        assert_eq!(c.flag_u64("seed", 0).unwrap(), 2, "non-repeatable flags keep last-wins");
+        assert!(parse("serve").flag_all("model").is_empty());
+    }
+
+    #[test]
+    fn model_specs_parse_and_validate() {
+        let m = parse_model_spec("alpha=iris").unwrap();
+        assert_eq!(m, ModelSpec { name: "alpha".into(), dataset: "iris".into(), seed: None });
+        let m = parse_model_spec("b-2=iris:seed=77").unwrap();
+        assert_eq!(m.seed, Some(77));
+        for bad in ["nospec", "=iris", "bad name=iris", "a=mnist", "a=iris:depth=3"] {
+            let err = parse_model_spec(bad).expect_err(bad);
+            assert!(err.downcast_ref::<UsageError>().is_some(), "untyped error for {bad}");
+        }
+        // A malformed seed value is a plain parse error, not a usage error.
+        assert!(parse_model_spec("a=iris:seed=lots")
+            .unwrap_err()
+            .downcast_ref::<UsageError>()
+            .is_none());
+        let dup = model_specs(&parse("serve soak --model a=iris --model a=iris"));
+        assert!(dup.unwrap_err().downcast_ref::<UsageError>().is_some());
+    }
+
+    #[test]
+    fn serve_subcommand_modes_validate() {
+        assert!(validate_serve(&parse("serve soak")).is_ok());
+        assert!(validate_serve(&parse(
+            "serve soak --tenants 4 --budget-models 2 --evict-every 2 --checkpoint-every 8"
+        ))
+        .is_ok());
+        assert!(validate_serve(&parse("serve soak --model a=iris --model b=iris")).is_ok());
+        assert!(validate_serve(&parse("serve soak --tenants 2 --model a=iris --model b=iris"))
+            .is_ok());
+        assert!(validate_serve(&parse("serve run --model a=iris --clients 4")).is_ok());
+        assert!(validate_serve(&parse("serve drill --requests 32")).is_ok());
+        usage_err("serve bogus");
+        usage_err("serve soak --tenants 0");
+        usage_err("serve soak --rounds 0");
+        usage_err("serve soak --listen 127.0.0.1:0");
+        usage_err("serve soak --chaos-seed 1");
+        usage_err("serve run --net-chaos-seed 1");
+        usage_err("serve soak --tenants 3 --model a=iris");
+        usage_err("serve --model a=iris");
+        usage_err("serve --tenants 4");
+        usage_err("serve run --budget-models 2");
+        usage_err("serve drill --requests 0");
     }
 
     #[test]

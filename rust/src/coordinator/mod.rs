@@ -23,8 +23,9 @@ pub use perf::{
 };
 pub use replay::{retention, run_with_replay};
 pub use soak::{
-    run_chaos_soak, run_net_soak, run_soak, ChaosReport, ChaosSoakConfig, NetSoakConfig,
-    NetSoakReport, SoakConfig, SoakReport,
+    run_chaos_soak, run_hub_soak, run_net_soak, run_soak, ChaosReport, ChaosSoakConfig,
+    HubSoakConfig, HubSoakReport, NetSoakConfig, NetSoakReport, SoakConfig, SoakReport,
+    TenantReport,
 };
 pub use report::{figure_csv, figure_summary, sparkline, write_figure_csv};
 pub use sweep::{run_sweep, sweep_csv, SweepConfig, SweepPoint};

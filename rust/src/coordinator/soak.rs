@@ -21,10 +21,12 @@ use crate::data::blocks::{BlockPlan, SetAllocation};
 use crate::data::filter::ClassFilter;
 use crate::data::iris;
 use crate::data::online::{arrival_trace, RomSource, TraceConfig};
+use crate::hub::{HubConfig, ModelHandle, ModelHub, SingleModel};
 use crate::net::{run_sim, seeded_scripts, NetConfig, NetStats, Outcome, ScriptConfig};
 use crate::serve::{
-    run_trace, BatcherConfig, ChaosPlan, ChaosSpec, DriveStats, NetChaosPlan, NetChaosSpec,
-    RecoveryStats, ScalarOracle, ServeConfig, ServeEvent, ShardServer, ShardStats,
+    run_trace, snapshot_bytes, BatcherConfig, ChaosPlan, ChaosSpec, DriveStats, NetChaosPlan,
+    NetChaosSpec, PendingRequest, RecoveryStats, ScalarOracle, ServeBackend, ServeConfig,
+    ServeEvent, ShardServer, ShardStats,
 };
 use crate::tm::clause::Input;
 use crate::tm::machine::MultiTm;
@@ -497,6 +499,10 @@ pub fn run_net_soak(cfg: &NetSoakConfig) -> Result<NetSoakReport> {
         features: shape.features,
         classes: shape.classes,
         ttl: cfg.ttl,
+        // The net soak stays on v1 deliberately: it pins the legacy
+        // single-model wire surface through the hub-era front end.
+        hello_version: 1,
+        model: None,
     };
     let scripts = seeded_scripts(cfg.seed ^ 0x00AD_BEEF, &script_cfg, &plan);
     let ncfg = NetConfig {
@@ -521,11 +527,11 @@ pub fn run_net_soak(cfg: &NetSoakConfig) -> Result<NetSoakReport> {
         None => ShardServer::new(&tm, &scfg)?,
     };
     let t0 = Instant::now();
-    let (srep, _stransport) = run_sim(server, scripts.clone(), &shape, ncfg.clone())?;
+    let (srep, _stransport) = run_sim(SingleModel(server), scripts.clone(), &shape, ncfg.clone())?;
     let wall_s = t0.elapsed().as_secs_f64();
 
     let oracle = ScalarOracle::new(tm, params, cfg.seed);
-    let (orep, _otransport) = run_sim(oracle, scripts, &shape, ncfg)?;
+    let (orep, _otransport) = run_sim(SingleModel(oracle), scripts, &shape, ncfg)?;
 
     let (outcome_mismatches, excused_server_shed) = diff_outcomes(&srep.outcomes, &orep.outcomes);
     let oracle_digest = orep.replicas.first().map(MultiTm::state_digest);
@@ -556,6 +562,285 @@ pub fn run_net_soak(cfg: &NetSoakConfig) -> Result<NetSoakReport> {
         stats_match,
         replicas_match,
         accounting_exact,
+        wall_s,
+    })
+}
+
+/// Multi-tenant hub-soak configuration: N tenants with independent
+/// warm machines and traces, interleaved round-robin against one
+/// shared [`ModelHub`] under a memory budget, with evictions forced
+/// mid-trace.
+#[derive(Debug, Clone)]
+pub struct HubSoakConfig {
+    /// Tenant models sharing the hub (the acceptance floor is 4).
+    pub tenants: usize,
+    /// Arrival-trace length per tenant.
+    pub events_per_tenant: usize,
+    /// Trace segments per tenant: tenants interleave on the hub one
+    /// segment at a time, so residency genuinely churns mid-trace.
+    pub rounds: usize,
+    pub max_batch: usize,
+    pub latency_budget: u64,
+    pub labelled_fraction: f32,
+    pub mean_gap: f64,
+    /// Master seed; tenant `t` derives everything from
+    /// `seed ^ (t+1)·φ64`, so traces and machines are independent.
+    pub seed: u64,
+    pub warmup_epochs: usize,
+    /// Hub memory budget in whole model replicas (`0` = unlimited);
+    /// below `tenants` it forces LRU eviction under load.
+    pub budget_models: usize,
+    /// Hub checkpoint-refresh cadence (bounds rehydration replay).
+    pub checkpoint_every: u64,
+    /// Force-evict tenant `t` after round `r` when
+    /// `(r + t) % evict_period == 0` (`0` = rely on the budget alone).
+    pub evict_period: usize,
+    /// Explicit tenant model names (the CLI's repeatable
+    /// `--model NAME=SPEC`); tenants beyond the list get `tenant-{t}`.
+    pub tenant_names: Vec<String>,
+}
+
+impl HubSoakConfig {
+    /// The hub model name tenant `t` registers and serves under.
+    pub fn tenant_name(&self, t: usize) -> String {
+        self.tenant_names.get(t).cloned().unwrap_or_else(|| format!("tenant-{t}"))
+    }
+}
+
+impl Default for HubSoakConfig {
+    fn default() -> Self {
+        HubSoakConfig {
+            tenants: 4,
+            events_per_tenant: 200,
+            rounds: 4,
+            max_batch: 16,
+            latency_budget: 6,
+            labelled_fraction: 0.25,
+            mean_gap: 1.0,
+            seed: 42,
+            warmup_epochs: 2,
+            budget_models: 2,
+            checkpoint_every: 16,
+            evict_period: 2,
+            tenant_names: Vec::new(),
+        }
+    }
+}
+
+/// One tenant's verdict against its private scalar oracle.
+#[derive(Debug, Clone)]
+pub struct TenantReport {
+    pub name: String,
+    /// Responses the hub arm produced for this tenant.
+    pub responses: usize,
+    /// Id-matched response differences vs the tenant's oracle.
+    pub mismatches: usize,
+    /// Per-segment [`DriveStats`] equal across arms.
+    pub stats_match: bool,
+    /// Final hub replica digest equals the oracle machine's.
+    pub digest_match: bool,
+    pub evictions: u64,
+    pub rehydrations: u64,
+}
+
+/// What one multi-tenant hub soak produced.
+#[derive(Debug, Clone)]
+pub struct HubSoakReport {
+    pub tenants: Vec<TenantReport>,
+    /// Shared bitplane-cache `(hits, misses)` across all tenants.
+    pub plane_cache: (u64, u64),
+    /// Resident model bytes at end of drive (must respect the budget).
+    pub resident_bytes: usize,
+    pub wall_s: f64,
+}
+
+impl HubSoakReport {
+    /// Every tenant bit-identical to its oracle: responses, per-segment
+    /// drive stats and final replica digest.
+    pub fn agrees(&self) -> bool {
+        self.tenants
+            .iter()
+            .all(|t| t.mismatches == 0 && t.stats_match && t.digest_match)
+    }
+}
+
+/// Drives one tenant's flushed batches and sequenced updates into the
+/// shared hub under that tenant's handle.
+struct HubTenant<'a> {
+    hub: &'a mut ModelHub,
+    h: ModelHandle,
+    out: &'a mut Vec<(u64, usize)>,
+}
+
+impl ServeBackend for HubTenant<'_> {
+    fn update(&mut self, kind: UpdateKind) {
+        self.hub.update(self.h, kind).expect("hub soak: update on a live model");
+    }
+
+    fn infer_batch(&mut self, batch: Vec<PendingRequest>) {
+        let ids: Vec<u64> = batch.iter().map(|p| p.id).collect();
+        let inputs: Vec<Input> = batch.into_iter().map(|p| p.input).collect();
+        let classes =
+            self.hub.infer(self.h, &inputs).expect("hub soak: infer on a live model");
+        self.out.extend(ids.into_iter().zip(classes));
+    }
+}
+
+/// [`run_trace`] assigns request ids `0..` per call; when a tenant's
+/// trace is driven one segment at a time, later segments must not reuse
+/// earlier ids. This shim rebases a segment's ids by the infer count of
+/// everything before it — applied identically on both arms, so the
+/// id-matched diff stays aligned.
+struct OffsetIds<'a, B> {
+    inner: &'a mut B,
+    offset: u64,
+}
+
+impl<B: ServeBackend> ServeBackend for OffsetIds<'_, B> {
+    fn update(&mut self, kind: UpdateKind) {
+        self.inner.update(kind);
+    }
+
+    fn infer_batch(&mut self, mut batch: Vec<PendingRequest>) {
+        for p in &mut batch {
+            p.id += self.offset;
+        }
+        self.inner.infer_batch(batch);
+    }
+}
+
+/// Segment `r` of `rounds` over a `len`-event trace.
+fn segment(len: usize, rounds: usize, r: usize) -> (usize, usize) {
+    (len * r / rounds, len * (r + 1) / rounds)
+}
+
+/// Run one multi-tenant hub soak. Each tenant gets an independent
+/// warm-trained machine and arrival trace; all tenants interleave
+/// round-robin on ONE shared [`ModelHub`] under a memory budget of
+/// `budget_models` replicas, with forced evictions between segments —
+/// so every tenant's model is evicted and transparently rehydrated
+/// mid-trace. The oracle arm replays each tenant's identical segmented
+/// trace through a private [`ScalarOracle`]; the report demands
+/// bit-identical responses, per-segment drive stats and final replica
+/// digests per tenant. Agreement proves the hub's eviction/rehydration
+/// machinery is invisible to tenants — the tentpole contract.
+pub fn run_hub_soak(cfg: &HubSoakConfig) -> Result<HubSoakReport> {
+    anyhow::ensure!(cfg.tenants >= 1, "hub soak: need at least one tenant");
+    let shape = TmShape::iris();
+    let params = TmParams::paper_offline(&shape);
+    let bcfg = BatcherConfig {
+        max_batch: cfg.max_batch,
+        latency_budget: cfg.latency_budget,
+        expect_literals: Some(shape.literals()),
+    };
+    bcfg.validate()?;
+    let rounds = cfg.rounds.max(1);
+
+    // Independent per-tenant seed → independent warm machine + trace.
+    let mut tenants = Vec::with_capacity(cfg.tenants);
+    for t in 0..cfg.tenants {
+        let tseed = cfg.seed ^ ((t as u64) + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let tcfg = SoakConfig {
+            shards: 1,
+            events: cfg.events_per_tenant,
+            max_batch: cfg.max_batch,
+            latency_budget: cfg.latency_budget,
+            labelled_fraction: cfg.labelled_fraction,
+            mean_gap: cfg.mean_gap,
+            seed: tseed,
+            warmup_epochs: cfg.warmup_epochs,
+        };
+        let (tm, events) = soak_events(&tcfg, &shape)?;
+        tenants.push((tseed, tm, events));
+    }
+
+    // The budget is denominated in whole replicas of the largest model.
+    let replica_cost = tenants
+        .iter()
+        .map(|(_, tm, _)| snapshot_bytes(tm, &params, 0).len())
+        .max()
+        .unwrap_or(0);
+    let mut hub = ModelHub::new(HubConfig {
+        memory_budget: cfg.budget_models.saturating_mul(replica_cost),
+        checkpoint_every: cfg.checkpoint_every,
+        plane_cache_batches: 64,
+    });
+    let mut handles = Vec::with_capacity(cfg.tenants);
+    for (t, (tseed, tm, _)) in tenants.iter().enumerate() {
+        let name = cfg.tenant_name(t);
+        let h = hub
+            .create(&name, tm.clone(), params.clone(), *tseed)
+            .map_err(|e| anyhow::anyhow!("hub soak: create {name}: {e}"))?;
+        handles.push(h);
+    }
+
+    // Hub arm: tenants interleave one segment per round, forced
+    // evictions between segments, LRU churn from the budget throughout.
+    let t0 = Instant::now();
+    let mut hub_responses: Vec<Vec<(u64, usize)>> = vec![Vec::new(); cfg.tenants];
+    let mut hub_drives: Vec<Vec<DriveStats>> = vec![Vec::new(); cfg.tenants];
+    let mut offsets = vec![0u64; cfg.tenants];
+    for r in 0..rounds {
+        for t in 0..cfg.tenants {
+            let events = &tenants[t].2;
+            let (lo, hi) = segment(events.len(), rounds, r);
+            let seg = &events[lo..hi];
+            let mut backend = HubTenant {
+                hub: &mut hub,
+                h: handles[t],
+                out: &mut hub_responses[t],
+            };
+            let mut shim = OffsetIds { inner: &mut backend, offset: offsets[t] };
+            hub_drives[t].push(run_trace(&mut shim, seg, &bcfg)?);
+            offsets[t] +=
+                seg.iter().filter(|e| matches!(e, ServeEvent::Infer { .. })).count() as u64;
+            if cfg.evict_period > 0 && (r + t) % cfg.evict_period == 0 {
+                hub.evict(handles[t])
+                    .map_err(|e| anyhow::anyhow!("hub soak: forced evict tenant-{t}: {e}"))?;
+            }
+        }
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let resident_bytes = hub.resident_bytes();
+
+    // Oracle arm + per-tenant verdicts.
+    let mut reports = Vec::with_capacity(cfg.tenants);
+    for t in 0..cfg.tenants {
+        let (tseed, tm, events) = &tenants[t];
+        let mut oracle = ScalarOracle::new(tm.clone(), params.clone(), *tseed);
+        let mut oracle_drives = Vec::with_capacity(rounds);
+        let mut offset = 0u64;
+        for r in 0..rounds {
+            let (lo, hi) = segment(events.len(), rounds, r);
+            let seg = &events[lo..hi];
+            let mut shim = OffsetIds { inner: &mut oracle, offset };
+            oracle_drives.push(run_trace(&mut shim, seg, &bcfg)?);
+            offset +=
+                seg.iter().filter(|e| matches!(e, ServeEvent::Infer { .. })).count() as u64;
+        }
+        let oracle_digest = oracle.machine().state_digest();
+        let expected = oracle.into_responses();
+        let mut got = hub_responses[t].clone();
+        got.sort_unstable_by_key(|&(id, _)| id);
+        let (evictions, rehydrations) = hub.lifecycle(handles[t]);
+        let digest = hub
+            .digest(handles[t])
+            .map_err(|e| anyhow::anyhow!("hub soak: digest tenant-{t}: {e}"))?;
+        reports.push(TenantReport {
+            name: cfg.tenant_name(t),
+            responses: got.len(),
+            mismatches: diff_responses(&got, &expected, &[]),
+            stats_match: hub_drives[t] == oracle_drives,
+            digest_match: digest == oracle_digest,
+            evictions,
+            rehydrations,
+        });
+    }
+
+    Ok(HubSoakReport {
+        tenants: reports,
+        plane_cache: hub.plane_cache_stats(),
+        resident_bytes,
         wall_s,
     })
 }
@@ -628,5 +913,28 @@ mod tests {
             rep.server,
             rep.oracle
         );
+    }
+
+    /// The tentpole acceptance: four tenants interleaved on one hub
+    /// under a two-replica budget, forced evictions mid-trace, and every
+    /// tenant still bit-identical to its private oracle — responses,
+    /// per-segment drive stats and final replica digest.
+    #[test]
+    fn default_hub_soak_agrees_per_tenant() {
+        let cfg = HubSoakConfig::default();
+        let rep = run_hub_soak(&cfg).unwrap();
+        assert_eq!(rep.tenants.len(), 4);
+        for t in &rep.tenants {
+            assert!(
+                t.mismatches == 0 && t.stats_match && t.digest_match,
+                "tenant diverged from its oracle: {t:?}"
+            );
+            assert!(t.responses > 0, "{t:?}");
+            assert!(
+                t.evictions >= 1 && t.rehydrations >= 1,
+                "eviction/rehydration must fire mid-trace for every tenant: {t:?}"
+            );
+        }
+        assert!(rep.agrees());
     }
 }

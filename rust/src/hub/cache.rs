@@ -1,0 +1,158 @@
+//! Shared dataset bitplane cache: one transpose per distinct input
+//! batch, shared across every tenant of a [`crate::hub::ModelHub`].
+//!
+//! PR 2 cached transposed [`BitPlanes`] dataset-side so sweep grid
+//! cells share one transpose; the hub generalises that across tenants.
+//! Batches are keyed by content (literal count plus every packed input
+//! word), so two tenants scoring the same rows — replayed calibration
+//! sets, shared evaluation traffic, fleet drills — transpose once and
+//! AND twice. The cache is a bounded FIFO: eviction only costs a
+//! re-transpose, never correctness.
+
+use crate::tm::bitplane::BitPlanes;
+use crate::tm::clause::Input;
+use crate::tm::params::TmShape;
+use std::collections::{HashMap, VecDeque};
+use std::sync::Arc;
+
+/// Content-addressed cache of transposed input batches.
+#[derive(Debug)]
+pub struct PlaneCache {
+    map: HashMap<u64, Arc<BitPlanes>>,
+    order: VecDeque<u64>,
+    capacity: usize,
+    hits: u64,
+    misses: u64,
+}
+
+impl PlaneCache {
+    /// A cache holding at most `capacity` distinct batches (0 is
+    /// clamped to 1: a zero-capacity cache would still be correct but
+    /// only ever thrash).
+    pub fn new(capacity: usize) -> Self {
+        PlaneCache {
+            map: HashMap::new(),
+            order: VecDeque::new(),
+            capacity: capacity.max(1),
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// The transpose of `inputs`, built on first sight and shared
+    /// thereafter. Keyed by literal count + input content, so any two
+    /// shapes with the same literal width share entries soundly (the
+    /// transpose is a pure function of exactly those).
+    pub fn get_or_build(&mut self, shape: &TmShape, inputs: &[Input]) -> Arc<BitPlanes> {
+        let key = batch_key(shape, inputs);
+        if let Some(planes) = self.map.get(&key) {
+            self.hits += 1;
+            return Arc::clone(planes);
+        }
+        self.misses += 1;
+        let planes = Arc::new(BitPlanes::from_inputs(shape, inputs));
+        if self.map.len() >= self.capacity {
+            if let Some(old) = self.order.pop_front() {
+                self.map.remove(&old);
+            }
+        }
+        self.map.insert(key, Arc::clone(&planes));
+        self.order.push_back(key);
+        planes
+    }
+
+    /// `(hits, misses)` since construction.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.hits, self.misses)
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+/// FNV-1a over the batch content: literal width, sample count, then
+/// every packed word of every input in order.
+fn batch_key(shape: &TmShape, inputs: &[Input]) -> u64 {
+    let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+    let mut mix = |v: u64| {
+        for b in v.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+    };
+    mix(shape.literals() as u64);
+    mix(inputs.len() as u64);
+    for input in inputs {
+        for &w in input.words() {
+            mix(w);
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit;
+    use crate::tm::rng::Xoshiro256;
+
+    fn batch(seed: u64, n: usize) -> Vec<Input> {
+        let s = TmShape::iris();
+        let mut rng = Xoshiro256::new(seed);
+        (0..n)
+            .map(|_| Input::pack(&s, &testkit::gen::bool_vec(&mut rng, s.features, 0.5)))
+            .collect()
+    }
+
+    /// The same batch content hits regardless of which tenant asks;
+    /// different content misses.
+    #[test]
+    fn identical_batches_share_one_transpose() {
+        let s = TmShape::iris();
+        let mut cache = PlaneCache::new(8);
+        let a = batch(1, 12);
+        let p1 = cache.get_or_build(&s, &a);
+        let p2 = cache.get_or_build(&s, &a.clone());
+        assert!(Arc::ptr_eq(&p1, &p2), "second tenant must reuse the transpose");
+        assert_eq!(cache.stats(), (1, 1));
+        let b = batch(2, 12);
+        let p3 = cache.get_or_build(&s, &b);
+        assert!(!Arc::ptr_eq(&p1, &p3));
+        assert_eq!(cache.stats(), (1, 2));
+    }
+
+    /// Cached planes are bit-identical to a fresh transpose.
+    #[test]
+    fn cached_planes_match_fresh_transpose() {
+        let s = TmShape::iris();
+        let mut cache = PlaneCache::new(4);
+        let a = batch(3, 20);
+        let cached = cache.get_or_build(&s, &a);
+        let fresh = BitPlanes::from_inputs(&s, &a);
+        assert_eq!(cached.fingerprint(), fresh.fingerprint());
+        assert_eq!(cached.len(), fresh.len());
+    }
+
+    /// Capacity bounds the cache; evicted entries rebuild correctly.
+    #[test]
+    fn fifo_eviction_is_bounded_and_sound() {
+        let s = TmShape::iris();
+        let mut cache = PlaneCache::new(2);
+        let batches: Vec<_> = (0..4).map(|i| batch(10 + i, 6)).collect();
+        for b in &batches {
+            cache.get_or_build(&s, b);
+        }
+        assert_eq!(cache.len(), 2);
+        // The oldest entry was evicted: asking again is a miss, but the
+        // rebuilt transpose is identical.
+        let (_, misses_before) = cache.stats();
+        let rebuilt = cache.get_or_build(&s, &batches[0]);
+        assert_eq!(cache.stats().1, misses_before + 1);
+        assert_eq!(rebuilt.fingerprint(), BitPlanes::from_inputs(&s, &batches[0]).fingerprint());
+    }
+}

@@ -1,0 +1,263 @@
+//! Multi-tenant model hub: handle-based ownership of many served
+//! machines behind one routing surface.
+//!
+//! The serving stack below this module (`crate::serve`, `crate::net`)
+//! was built around one implicit global `MultiTm`. The hub closes
+//! ROADMAP item 1 by making model ownership explicit: a [`ModelHub`]
+//! owns any number of machines behind opaque [`ModelHandle`]s, keeps a
+//! per-model sequenced `ShardUpdate` log keyed `(model_id, base_seed,
+//! seq)`, shares transposed dataset bitplanes across tenants
+//! ([`PlaneCache`]), and evicts cold replicas to in-memory TMFS
+//! checkpoints under a configurable memory budget. Eviction is
+//! *transparent*: the next request against a cold model restores the
+//! checkpoint and replays the retained log suffix, landing on states
+//! bit-identical to a never-evicted replica — the same
+//! checkpoint-plus-keyed-replay argument the shard supervisor's crash
+//! recovery already proves (`crate::serve::supervisor`).
+//!
+//! The split mirrors bosminer's hub/scheduler/stats layering: the hub
+//! owns model lifetime and residency, the front end
+//! (`crate::net::frontend`) schedules per-model micro-batches against
+//! it through the [`HubNetBackend`] trait, and per-model telemetry
+//! flows back over the versioned `stats` frame.
+
+pub mod cache;
+pub mod model;
+
+pub use cache::PlaneCache;
+pub use model::{HubConfig, HubError, ModelHandle, ModelHub};
+
+use crate::serve::{NetBackend, NetFinal, PendingRequest, ServeBackend};
+use crate::tm::clause::Input;
+use crate::tm::params::TmShape;
+use crate::tm::update::UpdateKind;
+
+/// Typed routing failure surfaced to the front end, which maps it onto
+/// the wire's `err kind=` vocabulary (`unknown-model`, `evicting`,
+/// `overload`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouteError {
+    /// No model is bound under the requested name (or the backend
+    /// serves a single anonymous model and a name was given).
+    UnknownModel,
+    /// The model is mid-eviction; the request raced the residency
+    /// barrier and is rejected typed rather than blocked or dropped.
+    Evicting,
+    /// Admitting the model would exceed the hub's memory budget and no
+    /// resident replica is evictable.
+    Budget,
+    /// The hub could not reconstruct the model (a failed checkpoint
+    /// restore) — never expected in-memory, but typed rather than a
+    /// panic in the serving loop.
+    Internal,
+}
+
+impl std::fmt::Display for RouteError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RouteError::UnknownModel => write!(f, "unknown model"),
+            RouteError::Evicting => write!(f, "model is evicting"),
+            RouteError::Budget => write!(f, "model memory budget exhausted"),
+            RouteError::Internal => write!(f, "model could not be rehydrated"),
+        }
+    }
+}
+
+impl std::error::Error for RouteError {}
+
+/// The model-scoped serving backend the front end drives: every update
+/// and inference batch names the model it belongs to, and the backend
+/// reports per-model shape, telemetry and lifecycle counters. This is
+/// the handle-scoped replacement for the implicit-global-machine
+/// [`NetBackend`] surface; any legacy single-model backend still
+/// satisfies it through the blanket impl below (as the anonymous
+/// default model, id 0), which is exactly how pre-hub wire sessions
+/// keep their observable behaviour.
+pub trait HubNetBackend {
+    /// Resolve a model reference to a routable id. `None` means "the
+    /// default model" — what every legacy (model-less) frame binds to.
+    fn bind(&self, model: Option<&str>) -> Result<u64, RouteError>;
+
+    /// Human-readable label for a bound model (telemetry rows).
+    fn model_label(&self, model: u64) -> String;
+
+    /// Shape served by a bound model, when the backend knows it.
+    /// `None` defers to the front end's configured shape.
+    fn model_shape(&self, model: u64) -> Option<TmShape>;
+
+    /// Apply one sequenced update to a model. The front end assigns
+    /// wire-visible `seq` numbers per model in lockstep with this call.
+    fn model_update(&mut self, model: u64, kind: UpdateKind) -> Result<(), RouteError>;
+
+    /// Score one micro-batch against a model. On error the whole batch
+    /// is unserved and the front end answers each request typed.
+    fn model_infer(&mut self, model: u64, batch: Vec<PendingRequest>) -> Result<(), RouteError>;
+
+    /// Responses produced since the last poll, `(request id, class)`.
+    fn poll_responses(&mut self) -> Vec<(u64, usize)>;
+
+    /// Request ids shed server-side since the last poll.
+    fn poll_shed(&mut self) -> Vec<u64>;
+
+    /// Per-shard queue depth snapshot for one model (empty when the
+    /// backend has no internal queues).
+    fn queue_depths(&self, model: u64) -> Vec<u64>;
+
+    /// `(evictions, rehydrations)` lifecycle counters for one model.
+    fn lifecycle(&self, model: u64) -> (u64, u64);
+
+    /// Ids of every model this backend serves, ascending.
+    fn models(&self) -> Vec<u64>;
+
+    /// Finish serving: join/collect replicas for the differential
+    /// report. Replica order follows [`HubNetBackend::models`].
+    fn finalize(self) -> anyhow::Result<NetFinal>;
+}
+
+/// Adapter serving one legacy single-model [`NetBackend`] as a
+/// degenerate hub hosting one anonymous model under id 0. Model-less
+/// frames route to it; named lookups fail typed — which is what keeps
+/// the pre-hub wire behaviour byte-identical through the front-end
+/// redesign. (A blanket `impl<B: NetBackend> HubNetBackend for B`
+/// would be cleaner but coherence forbids it next to the concrete
+/// [`ModelHub`] impl below, so the wrapper is explicit.)
+pub struct SingleModel<B: NetBackend>(pub B);
+
+impl<B: NetBackend> HubNetBackend for SingleModel<B> {
+    fn bind(&self, model: Option<&str>) -> Result<u64, RouteError> {
+        match model {
+            None => Ok(0),
+            Some(_) => Err(RouteError::UnknownModel),
+        }
+    }
+
+    fn model_label(&self, _model: u64) -> String {
+        "default".to_string()
+    }
+
+    fn model_shape(&self, _model: u64) -> Option<TmShape> {
+        None
+    }
+
+    fn model_update(&mut self, _model: u64, kind: UpdateKind) -> Result<(), RouteError> {
+        ServeBackend::update(&mut self.0, kind);
+        Ok(())
+    }
+
+    fn model_infer(&mut self, _model: u64, batch: Vec<PendingRequest>) -> Result<(), RouteError> {
+        ServeBackend::infer_batch(&mut self.0, batch);
+        Ok(())
+    }
+
+    fn poll_responses(&mut self) -> Vec<(u64, usize)> {
+        NetBackend::poll_responses(&mut self.0)
+    }
+
+    fn poll_shed(&mut self) -> Vec<u64> {
+        NetBackend::poll_shed(&mut self.0)
+    }
+
+    fn queue_depths(&self, _model: u64) -> Vec<u64> {
+        NetBackend::queue_depths(&self.0)
+    }
+
+    fn lifecycle(&self, _model: u64) -> (u64, u64) {
+        (0, 0)
+    }
+
+    fn models(&self) -> Vec<u64> {
+        vec![0]
+    }
+
+    fn finalize(self) -> anyhow::Result<NetFinal> {
+        NetBackend::finalize(self.0)
+    }
+}
+
+impl From<HubError> for RouteError {
+    fn from(e: HubError) -> RouteError {
+        match e {
+            HubError::Evicting { .. } => RouteError::Evicting,
+            HubError::BudgetExhausted { .. } => RouteError::Budget,
+            HubError::UnknownModel(_) | HubError::BadName(_) | HubError::DuplicateName(_) => {
+                RouteError::UnknownModel
+            }
+            HubError::Corrupt { .. } => RouteError::Internal,
+        }
+    }
+}
+
+/// The hub itself is the real multi-model backend: every wire `model=`
+/// dimension lands here. The hub serves synchronously — responses are
+/// produced at dispatch and streamed to the front end on the next poll;
+/// it never sheds server-side (refusals are typed `RouteError`s) and
+/// has no internal queues.
+impl HubNetBackend for ModelHub {
+    fn bind(&self, model: Option<&str>) -> Result<u64, RouteError> {
+        let h = match model {
+            None => self.default_handle(),
+            Some(name) => self.resolve(name),
+        };
+        h.map(|h| h.id()).ok_or(RouteError::UnknownModel)
+    }
+
+    fn model_label(&self, model: u64) -> String {
+        self.name(ModelHandle::from_id(model)).unwrap_or("?").to_string()
+    }
+
+    fn model_shape(&self, model: u64) -> Option<TmShape> {
+        self.shape_of(ModelHandle::from_id(model)).cloned()
+    }
+
+    fn model_update(&mut self, model: u64, kind: UpdateKind) -> Result<(), RouteError> {
+        self.update(ModelHandle::from_id(model), kind).map(|_seq| ()).map_err(RouteError::from)
+    }
+
+    fn model_infer(&mut self, model: u64, batch: Vec<PendingRequest>) -> Result<(), RouteError> {
+        let ids: Vec<u64> = batch.iter().map(|p| p.id).collect();
+        let inputs: Vec<Input> = batch.into_iter().map(|p| p.input).collect();
+        let classes = self.infer(ModelHandle::from_id(model), &inputs)?;
+        debug_assert_eq!(ids.len(), classes.len());
+        self.responses.extend(ids.into_iter().zip(classes));
+        Ok(())
+    }
+
+    fn poll_responses(&mut self) -> Vec<(u64, usize)> {
+        let fresh = self.responses[self.polled..].to_vec();
+        self.polled = self.responses.len();
+        fresh
+    }
+
+    fn poll_shed(&mut self) -> Vec<u64> {
+        Vec::new()
+    }
+
+    fn queue_depths(&self, _model: u64) -> Vec<u64> {
+        Vec::new()
+    }
+
+    fn lifecycle(&self, model: u64) -> (u64, u64) {
+        ModelHub::lifecycle(self, ModelHandle::from_id(model))
+    }
+
+    fn models(&self) -> Vec<u64> {
+        self.handles().iter().map(|h| h.id()).collect()
+    }
+
+    /// Rehydrates each model in turn (one at a time, so a budget sized
+    /// for fewer than all models still drains cleanly) and clones its
+    /// final state into the replica report, id-ascending.
+    fn finalize(mut self) -> anyhow::Result<NetFinal> {
+        let mut responses = std::mem::take(&mut self.responses);
+        responses.sort_unstable_by_key(|&(id, _)| id);
+        let mut replicas = Vec::new();
+        for h in self.handles() {
+            let machine = self
+                .machine(h)
+                .map_err(|e| anyhow::anyhow!("hub drain: model {}: {e}", h.id()))?
+                .clone();
+            replicas.push(machine);
+        }
+        Ok(NetFinal { responses, shed: Vec::new(), replicas })
+    }
+}

@@ -1,0 +1,672 @@
+//! The [`ModelHub`]: handle-based ownership, LRU residency under a
+//! memory budget, and bit-identical eviction/rehydration.
+//!
+//! Every tenant model is one [`ModelEntry`]: its run-time params, a
+//! per-model `base_seed`, a monotone per-model update `seq`, a TMFS v2
+//! checkpoint ([`crate::serve::snapshot_bytes`]) taken at
+//! `checkpoint_seq`, and the retained log suffix `(checkpoint_seq,
+//! seq]`. A *hot* entry additionally holds the live machine; a *cold*
+//! one holds only checkpoint + log. Because all `Learn` randomness is
+//! keyed `(base_seed, seq)` (`crate::tm::update`), rehydration —
+//! restore the checkpoint, replay the retained suffix — reconstructs
+//! the machine bit-identically no matter when or how often the model
+//! was evicted in between. That determinism argument is proven per
+//! shard by the supervisor's crash recovery; the hub reuses it verbatim
+//! for memory management.
+
+use crate::hub::cache::PlaneCache;
+use crate::serve::{restore, snapshot_bytes};
+use crate::tm::clause::Input;
+use crate::tm::machine::MultiTm;
+use crate::tm::params::{TmParams, TmShape};
+use crate::tm::rng::StepRands;
+use crate::tm::update::{ShardUpdate, UpdateKind};
+
+use std::collections::BTreeMap;
+
+/// Opaque handle to a hub-owned model. The id inside is stable for the
+/// hub's lifetime and doubles as the wire-protocol model id.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct ModelHandle {
+    id: u64,
+}
+
+impl ModelHandle {
+    /// The routable model id (wire `model` dimension, telemetry key).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Rebuild a handle from a routed id. Requests carrying a stale or
+    /// forged id fail typed at the next hub call, so this is safe to
+    /// expose to the routing layer.
+    pub fn from_id(id: u64) -> Self {
+        ModelHandle { id }
+    }
+}
+
+/// Hub-wide policy knobs.
+#[derive(Debug, Clone)]
+pub struct HubConfig {
+    /// Upper bound on resident (hot) model state, in bytes — the
+    /// checkpoint encoding is the accounting unit, so the bound is a
+    /// deterministic function of model shapes. `0` = unlimited.
+    pub memory_budget: usize,
+    /// Refresh a model's checkpoint every N updates, bounding the
+    /// retained log (and thus rehydration replay cost). `0` disables
+    /// refresh: the creation-time checkpoint plus the full log is kept.
+    pub checkpoint_every: u64,
+    /// Distinct input batches the shared bitplane cache retains.
+    pub plane_cache_batches: usize,
+}
+
+impl Default for HubConfig {
+    fn default() -> Self {
+        HubConfig { memory_budget: 0, checkpoint_every: 64, plane_cache_batches: 64 }
+    }
+}
+
+/// Typed hub failure. Nothing in the hub drops work silently: every
+/// refusal names its cause.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum HubError {
+    /// No model under that name/handle.
+    UnknownModel(String),
+    /// The model is mid-eviction; retry after the barrier completes.
+    Evicting { model: u64 },
+    /// Making the model resident would exceed the memory budget and no
+    /// other replica is evictable.
+    BudgetExhausted { need: usize, resident: usize, budget: usize },
+    /// Model names are 1..=32 chars of `[A-Za-z0-9_-]`.
+    BadName(String),
+    /// The name is already bound.
+    DuplicateName(String),
+    /// A checkpoint failed to restore — an invariant break, surfaced
+    /// typed instead of panicking in the serving loop.
+    Corrupt { model: u64, detail: String },
+}
+
+impl std::fmt::Display for HubError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            HubError::UnknownModel(name) => write!(f, "hub: unknown model {name}"),
+            HubError::Evicting { model } => write!(f, "hub: model {model} is evicting"),
+            HubError::BudgetExhausted { need, resident, budget } => write!(
+                f,
+                "hub: memory budget exhausted ({need} bytes needed, {resident} resident, \
+                 {budget} budget, nothing evictable)"
+            ),
+            HubError::BadName(name) => {
+                write!(f, "hub: bad model name {name:?} (want 1..=32 of [A-Za-z0-9_-])")
+            }
+            HubError::DuplicateName(name) => write!(f, "hub: model {name} already exists"),
+            HubError::Corrupt { model, detail } => {
+                write!(f, "hub: model {model} checkpoint corrupt: {detail}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for HubError {}
+
+/// A valid hub/wire model name: 1..=32 chars of `[A-Za-z0-9_-]`. The
+/// same grammar the wire protocol enforces on `model=` fields, kept
+/// dependency-free here so the hub never imports the net layer.
+pub fn valid_model_name(name: &str) -> bool {
+    !name.is_empty()
+        && name.len() <= 32
+        && name.bytes().all(|b| b.is_ascii_alphanumeric() || b == b'_' || b == b'-')
+}
+
+/// Where a model's machine currently lives.
+enum Residency {
+    /// Live machine, servable.
+    Hot(Box<MultiTm>),
+    /// Mid-eviction barrier: the machine is still resident (so the
+    /// budget still counts it) but requests are refused typed until
+    /// [`ModelHub::finish_evict`] completes the transition.
+    Evicting(Box<MultiTm>),
+    /// Only checkpoint + retained log remain; the next request
+    /// rehydrates.
+    Cold,
+}
+
+struct ModelEntry {
+    name: String,
+    shape: TmShape,
+    params: TmParams,
+    base_seed: u64,
+    /// Last applied update seq (the per-model log clock).
+    seq: u64,
+    /// TMFS v2 bytes capturing the machine at `checkpoint_seq`.
+    checkpoint: Vec<u8>,
+    checkpoint_seq: u64,
+    /// Retained updates `(checkpoint_seq, seq]`, replayed on rehydrate.
+    log: Vec<ShardUpdate>,
+    /// Resident cost in bytes (= checkpoint length, a deterministic
+    /// shape-derived proxy for the live machine's footprint).
+    cost: usize,
+    evictions: u64,
+    rehydrations: u64,
+    scratch: Option<StepRands>,
+    state: Residency,
+}
+
+/// Owns many served models behind opaque handles; see the module docs.
+pub struct ModelHub {
+    cfg: HubConfig,
+    entries: BTreeMap<u64, ModelEntry>,
+    names: BTreeMap<String, u64>,
+    /// Touch order, oldest first. Contains every model id; eviction
+    /// scans for the coldest *hot* one.
+    lru: Vec<u64>,
+    next_id: u64,
+    default_model: Option<u64>,
+    pub(crate) planes: PlaneCache,
+    /// Streamed `(request id, class)` responses for the net backend.
+    pub(crate) responses: Vec<(u64, usize)>,
+    pub(crate) polled: usize,
+}
+
+impl ModelHub {
+    pub fn new(cfg: HubConfig) -> Self {
+        let plane_cap = cfg.plane_cache_batches;
+        ModelHub {
+            cfg,
+            entries: BTreeMap::new(),
+            names: BTreeMap::new(),
+            lru: Vec::new(),
+            next_id: 0,
+            default_model: None,
+            planes: PlaneCache::new(plane_cap),
+            responses: Vec::new(),
+            polled: 0,
+        }
+    }
+
+    /// Register a model under `name`. The first created model becomes
+    /// the hub's default (what model-less wire frames route to). The
+    /// machine is checkpointed at seq 0 immediately, so eviction is
+    /// possible from the first tick.
+    pub fn create(
+        &mut self,
+        name: &str,
+        machine: MultiTm,
+        params: TmParams,
+        base_seed: u64,
+    ) -> Result<ModelHandle, HubError> {
+        if !valid_model_name(name) {
+            return Err(HubError::BadName(name.to_string()));
+        }
+        if self.names.contains_key(name) {
+            return Err(HubError::DuplicateName(name.to_string()));
+        }
+        let shape = machine.shape().clone();
+        let checkpoint = snapshot_bytes(&machine, &params, 0);
+        let cost = checkpoint.len();
+        if self.cfg.memory_budget > 0 && cost > self.cfg.memory_budget {
+            return Err(HubError::BudgetExhausted {
+                need: cost,
+                resident: self.resident_bytes(),
+                budget: self.cfg.memory_budget,
+            });
+        }
+        self.make_room(cost, u64::MAX)?;
+        let id = self.next_id;
+        self.next_id += 1;
+        self.entries.insert(
+            id,
+            ModelEntry {
+                name: name.to_string(),
+                shape,
+                params,
+                base_seed,
+                seq: 0,
+                checkpoint,
+                checkpoint_seq: 0,
+                log: Vec::new(),
+                cost,
+                evictions: 0,
+                rehydrations: 0,
+                scratch: None,
+                state: Residency::Hot(Box::new(machine)),
+            },
+        );
+        self.names.insert(name.to_string(), id);
+        self.lru.push(id);
+        if self.default_model.is_none() {
+            self.default_model = Some(id);
+        }
+        Ok(ModelHandle { id })
+    }
+
+    /// Handle for a model by name.
+    pub fn resolve(&self, name: &str) -> Option<ModelHandle> {
+        self.names.get(name).map(|&id| ModelHandle { id })
+    }
+
+    /// The default model (first created), if any.
+    pub fn default_handle(&self) -> Option<ModelHandle> {
+        self.default_model.map(|id| ModelHandle { id })
+    }
+
+    /// Every model handle, ascending by id.
+    pub fn handles(&self) -> Vec<ModelHandle> {
+        self.entries.keys().map(|&id| ModelHandle { id }).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Bytes of resident model state (hot + mid-eviction replicas).
+    pub fn resident_bytes(&self) -> usize {
+        self.entries
+            .values()
+            .filter(|e| !matches!(e.state, Residency::Cold))
+            .map(|e| e.cost)
+            .sum()
+    }
+
+    /// True when the model's machine is live (servable without
+    /// rehydration).
+    pub fn is_hot(&self, h: ModelHandle) -> bool {
+        matches!(self.entries.get(&h.id).map(|e| &e.state), Some(Residency::Hot(_)))
+    }
+
+    /// `(evictions, rehydrations)` for one model.
+    pub fn lifecycle(&self, h: ModelHandle) -> (u64, u64) {
+        self.entries.get(&h.id).map(|e| (e.evictions, e.rehydrations)).unwrap_or((0, 0))
+    }
+
+    /// Shared bitplane-cache `(hits, misses)`.
+    pub fn plane_cache_stats(&self) -> (u64, u64) {
+        self.planes.stats()
+    }
+
+    /// The name a model was registered under.
+    pub fn name(&self, h: ModelHandle) -> Option<&str> {
+        self.entries.get(&h.id).map(|e| e.name.as_str())
+    }
+
+    /// The shape a model serves.
+    pub fn shape_of(&self, h: ModelHandle) -> Option<&TmShape> {
+        self.entries.get(&h.id).map(|e| &e.shape)
+    }
+
+    /// Updates retained since the model's last checkpoint (replay cost
+    /// of the next rehydration).
+    pub fn retained_log_len(&self, h: ModelHandle) -> usize {
+        self.entries.get(&h.id).map(|e| e.log.len()).unwrap_or(0)
+    }
+
+    fn entry(&self, id: u64) -> Result<&ModelEntry, HubError> {
+        self.entries.get(&id).ok_or(HubError::UnknownModel(format!("#{id}")))
+    }
+
+    fn touch(&mut self, id: u64) {
+        self.lru.retain(|&x| x != id);
+        self.lru.push(id);
+    }
+
+    /// Evict coldest hot replicas (never `keep`) until `need` more
+    /// bytes fit under the budget. Typed failure when nothing is
+    /// evictable — never a silent drop, never an over-budget admit.
+    fn make_room(&mut self, need: usize, keep: u64) -> Result<(), HubError> {
+        if self.cfg.memory_budget == 0 {
+            return Ok(());
+        }
+        while self.resident_bytes() + need > self.cfg.memory_budget {
+            let victim = self.lru.iter().copied().find(|&id| {
+                id != keep && matches!(self.entries[&id].state, Residency::Hot(_))
+            });
+            match victim {
+                Some(id) => self.evict_resident(id),
+                None => {
+                    return Err(HubError::BudgetExhausted {
+                        need,
+                        resident: self.resident_bytes(),
+                        budget: self.cfg.memory_budget,
+                    })
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Drop a hot machine (checkpoint + retained log stay behind).
+    fn evict_resident(&mut self, id: u64) {
+        let entry = self.entries.get_mut(&id).expect("evict_resident: known id");
+        if matches!(entry.state, Residency::Hot(_)) {
+            entry.state = Residency::Cold;
+            entry.evictions += 1;
+        }
+    }
+
+    /// Force-evict a model now (the soak's mid-trace drill, or an
+    /// operator drop). No-op on a cold model; typed error mid-evict.
+    pub fn evict(&mut self, h: ModelHandle) -> Result<(), HubError> {
+        match &self.entry(h.id)?.state {
+            Residency::Evicting(_) => Err(HubError::Evicting { model: h.id }),
+            Residency::Cold => Ok(()),
+            Residency::Hot(_) => {
+                self.evict_resident(h.id);
+                Ok(())
+            }
+        }
+    }
+
+    /// Open the eviction barrier: the machine stays resident but every
+    /// request against the model is refused with
+    /// [`HubError::Evicting`] until [`ModelHub::finish_evict`]. This is
+    /// the deterministic stand-in for an eviction racing in-flight
+    /// traffic.
+    pub fn begin_evict(&mut self, h: ModelHandle) -> Result<(), HubError> {
+        self.entry(h.id)?;
+        let entry = self.entries.get_mut(&h.id).expect("begin_evict: known id");
+        match std::mem::replace(&mut entry.state, Residency::Cold) {
+            Residency::Hot(m) => {
+                entry.state = Residency::Evicting(m);
+                Ok(())
+            }
+            Residency::Evicting(m) => {
+                entry.state = Residency::Evicting(m);
+                Err(HubError::Evicting { model: h.id })
+            }
+            Residency::Cold => Ok(()),
+        }
+    }
+
+    /// Close the eviction barrier: drop the machine, count the
+    /// eviction.
+    pub fn finish_evict(&mut self, h: ModelHandle) -> Result<(), HubError> {
+        self.entry(h.id)?;
+        let entry = self.entries.get_mut(&h.id).expect("finish_evict: known id");
+        if let Residency::Evicting(_) = entry.state {
+            entry.state = Residency::Cold;
+            entry.evictions += 1;
+        }
+        Ok(())
+    }
+
+    /// Make a model's machine live, rehydrating bit-identically from
+    /// checkpoint + retained-log replay if it was evicted. Touches LRU.
+    fn ensure_hot(&mut self, id: u64) -> Result<(), HubError> {
+        match &self.entry(id)?.state {
+            Residency::Hot(_) => {
+                self.touch(id);
+                Ok(())
+            }
+            Residency::Evicting(_) => Err(HubError::Evicting { model: id }),
+            Residency::Cold => {
+                let cost = self.entries[&id].cost;
+                self.make_room(cost, id)?;
+                let entry = self.entries.get_mut(&id).expect("ensure_hot: known id");
+                let snap = restore(&entry.checkpoint).map_err(|e| HubError::Corrupt {
+                    model: id,
+                    detail: format!("{e:#}"),
+                })?;
+                debug_assert_eq!(snap.seq, entry.checkpoint_seq);
+                let mut machine = snap.machine;
+                for u in &entry.log {
+                    machine.apply_update_with(u, &entry.params, entry.base_seed, &mut entry.scratch);
+                }
+                entry.state = Residency::Hot(Box::new(machine));
+                entry.rehydrations += 1;
+                self.touch(id);
+                Ok(())
+            }
+        }
+    }
+
+    /// Apply one sequenced update to a model; returns its new seq.
+    /// Rehydrates transparently; refreshes the checkpoint every
+    /// `checkpoint_every` updates so the retained log stays bounded.
+    pub fn update(&mut self, h: ModelHandle, kind: UpdateKind) -> Result<u64, HubError> {
+        self.ensure_hot(h.id)?;
+        let entry = self.entries.get_mut(&h.id).expect("update: ensured hot");
+        entry.seq += 1;
+        let u = ShardUpdate { seq: entry.seq, kind };
+        let Residency::Hot(machine) = &mut entry.state else {
+            unreachable!("update: ensure_hot left the model cold")
+        };
+        machine.apply_update_with(&u, &entry.params, entry.base_seed, &mut entry.scratch);
+        entry.log.push(u);
+        if self.cfg.checkpoint_every > 0
+            && entry.seq - entry.checkpoint_seq >= self.cfg.checkpoint_every
+        {
+            let Residency::Hot(machine) = &entry.state else {
+                unreachable!("update: ensure_hot left the model cold")
+            };
+            entry.checkpoint = snapshot_bytes(machine, &entry.params, entry.seq);
+            entry.checkpoint_seq = entry.seq;
+            entry.log.clear();
+            entry.cost = entry.checkpoint.len();
+        }
+        Ok(entry.seq)
+    }
+
+    /// Score a batch of inputs against a model, in order. Batches of
+    /// more than one sample go through the shared bitplane cache
+    /// (transpose once per distinct batch, across all tenants);
+    /// single samples take the scalar path. Both are bit-identical to
+    /// the scalar oracle — the engine-lane equivalence the corpus
+    /// harness pins.
+    pub fn infer(&mut self, h: ModelHandle, inputs: &[Input]) -> Result<Vec<usize>, HubError> {
+        self.ensure_hot(h.id)?;
+        let entry = self.entries.get_mut(&h.id).expect("infer: ensured hot");
+        let Residency::Hot(machine) = &mut entry.state else {
+            unreachable!("infer: ensure_hot left the model cold")
+        };
+        if inputs.len() > 1 {
+            let planes = self.planes.get_or_build(&entry.shape, inputs);
+            Ok(machine.predict_planes(&planes, &entry.params))
+        } else {
+            Ok(inputs.iter().map(|x| machine.predict(x, &entry.params)).collect())
+        }
+    }
+
+    /// Read access to a model's machine (rehydrating if needed) — the
+    /// digest/replica surface the differential soaks assert on.
+    pub fn machine(&mut self, h: ModelHandle) -> Result<&MultiTm, HubError> {
+        self.ensure_hot(h.id)?;
+        let entry = self.entries.get(&h.id).expect("machine: ensured hot");
+        let Residency::Hot(machine) = &entry.state else {
+            unreachable!("machine: ensure_hot left the model cold")
+        };
+        Ok(machine)
+    }
+
+    /// State digest of a model's current machine (rehydrating if
+    /// needed).
+    pub fn digest(&mut self, h: ModelHandle) -> Result<u64, HubError> {
+        Ok(self.machine(h)?.state_digest())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit;
+    use crate::tm::rng::Xoshiro256;
+
+    fn hub_model(seed: u64) -> (MultiTm, TmParams) {
+        let s = TmShape::iris();
+        let mut rng = Xoshiro256::new(seed);
+        (testkit::gen::machine(&mut rng, &s), TmParams::paper_online(&s))
+    }
+
+    fn learn(seed: u64, i: u64) -> UpdateKind {
+        let s = TmShape::iris();
+        let mut rng = Xoshiro256::new(seed ^ i.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        UpdateKind::Learn {
+            input: Input::pack(&s, &testkit::gen::bool_vec(&mut rng, s.features, 0.5)),
+            label: rng.next_below(s.classes),
+        }
+    }
+
+    /// The heart of the tentpole: evict mid-log, keep updating, and the
+    /// rehydrated machine is bit-identical to a never-evicted mirror
+    /// applying the same `(base_seed, seq)` log.
+    #[test]
+    fn evict_rehydrate_is_bit_identical() {
+        let (machine, params) = hub_model(0xA11);
+        let mut mirror = machine.clone();
+        let mut hub =
+            ModelHub::new(HubConfig { checkpoint_every: 8, ..Default::default() });
+        let h = hub.create("tenant0", machine, params.clone(), 0xBA5E).unwrap();
+        for i in 0..30u64 {
+            let kind = learn(7, i);
+            let seq = hub.update(h, kind.clone()).unwrap();
+            assert_eq!(seq, i + 1, "hub seq tracks the log clock");
+            mirror.apply_update(&ShardUpdate { seq, kind }, &params, 0xBA5E);
+            if i % 11 == 3 {
+                hub.evict(h).unwrap();
+                assert!(!hub.is_hot(h));
+            }
+        }
+        assert_eq!(hub.digest(h).unwrap(), mirror.state_digest());
+        let (ev, reh) = hub.lifecycle(h);
+        assert!(ev >= 2 && reh >= 2, "evictions {ev}, rehydrations {reh}");
+        // Checkpoint refresh bounds the retained log.
+        assert!(hub.retained_log_len(h) <= 8);
+    }
+
+    /// Batched inference through the shared plane cache matches the
+    /// scalar path exactly, and a second tenant reuses the transpose.
+    #[test]
+    fn batched_inference_matches_scalar_and_shares_planes() {
+        let (m0, params) = hub_model(0xB0);
+        let (m1, _) = hub_model(0xB1);
+        let s = TmShape::iris();
+        let mut hub = ModelHub::new(HubConfig::default());
+        let h0 = hub.create("a", m0.clone(), params.clone(), 1).unwrap();
+        let h1 = hub.create("b", m1, params.clone(), 2).unwrap();
+        let mut rng = Xoshiro256::new(0xBEEF);
+        let batch: Vec<Input> = (0..10)
+            .map(|_| Input::pack(&s, &testkit::gen::bool_vec(&mut rng, s.features, 0.5)))
+            .collect();
+        let got = hub.infer(h0, &batch).unwrap();
+        let mut scalar = m0;
+        let want: Vec<usize> = batch.iter().map(|x| scalar.predict(x, &params)).collect();
+        assert_eq!(got, want);
+        hub.infer(h1, &batch).unwrap();
+        let (hits, misses) = hub.plane_cache_stats();
+        assert_eq!((hits, misses), (1, 1), "tenant b must reuse tenant a's transpose");
+    }
+
+    /// LRU under a 2-model budget: the coldest hot replica is evicted,
+    /// and touching a cold model brings it back while staying in
+    /// budget.
+    #[test]
+    fn lru_eviction_respects_budget() {
+        let (m, params) = hub_model(0xC0);
+        let cost = snapshot_bytes(&m, &params, 0).len();
+        let mut hub = ModelHub::new(HubConfig {
+            memory_budget: 2 * cost,
+            ..Default::default()
+        });
+        let ha = hub.create("a", m.clone(), params.clone(), 1).unwrap();
+        let hb = hub.create("b", m.clone(), params.clone(), 2).unwrap();
+        let hc = hub.create("c", m.clone(), params.clone(), 3).unwrap();
+        // Creating c had to evict the coldest (a).
+        assert!(!hub.is_hot(ha));
+        assert!(hub.is_hot(hb) && hub.is_hot(hc));
+        assert!(hub.resident_bytes() <= 2 * cost);
+        // Touch b, then wake a: the coldest hot model is now c.
+        hub.infer(hb, &[]).unwrap();
+        hub.infer(ha, &[]).unwrap();
+        assert!(hub.is_hot(ha) && hub.is_hot(hb));
+        assert!(!hub.is_hot(hc));
+        assert!(hub.resident_bytes() <= 2 * cost);
+    }
+
+    /// The mid-eviction barrier refuses traffic typed — the
+    /// deterministic form of "eviction racing an in-flight Learn" —
+    /// and the model is consistent once the barrier closes.
+    #[test]
+    fn eviction_barrier_rejects_racing_learn_typed() {
+        let (machine, params) = hub_model(0xD0);
+        let mut mirror = machine.clone();
+        let mut hub = ModelHub::new(HubConfig::default());
+        let h = hub.create("t", machine, params.clone(), 9).unwrap();
+        let seq = hub.update(h, learn(1, 0)).unwrap();
+        mirror.apply_update(&ShardUpdate { seq, kind: learn(1, 0) }, &params, 9);
+
+        hub.begin_evict(h).unwrap();
+        assert_eq!(
+            hub.update(h, learn(1, 1)).unwrap_err(),
+            HubError::Evicting { model: h.id() },
+            "a Learn racing the eviction barrier must be refused typed"
+        );
+        assert_eq!(hub.infer(h, &[]).unwrap_err(), HubError::Evicting { model: h.id() });
+        // The resident-but-evicting replica still counts against memory.
+        assert!(hub.resident_bytes() > 0);
+        hub.finish_evict(h).unwrap();
+        assert!(!hub.is_hot(h));
+        // Post-barrier: the refused Learn never happened; the next one
+        // resumes the log exactly where it left off.
+        let seq = hub.update(h, learn(1, 2)).unwrap();
+        assert_eq!(seq, 2);
+        mirror.apply_update(&ShardUpdate { seq, kind: learn(1, 2) }, &params, 9);
+        assert_eq!(hub.digest(h).unwrap(), mirror.state_digest());
+    }
+
+    /// Budget exhaustion with nothing evictable is a typed rejection,
+    /// both at creation and at rehydration.
+    #[test]
+    fn budget_exhaustion_is_typed_rejection() {
+        let (m, params) = hub_model(0xE0);
+        let cost = snapshot_bytes(&m, &params, 0).len();
+        // Budget below one model: creation refuses typed.
+        let mut tiny = ModelHub::new(HubConfig { memory_budget: cost - 1, ..Default::default() });
+        match tiny.create("a", m.clone(), params.clone(), 1) {
+            Err(HubError::BudgetExhausted { need, budget, .. }) => {
+                assert_eq!(need, cost);
+                assert_eq!(budget, cost - 1);
+            }
+            other => panic!("want BudgetExhausted, got {other:?}"),
+        }
+        // Budget of exactly one model, which is pinned mid-eviction: a
+        // second model cannot be admitted and the refusal is typed.
+        let mut hub = ModelHub::new(HubConfig { memory_budget: cost, ..Default::default() });
+        let ha = hub.create("a", m.clone(), params.clone(), 1).unwrap();
+        hub.begin_evict(ha).unwrap();
+        assert!(matches!(
+            hub.create("b", m.clone(), params.clone(), 2),
+            Err(HubError::BudgetExhausted { .. })
+        ));
+        hub.finish_evict(ha).unwrap();
+        // Barrier closed → the budget frees and b fits.
+        let hb = hub.create("b", m, params, 2).unwrap();
+        assert!(hub.is_hot(hb));
+    }
+
+    /// Name hygiene: bad and duplicate names refuse typed; lookups on
+    /// unknown names return nothing.
+    #[test]
+    fn names_are_validated_and_unique() {
+        let (m, params) = hub_model(0xF0);
+        let mut hub = ModelHub::new(HubConfig::default());
+        assert!(matches!(
+            hub.create("", m.clone(), params.clone(), 1),
+            Err(HubError::BadName(_))
+        ));
+        assert!(matches!(
+            hub.create("has space", m.clone(), params.clone(), 1),
+            Err(HubError::BadName(_))
+        ));
+        hub.create("tenant-1", m.clone(), params.clone(), 1).unwrap();
+        assert!(matches!(
+            hub.create("tenant-1", m, params, 2),
+            Err(HubError::DuplicateName(_))
+        ));
+        assert!(hub.resolve("tenant-1").is_some());
+        assert!(hub.resolve("tenant-2").is_none());
+        assert_eq!(hub.default_handle(), hub.resolve("tenant-1"));
+    }
+}

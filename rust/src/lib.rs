@@ -20,6 +20,7 @@ pub mod cli;
 pub mod coordinator;
 pub mod data;
 pub mod fpga;
+pub mod hub;
 pub mod net;
 pub mod runtime;
 pub mod serve;

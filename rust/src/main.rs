@@ -4,7 +4,7 @@
 
 use anyhow::{bail, Context, Result};
 use std::path::PathBuf;
-use tm_fpga::cli::{validate_serve, Cli, UsageError, USAGE};
+use tm_fpga::cli::{model_specs, serve_mode, validate_serve, Cli, UsageError, USAGE};
 use tm_fpga::coordinator::{
     self, experiment::Figure, report, SweepConfig, SweepOptions,
 };
@@ -117,11 +117,19 @@ fn cmd_run(cli: &Cli) -> Result<()> {
 
 fn cmd_serve(cli: &Cli) -> Result<()> {
     validate_serve(cli)?;
+    // Redesigned subcommand modes; bare `serve` keeps the legacy
+    // flag-selected behaviour below, unchanged.
+    match serve_mode(cli)? {
+        Some("soak") => return cmd_serve_hub(cli),
+        Some("run") => return cmd_serve_listen(cli, false),
+        Some("drill") => return cmd_serve_listen(cli, true),
+        _ => {}
+    }
     if cli.flag("net-chaos-seed").is_some() {
         return cmd_serve_net(cli);
     }
     if cli.flag("listen").is_some() {
-        return cmd_serve_listen(cli);
+        return cmd_serve_listen(cli, false);
     }
     // Flag fallbacks come from SoakConfig::default() so the CLI, the
     // soak driver and the help text cannot drift apart.
@@ -291,28 +299,72 @@ fn cmd_serve_net(cli: &Cli) -> Result<()> {
     }
 }
 
-fn cmd_serve_listen(cli: &Cli) -> Result<()> {
-    use tm_fpga::net::{loopback_drill, run_tcp, NetConfig, TcpTransport};
-    let addr = cli.flag("listen").context("--listen needs an address")?;
+fn cmd_serve_listen(cli: &Cli, drill_mode: bool) -> Result<()> {
+    use tm_fpga::hub::{HubConfig, ModelHub, SingleModel};
+    use tm_fpga::net::{NetConfig, TcpTransport, PROTO_VERSION};
+    // `serve run`/`serve drill` default the address; the legacy
+    // spelling reaches here only with an explicit --listen.
+    let addr = cli.flag("listen").unwrap_or("127.0.0.1:0");
     let seed = cli.flag_u64("seed", 42)?;
     let shards = cli.flag_usize("shards", 2)?;
     let shape = tm_fpga::tm::TmShape::iris();
     let params = TmParams::paper_online(&shape);
-    let mut rng = Xoshiro256::new(seed);
-    let tm = tm_fpga::testkit::gen::machine(&mut rng, &shape);
-    let scfg = tm_fpga::serve::ServeConfig::new(shards, params, seed);
-    let server = tm_fpga::serve::ShardServer::new(&tm, &scfg)?;
     let transport = TcpTransport::bind(addr)?;
     let bound = transport.local_addr();
     // Generous caps: on real sockets, frame debt includes
     // response-production lag, not just client slowness.
     let ncfg = NetConfig { max_in_flight: 4096, write_buffer_cap: 1024, ..Default::default() };
-    println!("serving on {bound} (protocol v1, {shards} shard(s))");
-    if cli.flag("drill").is_some() {
-        let n = cli.flag_u64("drill", 64)?;
+    // Drill request count: --requests (redesigned) or --drill N (legacy).
+    let drill = if drill_mode || cli.flag("drill").is_some() {
+        Some(cli.flag_u64("requests", cli.flag_u64("drill", 64)?)?)
+    } else {
+        None
+    };
+    let specs = model_specs(cli)?;
+    if specs.is_empty() {
+        // One anonymous default model on the sharded server.
+        let mut rng = Xoshiro256::new(seed);
+        let tm = tm_fpga::testkit::gen::machine(&mut rng, &shape);
+        let scfg = tm_fpga::serve::ServeConfig::new(shards, params, seed);
+        let server = tm_fpga::serve::ShardServer::new(&tm, &scfg)?;
+        println!("serving on {bound} (protocol v{PROTO_VERSION}, {shards} shard(s))");
+        drive_sockets(SingleModel(server), transport, &shape, ncfg, drill, seed)
+    } else {
+        // Named models in a hub, addressable via the wire `model=` field.
+        let mut hub = ModelHub::new(HubConfig::default());
+        for m in &specs {
+            let mseed = m.seed.unwrap_or(seed);
+            let mut rng = Xoshiro256::new(mseed);
+            let tm = tm_fpga::testkit::gen::machine(&mut rng, &shape);
+            hub.create(&m.name, tm, params.clone(), mseed)
+                .map_err(|e| anyhow::anyhow!("registering model {}: {e}", m.name))?;
+        }
+        let names: Vec<&str> = specs.iter().map(|m| m.name.as_str()).collect();
+        println!(
+            "serving on {bound} (protocol v{PROTO_VERSION}, {} model(s): {})",
+            specs.len(),
+            names.join(", ")
+        );
+        drive_sockets(hub, transport, &shape, ncfg, drill, seed)
+    }
+}
+
+/// Serve real sockets until drained, optionally racing an in-process
+/// loopback drill client; shared by every backend flavour.
+fn drive_sockets<B: tm_fpga::hub::HubNetBackend>(
+    backend: B,
+    transport: tm_fpga::net::TcpTransport,
+    shape: &tm_fpga::tm::TmShape,
+    ncfg: tm_fpga::net::NetConfig,
+    drill: Option<u64>,
+    seed: u64,
+) -> Result<()> {
+    use tm_fpga::net::{loopback_drill, run_tcp};
+    let bound = transport.local_addr();
+    if let Some(n) = drill {
         let features = shape.features;
         let client = std::thread::spawn(move || loopback_drill(bound, n, features, seed ^ 0xD8));
-        let rep = run_tcp(server, transport, &shape, ncfg, Some(30_000))?;
+        let rep = run_tcp(backend, transport, shape, ncfg, Some(30_000))?;
         let drill = client.join().map_err(|_| anyhow::anyhow!("drill client panicked"))??;
         println!(
             "  drill client       : {} preds, {} errs, stats frame infers={}",
@@ -328,12 +380,71 @@ fn cmd_serve_listen(cli: &Cli) -> Result<()> {
         println!("  drill              : OK (all {n} requests answered, graceful drain)");
         Ok(())
     } else {
-        let rep = run_tcp(server, transport, &shape, ncfg, None)?;
+        let rep = run_tcp(backend, transport, shape, ncfg, None)?;
         println!(
             "drained: {} infers, {} learns, {} preds, {} connection(s)",
             rep.stats.infers, rep.stats.learns, rep.stats.preds, rep.stats.connections
         );
         Ok(())
+    }
+}
+
+fn cmd_serve_hub(cli: &Cli) -> Result<()> {
+    let d = tm_fpga::coordinator::HubSoakConfig::default();
+    let specs = model_specs(cli)?;
+    let tenants =
+        if specs.is_empty() { cli.flag_usize("tenants", d.tenants)? } else { specs.len() };
+    let cfg = tm_fpga::coordinator::HubSoakConfig {
+        tenants,
+        events_per_tenant: cli.flag_usize("events", d.events_per_tenant)?,
+        rounds: cli.flag_usize("rounds", d.rounds)?,
+        max_batch: cli.flag_usize("batch", d.max_batch)?,
+        latency_budget: cli.flag_u64("deadline", d.latency_budget)?,
+        labelled_fraction: cli.flag_f32("labelled", d.labelled_fraction)?,
+        mean_gap: cli.flag_f64("gap", d.mean_gap)?,
+        seed: cli.flag_u64("seed", d.seed)?,
+        warmup_epochs: cli.flag_usize("warmup", d.warmup_epochs)?,
+        budget_models: cli.flag_usize("budget-models", d.budget_models)?,
+        checkpoint_every: cli.flag_u64("checkpoint-every", d.checkpoint_every)?,
+        evict_period: cli.flag_usize("evict-every", d.evict_period)?,
+        tenant_names: specs.iter().map(|m| m.name.clone()).collect(),
+    };
+    let rep = coordinator::run_hub_soak(&cfg)?;
+    println!(
+        "hub soak: {} tenant(s) × {} event(s) in {} round(s), budget {} replica(s), \
+         forced evict every {} round(s)",
+        cfg.tenants, cfg.events_per_tenant, cfg.rounds, cfg.budget_models, cfg.evict_period
+    );
+    for t in &rep.tenants {
+        println!(
+            "  {:<12} : {} responses, {} mismatch(es), stats {}, digest {}, \
+             {} eviction(s) / {} rehydration(s)",
+            t.name,
+            t.responses,
+            t.mismatches,
+            if t.stats_match { "OK" } else { "DIVERGED" },
+            if t.digest_match { "OK" } else { "DIVERGED" },
+            t.evictions,
+            t.rehydrations
+        );
+    }
+    let (hits, misses) = rep.plane_cache;
+    println!("  plane cache        : {hits} hit(s) / {misses} miss(es), shared across tenants");
+    println!("  resident bytes     : {}", rep.resident_bytes);
+    println!("  wall               : {:.3}s", rep.wall_s);
+    if rep.agrees() {
+        println!(
+            "  oracle check       : OK (every tenant bit-identical to its private oracle \
+             through eviction and rehydration)"
+        );
+        Ok(())
+    } else {
+        let diverged = rep
+            .tenants
+            .iter()
+            .filter(|t| t.mismatches > 0 || !t.stats_match || !t.digest_match)
+            .count();
+        bail!("hub soak diverged for {diverged} tenant(s)")
     }
 }
 

@@ -1,4 +1,4 @@
-//! The network front end: per-client sessions over a [`NetBackend`].
+//! The network front end: per-client sessions over a [`HubNetBackend`].
 //!
 //! One single-threaded control loop owns everything nondeterministic a
 //! network creates — accepts, torn reads, slow readers, disconnects —
@@ -33,8 +33,19 @@
 //!   not. Each admitted infer holds a slot in its session's queue and
 //!   responses release strictly in request order, whatever order the
 //!   backend produces them.
-//! - **Graceful drain.** `drain`: stop accepting → flush the batcher
-//!   (deadline-checking the tail) → finalize the backend (join
+//! - **Model routing (v2).** Sessions negotiate a protocol version at
+//!   `hello`; v2 sessions may bind a default model and route individual
+//!   `infer`/`learn` frames with `model=`. Each model gets its *own*
+//!   [`MicroBatcher`] (batches never mix tenants), its own seq clock,
+//!   and its own telemetry row (flush causes, batch-width histogram,
+//!   backend lifecycle counters, queue depths). A request naming an
+//!   unknown model is answered `err kind=unknown-model` **before** it
+//!   can reach any batcher; a model mid-eviction answers
+//!   `err kind=evicting`. Legacy v1 sessions carry no model dimension,
+//!   route to the backend's default model (id 0) and receive
+//!   byte-identical frames to the pre-hub build.
+//! - **Graceful drain.** `drain`: stop accepting → flush every model's
+//!   batcher (deadline-checking the tails) → finalize the backend (join
 //!   workers, verify the exactly-once audit, checkpoint replicas) →
 //!   answer everything still routed → final `bye` stats frame → close.
 //!
@@ -43,11 +54,14 @@
 //! slowness — honest backpressure, sized by generous default caps. The
 //! deterministic contract is exercised through [`SimTransport`].
 
-use crate::net::proto::{self, ErrKind, FrameBuffer, Request, Response, WireStats, PROTO_VERSION};
+use crate::hub::{HubNetBackend, RouteError};
+use crate::net::proto::{
+    self, ErrKind, FrameBuffer, ModelTelemetry, Request, Response, WireStats, PROTO_CAPS,
+    PROTO_MIN_VERSION, PROTO_VERSION, WIDTH_BUCKETS,
+};
 use crate::net::sim::{scripts_end, ClientScript, SimTransport};
 use crate::net::transport::{NetConn, ReadOutcome, TcpTransport, Transport};
 use crate::serve::batcher::{split_expired, BatcherConfig, MicroBatcher, PendingRequest};
-use crate::serve::NetBackend;
 use crate::tm::clause::Input;
 use crate::tm::machine::MultiTm;
 use crate::tm::params::TmShape;
@@ -108,7 +122,7 @@ impl NetConfig {
 pub struct NetStats {
     pub connections: u64,
     pub frames_in: u64,
-    /// Infer requests admitted to the batcher.
+    /// Infer requests admitted to a batcher.
     pub infers: u64,
     /// Learn requests applied as sequenced updates.
     pub learns: u64,
@@ -122,27 +136,39 @@ pub struct NetStats {
     pub shed_requests: u64,
     /// Dispatched requests shed by the degraded backend.
     pub server_shed: u64,
-    /// Semantically invalid requests (width, label, duplicate id).
+    /// Semantically invalid requests (width, label, duplicate id,
+    /// model field on a v1 session).
     pub quarantined: u64,
     /// Connections killed for unparseable/oversized frames.
     pub frame_errors: u64,
     /// Requests refused because the server was draining.
     pub draining_rejected: u64,
+    /// Requests answered `err kind=unknown-model` (v2 routing misses —
+    /// these never reach a batcher).
+    pub unknown_model: u64,
+    /// Requests answered `err kind=evicting` (model mid-eviction).
+    pub evicting_rejected: u64,
     pub stats_served: u64,
     pub drains: u64,
 }
 
 impl NetStats {
-    fn wire(&self) -> WireStats {
+    /// The wire-counter projection. The eight v1 scalars keep their
+    /// exact legacy meaning; unknown-model and evicting refusals fold
+    /// into `shed` (server-side refusals of otherwise-valid requests),
+    /// which is zero on every legacy path.
+    fn wire(&self, telemetry: Vec<ModelTelemetry>) -> WireStats {
         WireStats {
             infers: self.infers,
             learns: self.learns,
             preds: self.preds,
-            shed: self.shed_requests + self.server_shed,
+            shed: self.shed_requests + self.server_shed + self.unknown_model
+                + self.evicting_rejected,
             deadline: self.deadline_expired,
             admission: self.admission_rejected,
             quarantined: self.quarantined,
             frame_errors: self.frame_errors,
+            telemetry,
         }
     }
 }
@@ -159,6 +185,10 @@ pub enum Outcome {
     ServerShed,
     BadRequest,
     Draining,
+    /// Routed to a model name the backend does not host.
+    UnknownModel,
+    /// The target model was mid-eviction.
+    Evicting,
 }
 
 /// What a finished front-end run produced.
@@ -167,22 +197,47 @@ pub struct NetReport {
     pub stats: NetStats,
     /// `(session index, client request id)` → outcome.
     pub outcomes: BTreeMap<(usize, u64), Outcome>,
-    /// Final replica state(s) from the backend's drain checkpoint.
+    /// Final replica state(s) from the backend's drain checkpoint, in
+    /// [`HubNetBackend::models`] order.
     pub replicas: Vec<MultiTm>,
     /// The applied update log (when [`NetConfig::record_updates`]).
     pub updates: Vec<UpdateKind>,
+    /// Per-model telemetry rows as of the drain barrier.
+    pub telemetry: Vec<ModelTelemetry>,
 }
 
 enum SlotFill {
     Pred(usize),
     Deadline,
     Overload,
+    /// A dispatch-time routing failure (the whole batch was refused).
+    Route(ErrKind),
+}
+
+/// Per-model flush accounting (the front-end half of a telemetry row).
+#[derive(Debug, Clone, Copy, Default)]
+struct FlushCounters {
+    full: u64,
+    deadline: u64,
+    fin: u64,
+    width_hist: [u64; WIDTH_BUCKETS],
+}
+
+#[derive(Debug, Clone, Copy)]
+enum FlushCause {
+    Full,
+    Deadline,
+    Final,
 }
 
 struct Session<C> {
     conn: C,
     fb: FrameBuffer,
     hello_done: bool,
+    /// Negotiated protocol version (0 until hello).
+    version: u32,
+    /// The session's default model id (bound at hello).
+    model: u64,
     /// Response frames promised to this client.
     promised: u64,
     /// Read side exhausted (EOF seen).
@@ -203,6 +258,8 @@ impl<C> Session<C> {
             conn,
             fb: FrameBuffer::new(max_frame_bytes),
             hello_done: false,
+            version: 0,
+            model: 0,
             promised: 0,
             eof: false,
             dead: false,
@@ -213,41 +270,55 @@ impl<C> Session<C> {
     }
 }
 
+/// The wire error a routing failure answers with.
+fn route_err_kind(e: RouteError) -> ErrKind {
+    match e {
+        RouteError::UnknownModel => ErrKind::UnknownModel,
+        RouteError::Evicting => ErrKind::Evicting,
+        RouteError::Budget | RouteError::Internal => ErrKind::Overload,
+    }
+}
+
 /// The front end proper. Generic over transport (TCP or scripted sim)
-/// and backend (sharded server or scalar oracle) — all four pairings
-/// run the identical control loop.
-pub struct FrontEnd<B: NetBackend, T: Transport> {
+/// and backend (model hub, sharded server or scalar oracle — the latter
+/// two served as the anonymous default model through the
+/// [`crate::hub::SingleModel`] adapter) — all pairings run the
+/// identical control loop.
+pub struct FrontEnd<B: HubNetBackend, T: Transport> {
     backend: B,
     transport: T,
     cfg: NetConfig,
     shape: TmShape,
     sessions: Vec<Session<T::Conn>>,
-    batcher: MicroBatcher,
+    /// One batcher per model: micro-batches never mix tenants.
+    batchers: BTreeMap<u64, MicroBatcher>,
+    /// Per-model flush/width accounting.
+    counters: BTreeMap<u64, FlushCounters>,
     /// Outstanding global id → (session, client id).
     routes: BTreeMap<u64, (usize, u64)>,
     next_global: u64,
-    /// Applied-update clock (mirrors the backend's seq).
-    seq: u64,
+    /// Per-model applied-update clocks (mirror the backend's seqs).
+    seqs: BTreeMap<u64, u64>,
     stats: NetStats,
     outcomes: BTreeMap<(usize, u64), Outcome>,
     draining: bool,
     updates: Vec<UpdateKind>,
 }
 
-impl<B: NetBackend, T: Transport> FrontEnd<B, T> {
+impl<B: HubNetBackend, T: Transport> FrontEnd<B, T> {
     pub fn new(backend: B, transport: T, shape: TmShape, cfg: NetConfig) -> Result<Self> {
         cfg.validate().context("net front end")?;
-        let batcher = MicroBatcher::new(cfg.batch.clone()).context("net front end")?;
         Ok(FrontEnd {
             backend,
             transport,
             cfg,
             shape,
             sessions: Vec::new(),
-            batcher,
+            batchers: BTreeMap::new(),
+            counters: BTreeMap::new(),
             routes: BTreeMap::new(),
             next_global: 0,
-            seq: 0,
+            seqs: BTreeMap::new(),
             stats: NetStats::default(),
             outcomes: BTreeMap::new(),
             draining: false,
@@ -303,6 +374,14 @@ impl<B: NetBackend, T: Transport> FrontEnd<B, T> {
             SlotFill::Overload => {
                 (Response::Err { id: Some(cid), kind: ErrKind::Overload }, Outcome::ServerShed)
             }
+            SlotFill::Route(kind) => {
+                let outcome = match kind {
+                    ErrKind::UnknownModel => Outcome::UnknownModel,
+                    ErrKind::Evicting => Outcome::Evicting,
+                    _ => Outcome::ServerShed,
+                };
+                (Response::Err { id: Some(cid), kind }, outcome)
+            }
         };
         self.outcomes.insert((s, cid), outcome);
         self.sessions[s].ready.insert(gid, resp);
@@ -310,16 +389,42 @@ impl<B: NetBackend, T: Transport> FrontEnd<B, T> {
         true
     }
 
-    /// Deadline-check and dispatch a flushed batch.
-    fn dispatch(&mut self, batch: Vec<PendingRequest>, now: u64) {
+    /// Record one flushed batch in the model's telemetry row.
+    fn note_flush(&mut self, model: u64, width: usize, cause: FlushCause) {
+        let c = self.counters.entry(model).or_default();
+        match cause {
+            FlushCause::Full => c.full += 1,
+            FlushCause::Deadline => c.deadline += 1,
+            FlushCause::Final => c.fin += 1,
+        }
+        c.width_hist[proto::width_bucket(width)] += 1;
+    }
+
+    /// Deadline-check and dispatch a flushed batch against its model.
+    fn dispatch(&mut self, model: u64, batch: Vec<PendingRequest>, now: u64) {
         let (live, expired) = split_expired(batch, now);
         for gid in expired {
             if self.fill_slot(gid, SlotFill::Deadline) {
                 self.stats.deadline_expired += 1;
             }
         }
-        if !live.is_empty() {
-            self.backend.infer_batch(live);
+        if live.is_empty() {
+            return;
+        }
+        let gids: Vec<u64> = live.iter().map(|p| p.id).collect();
+        if let Err(e) = self.backend.model_infer(model, live) {
+            // The whole batch was refused at the routing layer: answer
+            // every member typed, never a silent drop.
+            let kind = route_err_kind(e);
+            for gid in gids {
+                if self.fill_slot(gid, SlotFill::Route(kind)) {
+                    match kind {
+                        ErrKind::UnknownModel => self.stats.unknown_model += 1,
+                        ErrKind::Evicting => self.stats.evicting_rejected += 1,
+                        _ => self.stats.server_shed += 1,
+                    }
+                }
+            }
         }
     }
 
@@ -337,7 +442,55 @@ impl<B: NetBackend, T: Transport> FrontEnd<B, T> {
         }
     }
 
-    fn handle_infer(&mut self, s: usize, cid: u64, ttl: Option<u64>, bits: &[bool], now: u64) {
+    /// Resolve a request's target model: the session default, or a
+    /// per-request `model=` override (v2 only — on a v1 session the
+    /// field is an unnegotiated capability and quarantines).
+    fn resolve_model(&self, s: usize, model: Option<&str>) -> Result<u64, ErrKind> {
+        match model {
+            None => Ok(self.sessions[s].model),
+            Some(_) if self.sessions[s].version < 2 => Err(ErrKind::BadRequest),
+            Some(name) => self.backend.bind(Some(name)).map_err(route_err_kind),
+        }
+    }
+
+    /// Answer a pre-admission routing refusal and account it.
+    fn refuse(&mut self, s: usize, cid: u64, kind: ErrKind) {
+        let outcome = match kind {
+            ErrKind::UnknownModel => {
+                self.stats.unknown_model += 1;
+                Outcome::UnknownModel
+            }
+            ErrKind::Evicting => {
+                self.stats.evicting_rejected += 1;
+                Outcome::Evicting
+            }
+            ErrKind::BadRequest => {
+                self.stats.quarantined += 1;
+                Outcome::BadRequest
+            }
+            _ => {
+                self.stats.server_shed += 1;
+                Outcome::ServerShed
+            }
+        };
+        self.outcomes.insert((s, cid), outcome);
+        self.immediate(s, Response::Err { id: Some(cid), kind });
+    }
+
+    /// The feature width requests against `model` must match.
+    fn model_features(&self, model: u64) -> usize {
+        self.backend.model_shape(model).map(|sh| sh.features).unwrap_or(self.shape.features)
+    }
+
+    fn handle_infer(
+        &mut self,
+        s: usize,
+        cid: u64,
+        ttl: Option<u64>,
+        model: Option<&str>,
+        bits: &[bool],
+        now: u64,
+    ) {
         let debt = Self::session_debt(&self.sessions[s]);
         if debt >= self.cfg.write_buffer_cap {
             // The client is not consuming responses; queueing another
@@ -353,7 +506,22 @@ impl<B: NetBackend, T: Transport> FrontEnd<B, T> {
             self.immediate(s, Response::Err { id: Some(cid), kind: ErrKind::Draining });
             return;
         }
-        if !self.sessions[s].used_ids.insert(cid) || bits.len() != self.shape.features {
+        if !self.sessions[s].used_ids.insert(cid) {
+            self.stats.quarantined += 1;
+            self.outcomes.insert((s, cid), Outcome::BadRequest);
+            self.immediate(s, Response::Err { id: Some(cid), kind: ErrKind::BadRequest });
+            return;
+        }
+        // Routing precedes admission: an unknown-model request must be
+        // refused before it can touch any batcher or debt ceiling.
+        let mid = match self.resolve_model(s, model) {
+            Ok(mid) => mid,
+            Err(kind) => {
+                self.refuse(s, cid, kind);
+                return;
+            }
+        };
+        if bits.len() != self.model_features(mid) {
             self.stats.quarantined += 1;
             self.outcomes.insert((s, cid), Outcome::BadRequest);
             self.immediate(s, Response::Err { id: Some(cid), kind: ErrKind::BadRequest });
@@ -372,13 +540,27 @@ impl<B: NetBackend, T: Transport> FrontEnd<B, T> {
         self.routes.insert(gid, (s, cid));
         self.stats.infers += 1;
         let deadline = ttl.or(self.cfg.default_ttl).map(|t| Deadline::after(now, t));
-        let input = Input::pack(&self.shape, bits);
-        if let Some(batch) = self.batcher.push(PendingRequest { id: gid, input, deadline }, now) {
-            self.dispatch(batch, now);
+        let shape = self.backend.model_shape(mid).unwrap_or_else(|| self.shape.clone());
+        let input = Input::pack(&shape, bits);
+        let batch_cfg = self.cfg.batch.clone();
+        let batcher = self
+            .batchers
+            .entry(mid)
+            .or_insert_with(|| MicroBatcher::new(batch_cfg).expect("validated batcher config"));
+        if let Some(batch) = batcher.push(PendingRequest { id: gid, input, deadline }, now) {
+            self.note_flush(mid, batch.len(), FlushCause::Full);
+            self.dispatch(mid, batch, now);
         }
     }
 
-    fn handle_learn(&mut self, s: usize, cid: u64, label: usize, bits: &[bool]) {
+    fn handle_learn(
+        &mut self,
+        s: usize,
+        cid: u64,
+        label: usize,
+        model: Option<&str>,
+        bits: &[bool],
+    ) {
         let debt = Self::session_debt(&self.sessions[s]);
         if debt >= self.cfg.write_buffer_cap {
             self.stats.shed_requests += 1;
@@ -391,33 +573,93 @@ impl<B: NetBackend, T: Transport> FrontEnd<B, T> {
             self.immediate(s, Response::Err { id: Some(cid), kind: ErrKind::Draining });
             return;
         }
-        if !self.sessions[s].used_ids.insert(cid)
-            || bits.len() != self.shape.features
-            || label >= self.shape.classes
-        {
+        if !self.sessions[s].used_ids.insert(cid) {
             self.stats.quarantined += 1;
             self.outcomes.insert((s, cid), Outcome::BadRequest);
             self.immediate(s, Response::Err { id: Some(cid), kind: ErrKind::BadRequest });
             return;
         }
-        let input = Input::pack(&self.shape, bits);
+        let mid = match self.resolve_model(s, model) {
+            Ok(mid) => mid,
+            Err(kind) => {
+                self.refuse(s, cid, kind);
+                return;
+            }
+        };
+        let shape = self.backend.model_shape(mid).unwrap_or_else(|| self.shape.clone());
+        if bits.len() != shape.features || label >= shape.classes {
+            self.stats.quarantined += 1;
+            self.outcomes.insert((s, cid), Outcome::BadRequest);
+            self.immediate(s, Response::Err { id: Some(cid), kind: ErrKind::BadRequest });
+            return;
+        }
+        let input = Input::pack(&shape, bits);
         let kind = UpdateKind::Learn { input, label };
         if self.cfg.record_updates {
             self.updates.push(kind.clone());
         }
-        self.backend.update(kind);
-        self.seq += 1;
-        self.stats.learns += 1;
-        self.outcomes.insert((s, cid), Outcome::LearnAck(self.seq));
-        self.immediate(s, Response::LearnOk { id: cid, seq: self.seq });
+        match self.backend.model_update(mid, kind) {
+            Ok(()) => {
+                let seq = self.seqs.entry(mid).or_insert(0);
+                *seq += 1;
+                let seq = *seq;
+                self.stats.learns += 1;
+                self.outcomes.insert((s, cid), Outcome::LearnAck(seq));
+                self.immediate(s, Response::LearnOk { id: cid, seq });
+            }
+            Err(e) => self.refuse(s, cid, route_err_kind(e)),
+        }
+    }
+
+    /// Assemble the per-model telemetry rows (v2 stats/bye surface).
+    fn telemetry(&self) -> Vec<ModelTelemetry> {
+        self.backend
+            .models()
+            .into_iter()
+            .map(|mid| {
+                let c = self.counters.get(&mid).copied().unwrap_or_default();
+                let (evictions, rehydrations) = self.backend.lifecycle(mid);
+                ModelTelemetry {
+                    model: self.backend.model_label(mid),
+                    evictions,
+                    rehydrations,
+                    full_flushes: c.full,
+                    deadline_flushes: c.deadline,
+                    final_flushes: c.fin,
+                    width_hist: c.width_hist,
+                    queue_depths: self.backend.queue_depths(mid),
+                }
+            })
+            .collect()
     }
 
     fn handle_request(&mut self, s: usize, req: Request, now: u64) {
         if !self.sessions[s].hello_done {
             match req {
-                Request::Hello { version } if version == PROTO_VERSION => {
-                    self.sessions[s].hello_done = true;
-                    self.immediate(s, Response::HelloOk { version: PROTO_VERSION });
+                Request::Hello { version, model }
+                    if (PROTO_MIN_VERSION..=PROTO_VERSION).contains(&version) =>
+                {
+                    match self.backend.bind(model.as_deref()) {
+                        Ok(mid) => {
+                            let sess = &mut self.sessions[s];
+                            sess.hello_done = true;
+                            sess.version = version;
+                            sess.model = mid;
+                            let caps = (version >= 2).then(|| PROTO_CAPS.to_string());
+                            self.immediate(s, Response::HelloOk { version, caps });
+                        }
+                        Err(e) => {
+                            let kind = route_err_kind(e);
+                            match kind {
+                                ErrKind::UnknownModel => self.stats.unknown_model += 1,
+                                ErrKind::Evicting => self.stats.evicting_rejected += 1,
+                                _ => self.stats.server_shed += 1,
+                            }
+                            self.immediate(s, Response::Err { id: None, kind });
+                            self.sessions[s].conn.close();
+                            self.sessions[s].dead = true;
+                        }
+                    }
                 }
                 Request::Hello { .. } => {
                     self.immediate(s, Response::Err { id: None, kind: ErrKind::Version });
@@ -440,7 +682,9 @@ impl<B: NetBackend, T: Transport> FrontEnd<B, T> {
             }
             Request::Stats { id } => {
                 self.stats.stats_served += 1;
-                let wire = self.stats.wire();
+                let telemetry =
+                    if self.sessions[s].version >= 2 { self.telemetry() } else { Vec::new() };
+                let wire = self.stats.wire(telemetry);
                 self.immediate(s, Response::Stats { id, stats: wire });
             }
             Request::Drain { id } => {
@@ -448,8 +692,12 @@ impl<B: NetBackend, T: Transport> FrontEnd<B, T> {
                 self.draining = true;
                 self.immediate(s, Response::DrainOk { id });
             }
-            Request::Infer { id, ttl, bits } => self.handle_infer(s, id, ttl, &bits, now),
-            Request::Learn { id, label, bits } => self.handle_learn(s, id, label, &bits),
+            Request::Infer { id, ttl, model, bits } => {
+                self.handle_infer(s, id, ttl, model.as_deref(), &bits, now)
+            }
+            Request::Learn { id, label, model, bits } => {
+                self.handle_learn(s, id, label, model.as_deref(), &bits)
+            }
         }
     }
 
@@ -512,9 +760,16 @@ impl<B: NetBackend, T: Transport> FrontEnd<B, T> {
                 self.sessions.push(Session::new(conn, self.cfg.max_frame_bytes));
             }
         }
-        if self.batcher.due(now) {
-            if let Some(batch) = self.batcher.flush() {
-                self.dispatch(batch, now);
+        let due: Vec<u64> = self
+            .batchers
+            .iter()
+            .filter(|(_, b)| b.due(now))
+            .map(|(&mid, _)| mid)
+            .collect();
+        for mid in due {
+            if let Some(batch) = self.batchers.get_mut(&mid).and_then(|b| b.flush()) {
+                self.note_flush(mid, batch.len(), FlushCause::Deadline);
+                self.dispatch(mid, batch, now);
             }
         }
         for s in 0..self.sessions.len() {
@@ -526,16 +781,24 @@ impl<B: NetBackend, T: Transport> FrontEnd<B, T> {
         }
     }
 
-    /// Graceful drain: flush the batcher tail (deadline-checked),
-    /// finalize the backend (joins workers, verifies the exactly-once
-    /// audit, checkpoints replicas), answer everything still in flight,
-    /// send every live client a final `bye` stats frame, and close.
-    /// Errors if any admitted request would finish unanswered.
+    /// Graceful drain: flush every model's batcher tail
+    /// (deadline-checked), finalize the backend (joins workers,
+    /// verifies the exactly-once audit, checkpoints replicas), answer
+    /// everything still in flight, send every live client a final `bye`
+    /// stats frame, and close. Errors if any admitted request would
+    /// finish unanswered.
     pub fn drain(mut self, now: u64) -> Result<(NetReport, T)> {
         self.draining = true;
-        if let Some(batch) = self.batcher.flush() {
-            self.dispatch(batch, now);
+        let mids: Vec<u64> = self.batchers.keys().copied().collect();
+        for mid in mids {
+            if let Some(batch) = self.batchers.get_mut(&mid).and_then(|b| b.flush()) {
+                self.note_flush(mid, batch.len(), FlushCause::Final);
+                self.dispatch(mid, batch, now);
+            }
         }
+        // Telemetry is snapshotted before finalize consumes the
+        // backend (queue depths post-flush, pre-join).
+        let telemetry = self.telemetry();
         let fin = self.backend.finalize()?;
         for (gid, class) in fin.responses {
             if self.fill_slot(gid, SlotFill::Pred(class)) {
@@ -550,9 +813,11 @@ impl<B: NetBackend, T: Transport> FrontEnd<B, T> {
         if !self.routes.is_empty() {
             bail!("net: {} admitted requests finished unanswered", self.routes.len());
         }
-        let bye = Response::Bye { stats: self.stats.wire() };
+        let bye_v1 = Response::Bye { stats: self.stats.wire(Vec::new()) };
+        let bye_v2 = Response::Bye { stats: self.stats.wire(telemetry.clone()) };
         for sess in &mut self.sessions {
             if sess.conn.writable() {
+                let bye = if sess.version >= 2 { &bye_v2 } else { &bye_v1 };
                 sess.promised += 1;
                 sess.conn.write_frame(bye.encode().as_bytes());
                 sess.conn.flush();
@@ -565,6 +830,7 @@ impl<B: NetBackend, T: Transport> FrontEnd<B, T> {
             outcomes: self.outcomes,
             replicas: fin.replicas,
             updates: self.updates,
+            telemetry,
         };
         Ok((report, self.transport))
     }
@@ -573,7 +839,7 @@ impl<B: NetBackend, T: Transport> FrontEnd<B, T> {
 /// Drive scripted clients to completion against `backend`: tick from 0
 /// past the last scripted action plus the batcher's budget, then drain.
 /// Fully deterministic in `(backend determinism, scripts, cfg)`.
-pub fn run_sim<B: NetBackend>(
+pub fn run_sim<B: HubNetBackend>(
     backend: B,
     scripts: Vec<ClientScript>,
     shape: &TmShape,
@@ -596,7 +862,7 @@ pub fn run_sim<B: NetBackend>(
 /// Serve real sockets: tick the front end roughly every millisecond
 /// until a client requests drain (or `max_idle_ticks` elapse with no
 /// inbound frames and no open work — the CI drill's safety net).
-pub fn run_tcp<B: NetBackend>(
+pub fn run_tcp<B: HubNetBackend>(
     backend: B,
     transport: TcpTransport,
     shape: &TmShape,
@@ -667,15 +933,15 @@ pub fn loopback_drill(
         proto::parse_response(line.trim_end())
     };
 
-    stream.write_all(Request::Hello { version: PROTO_VERSION }.encode().as_bytes())?;
+    stream.write_all(Request::Hello { version: PROTO_VERSION, model: None }.encode().as_bytes())?;
     match expect(&mut reader)? {
-        Response::HelloOk { version } if version == PROTO_VERSION => {}
+        Response::HelloOk { version, .. } if version == PROTO_VERSION => {}
         other => bail!("drill: expected ok hello, got {other:?}"),
     }
 
     for cid in 1..=requests {
         let bits: Vec<bool> = (0..features).map(|_| rng.next_f32() < 0.5).collect();
-        let req = Request::Infer { id: cid, ttl: None, bits };
+        let req = Request::Infer { id: cid, ttl: None, model: None, bits };
         stream.write_all(req.encode().as_bytes())?;
     }
     stream.write_all(Request::Stats { id: requests + 1 }.encode().as_bytes())?;
@@ -706,20 +972,29 @@ pub fn loopback_drill(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::hub::SingleModel;
     use crate::net::sim::ClientOp;
     use crate::serve::ScalarOracle;
     use crate::tm::params::TmParams;
 
-    fn oracle() -> (ScalarOracle, TmShape) {
+    fn oracle() -> (SingleModel<ScalarOracle>, TmShape) {
         let s = TmShape::iris();
         let p = TmParams::paper_online(&s);
         let mut rng = Xoshiro256::new(0x0E0E);
         let tm = crate::testkit::gen::machine(&mut rng, &s);
-        (ScalarOracle::new(tm, p, 0xBA5E), s)
+        (SingleModel(ScalarOracle::new(tm, p, 0xBA5E)), s)
     }
 
     fn send(at: u64, req: Request) -> ClientOp {
         ClientOp::Send { at, bytes: req.encode().into_bytes() }
+    }
+
+    fn hello_v1(at: u64) -> ClientOp {
+        send(at, Request::Hello { version: 1, model: None })
+    }
+
+    fn infer(id: u64, ttl: Option<u64>, bits: Vec<bool>) -> Request {
+        Request::Infer { id, ttl, model: None, bits }
     }
 
     fn bits(s: &TmShape, seed: u64) -> Vec<bool> {
@@ -734,10 +1009,10 @@ mod tests {
             connect_at: 0,
             ops: vec![
                 ClientOp::ReadAllow { at: 0, frames: 100 },
-                send(0, Request::Hello { version: 1 }),
-                send(1, Request::Infer { id: 1, ttl: None, bits: bits(&s, 1) }),
-                send(2, Request::Learn { id: 2, label: 1, bits: bits(&s, 2) }),
-                send(3, Request::Infer { id: 3, ttl: None, bits: bits(&s, 3) }),
+                hello_v1(0),
+                send(1, infer(1, None, bits(&s, 1))),
+                send(2, Request::Learn { id: 2, label: 1, model: None, bits: bits(&s, 2) }),
+                send(3, infer(3, None, bits(&s, 3))),
                 send(4, Request::Stats { id: 4 }),
             ],
         }];
@@ -755,16 +1030,67 @@ mod tests {
         assert_eq!(report.outcomes[&(0, 2)], Outcome::LearnAck(1));
         assert!(matches!(report.outcomes[&(0, 3)], Outcome::Pred(_)));
         let delivered = tr.delivered(0);
-        assert_eq!(delivered[0], Response::HelloOk { version: 1 }.encode());
+        // A v1 session's frames are byte-identical to the pre-hub
+        // build: no caps, no telemetry, "ok hello v=1".
+        assert_eq!(delivered[0], "ok hello v=1\n");
         // Responses: hello-ok, learn-ok (immediate), two preds in
         // request order, stats, bye.
         assert_eq!(delivered.len(), 6);
         assert!(delivered[1].starts_with("ok id=2 seq=1"));
         assert!(delivered.last().unwrap().starts_with("bye "));
+        assert!(
+            !delivered.iter().any(|l| l.contains("tv=")),
+            "v1 session must not see telemetry: {delivered:?}"
+        );
         let pred_lines: Vec<&String> =
             delivered.iter().filter(|l| l.starts_with("pred")).collect();
         assert!(pred_lines[0].starts_with("pred id=1 "));
         assert!(pred_lines[1].starts_with("pred id=3 "));
+    }
+
+    #[test]
+    fn v2_session_negotiates_caps_and_routing_is_typed() {
+        let (oracle, s) = oracle();
+        let scripts = vec![ClientScript {
+            connect_at: 0,
+            ops: vec![
+                ClientOp::ReadAllow { at: 0, frames: 100 },
+                send(0, Request::Hello { version: 2, model: None }),
+                send(1, infer(1, None, bits(&s, 1))),
+                // Routed at a model this single-model backend does not
+                // host: typed unknown-model, never batched.
+                send(2, Request::Infer {
+                    id: 2,
+                    ttl: None,
+                    model: Some("ghost".into()),
+                    bits: bits(&s, 2),
+                }),
+                send(3, Request::Stats { id: 3 }),
+            ],
+        }];
+        let cfg = NetConfig {
+            batch: BatcherConfig { max_batch: 8, latency_budget: 2, ..Default::default() },
+            ..Default::default()
+        };
+        let (report, tr) = run_sim(oracle, scripts, &s, cfg).unwrap();
+        let delivered = tr.delivered(0);
+        assert_eq!(delivered[0], format!("ok hello v=2 caps={PROTO_CAPS}\n"));
+        assert_eq!(report.stats.unknown_model, 1);
+        assert_eq!(report.stats.infers, 1, "the unknown-model request never reached a batcher");
+        assert_eq!(report.outcomes[&(0, 2)], Outcome::UnknownModel);
+        assert!(delivered.iter().any(|l| l.starts_with("err id=2 kind=unknown-model")));
+        // v2 stats and bye carry the versioned telemetry map for the
+        // anonymous default model.
+        let stats_line = delivered.iter().find(|l| l.starts_with("stats id=3")).unwrap();
+        assert!(stats_line.contains(" tv=1 models=default:"), "{stats_line:?}");
+        let bye = delivered.last().unwrap();
+        assert!(bye.starts_with("bye ") && bye.contains(" tv=1 models=default:"), "{bye:?}");
+        assert_eq!(report.telemetry.len(), 1);
+        assert_eq!(report.telemetry[0].model, "default");
+        let flushes = report.telemetry[0].full_flushes
+            + report.telemetry[0].deadline_flushes
+            + report.telemetry[0].final_flushes;
+        assert!(flushes >= 1, "the admitted infer must appear as a flush: {report:?}");
     }
 
     #[test]
@@ -776,9 +1102,9 @@ mod tests {
             connect_at: 0,
             ops: vec![
                 ClientOp::ReadAllow { at: 0, frames: 100 },
-                send(0, Request::Hello { version: 1 }),
-                send(1, Request::Infer { id: 1, ttl: Some(2), bits: bits(&s, 1) }),
-                send(1, Request::Infer { id: 2, ttl: Some(100), bits: bits(&s, 2) }),
+                hello_v1(0),
+                send(1, infer(1, Some(2), bits(&s, 1))),
+                send(1, infer(2, Some(100), bits(&s, 2))),
             ],
         }];
         let cfg = NetConfig {
@@ -807,7 +1133,7 @@ mod tests {
                 connect_at: 0,
                 ops: vec![
                     ClientOp::ReadAllow { at: 0, frames: 10 },
-                    send(0, Request::Hello { version: 9 }),
+                    send(0, Request::Hello { version: 9, model: None }),
                 ],
             },
             ClientScript {
@@ -834,7 +1160,7 @@ mod tests {
                 connect_at: 0,
                 ops: vec![
                     ClientOp::ReadAllow { at: 0, frames: 10 },
-                    send(0, Request::Hello { version: 1 }),
+                    hello_v1(0),
                     ClientOp::Send { at: 1, bytes: vec![b'x'; 200] },
                 ],
             },
@@ -843,7 +1169,7 @@ mod tests {
                 connect_at: 0,
                 ops: vec![
                     ClientOp::ReadAllow { at: 0, frames: 10 },
-                    send(0, Request::Hello { version: 1 }),
+                    hello_v1(0),
                     ClientOp::Send { at: 1, bytes: b"explode id=1\n".to_vec() },
                 ],
             },
@@ -865,13 +1191,9 @@ mod tests {
         let (oracle, s) = oracle();
         // Client grants only 2 frames ever; hello-ok consumes part of
         // the window, then debt builds until the cap (3) sheds.
-        let mut ops = vec![
-            ClientOp::ReadAllow { at: 0, frames: 2 },
-            send(0, Request::Hello { version: 1 }),
-        ];
+        let mut ops = vec![ClientOp::ReadAllow { at: 0, frames: 2 }, hello_v1(0)];
         for cid in 1..=8 {
-            let req = Request::Infer { id: cid, ttl: None, bits: bits(&s, cid) };
-            ops.push(send(1 + cid, req));
+            ops.push(send(1 + cid, infer(cid, None, bits(&s, cid))));
         }
         let scripts = vec![ClientScript { connect_at: 0, ops }];
         let cfg = NetConfig {
@@ -902,11 +1224,10 @@ mod tests {
         let (oracle2, _) = oracle_pair();
         let mut ops = vec![
             ClientOp::ReadAllow { at: 0, frames: 1 }, // hello consumes it
-            send(0, Request::Hello { version: 1 }),
+            hello_v1(0),
         ];
         for cid in 1..=5 {
-            let req = Request::Infer { id: cid, ttl: None, bits: bits(&s, cid) };
-            ops.push(send(1 + cid, req));
+            ops.push(send(1 + cid, infer(cid, None, bits(&s, cid))));
         }
         ops.push(ClientOp::ReadAllow { at: 20, frames: 100 });
         let scripts = vec![ClientScript { connect_at: 0, ops }];
@@ -932,8 +1253,8 @@ mod tests {
             connect_at: 0,
             ops: vec![
                 ClientOp::ReadAllow { at: 0, frames: 100 },
-                send(0, Request::Hello { version: 1 }),
-                send(1, Request::Infer { id: 1, ttl: None, bits: bits(&s, 1) }),
+                hello_v1(0),
+                send(1, infer(1, None, bits(&s, 1))),
                 send(2, Request::Drain { id: 2 }),
             ],
         }];

@@ -11,14 +11,18 @@
 //!   frames, half-open peers, hard disconnects, slow-loris readers,
 //!   floods) generated from a seeded [`crate::serve::NetChaosPlan`].
 //! - [`frontend`] — the control loop tying a transport to a
-//!   [`crate::serve::NetBackend`]: sessions, admission control,
-//!   deadline budgets, debt-based backpressure and graceful drain.
+//!   [`crate::hub::HubNetBackend`]: sessions (with per-session
+//!   protocol-version and default-model negotiation), model routing,
+//!   per-model micro-batchers, admission control, deadline budgets,
+//!   debt-based backpressure, per-model telemetry and graceful drain.
 //!
 //! The same [`frontend::FrontEnd`] drives all transport × backend
-//! pairings, which is what lets the network chaos soak
-//! (`coordinator::soak::run_net_soak`) demand bit-identical behaviour
-//! from the sharded server and the scalar oracle under identical
-//! scripted abuse.
+//! pairings — model hub, sharded server or scalar oracle (the latter
+//! two as the anonymous default model via the
+//! [`crate::hub::SingleModel`] adapter) — which is what lets the network
+//! chaos soak (`coordinator::soak::run_net_soak`) demand bit-identical
+//! behaviour from the sharded server and the scalar oracle under
+//! identical scripted abuse, and the hub soak do the same per tenant.
 
 pub mod frontend;
 pub mod proto;
@@ -29,6 +33,9 @@ pub use frontend::{
     loopback_drill, run_sim, run_tcp, DrillReport, FrontEnd, NetConfig, NetReport, NetStats,
     Outcome,
 };
-pub use proto::{ErrKind, FrameBuffer, Request, Response, WireStats, PROTO_VERSION};
+pub use proto::{
+    ErrKind, FrameBuffer, ModelTelemetry, Request, Response, WireStats, PROTO_CAPS,
+    PROTO_MIN_VERSION, PROTO_VERSION, TELEMETRY_VERSION,
+};
 pub use sim::{seeded_scripts, ClientOp, ClientScript, ScriptConfig, SimTransport};
 pub use transport::{NetConn, ReadOutcome, TcpTransport, Transport};

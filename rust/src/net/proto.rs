@@ -2,19 +2,35 @@
 //! end.
 //!
 //! One frame per `\n`-terminated ASCII line, `verb key=value ...`. The
-//! first frame on every connection must be `hello v=1`; the server
-//! answers `ok hello v=1` (or a typed `err kind=version` and a close —
-//! version negotiation is explicit, never silent). Requests carry a
-//! client-chosen per-connection id echoed on the response, so a client
-//! can pipeline freely; the front end releases `infer` responses in
-//! request order per connection regardless of shard completion order.
+//! first frame on every connection must be a `hello`; the server
+//! answers `ok hello v=N` with the *negotiated* version (or a typed
+//! `err kind=version` and a close — version negotiation is explicit,
+//! never silent). Requests carry a client-chosen per-connection id
+//! echoed on the response, so a client can pipeline freely; the front
+//! end releases `infer` responses in request order per connection
+//! regardless of shard completion order.
+//!
+//! Two protocol versions are spoken by this build:
+//!
+//! - **v1** (legacy, single-model): exactly the PR 8 wire format. A v1
+//!   session's frames carry no model dimension, route to the server's
+//!   default model, and receive byte-identical responses to the pre-hub
+//!   build — pinned by tests and by the committed session transcript in
+//!   `rust/tests/proto/`.
+//! - **v2** (model hub): `hello v=2 [model=NAME]` negotiates
+//!   capabilities (the reply carries `caps=`) and binds the session's
+//!   default model; `infer`/`learn` may carry `model=NAME` to route
+//!   per-request; `stats`/`bye` gain a versioned per-model telemetry
+//!   map (`tv=`/`models=`); two err kinds are added (`unknown-model`,
+//!   `evicting`).
 //!
 //! ```text
-//! -> hello v=1                          <- ok hello v=1
+//! -> hello v=2 model=tenant0            <- ok hello v=2 caps=models,telemetry
 //! -> infer id=7 ttl=5 bits=0110...      <- pred id=7 class=2
-//! -> learn id=8 label=1 bits=0011...    <- ok id=8 seq=42
-//! -> stats id=9                         <- stats id=9 infers=.. ...
-//! -> drain id=10                        <- ok drain id=10 … bye infers=.. ...
+//! -> infer id=8 model=b bits=0110...    <- pred id=8 class=0
+//! -> learn id=9 label=1 bits=0011...    <- ok id=9 seq=42
+//! -> stats id=10                        <- stats id=10 infers=.. tv=1 models=..
+//! -> drain id=11                        <- ok drain id=11 … bye infers=.. ...
 //! any rejected request                  <- err id=N kind=<reason>
 //! ```
 //!
@@ -22,27 +38,56 @@
 //! bytes a connection may accumulate without producing a newline, so a
 //! hostile peer can never force an unbounded allocation; every line is
 //! tokenized strictly (unknown verbs, unknown keys, duplicate or
-//! missing fields, non-digit values and non-ASCII bytes are all typed
-//! errors). Field *semantics* (bit-width vs the served model, label
-//! range, admission) are the front end's job — this module only
-//! guarantees that what comes out of a parse is structurally sound and
-//! cost-bounded.
+//! missing fields, non-digit values, malformed model names and
+//! non-ASCII bytes are all typed errors). Field *semantics* (bit-width
+//! vs the served model, label range, admission, whether a named model
+//! exists) are the front end's job — this module only guarantees that
+//! what comes out of a parse is structurally sound and cost-bounded.
 
+use crate::hub::model::valid_model_name;
 use anyhow::{anyhow, bail, Result};
 
-/// The one protocol version this build speaks.
-pub const PROTO_VERSION: u32 = 1;
+/// The newest protocol version this build speaks.
+pub const PROTO_VERSION: u32 = 2;
+
+/// The oldest version still accepted (legacy single-model sessions).
+pub const PROTO_MIN_VERSION: u32 = 1;
+
+/// Capability list advertised to v2 clients in `ok hello caps=`.
+pub const PROTO_CAPS: &str = "models,telemetry";
+
+/// Version tag of the per-model telemetry encoding (`tv=` field).
+pub const TELEMETRY_VERSION: u32 = 1;
+
+/// Number of buckets in the batch-width histogram: widths 1, 2–3, 4–7,
+/// 8–15, 16–31, 32–63, 64+.
+pub const WIDTH_BUCKETS: usize = 7;
+
+/// Histogram bucket index for a flushed batch width (width ≥ 1).
+pub fn width_bucket(width: usize) -> usize {
+    match width {
+        0..=1 => 0,
+        2..=3 => 1,
+        4..=7 => 2,
+        8..=15 => 3,
+        16..=31 => 4,
+        32..=63 => 5,
+        _ => 6,
+    }
+}
 
 /// A parsed client request.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum Request {
-    /// Mandatory first frame: version negotiation.
-    Hello { version: u32 },
+    /// Mandatory first frame: version negotiation. v2 may bind the
+    /// session's default model by name.
+    Hello { version: u32, model: Option<String> },
     /// Score one sample. `ttl` is a per-request deadline budget in
-    /// virtual ticks (absent = the front end's default).
-    Infer { id: u64, ttl: Option<u64>, bits: Vec<bool> },
-    /// One online training step.
-    Learn { id: u64, label: usize, bits: Vec<bool> },
+    /// virtual ticks (absent = the front end's default); `model` routes
+    /// the request (absent = the session's default model).
+    Infer { id: u64, ttl: Option<u64>, model: Option<String>, bits: Vec<bool> },
+    /// One online training step against `model` (absent = default).
+    Learn { id: u64, label: usize, model: Option<String>, bits: Vec<bool> },
     /// Counter snapshot.
     Stats { id: u64 },
     /// Begin graceful drain: stop accepting, flush, checkpoint, close.
@@ -68,6 +113,10 @@ pub enum ErrKind {
     Draining,
     /// Dispatched but shed by the degraded backend under overload.
     Overload,
+    /// The named model is not hosted by this hub.
+    UnknownModel,
+    /// The target model is mid-eviction; retry after the barrier.
+    Evicting,
 }
 
 impl ErrKind {
@@ -80,6 +129,8 @@ impl ErrKind {
             ErrKind::Frame => "frame",
             ErrKind::Draining => "draining",
             ErrKind::Overload => "overload",
+            ErrKind::UnknownModel => "unknown-model",
+            ErrKind::Evicting => "evicting",
         }
     }
 
@@ -92,13 +143,100 @@ impl ErrKind {
             "frame" => ErrKind::Frame,
             "draining" => ErrKind::Draining,
             "overload" => ErrKind::Overload,
+            "unknown-model" => ErrKind::UnknownModel,
+            "evicting" => ErrKind::Evicting,
             other => bail!("proto: unknown err kind {other:?}"),
         })
     }
 }
 
+/// One model's row in the versioned telemetry map: lifecycle counters,
+/// flush causes, the batch-width histogram and a per-shard queue-depth
+/// snapshot.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ModelTelemetry {
+    /// The model's wire name.
+    pub model: String,
+    pub evictions: u64,
+    pub rehydrations: u64,
+    pub full_flushes: u64,
+    pub deadline_flushes: u64,
+    pub final_flushes: u64,
+    /// Flushed-batch width histogram (see [`width_bucket`]).
+    pub width_hist: [u64; WIDTH_BUCKETS],
+    /// Outstanding batches per shard at snapshot time (empty when the
+    /// backend has no internal queues).
+    pub queue_depths: Vec<u64>,
+}
+
+impl ModelTelemetry {
+    fn encode(&self, out: &mut String) {
+        use std::fmt::Write;
+        let _ = write!(
+            out,
+            "{}:{}:{}:{}:{}:{}:",
+            self.model,
+            self.evictions,
+            self.rehydrations,
+            self.full_flushes,
+            self.deadline_flushes,
+            self.final_flushes
+        );
+        for (i, h) in self.width_hist.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let _ = write!(out, "{h}");
+        }
+        out.push(':');
+        if self.queue_depths.is_empty() {
+            out.push('-');
+        } else {
+            for (i, q) in self.queue_depths.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                let _ = write!(out, "{q}");
+            }
+        }
+    }
+
+    fn parse(entry: &str) -> Result<Self> {
+        let parts: Vec<&str> = entry.split(':').collect();
+        if parts.len() != 8 {
+            bail!("proto: telemetry entry {entry:?} has {} fields, want 8", parts.len());
+        }
+        if !valid_model_name(parts[0]) {
+            bail!("proto: bad model name {:?} in telemetry", parts[0]);
+        }
+        let hist: Vec<u64> = parts[6].split(',').map(parse_u64).collect::<Result<_>>()?;
+        let width_hist: [u64; WIDTH_BUCKETS] = hist
+            .try_into()
+            .map_err(|_| anyhow!("proto: width histogram must have {WIDTH_BUCKETS} buckets"))?;
+        let queue_depths = if parts[7] == "-" {
+            Vec::new()
+        } else {
+            parts[7].split(',').map(parse_u64).collect::<Result<_>>()?
+        };
+        Ok(ModelTelemetry {
+            model: parts[0].to_string(),
+            evictions: parse_u64(parts[1])?,
+            rehydrations: parse_u64(parts[2])?,
+            full_flushes: parse_u64(parts[3])?,
+            deadline_flushes: parse_u64(parts[4])?,
+            final_flushes: parse_u64(parts[5])?,
+            width_hist,
+            queue_depths,
+        })
+    }
+}
+
 /// The counters a `stats` response and the final `bye` frame carry.
-#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+/// The eight scalar counters are the v1 surface, encoded identically
+/// forever; `telemetry` is the v2 per-model map, appended as
+/// `tv=<version> models=<entries>` only when non-empty — so every v1
+/// frame stays byte-identical.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct WireStats {
     pub infers: u64,
     pub learns: u64,
@@ -108,6 +246,8 @@ pub struct WireStats {
     pub admission: u64,
     pub quarantined: u64,
     pub frame_errors: u64,
+    /// Per-model telemetry rows (v2 sessions; empty on v1).
+    pub telemetry: Vec<ModelTelemetry>,
 }
 
 impl WireStats {
@@ -126,13 +266,23 @@ impl WireStats {
             self.quarantined,
             self.frame_errors
         );
+        if !self.telemetry.is_empty() {
+            let _ = write!(out, " tv={TELEMETRY_VERSION} models=");
+            for (i, row) in self.telemetry.iter().enumerate() {
+                if i > 0 {
+                    out.push(';');
+                }
+                row.encode(out);
+            }
+        }
     }
 }
 
 /// A server response frame.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum Response {
-    HelloOk { version: u32 },
+    /// Negotiated version; `caps` is present from v2 on.
+    HelloOk { version: u32, caps: Option<String> },
     Pred { id: u64, class: usize },
     LearnOk { id: u64, seq: u64 },
     DrainOk { id: u64 },
@@ -147,9 +297,18 @@ impl Request {
     /// Wire form, newline-terminated.
     pub fn encode(&self) -> String {
         let mut s = match self {
-            Request::Hello { version } => format!("hello v={version}"),
-            Request::Infer { id, ttl, bits } => {
+            Request::Hello { version, model } => {
+                let mut s = format!("hello v={version}");
+                if let Some(m) = model {
+                    s.push_str(&format!(" model={m}"));
+                }
+                s
+            }
+            Request::Infer { id, ttl, model, bits } => {
                 let mut s = format!("infer id={id}");
+                if let Some(m) = model {
+                    s.push_str(&format!(" model={m}"));
+                }
                 if let Some(t) = ttl {
                     s.push_str(&format!(" ttl={t}"));
                 }
@@ -157,8 +316,12 @@ impl Request {
                 push_bits(&mut s, bits);
                 s
             }
-            Request::Learn { id, label, bits } => {
-                let mut s = format!("learn id={id} label={label} bits=");
+            Request::Learn { id, label, model, bits } => {
+                let mut s = format!("learn id={id}");
+                if let Some(m) = model {
+                    s.push_str(&format!(" model={m}"));
+                }
+                s.push_str(&format!(" label={label} bits="));
                 push_bits(&mut s, bits);
                 s
             }
@@ -174,7 +337,13 @@ impl Response {
     /// Wire form, newline-terminated.
     pub fn encode(&self) -> String {
         let mut s = match self {
-            Response::HelloOk { version } => format!("ok hello v={version}"),
+            Response::HelloOk { version, caps } => {
+                let mut s = format!("ok hello v={version}");
+                if let Some(c) = caps {
+                    s.push_str(&format!(" caps={c}"));
+                }
+                s
+            }
             Response::Pred { id, class } => format!("pred id={id} class={class}"),
             Response::LearnOk { id, seq } => format!("ok id={id} seq={seq}"),
             Response::DrainOk { id } => format!("ok drain id={id}"),
@@ -263,6 +432,15 @@ fn parse_bits(v: &str) -> Result<Vec<bool>> {
         .collect()
 }
 
+/// A `model=` value: the hub's name grammar, enforced at parse time so
+/// a malformed name is a frame error, not a routing miss.
+fn parse_model(v: &str) -> Result<String> {
+    if !valid_model_name(v) {
+        bail!("proto: bad model name {v:?} (want 1..=32 of [A-Za-z0-9_-])");
+    }
+    Ok(v.to_string())
+}
+
 /// Parse one request line (no trailing newline). Errors are frame-level
 /// (`err kind=frame` territory): the caller decides whether to answer
 /// or hang up, but a failed parse never partially applies.
@@ -271,15 +449,24 @@ pub fn parse_request(line: &str) -> Result<Request> {
     let verb = tokens.next().ok_or_else(|| anyhow!("proto: empty frame"))?;
     let mut f = Fields::parse(tokens)?;
     let req = match verb {
-        "hello" => Request::Hello { version: parse_u64(f.want("v")?)? as u32 },
+        "hello" => {
+            let version = parse_u64(f.want("v")?)? as u32;
+            let model = f.take("model").map(parse_model).transpose()?;
+            if model.is_some() && version < 2 {
+                bail!("proto: hello model= requires v>=2, got v={version}");
+            }
+            Request::Hello { version, model }
+        }
         "infer" => Request::Infer {
             id: parse_u64(f.want("id")?)?,
             ttl: f.take("ttl").map(parse_u64).transpose()?,
+            model: f.take("model").map(parse_model).transpose()?,
             bits: parse_bits(f.want("bits")?)?,
         },
         "learn" => Request::Learn {
             id: parse_u64(f.want("id")?)?,
             label: parse_u64(f.want("label")?)? as usize,
+            model: f.take("model").map(parse_model).transpose()?,
             bits: parse_bits(f.want("bits")?)?,
         },
         "stats" => Request::Stats { id: parse_u64(f.want("id")?)? },
@@ -314,7 +501,7 @@ pub fn parse_response(line: &str) -> Result<Response> {
     };
     let mut f = Fields::parse(tokens)?;
     let parse_stats = |f: &mut Fields| -> Result<WireStats> {
-        Ok(WireStats {
+        let mut stats = WireStats {
             infers: parse_u64(f.want("infers")?)?,
             learns: parse_u64(f.want("learns")?)?,
             preds: parse_u64(f.want("preds")?)?,
@@ -323,10 +510,26 @@ pub fn parse_response(line: &str) -> Result<Response> {
             admission: parse_u64(f.want("admission")?)?,
             quarantined: parse_u64(f.want("quarantined")?)?,
             frame_errors: parse_u64(f.want("frame_errors")?)?,
-        })
+            telemetry: Vec::new(),
+        };
+        if let Some(tv) = f.take("tv") {
+            let tv = parse_u64(tv)? as u32;
+            if tv != TELEMETRY_VERSION {
+                bail!("proto: telemetry version {tv} unsupported (want {TELEMETRY_VERSION})");
+            }
+            stats.telemetry = f
+                .want("models")?
+                .split(';')
+                .map(ModelTelemetry::parse)
+                .collect::<Result<_>>()?;
+        }
+        Ok(stats)
     };
     let resp = match (verb, sub) {
-        ("ok", Some("hello")) => Response::HelloOk { version: parse_u64(f.want("v")?)? as u32 },
+        ("ok", Some("hello")) => Response::HelloOk {
+            version: parse_u64(f.want("v")?)? as u32,
+            caps: f.take("caps").map(str::to_string),
+        },
         ("ok", Some("drain")) => Response::DrainOk { id: parse_u64(f.want("id")?)? },
         ("ok", None) => Response::LearnOk {
             id: parse_u64(f.want("id")?)?,
@@ -425,12 +628,66 @@ mod tests {
 
     #[test]
     fn requests_roundtrip() {
-        roundtrip_req(Request::Hello { version: 1 });
-        roundtrip_req(Request::Infer { id: 7, ttl: Some(5), bits: vec![true, false, true] });
-        roundtrip_req(Request::Infer { id: 8, ttl: None, bits: vec![false; 16] });
-        roundtrip_req(Request::Learn { id: 9, label: 2, bits: vec![true; 4] });
+        roundtrip_req(Request::Hello { version: 1, model: None });
+        roundtrip_req(Request::Hello { version: 2, model: Some("tenant-0".into()) });
+        roundtrip_req(Request::Infer {
+            id: 7,
+            ttl: Some(5),
+            model: None,
+            bits: vec![true, false, true],
+        });
+        roundtrip_req(Request::Infer {
+            id: 8,
+            ttl: None,
+            model: Some("b".into()),
+            bits: vec![false; 16],
+        });
+        roundtrip_req(Request::Learn {
+            id: 9,
+            label: 2,
+            model: Some("tenant_1".into()),
+            bits: vec![true; 4],
+        });
         roundtrip_req(Request::Stats { id: 10 });
         roundtrip_req(Request::Drain { id: u64::MAX });
+    }
+
+    /// The v1 byte-forms are frozen: every model-less frame encodes to
+    /// exactly the pre-hub wire bytes, and the pre-hub lines parse to
+    /// the model-less requests. This is the compatibility contract the
+    /// committed session transcript replays end to end.
+    #[test]
+    fn v1_wire_forms_are_byte_identical() {
+        assert_eq!(Request::Hello { version: 1, model: None }.encode(), "hello v=1\n");
+        assert_eq!(
+            Request::Infer { id: 7, ttl: Some(5), model: None, bits: vec![true, false] }.encode(),
+            "infer id=7 ttl=5 bits=10\n"
+        );
+        assert_eq!(
+            Request::Learn { id: 8, label: 1, model: None, bits: vec![false, true] }.encode(),
+            "learn id=8 label=1 bits=01\n"
+        );
+        assert_eq!(Response::HelloOk { version: 1, caps: None }.encode(), "ok hello v=1\n");
+        assert_eq!(
+            parse_request("infer id=7 ttl=5 bits=10").unwrap(),
+            Request::Infer { id: 7, ttl: Some(5), model: None, bits: vec![true, false] }
+        );
+        let legacy_stats = WireStats {
+            infers: 1,
+            learns: 2,
+            preds: 3,
+            shed: 4,
+            deadline: 5,
+            admission: 6,
+            quarantined: 7,
+            frame_errors: 8,
+            telemetry: Vec::new(),
+        };
+        assert_eq!(
+            Response::Stats { id: 9, stats: legacy_stats }.encode(),
+            "stats id=9 infers=1 learns=2 preds=3 shed=4 deadline=5 admission=6 quarantined=7 \
+             frame_errors=8\n"
+        );
     }
 
     #[test]
@@ -444,12 +701,14 @@ mod tests {
             admission: 6,
             quarantined: 7,
             frame_errors: 8,
+            telemetry: Vec::new(),
         };
-        roundtrip_resp(Response::HelloOk { version: 1 });
+        roundtrip_resp(Response::HelloOk { version: 1, caps: None });
+        roundtrip_resp(Response::HelloOk { version: 2, caps: Some(PROTO_CAPS.to_string()) });
         roundtrip_resp(Response::Pred { id: 3, class: 2 });
         roundtrip_resp(Response::LearnOk { id: 4, seq: 17 });
         roundtrip_resp(Response::DrainOk { id: 11 });
-        roundtrip_resp(Response::Stats { id: 9, stats });
+        roundtrip_resp(Response::Stats { id: 9, stats: stats.clone() });
         for kind in [
             ErrKind::Deadline,
             ErrKind::Admission,
@@ -458,11 +717,66 @@ mod tests {
             ErrKind::Frame,
             ErrKind::Draining,
             ErrKind::Overload,
+            ErrKind::UnknownModel,
+            ErrKind::Evicting,
         ] {
             roundtrip_resp(Response::Err { id: Some(5), kind });
             roundtrip_resp(Response::Err { id: None, kind });
         }
         roundtrip_resp(Response::Bye { stats });
+    }
+
+    #[test]
+    fn telemetry_roundtrips_and_is_versioned() {
+        let stats = WireStats {
+            infers: 40,
+            learns: 12,
+            preds: 38,
+            shed: 2,
+            deadline: 1,
+            admission: 0,
+            quarantined: 3,
+            frame_errors: 0,
+            telemetry: vec![
+                ModelTelemetry {
+                    model: "tenant-0".into(),
+                    evictions: 2,
+                    rehydrations: 2,
+                    full_flushes: 5,
+                    deadline_flushes: 3,
+                    final_flushes: 1,
+                    width_hist: [4, 3, 2, 0, 0, 0, 0],
+                    queue_depths: vec![1, 0, 2],
+                },
+                ModelTelemetry {
+                    model: "b".into(),
+                    width_hist: [0; WIDTH_BUCKETS],
+                    ..Default::default()
+                },
+            ],
+        };
+        let wire = Response::Bye { stats: stats.clone() }.encode();
+        assert!(wire.contains(" tv=1 models="), "telemetry must carry its version: {wire:?}");
+        assert!(wire.contains("tenant-0:2:2:5:3:1:4,3,2,0,0,0,0:1,0,2"), "wire: {wire:?}");
+        assert!(wire.contains(";b:0:0:0:0:0:0,0,0,0,0,0,0:-"), "empty depths encode -: {wire:?}");
+        assert_eq!(parse_response(wire.trim_end()).unwrap(), Response::Bye { stats });
+        // A future telemetry version is a typed parse error, not a
+        // silent misread.
+        let bumped = wire.replace(" tv=1 ", " tv=9 ");
+        assert!(parse_response(bumped.trim_end()).is_err());
+    }
+
+    #[test]
+    fn width_buckets_partition_the_lane() {
+        assert_eq!(width_bucket(1), 0);
+        assert_eq!(width_bucket(2), 1);
+        assert_eq!(width_bucket(3), 1);
+        assert_eq!(width_bucket(4), 2);
+        assert_eq!(width_bucket(15), 3);
+        assert_eq!(width_bucket(16), 4);
+        assert_eq!(width_bucket(63), 5);
+        assert_eq!(width_bucket(64), 6);
+        assert_eq!(width_bucket(1000), 6);
     }
 
     #[test]
@@ -479,18 +793,33 @@ mod tests {
             "infer id= bits=01",                 // empty value
             "learn id=1 bits=01",                // missing label
             "hello",                             // missing version
+            "hello v=1 model=a",                 // model binding needs v2
+            "infer id=1 model=a/b bits=01",      // model name grammar
+            "infer id=1 model=way-too-long-a-name-for-any-model-here bits=01",
         ] {
             assert!(parse_request(bad).is_err(), "parsed hostile line {bad:?}");
         }
         assert!(parse_response("ok id=1").is_err(), "missing seq");
         assert!(parse_response("err id=1 kind=sideways").is_err());
         assert!(parse_response("bye infers=1").is_err(), "truncated stats");
+        // tv without models, and a malformed telemetry entry.
+        assert!(parse_response(
+            "bye infers=0 learns=0 preds=0 shed=0 deadline=0 admission=0 quarantined=0 \
+             frame_errors=0 tv=1"
+        )
+        .is_err());
+        assert!(parse_response(
+            "bye infers=0 learns=0 preds=0 shed=0 deadline=0 admission=0 quarantined=0 \
+             frame_errors=0 tv=1 models=a:1:2"
+        )
+        .is_err());
     }
 
     #[test]
     fn frame_buffer_reassembles_torn_frames() {
         let mut fb = FrameBuffer::new(64);
-        let wire = Request::Infer { id: 3, ttl: None, bits: vec![true, false] }.encode();
+        let wire =
+            Request::Infer { id: 3, ttl: None, model: None, bits: vec![true, false] }.encode();
         // One byte per push: the torn-frame worst case.
         let mut got = Vec::new();
         for b in wire.as_bytes() {
@@ -500,7 +829,7 @@ mod tests {
         assert_eq!(got.len(), 1);
         assert_eq!(
             parse_request(&got[0]).unwrap(),
-            Request::Infer { id: 3, ttl: None, bits: vec![true, false] }
+            Request::Infer { id: 3, ttl: None, model: None, bits: vec![true, false] }
         );
         assert_eq!(fb.pending(), 0);
         // Two frames in one sliver.

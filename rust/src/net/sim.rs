@@ -255,6 +255,11 @@ pub struct ScriptConfig {
     pub classes: usize,
     /// Per-request deadline budget stamped on infer requests.
     pub ttl: Option<u64>,
+    /// Protocol version every client negotiates at `hello` (1 pins the
+    /// legacy single-model wire surface; 2 enables model binding).
+    pub hello_version: u32,
+    /// Model name bound at `hello` (v2 only; `None` = server default).
+    pub model: Option<String>,
 }
 
 /// An effectively-unbounded read window for healthy clients.
@@ -290,7 +295,9 @@ pub fn seeded_scripts(seed: u64, cfg: &ScriptConfig, plan: &NetChaosPlan) -> Vec
             _ => ops.push(ClientOp::ReadAllow { at: connect_at, frames: OPEN_WINDOW }),
         }
 
-        let hello = Request::Hello { version: 1 }.encode().into_bytes();
+        let hello = Request::Hello { version: cfg.hello_version, model: cfg.model.clone() }
+            .encode()
+            .into_bytes();
         ops.push(ClientOp::Send { at: t, bytes: hello });
         t += 1;
 
@@ -309,9 +316,9 @@ pub fn seeded_scripts(seed: u64, cfg: &ScriptConfig, plan: &NetChaosPlan) -> Vec
             }
             let bits: Vec<bool> = (0..cfg.features).map(|_| rng.next_f32() < 0.5).collect();
             let req = if rng.next_f32() < cfg.labelled_fraction {
-                Request::Learn { id: cid, label: rng.next_below(cfg.classes), bits }
+                Request::Learn { id: cid, label: rng.next_below(cfg.classes), model: None, bits }
             } else {
-                Request::Infer { id: cid, ttl: cfg.ttl, bits }
+                Request::Infer { id: cid, ttl: cfg.ttl, model: None, bits }
             };
             let bytes = req.encode().into_bytes();
             match fault {
@@ -360,6 +367,8 @@ mod tests {
             features: 8,
             classes: 3,
             ttl: Some(6),
+            hello_version: 1,
+            model: None,
         }
     }
 

@@ -115,6 +115,12 @@ pub trait NetBackend: ServeBackend + Sized {
     /// Drain request ids shed with an overload response since the last
     /// poll.
     fn poll_shed(&mut self) -> Vec<u64>;
+    /// Snapshot of per-shard queue depths (outstanding batches), for
+    /// the telemetry surface. Backends without internal queues report
+    /// an empty list.
+    fn queue_depths(&self) -> Vec<u64> {
+        Vec::new()
+    }
     /// Finish the run: flush everything in flight, checkpoint the
     /// replica state(s), and return the complete record.
     fn finalize(self) -> anyhow::Result<NetFinal>;

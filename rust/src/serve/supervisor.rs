@@ -836,6 +836,10 @@ impl crate::serve::NetBackend for ShardServer {
         fresh
     }
 
+    fn queue_depths(&self) -> Vec<u64> {
+        self.slots.iter().map(|s| s.outstanding.len() as u64).collect()
+    }
+
     fn finalize(self) -> Result<crate::serve::NetFinal> {
         let out = self.finish()?;
         Ok(crate::serve::NetFinal {

@@ -54,8 +54,13 @@
 //! Format `v2` adds the `net` step kind (a scripted client fleet driven
 //! through two network front ends with connection-level chaos, see
 //! [`crate::net`]); schedules without net steps keep serializing as
-//! `v1`, and a `v1` header containing a net step is rejected.
+//! `v1`, and a `v1` header containing a net step is rejected. Format
+//! `v3` adds the `hub` step kind (a multi-tenant [`crate::hub::ModelHub`]
+//! under a one-replica budget, round-robin updates with forced
+//! evictions, checked against never-evicted mirrors); the same
+//! downgrade/rejection rules apply.
 
+use crate::hub::{HubConfig, ModelHub, SingleModel};
 use crate::net::{run_sim, seeded_scripts, NetConfig, ScriptConfig};
 use crate::serve::{
     restore, snapshot_bytes, BatcherConfig, NetChaosPlan, NetChaosSpec, ScalarOracle,
@@ -106,6 +111,12 @@ pub enum Step {
     /// stats, admitted-update logs and replica digests, then fold the
     /// admitted log into every lane (needs fixture format v2).
     Net { clients: u32, requests: u32, seed: u64 },
+    /// Fork `tenants` hub models from the fast lane under a ONE-replica
+    /// memory budget, apply `updates` seeded Learns round-robin with
+    /// forced evictions interleaved, and assert every tenant's final
+    /// digest bit-identical to a never-evicted mirror replaying the
+    /// same `(base_seed, seq)` log (needs fixture format v3).
+    Hub { tenants: u32, updates: u32, seed: u64 },
     /// Swap the training hyper-parameters mid-schedule.
     Params { t: i32, s_bits: u32, active_clauses: u32, active_classes: u32 },
 }
@@ -129,6 +140,9 @@ impl Step {
             }
             Step::Net { clients, requests, seed } => {
                 format!("step net clients={clients} requests={requests} seed={seed}")
+            }
+            Step::Hub { tenants, updates, seed } => {
+                format!("step hub tenants={tenants} updates={updates} seed={seed}")
             }
             Step::Params { t, s_bits, active_clauses, active_classes } => format!(
                 "step params t={t} s_bits={s_bits} active_clauses={active_clauses} active_classes={active_classes}"
@@ -163,7 +177,14 @@ impl Schedule {
     pub fn to_text(&self) -> String {
         let mut out = String::new();
         let has_net = self.steps.iter().any(|s| matches!(s, Step::Net { .. }));
-        out.push_str(if has_net { "tmfpga-corpus v2\n" } else { "tmfpga-corpus v1\n" });
+        let has_hub = self.steps.iter().any(|s| matches!(s, Step::Hub { .. }));
+        out.push_str(if has_hub {
+            "tmfpga-corpus v3\n"
+        } else if has_net {
+            "tmfpga-corpus v2\n"
+        } else {
+            "tmfpga-corpus v1\n"
+        });
         out.push_str(&format!(
             "shape classes={} clauses={} features={} states={}\n",
             self.shape.classes, self.shape.max_clauses, self.shape.features, self.shape.states
@@ -198,10 +219,11 @@ impl Schedule {
             .map(str::trim)
             .filter(|l| !l.is_empty() && !l.starts_with('#'));
         let header = lines.next().context("empty fixture")?;
-        let v2 = match header {
-            "tmfpga-corpus v1" => false,
-            "tmfpga-corpus v2" => true,
-            other => bail!("bad fixture header {other:?} (want \"tmfpga-corpus v1\" or \"v2\")"),
+        let version = match header {
+            "tmfpga-corpus v1" => 1u32,
+            "tmfpga-corpus v2" => 2,
+            "tmfpga-corpus v3" => 3,
+            other => bail!("bad fixture header {other:?} (want \"tmfpga-corpus v1\"..\"v3\")"),
         };
 
         let shape_line = lines.next().context("missing shape line")?;
@@ -279,12 +301,22 @@ impl Schedule {
                     Step::Serve { updates: get(&toks, "updates")?, seed: get(&toks, "seed")? }
                 }
                 "net" => {
-                    if !v2 {
+                    if version < 2 {
                         bail!("net steps need a \"tmfpga-corpus v2\" fixture header");
                     }
                     Step::Net {
                         clients: get(&toks, "clients")?,
                         requests: get(&toks, "requests")?,
+                        seed: get(&toks, "seed")?,
+                    }
+                }
+                "hub" => {
+                    if version < 3 {
+                        bail!("hub steps need a \"tmfpga-corpus v3\" fixture header");
+                    }
+                    Step::Hub {
+                        tenants: get(&toks, "tenants")?,
+                        updates: get(&toks, "updates")?,
                         seed: get(&toks, "seed")?,
                     }
                 }
@@ -652,6 +684,11 @@ pub fn replay_opts(s: &Schedule, opts: &ReplayOptions) -> Result<Report, Diverge
                     features: shape.features,
                     classes: shape.classes,
                     ttl: Some(3),
+                    // Corpus net steps are pinned to the v1 wire surface:
+                    // their fixtures predate the model dimension and must
+                    // replay byte-identically forever.
+                    hello_version: 1,
+                    model: None,
                 };
                 let scripts = seeded_scripts(mix(s.base_seed, *seed), &script_cfg, &plan);
                 let batch =
@@ -659,7 +696,8 @@ pub fn replay_opts(s: &Schedule, opts: &ReplayOptions) -> Result<Report, Diverge
                 let ncfg = NetConfig { batch, record_updates: true, ..NetConfig::default() };
                 let serve_seed = mix(s.base_seed, seed ^ 0x5E4E);
                 let oracle = ScalarOracle::new(b.clone(), params.clone(), serve_seed);
-                let orep = match run_sim(oracle, scripts.clone(), shape, ncfg.clone()) {
+                let orep = match run_sim(SingleModel(oracle), scripts.clone(), shape, ncfg.clone())
+                {
                     Ok((rep, _)) => rep,
                     Err(e2) => {
                         return Err(Divergence {
@@ -678,7 +716,7 @@ pub fn replay_opts(s: &Schedule, opts: &ReplayOptions) -> Result<Report, Diverge
                         })
                     }
                 };
-                let srep = match run_sim(server, scripts, shape, ncfg) {
+                let srep = match run_sim(SingleModel(server), scripts, shape, ncfg) {
                     Ok((rep, _)) => rep,
                     Err(e2) => {
                         return Err(Divergence {
@@ -733,6 +771,93 @@ pub fn replay_opts(s: &Schedule, opts: &ReplayOptions) -> Result<Report, Diverge
                     &mut serve_scratch,
                     &mut scratch_c,
                 );
+            }
+            Step::Hub { tenants, updates, seed } => {
+                // Fork hub tenants from the fast lane under a budget of
+                // ONE resident replica, so round-robin updates force an
+                // eviction/rehydration cycle on nearly every touch. Each
+                // tenant's never-evicted mirror applies the identical
+                // `(base_seed, seq)` log; digests must match exactly —
+                // the hub's residency machinery is contractually
+                // invisible.
+                let n = (*tenants as usize).clamp(1, 8);
+                let hub_seed = mix(s.base_seed, *seed);
+                let cost = snapshot_bytes(&b, &params, 0).len();
+                let mut hub = ModelHub::new(HubConfig {
+                    memory_budget: cost,
+                    checkpoint_every: 4,
+                    plane_cache_batches: 8,
+                });
+                let mut handles = Vec::with_capacity(n);
+                let mut mirrors: Vec<(MultiTm, u64, u64)> = Vec::with_capacity(n);
+                for t in 0..n {
+                    let tseed = mix(hub_seed, t as u64 + 1);
+                    match hub.create(&format!("lane-{t}"), b.clone(), params.clone(), tseed) {
+                        Ok(h) => handles.push(h),
+                        Err(e2) => {
+                            return Err(Divergence {
+                                step: i,
+                                what: format!("hub create lane-{t} failed: {e2}"),
+                            })
+                        }
+                    }
+                    mirrors.push((b.clone(), tseed, 0));
+                }
+                let mut rng = Xoshiro256::new(mix(hub_seed, 0xB0B));
+                for k in 0..*updates {
+                    let t = k as usize % n;
+                    let bits = crate::testkit::gen::bool_vec(&mut rng, shape.features, 0.5);
+                    let kind = UpdateKind::Learn {
+                        input: Input::pack(shape, &bits),
+                        label: rng.next_below(shape.classes),
+                    };
+                    let seq = match hub.update(handles[t], kind.clone()) {
+                        Ok(seq) => seq,
+                        Err(e2) => {
+                            return Err(Divergence {
+                                step: i,
+                                what: format!("hub update on lane-{t} failed: {e2}"),
+                            })
+                        }
+                    };
+                    let (mirror, tseed, mseq) = &mut mirrors[t];
+                    *mseq += 1;
+                    if seq != *mseq {
+                        return Err(Divergence {
+                            step: i,
+                            what: format!("hub seq {seq} != mirror seq {mseq} on lane-{t}"),
+                        });
+                    }
+                    mirror.apply_update(&ShardUpdate { seq, kind }, &params, *tseed);
+                    if k % 3 == 2 {
+                        if let Err(e2) = hub.evict(handles[t]) {
+                            return Err(Divergence {
+                                step: i,
+                                what: format!("hub forced evict lane-{t} failed: {e2}"),
+                            });
+                        }
+                    }
+                }
+                for t in 0..n {
+                    let digest = match hub.digest(handles[t]) {
+                        Ok(dg) => dg,
+                        Err(e2) => {
+                            return Err(Divergence {
+                                step: i,
+                                what: format!("hub digest lane-{t} failed: {e2}"),
+                            })
+                        }
+                    };
+                    if digest != mirrors[t].0.state_digest() {
+                        return Err(Divergence {
+                            step: i,
+                            what: format!(
+                                "hub lane-{t} digest diverged from its never-evicted mirror"
+                            ),
+                        });
+                    }
+                    checks += 1;
+                }
             }
             Step::Params { t, s_bits, active_clauses, active_classes } => {
                 let mut np = params.clone();
@@ -998,6 +1123,42 @@ mod tests {
         let plain = demo().to_text().replace("tmfpga-corpus v1", "tmfpga-corpus v2");
         let back = Schedule::parse(&plain).unwrap();
         assert_eq!(back, demo());
+    }
+
+    #[test]
+    fn hub_steps_round_trip_as_v3() {
+        let shape = TmShape::iris();
+        let mut s = Schedule::new(&shape, 0xBEEF);
+        s.steps = vec![
+            Step::Train { rows: 6, seed: 1 },
+            Step::Hub { tenants: 3, updates: 10, seed: 2 },
+        ];
+        let text = s.to_text();
+        assert!(text.starts_with("tmfpga-corpus v3\n"), "hub step must bump the header");
+        let back = Schedule::parse(&text).unwrap();
+        assert_eq!(back, s);
+        assert_eq!(back.to_text(), text);
+        // The same step list under a v2 header must be rejected.
+        let v2 = text.replace("tmfpga-corpus v3", "tmfpga-corpus v2");
+        assert!(Schedule::parse(&v2).is_err(), "hub step in a v2 fixture must fail");
+        // A v3 header without hub steps still parses (and re-emits v1).
+        let plain = demo().to_text().replace("tmfpga-corpus v1", "tmfpga-corpus v3");
+        let back = Schedule::parse(&plain).unwrap();
+        assert_eq!(back, demo());
+    }
+
+    #[test]
+    fn hub_step_replays_clean() {
+        let shape = TmShape::iris();
+        let mut s = Schedule::new(&shape, 0x1B1B);
+        s.steps = vec![
+            Step::Train { rows: 8, seed: 1 },
+            Step::Hub { tenants: 3, updates: 12, seed: 2 },
+            Step::Train { rows: 4, seed: 3 },
+        ];
+        let rep = replay(&s).unwrap();
+        assert_eq!(rep.steps, 3);
+        assert!(rep.checks > 0);
     }
 
     #[test]

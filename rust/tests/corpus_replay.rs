@@ -53,7 +53,7 @@ fn committed_fixtures_replay_bit_identically() {
 #[test]
 fn committed_fixtures_cover_every_step_kind() {
     use tm_fpga::verify::corpus::Step;
-    let mut seen = [false; 10];
+    let mut seen = [false; 11];
     for path in fixture_paths() {
         let s = Schedule::parse(&fs::read_to_string(&path).unwrap()).unwrap();
         for step in &s.steps {
@@ -68,11 +68,12 @@ fn committed_fixtures_cover_every_step_kind() {
                 Step::Serve { .. } => 7,
                 Step::Params { .. } => 8,
                 Step::Net { .. } => 9,
+                Step::Hub { .. } => 10,
             };
             seen[k] = true;
         }
     }
-    assert_eq!(seen, [true; 10], "corpus no longer covers every step kind");
+    assert_eq!(seen, [true; 11], "corpus no longer covers every step kind");
 }
 
 /// Seeded generator schedules replay clean over both a single-word and a

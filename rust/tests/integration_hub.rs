@@ -1,0 +1,264 @@
+//! Multi-tenant model hub suite: handle-scoped routing over the wire,
+//! LRU eviction/rehydration bit-identity, typed refusals, and the
+//! committed legacy-protocol transcript that pins the v1 byte surface
+//! across protocol growth.
+
+use std::collections::BTreeSet;
+use tm_fpga::coordinator::{run_hub_soak, HubSoakConfig};
+use tm_fpga::hub::{HubConfig, HubError, HubNetBackend, ModelHub, RouteError, SingleModel};
+use tm_fpga::net::{
+    run_sim, ClientOp, ClientScript, NetConfig, Outcome, Request, PROTO_CAPS, PROTO_VERSION,
+    TELEMETRY_VERSION,
+};
+use tm_fpga::serve::{BatcherConfig, ScalarOracle};
+use tm_fpga::tm::{Input, MultiTm, ShardUpdate, TmParams, TmShape, UpdateKind, Xoshiro256};
+
+fn shape() -> TmShape {
+    TmShape::iris()
+}
+
+/// Random machine with realistic include density (testkit seeding).
+fn machine(seed: u64) -> MultiTm {
+    let mut rng = Xoshiro256::new(seed);
+    tm_fpga::testkit::gen::machine(&mut rng, &shape())
+}
+
+fn send(at: u64, req: Request) -> ClientOp {
+    ClientOp::Send { at, bytes: req.encode().into_bytes() }
+}
+
+/// A deterministic feature row for request `salt`.
+fn bit_row(salt: u64) -> Vec<bool> {
+    let mut rng = Xoshiro256::new(salt ^ 0x0FF5_E7);
+    (0..shape().features).map(|_| rng.next_f32() < 0.5).collect()
+}
+
+/// One-frame-per-tick batching config: every infer full-flushes in its
+/// arrival tick, so a transcript's frame order is strictly sequential.
+fn sequential_cfg() -> NetConfig {
+    let batch = BatcherConfig { max_batch: 1, latency_budget: 4, expect_literals: None };
+    NetConfig { batch, write_buffer_cap: 64, max_in_flight: 64, ..NetConfig::default() }
+}
+
+/// The committed legacy-session transcript (see the file's header for
+/// the format and what it pins).
+const V1_SESSION: &str = include_str!("proto/v1_session.txt");
+
+/// Parse the transcript into scripted sends (one per tick) and the
+/// expected frames in delivery order.
+fn load_transcript(text: &str) -> (Vec<ClientOp>, Vec<String>) {
+    let mut ops = Vec::new();
+    let mut expected = Vec::new();
+    let mut at = 1u64;
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if let Some(frame) = line.strip_prefix("> ") {
+            ops.push(ClientOp::Send { at, bytes: format!("{frame}\n").into_bytes() });
+            at += 1;
+        } else if let Some(frame) = line.strip_prefix("< ") {
+            expected.push(frame.to_string());
+        } else {
+            panic!("transcript: unparseable line {line:?}");
+        }
+    }
+    (ops, expected)
+}
+
+/// Token-wise frame match; an expected `key=*` matches any actual
+/// token with the same key.
+fn frame_matches(expected: &str, actual: &str) -> bool {
+    let want: Vec<&str> = expected.split_whitespace().collect();
+    let got: Vec<&str> = actual.split_whitespace().collect();
+    want.len() == got.len()
+        && want.iter().zip(&got).all(|(w, g)| {
+            if let Some(key) = w.strip_suffix("=*") {
+                g.starts_with(key) && g.as_bytes().get(key.len()) == Some(&b'=')
+            } else {
+                w == g
+            }
+        })
+}
+
+/// Protocol compat: the committed v1 transcript replays with identical
+/// frames on the legacy single-model backend and on a hub hosting the
+/// same machine — and both match the pinned byte surface token-wise.
+#[test]
+fn committed_v1_transcript_replays_identically_on_both_backends() {
+    let (ops, expected) = load_transcript(V1_SESSION);
+    assert!(!ops.is_empty() && !expected.is_empty(), "transcript is empty");
+    let scripts = vec![ClientScript { connect_at: 0, ops }];
+    let ncfg = sequential_cfg();
+
+    let tm = machine(0x1E6A);
+    let params = TmParams::paper_online(&shape());
+    let oracle = ScalarOracle::new(tm.clone(), params.clone(), 0xBA5E);
+    let (orep, otr) =
+        run_sim(SingleModel(oracle), scripts.clone(), &shape(), ncfg.clone()).unwrap();
+
+    let mut hub = ModelHub::new(HubConfig::default());
+    hub.create("default", tm, params, 0xBA5E).unwrap();
+    let (hrep, htr) = run_sim(hub, scripts, &shape(), ncfg).unwrap();
+
+    let oframes = otr.delivered(0);
+    let hframes = htr.delivered(0);
+    assert_eq!(oframes, hframes, "legacy session diverged between backends");
+    assert_eq!(orep.stats, hrep.stats);
+    assert_eq!(orep.outcomes, hrep.outcomes);
+
+    assert_eq!(oframes.len(), expected.len(), "frame count drifted: {oframes:?}");
+    for (want, got) in expected.iter().zip(&oframes) {
+        assert!(
+            frame_matches(want, got.trim_end()),
+            "transcript pinned {want:?}, server sent {got:?}"
+        );
+    }
+}
+
+/// Acceptance: four tenants with independent traces and per-tenant
+/// scalar oracles interleave on one hub under a two-replica budget with
+/// forced mid-trace eviction — zero diffs in outcomes, drive stats and
+/// final replica digests, and every tenant demonstrably churned.
+#[test]
+fn hub_soak_four_tenants_agree_under_forced_eviction() {
+    let cfg = HubSoakConfig {
+        tenants: 4,
+        events_per_tenant: 96,
+        rounds: 4,
+        warmup_epochs: 1,
+        budget_models: 2,
+        evict_period: 2,
+        seed: 0xC0FF_EE01,
+        ..HubSoakConfig::default()
+    };
+    let rep = run_hub_soak(&cfg).unwrap();
+    assert!(rep.agrees(), "hub soak diverged: {:?}", rep.tenants);
+    assert_eq!(rep.tenants.len(), 4);
+    for t in &rep.tenants {
+        assert!(t.responses > 0, "tenant served nothing: {t:?}");
+        assert!(t.evictions >= 1, "no eviction forced mid-trace: {t:?}");
+        assert!(t.rehydrations >= 1, "evicted but never rehydrated: {t:?}");
+    }
+    let (hits, misses) = rep.plane_cache;
+    assert!(hits + misses > 0, "bitplane cache never consulted");
+}
+
+/// v2 routing end to end: the session binds a default model, infers and
+/// learns route by `model=`, an unknown name is refused typed *before*
+/// any batcher sees it, and the versioned stats frame carries telemetry
+/// rows for exactly the hosted models.
+#[test]
+fn v2_routing_is_model_scoped_and_unknown_models_never_batch() {
+    let params = TmParams::paper_online(&shape());
+    let mut hub = ModelHub::new(HubConfig::default());
+    hub.create("alpha", machine(0xA1FA), params.clone(), 11).unwrap();
+    hub.create("beta", machine(0xBE7A), params, 22).unwrap();
+
+    let ops = vec![
+        send(1, Request::Hello { version: PROTO_VERSION, model: Some("alpha".into()) }),
+        send(2, Request::Infer { id: 1, ttl: None, model: None, bits: bit_row(1) }),
+        send(3, Request::Infer { id: 2, ttl: None, model: Some("beta".into()), bits: bit_row(2) }),
+        send(4, Request::Infer { id: 3, ttl: None, model: Some("ghost".into()), bits: bit_row(3) }),
+        send(5, Request::Learn { id: 4, label: 1, model: Some("beta".into()), bits: bit_row(4) }),
+        send(6, Request::Stats { id: 5 }),
+        send(7, Request::Drain { id: 6 }),
+    ];
+    let scripts = vec![ClientScript { connect_at: 0, ops }];
+    let (rep, tr) = run_sim(hub, scripts, &shape(), sequential_cfg()).unwrap();
+
+    let frames = tr.delivered(0);
+    assert_eq!(frames[0], format!("ok hello v={PROTO_VERSION} caps={PROTO_CAPS}\n"));
+    assert!(matches!(rep.outcomes[&(0, 1)], Outcome::Pred(_)));
+    assert!(matches!(rep.outcomes[&(0, 2)], Outcome::Pred(_)));
+    assert_eq!(rep.outcomes[&(0, 3)], Outcome::UnknownModel);
+    assert_eq!(rep.outcomes[&(0, 4)], Outcome::LearnAck(1));
+    assert_eq!(rep.stats.unknown_model, 1, "{:?}", rep.stats);
+    assert_eq!(rep.stats.infers, 2, "ghost infer must never reach a batcher: {:?}", rep.stats);
+    assert!(
+        frames.iter().any(|f| f.starts_with("err id=3 kind=unknown-model")),
+        "{frames:?}"
+    );
+
+    let labels: BTreeSet<&str> = rep.telemetry.iter().map(|t| t.model.as_str()).collect();
+    assert_eq!(labels, BTreeSet::from(["alpha", "beta"]));
+    let stats_frame = frames.iter().find(|f| f.starts_with("stats id=5")).unwrap();
+    assert!(
+        stats_frame.contains(&format!(" tv={TELEMETRY_VERSION} models=")),
+        "{stats_frame:?}"
+    );
+}
+
+/// Eviction determinism: a model force-evicted every few updates lands
+/// on states bit-identical to a never-evicted mirror applying the same
+/// `(base_seed, seq)`-keyed update log, and checkpoint refresh keeps
+/// the retained log bounded.
+#[test]
+fn eviction_and_rehydration_are_bit_identical_to_a_hot_mirror() {
+    let shape = shape();
+    let params = TmParams::paper_online(&shape);
+    let tm = machine(0x4E11);
+    let base_seed = 0x5EED;
+    let mut hub = ModelHub::new(HubConfig { checkpoint_every: 4, ..HubConfig::default() });
+    let h = hub.create("m", tm.clone(), params.clone(), base_seed).unwrap();
+    let mut mirror = tm;
+
+    let mut rng = Xoshiro256::new(0xD1CE);
+    for seq in 1..=24u64 {
+        let bits: Vec<bool> = (0..shape.features).map(|_| rng.next_f32() < 0.5).collect();
+        let kind = UpdateKind::Learn { input: Input::pack(&shape, &bits), label: seq as usize % 3 };
+        assert_eq!(hub.update(h, kind.clone()).unwrap(), seq);
+        let _ = mirror.apply_update(&ShardUpdate { seq, kind }, &params, base_seed);
+        if seq % 6 == 0 {
+            hub.evict(h).unwrap();
+            assert!(!hub.is_hot(h), "evict must leave the model cold");
+        }
+    }
+    assert_eq!(hub.lifecycle(h).0, 4, "four forced evictions");
+    assert_eq!(hub.digest(h).unwrap(), mirror.state_digest(), "rehydration diverged");
+    assert_eq!(hub.lifecycle(h), (4, 4));
+    assert!(hub.retained_log_len(h) <= 4, "checkpoint refresh must bound the log");
+}
+
+/// Lifecycle edges: budget exhaustion and eviction races refuse typed
+/// with exact accounting — nothing panics, nothing is dropped silently
+/// — and unknown names fail at routing, before any batcher.
+#[test]
+fn hub_refusals_are_typed_not_dropped() {
+    let shape = shape();
+    let params = TmParams::paper_online(&shape);
+    let tm = machine(0xB4D6);
+
+    // A budget below one replica's checkpoint cost refuses creation.
+    let mut probe = ModelHub::new(HubConfig::default());
+    probe.create("a", tm.clone(), params.clone(), 1).unwrap();
+    let cost = probe.resident_bytes();
+    assert!(cost > 0);
+    let mut tight =
+        ModelHub::new(HubConfig { memory_budget: cost - 1, ..HubConfig::default() });
+    match tight.create("a", tm.clone(), params.clone(), 1) {
+        Err(HubError::BudgetExhausted { need, budget, .. }) => {
+            assert_eq!(need, cost);
+            assert_eq!(budget, cost - 1);
+        }
+        other => panic!("want BudgetExhausted, got {other:?}"),
+    }
+
+    // An update racing the eviction barrier is refused typed while the
+    // barrier is up, and applies transparently once it completes.
+    let mut hub = ModelHub::new(HubConfig::default());
+    let h = hub.create("m", tm, params, 7).unwrap();
+    let bits: Vec<bool> = (0..shape.features).map(|k| k % 2 == 0).collect();
+    let kind = UpdateKind::Learn { input: Input::pack(&shape, &bits), label: 0 };
+    hub.begin_evict(h).unwrap();
+    assert!(matches!(hub.update(h, kind.clone()), Err(HubError::Evicting { .. })));
+    hub.finish_evict(h).unwrap();
+    assert!(!hub.is_hot(h));
+    assert_eq!(hub.update(h, kind).unwrap(), 1, "post-barrier update must rehydrate");
+    assert_eq!(hub.lifecycle(h), (1, 1));
+
+    // Unknown names fail typed at routing.
+    assert!(hub.resolve("ghost").is_none());
+    assert_eq!(hub.bind(Some("ghost")), Err(RouteError::UnknownModel));
+}

@@ -8,6 +8,7 @@
 
 use std::thread;
 use tm_fpga::coordinator::{run_net_soak, NetSoakConfig};
+use tm_fpga::hub::SingleModel;
 use tm_fpga::net::{
     loopback_drill, run_sim, run_tcp, ClientOp, ClientScript, NetConfig, Outcome, Request,
     TcpTransport, PROTO_VERSION,
@@ -85,10 +86,10 @@ fn flood_scripts(clients: usize, window: u64) -> Vec<ClientScript> {
     (0..clients)
         .map(|c| {
             let mut ops = vec![ClientOp::ReadAllow { at: 0, frames: window }];
-            ops.push(send(1, Request::Hello { version: PROTO_VERSION }));
+            ops.push(send(1, Request::Hello { version: PROTO_VERSION, model: None }));
             for cid in 1..=12u64 {
                 let bits = bit_row(c as u64 * 100 + cid);
-                ops.push(send(1 + cid, Request::Infer { id: cid, ttl: None, bits }));
+                ops.push(send(1 + cid, Request::Infer { id: cid, ttl: None, model: None, bits }));
             }
             // The client recovers late: queued frames may now deliver,
             // but every shed decision has already been taken.
@@ -113,9 +114,9 @@ fn concurrent_floods_shed_exactly_and_lose_nothing() {
 
     let scfg = ServeConfig::new(1, params.clone(), 77);
     let server = ShardServer::new(&tm, &scfg).unwrap();
-    let (srep, tr) = run_sim(server, scripts.clone(), &shape(), ncfg.clone()).unwrap();
+    let (srep, tr) = run_sim(SingleModel(server), scripts.clone(), &shape(), ncfg.clone()).unwrap();
     let oracle = ScalarOracle::new(tm, params, 77);
-    let (orep, _) = run_sim(oracle, scripts, &shape(), ncfg).unwrap();
+    let (orep, _) = run_sim(SingleModel(oracle), scripts, &shape(), ncfg).unwrap();
 
     assert_eq!(srep.stats.infers, 20, "{:?}", srep.stats);
     assert_eq!(srep.stats.shed_requests, 28, "{:?}", srep.stats);
@@ -152,9 +153,9 @@ fn admission_control_rejects_beyond_depth_with_typed_errors() {
     let tm = machine(0xAD31);
     let params = TmParams::paper_online(&shape());
     let mut ops = vec![ClientOp::ReadAllow { at: 0, frames: 1 }];
-    ops.push(send(1, Request::Hello { version: PROTO_VERSION }));
+    ops.push(send(1, Request::Hello { version: PROTO_VERSION, model: None }));
     for cid in 1..=8u64 {
-        let req = Request::Infer { id: cid, ttl: None, bits: bit_row(cid) };
+        let req = Request::Infer { id: cid, ttl: None, model: None, bits: bit_row(cid) };
         ops.push(send(1 + cid, req));
     }
     ops.push(ClientOp::ReadAllow { at: 30, frames: 100 });
@@ -163,7 +164,7 @@ fn admission_control_rejects_beyond_depth_with_typed_errors() {
     let ncfg =
         NetConfig { batch, write_buffer_cap: 100, max_in_flight: 3, ..NetConfig::default() };
     let oracle = ScalarOracle::new(tm, params, 9);
-    let (rep, tr) = run_sim(oracle, scripts, &shape(), ncfg).unwrap();
+    let (rep, tr) = run_sim(SingleModel(oracle), scripts, &shape(), ncfg).unwrap();
 
     assert_eq!(rep.stats.infers, 3, "{:?}", rep.stats);
     assert_eq!(rep.stats.admission_rejected, 5, "{:?}", rep.stats);
@@ -194,7 +195,7 @@ fn tcp_loopback_drill_round_trips() {
     let client = thread::spawn(move || loopback_drill(addr, n, features, 0xD811).unwrap());
     let ncfg = NetConfig { max_in_flight: 4096, write_buffer_cap: 1024, ..NetConfig::default() };
     let oracle = ScalarOracle::new(tm, params, 5);
-    let rep = run_tcp(oracle, transport, &shape(), ncfg, Some(60_000)).unwrap();
+    let rep = run_tcp(SingleModel(oracle), transport, &shape(), ncfg, Some(60_000)).unwrap();
     let drill = client.join().unwrap();
 
     assert_eq!(drill.preds, n, "{drill:?}");
