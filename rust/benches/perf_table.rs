@@ -197,6 +197,26 @@ fn run() -> Result<()> {
         );
     }
 
+    // The ISSUE-10 restart-latency scenario: the durable hub's full
+    // cold start — WAL segment scan, manifest + checkpoint CRC
+    // verification, snapshot restore, keyed suffix replay — against a
+    // real data directory left by a 500-update write-ahead run, as a
+    // function of the hub's checkpoint cadence. 500 is deliberately not
+    // a multiple of any cadence, so each row replays a nonempty,
+    // cadence-sized suffix.
+    let mut cold_start = Vec::new();
+    for cadence in [8u64, 64, 256] {
+        let (secs, replayed) = perf::durable_cold_start_comparison(500, cadence, recovery_reps)?;
+        cold_start.push((cadence, secs, replayed));
+    }
+    for (cadence, secs, replayed) in &cold_start {
+        println!(
+            "hub cold start open+replay (checkpoint_every {cadence}, 500-update WAL): \
+             {:.3} ms ({replayed} updates replayed)",
+            secs * 1e3
+        );
+    }
+
     println!("\n=== §6 power table ===\n");
     match perf::power_table() {
         Ok(rows) => {
@@ -426,6 +446,19 @@ fn run() -> Result<()> {
         json_rows.push(harness::BenchResult {
             name: format!(
                 "perf_row: recovery restore+replay (ckpt interval {interval}, 512-update log)"
+            ),
+            mean_s: *secs,
+            min_s: 0.0,
+            max_s: 0.0,
+            reps: recovery_reps,
+            items_per_rep: 1,
+        });
+    }
+    for (cadence, secs, _) in &cold_start {
+        json_rows.push(harness::BenchResult {
+            name: format!(
+                "perf_row: hub cold start open+replay (checkpoint_every {cadence}, \
+                 500-update WAL)"
             ),
             mean_s: *secs,
             min_s: 0.0,

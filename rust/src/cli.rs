@@ -266,6 +266,24 @@ pub fn validate_serve(cli: &Cli) -> Result<()> {
             return Err(usage("--rounds must be >= 1"));
         }
     }
+    if has("data-dir") && mode != Some("soak") {
+        return Err(usage("--data-dir selects the durable restart drill; use serve soak"));
+    }
+    if has("crash-after") && !has("data-dir") {
+        return Err(usage("--crash-after needs --data-dir DIR (the durable restart drill)"));
+    }
+    if has("crash-after") && cli.flag_u64("crash-after", 1)? == 0 {
+        return Err(usage("--crash-after must be >= 1 (durable writes are counted from 1)"));
+    }
+    if has("data-dir") {
+        for knob in ["rounds", "budget-models"] {
+            if has(knob) {
+                return Err(usage(format!(
+                    "--{knob} is an in-memory hub-soak knob; drop it with --data-dir"
+                )));
+            }
+        }
+    }
     const DRILL_KNOBS: [&str; 6] =
         ["kills", "stalls", "corrupts", "malformed-every", "recovery-lag", "degraded-depth"];
     for knob in DRILL_KNOBS {
@@ -343,6 +361,13 @@ COMMANDS
                           [--rounds N=4] [--budget-models N=2]
                           [--evict-every N=2] [--checkpoint-every N=16]
                           [--model NAME=iris[:seed=N]]... (names tenants)
+                          with --data-dir DIR: durable-hub restart drill —
+                          recover DIR (WAL + checkpoints), drive the traces
+                          to completion, verify answers and final digests
+                          bit-identical to the never-crashed oracle;
+                          --crash-after N fail-stops at the Nth durable
+                          write and exits 86 with DIR intact (relaunch
+                          without it to resume where the crash hit)
     serve drill           loopback drill: serve on a socket and run an
                           in-process client, then drain
                           [--listen ADDR=127.0.0.1:0] [--requests N=64]
@@ -530,6 +555,25 @@ mod tests {
         usage_err("serve --tenants 4");
         usage_err("serve run --budget-models 2");
         usage_err("serve drill --requests 0");
+    }
+
+    #[test]
+    fn durable_restart_flags_validate() {
+        assert!(validate_serve(&parse("serve soak --data-dir /tmp/d")).is_ok());
+        assert!(validate_serve(&parse(
+            "serve soak --model alpha=iris --data-dir /tmp/d --crash-after 25 --seed 7"
+        ))
+        .is_ok());
+        assert!(validate_serve(&parse(
+            "serve soak --data-dir /tmp/d --events 80 --evict-every 5 --checkpoint-every 8"
+        ))
+        .is_ok());
+        usage_err("serve --data-dir /tmp/d");
+        usage_err("serve run --data-dir /tmp/d");
+        usage_err("serve soak --crash-after 25");
+        usage_err("serve soak --data-dir /tmp/d --crash-after 0");
+        usage_err("serve soak --data-dir /tmp/d --rounds 2");
+        usage_err("serve soak --data-dir /tmp/d --budget-models 2");
     }
 
     #[test]

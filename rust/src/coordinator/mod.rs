@@ -17,15 +17,15 @@ pub use experiment::{configure, run_figure, Figure, FigureResult, SweepOptions};
 pub use metrics::{Curve, Stat};
 pub use monitor::{monitor_and_retrain, AccuracyMonitor, RetrainPolicy};
 pub use perf::{
-    baseline_row, engine_row, fpga_model_row, native_row, perf_table, pjrt_epoch_row,
-    pjrt_row, plane_comparison, plane_infer_row, power_table, recovery_comparison,
-    serve_comparison,
+    baseline_row, durable_cold_start_comparison, engine_row, fpga_model_row, native_row,
+    perf_table, pjrt_epoch_row, pjrt_row, plane_comparison, plane_infer_row, power_table,
+    recovery_comparison, serve_comparison,
 };
 pub use replay::{retention, run_with_replay};
 pub use soak::{
-    run_chaos_soak, run_hub_soak, run_net_soak, run_soak, ChaosReport, ChaosSoakConfig,
-    HubSoakConfig, HubSoakReport, NetSoakConfig, NetSoakReport, SoakConfig, SoakReport,
-    TenantReport,
+    run_chaos_soak, run_hub_soak, run_net_soak, run_restart_once, run_restart_soak, run_soak,
+    ChaosReport, ChaosSoakConfig, HubSoakConfig, HubSoakReport, NetSoakConfig, NetSoakReport,
+    RestartRun, RestartSoakConfig, RestartSoakReport, SoakConfig, SoakReport, TenantReport,
 };
 pub use report::{figure_csv, figure_summary, sparkline, write_figure_csv};
 pub use sweep::{run_sweep, sweep_csv, SweepConfig, SweepPoint};

@@ -442,6 +442,82 @@ pub fn recovery_comparison(total_updates: u64, interval: u64, reps: usize) -> Re
     Ok((best, replayed))
 }
 
+/// The PR-10 restart-latency scenario: the durable hub's full cold
+/// start as a function of its checkpoint cadence. Builds a real data
+/// directory by streaming `total_updates` Learn updates through a
+/// write-ahead [`ModelHub`](crate::hub::ModelHub) (so the WAL segments,
+/// checkpoints and manifest on disk are exactly what a production run
+/// leaves behind), then times what a relaunched process does end to
+/// end: `Store::open` (segment scan, torn-tail check, manifest +
+/// checkpoint CRC verification) plus `ModelHub::open_durable` and the
+/// first digest touch (snapshot restore + keyed WAL-suffix replay).
+/// `checkpoint_every = 0` disables cadence refresh — genesis-only,
+/// replaying the whole log. Fastest of `reps` timed runs; returns
+/// `(seconds, replayed_updates)`; the rebuilt digest is checked
+/// identical across reps.
+pub fn durable_cold_start_comparison(
+    total_updates: u64,
+    checkpoint_every: u64,
+    reps: usize,
+) -> Result<(f64, u64)> {
+    use crate::hub::{HubConfig, ModelHub};
+    use crate::store::{RealDisk, Store, StoreConfig};
+    use crate::tm::update::UpdateKind;
+    let shape = TmShape::iris();
+    let params = TmParams::paper_offline(&shape);
+    let data = bench_data(&shape)?;
+    let tm = trained_machine(&shape, &params, &data)?;
+    let base_seed = 7u64;
+    let dir = std::env::temp_dir()
+        .join(format!("tmfpga-perf-cold-start-{}-{checkpoint_every}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let store_cfg = StoreConfig::default();
+    let hub_cfg = HubConfig { memory_budget: 0, checkpoint_every, plane_cache_batches: 4 };
+    fn ctx<E: std::fmt::Display>(what: &'static str) -> impl Fn(E) -> anyhow::Error {
+        move |e| anyhow::anyhow!("cold-start bench: {what}: {e}")
+    }
+
+    let (store, recovered) =
+        Store::open(Box::new(RealDisk), &dir, store_cfg).map_err(ctx("open fresh store"))?;
+    let mut hub = ModelHub::open_durable(hub_cfg.clone(), store, recovered)
+        .map_err(ctx("open fresh hub"))?;
+    let h = hub.create("bench", tm, params, base_seed).map_err(ctx("create"))?;
+    for seq in 1..=total_updates {
+        let (x, y) = &data[(seq as usize - 1) % data.len()];
+        hub.update(h, UpdateKind::Learn { input: x.clone(), label: *y }).map_err(ctx("update"))?;
+    }
+    hub.sync_durable().map_err(ctx("sync"))?;
+    drop(hub);
+
+    let mut best = f64::INFINITY;
+    let mut replayed = 0u64;
+    let mut digest: Option<u64> = None;
+    for _ in 0..reps.max(1) {
+        let t0 = Instant::now();
+        let (store, recovered) =
+            Store::open(Box::new(RealDisk), &dir, store_cfg).map_err(ctx("cold open"))?;
+        replayed = recovered.iter().map(|m| m.ops.len() as u64).sum();
+        let mut hub = ModelHub::open_durable(hub_cfg.clone(), store, recovered)
+            .map_err(ctx("cold hub"))?;
+        let hb = hub
+            .resolve("bench")
+            .ok_or_else(|| anyhow::anyhow!("cold-start bench: model lost across restart"))?;
+        let d = hub.digest(hb).map_err(ctx("digest"))?;
+        best = best.min(t0.elapsed().as_secs_f64());
+        if hub.model_seq(hb) != Some(total_updates) {
+            bail!("cold start came back at the wrong seq");
+        }
+        if let Some(prev) = digest {
+            if prev != d {
+                bail!("cold start must be deterministic across reps");
+            }
+        }
+        digest = Some(d);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+    Ok((best, replayed))
+}
+
 /// Measured throughput of the naive scalar baseline.
 pub fn baseline_row(iters: usize) -> Result<PerfRow> {
     let shape = TmShape::iris();

@@ -21,20 +21,26 @@ use crate::data::blocks::{BlockPlan, SetAllocation};
 use crate::data::filter::ClassFilter;
 use crate::data::iris;
 use crate::data::online::{arrival_trace, RomSource, TraceConfig};
-use crate::hub::{HubConfig, ModelHandle, ModelHub, SingleModel};
+use crate::hub::{HubConfig, HubError, ModelHandle, ModelHub, SingleModel};
 use crate::net::{run_sim, seeded_scripts, NetConfig, NetStats, Outcome, ScriptConfig};
 use crate::serve::{
     run_trace, snapshot_bytes, BatcherConfig, ChaosPlan, ChaosSpec, DriveStats, NetChaosPlan,
     NetChaosSpec, PendingRequest, RecoveryStats, ScalarOracle, ServeBackend, ServeConfig,
     ServeEvent, ShardServer, ShardStats,
 };
+use crate::store::{
+    Disk, FaultDisk, FaultKind, FaultPlan, RealDisk, RecoveryReport, Store, StoreConfig,
+    StoreError,
+};
 use crate::tm::clause::Input;
 use crate::tm::machine::MultiTm;
 use crate::tm::params::{TmParams, TmShape};
 use crate::tm::rng::Xoshiro256;
-use crate::tm::update::UpdateKind;
+use crate::tm::update::{ShardUpdate, UpdateKind};
 use anyhow::Result;
 use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::atomic::Ordering;
 use std::time::Instant;
 
 /// Soak-run configuration (iris shape, paper-offline params).
@@ -845,6 +851,518 @@ pub fn run_hub_soak(cfg: &HubSoakConfig) -> Result<HubSoakReport> {
     })
 }
 
+/// Crash-restart soak over the durable hub (`ModelHub::open_durable` +
+/// `crate::store`). Per-tenant traces are driven *directly* into the
+/// hub (no batcher — every event is one hub call, so the crash point
+/// maps one-to-one onto a durable write boundary), a seeded
+/// [`FaultDisk`] kills the process-equivalent at the `c`-th durable
+/// write, and the restarted hub must resume each tenant from its
+/// durable seq and finish **bit-identical** to a never-crashed scalar
+/// oracle: every answered inference equal, every final digest equal.
+#[derive(Debug, Clone)]
+pub struct RestartSoakConfig {
+    /// Tenant models sharing the durable hub (acceptance floor: 2).
+    pub tenants: usize,
+    /// Arrival-trace length per tenant (updates + inferences).
+    pub events_per_tenant: usize,
+    /// Fraction of events that are labelled updates — kept high so the
+    /// WAL sees enough appends for a dense crash sweep.
+    pub labelled_fraction: f32,
+    pub mean_gap: f64,
+    /// Master seed; tenant `t` derives everything from
+    /// `seed ^ (t+1)·φ64`, like the hub soak.
+    pub seed: u64,
+    pub warmup_epochs: usize,
+    /// Durable checkpoint-refresh cadence per model.
+    pub checkpoint_every: u64,
+    /// Force-evict the tenant just driven after every N processed
+    /// events (`0` = off) — evictions write through, so the sweep also
+    /// crashes inside eviction publishes.
+    pub evict_every: u64,
+    /// WAL segment size; small enough that the sweep crosses rotations.
+    pub segment_bytes: u64,
+    /// Store root. [`run_restart_soak`] treats it as scratch (wiped,
+    /// one subdirectory per crash point); [`run_restart_once`] operates
+    /// on it in place — that is the CLI kill-and-relaunch drill.
+    pub data_dir: PathBuf,
+    /// Cap on swept crash points (`0` = every durable write boundary);
+    /// capped sweeps sample evenly across the op range.
+    pub max_crash_points: usize,
+    /// Explicit tenant model names (CLI `--model NAME=SPEC`); tenants
+    /// beyond the list get `tenant-{t}`.
+    pub tenant_names: Vec<String>,
+}
+
+impl RestartSoakConfig {
+    /// The hub model name tenant `t` registers and serves under.
+    pub fn tenant_name(&self, t: usize) -> String {
+        self.tenant_names.get(t).cloned().unwrap_or_else(|| format!("tenant-{t}"))
+    }
+}
+
+impl Default for RestartSoakConfig {
+    fn default() -> Self {
+        RestartSoakConfig {
+            tenants: 2,
+            events_per_tenant: 120,
+            labelled_fraction: 0.5,
+            mean_gap: 1.0,
+            seed: 42,
+            warmup_epochs: 2,
+            checkpoint_every: 8,
+            evict_every: 13,
+            segment_bytes: 16 * 1024,
+            data_dir: std::env::temp_dir().join("tmfpga_restart_soak"),
+            max_crash_points: 0,
+            tenant_names: Vec::new(),
+        }
+    }
+}
+
+/// What one crash-restart sweep produced.
+#[derive(Debug, Clone, Default)]
+pub struct RestartSoakReport {
+    /// Durable write boundaries in one clean run (the sweep domain).
+    pub durable_ops: u64,
+    /// Crash points actually swept.
+    pub crash_points: u64,
+    /// Sweep runs where the injected crash surfaced as a fail-stop.
+    pub crashes_observed: u64,
+    /// Answer or digest differences vs the never-crashed oracle, plus
+    /// re-answered inferences that changed across the restart.
+    pub divergences: u64,
+    /// Inferences left unanswered by crash run + resume run combined.
+    pub answer_gaps: u64,
+    /// Torn WAL tails truncated across all restarts.
+    pub torn_tails_truncated: u64,
+    /// WAL records replayed into recovered models across all restarts.
+    pub wal_records_replayed: u64,
+    /// Models rebuilt from disk across all restarts.
+    pub models_recovered: u64,
+    pub wall_s: f64,
+}
+
+impl RestartSoakReport {
+    /// Every injected crash surfaced, and every restart was
+    /// bit-identical to the never-crashed oracle with full response
+    /// coverage.
+    pub fn agrees(&self) -> bool {
+        self.crash_points > 0
+            && self.crashes_observed == self.crash_points
+            && self.divergences == 0
+            && self.answer_gaps == 0
+    }
+}
+
+/// What one [`run_restart_once`] pass (the CLI drill's unit) produced.
+#[derive(Debug, Clone)]
+pub struct RestartRun {
+    /// The pass hit a storage fail-stop (injected or real) mid-trace.
+    pub crashed: bool,
+    /// Inferences answered by this pass.
+    pub answered: u64,
+    /// Answers (and, when the pass completed, digests) differing from
+    /// the never-crashed oracle.
+    pub divergences: u64,
+    /// Recovery counters from the store open, when the open succeeded.
+    pub recovery: Option<RecoveryReport>,
+}
+
+/// One tenant's deterministic ingredients: warm machine, trace, and the
+/// prefix tables that map a durable resume seq back to a trace cursor.
+struct TenantSetup {
+    name: String,
+    tseed: u64,
+    machine: MultiTm,
+    params: TmParams,
+    events: Vec<RestartEvent>,
+    /// Event index of the k-th (1-based) update — resume cursor for a
+    /// model recovered at seq `k` is `update_at[k - 1] + 1`.
+    update_at: Vec<usize>,
+    /// Inferences among `events[..i]`, for `i in 0..len` — the answer
+    /// slot of the inference at event `i`.
+    infer_prefix: Vec<usize>,
+    total_infers: usize,
+}
+
+enum RestartEvent {
+    Update(UpdateKind),
+    Infer(Input),
+}
+
+fn restart_setups(cfg: &RestartSoakConfig) -> Result<Vec<TenantSetup>> {
+    anyhow::ensure!(cfg.tenants >= 1, "restart soak: need at least one tenant");
+    let shape = TmShape::iris();
+    let mut setups = Vec::with_capacity(cfg.tenants);
+    for t in 0..cfg.tenants {
+        let tseed = cfg.seed ^ ((t as u64) + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let tcfg = SoakConfig {
+            shards: 1,
+            events: cfg.events_per_tenant,
+            max_batch: 16,
+            latency_budget: 4,
+            labelled_fraction: cfg.labelled_fraction,
+            mean_gap: cfg.mean_gap,
+            seed: tseed,
+            warmup_epochs: cfg.warmup_epochs,
+        };
+        let (machine, trace) = soak_events(&tcfg, &shape)?;
+        let events: Vec<RestartEvent> = trace
+            .into_iter()
+            .map(|e| match e {
+                ServeEvent::Update { kind, .. } => RestartEvent::Update(kind),
+                ServeEvent::Infer { input, .. } => RestartEvent::Infer(input),
+            })
+            .collect();
+        let mut update_at = Vec::new();
+        let mut infer_prefix = Vec::with_capacity(events.len());
+        let mut infers = 0usize;
+        for (i, e) in events.iter().enumerate() {
+            infer_prefix.push(infers);
+            match e {
+                RestartEvent::Update(_) => update_at.push(i),
+                RestartEvent::Infer(_) => infers += 1,
+            }
+        }
+        setups.push(TenantSetup {
+            name: cfg.tenant_name(t),
+            tseed,
+            machine,
+            params: TmParams::paper_offline(&shape),
+            events,
+            update_at,
+            infer_prefix,
+            total_infers: infers,
+        });
+    }
+    Ok(setups)
+}
+
+/// The never-crashed oracle: each tenant's trace applied to a private
+/// scalar machine. Returns per-tenant answers (by inference index) and
+/// final state digests.
+fn restart_oracle(setups: &[TenantSetup]) -> (Vec<Vec<usize>>, Vec<u64>) {
+    let mut answers = Vec::with_capacity(setups.len());
+    let mut digests = Vec::with_capacity(setups.len());
+    for s in setups {
+        let mut machine = s.machine.clone();
+        let mut scratch = None;
+        let mut seq = 0u64;
+        let mut ans = Vec::with_capacity(s.total_infers);
+        for e in &s.events {
+            match e {
+                RestartEvent::Update(kind) => {
+                    seq += 1;
+                    let u = ShardUpdate { seq, kind: kind.clone() };
+                    machine.apply_update_with(&u, &s.params, s.tseed, &mut scratch);
+                }
+                RestartEvent::Infer(input) => ans.push(machine.predict(input, &s.params)),
+            }
+        }
+        answers.push(ans);
+        digests.push(machine.state_digest());
+    }
+    (answers, digests)
+}
+
+/// The completed (non-crashed) half of a [`restart_pass`].
+struct PassHub {
+    hub: ModelHub,
+    handles: Vec<ModelHandle>,
+}
+
+struct PassResult {
+    crashed: bool,
+    /// Present only when the pass drove every tenant's trace to its
+    /// end.
+    done: Option<PassHub>,
+    /// Recovery counters from the store open (absent when the crash
+    /// landed inside the open itself).
+    recovery: Option<RecoveryReport>,
+}
+
+/// One process lifetime: open (recover) the store at `cfg.data_dir`,
+/// resume every tenant at its durable seq, drive round-robin until the
+/// traces finish or a storage fail-stop lands. `answers` carries each
+/// tenant's per-inference responses across passes; an inference
+/// re-answered after a restart must match what the crashed pass already
+/// committed, else `divergences` is bumped.
+fn restart_pass(
+    disk: Box<dyn Disk>,
+    cfg: &RestartSoakConfig,
+    setups: &[TenantSetup],
+    answers: &mut [Vec<Option<usize>>],
+    divergences: &mut u64,
+) -> Result<PassResult> {
+    let store_cfg = StoreConfig { segment_bytes: cfg.segment_bytes, ..StoreConfig::default() };
+    let (store, recovered) = match Store::open(disk, &cfg.data_dir, store_cfg) {
+        Ok(v) => v,
+        Err(StoreError::Crashed { .. }) | Err(StoreError::Poisoned) => {
+            return Ok(PassResult { crashed: true, done: None, recovery: None });
+        }
+        Err(e) => return Err(e.into()),
+    };
+    let recovery = Some(*store.report());
+    let crashed = |recovery: Option<RecoveryReport>| -> Result<PassResult> {
+        Ok(PassResult { crashed: true, done: None, recovery })
+    };
+    let hub_cfg = HubConfig {
+        memory_budget: 0,
+        checkpoint_every: cfg.checkpoint_every,
+        plane_cache_batches: 64,
+    };
+    let mut hub = ModelHub::open_durable(hub_cfg, store, recovered)
+        .map_err(|e| anyhow::anyhow!("restart soak: open durable hub: {e}"))?;
+
+    // Resume (or first-create) every tenant. A create that crashed
+    // after its WAL append is already recovered by name; one that never
+    // reached the log is re-created — both land on the identical
+    // genesis because the warm machine is deterministic.
+    let mut handles = Vec::with_capacity(setups.len());
+    let mut cursors = Vec::with_capacity(setups.len());
+    let mut next_seq = Vec::with_capacity(setups.len());
+    for s in setups {
+        let h = match hub.resolve(&s.name) {
+            Some(h) => h,
+            None => {
+                match hub.create(&s.name, s.machine.clone(), s.params.clone(), s.tseed) {
+                    Ok(h) => h,
+                    Err(HubError::Storage { .. }) => return crashed(recovery),
+                    Err(e) => anyhow::bail!("restart soak: create {}: {e}", s.name),
+                }
+            }
+        };
+        let seq = hub.model_seq(h).expect("restart soak: just resolved or created");
+        anyhow::ensure!(
+            (seq as usize) <= s.update_at.len(),
+            "restart soak: {} recovered at seq {seq}, trace only has {} updates",
+            s.name,
+            s.update_at.len()
+        );
+        cursors.push(if seq == 0 { 0 } else { s.update_at[seq as usize - 1] + 1 });
+        next_seq.push(seq);
+        handles.push(h);
+    }
+
+    // Round-robin drive, one event per tenant per turn.
+    let mut processed = 0u64;
+    loop {
+        let mut idle = true;
+        for (t, s) in setups.iter().enumerate() {
+            let i = cursors[t];
+            if i >= s.events.len() {
+                continue;
+            }
+            idle = false;
+            match &s.events[i] {
+                RestartEvent::Update(kind) => match hub.update(handles[t], kind.clone()) {
+                    Ok(seq) => {
+                        next_seq[t] += 1;
+                        anyhow::ensure!(
+                            seq == next_seq[t],
+                            "restart soak: {} got seq {seq}, expected {}",
+                            s.name,
+                            next_seq[t]
+                        );
+                    }
+                    Err(HubError::Storage { .. }) => return crashed(recovery),
+                    Err(e) => anyhow::bail!("restart soak: update {}: {e}", s.name),
+                },
+                RestartEvent::Infer(input) => {
+                    match hub.infer(handles[t], std::slice::from_ref(input)) {
+                        Ok(classes) => {
+                            let k = s.infer_prefix[i];
+                            let got = classes[0];
+                            match answers[t][k] {
+                                Some(prev) if prev != got => *divergences += 1,
+                                _ => answers[t][k] = Some(got),
+                            }
+                        }
+                        Err(HubError::Storage { .. }) => return crashed(recovery),
+                        Err(e) => anyhow::bail!("restart soak: infer {}: {e}", s.name),
+                    }
+                }
+            }
+            cursors[t] = i + 1;
+            processed += 1;
+            if cfg.evict_every > 0 && processed % cfg.evict_every == 0 {
+                match hub.evict(handles[t]) {
+                    Ok(()) => {}
+                    Err(HubError::Storage { .. }) => return crashed(recovery),
+                    Err(e) => anyhow::bail!("restart soak: evict {}: {e}", s.name),
+                }
+            }
+        }
+        if idle {
+            break;
+        }
+    }
+    Ok(PassResult { crashed: false, done: Some(PassHub { hub, handles }), recovery })
+}
+
+/// One pass over the persistent store at `cfg.data_dir` — the CLI
+/// kill-and-relaunch drill's unit. With `crash_after = Some(n)` the
+/// `n`-th durable write fails as a crash (the caller then exits the
+/// process); with `None` the pass recovers whatever a previous process
+/// left, drives the remaining trace, and verifies answers and final
+/// digests against the never-crashed oracle.
+pub fn run_restart_once(
+    cfg: &RestartSoakConfig,
+    crash_after: Option<u64>,
+) -> Result<RestartRun> {
+    let setups = restart_setups(cfg)?;
+    let (oracle_answers, oracle_digests) = restart_oracle(&setups);
+    let mut answers: Vec<Vec<Option<usize>>> =
+        setups.iter().map(|s| vec![None; s.total_infers]).collect();
+    let mut divergences = 0u64;
+    let disk: Box<dyn Disk> = match crash_after {
+        Some(n) => Box::new(FaultDisk::new(Some(FaultPlan {
+            fail_at_op: n,
+            kind: FaultKind::Crash,
+        }))),
+        None => Box::new(RealDisk),
+    };
+    let pass = restart_pass(disk, cfg, &setups, &mut answers, &mut divergences)?;
+    let mut answered = 0u64;
+    for (t, tenant_answers) in answers.iter().enumerate() {
+        for (k, a) in tenant_answers.iter().enumerate() {
+            if let Some(got) = a {
+                answered += 1;
+                if *got != oracle_answers[t][k] {
+                    divergences += 1;
+                }
+            }
+        }
+    }
+    if let Some(mut done) = pass.done {
+        for t in 0..setups.len() {
+            let digest = done
+                .hub
+                .digest(done.handles[t])
+                .map_err(|e| anyhow::anyhow!("restart soak: digest {}: {e}", setups[t].name))?;
+            if digest != oracle_digests[t] {
+                divergences += 1;
+            }
+        }
+        done.hub
+            .sync_durable()
+            .map_err(|e| anyhow::anyhow!("restart soak: final sync: {e}"))?;
+    }
+    Ok(RestartRun { crashed: pass.crashed, answered, divergences, recovery: pass.recovery })
+}
+
+/// The full seeded crash sweep: probe one clean run to count its
+/// durable write boundaries, then for each crash point `c` run the
+/// trace in a fresh subdirectory with the `c`-th durable write failing
+/// as a crash, restart cleanly, and demand the resumed run is
+/// bit-identical to the never-crashed oracle — answers, re-answers and
+/// final digests, with every recovery counter aggregated.
+pub fn run_restart_soak(cfg: &RestartSoakConfig) -> Result<RestartSoakReport> {
+    let t0 = Instant::now();
+    let setups = restart_setups(cfg)?;
+    let (oracle_answers, oracle_digests) = restart_oracle(&setups);
+    std::fs::remove_dir_all(&cfg.data_dir).ok();
+
+    let verify = |answers: &[Vec<Option<usize>>],
+                  done: &mut PassHub,
+                  divergences: &mut u64,
+                  gaps: &mut u64|
+     -> Result<()> {
+        for (t, s) in setups.iter().enumerate() {
+            for k in 0..s.total_infers {
+                match answers[t][k] {
+                    Some(got) if got == oracle_answers[t][k] => {}
+                    Some(_) => *divergences += 1,
+                    None => *gaps += 1,
+                }
+            }
+            let digest = done
+                .hub
+                .digest(done.handles[t])
+                .map_err(|e| anyhow::anyhow!("restart soak: digest {}: {e}", s.name))?;
+            if digest != oracle_digests[t] {
+                *divergences += 1;
+            }
+        }
+        Ok(())
+    };
+
+    // Probe: one clean run through a counting disk fixes the sweep
+    // domain — the driver is deterministic, so every later run issues
+    // the identical durable-write sequence.
+    let mut report = RestartSoakReport::default();
+    {
+        let mut sub = cfg.clone();
+        sub.data_dir = cfg.data_dir.join("probe");
+        let fd = FaultDisk::new(None);
+        let ops = fd.op_counter();
+        let mut answers: Vec<Vec<Option<usize>>> =
+            setups.iter().map(|s| vec![None; s.total_infers]).collect();
+        let mut divergences = 0u64;
+        let pass = restart_pass(Box::new(fd), &sub, &setups, &mut answers, &mut divergences)?;
+        let mut done = pass
+            .done
+            .ok_or_else(|| anyhow::anyhow!("restart soak: probe run crashed without a fault"))?;
+        let mut gaps = 0u64;
+        verify(&answers, &mut done, &mut divergences, &mut gaps)?;
+        anyhow::ensure!(
+            divergences == 0 && gaps == 0,
+            "restart soak: probe run diverged from the oracle without any fault \
+             ({divergences} divergences, {gaps} gaps)"
+        );
+        report.durable_ops = ops.load(Ordering::SeqCst);
+        std::fs::remove_dir_all(&sub.data_dir).ok();
+    }
+    anyhow::ensure!(report.durable_ops > 0, "restart soak: no durable writes to crash");
+
+    // The sweep: every durable write boundary, or an even sample.
+    let n = report.durable_ops;
+    let step = if cfg.max_crash_points > 0 {
+        (n / cfg.max_crash_points as u64).max(1)
+    } else {
+        1
+    };
+    let mut c = 1;
+    while c <= n {
+        let mut sub = cfg.clone();
+        sub.data_dir = cfg.data_dir.join(format!("cp-{c:05}"));
+        let mut answers: Vec<Vec<Option<usize>>> =
+            setups.iter().map(|s| vec![None; s.total_infers]).collect();
+        let mut divergences = 0u64;
+
+        // Crash run: the c-th durable write fails, sticky.
+        let disk = Box::new(FaultDisk::new(Some(FaultPlan {
+            fail_at_op: c,
+            kind: FaultKind::Crash,
+        })));
+        let pass = restart_pass(disk, &sub, &setups, &mut answers, &mut divergences)?;
+        report.crash_points += 1;
+        if pass.crashed {
+            report.crashes_observed += 1;
+        }
+
+        // Restart run: clean disk, recover, resume, finish.
+        let pass =
+            restart_pass(Box::new(RealDisk), &sub, &setups, &mut answers, &mut divergences)?;
+        anyhow::ensure!(!pass.crashed, "restart soak: clean restart at crash point {c} failed");
+        let mut done = pass.done.expect("non-crashed pass carries its hub");
+        if let Some(r) = pass.recovery {
+            report.torn_tails_truncated += r.torn_tails_truncated;
+            report.wal_records_replayed += r.wal_records_replayed;
+            report.models_recovered += r.models_recovered;
+        }
+        let mut gaps = 0u64;
+        verify(&answers, &mut done, &mut divergences, &mut gaps)?;
+        report.divergences += divergences;
+        report.answer_gaps += gaps;
+        std::fs::remove_dir_all(&sub.data_dir).ok();
+        c += step;
+    }
+    std::fs::remove_dir_all(&cfg.data_dir).ok();
+    report.wall_s = t0.elapsed().as_secs_f64();
+    Ok(report)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -936,5 +1454,49 @@ mod tests {
             );
         }
         assert!(rep.agrees());
+    }
+
+    /// A reduced crash sweep (full traces, every durable write
+    /// boundary) proving bit-identical restart; the ≥100-point
+    /// acceptance sweep lives in `rust/tests/integration_store.rs`.
+    #[test]
+    fn default_restart_soak_is_bit_identical_across_crashes() {
+        let cfg = RestartSoakConfig {
+            events_per_tenant: 40,
+            data_dir: std::env::temp_dir()
+                .join(format!("tmfpga_restart_soak_unit_{}", std::process::id())),
+            ..Default::default()
+        };
+        let rep = run_restart_soak(&cfg).unwrap();
+        assert!(rep.agrees(), "{rep:?}");
+        assert_eq!(rep.crashes_observed, rep.crash_points, "{rep:?}");
+        assert!(rep.durable_ops >= 30, "{rep:?}");
+        assert!(rep.models_recovered > 0, "{rep:?}");
+        assert!(rep.wal_records_replayed > 0, "{rep:?}");
+        assert!(rep.torn_tails_truncated > 0, "crash-mid-append must leave torn tails: {rep:?}");
+    }
+
+    /// The kill-and-relaunch drill's unit, in-process: crash at a fixed
+    /// durable write, then a second pass over the *same* directory
+    /// recovers, resumes mid-trace and matches the oracle.
+    #[test]
+    fn restart_once_crashes_then_resumes_in_place() {
+        let cfg = RestartSoakConfig {
+            events_per_tenant: 30,
+            data_dir: std::env::temp_dir()
+                .join(format!("tmfpga_restart_once_unit_{}", std::process::id())),
+            ..Default::default()
+        };
+        std::fs::remove_dir_all(&cfg.data_dir).ok();
+        let run = run_restart_once(&cfg, Some(25)).unwrap();
+        assert!(run.crashed, "{run:?}");
+        assert_eq!(run.divergences, 0, "{run:?}");
+        let run = run_restart_once(&cfg, None).unwrap();
+        assert!(!run.crashed, "{run:?}");
+        assert_eq!(run.divergences, 0, "{run:?}");
+        assert!(run.answered > 0, "{run:?}");
+        let recovery = run.recovery.expect("clean pass reports recovery");
+        assert!(recovery.models_recovered >= 1, "{recovery:?}");
+        std::fs::remove_dir_all(&cfg.data_dir).ok();
     }
 }

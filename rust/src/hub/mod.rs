@@ -109,6 +109,15 @@ pub trait HubNetBackend {
     /// Ids of every model this backend serves, ascending.
     fn models(&self) -> Vec<u64>;
 
+    /// Flush any deferred durable writes (WAL appends under a lazy
+    /// sync policy) so everything acknowledged so far survives power
+    /// loss. The front end calls this at drain, before
+    /// [`HubNetBackend::finalize`]. Default: no-op, for in-memory
+    /// backends with nothing to flush.
+    fn sync_durable(&mut self) -> anyhow::Result<()> {
+        Ok(())
+    }
+
     /// Finish serving: join/collect replicas for the differential
     /// report. Replica order follows [`HubNetBackend::models`].
     fn finalize(self) -> anyhow::Result<NetFinal>;
@@ -182,7 +191,7 @@ impl From<HubError> for RouteError {
             HubError::UnknownModel(_) | HubError::BadName(_) | HubError::DuplicateName(_) => {
                 RouteError::UnknownModel
             }
-            HubError::Corrupt { .. } => RouteError::Internal,
+            HubError::Corrupt { .. } | HubError::Storage { .. } => RouteError::Internal,
         }
     }
 }
@@ -244,10 +253,17 @@ impl HubNetBackend for ModelHub {
         self.handles().iter().map(|h| h.id()).collect()
     }
 
+    fn sync_durable(&mut self) -> anyhow::Result<()> {
+        ModelHub::sync_durable(self).map_err(|e| anyhow::anyhow!("hub drain: {e}"))
+    }
+
     /// Rehydrates each model in turn (one at a time, so a budget sized
     /// for fewer than all models still drains cleanly) and clones its
-    /// final state into the replica report, id-ascending.
+    /// final state into the replica report, id-ascending. Durable hubs
+    /// flush the WAL first, so a drained run's acknowledged state
+    /// survives power loss even under a lazy sync policy.
     fn finalize(mut self) -> anyhow::Result<NetFinal> {
+        ModelHub::sync_durable(&mut self).map_err(|e| anyhow::anyhow!("hub drain: {e}"))?;
         let mut responses = std::mem::take(&mut self.responses);
         responses.sort_unstable_by_key(|&(id, _)| id);
         let mut replicas = Vec::new();

@@ -16,6 +16,7 @@
 
 use crate::hub::cache::PlaneCache;
 use crate::serve::{restore, snapshot_bytes};
+use crate::store::{RecoveredModel, Store, StoreError, WalOp};
 use crate::tm::clause::Input;
 use crate::tm::machine::MultiTm;
 use crate::tm::params::{TmParams, TmShape};
@@ -84,6 +85,11 @@ pub enum HubError {
     /// A checkpoint failed to restore — an invariant break, surfaced
     /// typed instead of panicking in the serving loop.
     Corrupt { model: u64, detail: String },
+    /// The durable store refused a write (I/O error, disk full, or an
+    /// earlier failure poisoned it). Write-ahead ordering means the
+    /// refused mutation did **not** take effect in memory; the store is
+    /// fail-stop, so every later durable mutation also refuses typed.
+    Storage { detail: String },
 }
 
 impl std::fmt::Display for HubError {
@@ -103,11 +109,18 @@ impl std::fmt::Display for HubError {
             HubError::Corrupt { model, detail } => {
                 write!(f, "hub: model {model} checkpoint corrupt: {detail}")
             }
+            HubError::Storage { detail } => write!(f, "hub: durable store: {detail}"),
         }
     }
 }
 
 impl std::error::Error for HubError {}
+
+impl From<StoreError> for HubError {
+    fn from(e: StoreError) -> HubError {
+        HubError::Storage { detail: e.to_string() }
+    }
+}
 
 /// A valid hub/wire model name: 1..=32 chars of `[A-Za-z0-9_-]`. The
 /// same grammar the wire protocol enforces on `model=` fields, kept
@@ -116,6 +129,87 @@ pub fn valid_model_name(name: &str) -> bool {
     !name.is_empty()
         && name.len() <= 32
         && name.bytes().all(|b| b.is_ascii_alphanumeric() || b == b'_' || b == b'-')
+}
+
+/// Lower an update to its durable wire form. The WAL stores raw
+/// feature bits, not packed literal words: `Input::pack` is a pure
+/// function of the bits, so the round trip is exact and the log format
+/// stays independent of the literal packing.
+fn to_wal_op(shape: &TmShape, kind: &UpdateKind) -> WalOp {
+    match kind {
+        UpdateKind::Learn { input, label } => WalOp::Learn {
+            label: *label as u32,
+            bits: (0..shape.features).map(|k| input.literal(k)).collect(),
+        },
+        UpdateKind::ClauseFault { class, clause, force } => WalOp::ClauseFault {
+            class: *class as u32,
+            clause: *clause as u32,
+            force: *force,
+        },
+    }
+}
+
+/// Lift a replayed WAL op back into an update. CRC framing already
+/// vouches for the bytes; these bounds checks keep a logically
+/// impossible record (wrong width, out-of-range label) a typed error
+/// instead of a panic in the replay loop.
+fn from_wal_op(shape: &TmShape, model: u64, op: &WalOp) -> Result<UpdateKind, HubError> {
+    let corrupt = |detail: String| HubError::Corrupt { model, detail };
+    match op {
+        WalOp::Learn { label, bits } => {
+            if bits.len() != shape.features {
+                return Err(corrupt(format!(
+                    "logged sample has {} features, model has {}",
+                    bits.len(),
+                    shape.features
+                )));
+            }
+            let label = *label as usize;
+            if label >= shape.classes {
+                return Err(corrupt(format!(
+                    "logged label {label} out of range for {} classes",
+                    shape.classes
+                )));
+            }
+            Ok(UpdateKind::Learn { input: Input::pack(shape, bits), label })
+        }
+        WalOp::ClauseFault { class, clause, force } => {
+            let (class, clause) = (*class as usize, *clause as usize);
+            if class >= shape.classes || clause >= shape.max_clauses {
+                return Err(corrupt(format!(
+                    "logged clause fault ({class}, {clause}) outside shape"
+                )));
+            }
+            Ok(UpdateKind::ClauseFault { class, clause, force: *force })
+        }
+    }
+}
+
+/// Durable write-through at an eviction boundary: publish a checkpoint
+/// at the entry's current seq (making the retained WAL suffix
+/// obsolete), then fold it into the in-memory entry so the next
+/// rehydration replays nothing. No-op without a store, and skipped
+/// when the newest checkpoint is already current.
+fn write_through(
+    store: Option<&mut Store>,
+    id: u64,
+    entry: &mut ModelEntry,
+) -> Result<(), HubError> {
+    let Some(store) = store else { return Ok(()) };
+    if entry.log.is_empty() && entry.checkpoint_seq == entry.seq {
+        return Ok(());
+    }
+    let machine = match &entry.state {
+        Residency::Hot(m) | Residency::Evicting(m) => m,
+        Residency::Cold => return Ok(()),
+    };
+    let bytes = snapshot_bytes(machine, &entry.params, entry.seq);
+    store.publish_checkpoint(id, entry.seq, &bytes)?;
+    entry.checkpoint = bytes;
+    entry.checkpoint_seq = entry.seq;
+    entry.log.clear();
+    entry.cost = entry.checkpoint.len();
+    Ok(())
 }
 
 /// Where a model's machine currently lives.
@@ -166,6 +260,9 @@ pub struct ModelHub {
     /// Streamed `(request id, class)` responses for the net backend.
     pub(crate) responses: Vec<(u64, usize)>,
     pub(crate) polled: usize,
+    /// Durable persistence, when attached: every create/update is
+    /// WAL-logged write-ahead and checkpoint refreshes publish to disk.
+    store: Option<Store>,
 }
 
 impl ModelHub {
@@ -181,7 +278,101 @@ impl ModelHub {
             planes: PlaneCache::new(plane_cap),
             responses: Vec::new(),
             polled: 0,
+            store: None,
         }
+    }
+
+    /// Open a durable hub over a [`Store`]: every model recorded on
+    /// disk is rebuilt (checkpoint restore + keyed WAL-suffix replay on
+    /// first touch) and every future create/update writes through. A
+    /// fresh data directory yields an empty hub. Because all `Learn`
+    /// randomness is keyed `(base_seed, seq)`, the rebuilt hub is
+    /// bit-identical to one that never went down — the restart soak
+    /// (`coordinator::soak`) pins exactly that.
+    pub fn open_durable(
+        cfg: HubConfig,
+        store: Store,
+        recovered: Vec<RecoveredModel>,
+    ) -> Result<Self, HubError> {
+        let mut hub = ModelHub::new(cfg);
+        let mut recovered = recovered;
+        recovered.sort_by_key(|m| m.id);
+        for m in recovered {
+            let snap = restore(&m.ckpt_bytes)
+                .map_err(|e| HubError::Corrupt { model: m.id, detail: format!("{e:#}") })?;
+            if snap.seq != m.ckpt_seq {
+                return Err(HubError::Corrupt {
+                    model: m.id,
+                    detail: format!(
+                        "checkpoint seq {} disagrees with manifest seq {}",
+                        snap.seq, m.ckpt_seq
+                    ),
+                });
+            }
+            let shape = snap.machine.shape().clone();
+            let mut seq = m.ckpt_seq;
+            let mut log = Vec::with_capacity(m.ops.len());
+            for (s, op) in &m.ops {
+                // The store already proved contiguity; keep the hub
+                // paranoid about its only rebuild input.
+                if *s != seq + 1 {
+                    return Err(HubError::Corrupt {
+                        model: m.id,
+                        detail: format!("log suffix jumps from seq {seq} to {s}"),
+                    });
+                }
+                seq = *s;
+                log.push(ShardUpdate { seq, kind: from_wal_op(&shape, m.id, op)? });
+            }
+            let cost = m.ckpt_bytes.len();
+            hub.names.insert(m.name.clone(), m.id);
+            hub.lru.push(m.id);
+            hub.entries.insert(
+                m.id,
+                ModelEntry {
+                    name: m.name,
+                    shape,
+                    params: snap.params,
+                    base_seed: m.base_seed,
+                    seq,
+                    checkpoint: m.ckpt_bytes,
+                    checkpoint_seq: m.ckpt_seq,
+                    log,
+                    cost,
+                    evictions: 0,
+                    rehydrations: 0,
+                    scratch: None,
+                    state: Residency::Cold,
+                },
+            );
+            if hub.default_model.is_none() {
+                hub.default_model = Some(m.id);
+            }
+            hub.next_id = hub.next_id.max(m.id + 1);
+        }
+        hub.store = Some(store);
+        Ok(hub)
+    }
+
+    /// The attached durable store (recovery report, write counters),
+    /// if any.
+    pub fn store(&self) -> Option<&Store> {
+        self.store.as_ref()
+    }
+
+    /// Flush WAL appends the sync policy deferred. No-op for an
+    /// in-memory hub.
+    pub fn sync_durable(&mut self) -> Result<(), HubError> {
+        match self.store.as_mut() {
+            Some(store) => store.sync().map_err(HubError::from),
+            None => Ok(()),
+        }
+    }
+
+    /// A model's last applied update seq — the resume point a restarted
+    /// driver continues its trace from.
+    pub fn model_seq(&self, h: ModelHandle) -> Option<u64> {
+        self.entries.get(&h.id).map(|e| e.seq)
     }
 
     /// Register a model under `name`. The first created model becomes
@@ -213,6 +404,12 @@ impl ModelHub {
         }
         self.make_room(cost, u64::MAX)?;
         let id = self.next_id;
+        // Write-ahead: the birth (Create record + genesis checkpoint +
+        // manifest row) must be durable before the model exists in
+        // memory — a refused create leaves no trace on either side.
+        if let Some(store) = self.store.as_mut() {
+            store.log_create(id, name, base_seed, &checkpoint)?;
+        }
         self.next_id += 1;
         self.entries.insert(
             id,
@@ -325,7 +522,7 @@ impl ModelHub {
                 id != keep && matches!(self.entries[&id].state, Residency::Hot(_))
             });
             match victim {
-                Some(id) => self.evict_resident(id),
+                Some(id) => self.evict_resident(id)?,
                 None => {
                     return Err(HubError::BudgetExhausted {
                         need,
@@ -338,13 +535,17 @@ impl ModelHub {
         Ok(())
     }
 
-    /// Drop a hot machine (checkpoint + retained log stay behind).
-    fn evict_resident(&mut self, id: u64) {
+    /// Drop a hot machine (checkpoint + retained log stay behind). A
+    /// durable hub writes through first, so eviction never widens the
+    /// window a crash could force back through WAL replay.
+    fn evict_resident(&mut self, id: u64) -> Result<(), HubError> {
         let entry = self.entries.get_mut(&id).expect("evict_resident: known id");
         if matches!(entry.state, Residency::Hot(_)) {
+            write_through(self.store.as_mut(), id, entry)?;
             entry.state = Residency::Cold;
             entry.evictions += 1;
         }
+        Ok(())
     }
 
     /// Force-evict a model now (the soak's mid-trace drill, or an
@@ -353,10 +554,7 @@ impl ModelHub {
         match &self.entry(h.id)?.state {
             Residency::Evicting(_) => Err(HubError::Evicting { model: h.id }),
             Residency::Cold => Ok(()),
-            Residency::Hot(_) => {
-                self.evict_resident(h.id);
-                Ok(())
-            }
+            Residency::Hot(_) => self.evict_resident(h.id),
         }
     }
 
@@ -382,11 +580,13 @@ impl ModelHub {
     }
 
     /// Close the eviction barrier: drop the machine, count the
-    /// eviction.
+    /// eviction. A durable hub writes through first, like
+    /// [`ModelHub::evict`].
     pub fn finish_evict(&mut self, h: ModelHandle) -> Result<(), HubError> {
         self.entry(h.id)?;
         let entry = self.entries.get_mut(&h.id).expect("finish_evict: known id");
         if let Residency::Evicting(_) = entry.state {
+            write_through(self.store.as_mut(), h.id, entry)?;
             entry.state = Residency::Cold;
             entry.evictions += 1;
         }
@@ -426,9 +626,16 @@ impl ModelHub {
     /// Apply one sequenced update to a model; returns its new seq.
     /// Rehydrates transparently; refreshes the checkpoint every
     /// `checkpoint_every` updates so the retained log stays bounded.
+    ///
+    /// Durable hubs log the update write-ahead: a storage refusal means
+    /// the update did not happen, in memory or on disk.
     pub fn update(&mut self, h: ModelHandle, kind: UpdateKind) -> Result<u64, HubError> {
         self.ensure_hot(h.id)?;
         let entry = self.entries.get_mut(&h.id).expect("update: ensured hot");
+        if let Some(store) = self.store.as_mut() {
+            let op = to_wal_op(&entry.shape, &kind);
+            store.log_update(h.id, entry.seq + 1, &op)?;
+        }
         entry.seq += 1;
         let u = ShardUpdate { seq: entry.seq, kind };
         let Residency::Hot(machine) = &mut entry.state else {
@@ -446,6 +653,12 @@ impl ModelHub {
             entry.checkpoint_seq = entry.seq;
             entry.log.clear();
             entry.cost = entry.checkpoint.len();
+            // The update itself is already durable in the WAL; a failed
+            // publish only poisons *future* durable writes (fail-stop),
+            // it cannot lose this one.
+            if let Some(store) = self.store.as_mut() {
+                store.publish_checkpoint(h.id, entry.seq, &entry.checkpoint)?;
+            }
         }
         Ok(entry.seq)
     }
@@ -668,5 +881,138 @@ mod tests {
         assert!(hub.resolve("tenant-1").is_some());
         assert!(hub.resolve("tenant-2").is_none());
         assert_eq!(hub.default_handle(), hub.resolve("tenant-1"));
+    }
+
+    use crate::store::{testdir, RealDisk, StoreConfig};
+
+    fn open_store(dir: &std::path::Path) -> (Store, Vec<crate::store::RecoveredModel>) {
+        Store::open(Box::new(RealDisk), dir, StoreConfig::default()).unwrap()
+    }
+
+    /// The durability tentpole at hub scope: two tenants, interleaved
+    /// updates (Learn and ClauseFault) and a forced mid-log eviction,
+    /// then the hub is dropped and rebuilt from disk twice over — every
+    /// digest bit-identical to never-persisted in-memory mirrors fed
+    /// the same keyed log, including updates applied *after* the
+    /// restarts.
+    #[test]
+    fn durable_hub_restart_is_bit_identical() {
+        let dir = testdir("hub_restart");
+        let cfg = HubConfig { checkpoint_every: 8, ..Default::default() };
+        let (m0, params) = hub_model(0x10);
+        let (m1, _) = hub_model(0x11);
+        let mut mirrors = [m0.clone(), m1.clone()];
+        let seeds = [0xA0u64, 0xB1];
+        let mut seqs = [0u64; 2];
+        #[allow(clippy::too_many_arguments)]
+        fn step(
+            hub: &mut ModelHub,
+            handles: &[ModelHandle; 2],
+            mirrors: &mut [MultiTm; 2],
+            seqs: &mut [u64; 2],
+            seeds: &[u64; 2],
+            params: &TmParams,
+            t: usize,
+            i: u64,
+        ) {
+            let kind = if i % 7 == 5 {
+                UpdateKind::ClauseFault {
+                    class: (i % 3) as usize,
+                    clause: (i % 16) as usize,
+                    force: [None, Some(false), Some(true)][(i % 3) as usize],
+                }
+            } else {
+                learn(seeds[t], i)
+            };
+            let seq = hub.update(handles[t], kind.clone()).unwrap();
+            seqs[t] += 1;
+            assert_eq!(seq, seqs[t]);
+            mirrors[t].apply_update(&ShardUpdate { seq, kind }, params, seeds[t]);
+        }
+
+        let (store, recovered) = open_store(&dir);
+        assert!(recovered.is_empty(), "fresh directory must rebuild an empty hub");
+        let mut hub = ModelHub::open_durable(cfg.clone(), store, recovered).unwrap();
+        let handles = [
+            hub.create("alpha", m0, params.clone(), seeds[0]).unwrap(),
+            hub.create("beta", m1, params.clone(), seeds[1]).unwrap(),
+        ];
+        for i in 0..21u64 {
+            step(&mut hub, &handles, &mut mirrors, &mut seqs, &seeds, &params, (i % 2) as usize, i);
+            if i == 13 {
+                hub.evict(handles[0]).unwrap();
+            }
+        }
+        drop(hub);
+
+        // First restart: identity, seqs and state all rebuilt from
+        // manifest + checkpoints + WAL-suffix replay.
+        let (store, recovered) = open_store(&dir);
+        assert_eq!(recovered.len(), 2);
+        let mut hub = ModelHub::open_durable(cfg.clone(), store, recovered).unwrap();
+        assert_eq!(hub.resolve("alpha"), Some(handles[0]));
+        assert_eq!(hub.resolve("beta"), Some(handles[1]));
+        assert_eq!(hub.default_handle(), Some(handles[0]));
+        for t in 0..2 {
+            assert_eq!(hub.model_seq(handles[t]), Some(seqs[t]));
+            assert_eq!(hub.digest(handles[t]).unwrap(), mirrors[t].state_digest(), "tenant {t}");
+        }
+        // Keep updating the rebuilt hub: the keyed log clock continues
+        // exactly where it stopped.
+        for i in 21..34u64 {
+            step(&mut hub, &handles, &mut mirrors, &mut seqs, &seeds, &params, (i % 2) as usize, i);
+        }
+        drop(hub);
+
+        // Second restart, purely to show rebuild composes.
+        let (store, recovered) = open_store(&dir);
+        let mut hub = ModelHub::open_durable(cfg, store, recovered).unwrap();
+        for t in 0..2 {
+            assert_eq!(hub.digest(handles[t]).unwrap(), mirrors[t].state_digest(), "tenant {t}");
+        }
+        // A name collision with a recovered model still refuses typed.
+        let (m2, _) = hub_model(0x12);
+        assert!(matches!(
+            hub.create("alpha", m2, params, 3),
+            Err(HubError::DuplicateName(_))
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Eviction writes through: the store's newest durable checkpoint
+    /// jumps to the eviction seq, the retained log empties, and the
+    /// next rehydration replays nothing yet stays bit-identical.
+    #[test]
+    fn durable_eviction_writes_through_to_disk() {
+        let dir = testdir("hub_evict_wt");
+        let (machine, params) = hub_model(0x20);
+        let mut mirror = machine.clone();
+        let (store, recovered) = open_store(&dir);
+        let mut hub = ModelHub::open_durable(
+            HubConfig { checkpoint_every: 64, ..Default::default() },
+            store,
+            recovered,
+        )
+        .unwrap();
+        let h = hub.create("tenant", machine, params.clone(), 0xE1).unwrap();
+        for i in 0..5u64 {
+            let kind = learn(9, i);
+            let seq = hub.update(h, kind.clone()).unwrap();
+            mirror.apply_update(&ShardUpdate { seq, kind }, &params, 0xE1);
+        }
+        assert_eq!(hub.retained_log_len(h), 5);
+        hub.evict(h).unwrap();
+        assert_eq!(hub.retained_log_len(h), 0, "write-through must fold the log");
+        let manifest = hub.store().unwrap().manifest();
+        assert_eq!(manifest[&h.id()].ckpt_seq, 5, "durable checkpoint at eviction seq");
+        assert_eq!(hub.digest(h).unwrap(), mirror.state_digest());
+        // And a cold restart lands on the written-through checkpoint
+        // with an empty replay suffix.
+        drop(hub);
+        let (_store, recovered) = open_store(&dir);
+        assert_eq!(recovered.len(), 1);
+        assert_eq!(recovered[0].ckpt_seq, 5);
+        assert!(recovered[0].ops.is_empty());
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

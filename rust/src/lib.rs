@@ -24,6 +24,8 @@ pub mod hub;
 pub mod net;
 pub mod runtime;
 pub mod serve;
+pub mod store;
 pub mod testkit;
 pub mod tm;
+pub mod util;
 pub mod verify;

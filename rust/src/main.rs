@@ -390,6 +390,9 @@ fn drive_sockets<B: tm_fpga::hub::HubNetBackend>(
 }
 
 fn cmd_serve_hub(cli: &Cli) -> Result<()> {
+    if let Some(dir) = cli.flag("data-dir") {
+        return cmd_serve_restart(cli, PathBuf::from(dir));
+    }
     let d = tm_fpga::coordinator::HubSoakConfig::default();
     let specs = model_specs(cli)?;
     let tenants =
@@ -445,6 +448,82 @@ fn cmd_serve_hub(cli: &Cli) -> Result<()> {
             .filter(|t| t.mismatches > 0 || !t.stats_match || !t.digest_match)
             .count();
         bail!("hub soak diverged for {diverged} tenant(s)")
+    }
+}
+
+/// `serve soak --data-dir DIR`: one pass of the durable-hub restart
+/// drill. Recovers whatever state a previous process left in DIR
+/// (WAL + checkpoints), drives the per-tenant traces to completion, and
+/// verifies answers and final digests bit-identical to the
+/// never-crashed scalar oracle. With `--crash-after N` the Nth durable
+/// write fail-stops the pass and the process exits 86 with DIR intact —
+/// relaunching without the flag resumes from the crashed store, so the
+/// two invocations together are a real kill-and-relaunch crash drill.
+fn cmd_serve_restart(cli: &Cli, data_dir: PathBuf) -> Result<()> {
+    let d = tm_fpga::coordinator::RestartSoakConfig::default();
+    let specs = model_specs(cli)?;
+    let tenants =
+        if specs.is_empty() { cli.flag_usize("tenants", d.tenants)? } else { specs.len() };
+    let cfg = tm_fpga::coordinator::RestartSoakConfig {
+        tenants,
+        events_per_tenant: cli.flag_usize("events", d.events_per_tenant)?,
+        labelled_fraction: cli.flag_f32("labelled", d.labelled_fraction)?,
+        mean_gap: cli.flag_f64("gap", d.mean_gap)?,
+        seed: cli.flag_u64("seed", d.seed)?,
+        warmup_epochs: cli.flag_usize("warmup", d.warmup_epochs)?,
+        checkpoint_every: cli.flag_u64("checkpoint-every", d.checkpoint_every)?,
+        evict_every: cli.flag_u64("evict-every", d.evict_every)?,
+        segment_bytes: d.segment_bytes,
+        data_dir,
+        max_crash_points: d.max_crash_points,
+        tenant_names: specs.iter().map(|m| m.name.clone()).collect(),
+    };
+    let crash_after = match cli.flag("crash-after") {
+        Some(_) => Some(cli.flag_u64("crash-after", 1)?),
+        None => None,
+    };
+    let run = coordinator::run_restart_once(&cfg, crash_after)?;
+    println!(
+        "durable soak: {} tenant(s) × {} event(s), store {}",
+        cfg.tenants,
+        cfg.events_per_tenant,
+        cfg.data_dir.display()
+    );
+    if let Some(r) = &run.recovery {
+        println!(
+            "  recovery           : {} model(s) rebuilt, {} WAL record(s) replayed, \
+             {} torn tail(s) truncated, {} stale manifest entr(y/ies)",
+            r.models_recovered,
+            r.wal_records_replayed,
+            r.torn_tails_truncated,
+            r.stale_manifest_entries
+        );
+    }
+    println!("  answered           : {} inference(s) this pass", run.answered);
+    if run.crashed {
+        match crash_after {
+            Some(n) => {
+                eprintln!(
+                    "  injected crash     : fail-stop at durable write {n}; store kept in {} \
+                     (relaunch without --crash-after to resume)",
+                    cfg.data_dir.display()
+                );
+                std::process::exit(86);
+            }
+            None => bail!(
+                "durable soak hit a storage fail-stop; store kept in {}",
+                cfg.data_dir.display()
+            ),
+        }
+    }
+    if run.divergences == 0 {
+        println!(
+            "  oracle check       : OK (answers and final digests bit-identical to the \
+             never-crashed scalar oracle)"
+        );
+        Ok(())
+    } else {
+        bail!("durable soak diverged: {} mismatch(es) vs the scalar oracle", run.divergences)
     }
 }
 

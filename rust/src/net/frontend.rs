@@ -799,6 +799,9 @@ impl<B: HubNetBackend, T: Transport> FrontEnd<B, T> {
         // Telemetry is snapshotted before finalize consumes the
         // backend (queue depths post-flush, pre-join).
         let telemetry = self.telemetry();
+        // Deferred durable writes reach stable storage before the
+        // workers join: a drained run survives power loss whole.
+        self.backend.sync_durable()?;
         let fin = self.backend.finalize()?;
         for (gid, class) in fin.responses {
             if self.fill_slot(gid, SlotFill::Pred(class)) {

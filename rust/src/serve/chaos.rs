@@ -17,6 +17,8 @@
 //! them at admission — both arms see the identical stream.
 
 use crate::tm::rng::Xoshiro256;
+use std::fs;
+use std::path::{Path, PathBuf};
 
 /// How a scheduled kill lands.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -246,6 +248,170 @@ impl NetChaosPlan {
     /// Number of faulted client slots.
     pub fn faulted(&self) -> usize {
         self.faults.iter().filter(|f| f.is_some()).count()
+    }
+}
+
+/// One injected durable-storage fault, applied to a *closed* store
+/// directory between a crash and the restart that must survive it.
+/// Where [`crate::store::FaultDisk`] injects faults at the write
+/// boundary (ENOSPC, short writes, crashes mid-append), these mutate
+/// the bytes already on disk — the damage a power cut, media rot or an
+/// interrupted retention pass leaves behind. Every kind must be either
+/// repaired with exact counter accounting on the next
+/// [`crate::store::Store::open`] or refused with a typed error; none
+/// may ever yield a silently wrong recovery.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DiskFault {
+    /// Tear the final WAL record: truncate the newest segment mid-frame,
+    /// dropping the last `bytes` bytes of the final record (clamped so
+    /// at least one byte of the frame survives). This is exactly the
+    /// state an in-flight append leaves, so recovery truncates it away
+    /// and loses only the unacknowledged record.
+    TornTail { bytes: u64 },
+    /// Flip one bit inside the first sealed record of the oldest WAL
+    /// segment — latent media corruption in acknowledged history, which
+    /// tearing can never produce. Recovery must refuse typed
+    /// (`CorruptRecord`), never replay around it.
+    BitFlipWal,
+    /// Delete a middle WAL segment (needs ≥ 3), leaving a hole the
+    /// position-contiguity check must refuse typed (`MissingSegment`).
+    MissingSegment,
+    /// Truncate the oldest of ≥ 2 WAL segments to zero bytes: the file
+    /// is still listed under its positional name but yields no records,
+    /// so the successor segment no longer starts where the name
+    /// promises — refused typed, same as a deleted segment.
+    ZeroLengthSegment,
+    /// Roll the manifest back to the previous on-disk checkpoint of some
+    /// model (rewritten with a valid CRC) — the legal crash window
+    /// between checkpoint publication and manifest rewrite. Recovery
+    /// prefers the newest *verifying* checkpoint file, counts the stale
+    /// row and repairs the manifest durably.
+    StaleManifest,
+    /// Flip one bit mid-file in the newest checkpoint on disk. Restore's
+    /// CRC must reject it (counted) and fall back to an older snapshot
+    /// or the WAL's genesis record — or fail typed when nothing usable
+    /// remains.
+    CorruptCheckpoint,
+}
+
+impl DiskFault {
+    /// The full injection matrix, one of each kind.
+    pub fn full_matrix() -> Vec<DiskFault> {
+        vec![
+            DiskFault::TornTail { bytes: 3 },
+            DiskFault::BitFlipWal,
+            DiskFault::MissingSegment,
+            DiskFault::ZeroLengthSegment,
+            DiskFault::StaleManifest,
+            DiskFault::CorruptCheckpoint,
+        ]
+    }
+}
+
+/// Files under `dir` whose name ends in `suffix`, lexically sorted —
+/// which for the store's zero-padded names is positional order.
+fn sorted_files(dir: &Path, suffix: &str) -> std::io::Result<Vec<PathBuf>> {
+    let mut v = Vec::new();
+    for entry in fs::read_dir(dir)? {
+        let p = entry?.path();
+        if p.file_name().and_then(|n| n.to_str()).is_some_and(|n| n.ends_with(suffix)) {
+            v.push(p);
+        }
+    }
+    v.sort();
+    Ok(v)
+}
+
+/// Apply one [`DiskFault`] to the closed store rooted at `root`.
+/// Returns `Ok(false)` when the directory does not hold enough state
+/// for the fault to land (e.g. [`DiskFault::MissingSegment`] with fewer
+/// than three segments) — the caller decides whether that skip is
+/// acceptable for its sweep.
+pub fn inject_disk_fault(root: &Path, fault: DiskFault) -> anyhow::Result<bool> {
+    use crate::store::{ckpt, RealDisk};
+    let wal_dir = root.join("wal");
+    let ckpt_dir = root.join("ckpt");
+    match fault {
+        DiskFault::TornTail { bytes } => {
+            let segs = sorted_files(&wal_dir, ".wal")?;
+            let Some(path) = segs.last() else { return Ok(false) };
+            let buf = fs::read(path)?;
+            // Walk the frames to find where the final record starts.
+            let mut off = 0usize;
+            let mut last = None;
+            while off + 8 <= buf.len() {
+                let len = u32::from_le_bytes([buf[off], buf[off + 1], buf[off + 2], buf[off + 3]])
+                    as usize;
+                if off + 8 + len > buf.len() {
+                    break;
+                }
+                last = Some((off, 8 + len));
+                off += 8 + len;
+            }
+            let Some((start, frame_len)) = last else { return Ok(false) };
+            let keep = frame_len.saturating_sub((bytes as usize).max(1)).max(1);
+            let f = fs::OpenOptions::new().write(true).open(path)?;
+            f.set_len((start + keep) as u64)?;
+            Ok(true)
+        }
+        DiskFault::BitFlipWal => {
+            let segs = sorted_files(&wal_dir, ".wal")?;
+            let Some(path) = segs.first() else { return Ok(false) };
+            let mut buf = fs::read(path)?;
+            if buf.len() < 9 {
+                return Ok(false);
+            }
+            // Offset 8 is the first payload byte of the first record:
+            // the frame stays complete, its CRC no longer matches.
+            buf[8] ^= 0x01;
+            fs::write(path, &buf)?;
+            Ok(true)
+        }
+        DiskFault::MissingSegment => {
+            let segs = sorted_files(&wal_dir, ".wal")?;
+            if segs.len() < 3 {
+                return Ok(false);
+            }
+            fs::remove_file(&segs[1])?;
+            Ok(true)
+        }
+        DiskFault::ZeroLengthSegment => {
+            let segs = sorted_files(&wal_dir, ".wal")?;
+            if segs.len() < 2 {
+                return Ok(false);
+            }
+            let f = fs::OpenOptions::new().write(true).open(&segs[0])?;
+            f.set_len(0)?;
+            Ok(true)
+        }
+        DiskFault::StaleManifest => {
+            let mut disk = RealDisk;
+            let Some(mut man) = ckpt::load_manifest(&mut disk, root)? else {
+                return Ok(false);
+            };
+            let files = ckpt::scan(&mut disk, &ckpt_dir)?;
+            let pick = man.iter().rev().find_map(|(id, e)| {
+                let list = files.get(id)?;
+                let &(older, _) = list.iter().rev().find(|&&(s, _)| s < e.ckpt_seq)?;
+                Some((*id, older))
+            });
+            let Some((id, older)) = pick else { return Ok(false) };
+            man.get_mut(&id).expect("picked from this map").ckpt_seq = older;
+            ckpt::write_manifest(&mut disk, root, &man)?;
+            Ok(true)
+        }
+        DiskFault::CorruptCheckpoint => {
+            let files = sorted_files(&ckpt_dir, ".tmfs")?;
+            let Some(path) = files.last() else { return Ok(false) };
+            let mut bytes = fs::read(path)?;
+            if bytes.is_empty() {
+                return Ok(false);
+            }
+            let mid = bytes.len() / 2;
+            bytes[mid] ^= 0x40;
+            fs::write(path, &bytes)?;
+            Ok(true)
+        }
     }
 }
 

@@ -62,17 +62,16 @@ pub use batcher::{
     PendingRequest, ServeEvent,
 };
 pub use chaos::{
-    ChaosEvent, ChaosPlan, ChaosSpec, KillKind, NetChaosPlan, NetChaosSpec, NetFault,
+    inject_disk_fault, ChaosEvent, ChaosPlan, ChaosSpec, DiskFault, KillKind, NetChaosPlan,
+    NetChaosSpec, NetFault,
 };
 pub use checkpoint::{
-    load_snapshot, restore, restore_expecting, save_snapshot, snapshot_bytes, SeqRegression,
-    ServeSnapshot,
+    load_snapshot, quick_check, restore, restore_expecting, save_snapshot, snapshot_bytes,
+    SeqRegression, ServeSnapshot,
 };
 pub use oracle::ScalarOracle;
 pub use shard::{MicroBatch, ShardStats};
-pub use supervisor::{
-    FaultPolicy, RecoveryStats, ServeConfig, ServeOutcome, ShardServer, RETAINED_SNAPSHOTS,
-};
+pub use supervisor::{FaultPolicy, RecoveryStats, ServeConfig, ServeOutcome, ShardServer};
 
 /// Anything that can consume the deterministic event stream produced by
 /// [`run_trace`]: the sharded server and the scalar oracle implement

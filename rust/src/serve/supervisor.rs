@@ -9,7 +9,7 @@
 //!   the supervisor sends each live shard a snapshot marker; workers
 //!   answer with a checksummed replica snapshot (`serve::checkpoint`)
 //!   stamped with the last applied seq. The newest
-//!   [`RETAINED_SNAPSHOTS`] per shard are kept, seeded with a genesis
+//!   [`FaultPolicy::retained_snapshots`] per shard are kept, seeded with a genesis
 //!   snapshot at seq 0 so recovery is always possible.
 //! - **Supervision.** Workers run under `catch_unwind`; a panic
 //!   (organic or chaos-injected) surfaces as a `Dead` notice / failed
@@ -62,11 +62,6 @@ use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
-/// Newest checkpoints retained per shard. Two, not one: a corrupted
-/// newest snapshot must leave an older one to fall back to (at the
-/// price of a longer replay).
-pub const RETAINED_SNAPSHOTS: usize = 2;
-
 /// Fault-tolerance policy knobs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct FaultPolicy {
@@ -81,11 +76,22 @@ pub struct FaultPolicy {
     /// Batches each surviving shard may absorb during an outage before
     /// further batches are shed with an explicit overload response.
     pub degraded_depth: u64,
+    /// Newest checkpoints retained per shard, validated ≥ 1 by
+    /// `ShardServer::build`. Two by default, not one: a corrupted
+    /// newest snapshot must leave an older one to fall back to (at the
+    /// price of a longer replay). Memory-tight deployments can drop to
+    /// 1; the durable store makes deeper retention cheap.
+    pub retained_snapshots: usize,
 }
 
 impl Default for FaultPolicy {
     fn default() -> Self {
-        FaultPolicy { checkpoint_every: 64, recovery_lag: 0, degraded_depth: u64::MAX }
+        FaultPolicy {
+            checkpoint_every: 64,
+            recovery_lag: 0,
+            degraded_depth: u64::MAX,
+            retained_snapshots: 2,
+        }
     }
 }
 
@@ -268,6 +274,9 @@ impl ShardServer {
         if cfg.shards == 0 {
             bail!("serve: shard count must be >= 1");
         }
+        if cfg.fault.retained_snapshots == 0 {
+            bail!("serve: retained_snapshots must be >= 1");
+        }
         cfg.params
             .validate(tm.shape())
             .context("serve: params do not fit the served model")?;
@@ -285,7 +294,7 @@ impl ShardServer {
                 cfg.base_seed,
                 res_tx.clone(),
             );
-            let mut snaps = VecDeque::with_capacity(RETAINED_SNAPSHOTS + 1);
+            let mut snaps = VecDeque::with_capacity(cfg.fault.retained_snapshots + 1);
             snaps.push_back(Snapshot { seq: 0, bytes: genesis.clone() });
             slots.push(Slot {
                 shard,
@@ -404,7 +413,7 @@ impl ShardServer {
                 let slot = &mut self.slots[shard];
                 slot.last_heartbeat = slot.last_heartbeat.max(seq);
                 slot.snaps.push_back(Snapshot { seq, bytes });
-                while slot.snaps.len() > RETAINED_SNAPSHOTS {
+                while slot.snaps.len() > self.policy.retained_snapshots {
                     slot.snaps.pop_front();
                 }
             }
@@ -965,5 +974,67 @@ mod tests {
         for r in &out.replicas {
             assert_eq!(r.state_digest(), oracle_digest, "replica diverged from oracle");
         }
+    }
+
+    /// Retention depth is what recovery can fall back through. Corrupt
+    /// the two newest snapshots of a shard, then kill it: with
+    /// `retained_snapshots = 3` the ring still holds the genesis
+    /// snapshot, so recovery rejects both corrupt images (counted) and
+    /// replays the full log from genesis — bit-identical to the oracle.
+    /// With `retained_snapshots = 1` the same damage leaves no valid
+    /// checkpoint and the run must fail typed, not answer wrongly.
+    #[test]
+    fn retention_depth_bounds_corruption_fallback() {
+        let s = TmShape::iris();
+        let p = TmParams::paper_online(&s);
+        let mut rng = Xoshiro256::new(0xBEEF);
+        let tm = crate::testkit::gen::machine(&mut rng, &s);
+        let events = trace(100, 0x44, &s);
+        let bcfg = BatcherConfig { max_batch: 8, latency_budget: 2, ..Default::default() };
+        // checkpoint_every = 4 and a kill after seq 9 means shard 1 has
+        // shipped exactly two snapshots (seq 4 and 8) before dying; the
+        // chaos plan corrupts both in transit.
+        let plan = || ChaosPlan {
+            events: vec![
+                ChaosEvent::CorruptSnapshot { shard: 1, nth: 1 },
+                ChaosEvent::CorruptSnapshot { shard: 1, nth: 2 },
+                ChaosEvent::Kill { shard: 1, after_seq: 9, kind: KillKind::Immediate },
+            ],
+        };
+
+        let mut cfg = ServeConfig::new(2, p.clone(), 7);
+        cfg.fault.checkpoint_every = 4;
+        cfg.fault.retained_snapshots = 3;
+        let mut server = ShardServer::with_chaos(&tm, &cfg, plan()).unwrap();
+        run_trace(&mut server, &events, &bcfg).unwrap();
+        let out = server.finish().unwrap();
+        assert_eq!(out.recovery.corrupt_snapshots_rejected, 2);
+        assert_eq!(out.recovery.recoveries, 1);
+        assert!(out.shed.is_empty());
+        let mut oracle = ScalarOracle::new(tm.clone(), p.clone(), 7);
+        run_trace(&mut oracle, &events, &bcfg).unwrap();
+        let oracle_digest = oracle.machine().state_digest();
+        assert_eq!(out.responses, oracle.into_responses());
+        for r in &out.replicas {
+            assert_eq!(r.state_digest(), oracle_digest, "replica diverged from oracle");
+        }
+
+        // Depth 1: snap 8 evicted genesis and snap 4; it is corrupt, so
+        // nothing survives verification — typed failure, no wrong answer.
+        let mut cfg = ServeConfig::new(2, p.clone(), 7);
+        cfg.fault.checkpoint_every = 4;
+        cfg.fault.retained_snapshots = 1;
+        let mut server = ShardServer::with_chaos(&tm, &cfg, plan()).unwrap();
+        let _ = run_trace(&mut server, &events, &bcfg);
+        let err = server.finish().expect_err("depth-1 ring cannot survive double corruption");
+        assert!(
+            format!("{err:#}").contains("no checkpoint passing verification"),
+            "unexpected error: {err:#}"
+        );
+
+        // Depth 0 is rejected up front.
+        let mut cfg = ServeConfig::new(2, p, 7);
+        cfg.fault.retained_snapshots = 0;
+        assert!(ShardServer::new(&tm, &cfg).is_err());
     }
 }

@@ -1,0 +1,264 @@
+//! On-disk checkpoint store + manifest.
+//!
+//! Checkpoint files reuse the TMFS v2 byte format from
+//! `serve::checkpoint` verbatim — one file per published snapshot,
+//! named `m<id:08>-<seq:020>.tmfs` so `(model_id, seq)` is recoverable
+//! from the name alone and a directory listing sorts publication order.
+//! Every file is published atomically: temp write → fsync → rename, so
+//! a crash mid-publication leaves either the old set or the new set,
+//! never a half-written snapshot (orphan temps are swept on open).
+//!
+//! The `MANIFEST` is a small CRC-tailed text file mapping model id →
+//! (name, base_seed, newest durable checkpoint seq). It is *advisory*:
+//! rebuild prefers the newest checkpoint file that actually verifies,
+//! so a manifest gone stale in the crash window between checkpoint
+//! publication and manifest rewrite is detected (counted) and repaired,
+//! not trusted. What the manifest alone carries is model *identity*
+//! (name, base_seed) after the WAL's Create record has been retired by
+//! retention — which is why it is rewritten durably before any
+//! retention runs.
+
+use super::{Disk, StoreError};
+use crate::util::fnv1a;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+pub const MANIFEST_NAME: &str = "MANIFEST";
+const MANIFEST_HEADER: &str = "tmfpga-manifest v1";
+const CKPT_SUFFIX: &str = ".tmfs";
+
+/// One manifest row: identity plus the newest durable checkpoint seq.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ManifestEntry {
+    pub name: String,
+    pub base_seed: u64,
+    pub ckpt_seq: u64,
+}
+
+pub fn ckpt_file_name(model_id: u64, seq: u64) -> String {
+    format!("m{model_id:08}-{seq:020}{CKPT_SUFFIX}")
+}
+
+pub fn parse_ckpt_name(name: &str) -> Option<(u64, u64)> {
+    let stem = name.strip_prefix('m')?.strip_suffix(CKPT_SUFFIX)?;
+    let (id, seq) = stem.split_once('-')?;
+    if id.len() != 8 || seq.len() != 20 {
+        return None;
+    }
+    if !id.bytes().all(|b| b.is_ascii_digit()) || !seq.bytes().all(|b| b.is_ascii_digit()) {
+        return None;
+    }
+    Some((id.parse().ok()?, seq.parse().ok()?))
+}
+
+/// List the checkpoint directory: model id → `(seq, path)` ascending by
+/// seq. Files that don't parse as checkpoint names are ignored.
+#[allow(clippy::type_complexity)]
+pub fn scan(
+    disk: &mut dyn Disk,
+    dir: &Path,
+) -> Result<BTreeMap<u64, Vec<(u64, PathBuf)>>, StoreError> {
+    let mut map: BTreeMap<u64, Vec<(u64, PathBuf)>> = BTreeMap::new();
+    for path in disk.list(dir)? {
+        let Some(name) = path.file_name().and_then(|n| n.to_str()) else { continue };
+        if let Some((id, seq)) = parse_ckpt_name(name) {
+            map.entry(id).or_default().push((seq, path));
+        }
+    }
+    for files in map.values_mut() {
+        files.sort_by_key(|&(seq, _)| seq);
+    }
+    Ok(map)
+}
+
+/// Delete all but the newest `keep` checkpoints of one model.
+/// `files` is the ascending `(seq, path)` list from [`scan`], updated
+/// in place. Returns how many files were removed.
+pub fn retire(
+    disk: &mut dyn Disk,
+    files: &mut Vec<(u64, PathBuf)>,
+    keep: usize,
+) -> Result<u64, StoreError> {
+    let keep = keep.max(1);
+    let mut removed = 0u64;
+    while files.len() > keep {
+        let (_, path) = files.remove(0);
+        disk.remove(&path)?;
+        removed += 1;
+    }
+    Ok(removed)
+}
+
+fn manifest_body(entries: &BTreeMap<u64, ManifestEntry>) -> String {
+    let mut body = String::new();
+    body.push_str(MANIFEST_HEADER);
+    body.push('\n');
+    for (id, e) in entries {
+        body.push_str(&format!("model {id} {} {} {}\n", e.base_seed, e.ckpt_seq, e.name));
+    }
+    body
+}
+
+/// Durably (atomically) rewrite the manifest.
+pub fn write_manifest(
+    disk: &mut dyn Disk,
+    root: &Path,
+    entries: &BTreeMap<u64, ManifestEntry>,
+) -> Result<(), StoreError> {
+    let body = manifest_body(entries);
+    let mut bytes = body.into_bytes();
+    let crc = fnv1a(&bytes);
+    bytes.extend_from_slice(format!("crc {crc:08x}\n").as_bytes());
+    disk.write_atomic(&root.join(MANIFEST_NAME), &bytes)
+}
+
+/// Read and verify the manifest. `Ok(None)` when the file doesn't
+/// exist (a brand-new store); a present-but-invalid manifest is a typed
+/// [`StoreError::CorruptManifest`] — the caller decides whether the WAL
+/// still lets it recover.
+pub fn load_manifest(
+    disk: &mut dyn Disk,
+    root: &Path,
+) -> Result<Option<BTreeMap<u64, ManifestEntry>>, StoreError> {
+    let path = root.join(MANIFEST_NAME);
+    if !disk.exists(&path)? {
+        return Ok(None);
+    }
+    let bytes = disk.read(&path)?;
+    let corrupt = |detail: String| StoreError::CorruptManifest { detail };
+    let text =
+        std::str::from_utf8(&bytes).map_err(|e| corrupt(format!("not utf-8: {e}")))?;
+    // The CRC line covers every byte before it.
+    let crc_at = text
+        .rfind("crc ")
+        .ok_or_else(|| corrupt("missing crc line".into()))?;
+    if crc_at != 0 && !text[..crc_at].ends_with('\n') {
+        return Err(corrupt("crc marker not at line start".into()));
+    }
+    let body = &text[..crc_at];
+    let crc_line = text[crc_at..]
+        .strip_prefix("crc ")
+        .and_then(|rest| rest.strip_suffix('\n'))
+        .ok_or_else(|| corrupt("malformed crc line".into()))?;
+    // Exactly 8 lowercase hex digits: `from_str_radix` alone would also
+    // accept uppercase (an `a`→`A` bit flip parses to the same value).
+    if crc_line.len() != 8
+        || !crc_line.bytes().all(|b| b.is_ascii_digit() || (b'a'..=b'f').contains(&b))
+    {
+        return Err(corrupt(format!("bad crc value: {crc_line:?}")));
+    }
+    let want = u32::from_str_radix(crc_line, 16)
+        .map_err(|e| corrupt(format!("bad crc value: {e}")))?;
+    let got = fnv1a(body.as_bytes());
+    if got != want {
+        return Err(corrupt(format!("crc mismatch (got {got:08x}, want {want:08x})")));
+    }
+    let mut lines = body.lines();
+    if lines.next() != Some(MANIFEST_HEADER) {
+        return Err(corrupt("bad header".into()));
+    }
+    let mut entries = BTreeMap::new();
+    for line in lines {
+        let mut f = line.split(' ');
+        let (tag, id, base_seed, ckpt_seq, name) =
+            (f.next(), f.next(), f.next(), f.next(), f.next());
+        let (Some("model"), Some(id), Some(base_seed), Some(ckpt_seq), Some(name)) =
+            (tag, id, base_seed, ckpt_seq, name)
+        else {
+            return Err(corrupt(format!("malformed line: {line:?}")));
+        };
+        if f.next().is_some() {
+            return Err(corrupt(format!("trailing fields: {line:?}")));
+        }
+        let id: u64 = id.parse().map_err(|e| corrupt(format!("bad id: {e}")))?;
+        let entry = ManifestEntry {
+            name: name.to_string(),
+            base_seed: base_seed
+                .parse()
+                .map_err(|e| corrupt(format!("bad base_seed: {e}")))?,
+            ckpt_seq: ckpt_seq
+                .parse()
+                .map_err(|e| corrupt(format!("bad ckpt_seq: {e}")))?,
+        };
+        if entries.insert(id, entry).is_some() {
+            return Err(corrupt(format!("duplicate model id {id}")));
+        }
+    }
+    Ok(Some(entries))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::{testdir, RealDisk};
+
+    fn entries() -> BTreeMap<u64, ManifestEntry> {
+        let mut m = BTreeMap::new();
+        m.insert(1, ManifestEntry { name: "alpha".into(), base_seed: 11, ckpt_seq: 64 });
+        m.insert(2, ManifestEntry { name: "beta".into(), base_seed: 22, ckpt_seq: 0 });
+        m
+    }
+
+    #[test]
+    fn ckpt_names_round_trip_and_sort() {
+        assert_eq!(parse_ckpt_name(&ckpt_file_name(3, 128)), Some((3, 128)));
+        assert_eq!(parse_ckpt_name("m00000003-x.tmfs"), None);
+        assert_eq!(parse_ckpt_name("seg-00000000000000000000.wal"), None);
+        // Zero-padding makes lexical order = numeric order.
+        assert!(ckpt_file_name(1, 9) < ckpt_file_name(1, 10));
+    }
+
+    #[test]
+    fn manifest_round_trips() {
+        let dir = testdir("manifest_rt");
+        let mut disk = RealDisk;
+        disk.create_dir_all(&dir).unwrap();
+        assert_eq!(load_manifest(&mut disk, &dir).unwrap(), None);
+        let want = entries();
+        write_manifest(&mut disk, &dir, &want).unwrap();
+        assert_eq!(load_manifest(&mut disk, &dir).unwrap(), Some(want));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn manifest_every_bit_flip_is_detected() {
+        let dir = testdir("manifest_flip");
+        let mut disk = RealDisk;
+        disk.create_dir_all(&dir).unwrap();
+        write_manifest(&mut disk, &dir, &entries()).unwrap();
+        let path = dir.join(MANIFEST_NAME);
+        let clean = std::fs::read(&path).unwrap();
+        for byte in 0..clean.len() {
+            for bit in 0..8 {
+                let mut bad = clean.clone();
+                bad[byte] ^= 1 << bit;
+                std::fs::write(&path, &bad).unwrap();
+                match load_manifest(&mut disk, &dir) {
+                    Err(StoreError::CorruptManifest { .. }) => {}
+                    other => panic!("byte {byte} bit {bit}: accepted, got {other:?}"),
+                }
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn retire_keeps_newest() {
+        let dir = testdir("ckpt_retire");
+        let mut disk = RealDisk;
+        disk.create_dir_all(&dir).unwrap();
+        for seq in [8u64, 16, 24, 32] {
+            disk.write_atomic(&dir.join(ckpt_file_name(1, seq)), b"x").unwrap();
+        }
+        let mut files = scan(&mut disk, &dir).unwrap().remove(&1).unwrap();
+        assert_eq!(files.iter().map(|&(s, _)| s).collect::<Vec<_>>(), [8, 16, 24, 32]);
+        assert_eq!(retire(&mut disk, &mut files, 2).unwrap(), 2);
+        assert_eq!(files.iter().map(|&(s, _)| s).collect::<Vec<_>>(), [24, 32]);
+        let rescan = scan(&mut disk, &dir).unwrap().remove(&1).unwrap();
+        assert_eq!(rescan.iter().map(|&(s, _)| s).collect::<Vec<_>>(), [24, 32]);
+        // keep is clamped to ≥1: the newest survives any request.
+        assert_eq!(retire(&mut disk, &mut files, 0).unwrap(), 1);
+        assert_eq!(files.len(), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

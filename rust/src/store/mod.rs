@@ -1,0 +1,1131 @@
+//! Durable serving state: a write-ahead log + on-disk checkpoint store
+//! that make a `tmfpga serve` process crash-consistent.
+//!
+//! The paper's premise — training interleaved with inference *in the
+//! field* — is only credible if a power cut doesn't erase everything
+//! learned since deployment (the FPGA analogue: persisting TA state
+//! off-chip across reconfiguration). This module is that persistence:
+//!
+//! - [`wal`]: one hub-wide segmented write-ahead log. Every model
+//!   creation (with its genesis snapshot embedded) and every sequenced
+//!   update is appended *before* it is applied in memory, under a
+//!   configurable [`SyncPolicy`]. Torn tails are truncated on open;
+//!   interior damage is a typed error (see `wal.rs` for why those are
+//!   cleanly distinguishable).
+//! - [`ckpt`]: durable TMFS v2 checkpoints, published atomically
+//!   (temp → fsync → rename), plus the CRC-tailed `MANIFEST` mapping
+//!   model id → (name, base_seed, newest checkpoint seq).
+//! - [`Store`]: the composition. `open` rebuilds the full multi-tenant
+//!   picture — manifest ∪ checkpoint files ∪ WAL — repairing what a
+//!   crash window can legally leave behind (stale manifest, missing
+//!   genesis checkpoint, torn tail) with exact counter accounting, and
+//!   failing **typed** on anything real damage can produce. Replay of
+//!   the returned per-model log suffix through the keyed
+//!   `(base_seed, seq)` update path is bit-identical to a process that
+//!   never crashed.
+//!
+//! All disk access goes through the [`Disk`] trait so the chaos
+//! harness can wrap a [`FaultDisk`] around the real filesystem and
+//! inject a crash, `ENOSPC`, or a short write at any chosen write
+//! boundary. After any failed write the store is **poisoned**: every
+//! later operation fails typed rather than risking a log whose
+//! physical tail no longer matches the writer's bookkeeping
+//! (fail-stop, the same stance the shard supervisor takes).
+//!
+//! Durability model: the crash soak kills the *process*, which on any
+//! OS keeps completed `write`s in the page cache, so replay after a
+//! kill sees every appended byte regardless of sync policy. The sync
+//! policy governs the stronger power-loss story: `Always` bounds loss
+//! to the in-flight record, `EveryN(n)` to the last `n`, `OnDemand` to
+//! the last explicit flush (the front end flushes on drain).
+
+pub mod ckpt;
+pub mod wal;
+
+pub use ckpt::{ManifestEntry, MANIFEST_NAME};
+pub use wal::{Wal, WalOp, WalRecord, WalStats};
+
+use crate::serve::checkpoint;
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Typed storage failures. Every disk-fault kind the chaos harness can
+/// inject (and every kind real damage can produce) surfaces as one of
+/// these — never a silent wrong answer, never a panic.
+#[derive(Debug)]
+pub enum StoreError {
+    Io { op: &'static str, path: PathBuf, source: std::io::Error },
+    /// Out of disk space (real `ENOSPC` or injected).
+    NoSpace { path: PathBuf },
+    /// A write persisted fewer bytes than requested (injected; real
+    /// short writes surface as `Io` from `write_all`).
+    ShortWrite { path: PathBuf, wrote: usize, want: usize },
+    /// Injected process death at a write boundary ([`FaultDisk`]).
+    Crashed { op_index: u64 },
+    /// A previous write failed; the store refuses further operations.
+    Poisoned,
+    /// A complete WAL frame whose CRC or payload decoding fails: bit
+    /// corruption inside the log (a torn tail is repaired, not this).
+    CorruptRecord { segment: PathBuf, offset: u64, detail: String },
+    /// The WAL segment chain has a gap: a segment named for this
+    /// position should exist and doesn't (or is empty mid-chain).
+    MissingSegment { expected_pos: u64, found: PathBuf },
+    CorruptManifest { detail: String },
+    /// A checkpoint that should be loadable isn't, with no fallback.
+    CorruptCheckpoint { path: PathBuf, detail: String },
+    /// No durable checkpoint (nor WAL genesis) can rebuild this model.
+    NoUsableCheckpoint { model_id: u64 },
+    /// The WAL's update suffix doesn't join up with the checkpoint:
+    /// replay needs seq `have + 1`, the log resumes at `found`.
+    SeqGap { model_id: u64, have: u64, found: u64 },
+    UnknownModel { model_id: u64 },
+    DuplicateModel { model_id: u64 },
+    BadName { name: String },
+    BadConfig { detail: String },
+}
+
+impl std::fmt::Display for StoreError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StoreError::Io { op, path, source } => {
+                write!(f, "store: {op} {}: {source}", path.display())
+            }
+            StoreError::NoSpace { path } => {
+                write!(f, "store: no space writing {}", path.display())
+            }
+            StoreError::ShortWrite { path, wrote, want } => {
+                write!(f, "store: short write to {} ({wrote}/{want} bytes)", path.display())
+            }
+            StoreError::Crashed { op_index } => {
+                write!(f, "store: injected crash at write boundary {op_index}")
+            }
+            StoreError::Poisoned => {
+                write!(f, "store: poisoned by an earlier write failure")
+            }
+            StoreError::CorruptRecord { segment, offset, detail } => {
+                write!(
+                    f,
+                    "store: corrupt WAL record in {} at offset {offset}: {detail}",
+                    segment.display()
+                )
+            }
+            StoreError::MissingSegment { expected_pos, found } => {
+                write!(
+                    f,
+                    "store: WAL gap: expected segment starting at position {expected_pos}, \
+                     found {}",
+                    found.display()
+                )
+            }
+            StoreError::CorruptManifest { detail } => {
+                write!(f, "store: corrupt manifest: {detail}")
+            }
+            StoreError::CorruptCheckpoint { path, detail } => {
+                write!(f, "store: corrupt checkpoint {}: {detail}", path.display())
+            }
+            StoreError::NoUsableCheckpoint { model_id } => {
+                write!(f, "store: model {model_id}: no usable checkpoint or WAL genesis")
+            }
+            StoreError::SeqGap { model_id, have, found } => {
+                write!(
+                    f,
+                    "store: model {model_id}: WAL gap after seq {have} (log resumes at {found})"
+                )
+            }
+            StoreError::UnknownModel { model_id } => {
+                write!(f, "store: unknown model id {model_id}")
+            }
+            StoreError::DuplicateModel { model_id } => {
+                write!(f, "store: duplicate model id {model_id}")
+            }
+            StoreError::BadName { name } => write!(f, "store: invalid model name {name:?}"),
+            StoreError::BadConfig { detail } => write!(f, "store: bad config: {detail}"),
+        }
+    }
+}
+
+impl std::error::Error for StoreError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            StoreError::Io { source, .. } => Some(source),
+            _ => None,
+        }
+    }
+}
+
+/// When WAL appends reach stable storage.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SyncPolicy {
+    /// fsync after every append: power loss loses at most the
+    /// in-flight record.
+    Always,
+    /// fsync every `n` appends (and on rotation/drain).
+    EveryN(u64),
+    /// fsync only on explicit [`Store::sync`] (drain, shutdown).
+    OnDemand,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StoreConfig {
+    /// Rotate the WAL to a fresh segment once the tail reaches this
+    /// size (records never span segments; a segment may exceed this by
+    /// one record).
+    pub segment_bytes: u64,
+    pub sync_policy: SyncPolicy,
+    /// Durable checkpoints retained per model (newest-first), ≥ 1.
+    pub retained_ckpts: usize,
+}
+
+impl Default for StoreConfig {
+    fn default() -> Self {
+        StoreConfig {
+            segment_bytes: 64 * 1024,
+            sync_policy: SyncPolicy::Always,
+            retained_ckpts: 2,
+        }
+    }
+}
+
+impl StoreConfig {
+    pub fn validate(&self) -> Result<(), StoreError> {
+        if self.segment_bytes == 0 {
+            return Err(StoreError::BadConfig { detail: "segment_bytes must be ≥ 1".into() });
+        }
+        if self.retained_ckpts == 0 {
+            return Err(StoreError::BadConfig { detail: "retained_ckpts must be ≥ 1".into() });
+        }
+        if let SyncPolicy::EveryN(0) = self.sync_policy {
+            return Err(StoreError::BadConfig { detail: "EveryN sync period must be ≥ 1".into() });
+        }
+        Ok(())
+    }
+}
+
+/// Filesystem access boundary. Everything the store does to disk goes
+/// through one of these, so [`FaultDisk`] can interpose faults at
+/// exactly the write boundaries the crash matrix enumerates.
+pub trait Disk: Send {
+    fn create_dir_all(&mut self, path: &Path) -> Result<(), StoreError>;
+    /// All entries of `dir`, sorted, files only.
+    fn list(&mut self, dir: &Path) -> Result<Vec<PathBuf>, StoreError>;
+    fn read(&mut self, path: &Path) -> Result<Vec<u8>, StoreError>;
+    /// Append bytes to `path`, creating it if absent.
+    fn append(&mut self, path: &Path, bytes: &[u8]) -> Result<(), StoreError>;
+    /// Publish `bytes` at `path` atomically: temp sibling → fsync →
+    /// rename → directory fsync. Readers see the old file or the new
+    /// file, never a prefix.
+    fn write_atomic(&mut self, path: &Path, bytes: &[u8]) -> Result<(), StoreError>;
+    fn truncate(&mut self, path: &Path, len: u64) -> Result<(), StoreError>;
+    fn remove(&mut self, path: &Path) -> Result<(), StoreError>;
+    fn sync(&mut self, path: &Path) -> Result<(), StoreError>;
+    fn exists(&mut self, path: &Path) -> Result<bool, StoreError>;
+}
+
+fn io_err(op: &'static str, path: &Path, e: std::io::Error) -> StoreError {
+    if e.kind() == std::io::ErrorKind::StorageFull {
+        StoreError::NoSpace { path: path.to_path_buf() }
+    } else {
+        StoreError::Io { op, path: path.to_path_buf(), source: e }
+    }
+}
+
+/// The real filesystem.
+#[derive(Debug, Default)]
+pub struct RealDisk;
+
+impl Disk for RealDisk {
+    fn create_dir_all(&mut self, path: &Path) -> Result<(), StoreError> {
+        std::fs::create_dir_all(path).map_err(|e| io_err("create_dir_all", path, e))
+    }
+
+    fn list(&mut self, dir: &Path) -> Result<Vec<PathBuf>, StoreError> {
+        let rd = std::fs::read_dir(dir).map_err(|e| io_err("read_dir", dir, e))?;
+        let mut out = Vec::new();
+        for entry in rd {
+            let entry = entry.map_err(|e| io_err("read_dir", dir, e))?;
+            let ft = entry.file_type().map_err(|e| io_err("file_type", dir, e))?;
+            if ft.is_file() {
+                out.push(entry.path());
+            }
+        }
+        out.sort();
+        Ok(out)
+    }
+
+    fn read(&mut self, path: &Path) -> Result<Vec<u8>, StoreError> {
+        std::fs::read(path).map_err(|e| io_err("read", path, e))
+    }
+
+    fn append(&mut self, path: &Path, bytes: &[u8]) -> Result<(), StoreError> {
+        let mut f = std::fs::OpenOptions::new()
+            .append(true)
+            .create(true)
+            .open(path)
+            .map_err(|e| io_err("open append", path, e))?;
+        f.write_all(bytes).map_err(|e| io_err("append", path, e))
+    }
+
+    fn write_atomic(&mut self, path: &Path, bytes: &[u8]) -> Result<(), StoreError> {
+        let mut tmp = path.as_os_str().to_os_string();
+        tmp.push(".tmp");
+        let tmp = PathBuf::from(tmp);
+        let mut f =
+            std::fs::File::create(&tmp).map_err(|e| io_err("create temp", &tmp, e))?;
+        f.write_all(bytes).map_err(|e| io_err("write temp", &tmp, e))?;
+        f.sync_all().map_err(|e| io_err("sync temp", &tmp, e))?;
+        drop(f);
+        std::fs::rename(&tmp, path).map_err(|e| io_err("rename", path, e))?;
+        // Make the rename itself durable.
+        if let Some(dir) = path.parent() {
+            std::fs::File::open(dir)
+                .and_then(|d| d.sync_all())
+                .map_err(|e| io_err("sync dir", dir, e))?;
+        }
+        Ok(())
+    }
+
+    fn truncate(&mut self, path: &Path, len: u64) -> Result<(), StoreError> {
+        let f = std::fs::OpenOptions::new()
+            .write(true)
+            .open(path)
+            .map_err(|e| io_err("open truncate", path, e))?;
+        f.set_len(len).map_err(|e| io_err("truncate", path, e))?;
+        f.sync_all().map_err(|e| io_err("sync truncate", path, e))
+    }
+
+    fn remove(&mut self, path: &Path) -> Result<(), StoreError> {
+        std::fs::remove_file(path).map_err(|e| io_err("remove", path, e))
+    }
+
+    fn sync(&mut self, path: &Path) -> Result<(), StoreError> {
+        std::fs::File::open(path)
+            .and_then(|f| f.sync_all())
+            .map_err(|e| io_err("sync", path, e))
+    }
+
+    fn exists(&mut self, path: &Path) -> Result<bool, StoreError> {
+        Ok(path.exists())
+    }
+}
+
+/// What an injected fault does at its write boundary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Process death: an append persists a *prefix* of the frame (the
+    /// torn tail the WAL must repair), an atomic publish persists
+    /// nothing, and every subsequent operation keeps failing.
+    Crash,
+    /// `ENOSPC`: nothing is persisted; the one operation fails typed.
+    Enospc,
+    /// A partial append that *returns an error* (the caller knows);
+    /// the on-disk tail is torn exactly as in a crash.
+    ShortWrite,
+}
+
+/// Fire `kind` at the `fail_at_op`-th write boundary (1-based; write
+/// boundaries are WAL appends and atomic publishes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub fail_at_op: u64,
+    pub kind: FaultKind,
+}
+
+/// [`Disk`] wrapper injecting storage faults at exact write
+/// boundaries; the shared counter lets a driver first measure how many
+/// boundaries a clean run crosses, then sweep `fail_at_op` over all of
+/// them.
+pub struct FaultDisk {
+    inner: RealDisk,
+    plan: Option<FaultPlan>,
+    ops: Arc<AtomicU64>,
+    crashed: bool,
+}
+
+impl FaultDisk {
+    pub fn new(plan: Option<FaultPlan>) -> Self {
+        FaultDisk { inner: RealDisk, plan, ops: Arc::new(AtomicU64::new(0)), crashed: false }
+    }
+
+    /// Live count of write boundaries crossed (appends + publishes).
+    pub fn op_counter(&self) -> Arc<AtomicU64> {
+        Arc::clone(&self.ops)
+    }
+
+    /// Returns the fault to fire for this write boundary, if any.
+    fn arm(&mut self) -> Option<FaultKind> {
+        let op = self.ops.fetch_add(1, Ordering::Relaxed) + 1;
+        if self.crashed {
+            return Some(FaultKind::Crash);
+        }
+        match self.plan {
+            Some(p) if p.fail_at_op == op => {
+                if p.kind == FaultKind::Crash {
+                    self.crashed = true;
+                }
+                Some(p.kind)
+            }
+            _ => None,
+        }
+    }
+
+    fn op_index(&self) -> u64 {
+        self.ops.load(Ordering::Relaxed)
+    }
+}
+
+impl Disk for FaultDisk {
+    fn create_dir_all(&mut self, path: &Path) -> Result<(), StoreError> {
+        self.inner.create_dir_all(path)
+    }
+
+    fn list(&mut self, dir: &Path) -> Result<Vec<PathBuf>, StoreError> {
+        self.inner.list(dir)
+    }
+
+    fn read(&mut self, path: &Path) -> Result<Vec<u8>, StoreError> {
+        self.inner.read(path)
+    }
+
+    fn append(&mut self, path: &Path, bytes: &[u8]) -> Result<(), StoreError> {
+        match self.arm() {
+            None => self.inner.append(path, bytes),
+            Some(FaultKind::Crash) => {
+                // Dying mid-write leaves a prefix on disk: the torn tail.
+                self.inner.append(path, &bytes[..bytes.len() / 2])?;
+                Err(StoreError::Crashed { op_index: self.op_index() })
+            }
+            Some(FaultKind::Enospc) => Err(StoreError::NoSpace { path: path.to_path_buf() }),
+            Some(FaultKind::ShortWrite) => {
+                let wrote = bytes.len() / 2;
+                self.inner.append(path, &bytes[..wrote])?;
+                Err(StoreError::ShortWrite { path: path.to_path_buf(), wrote, want: bytes.len() })
+            }
+        }
+    }
+
+    fn write_atomic(&mut self, path: &Path, bytes: &[u8]) -> Result<(), StoreError> {
+        match self.arm() {
+            None => self.inner.write_atomic(path, bytes),
+            // Atomic publication means a fault before the rename
+            // publishes nothing, whatever the kind.
+            Some(FaultKind::Crash) => Err(StoreError::Crashed { op_index: self.op_index() }),
+            Some(FaultKind::Enospc) => Err(StoreError::NoSpace { path: path.to_path_buf() }),
+            Some(FaultKind::ShortWrite) => {
+                Err(StoreError::ShortWrite { path: path.to_path_buf(), wrote: 0, want: bytes.len() })
+            }
+        }
+    }
+
+    fn truncate(&mut self, path: &Path, len: u64) -> Result<(), StoreError> {
+        if self.crashed {
+            return Err(StoreError::Crashed { op_index: self.op_index() });
+        }
+        self.inner.truncate(path, len)
+    }
+
+    fn remove(&mut self, path: &Path) -> Result<(), StoreError> {
+        if self.crashed {
+            return Err(StoreError::Crashed { op_index: self.op_index() });
+        }
+        self.inner.remove(path)
+    }
+
+    fn sync(&mut self, path: &Path) -> Result<(), StoreError> {
+        if self.crashed {
+            return Err(StoreError::Crashed { op_index: self.op_index() });
+        }
+        self.inner.sync(path)
+    }
+
+    fn exists(&mut self, path: &Path) -> Result<bool, StoreError> {
+        self.inner.exists(path)
+    }
+}
+
+/// Exact accounting of everything `Store::open` observed and repaired.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct RecoveryReport {
+    pub wal_segments_scanned: u64,
+    pub torn_tails_truncated: u64,
+    pub wal_records_replayed: u64,
+    /// Checkpoint files skipped because they failed verification (or
+    /// couldn't be read); an older file or the WAL genesis stood in.
+    pub corrupt_checkpoints_rejected: u64,
+    /// Manifest rows that disagreed with the recovered truth (missing
+    /// model, wrong newest-checkpoint seq) — repaired and rewritten.
+    pub stale_manifest_entries: u64,
+    /// Whole manifests rejected (corrupt/unreadable) and rebuilt from
+    /// checkpoint files + WAL.
+    pub manifests_rejected: u64,
+    pub orphan_temps_removed: u64,
+    pub models_recovered: u64,
+}
+
+/// Lifetime write counters.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct StoreStats {
+    pub wal: WalStats,
+    pub ckpts_published: u64,
+    pub ckpts_retired: u64,
+}
+
+/// One model as rebuilt from disk: its newest durable snapshot plus
+/// the WAL suffix (`seq > ckpt_seq`, contiguous) to replay on top.
+#[derive(Debug, Clone)]
+pub struct RecoveredModel {
+    pub id: u64,
+    pub name: String,
+    pub base_seed: u64,
+    pub ckpt_seq: u64,
+    /// TMFS v2 bytes (already `quick_check`ed; the hub still runs the
+    /// full paranoid restore before trusting them).
+    pub ckpt_bytes: Vec<u8>,
+    pub ops: Vec<(u64, WalOp)>,
+}
+
+fn valid_model_name(name: &str) -> bool {
+    !name.is_empty()
+        && name.len() <= 64
+        && name
+            .bytes()
+            .all(|b| b.is_ascii_alphanumeric() || matches!(b, b'-' | b'_' | b'.'))
+}
+
+/// The durable store: WAL + checkpoints + manifest behind one façade.
+pub struct Store {
+    disk: Box<dyn Disk>,
+    root: PathBuf,
+    ckpt_dir: PathBuf,
+    cfg: StoreConfig,
+    wal: Wal,
+    manifest: BTreeMap<u64, ManifestEntry>,
+    /// Per model: checkpoint files on disk, `(seq, path)` ascending.
+    ckpt_files: BTreeMap<u64, Vec<(u64, PathBuf)>>,
+    /// Per model: oldest WAL position still needed for replay.
+    floors: BTreeMap<u64, u64>,
+    report: RecoveryReport,
+    stats: StoreStats,
+    poisoned: bool,
+}
+
+impl Store {
+    /// Open (or initialise) the store at `root`, rebuilding every
+    /// model recorded on disk. See the module docs for the recovery
+    /// semantics; the returned models' checkpoints have passed framing
+    /// verification and their log suffixes are contiguous.
+    pub fn open(
+        mut disk: Box<dyn Disk>,
+        root: &Path,
+        cfg: StoreConfig,
+    ) -> Result<(Store, Vec<RecoveredModel>), StoreError> {
+        cfg.validate()?;
+        let ckpt_dir = root.join("ckpt");
+        let wal_dir = root.join("wal");
+        disk.create_dir_all(root)?;
+        disk.create_dir_all(&ckpt_dir)?;
+        let mut report = RecoveryReport::default();
+
+        // Sweep orphan temp files from interrupted atomic publishes.
+        for dir in [root, &ckpt_dir] {
+            for path in disk.list(dir)? {
+                if path.extension().is_some_and(|e| e == "tmp") {
+                    disk.remove(&path)?;
+                    report.orphan_temps_removed += 1;
+                }
+            }
+        }
+
+        // The manifest is advisory: a corrupt one is rejected (counted)
+        // and rebuilt below, as long as checkpoints + WAL carry enough.
+        let manifest_on_disk = match ckpt::load_manifest(disk.as_mut(), root) {
+            Ok(m) => m,
+            Err(StoreError::CorruptManifest { .. }) => {
+                report.manifests_rejected += 1;
+                None
+            }
+            Err(e) => return Err(e),
+        };
+        let mut manifest = manifest_on_disk.clone().unwrap_or_default();
+
+        let mut ckpt_files = ckpt::scan(disk.as_mut(), &ckpt_dir)?;
+        let (mut wal, wal_records, wal_rep) =
+            Wal::open(disk.as_mut(), &wal_dir, cfg.segment_bytes, cfg.sync_policy)?;
+        report.wal_segments_scanned = wal_rep.segments_scanned;
+        report.torn_tails_truncated = wal_rep.torn_tails_truncated;
+
+        // Index the log: creations (identity + genesis) and updates.
+        let mut creates: BTreeMap<u64, (u64, String, Vec<u8>)> = BTreeMap::new();
+        let mut updates: BTreeMap<u64, Vec<(u64, u64, WalOp)>> = BTreeMap::new();
+        for (pos, rec) in wal_records {
+            match rec {
+                WalRecord::Create { model_id, base_seed, name, genesis } => {
+                    if creates.insert(model_id, (base_seed, name, genesis)).is_some() {
+                        return Err(StoreError::DuplicateModel { model_id });
+                    }
+                }
+                WalRecord::Update { model_id, seq, op } => {
+                    updates.entry(model_id).or_default().push((pos, seq, op));
+                }
+            }
+        }
+
+        let mut ids: Vec<u64> = manifest.keys().copied().collect();
+        ids.extend(creates.keys().copied());
+        ids.extend(ckpt_files.keys().copied());
+        ids.sort_unstable();
+        ids.dedup();
+
+        let mut recovered = Vec::new();
+        let mut floors = BTreeMap::new();
+        let mut stats = StoreStats::default();
+        for id in ids {
+            // Identity: manifest row, else the WAL Create record. Both
+            // present must agree — a mismatch means cross-wired files.
+            let created = creates.get(&id);
+            let (name, base_seed) = match (manifest.get(&id), created) {
+                (Some(e), Some((seed, name, _))) => {
+                    if e.name != *name || e.base_seed != *seed {
+                        return Err(StoreError::CorruptManifest {
+                            detail: format!(
+                                "model {id}: manifest identity ({}, {}) disagrees with \
+                                 WAL Create ({name}, {seed})",
+                                e.name, e.base_seed
+                            ),
+                        });
+                    }
+                    (name.clone(), *seed)
+                }
+                (Some(e), None) => (e.name.clone(), e.base_seed),
+                (None, Some((seed, name, _))) => (name.clone(), *seed),
+                (None, None) => return Err(StoreError::UnknownModel { model_id: id }),
+            };
+
+            // Newest checkpoint file that verifies; older ones stand in
+            // for damaged newer ones (counted).
+            let mut chosen: Option<(u64, Vec<u8>)> = None;
+            for (seq, path) in ckpt_files.get(&id).map(|v| v.as_slice()).unwrap_or(&[]).iter().rev()
+            {
+                match disk.read(path) {
+                    Ok(bytes) if checkpoint::quick_check(&bytes) == Some(*seq) => {
+                        chosen = Some((*seq, bytes));
+                        break;
+                    }
+                    _ => report.corrupt_checkpoints_rejected += 1,
+                }
+            }
+            // Last resort: the genesis snapshot embedded in the WAL.
+            let mut publish_genesis = false;
+            let (ckpt_seq, ckpt_bytes) = match chosen {
+                Some(c) => c,
+                None => match created {
+                    Some((_, _, genesis)) => match checkpoint::quick_check(genesis) {
+                        Some(gseq) => {
+                            publish_genesis = true;
+                            (gseq, genesis.clone())
+                        }
+                        None => return Err(StoreError::NoUsableCheckpoint { model_id: id }),
+                    },
+                    None => return Err(StoreError::NoUsableCheckpoint { model_id: id }),
+                },
+            };
+
+            // Manifest row must name this exact checkpoint; anything
+            // else is the publication/rewrite crash window (or damage)
+            // — counted, repaired below.
+            match manifest.get(&id) {
+                Some(e) if e.ckpt_seq == ckpt_seq => {}
+                _ => report.stale_manifest_entries += 1,
+            }
+            manifest.insert(
+                id,
+                ManifestEntry { name: name.clone(), base_seed, ckpt_seq },
+            );
+
+            // Replayable suffix: contiguous seqs strictly above the
+            // checkpoint. Earlier records are the normal overlap;
+            // a hole means retention outran a (damaged) checkpoint.
+            let mut ops = Vec::new();
+            let mut floor_pos = None;
+            let mut have = ckpt_seq;
+            for (pos, seq, op) in updates.remove(&id).unwrap_or_default() {
+                if seq <= ckpt_seq {
+                    continue;
+                }
+                if seq != have + 1 {
+                    return Err(StoreError::SeqGap { model_id: id, have, found: seq });
+                }
+                have = seq;
+                floor_pos.get_or_insert(pos);
+                ops.push((seq, op));
+            }
+            report.wal_records_replayed += ops.len() as u64;
+            report.models_recovered += 1;
+
+            if publish_genesis {
+                // Crash window between WAL Create and checkpoint
+                // publication: finish the job so the Create record can
+                // be retired.
+                let path = ckpt_dir.join(ckpt::ckpt_file_name(id, ckpt_seq));
+                disk.write_atomic(&path, &ckpt_bytes)?;
+                let files = ckpt_files.entry(id).or_default();
+                files.push((ckpt_seq, path));
+                files.sort_by_key(|&(s, _)| s);
+                stats.ckpts_published += 1;
+            }
+
+            floors.insert(id, floor_pos.unwrap_or(wal.next_pos()));
+            recovered.push(RecoveredModel {
+                id,
+                name,
+                base_seed,
+                ckpt_seq,
+                ckpt_bytes,
+                ops,
+            });
+        }
+
+        // Updates for a model with no identity anywhere: real damage.
+        if let Some((&id, _)) = updates.iter().next() {
+            return Err(StoreError::UnknownModel { model_id: id });
+        }
+
+        // Repair the manifest durably before any retention could erase
+        // the WAL records that made the repair possible.
+        if manifest_on_disk.as_ref() != Some(&manifest) {
+            ckpt::write_manifest(disk.as_mut(), root, &manifest)?;
+        }
+
+        let mut store = Store {
+            disk,
+            root: root.to_path_buf(),
+            ckpt_dir,
+            cfg,
+            wal,
+            manifest,
+            ckpt_files,
+            floors,
+            report,
+            stats,
+            poisoned: false,
+        };
+        store.run_retention()?;
+        Ok((store, recovered))
+    }
+
+    pub fn report(&self) -> &RecoveryReport {
+        &self.report
+    }
+
+    pub fn stats(&self) -> StoreStats {
+        StoreStats { wal: self.wal.stats(), ..self.stats }
+    }
+
+    pub fn manifest(&self) -> &BTreeMap<u64, ManifestEntry> {
+        &self.manifest
+    }
+
+    pub fn wal_next_pos(&self) -> u64 {
+        self.wal.next_pos()
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    fn guard(&self) -> Result<(), StoreError> {
+        if self.poisoned {
+            return Err(StoreError::Poisoned);
+        }
+        Ok(())
+    }
+
+    fn poison_on_err<T>(&mut self, r: Result<T, StoreError>) -> Result<T, StoreError> {
+        if r.is_err() {
+            self.poisoned = true;
+        }
+        r
+    }
+
+    /// Record a model's birth: the Create record (carrying the genesis
+    /// snapshot) is appended to the WAL first — the durable source of
+    /// truth — then the genesis checkpoint and manifest row are
+    /// published. A crash between those steps is exactly the window
+    /// `open` repairs.
+    pub fn log_create(
+        &mut self,
+        model_id: u64,
+        name: &str,
+        base_seed: u64,
+        genesis: &[u8],
+    ) -> Result<(), StoreError> {
+        self.guard()?;
+        if !valid_model_name(name) {
+            return Err(StoreError::BadName { name: name.to_string() });
+        }
+        if self.manifest.contains_key(&model_id) {
+            return Err(StoreError::DuplicateModel { model_id });
+        }
+        let Some(genesis_seq) = checkpoint::quick_check(genesis) else {
+            return Err(StoreError::CorruptCheckpoint {
+                path: PathBuf::from("<genesis>"),
+                detail: "genesis bytes fail TMFS verification".into(),
+            });
+        };
+        let rec = WalRecord::Create {
+            model_id,
+            base_seed,
+            name: name.to_string(),
+            genesis: genesis.to_vec(),
+        };
+        let r = self.wal.append(self.disk.as_mut(), &rec);
+        let pos = self.poison_on_err(r)?;
+        self.floors.insert(model_id, pos);
+        self.manifest.insert(
+            model_id,
+            ManifestEntry { name: name.to_string(), base_seed, ckpt_seq: genesis_seq },
+        );
+        self.publish_checkpoint(model_id, genesis_seq, genesis)
+    }
+
+    /// Append one sequenced update. Must be called **before** the
+    /// update is applied in memory (write-ahead): an error here means
+    /// the update is not durable and must not take effect.
+    pub fn log_update(
+        &mut self,
+        model_id: u64,
+        seq: u64,
+        op: &WalOp,
+    ) -> Result<(), StoreError> {
+        self.guard()?;
+        if !self.manifest.contains_key(&model_id) {
+            return Err(StoreError::UnknownModel { model_id });
+        }
+        let rec = WalRecord::Update { model_id, seq, op: op.clone() };
+        let r = self.wal.append(self.disk.as_mut(), &rec);
+        self.poison_on_err(r)?;
+        Ok(())
+    }
+
+    /// Publish a durable snapshot for `model_id` at `seq`, refresh the
+    /// manifest, and let retention retire checkpoints and whole WAL
+    /// segments nothing needs any more.
+    pub fn publish_checkpoint(
+        &mut self,
+        model_id: u64,
+        seq: u64,
+        bytes: &[u8],
+    ) -> Result<(), StoreError> {
+        self.guard()?;
+        let Some(entry) = self.manifest.get(&model_id).cloned() else {
+            return Err(StoreError::UnknownModel { model_id });
+        };
+        let path = self.ckpt_dir.join(ckpt::ckpt_file_name(model_id, seq));
+        if checkpoint::quick_check(bytes) != Some(seq) {
+            return Err(StoreError::CorruptCheckpoint {
+                path,
+                detail: format!("bytes fail TMFS verification for seq {seq}"),
+            });
+        }
+        let already = self
+            .ckpt_files
+            .get(&model_id)
+            .is_some_and(|files| files.last().is_some_and(|&(s, _)| s == seq));
+        let mut changed = false;
+        if !already {
+            let r = self.disk.write_atomic(&path, bytes);
+            self.poison_on_err(r)?;
+            let files = self.ckpt_files.entry(model_id).or_default();
+            files.push((seq, path));
+            files.sort_by_key(|&(s, _)| s);
+            self.stats.ckpts_published += 1;
+            changed = true;
+        }
+        if entry.ckpt_seq != seq {
+            self.manifest.get_mut(&model_id).expect("entry checked above").ckpt_seq = seq;
+            changed = true;
+        }
+        if changed {
+            // Durable even when only the file is new (the create path
+            // pre-seeds the in-memory row before calling here): the
+            // manifest on disk must always name a checkpoint that
+            // exists.
+            let r = ckpt::write_manifest(self.disk.as_mut(), &self.root, &self.manifest);
+            self.poison_on_err(r)?;
+        }
+        // Everything of this model at or below `seq` is now obsolete;
+        // records appended later than "now" are all > seq.
+        self.floors.insert(model_id, self.wal.next_pos());
+        self.run_retention()
+    }
+
+    /// Flush any WAL appends the sync policy has deferred.
+    pub fn sync(&mut self) -> Result<(), StoreError> {
+        self.guard()?;
+        let r = self.wal.sync(self.disk.as_mut());
+        self.poison_on_err(r)
+    }
+
+    fn run_retention(&mut self) -> Result<(), StoreError> {
+        for (_, files) in self.ckpt_files.iter_mut() {
+            let r = ckpt::retire(self.disk.as_mut(), files, self.cfg.retained_ckpts);
+            match r {
+                Ok(n) => self.stats.ckpts_retired += n,
+                Err(e) => {
+                    self.poisoned = true;
+                    return Err(e);
+                }
+            }
+        }
+        if let Some(&floor) = self.floors.values().min() {
+            let r = self.wal.retain_from(self.disk.as_mut(), floor);
+            self.poison_on_err(r)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+pub(crate) fn testdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("tmfpga_store_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::checkpoint::snapshot_bytes;
+    use crate::tm::machine::MultiTm;
+    use crate::tm::params::{TmParams, TmShape};
+
+    fn genesis(seq: u64) -> Vec<u8> {
+        let s = TmShape::iris();
+        let tm = MultiTm::new(&s).unwrap();
+        let p = TmParams::paper_online(&s);
+        snapshot_bytes(&tm, &p, seq)
+    }
+
+    fn learn_op(seq: u64) -> WalOp {
+        WalOp::Learn {
+            label: (seq % 3) as u32,
+            bits: (0..16).map(|k| (seq + k) % 2 == 0).collect(),
+        }
+    }
+
+    fn cfg() -> StoreConfig {
+        StoreConfig { segment_bytes: 512, ..StoreConfig::default() }
+    }
+
+    #[test]
+    fn create_update_publish_reopen_round_trips() {
+        let root = testdir("store_rt");
+        let g = genesis(0);
+        {
+            let (mut st, models) =
+                Store::open(Box::new(RealDisk), &root, cfg()).unwrap();
+            assert!(models.is_empty());
+            st.log_create(1, "alpha", 11, &g).unwrap();
+            st.log_create(2, "beta", 22, &g).unwrap();
+            for seq in 1..=9u64 {
+                st.log_update(1, seq, &learn_op(seq)).unwrap();
+            }
+            // Model 1 checkpoints at seq 8; records 1..=8 become stale.
+            let ck = genesis(8);
+            st.publish_checkpoint(1, 8, &ck).unwrap();
+            st.log_update(2, 1, &learn_op(1)).unwrap();
+        }
+        let (st, mut models) = Store::open(Box::new(RealDisk), &root, cfg()).unwrap();
+        models.sort_by_key(|m| m.id);
+        assert_eq!(models.len(), 2);
+        let a = &models[0];
+        assert_eq!((a.id, a.name.as_str(), a.base_seed, a.ckpt_seq), (1, "alpha", 11, 8));
+        assert_eq!(a.ops.iter().map(|&(s, _)| s).collect::<Vec<_>>(), [9]);
+        let b = &models[1];
+        assert_eq!((b.id, b.name.as_str(), b.base_seed, b.ckpt_seq), (2, "beta", 22, 0));
+        assert_eq!(b.ops.len(), 1);
+        assert_eq!(st.report().models_recovered, 2);
+        assert_eq!(st.report().wal_records_replayed, 2);
+        assert_eq!(st.report().torn_tails_truncated, 0);
+        assert_eq!(st.report().stale_manifest_entries, 0);
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn stale_manifest_is_detected_and_repaired() {
+        let root = testdir("store_stale");
+        let g = genesis(0);
+        {
+            let (mut st, _) = Store::open(Box::new(RealDisk), &root, cfg()).unwrap();
+            st.log_create(1, "alpha", 11, &g).unwrap();
+            for seq in 1..=4u64 {
+                st.log_update(1, seq, &learn_op(seq)).unwrap();
+            }
+            st.publish_checkpoint(1, 4, &genesis(4)).unwrap();
+        }
+        // Simulate the crash window: roll the manifest back to the
+        // genesis row while the seq-4 checkpoint file exists.
+        let mut disk = RealDisk;
+        let mut rolled = BTreeMap::new();
+        rolled.insert(1u64, ManifestEntry { name: "alpha".into(), base_seed: 11, ckpt_seq: 0 });
+        ckpt::write_manifest(&mut disk, &root, &rolled).unwrap();
+        let (st, models) = Store::open(Box::new(RealDisk), &root, cfg()).unwrap();
+        assert_eq!(models[0].ckpt_seq, 4, "must prefer the newest durable checkpoint");
+        assert_eq!(st.report().stale_manifest_entries, 1);
+        assert_eq!(st.manifest()[&1].ckpt_seq, 4, "manifest repaired");
+        // And the repair is durable.
+        let reread = ckpt::load_manifest(&mut disk, &root).unwrap().unwrap();
+        assert_eq!(reread[&1].ckpt_seq, 4);
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn corrupt_newest_checkpoint_falls_back_to_older() {
+        let root = testdir("store_fallback");
+        let g = genesis(0);
+        {
+            let (mut st, _) = Store::open(Box::new(RealDisk), &root, cfg()).unwrap();
+            st.log_create(1, "alpha", 11, &g).unwrap();
+            st.log_update(1, 1, &learn_op(1)).unwrap();
+            st.publish_checkpoint(1, 1, &genesis(1)).unwrap();
+            st.log_update(1, 2, &learn_op(2)).unwrap();
+            st.publish_checkpoint(1, 2, &genesis(2)).unwrap();
+            st.log_update(1, 3, &learn_op(3)).unwrap();
+        }
+        // Bit-flip the newest checkpoint file.
+        let newest = root.join("ckpt").join(ckpt::ckpt_file_name(1, 2));
+        let mut bytes = std::fs::read(&newest).unwrap();
+        bytes[40] ^= 0x01;
+        std::fs::write(&newest, &bytes).unwrap();
+        let (st, models) = Store::open(Box::new(RealDisk), &root, cfg()).unwrap();
+        assert_eq!(st.report().corrupt_checkpoints_rejected, 1);
+        assert_eq!(models[0].ckpt_seq, 1, "older checkpoint stands in");
+        // Replay resumes right after the older checkpoint: seqs 2, 3.
+        assert_eq!(models[0].ops.iter().map(|&(s, _)| s).collect::<Vec<_>>(), [2, 3]);
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn enospc_poisons_the_store_with_typed_errors() {
+        let root = testdir("store_enospc");
+        let g = genesis(0);
+        {
+            let (mut st, _) = Store::open(Box::new(RealDisk), &root, cfg()).unwrap();
+            st.log_create(1, "alpha", 11, &g).unwrap();
+            st.log_update(1, 1, &learn_op(1)).unwrap();
+        }
+        // Boundary 1 of the reopened store's first append fails ENOSPC.
+        let disk = FaultDisk::new(Some(FaultPlan { fail_at_op: 1, kind: FaultKind::Enospc }));
+        let (mut st, _) = Store::open(Box::new(disk), &root, cfg()).unwrap();
+        match st.log_update(1, 2, &learn_op(2)) {
+            Err(StoreError::NoSpace { .. }) => {}
+            other => panic!("want NoSpace, got {other:?}"),
+        }
+        match st.log_update(1, 2, &learn_op(2)) {
+            Err(StoreError::Poisoned) => {}
+            other => panic!("want Poisoned, got {other:?}"),
+        }
+        // Nothing was persisted: a clean reopen sees exactly seq 1.
+        let (_, models) = Store::open(Box::new(RealDisk), &root, cfg()).unwrap();
+        assert_eq!(models[0].ops.iter().map(|&(s, _)| s).collect::<Vec<_>>(), [1]);
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn crash_mid_append_leaves_a_repairable_torn_tail() {
+        let root = testdir("store_crash");
+        let g = genesis(0);
+        {
+            let (mut st, _) = Store::open(Box::new(RealDisk), &root, cfg()).unwrap();
+            st.log_create(1, "alpha", 11, &g).unwrap();
+            st.log_update(1, 1, &learn_op(1)).unwrap();
+        }
+        {
+            let disk =
+                FaultDisk::new(Some(FaultPlan { fail_at_op: 1, kind: FaultKind::Crash }));
+            let (mut st, _) = Store::open(Box::new(disk), &root, cfg()).unwrap();
+            match st.log_update(1, 2, &learn_op(2)) {
+                Err(StoreError::Crashed { .. }) => {}
+                other => panic!("want Crashed, got {other:?}"),
+            }
+        }
+        let (st, models) = Store::open(Box::new(RealDisk), &root, cfg()).unwrap();
+        assert_eq!(st.report().torn_tails_truncated, 1);
+        assert_eq!(models[0].ops.iter().map(|&(s, _)| s).collect::<Vec<_>>(), [1]);
+        // The truncated log keeps working.
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn orphan_temps_are_swept() {
+        let root = testdir("store_tmp");
+        let g = genesis(0);
+        {
+            let (mut st, _) = Store::open(Box::new(RealDisk), &root, cfg()).unwrap();
+            st.log_create(1, "alpha", 11, &g).unwrap();
+        }
+        std::fs::write(root.join("MANIFEST.tmp"), b"half").unwrap();
+        std::fs::write(root.join("ckpt").join("m00000001-x.tmp"), b"half").unwrap();
+        let (st, _) = Store::open(Box::new(RealDisk), &root, cfg()).unwrap();
+        assert_eq!(st.report().orphan_temps_removed, 2);
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn bad_names_and_configs_fail_typed() {
+        let root = testdir("store_bad");
+        let g = genesis(0);
+        let (mut st, _) = Store::open(Box::new(RealDisk), &root, cfg()).unwrap();
+        for name in ["", "has space", "semi;colon", &"x".repeat(65)] {
+            match st.log_create(9, name, 1, &g) {
+                Err(StoreError::BadName { .. }) => {}
+                other => panic!("{name:?}: want BadName, got {other:?}"),
+            }
+        }
+        let bad = StoreConfig { retained_ckpts: 0, ..StoreConfig::default() };
+        assert!(matches!(
+            Store::open(Box::new(RealDisk), &root, bad),
+            Err(StoreError::BadConfig { .. })
+        ));
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn retention_bounds_disk_state() {
+        let root = testdir("store_retention");
+        let g = genesis(0);
+        let small = StoreConfig {
+            segment_bytes: 128,
+            retained_ckpts: 2,
+            ..StoreConfig::default()
+        };
+        let (mut st, _) = Store::open(Box::new(RealDisk), &root, small).unwrap();
+        st.log_create(1, "alpha", 11, &g).unwrap();
+        let mut seq = 0u64;
+        for round in 0..6u64 {
+            for _ in 0..8 {
+                seq += 1;
+                st.log_update(1, seq, &learn_op(seq)).unwrap();
+            }
+            st.publish_checkpoint(1, seq, &genesis(seq)).unwrap();
+            let _ = round;
+        }
+        // Newest 2 checkpoints per model (+ none older), and the WAL
+        // holds no segment that ends before the retention floor.
+        let files: Vec<_> = std::fs::read_dir(root.join("ckpt"))
+            .unwrap()
+            .map(|e| e.unwrap().file_name().into_string().unwrap())
+            .collect();
+        assert_eq!(files.len(), 2, "{files:?}");
+        assert!(st.stats().ckpts_retired >= 4);
+        assert!(st.stats().wal.segments_retired > 0, "stale WAL segments must be retired");
+        // Reopen proves the trimmed store is still complete.
+        let (_, models) = Store::open(Box::new(RealDisk), &root, small).unwrap();
+        assert_eq!(models[0].ckpt_seq, seq);
+        assert!(models[0].ops.is_empty());
+        std::fs::remove_dir_all(&root).ok();
+    }
+}

@@ -1,0 +1,683 @@
+//! Write-ahead log: segmented, length+CRC framed, torn-tail tolerant.
+//!
+//! One hub-wide log records every durable mutation — model creation
+//! (with its genesis snapshot embedded, so the log alone can rebuild a
+//! model that never reached a checkpoint) and every sequenced update.
+//! Records live in segment files named by the **global position** of
+//! their first record (`seg-<pos:020>.wal`), so the set of segments is
+//! self-describing: after retention deletes a prefix, contiguity of the
+//! remainder is still checkable from names + record counts alone.
+//!
+//! Frame layout, little-endian:
+//!
+//! ```text
+//! len  u32   payload byte count
+//! crc  u32   FNV-1a over payload (util::fnv1a)
+//! payload    [len bytes]
+//! ```
+//!
+//! Torn-tail semantics (the load-bearing invariant): appends are
+//! prefix-atomic — a crashed `write` leaves a *prefix* of the frame, so
+//! a partial trailing record is always an **incomplete** frame (header
+//! short, or payload extending past end-of-file). On open, an
+//! incomplete frame at the physical tail of the *final* segment is
+//! truncated away and counted; it can only be the unacknowledged
+//! in-flight record. A **complete** frame whose CRC mismatches can not
+//! be produced by tearing — it is bit corruption — and is a typed
+//! error, as is any damage in a non-final segment.
+
+use super::{Disk, StoreError, SyncPolicy};
+use crate::util::fnv1a;
+use std::path::{Path, PathBuf};
+
+const SEG_PREFIX: &str = "seg-";
+const SEG_SUFFIX: &str = ".wal";
+
+/// Payloads beyond this are corruption, not data: the largest real
+/// record is a genesis snapshot, far below this bound. A length field
+/// this large therefore fails typed instead of being mistaken for an
+/// (arbitrarily long) torn tail.
+const MAX_RECORD_BYTES: u32 = 64 * 1024 * 1024;
+
+/// A sequenced model mutation as logged on disk. Deliberately
+/// wire-level (label + raw feature bits, not a packed `Input`): the
+/// store stays independent of the TM crate types, and the hub
+/// reconstructs `Input::pack(shape, bits)` on replay — exact, because
+/// every derived word of an `Input` is a function of its feature bits.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WalOp {
+    Learn { label: u32, bits: Vec<bool> },
+    ClauseFault { class: u32, clause: u32, force: Option<bool> },
+}
+
+/// One durable log record.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WalRecord {
+    /// A model joined the hub. Carries the genesis TMFS v2 snapshot so
+    /// the log is self-contained until the first durable checkpoint.
+    Create { model_id: u64, base_seed: u64, name: String, genesis: Vec<u8> },
+    /// One sequenced update applied to a model.
+    Update { model_id: u64, seq: u64, op: WalOp },
+}
+
+const TAG_CREATE: u8 = 1;
+const TAG_UPDATE: u8 = 2;
+const OP_LEARN: u8 = 1;
+const OP_CLAUSE_FAULT: u8 = 2;
+const FORCE_NONE: u8 = 0;
+const FORCE_EXCLUDE: u8 = 1;
+const FORCE_INCLUDE: u8 = 2;
+
+fn push_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Serialize a record payload (the framed bytes are `frame()`'s job).
+pub fn encode(rec: &WalRecord) -> Vec<u8> {
+    let mut buf = Vec::new();
+    match rec {
+        WalRecord::Create { model_id, base_seed, name, genesis } => {
+            buf.push(TAG_CREATE);
+            push_u64(&mut buf, *model_id);
+            push_u64(&mut buf, *base_seed);
+            push_u32(&mut buf, name.len() as u32);
+            buf.extend_from_slice(name.as_bytes());
+            push_u32(&mut buf, genesis.len() as u32);
+            buf.extend_from_slice(genesis);
+        }
+        WalRecord::Update { model_id, seq, op } => {
+            buf.push(TAG_UPDATE);
+            push_u64(&mut buf, *model_id);
+            push_u64(&mut buf, *seq);
+            match op {
+                WalOp::Learn { label, bits } => {
+                    buf.push(OP_LEARN);
+                    push_u32(&mut buf, *label);
+                    push_u32(&mut buf, bits.len() as u32);
+                    let mut byte = 0u8;
+                    for (k, &b) in bits.iter().enumerate() {
+                        if b {
+                            byte |= 1 << (k % 8);
+                        }
+                        if k % 8 == 7 {
+                            buf.push(byte);
+                            byte = 0;
+                        }
+                    }
+                    if bits.len() % 8 != 0 {
+                        buf.push(byte);
+                    }
+                }
+                WalOp::ClauseFault { class, clause, force } => {
+                    buf.push(OP_CLAUSE_FAULT);
+                    push_u32(&mut buf, *class);
+                    push_u32(&mut buf, *clause);
+                    buf.push(match force {
+                        None => FORCE_NONE,
+                        Some(false) => FORCE_EXCLUDE,
+                        Some(true) => FORCE_INCLUDE,
+                    });
+                }
+            }
+        }
+    }
+    buf
+}
+
+/// Bounds-checked little-endian reader over a record payload.
+struct Rd<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Rd<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.bytes.len() - self.pos < n {
+            return Err(format!(
+                "truncated payload ({} bytes left at offset {}, want {n})",
+                self.bytes.len() - self.pos,
+                self.pos
+            ));
+        }
+        let s = &self.bytes[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, String> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64, String> {
+        let b = self.take(8)?;
+        let mut a = [0u8; 8];
+        a.copy_from_slice(b);
+        Ok(u64::from_le_bytes(a))
+    }
+}
+
+/// Decode a payload that already passed its frame CRC. Any failure here
+/// is therefore bit-exact corruption (or an encoder bug), never a torn
+/// write; the caller wraps it as a typed `CorruptRecord`.
+pub fn decode(payload: &[u8]) -> Result<WalRecord, String> {
+    let mut r = Rd { bytes: payload, pos: 0 };
+    let rec = match r.u8()? {
+        TAG_CREATE => {
+            let model_id = r.u64()?;
+            let base_seed = r.u64()?;
+            let name_len = r.u32()? as usize;
+            let name = std::str::from_utf8(r.take(name_len)?)
+                .map_err(|e| format!("create name not utf-8: {e}"))?
+                .to_string();
+            let genesis_len = r.u32()? as usize;
+            let genesis = r.take(genesis_len)?.to_vec();
+            WalRecord::Create { model_id, base_seed, name, genesis }
+        }
+        TAG_UPDATE => {
+            let model_id = r.u64()?;
+            let seq = r.u64()?;
+            let op = match r.u8()? {
+                OP_LEARN => {
+                    let label = r.u32()?;
+                    let nbits = r.u32()? as usize;
+                    let packed = r.take(nbits.div_ceil(8))?;
+                    let bits =
+                        (0..nbits).map(|k| packed[k / 8] >> (k % 8) & 1 == 1).collect();
+                    WalOp::Learn { label, bits }
+                }
+                OP_CLAUSE_FAULT => {
+                    let class = r.u32()?;
+                    let clause = r.u32()?;
+                    let force = match r.u8()? {
+                        FORCE_NONE => None,
+                        FORCE_EXCLUDE => Some(false),
+                        FORCE_INCLUDE => Some(true),
+                        v => return Err(format!("bad force code {v}")),
+                    };
+                    WalOp::ClauseFault { class, clause, force }
+                }
+                v => return Err(format!("bad op tag {v}")),
+            };
+            WalRecord::Update { model_id, seq, op }
+        }
+        v => return Err(format!("bad record tag {v}")),
+    };
+    if r.pos != payload.len() {
+        return Err(format!(
+            "trailing garbage: {} bytes past record end",
+            payload.len() - r.pos
+        ));
+    }
+    Ok(rec)
+}
+
+fn frame(payload: &[u8]) -> Vec<u8> {
+    let mut f = Vec::with_capacity(payload.len() + 8);
+    push_u32(&mut f, payload.len() as u32);
+    push_u32(&mut f, fnv1a(payload));
+    f.extend_from_slice(payload);
+    f
+}
+
+fn seg_path(dir: &Path, first_pos: u64) -> PathBuf {
+    dir.join(format!("{SEG_PREFIX}{first_pos:020}{SEG_SUFFIX}"))
+}
+
+fn parse_seg_name(name: &str) -> Option<u64> {
+    let digits = name.strip_prefix(SEG_PREFIX)?.strip_suffix(SEG_SUFFIX)?;
+    if digits.len() != 20 || !digits.bytes().all(|b| b.is_ascii_digit()) {
+        return None;
+    }
+    digits.parse().ok()
+}
+
+/// What `Wal::open` observed and repaired on the way up.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct WalOpenReport {
+    pub segments_scanned: u64,
+    pub torn_tails_truncated: u64,
+    /// Bytes cut from the final segment when a torn tail was truncated.
+    pub torn_bytes_dropped: u64,
+}
+
+/// Lifetime write counters, for exact accounting in tests/telemetry.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct WalStats {
+    pub appends: u64,
+    pub syncs: u64,
+    pub rotations: u64,
+    pub segments_retired: u64,
+}
+
+/// The append side of the log. All disk access goes through the
+/// caller-supplied [`Disk`] so faults can be injected at every write
+/// boundary.
+#[derive(Debug)]
+pub struct Wal {
+    dir: PathBuf,
+    segment_bytes: u64,
+    sync_policy: SyncPolicy,
+    /// First record position of every live segment, ascending; the last
+    /// entry is the append tail. Non-empty once open returns.
+    segs: Vec<u64>,
+    /// Byte length of the tail segment.
+    seg_len: u64,
+    /// Global position of the next record to append.
+    next_pos: u64,
+    /// Appends not yet covered by a sync.
+    dirty: u64,
+    stats: WalStats,
+}
+
+impl Wal {
+    /// Scan (and, for a torn tail, repair) the log directory, returning
+    /// the writer positioned at the tail plus every surviving record in
+    /// position order.
+    #[allow(clippy::type_complexity)]
+    pub fn open(
+        disk: &mut dyn Disk,
+        dir: &Path,
+        segment_bytes: u64,
+        sync_policy: SyncPolicy,
+    ) -> Result<(Wal, Vec<(u64, WalRecord)>, WalOpenReport), StoreError> {
+        disk.create_dir_all(dir)?;
+        let mut segs: Vec<u64> = Vec::new();
+        for path in disk.list(dir)? {
+            let Some(name) = path.file_name().and_then(|n| n.to_str()) else { continue };
+            if let Some(first) = parse_seg_name(name) {
+                segs.push(first);
+            }
+        }
+        segs.sort_unstable();
+
+        let mut report = WalOpenReport::default();
+        let mut records: Vec<(u64, WalRecord)> = Vec::new();
+        let mut pos = segs.first().copied().unwrap_or(0);
+        let mut tail_len = 0u64;
+        for (i, &first) in segs.iter().enumerate() {
+            let path = seg_path(dir, first);
+            let is_final = i + 1 == segs.len();
+            if first != pos {
+                return Err(StoreError::MissingSegment {
+                    expected_pos: pos,
+                    found: path,
+                });
+            }
+            let bytes = disk.read(&path)?;
+            report.segments_scanned += 1;
+            let mut off = 0usize;
+            loop {
+                let rem = bytes.len() - off;
+                if rem == 0 {
+                    break;
+                }
+                // Header (or its prefix): a short header can only be a
+                // torn tail, and only legal at the final segment's end.
+                let complete_header = rem >= 8;
+                let len = if complete_header {
+                    u32::from_le_bytes([
+                        bytes[off],
+                        bytes[off + 1],
+                        bytes[off + 2],
+                        bytes[off + 3],
+                    ])
+                } else {
+                    0
+                };
+                if complete_header && len > MAX_RECORD_BYTES {
+                    // A torn write leaves the *true* length field (or no
+                    // length field at all); an absurd length is bit
+                    // corruption.
+                    return Err(StoreError::CorruptRecord {
+                        segment: path,
+                        offset: off as u64,
+                        detail: format!("record length {len} exceeds maximum"),
+                    });
+                }
+                let complete = complete_header && rem >= 8 + len as usize;
+                if !complete {
+                    if !is_final {
+                        return Err(StoreError::CorruptRecord {
+                            segment: path,
+                            offset: off as u64,
+                            detail: format!(
+                                "incomplete frame ({rem} bytes) inside non-final segment"
+                            ),
+                        });
+                    }
+                    // Torn tail: the unacknowledged in-flight append.
+                    disk.truncate(&path, off as u64)?;
+                    report.torn_tails_truncated += 1;
+                    report.torn_bytes_dropped += rem as u64;
+                    tail_len = off as u64;
+                    break;
+                }
+                let want_crc = u32::from_le_bytes([
+                    bytes[off + 4],
+                    bytes[off + 5],
+                    bytes[off + 6],
+                    bytes[off + 7],
+                ]);
+                let payload = &bytes[off + 8..off + 8 + len as usize];
+                if fnv1a(payload) != want_crc {
+                    return Err(StoreError::CorruptRecord {
+                        segment: path,
+                        offset: off as u64,
+                        detail: "payload CRC mismatch".into(),
+                    });
+                }
+                let rec = decode(payload).map_err(|detail| StoreError::CorruptRecord {
+                    segment: path.clone(),
+                    offset: off as u64,
+                    detail,
+                })?;
+                records.push((pos, rec));
+                pos += 1;
+                off += 8 + len as usize;
+                if is_final {
+                    tail_len = off as u64;
+                }
+            }
+        }
+        if segs.is_empty() {
+            segs.push(0);
+        }
+        let wal = Wal {
+            dir: dir.to_path_buf(),
+            segment_bytes: segment_bytes.max(1),
+            sync_policy,
+            segs,
+            seg_len: tail_len,
+            next_pos: pos,
+            dirty: 0,
+            stats: WalStats::default(),
+        };
+        Ok((wal, records, report))
+    }
+
+    /// Global position the next append will get.
+    pub fn next_pos(&self) -> u64 {
+        self.next_pos
+    }
+
+    pub fn stats(&self) -> WalStats {
+        self.stats
+    }
+
+    /// First positions of the live segments, ascending (tests).
+    pub fn segments(&self) -> &[u64] {
+        &self.segs
+    }
+
+    fn tail_path(&self) -> PathBuf {
+        seg_path(&self.dir, *self.segs.last().expect("wal always has a tail segment"))
+    }
+
+    /// Append one record; returns its global position. Durability is
+    /// governed by the sync policy; an error leaves the record
+    /// non-durable and the caller must treat the write as failed.
+    pub fn append(&mut self, disk: &mut dyn Disk, rec: &WalRecord) -> Result<u64, StoreError> {
+        if self.seg_len >= self.segment_bytes {
+            // Rotate. The outgoing segment is synced first so EveryN
+            // never leaves dirty bytes behind a segment boundary.
+            if self.dirty > 0 {
+                self.sync(disk)?;
+            }
+            self.segs.push(self.next_pos);
+            self.seg_len = 0;
+            self.stats.rotations += 1;
+        }
+        let path = self.tail_path();
+        let f = frame(&encode(rec));
+        disk.append(&path, &f)?;
+        self.seg_len += f.len() as u64;
+        let pos = self.next_pos;
+        self.next_pos += 1;
+        self.stats.appends += 1;
+        self.dirty += 1;
+        match self.sync_policy {
+            SyncPolicy::Always => self.sync(disk)?,
+            SyncPolicy::EveryN(n) => {
+                if self.dirty >= n.max(1) {
+                    self.sync(disk)?;
+                }
+            }
+            SyncPolicy::OnDemand => {}
+        }
+        Ok(pos)
+    }
+
+    /// Flush the tail segment to stable storage.
+    pub fn sync(&mut self, disk: &mut dyn Disk) -> Result<(), StoreError> {
+        if self.dirty == 0 {
+            return Ok(());
+        }
+        disk.sync(&self.tail_path())?;
+        self.dirty = 0;
+        self.stats.syncs += 1;
+        Ok(())
+    }
+
+    /// Delete whole segments whose records all lie below `floor` (the
+    /// oldest position any model still needs). The tail segment is
+    /// never deleted. Returns the number of segments removed.
+    pub fn retain_from(&mut self, disk: &mut dyn Disk, floor: u64) -> Result<u64, StoreError> {
+        let mut removed = 0u64;
+        while self.segs.len() >= 2 && self.segs[1] <= floor {
+            let path = seg_path(&self.dir, self.segs[0]);
+            disk.remove(&path)?;
+            self.segs.remove(0);
+            removed += 1;
+            self.stats.segments_retired += 1;
+        }
+        Ok(removed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::{testdir, RealDisk, StoreError, SyncPolicy};
+
+    fn learn(model_id: u64, seq: u64) -> WalRecord {
+        let bits = (0..16).map(|k| (seq + k) % 3 == 0).collect();
+        WalRecord::Update { model_id, seq, op: WalOp::Learn { label: (seq % 3) as u32, bits } }
+    }
+
+    #[test]
+    fn record_codec_round_trips() {
+        let recs = vec![
+            WalRecord::Create {
+                model_id: 7,
+                base_seed: 0xDEAD_BEEF,
+                name: "alpha".into(),
+                genesis: vec![1, 2, 3, 4, 5],
+            },
+            learn(7, 1),
+            WalRecord::Update {
+                model_id: 7,
+                seq: 2,
+                op: WalOp::ClauseFault { class: 1, clause: 3, force: Some(true) },
+            },
+            WalRecord::Update {
+                model_id: 8,
+                seq: 1,
+                op: WalOp::ClauseFault { class: 0, clause: 0, force: None },
+            },
+        ];
+        for rec in &recs {
+            assert_eq!(&decode(&encode(rec)).unwrap(), rec);
+        }
+    }
+
+    #[test]
+    fn append_reopen_round_trips_across_rotation() {
+        let dir = testdir("wal_roundtrip");
+        let mut disk = RealDisk;
+        let (mut wal, recs, rep) =
+            Wal::open(&mut disk, &dir, 256, SyncPolicy::Always).unwrap();
+        assert!(recs.is_empty());
+        assert_eq!(rep.torn_tails_truncated, 0);
+        let mut want = Vec::new();
+        for seq in 1..=40u64 {
+            let rec = learn(1, seq);
+            let pos = wal.append(&mut disk, &rec).unwrap();
+            assert_eq!(pos, seq - 1);
+            want.push((pos, rec));
+        }
+        assert!(wal.stats().rotations > 0, "256-byte segments must rotate");
+        let (wal2, got, rep2) = Wal::open(&mut disk, &dir, 256, SyncPolicy::Always).unwrap();
+        assert_eq!(got, want);
+        assert_eq!(wal2.next_pos(), 40);
+        assert_eq!(rep2.torn_tails_truncated, 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn torn_tail_is_truncated_and_counted() {
+        let dir = testdir("wal_torn");
+        let mut disk = RealDisk;
+        let (mut wal, _, _) = Wal::open(&mut disk, &dir, 1 << 20, SyncPolicy::Always).unwrap();
+        for seq in 1..=5u64 {
+            wal.append(&mut disk, &learn(1, seq)).unwrap();
+        }
+        // Tear the tail: append a frame prefix by hand.
+        let seg = dir.join("seg-00000000000000000000.wal");
+        let full = frame(&encode(&learn(1, 6)));
+        for cut in [1, 4, 7, 8, full.len() - 1] {
+            let clean = std::fs::read(&seg).unwrap();
+            let mut torn = clean.clone();
+            torn.extend_from_slice(&full[..cut]);
+            std::fs::write(&seg, &torn).unwrap();
+            let (wal2, recs, rep) =
+                Wal::open(&mut disk, &dir, 1 << 20, SyncPolicy::Always).unwrap();
+            assert_eq!(recs.len(), 5, "cut={cut}");
+            assert_eq!(rep.torn_tails_truncated, 1, "cut={cut}");
+            assert_eq!(rep.torn_bytes_dropped, cut as u64, "cut={cut}");
+            assert_eq!(wal2.next_pos(), 5);
+            // The repair is physical: the file is clean again.
+            assert_eq!(std::fs::read(&seg).unwrap(), clean, "cut={cut}");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn interior_corruption_is_a_typed_error() {
+        let dir = testdir("wal_corrupt");
+        let mut disk = RealDisk;
+        let (mut wal, _, _) = Wal::open(&mut disk, &dir, 1 << 20, SyncPolicy::Always).unwrap();
+        for seq in 1..=5u64 {
+            wal.append(&mut disk, &learn(1, seq)).unwrap();
+        }
+        let seg = dir.join("seg-00000000000000000000.wal");
+        let clean = std::fs::read(&seg).unwrap();
+        // Flip one payload bit in the middle record: complete frame, bad CRC.
+        let mut bad = clean.clone();
+        let mid = bad.len() / 2;
+        bad[mid] ^= 0x10;
+        std::fs::write(&seg, &bad).unwrap();
+        match Wal::open(&mut disk, &dir, 1 << 20, SyncPolicy::Always) {
+            Err(StoreError::CorruptRecord { .. }) => {}
+            other => panic!("want CorruptRecord, got {other:?}"),
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_segment_is_a_typed_error() {
+        let dir = testdir("wal_gap");
+        let mut disk = RealDisk;
+        let (mut wal, _, _) = Wal::open(&mut disk, &dir, 64, SyncPolicy::Always).unwrap();
+        for seq in 1..=30u64 {
+            wal.append(&mut disk, &learn(1, seq)).unwrap();
+        }
+        let segs: Vec<u64> = wal.segments().to_vec();
+        assert!(segs.len() >= 3, "need ≥3 segments, got {segs:?}");
+        // Delete a middle segment.
+        std::fs::remove_file(seg_path(&dir, segs[1])).unwrap();
+        match Wal::open(&mut disk, &dir, 64, SyncPolicy::Always) {
+            Err(StoreError::MissingSegment { expected_pos, .. }) => {
+                assert_eq!(expected_pos, segs[1]);
+            }
+            other => panic!("want MissingSegment, got {other:?}"),
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn retention_drops_only_wholly_stale_segments() {
+        let dir = testdir("wal_retain");
+        let mut disk = RealDisk;
+        let (mut wal, _, _) = Wal::open(&mut disk, &dir, 64, SyncPolicy::Always).unwrap();
+        for seq in 1..=30u64 {
+            wal.append(&mut disk, &learn(1, seq)).unwrap();
+        }
+        let segs: Vec<u64> = wal.segments().to_vec();
+        assert!(segs.len() >= 3);
+        // Floor below the second segment keeps everything.
+        assert_eq!(wal.retain_from(&mut disk, segs[1] - 1).unwrap(), 0);
+        // Floor at the third segment's start drops the first two.
+        let removed = wal.retain_from(&mut disk, segs[2]).unwrap();
+        assert_eq!(removed, 2);
+        // Reopen still sees a contiguous, scannable suffix.
+        let (wal2, recs, _) = Wal::open(&mut disk, &dir, 64, SyncPolicy::Always).unwrap();
+        assert_eq!(wal2.next_pos(), 30);
+        assert_eq!(recs.first().unwrap().0, segs[2]);
+        // The tail segment is never deleted, whatever the floor.
+        let mut wal3 = wal2;
+        wal3.retain_from(&mut disk, u64::MAX).unwrap();
+        assert_eq!(wal3.segments().len(), 1);
+        let (_, recs3, _) = Wal::open(&mut disk, &dir, 64, SyncPolicy::Always).unwrap();
+        assert!(!recs3.is_empty());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn every_bit_flip_in_a_sealed_log_is_detected() {
+        let dir = testdir("wal_bitflip");
+        let mut disk = RealDisk;
+        let (mut wal, _, _) = Wal::open(&mut disk, &dir, 1 << 20, SyncPolicy::Always).unwrap();
+        for seq in 1..=3u64 {
+            wal.append(&mut disk, &learn(1, seq)).unwrap();
+        }
+        let seg = dir.join("seg-00000000000000000000.wal");
+        let clean = std::fs::read(&seg).unwrap();
+        let (_, want, _) = Wal::open(&mut disk, &dir, 1 << 20, SyncPolicy::Always).unwrap();
+        for byte in 0..clean.len() {
+            for bit in 0..8 {
+                let mut bad = clean.clone();
+                bad[byte] ^= 1 << bit;
+                std::fs::write(&seg, &bad).unwrap();
+                // Every flip either fails typed or — if it hits a length
+                // field such that the frame no longer fits — truncates
+                // as a torn tail, losing only a suffix. It must never
+                // yield a record set that silently *differs* within the
+                // surviving prefix.
+                match Wal::open(&mut disk, &dir, 1 << 20, SyncPolicy::Always) {
+                    Err(StoreError::CorruptRecord { .. }) => {}
+                    Err(other) => panic!("byte {byte} bit {bit}: unexpected {other:?}"),
+                    Ok((_, got, rep)) => {
+                        assert!(
+                            rep.torn_tails_truncated == 1,
+                            "byte {byte} bit {bit}: accepted a flipped log"
+                        );
+                        assert!(got.len() < want.len());
+                        assert_eq!(got, want[..got.len()], "byte {byte} bit {bit}");
+                        // Undo the truncation's damage for the next iteration.
+                    }
+                }
+                std::fs::write(&seg, &clean).unwrap();
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

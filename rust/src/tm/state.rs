@@ -25,14 +25,8 @@ use std::path::Path;
 const MAGIC: u32 = 0x544D_4650;
 const VERSION: u32 = 1;
 
-pub(crate) fn fnv1a(bytes: &[u8]) -> u32 {
-    let mut h: u32 = 0x811C_9DC5;
-    for &b in bytes {
-        h ^= b as u32;
-        h = h.wrapping_mul(0x0100_0193);
-    }
-    h
-}
+// All framing CRCs in the repo share one implementation; see util.rs.
+pub(crate) use crate::util::fnv1a;
 
 fn push_u32(buf: &mut Vec<u8>, v: u32) {
     buf.extend_from_slice(&v.to_le_bytes());

@@ -1,0 +1,64 @@
+//! Small shared utilities.
+//!
+//! `fnv1a` is THE record/digest checksum of this repo: the TMFP v1 and
+//! TMFS v2 checkpoint codecs, the serve snapshot action-cache
+//! cross-check and the durable store's WAL/manifest record framing all
+//! hash through this one implementation, so the checksum semantics
+//! cannot drift between the framing layers. (The 64-bit state digest in
+//! `tm::machine::MultiTm::state_digest` is the separate FNV-1a-64
+//! variant — a digest, not a framing checksum.)
+
+/// Incremental 32-bit FNV-1a: feed byte slices in any chunking, the
+/// result is identical to one [`fnv1a`] call over the concatenation.
+/// Used where hashing would otherwise force an intermediate buffer
+/// (e.g. packed `u64` payloads hashed word by word).
+#[derive(Debug, Clone, Copy)]
+pub struct Fnv1a(u32);
+
+impl Fnv1a {
+    pub fn new() -> Self {
+        Fnv1a(0x811C_9DC5)
+    }
+
+    pub fn update(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u32;
+            self.0 = self.0.wrapping_mul(0x0100_0193);
+        }
+    }
+
+    pub fn finish(self) -> u32 {
+        self.0
+    }
+}
+
+/// 32-bit FNV-1a over a byte slice.
+pub fn fnv1a(bytes: &[u8]) -> u32 {
+    let mut h = Fnv1a::new();
+    h.update(bytes);
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // Standard FNV-1a 32-bit test vectors.
+        assert_eq!(fnv1a(b""), 0x811C_9DC5);
+        assert_eq!(fnv1a(b"a"), 0xE40C_292C);
+        assert_eq!(fnv1a(b"foobar"), 0xBF9C_F968);
+    }
+
+    #[test]
+    fn streaming_matches_one_shot() {
+        let data: Vec<u8> = (0..=255u8).collect();
+        for split in [0usize, 1, 7, 128, 255, 256] {
+            let mut h = Fnv1a::new();
+            h.update(&data[..split]);
+            h.update(&data[split..]);
+            assert_eq!(h.finish(), fnv1a(&data), "split at {split}");
+        }
+    }
+}

@@ -58,7 +58,11 @@
 //! `v3` adds the `hub` step kind (a multi-tenant [`crate::hub::ModelHub`]
 //! under a one-replica budget, round-robin updates with forced
 //! evictions, checked against never-evicted mirrors); the same
-//! downgrade/rejection rules apply.
+//! downgrade/rejection rules apply. Format `v4` adds the `restart` step
+//! kind (a durable-hub round trip through [`crate::store`]: updates
+//! written ahead to a WAL + checkpoint store in a scratch directory,
+//! the hub dropped, and a second hub rebuilt from the on-disk bytes
+//! alone, checked against never-persisted mirrors).
 
 use crate::hub::{HubConfig, ModelHub, SingleModel};
 use crate::net::{run_sim, seeded_scripts, NetConfig, ScriptConfig};
@@ -74,6 +78,7 @@ use crate::tm::feedback::train_step;
 use crate::tm::machine::MultiTm;
 use crate::tm::params::{SStyle, TmParams, TmShape};
 use crate::tm::rescore::RescoreCache;
+use crate::store::{RealDisk, Store, StoreConfig};
 use crate::tm::rng::{StepRands, Xoshiro256};
 use crate::tm::train_planes::TrainScratch;
 use crate::tm::update::{update_rands, update_rands_into, ShardUpdate, UpdateKind};
@@ -117,6 +122,15 @@ pub enum Step {
     /// digest bit-identical to a never-evicted mirror replaying the
     /// same `(base_seed, seq)` log (needs fixture format v3).
     Hub { tenants: u32, updates: u32, seed: u64 },
+    /// Fork `tenants` models from the fast lane into a *durable* hub
+    /// (write-ahead log + checkpoint store in a scratch directory),
+    /// apply `updates` seeded Learns round-robin with forced evictions
+    /// interleaved, sync and drop the hub, then rebuild a second hub
+    /// from the on-disk bytes alone and assert every tenant's
+    /// rehydrated seq and digest bit-identical to a never-persisted
+    /// mirror replaying the same `(base_seed, seq)` log (needs fixture
+    /// format v4).
+    Restart { tenants: u32, updates: u32, seed: u64 },
     /// Swap the training hyper-parameters mid-schedule.
     Params { t: i32, s_bits: u32, active_clauses: u32, active_classes: u32 },
 }
@@ -143,6 +157,9 @@ impl Step {
             }
             Step::Hub { tenants, updates, seed } => {
                 format!("step hub tenants={tenants} updates={updates} seed={seed}")
+            }
+            Step::Restart { tenants, updates, seed } => {
+                format!("step restart tenants={tenants} updates={updates} seed={seed}")
             }
             Step::Params { t, s_bits, active_clauses, active_classes } => format!(
                 "step params t={t} s_bits={s_bits} active_clauses={active_clauses} active_classes={active_classes}"
@@ -178,7 +195,10 @@ impl Schedule {
         let mut out = String::new();
         let has_net = self.steps.iter().any(|s| matches!(s, Step::Net { .. }));
         let has_hub = self.steps.iter().any(|s| matches!(s, Step::Hub { .. }));
-        out.push_str(if has_hub {
+        let has_restart = self.steps.iter().any(|s| matches!(s, Step::Restart { .. }));
+        out.push_str(if has_restart {
+            "tmfpga-corpus v4\n"
+        } else if has_hub {
             "tmfpga-corpus v3\n"
         } else if has_net {
             "tmfpga-corpus v2\n"
@@ -223,7 +243,8 @@ impl Schedule {
             "tmfpga-corpus v1" => 1u32,
             "tmfpga-corpus v2" => 2,
             "tmfpga-corpus v3" => 3,
-            other => bail!("bad fixture header {other:?} (want \"tmfpga-corpus v1\"..\"v3\")"),
+            "tmfpga-corpus v4" => 4,
+            other => bail!("bad fixture header {other:?} (want \"tmfpga-corpus v1\"..\"v4\")"),
         };
 
         let shape_line = lines.next().context("missing shape line")?;
@@ -315,6 +336,16 @@ impl Schedule {
                         bail!("hub steps need a \"tmfpga-corpus v3\" fixture header");
                     }
                     Step::Hub {
+                        tenants: get(&toks, "tenants")?,
+                        updates: get(&toks, "updates")?,
+                        seed: get(&toks, "seed")?,
+                    }
+                }
+                "restart" => {
+                    if version < 4 {
+                        bail!("restart steps need a \"tmfpga-corpus v4\" fixture header");
+                    }
+                    Step::Restart {
                         tenants: get(&toks, "tenants")?,
                         updates: get(&toks, "updates")?,
                         seed: get(&toks, "seed")?,
@@ -859,6 +890,127 @@ pub fn replay_opts(s: &Schedule, opts: &ReplayOptions) -> Result<Report, Diverge
                     checks += 1;
                 }
             }
+            Step::Restart { tenants, updates, seed } => {
+                // Fork durable-hub tenants from the fast lane: every
+                // create/update/evict is written ahead to a WAL +
+                // checkpoint store in a scratch directory, the hub is
+                // synced and dropped, and a second hub is rebuilt from
+                // the on-disk bytes alone. Each tenant must come back at
+                // its exact durable seq with a digest bit-identical to a
+                // never-persisted mirror replaying the identical
+                // `(base_seed, seq)` log — the durable round trip, like
+                // eviction, is contractually invisible.
+                let n = (*tenants as usize).clamp(1, 8);
+                let hub_seed = mix(s.base_seed, *seed);
+                let fail = |what: String| Divergence { step: i, what };
+                let dir = restart_scratch_dir(s.base_seed, i);
+                std::fs::remove_dir_all(&dir).ok();
+                // Tiny segments so even short fixtures cross a rotation.
+                let store_cfg = StoreConfig { segment_bytes: 1024, ..StoreConfig::default() };
+                let cost = snapshot_bytes(&b, &params, 0).len();
+                let hub_cfg = HubConfig {
+                    memory_budget: cost,
+                    checkpoint_every: 4,
+                    plane_cache_batches: 8,
+                };
+                let (store, recovered) = match Store::open(Box::new(RealDisk), &dir, store_cfg) {
+                    Ok(ok) => ok,
+                    Err(e2) => return Err(fail(format!("restart: store open failed: {e2}"))),
+                };
+                if !recovered.is_empty() {
+                    return Err(fail("restart: fresh scratch store recovered models".into()));
+                }
+                let mut hub = match ModelHub::open_durable(hub_cfg.clone(), store, recovered) {
+                    Ok(h) => h,
+                    Err(e2) => return Err(fail(format!("restart: durable hub failed: {e2}"))),
+                };
+                let mut handles = Vec::with_capacity(n);
+                let mut mirrors: Vec<(MultiTm, u64, u64)> = Vec::with_capacity(n);
+                for t in 0..n {
+                    let tseed = mix(hub_seed, t as u64 + 1);
+                    match hub.create(&format!("lane-{t}"), b.clone(), params.clone(), tseed) {
+                        Ok(h) => handles.push(h),
+                        Err(e2) => {
+                            return Err(fail(format!("restart: create lane-{t} failed: {e2}")))
+                        }
+                    }
+                    mirrors.push((b.clone(), tseed, 0));
+                }
+                let mut rng = Xoshiro256::new(mix(hub_seed, 0xD15C));
+                for k in 0..*updates {
+                    let t = k as usize % n;
+                    let bits = crate::testkit::gen::bool_vec(&mut rng, shape.features, 0.5);
+                    let kind = UpdateKind::Learn {
+                        input: Input::pack(shape, &bits),
+                        label: rng.next_below(shape.classes),
+                    };
+                    let seq = match hub.update(handles[t], kind.clone()) {
+                        Ok(seq) => seq,
+                        Err(e2) => {
+                            return Err(fail(format!("restart: update lane-{t} failed: {e2}")))
+                        }
+                    };
+                    let (mirror, tseed, mseq) = &mut mirrors[t];
+                    *mseq += 1;
+                    if seq != *mseq {
+                        return Err(fail(format!(
+                            "restart: seq {seq} != mirror seq {mseq} on lane-{t}"
+                        )));
+                    }
+                    mirror.apply_update(&ShardUpdate { seq, kind }, &params, *tseed);
+                    if k % 3 == 2 {
+                        if let Err(e2) = hub.evict(handles[t]) {
+                            return Err(fail(format!(
+                                "restart: forced evict lane-{t} failed: {e2}"
+                            )));
+                        }
+                    }
+                }
+                if let Err(e2) = hub.sync_durable() {
+                    return Err(fail(format!("restart: sync failed: {e2}")));
+                }
+                drop(hub);
+                // Rebuild from disk alone and compare against the mirrors.
+                let (store, recovered) = match Store::open(Box::new(RealDisk), &dir, store_cfg) {
+                    Ok(ok) => ok,
+                    Err(e2) => return Err(fail(format!("restart: reopen failed: {e2}"))),
+                };
+                if recovered.len() != n {
+                    return Err(fail(format!(
+                        "restart: recovered {} of {n} models",
+                        recovered.len()
+                    )));
+                }
+                let mut hub2 = match ModelHub::open_durable(hub_cfg, store, recovered) {
+                    Ok(h) => h,
+                    Err(e2) => return Err(fail(format!("restart: rebuild failed: {e2}"))),
+                };
+                for (t, (mirror, _, mseq)) in mirrors.iter().enumerate() {
+                    let Some(h) = hub2.resolve(&format!("lane-{t}")) else {
+                        return Err(fail(format!("restart: lane-{t} missing after rebuild")));
+                    };
+                    if hub2.model_seq(h) != Some(*mseq) {
+                        return Err(fail(format!(
+                            "restart: lane-{t} resumed at seq {:?}, want {mseq}",
+                            hub2.model_seq(h)
+                        )));
+                    }
+                    let digest = match hub2.digest(h) {
+                        Ok(dg) => dg,
+                        Err(e2) => {
+                            return Err(fail(format!("restart: digest lane-{t} failed: {e2}")))
+                        }
+                    };
+                    if digest != mirror.state_digest() {
+                        return Err(fail(format!(
+                            "restart: lane-{t} rehydrated digest diverged from its \
+                             never-persisted mirror"
+                        )));
+                    }
+                    checks += 2;
+                }
+                std::fs::remove_dir_all(&dir).ok();
+            }
             Step::Params { t, s_bits, active_clauses, active_classes } => {
                 let mut np = params.clone();
                 np.t = *t;
@@ -881,6 +1033,18 @@ pub fn replay_opts(s: &Schedule, opts: &ReplayOptions) -> Result<Report, Diverge
 #[inline]
 fn mix(base: u64, salt: u64) -> u64 {
     base ^ salt.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+/// Scratch store directory for one `Restart` step — unique per process
+/// and call, so parallel replays (the test harness) never collide.
+fn restart_scratch_dir(base_seed: u64, step: usize) -> std::path::PathBuf {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static CALLS: AtomicU64 = AtomicU64::new(0);
+    let k = CALLS.fetch_add(1, Ordering::Relaxed);
+    std::env::temp_dir().join(format!(
+        "tmfpga_corpus_restart_{}_{base_seed:016x}_{step}_{k}",
+        std::process::id()
+    ))
 }
 
 /// Seeded labelled rows for one step.
@@ -1145,6 +1309,42 @@ mod tests {
         let plain = demo().to_text().replace("tmfpga-corpus v1", "tmfpga-corpus v3");
         let back = Schedule::parse(&plain).unwrap();
         assert_eq!(back, demo());
+    }
+
+    #[test]
+    fn restart_steps_round_trip_as_v4() {
+        let shape = TmShape::iris();
+        let mut s = Schedule::new(&shape, 0xBEEF);
+        s.steps = vec![
+            Step::Train { rows: 6, seed: 1 },
+            Step::Restart { tenants: 2, updates: 9, seed: 2 },
+        ];
+        let text = s.to_text();
+        assert!(text.starts_with("tmfpga-corpus v4\n"), "restart step must bump the header");
+        let back = Schedule::parse(&text).unwrap();
+        assert_eq!(back, s);
+        assert_eq!(back.to_text(), text);
+        // The same step list under a v3 header must be rejected.
+        let v3 = text.replace("tmfpga-corpus v4", "tmfpga-corpus v3");
+        assert!(Schedule::parse(&v3).is_err(), "restart step in a v3 fixture must fail");
+        // A v4 header without restart steps still parses (and re-emits v1).
+        let plain = demo().to_text().replace("tmfpga-corpus v1", "tmfpga-corpus v4");
+        let back = Schedule::parse(&plain).unwrap();
+        assert_eq!(back, demo());
+    }
+
+    #[test]
+    fn restart_step_replays_clean() {
+        let shape = TmShape::iris();
+        let mut s = Schedule::new(&shape, 0x0D15);
+        s.steps = vec![
+            Step::Train { rows: 8, seed: 1 },
+            Step::Restart { tenants: 2, updates: 10, seed: 2 },
+            Step::Train { rows: 4, seed: 3 },
+        ];
+        let rep = replay(&s).unwrap();
+        assert_eq!(rep.steps, 3);
+        assert!(rep.checks > 0);
     }
 
     #[test]

@@ -1,0 +1,329 @@
+//! Durability suite for the on-disk store (`tm_fpga::store`) and the
+//! durable hub built on it: the seeded crash-restart sweep (a process
+//! death injected at *every* WAL/checkpoint write boundary must restart
+//! bit-identical to the never-crashed oracle), the on-disk damage
+//! matrix (every [`DiskFault`] kind is either repaired with exact
+//! counter accounting or refused with a typed error — never a silent
+//! wrong answer, never a panic), and cold-start rebuild fidelity
+//! including fallback from a corrupted newest checkpoint.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use tm_fpga::coordinator::{run_restart_soak, RestartSoakConfig};
+use tm_fpga::hub::{HubConfig, ModelHub};
+use tm_fpga::serve::{inject_disk_fault, snapshot_bytes, DiskFault};
+use tm_fpga::store::{RealDisk, RecoveredModel, Store, StoreConfig, StoreError, SyncPolicy, WalOp};
+use tm_fpga::tm::{Input, MultiTm, ShardUpdate, TmParams, TmShape, UpdateKind, Xoshiro256};
+
+fn shape() -> TmShape {
+    TmShape::iris()
+}
+
+/// Random machine with realistic include density (testkit seeding).
+fn machine(seed: u64) -> MultiTm {
+    let mut rng = Xoshiro256::new(seed);
+    tm_fpga::testkit::gen::machine(&mut rng, &shape())
+}
+
+fn tmp(name: &str) -> PathBuf {
+    Path::new(env!("CARGO_TARGET_TMPDIR")).join(name)
+}
+
+fn copy_tree(src: &Path, dst: &Path) {
+    fs::create_dir_all(dst).unwrap();
+    for entry in fs::read_dir(src).unwrap() {
+        let entry = entry.unwrap();
+        let to = dst.join(entry.file_name());
+        if entry.file_type().unwrap().is_dir() {
+            copy_tree(&entry.path(), &to);
+        } else {
+            fs::copy(entry.path(), &to).unwrap();
+        }
+    }
+}
+
+/// One labelled sample as both the in-memory update and its WAL form.
+fn learn(shape: &TmShape, rng: &mut Xoshiro256, label: usize) -> (UpdateKind, WalOp) {
+    let bits: Vec<bool> = (0..shape.features).map(|_| rng.next_f32() < 0.5).collect();
+    (
+        UpdateKind::Learn { input: Input::pack(shape, &bits), label },
+        WalOp::Learn { label: label as u32, bits },
+    )
+}
+
+/// The headline acceptance: a process death injected at every durable
+/// write boundary (or an even sample of them in debug builds), each
+/// followed by a clean restart, must be bit-identical to the
+/// never-crashed oracle — every answered inference, every re-answer
+/// across the restart, every final state digest — with zero unanswered
+/// inferences.
+#[test]
+fn restart_soak_sweeps_every_crash_point_bit_identically() {
+    let full = !cfg!(debug_assertions);
+    let cfg = RestartSoakConfig {
+        data_dir: tmp("restart_sweep"),
+        max_crash_points: if full { 0 } else { 24 },
+        ..RestartSoakConfig::default()
+    };
+    let rep = run_restart_soak(&cfg).unwrap();
+    assert!(rep.agrees(), "crash sweep diverged from the oracle: {rep:?}");
+    assert!(rep.durable_ops >= 100, "sweep domain too small to mean anything: {rep:?}");
+    if full {
+        assert!(rep.crash_points >= 100, "release sweep must cover ≥ 100 points: {rep:?}");
+    } else {
+        assert!(rep.crash_points >= 20, "sampled sweep too sparse: {rep:?}");
+    }
+    assert!(rep.torn_tails_truncated >= 1, "append-boundary crashes must leave torn tails");
+    assert!(rep.wal_records_replayed >= 1, "restarts must replay WAL suffixes: {rep:?}");
+    assert!(rep.models_recovered >= 2, "restarts must rebuild models from disk: {rep:?}");
+}
+
+fn matrix_cfg() -> StoreConfig {
+    // Tiny segments so a short trace still spans ≥ 3 WAL files —
+    // required footing for the segment-loss injections.
+    StoreConfig { segment_bytes: 256, sync_policy: SyncPolicy::Always, retained_ckpts: 2 }
+}
+
+/// Build the known store the damage matrix mutates: two models, where
+/// "beta" (one Learn, one ClauseFault, checkpoint at seq 2) anchors the
+/// WAL floor so "alpha"'s full history (12 Learns, checkpoints at 4 and
+/// 8, an unreplayed 9..=12 tail) stays on disk. Returns the mirror
+/// state digests per seq for both models.
+fn build_pristine(dir: &Path) -> (Vec<u64>, Vec<u64>) {
+    fs::remove_dir_all(dir).ok();
+    let (mut store, recovered) = Store::open(Box::new(RealDisk), dir, matrix_cfg()).unwrap();
+    assert!(recovered.is_empty(), "fresh dir must hold no models");
+    let shape = shape();
+    let params = TmParams::paper_offline(&shape);
+    let mut m1 = machine(0xA11A);
+    let mut m2 = machine(0xBE7A);
+    store.log_create(1, "alpha", 7, &snapshot_bytes(&m1, &params, 0)).unwrap();
+    store.log_create(2, "beta", 8, &snapshot_bytes(&m2, &params, 0)).unwrap();
+    let mut d1 = vec![m1.state_digest()];
+    let mut d2 = vec![m2.state_digest()];
+    let mut rng = Xoshiro256::new(0x57A6E);
+
+    let (kind, op) = learn(&shape, &mut rng, 1);
+    store.log_update(2, 1, &op).unwrap();
+    let _ = m2.apply_update(&ShardUpdate { seq: 1, kind }, &params, 8);
+    d2.push(m2.state_digest());
+    let kind = UpdateKind::ClauseFault { class: 1, clause: 3, force: Some(true) };
+    store
+        .log_update(2, 2, &WalOp::ClauseFault { class: 1, clause: 3, force: Some(true) })
+        .unwrap();
+    let _ = m2.apply_update(&ShardUpdate { seq: 2, kind }, &params, 8);
+    d2.push(m2.state_digest());
+    store.publish_checkpoint(2, 2, &snapshot_bytes(&m2, &params, 2)).unwrap();
+
+    for seq in 1..=12u64 {
+        let (kind, op) = learn(&shape, &mut rng, (seq % 3) as usize);
+        store.log_update(1, seq, &op).unwrap();
+        let _ = m1.apply_update(&ShardUpdate { seq, kind }, &params, 7);
+        d1.push(m1.state_digest());
+        if seq == 4 || seq == 8 {
+            store.publish_checkpoint(1, seq, &snapshot_bytes(&m1, &params, seq)).unwrap();
+        }
+    }
+    store.sync().unwrap();
+    (d1, d2)
+}
+
+/// Rebuild a durable hub from a recovered store and demand each model
+/// resumes at exactly `(name, seq, digest)` — recovery may never hand
+/// back plausible-but-different bits.
+fn assert_hub_state(store: Store, recovered: Vec<RecoveredModel>, want: &[(&str, u64, u64)]) {
+    let cfg = HubConfig { memory_budget: 0, checkpoint_every: 0, plane_cache_batches: 4 };
+    let mut hub = ModelHub::open_durable(cfg, store, recovered).unwrap();
+    for &(name, seq, digest) in want {
+        let h = hub.resolve(name).unwrap_or_else(|| panic!("{name} not recovered"));
+        assert_eq!(hub.model_seq(h), Some(seq), "{name} resumed at the wrong seq");
+        assert_eq!(hub.digest(h).unwrap(), digest, "{name} rebuilt with different bits");
+    }
+}
+
+fn seqs(m: &RecoveredModel) -> Vec<u64> {
+    m.ops.iter().map(|(s, _)| *s).collect()
+}
+
+/// The on-disk damage matrix: every [`DiskFault`] kind against a copy
+/// of the same closed store. Repairable damage (torn tail, stale
+/// manifest row, corrupt newest checkpoint) recovers with exact counter
+/// accounting and bit-identical state; unrepairable damage (bit rot in
+/// acked history, lost or emptied segments) is refused with the exact
+/// typed error. No kind may panic or recover silently wrong.
+#[test]
+fn disk_damage_matrix_recovers_or_refuses_typed() {
+    let pristine = tmp("store_matrix_pristine");
+    let (d1, d2) = build_pristine(&pristine);
+    for (i, fault) in DiskFault::full_matrix().into_iter().enumerate() {
+        let dir = tmp(&format!("store_matrix_{i}"));
+        fs::remove_dir_all(&dir).ok();
+        copy_tree(&pristine, &dir);
+        let landed = inject_disk_fault(&dir, fault).unwrap();
+        assert!(landed, "{fault:?} found nothing to damage — scaffold regressed");
+        let result = Store::open(Box::new(RealDisk), &dir, matrix_cfg());
+        match fault {
+            DiskFault::TornTail { .. } => {
+                let (store, recovered) = result.expect("a torn tail is repairable");
+                let rep = *store.report();
+                assert_eq!(rep.torn_tails_truncated, 1, "{rep:?}");
+                assert_eq!(rep.models_recovered, 2, "{rep:?}");
+                let alpha = recovered.iter().find(|m| m.name == "alpha").unwrap();
+                assert_eq!(alpha.ckpt_seq, 8);
+                assert_eq!(
+                    seqs(alpha),
+                    vec![9, 10, 11],
+                    "exactly the torn (unacknowledged) update 12 is lost"
+                );
+                assert_hub_state(store, recovered, &[("alpha", 11, d1[11]), ("beta", 2, d2[2])]);
+            }
+            DiskFault::BitFlipWal => match result {
+                Err(StoreError::CorruptRecord { .. }) => {}
+                Ok(_) => panic!("bit rot in an acked record must refuse, not recover"),
+                Err(e) => panic!("want CorruptRecord, got {e:?}"),
+            },
+            DiskFault::MissingSegment => match result {
+                Err(StoreError::MissingSegment { .. }) => {}
+                Ok(_) => panic!("a WAL hole must refuse, not replay around it"),
+                Err(e) => panic!("want MissingSegment, got {e:?}"),
+            },
+            DiskFault::ZeroLengthSegment => match result {
+                Err(StoreError::MissingSegment { .. }) => {}
+                Ok(_) => panic!("an emptied segment must refuse like a deleted one"),
+                Err(e) => panic!("want MissingSegment, got {e:?}"),
+            },
+            DiskFault::StaleManifest => {
+                let (store, recovered) = result.expect("a stale manifest row is repairable");
+                let rep = *store.report();
+                assert!(rep.stale_manifest_entries >= 1, "{rep:?}");
+                assert_eq!(rep.models_recovered, 2, "{rep:?}");
+                let beta = recovered.iter().find(|m| m.name == "beta").unwrap();
+                assert_eq!(
+                    beta.ckpt_seq, 2,
+                    "the newest verifying checkpoint wins over the rolled-back row"
+                );
+                assert_hub_state(store, recovered, &[("alpha", 12, d1[12]), ("beta", 2, d2[2])]);
+            }
+            DiskFault::CorruptCheckpoint => {
+                let (store, recovered) =
+                    result.expect("a corrupt newest checkpoint must fall back");
+                let rep = *store.report();
+                assert_eq!(rep.corrupt_checkpoints_rejected, 1, "{rep:?}");
+                assert_eq!(rep.models_recovered, 2, "{rep:?}");
+                let beta = recovered.iter().find(|m| m.name == "beta").unwrap();
+                assert_eq!(beta.ckpt_seq, 0, "fallback lands on the genesis snapshot");
+                assert_eq!(seqs(beta), vec![1, 2], "the full suffix replays on top of genesis");
+                assert_hub_state(store, recovered, &[("alpha", 12, d1[12]), ("beta", 2, d2[2])]);
+            }
+        }
+        fs::remove_dir_all(&dir).ok();
+    }
+    fs::remove_dir_all(&pristine).ok();
+}
+
+/// Cold-start fidelity through the real hub write path: three tenants
+/// (one deliberately cold — created first, it anchors the WAL floor so
+/// later histories stay replayable), interleaved write-ahead updates
+/// with forced evictions, clean shutdown, then two adversarial reopens.
+/// The first must be bit-identical per tenant; the second, after a bit
+/// flip in alpha's newest checkpoint, must fall back to an older
+/// snapshot, replay the longer WAL suffix, and land on the same bits.
+#[test]
+fn durable_hub_cold_start_survives_checkpoint_corruption_bit_identically() {
+    let dir = tmp("hub_cold_start");
+    fs::remove_dir_all(&dir).ok();
+    let store_cfg =
+        StoreConfig { segment_bytes: 2048, sync_policy: SyncPolicy::Always, retained_ckpts: 2 };
+    let build_hub_cfg =
+        HubConfig { memory_budget: 0, checkpoint_every: 4, plane_cache_batches: 8 };
+    let shape = shape();
+    let params = TmParams::paper_online(&shape);
+
+    // Build: write-ahead traffic with forced evictions, clean shutdown.
+    let (store, recovered) = Store::open(Box::new(RealDisk), &dir, store_cfg).unwrap();
+    assert!(recovered.is_empty());
+    let mut hub = ModelHub::open_durable(build_hub_cfg, store, recovered).unwrap();
+    hub.create("pin", machine(0x9149), params.clone(), 99).unwrap();
+    let ha = hub.create("alpha", machine(0xA1), params.clone(), 11).unwrap();
+    let hb = hub.create("beta", machine(0xB2), params.clone(), 22).unwrap();
+    let pin_digest = machine(0x9149).state_digest();
+    let mut ma = machine(0xA1);
+    let mut mb = machine(0xB2);
+    let (mut sa, mut sb) = (0u64, 0u64);
+    let mut rng = Xoshiro256::new(0xC01D);
+    for k in 0..30u64 {
+        let (kind, _) = learn(&shape, &mut rng, (k % 3) as usize);
+        if k % 2 == 0 {
+            sa += 1;
+            assert_eq!(hub.update(ha, kind.clone()).unwrap(), sa);
+            let _ = ma.apply_update(&ShardUpdate { seq: sa, kind }, &params, 11);
+        } else {
+            sb += 1;
+            assert_eq!(hub.update(hb, kind.clone()).unwrap(), sb);
+            let _ = mb.apply_update(&ShardUpdate { seq: sb, kind }, &params, 22);
+        }
+        if k % 7 == 6 {
+            hub.evict(ha).unwrap();
+        }
+    }
+    hub.sync_durable().unwrap();
+    drop(hub);
+
+    // First cold start: everything back, bit for bit.
+    let (store, recovered) = Store::open(Box::new(RealDisk), &dir, store_cfg).unwrap();
+    assert_eq!(recovered.len(), 3, "all three tenants must survive shutdown");
+    let alpha = recovered.iter().find(|m| m.name == "alpha").unwrap();
+    let (alpha_id, alpha_clean_ckpt) = (alpha.id, alpha.ckpt_seq);
+    assert!(alpha_clean_ckpt > 0, "checkpoint refresh never fired during the build");
+    assert_hub_state(
+        store,
+        recovered,
+        &[
+            ("pin", 0, pin_digest),
+            ("alpha", sa, ma.state_digest()),
+            ("beta", sb, mb.state_digest()),
+        ],
+    );
+
+    // Flip one bit mid-file in alpha's newest checkpoint.
+    let prefix = format!("m{alpha_id:08}-");
+    let mut ckpts: Vec<PathBuf> = fs::read_dir(dir.join("ckpt"))
+        .unwrap()
+        .map(|e| e.unwrap().path())
+        .filter(|p| {
+            p.file_name().and_then(|n| n.to_str()).is_some_and(|n| n.starts_with(&prefix))
+        })
+        .collect();
+    ckpts.sort();
+    let newest = ckpts.last().expect("alpha has checkpoints on disk");
+    let mut bytes = fs::read(newest).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x10;
+    fs::write(newest, &bytes).unwrap();
+
+    // Second cold start: rejected checkpoint, older snapshot + longer
+    // replay, identical bits.
+    let (store, recovered) = Store::open(Box::new(RealDisk), &dir, store_cfg).unwrap();
+    assert_eq!(store.report().corrupt_checkpoints_rejected, 1, "{:?}", store.report());
+    let alpha = recovered.iter().find(|m| m.name == "alpha").unwrap();
+    assert!(
+        alpha.ckpt_seq < alpha_clean_ckpt,
+        "fallback must pick an older snapshot ({} vs {alpha_clean_ckpt})",
+        alpha.ckpt_seq
+    );
+    assert_eq!(
+        alpha.ops.last().map(|(s, _)| *s),
+        Some(sa),
+        "the replay suffix must still reach alpha's durable seq"
+    );
+    assert_hub_state(
+        store,
+        recovered,
+        &[
+            ("pin", 0, pin_digest),
+            ("alpha", sa, ma.state_digest()),
+            ("beta", sb, mb.state_digest()),
+        ],
+    );
+    fs::remove_dir_all(&dir).ok();
+}
